@@ -1,0 +1,8 @@
+//! Regenerates the design-choice ablation (page size / walkers / MSHRs /
+//! L1 reach / PWC) — the sensitivity study behind DESIGN.md's knobs.
+mod bench_common;
+use ratsim::harness::design_ablation;
+
+fn main() {
+    bench_common::run_figure("ablation_design", design_ablation);
+}

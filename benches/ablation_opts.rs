@@ -1,0 +1,7 @@
+//! Regenerates the §6 optimization ablation (pre-translation + prefetch).
+mod bench_common;
+use ratsim::harness::ablation;
+
+fn main() {
+    bench_common::run_figure("ablation_opts", ablation);
+}

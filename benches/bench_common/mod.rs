@@ -1,0 +1,38 @@
+//! Shared scaffolding for the figure benches (`harness = false`).
+//!
+//! Each bench binary regenerates one paper table/figure in `--quick` axes
+//! and reports wall time + simulator throughput via `util::minibench`,
+//! so `cargo bench | tee bench_output.txt` reproduces every figure's data
+//! alongside its cost.
+
+use ratsim::harness::FigOpts;
+use std::time::Instant;
+
+pub fn opts() -> FigOpts {
+    FigOpts { out_dir: std::path::PathBuf::from("results/bench"), quick: true }
+}
+
+/// Run a figure generator once, print its table and timing line.
+pub fn run_figure<F>(name: &str, f: F)
+where
+    F: FnOnce(&FigOpts) -> anyhow::Result<ratsim::harness::Table>,
+{
+    ratsim::util::logger::init();
+    let o = opts();
+    std::fs::create_dir_all(&o.out_dir).ok();
+    let t0 = Instant::now();
+    match f(&o) {
+        Ok(table) => {
+            table.print();
+            println!(
+                "\nBENCH {name}: regenerated in {:.2}s (CSV under {})",
+                t0.elapsed().as_secs_f64(),
+                o.out_dir.display()
+            );
+        }
+        Err(e) => {
+            eprintln!("BENCH {name} FAILED: {e:#}");
+            std::process::exit(1);
+        }
+    }
+}

@@ -1,0 +1,7 @@
+//! Regenerates Fig 11 (L2 Link-TLB size sweep, 32 GPUs).
+mod bench_common;
+use ratsim::harness::fig11;
+
+fn main() {
+    bench_common::run_figure("fig11_l2_sweep", fig11);
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig 4 (RAT overhead vs ideal) on quick axes.
+mod bench_common;
+use ratsim::harness::{fig4, main_sweep};
+
+fn main() {
+    bench_common::run_figure("fig4_overhead", |o| {
+        let sweep = main_sweep(o)?;
+        fig4(o, &sweep)
+    });
+}

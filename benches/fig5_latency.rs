@@ -1,0 +1,10 @@
+//! Regenerates Fig 5 (mean RAT latency per request) on quick axes.
+mod bench_common;
+use ratsim::harness::{fig5, main_sweep};
+
+fn main() {
+    bench_common::run_figure("fig5_latency", |o| {
+        let sweep = main_sweep(o)?;
+        fig5(o, &sweep)
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig 6 (RTT component fractions, 16 GPUs).
+mod bench_common;
+use ratsim::harness::{breakdown_sweep, fig6};
+
+fn main() {
+    bench_common::run_figure("fig6_breakdown", |o| {
+        let sweep = breakdown_sweep(o)?;
+        fig6(o, &sweep)
+    });
+}

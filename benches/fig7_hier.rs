@@ -1,0 +1,10 @@
+//! Regenerates Fig 7 (translation-module hit/miss stack, 16 GPUs).
+mod bench_common;
+use ratsim::harness::{breakdown_sweep, fig7};
+
+fn main() {
+    bench_common::run_figure("fig7_hier", |o| {
+        let sweep = breakdown_sweep(o)?;
+        fig7(o, &sweep)
+    });
+}

@@ -1,0 +1,10 @@
+//! Regenerates Fig 8 (L1-MSHR hit-under-miss decomposition, 16 GPUs).
+mod bench_common;
+use ratsim::harness::{breakdown_sweep, fig8};
+
+fn main() {
+    bench_common::run_figure("fig8_mshr", |o| {
+        let sweep = breakdown_sweep(o)?;
+        fig8(o, &sweep)
+    });
+}

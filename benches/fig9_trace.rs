@@ -1,0 +1,7 @@
+//! Regenerates Figs 9/10 (per-request RAT latency traces).
+mod bench_common;
+use ratsim::harness::fig9_10;
+
+fn main() {
+    bench_common::run_figure("fig9_10_traces", fig9_10);
+}

@@ -1,0 +1,74 @@
+//! Simulator-core performance microbenches (the §Perf hot paths):
+//! event-queue ops, end-to-end events/second, and the standard pod
+//! workloads used for the optimization log in EXPERIMENTS.md §Perf.
+
+use ratsim::config::presets::paper_baseline;
+use ratsim::config::RequestSizing;
+use ratsim::pod;
+use ratsim::sim::EventQueue;
+use ratsim::util::minibench::{bench, bench_items, print_header, print_result, BenchConfig};
+use ratsim::util::rng::Rng;
+use std::time::Duration;
+
+fn main() {
+    ratsim::util::logger::init_with_level(log::LevelFilter::Warn);
+    print_header("sim core microbenches");
+    let cfg = BenchConfig {
+        warmup_iters: 1,
+        min_iters: 3,
+        max_iters: 20,
+        max_time: Duration::from_secs(8),
+    };
+
+    // Event queue: push+pop throughput at a realistic pending-set size.
+    let mut rng = Rng::new(7);
+    let times: Vec<u64> = (0..100_000).map(|_| rng.gen_range(1_000_000)).collect();
+    let r = bench_items("eventqueue_100k_push_pop", &cfg, times.len() as u64, || {
+        let mut q = EventQueue::with_capacity(times.len());
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, i as u64, i as u32);
+        }
+        while q.pop().is_some() {}
+    });
+    print_result(&r);
+
+    // Steady-state churn: hold 50k pending, push+pop 100k more.
+    let r = bench_items("eventqueue_churn_50k_hold", &cfg, 100_000, || {
+        let mut q = EventQueue::with_capacity(64 * 1024);
+        let mut seq = 0u64;
+        let mut rng = Rng::new(3);
+        let mut now = 0u64;
+        for _ in 0..50_000 {
+            q.push(now + rng.gen_range(10_000), seq, ());
+            seq += 1;
+        }
+        for _ in 0..100_000 {
+            let (t, _) = q.pop().unwrap();
+            now = t;
+            q.push(now + rng.gen_range(10_000), seq, ());
+            seq += 1;
+        }
+    });
+    print_result(&r);
+
+    // Whole-pod events/second on the standard perf workloads.
+    print_header("pod simulation throughput (events/second)");
+    for (name, gpus, size_mib, reqs) in [
+        ("pod_16gpu_1MiB_full_fidelity", 16u32, 1u64, 0u64),
+        ("pod_16gpu_64MiB_500k_reqs", 16, 64, 500_000),
+        ("pod_64gpu_16MiB_500k_reqs", 64, 16, 500_000),
+    ] {
+        let mut pc = paper_baseline(gpus, size_mib * (1 << 20));
+        if reqs > 0 {
+            pc.workload.request_sizing = RequestSizing::Auto { target_total_requests: reqs };
+        }
+        let events = std::cell::Cell::new(0u64);
+        let r = bench(name, &cfg, || {
+            let s = pod::run(&pc).expect("pod run");
+            events.set(s.events);
+        });
+        let evps = events.get() as f64 / r.mean.as_secs_f64();
+        print_result(&r);
+        println!("  -> {} events/run, {:.2}M events/s", events.get(), evps / 1e6);
+    }
+}

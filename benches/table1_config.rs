@@ -1,0 +1,7 @@
+//! Regenerates Table 1 (simulation setup echo) — the config contract.
+mod bench_common;
+use ratsim::harness::table1;
+
+fn main() {
+    bench_common::run_figure("table1_config", table1);
+}

@@ -1,0 +1,7 @@
+//! Regenerates the warm-up study (cold vs steady-state iteration).
+mod bench_common;
+use ratsim::harness::warmup;
+
+fn main() {
+    bench_common::run_figure("warmup_iters", warmup);
+}

@@ -1,0 +1,55 @@
+//! §6 optimization ablation: fused pre-translation kernels (§6.1) and
+//! software-guided TLB prefetching (§6.2) against the baseline and the
+//! zero-RAT ideal, on the latency-sensitive small collectives the paper
+//! highlights for inference workloads.
+//!
+//! Run with: `cargo run --release --example prefetch_opt`
+
+use ratsim::config::presets::{paper_baseline, paper_ideal};
+use ratsim::config::{PodConfig, RequestSizing};
+use ratsim::pod;
+use ratsim::util::units::{fmt_bytes, to_ns, MIB};
+
+fn tune(mut cfg: PodConfig) -> PodConfig {
+    cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: 300_000 };
+    cfg
+}
+
+fn main() -> anyhow::Result<()> {
+    ratsim::util::logger::init();
+    let gpus = 16;
+    println!("§6 ablation — {gpus} GPUs\n");
+    println!(
+        "{:>8}  {:>22}  {:>10}  {:>12}  {:>10}",
+        "size", "variant", "overhead_x", "mean_rat_ns", "data_walks"
+    );
+    for size in [MIB, 4 * MIB, 16 * MIB] {
+        let ideal_ns = to_ns(pod::run(&tune(paper_ideal(gpus, size)))?.completion);
+        for variant in ["baseline", "pretranslate", "prefetch", "pretranslate+prefetch"] {
+            let mut cfg = tune(paper_baseline(gpus, size));
+            if variant.contains("pretranslate") {
+                cfg.trans.pretranslate.enabled = true;
+                cfg.trans.pretranslate.pages_per_pair = 0; // whole stream
+            }
+            if variant.contains("prefetch") {
+                cfg.trans.prefetch.enabled = true;
+                cfg.trans.prefetch.depth = 2;
+            }
+            cfg.name = format!("{variant}-{}", fmt_bytes(size));
+            let s = pod::run(&cfg)?;
+            let walks =
+                s.classes.prim_full_walk + s.classes.prim_pwc_hit.iter().sum::<u64>();
+            println!(
+                "{:>8}  {:>22}  {:>10.3}  {:>12.1}  {:>10}",
+                fmt_bytes(size),
+                variant,
+                to_ns(s.completion) / ideal_ns,
+                s.mean_rat_ns(),
+                walks
+            );
+        }
+    }
+    println!("\nexpected: pre-translation eliminates data-path walks entirely;");
+    println!("prefetching absorbs the page-boundary spikes of larger streams (§6).");
+    Ok(())
+}

@@ -1,0 +1,41 @@
+//! Quickstart: simulate one All-to-All on a 16-GPU UALink pod and print
+//! the reverse-translation report.
+//!
+//! Run with: `cargo run --release --example quickstart`
+
+use ratsim::config::presets::{paper_baseline, paper_ideal};
+use ratsim::pod;
+use ratsim::util::units::{fmt_time, MIB};
+
+fn main() -> anyhow::Result<()> {
+    ratsim::util::logger::init();
+
+    // Table-1 baseline: 16 GPUs (4 per node), 1 MiB all-pairs All-to-All.
+    let cfg = paper_baseline(16, MIB);
+    println!("pod: {} GPUs, {} stations/GPU, {} request bytes", cfg.gpus,
+        cfg.link.stations_per_gpu, cfg.request_bytes());
+
+    let stats = pod::run(&cfg)?;
+    println!("\nbaseline:  {}", stats.summary());
+
+    // The paper's headline comparison: normalize against the zero-RAT
+    // ideal configuration.
+    let ideal = pod::run(&paper_ideal(16, MIB))?;
+    println!("ideal:     completion {}", fmt_time(ideal.completion));
+    println!(
+        "\nreverse-translation overhead: {:.2}x (paper §4.1: up to 1.4x at 1 MB)",
+        stats.completion as f64 / ideal.completion as f64
+    );
+
+    let f = stats.breakdown.fractions();
+    println!(
+        "RTT share: fabric {:.0}% | net {:.0}% | translation {:.0}% | memory {:.0}% | ack {:.0}%",
+        100.0 * f[0], 100.0 * f[1], 100.0 * f[2], 100.0 * f[3], 100.0 * f[4]
+    );
+    let c = stats.classes.fig7_fractions();
+    println!(
+        "outcomes:  l1-hit {:.0}% | l1-mshr-hit {:.0}% | deeper {:.0}%",
+        100.0 * c[0], 100.0 * c[1], 100.0 * (c[2] + c[3] + c[4] + c[5])
+    );
+    Ok(())
+}

@@ -1,0 +1,102 @@
+"""AOT lowering: JAX/Pallas → HLO *text* artifacts for the Rust runtime.
+
+Python runs once, at build time (`make artifacts`); the Rust binary is
+self-contained afterwards. Interchange is HLO text, NOT serialized
+HloModuleProto: jax ≥ 0.5 emits protos with 64-bit instruction ids that
+the image's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the
+text parser reassigns ids (see /opt/xla-example/README.md).
+
+Usage: python -m compile.aot --out-dir ../artifacts
+"""
+
+import argparse
+import json
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """stablehlo MLIR → XlaComputation (return_tuple=True) → HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def lower_artifact(fn, example_args, name, out_dir):
+    """Lower `fn(*example_args)` and write `<name>.hlo.txt`; returns the
+    manifest entry."""
+    specs = [jax.ShapeDtypeStruct(a.shape, a.dtype) for a in example_args]
+    lowered = jax.jit(fn).lower(*specs)
+    text = to_hlo_text(lowered)
+    fname = f"{name}.hlo.txt"
+    with open(os.path.join(out_dir, fname), "w") as f:
+        f.write(text)
+    outs = fn(*example_args)
+    entry = {
+        "name": name,
+        "file": fname,
+        "input_shapes": [list(a.shape) for a in example_args],
+        "input_dtypes": [str(a.dtype) for a in example_args],
+        "num_outputs": len(outs),
+    }
+    print(f"  {name}: {len(text)} chars, inputs {entry['input_shapes']}, "
+          f"{entry['num_outputs']} outputs")
+    return entry
+
+
+def build_all(out_dir: str) -> dict:
+    os.makedirs(out_dir, exist_ok=True)
+    entries = []
+
+    # L2 model: the MoE FFN block (contains the L1 moe_ffn Pallas kernel).
+    entries.append(
+        lower_artifact(model.moe_layer_tuple, model.example_inputs(), "moe_layer", out_dir)
+    )
+
+    # §6.1 pre-translation schedule generator (L1 page_schedule kernel).
+    n_streams = 15  # 16-GPU pod: streams from one source to 15 destinations
+    base = jnp.arange(n_streams, dtype=jnp.float32) * (1 << 20)
+    length = jnp.full((n_streams,), float(1 << 20), jnp.float32)
+    entries.append(
+        lower_artifact(model.page_schedule_graph, (base, length), "page_schedule", out_dir)
+    )
+
+    manifest = {"artifacts": entries}
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=2)
+
+    # Golden vectors: the Rust runtime test replays these through PJRT and
+    # asserts allclose — the cross-language numerical contract.
+    inputs = model.example_inputs()
+    out, load = model.moe_layer_tuple(*inputs)
+    golden = {
+        "moe_layer": {
+            "inputs": [[float(v) for v in a.reshape(-1)] for a in inputs],
+            "outputs": [
+                [float(v) for v in out.reshape(-1)],
+                [float(v) for v in load.reshape(-1)],
+            ],
+        }
+    }
+    with open(os.path.join(out_dir, "golden.json"), "w") as f:
+        json.dump(golden, f)
+    print(f"wrote {out_dir}/manifest.json ({len(entries)} artifacts) + golden.json")
+    return manifest
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--out-dir", default="../artifacts")
+    args = p.parse_args()
+    build_all(args.out_dir)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""L1 Pallas kernel: grouped Mixture-of-Experts FFN.
+
+The paper motivates All-to-All with MoE layers (§2.5): tokens are
+dispatched to experts, each expert runs an FFN, outputs are combined. This
+kernel is the expert-compute hot-spot between the two All-to-Alls — the
+grouped matmul ``relu(x[e] @ w1[e]) @ w2[e]`` for every expert ``e``.
+
+Hardware adaptation (DESIGN.md §Hardware-Adaptation): a CUDA MoE kernel
+tiles with threadblocks + shared memory; on TPU we express the same
+schedule with a Pallas grid over ``(expert, token-tile)`` and BlockSpecs
+that stage one token tile plus both weight matrices of the current expert
+in VMEM, feeding the MXU with (tile × d_model) @ (d_model × d_ff) blocks.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads (see /opt/xla-example/README.md).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _ffn_kernel(x_ref, w1_ref, w2_ref, o_ref):
+    """One grid step: token-tile ``x`` through expert FFN ``w1, w2``.
+
+    x_ref:  (tile, d_model)   VMEM
+    w1_ref: (d_model, d_ff)   VMEM
+    w2_ref: (d_ff, d_model)   VMEM
+    o_ref:  (tile, d_model)   VMEM
+    """
+    x = x_ref[...]
+    h = jnp.maximum(x @ w1_ref[...], 0.0)  # MXU matmul + VPU relu
+    o_ref[...] = h @ w2_ref[...]
+
+
+def pick_tile(tokens: int, preferred: int = 128) -> int:
+    """Largest divisor of ``tokens`` that is ≤ preferred (MXU-friendly
+    tiles are multiples of 8×128 on real TPUs; tests use small shapes)."""
+    tile = min(preferred, tokens)
+    while tokens % tile != 0:
+        tile -= 1
+    return max(tile, 1)
+
+
+@partial(jax.jit, static_argnames=("tile",))
+def moe_ffn(x, w1, w2, tile: int | None = None):
+    """Grouped expert FFN.
+
+    Args:
+      x:  (experts, tokens, d_model) tokens already dispatched per expert.
+      w1: (experts, d_model, d_ff)
+      w2: (experts, d_ff, d_model)
+    Returns:
+      (experts, tokens, d_model)
+    """
+    e, t, d = x.shape
+    _, _, f = w1.shape
+    if tile is None:
+        tile = pick_tile(t)
+    grid = (e, t // tile)
+    return pl.pallas_call(
+        _ffn_kernel,
+        grid=grid,
+        in_specs=[
+            # Stream one token tile of one expert per step: HBM→VMEM.
+            pl.BlockSpec((None, tile, d), lambda e_, i: (e_, i, 0)),
+            # Expert weights resident for the whole expert's tiles.
+            pl.BlockSpec((None, d, f), lambda e_, i: (e_, 0, 0)),
+            pl.BlockSpec((None, f, d), lambda e_, i: (e_, 0, 0)),
+        ],
+        out_specs=pl.BlockSpec((None, tile, d), lambda e_, i: (e_, i, 0)),
+        out_shape=jax.ShapeDtypeStruct((e, t, d), x.dtype),
+        interpret=True,
+    )(x, w1, w2)
+
+
+def vmem_bytes(tile: int, d_model: int, d_ff: int, dtype_bytes: int = 4) -> int:
+    """Static VMEM footprint of one grid step (DESIGN/EXPERIMENTS §Perf):
+    x tile + w1 + w2 + output tile."""
+    return dtype_bytes * (tile * d_model + d_model * d_ff + d_ff * d_model + tile * d_model)
+
+
+def mxu_flops(tile: int, d_model: int, d_ff: int) -> int:
+    """MAC-flops per grid step (2 matmuls)."""
+    return 2 * tile * d_model * d_ff * 2

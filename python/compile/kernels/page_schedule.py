@@ -1,0 +1,71 @@
+"""L1 Pallas kernel: pre-translation page-schedule generator (§6.1).
+
+The paper's first optimization proposal is the *fused pre-translation
+kernel*: while the compute kernel (the expert FFN) runs, it also computes
+the NPA pages the upcoming All-to-All will touch, so translation requests
+can be issued ahead of the communication and the Link TLBs are warm by the
+time remote stores arrive.
+
+This kernel is that address generator: given each destination stream's
+base offset and length, it emits the page-id sequence the stream will
+touch (a strided integer computation — pure VPU work, no MXU). The Rust
+coordinator feeds the result to the pod's pre-translation warmup engine
+(``trans.pretranslate``) in the end-to-end MoE example.
+
+Everything is f32 on the wire because the Rust PJRT path moves f32
+buffers; page ids are exact in f32 up to 2^24 (16.7M pages = 32 TiB of
+2 MiB pages per GPU — far beyond any pod's window).
+"""
+
+from functools import partial
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+
+def _schedule_kernel(base_ref, len_ref, o_ref, *, pages_per_stream, page_bytes):
+    """One stream per grid step.
+
+    base_ref: (1,)  f32 — byte offset of the stream in the dst window
+    len_ref:  (1,)  f32 — stream length in bytes
+    o_ref:    (1, pages_per_stream) f32 — page ids; -1 past the stream end
+    """
+    base = base_ref[0]
+    length = len_ref[0]
+    k = jnp.arange(pages_per_stream, dtype=jnp.float32)
+    first_page = jnp.floor(base / page_bytes)
+    page = first_page + k
+    # Pages past the stream's last byte are masked to -1. The condition is
+    # `page*P < base+length` rather than `page <= floor((base+length-1)/P)`:
+    # `base+length` is exact in f32 for byte counts < 2^24 while the `-1`
+    # form rounds at large offsets.
+    o_ref[0, :] = jnp.where(page * page_bytes < base + length, page, -1.0)
+
+
+@partial(jax.jit, static_argnames=("pages_per_stream", "page_bytes"))
+def page_schedule(base, length, pages_per_stream: int = 8, page_bytes: int = 2 * 1024 * 1024):
+    """Page ids each stream will touch.
+
+    Args:
+      base:   (streams,) f32 byte offsets into the destination window.
+      length: (streams,) f32 stream lengths in bytes.
+    Returns:
+      (streams, pages_per_stream) f32 page ids, -1 where masked.
+    """
+    (n,) = base.shape
+    return pl.pallas_call(
+        partial(
+            _schedule_kernel,
+            pages_per_stream=pages_per_stream,
+            page_bytes=float(page_bytes),
+        ),
+        grid=(n,),
+        in_specs=[
+            pl.BlockSpec((1,), lambda i: (i,)),
+            pl.BlockSpec((1,), lambda i: (i,)),
+        ],
+        out_specs=pl.BlockSpec((1, pages_per_stream), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((n, pages_per_stream), jnp.float32),
+        interpret=True,
+    )(base, length)

@@ -1,0 +1,26 @@
+"""Pure-jnp oracles for the Pallas kernels (pytest compares against these)."""
+
+import jax.numpy as jnp
+import numpy as np
+
+
+def moe_ffn_ref(x, w1, w2):
+    """Grouped expert FFN: relu(x[e] @ w1[e]) @ w2[e], batched over e."""
+    h = jnp.maximum(jnp.einsum("etd,edf->etf", x, w1), 0.0)
+    return jnp.einsum("etf,efd->etd", h, w2)
+
+
+def page_schedule_ref(base, length, pages_per_stream=8, page_bytes=2 * 1024 * 1024):
+    """Numpy oracle for the pre-translation schedule."""
+    base = np.asarray(base, dtype=np.float64)
+    length = np.asarray(length, dtype=np.float64)
+    n = base.shape[0]
+    out = np.full((n, pages_per_stream), -1.0, dtype=np.float64)
+    for i in range(n):
+        first = np.floor(base[i] / page_bytes)
+        last = np.floor((base[i] + length[i] - 1.0) / page_bytes)
+        for k in range(pages_per_stream):
+            page = first + k
+            if page <= last:
+                out[i, k] = page
+    return out.astype(np.float32)

@@ -1,0 +1,79 @@
+"""L2 JAX model: one MoE transformer FFN block, per-GPU shard.
+
+This is the compute phase between the paper's two All-to-Alls (§2.5):
+
+  dispatch A2A  →  [this model: gate → dispatch → expert FFN → combine]
+                →  combine A2A
+
+The expert FFN is the L1 Pallas kernel (`kernels.moe_ffn`); gating,
+dispatch and combine are plain jnp so the whole shard lowers into one HLO
+module that the Rust runtime executes via PJRT. A second exported graph
+(`page_schedule_graph`) is the §6.1 fused pre-translation address
+generator.
+"""
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.moe_ffn import moe_ffn
+from .kernels.page_schedule import page_schedule
+
+# Default shard geometry for the end-to-end example: small enough that
+# `make artifacts` is fast, large enough to exercise every op.
+TOKENS = 64
+D_MODEL = 32
+D_FF = 64
+EXPERTS = 4
+
+
+def moe_layer(tokens, gate_w, w1, w2):
+    """One MoE FFN block over this GPU's tokens.
+
+    Args:
+      tokens: (T, D) activations.
+      gate_w: (D, E) router weights.
+      w1:     (E, D, F) expert up-projections.
+      w2:     (E, F, D) expert down-projections.
+    Returns:
+      (output (T, D), expert_load (E,)) — expert_load is the routed token
+      count per expert, which sizes the dispatch All-to-All chunks.
+    """
+    logits = tokens @ gate_w  # (T, E)
+    probs = jax.nn.softmax(logits, axis=-1)
+    top = jnp.argmax(probs, axis=-1)  # (T,)
+    onehot = jax.nn.one_hot(top, probs.shape[-1], dtype=tokens.dtype)  # (T, E)
+    gate = jnp.sum(probs * onehot, axis=-1, keepdims=True)  # (T, 1) top-1 prob
+
+    # Dispatch: every expert sees all tokens, masked to its assignment
+    # (capacity = T — the dense formulation; the A2A exchanges exactly
+    # these masked slices).
+    dispatched = jnp.einsum("te,td->etd", onehot, tokens)  # (E, T, D)
+
+    expert_out = moe_ffn(dispatched, w1, w2)  # (E, T, D) — L1 Pallas kernel
+
+    # Combine: gather each token's expert output, scaled by its gate.
+    combined = jnp.einsum("te,etd->td", onehot, expert_out) * gate
+    expert_load = jnp.sum(onehot, axis=0)  # (E,)
+    return combined, expert_load
+
+
+def moe_layer_tuple(tokens, gate_w, w1, w2):
+    """Tuple-returning wrapper for AOT lowering."""
+    out, load = moe_layer(tokens, gate_w, w1, w2)
+    return (out, load)
+
+
+def page_schedule_graph(base, length):
+    """§6.1 pre-translation schedule for the upcoming All-to-All."""
+    return (page_schedule(base, length, pages_per_stream=8),)
+
+
+def example_inputs(seed: int = 0):
+    """Deterministic example inputs matching the exported shapes."""
+    k = jax.random.PRNGKey(seed)
+    k1, k2, k3, k4 = jax.random.split(k, 4)
+    tokens = jax.random.normal(k1, (TOKENS, D_MODEL), jnp.float32)
+    gate_w = jax.random.normal(k2, (D_MODEL, EXPERTS), jnp.float32) * 0.3
+    w1 = jax.random.normal(k3, (EXPERTS, D_MODEL, D_FF), jnp.float32) * 0.1
+    w2 = jax.random.normal(k4, (EXPERTS, D_FF, D_MODEL), jnp.float32) * 0.1
+    return tokens, gate_w, w1, w2

@@ -1,0 +1,73 @@
+"""AOT path: artifacts lower to valid HLO text + manifest."""
+
+import json
+import os
+
+import jax
+import numpy as np
+
+from compile import aot, model
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_build_all(tmp_path):
+    out = str(tmp_path / "artifacts")
+    manifest = aot.build_all(out)
+    names = [a["name"] for a in manifest["artifacts"]]
+    assert names == ["moe_layer", "page_schedule"]
+
+    # Manifest round-trips and files exist with plausible HLO text.
+    with open(os.path.join(out, "manifest.json")) as f:
+        on_disk = json.load(f)
+    assert on_disk == manifest
+    for a in manifest["artifacts"]:
+        path = os.path.join(out, a["file"])
+        text = open(path).read()
+        assert "HloModule" in text, f"{a['name']} is not HLO text"
+        assert "ENTRY" in text
+        assert len(a["input_shapes"]) == len(a["input_dtypes"])
+        assert a["num_outputs"] >= 1
+
+    moe = manifest["artifacts"][0]
+    assert moe["input_shapes"] == [
+        [model.TOKENS, model.D_MODEL],
+        [model.D_MODEL, model.EXPERTS],
+        [model.EXPERTS, model.D_MODEL, model.D_FF],
+        [model.EXPERTS, model.D_FF, model.D_MODEL],
+    ]
+    assert all(d == "float32" for d in moe["input_dtypes"])
+
+
+def test_hlo_text_parses_back(tmp_path):
+    """Round-trip sanity: the emitted HLO text parses back into an HLO
+    module whose entry signature matches the export (the Rust side repeats
+    the full compile+execute through PJRT in rust/tests/runtime_e2e.rs)."""
+    from jax._src.lib import xla_client as xc
+
+    inputs = model.example_inputs()
+    lowered = jax.jit(model.moe_layer_tuple).lower(
+        *[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in inputs]
+    )
+    text = aot.to_hlo_text(lowered)
+
+    mod = xc._xla.hlo_module_from_text(text)
+    rendered = mod.to_string()
+    # Entry signature carries the four f32 parameters and tuple result.
+    assert f"f32[{model.TOKENS},{model.D_MODEL}]" in rendered
+    assert f"f32[{model.EXPERTS},{model.D_MODEL},{model.D_FF}]" in rendered
+    assert "ENTRY" in rendered
+
+
+def test_pallas_kernel_survives_lowering():
+    """The lowered moe_layer HLO must contain the kernel's compute (dot +
+    maximum): interpret-mode pallas lowers to plain HLO ops that the CPU
+    PJRT client can run — no Mosaic custom-calls allowed."""
+    inputs = model.example_inputs()
+    lowered = jax.jit(model.moe_layer_tuple).lower(
+        *[jax.ShapeDtypeStruct(a.shape, a.dtype) for a in inputs]
+    )
+    text = aot.to_hlo_text(lowered)
+    assert "custom-call" not in text or "tpu" not in text.lower()
+    assert "dot(" in text or "dot " in text
+    assert "maximum" in text

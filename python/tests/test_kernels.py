@@ -1,0 +1,189 @@
+"""L1 kernel correctness: Pallas (interpret=True) vs pure-jnp/numpy refs,
+with hypothesis sweeping shapes and value ranges."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels.moe_ffn import moe_ffn, mxu_flops, pick_tile, vmem_bytes
+from compile.kernels.page_schedule import page_schedule
+from compile.kernels.ref import moe_ffn_ref, page_schedule_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def rand(key, shape, scale=1.0):
+    return jax.random.normal(jax.random.PRNGKey(key), shape, jnp.float32) * scale
+
+
+class TestMoeFfn:
+    def test_matches_ref_default_shape(self):
+        x = rand(0, (4, 64, 32))
+        w1 = rand(1, (4, 32, 64), 0.1)
+        w2 = rand(2, (4, 64, 32), 0.1)
+        np.testing.assert_allclose(
+            moe_ffn(x, w1, w2), moe_ffn_ref(x, w1, w2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_single_expert_single_token(self):
+        x = rand(3, (1, 1, 8))
+        w1 = rand(4, (1, 8, 16), 0.2)
+        w2 = rand(5, (1, 16, 8), 0.2)
+        np.testing.assert_allclose(
+            moe_ffn(x, w1, w2), moe_ffn_ref(x, w1, w2), rtol=1e-5, atol=1e-5
+        )
+
+    def test_relu_actually_applied(self):
+        # All-negative hidden: output must be exactly zero.
+        x = jnp.ones((1, 4, 4), jnp.float32)
+        w1 = -jnp.ones((1, 4, 8), jnp.float32)
+        w2 = rand(6, (1, 8, 4))
+        out = moe_ffn(x, w1, w2)
+        np.testing.assert_array_equal(np.asarray(out), np.zeros_like(out))
+
+    def test_experts_are_independent(self):
+        # Changing expert 1's weights must not change expert 0's output.
+        x = rand(7, (2, 16, 8))
+        w1 = rand(8, (2, 8, 16), 0.1)
+        w2 = rand(9, (2, 16, 8), 0.1)
+        a = moe_ffn(x, w1, w2)
+        w1b = w1.at[1].mul(3.0)
+        b = moe_ffn(x, w1b, w2)
+        np.testing.assert_array_equal(np.asarray(a[0]), np.asarray(b[0]))
+        assert not np.allclose(np.asarray(a[1]), np.asarray(b[1]))
+
+    def test_explicit_tile_sizes(self):
+        x = rand(10, (2, 24, 8))
+        w1 = rand(11, (2, 8, 12), 0.1)
+        w2 = rand(12, (2, 12, 8), 0.1)
+        want = moe_ffn_ref(x, w1, w2)
+        for tile in (1, 2, 3, 4, 6, 8, 12, 24):
+            got = moe_ffn(x, w1, w2, tile=tile)
+            np.testing.assert_allclose(got, want, rtol=1e-5, atol=1e-5)
+
+    @settings(max_examples=20, deadline=None)
+    @given(
+        e=st.integers(1, 4),
+        t_mult=st.integers(1, 6),
+        d=st.sampled_from([4, 8, 16]),
+        f=st.sampled_from([4, 8, 32]),
+        seed=st.integers(0, 2**31 - 1),
+    )
+    def test_hypothesis_shape_sweep(self, e, t_mult, d, f, seed):
+        t = 4 * t_mult
+        x = rand(seed, (e, t, d))
+        w1 = rand(seed + 1, (e, d, f), 0.1)
+        w2 = rand(seed + 2, (e, f, d), 0.1)
+        np.testing.assert_allclose(
+            moe_ffn(x, w1, w2), moe_ffn_ref(x, w1, w2), rtol=1e-4, atol=1e-4
+        )
+
+    @settings(max_examples=20, deadline=None)
+    @given(scale=st.floats(1e-3, 1e3), seed=st.integers(0, 1000))
+    def test_hypothesis_value_range(self, scale, seed):
+        x = rand(seed, (2, 8, 8), scale)
+        w1 = rand(seed + 1, (2, 8, 8), scale)
+        w2 = rand(seed + 2, (2, 8, 8), scale)
+        got = np.asarray(moe_ffn(x, w1, w2))
+        want = np.asarray(moe_ffn_ref(x, w1, w2))
+        np.testing.assert_allclose(got, want, rtol=1e-4, atol=1e-4 * scale**3)
+
+    @settings(max_examples=12, deadline=None)
+    @given(
+        dtype=st.sampled_from(["float32", "bfloat16", "float16"]),
+        seed=st.integers(0, 500),
+    )
+    def test_hypothesis_dtype_sweep(self, dtype, seed):
+        """The kernel must match its oracle in every dtype the MXU path
+        accepts (bf16 is the production TPU dtype; tolerances scale with
+        the format's epsilon)."""
+        dt = jnp.dtype(dtype)
+        x = rand(seed, (2, 16, 8)).astype(dt)
+        w1 = rand(seed + 1, (2, 8, 16), 0.2).astype(dt)
+        w2 = rand(seed + 2, (2, 16, 8), 0.2).astype(dt)
+        got = moe_ffn(x, w1, w2)
+        assert got.dtype == dt
+        want = moe_ffn_ref(x, w1, w2)
+        tol = {"float32": 1e-5, "bfloat16": 5e-2, "float16": 5e-3}[dtype]
+        np.testing.assert_allclose(
+            np.asarray(got, np.float32),
+            np.asarray(want, np.float32),
+            rtol=tol,
+            atol=tol,
+        )
+
+    def test_pick_tile_divides(self):
+        for tokens in (1, 7, 64, 100, 128, 384, 1000):
+            tile = pick_tile(tokens)
+            assert tokens % tile == 0
+            assert 1 <= tile <= 128
+
+    def test_perf_model_arithmetic(self):
+        # 128-token tile, d=512, f=2048 in f32: footprint must fit VMEM
+        # (~16 MiB/core on modern TPUs) — the BlockSpec design point.
+        fp = vmem_bytes(128, 512, 2048)
+        assert fp == 4 * (128 * 512 + 512 * 2048 + 2048 * 512 + 128 * 512)
+        assert fp < 16 * 1024 * 1024
+        assert mxu_flops(128, 512, 2048) == 2 * 2 * 128 * 512 * 2048
+
+
+class TestPageSchedule:
+    PAGE = 2 * 1024 * 1024
+
+    def test_matches_ref_simple(self):
+        base = jnp.array([0.0, 1.5 * self.PAGE, 10.0 * self.PAGE], jnp.float32)
+        length = jnp.array([self.PAGE, self.PAGE, 4 * self.PAGE], jnp.float32)
+        got = page_schedule(base, length, pages_per_stream=8, page_bytes=self.PAGE)
+        want = page_schedule_ref(base, length, 8, self.PAGE)
+        np.testing.assert_array_equal(np.asarray(got), want)
+
+    def test_single_page_stream(self):
+        # A 64 KiB stream inside page 3 touches exactly page 3.
+        base = jnp.array([3.0 * self.PAGE + 1024], jnp.float32)
+        length = jnp.array([65536.0], jnp.float32)
+        got = np.asarray(page_schedule(base, length, 4, self.PAGE))
+        np.testing.assert_array_equal(got[0], [3.0, -1.0, -1.0, -1.0])
+
+    def test_page_crossing_stream(self):
+        # A stream straddling a boundary touches both pages (§4.4's
+        # "request offsets exceed page boundaries" spikes).
+        base = jnp.array([self.PAGE - 512.0], jnp.float32)
+        length = jnp.array([1024.0], jnp.float32)
+        got = np.asarray(page_schedule(base, length, 4, self.PAGE))
+        np.testing.assert_array_equal(got[0], [0.0, 1.0, -1.0, -1.0])
+
+    @settings(max_examples=30, deadline=None)
+    @given(
+        n=st.integers(1, 16),
+        page_exp=st.sampled_from([12, 16, 21]),
+        k=st.integers(1, 12),
+        data=st.data(),
+    )
+    def test_hypothesis_matches_ref(self, n, page_exp, k, data):
+        page = float(1 << page_exp)
+        base = np.array(
+            data.draw(
+                st.lists(
+                    st.integers(0, 1 << 22).map(float), min_size=n, max_size=n
+                )
+            ),
+            dtype=np.float32,
+        )
+        length = np.array(
+            data.draw(
+                st.lists(
+                    st.integers(1, 1 << 22).map(float), min_size=n, max_size=n
+                )
+            ),
+            dtype=np.float32,
+        )
+        got = np.asarray(page_schedule(jnp.array(base), jnp.array(length), k, int(page)))
+        want = page_schedule_ref(base, length, k, page)
+        np.testing.assert_array_equal(got, want)
+
+    def test_output_shape(self):
+        base = jnp.zeros((5,), jnp.float32)
+        length = jnp.ones((5,), jnp.float32)
+        assert page_schedule(base, length, 16, self.PAGE).shape == (5, 16)

@@ -1,0 +1,82 @@
+"""L2 model tests: MoE layer semantics and shapes."""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels.ref import moe_ffn_ref
+
+jax.config.update("jax_platform_name", "cpu")
+
+
+def test_shapes():
+    out, load = model.moe_layer(*model.example_inputs())
+    assert out.shape == (model.TOKENS, model.D_MODEL)
+    assert load.shape == (model.EXPERTS,)
+
+
+def test_expert_load_conserves_tokens():
+    _, load = model.moe_layer(*model.example_inputs())
+    assert float(jnp.sum(load)) == model.TOKENS
+
+
+def test_deterministic():
+    a, _ = model.moe_layer(*model.example_inputs(0))
+    b, _ = model.moe_layer(*model.example_inputs(0))
+    np.testing.assert_array_equal(np.asarray(a), np.asarray(b))
+    c, _ = model.moe_layer(*model.example_inputs(1))
+    assert not np.array_equal(np.asarray(a), np.asarray(c))
+
+
+def test_matches_manual_top1_moe():
+    """Independent dense recomputation of the layer (including the Pallas
+    kernel replaced by its oracle)."""
+    tokens, gate_w, w1, w2 = model.example_inputs(7)
+    out, _ = model.moe_layer(tokens, gate_w, w1, w2)
+
+    probs = jax.nn.softmax(tokens @ gate_w, axis=-1)
+    top = jnp.argmax(probs, axis=-1)
+    onehot = jax.nn.one_hot(top, model.EXPERTS, dtype=jnp.float32)
+    dispatched = jnp.einsum("te,td->etd", onehot, tokens)
+    expert_out = moe_ffn_ref(dispatched, w1, w2)
+    want = jnp.einsum("te,etd->td", onehot, expert_out) * jnp.sum(
+        probs * onehot, axis=-1, keepdims=True
+    )
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+
+
+def test_single_expert_reduces_to_plain_ffn():
+    """With one expert the MoE layer is gate_prob * FFN(tokens), and the
+    top-1 probability of a single expert is 1."""
+    k = jax.random.PRNGKey(3)
+    tokens = jax.random.normal(k, (8, 4), jnp.float32)
+    gate_w = jnp.ones((4, 1), jnp.float32)
+    w1 = jax.random.normal(jax.random.PRNGKey(4), (1, 4, 8), jnp.float32)
+    w2 = jax.random.normal(jax.random.PRNGKey(5), (1, 8, 4), jnp.float32)
+    out, load = model.moe_layer(tokens, gate_w, w1, w2)
+    want = moe_ffn_ref(tokens[None], w1, w2)[0]
+    np.testing.assert_allclose(np.asarray(out), np.asarray(want), rtol=1e-5, atol=1e-5)
+    assert float(load[0]) == 8.0
+
+
+@settings(max_examples=10, deadline=None)
+@given(seed=st.integers(0, 10_000))
+def test_hypothesis_gate_mass(seed):
+    """The routed token counts always sum to T and are non-negative."""
+    tokens, gate_w, w1, w2 = model.example_inputs(seed)
+    _, load = model.moe_layer(tokens, gate_w, w1, w2)
+    load = np.asarray(load)
+    assert load.sum() == model.TOKENS
+    assert (load >= 0).all()
+
+
+def test_page_schedule_graph_shape():
+    base = jnp.arange(15, dtype=jnp.float32) * (1 << 20)
+    length = jnp.full((15,), float(1 << 20), jnp.float32)
+    (sched,) = model.page_schedule_graph(base, length)
+    assert sched.shape == (15, 8)
+    # 1 MiB streams inside a 2 MiB page: exactly one valid page per stream.
+    valid = (np.asarray(sched) >= 0).sum(axis=1)
+    np.testing.assert_array_equal(valid, np.ones(15))

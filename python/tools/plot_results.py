@@ -1,0 +1,179 @@
+"""Render the figure-harness CSVs (results/*.csv) into PNG plots that
+mirror the paper's figures.
+
+Usage: python python/tools/plot_results.py [--results results] [--out results/plots]
+
+Purely a post-processing convenience — the simulator itself only emits
+CSVs (and terminal previews), so headless runs never depend on matplotlib.
+"""
+
+import argparse
+import csv
+import os
+import sys
+
+
+def read_csv(path):
+    with open(path) as f:
+        rows = list(csv.DictReader(f))
+    return rows
+
+
+def size_key(s):
+    mult = {"KiB": 1 << 10, "MiB": 1 << 20, "GiB": 1 << 30}
+    for suffix, m in mult.items():
+        if s.endswith(suffix):
+            return float(s[: -len(suffix)]) * m
+    return float(s.rstrip("B"))
+
+
+def plot_fig4(results, out, plt):
+    rows = read_csv(os.path.join(results, "fig4_overhead.csv"))
+    fig, ax = plt.subplots(figsize=(7, 3.5))
+    for gpus in sorted({r["gpus"] for r in rows}, key=int):
+        pts = sorted(
+            ((size_key(r["size"]), float(r["overhead_x"])) for r in rows if r["gpus"] == gpus)
+        )
+        ax.plot([p[0] for p in pts], [p[1] for p in pts], marker="o", label=f"{gpus} GPUs")
+    ax.set_xscale("log", base=2)
+    ax.set_xlabel("collective size (bytes)")
+    ax.set_ylabel("slowdown vs ideal")
+    ax.set_title("Fig 4 — Reverse-translation overhead (normalized to ideal)")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig4_overhead.png"), dpi=130)
+
+
+def plot_fig5(results, out, plt):
+    rows = read_csv(os.path.join(results, "fig5_rat_latency.csv"))
+    fig, ax = plt.subplots(figsize=(7, 3.5))
+    for gpus in sorted({r["gpus"] for r in rows}, key=int):
+        pts = sorted(
+            ((size_key(r["size"]), float(r["mean_rat_ns"])) for r in rows if r["gpus"] == gpus)
+        )
+        ax.plot([p[0] for p in pts], [p[1] for p in pts], marker="s", label=f"{gpus} GPUs")
+    ax.set_xscale("log", base=2)
+    ax.set_yscale("log")
+    ax.set_xlabel("collective size (bytes)")
+    ax.set_ylabel("mean RAT latency (ns)")
+    ax.set_title("Fig 5 — Average reverse-translation latency per request")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig5_rat_latency.png"), dpi=130)
+
+
+def plot_fig6(results, out, plt):
+    rows = read_csv(os.path.join(results, "fig6_rtt_breakdown.csv"))
+    rows.sort(key=lambda r: size_key(r["size"]))
+    comps = ["fabric", "net_fwd", "reverse_translation", "memory", "net_ack"]
+    fig, ax = plt.subplots(figsize=(7, 3.5))
+    bottom = [0.0] * len(rows)
+    xs = [r["size"] for r in rows]
+    for comp in comps:
+        vals = [float(r[comp]) for r in rows]
+        ax.bar(xs, vals, bottom=bottom, label=comp)
+        bottom = [b + v for b, v in zip(bottom, vals)]
+    ax.set_ylabel("fraction of request RTT")
+    ax.set_title("Fig 6 — RTT breakdown per request (16 GPUs)")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig6_rtt_breakdown.png"), dpi=130)
+
+
+def plot_fig7(results, out, plt):
+    rows = read_csv(os.path.join(results, "fig7_hier_breakdown.csv"))
+    rows.sort(key=lambda r: size_key(r["size"]))
+    comps = ["l1_hit", "l1_mshr_hit", "l2_hit", "l2_hum", "pwc_hit", "full_walk"]
+    fig, ax = plt.subplots(figsize=(7, 3.5))
+    bottom = [0.0] * len(rows)
+    xs = [r["size"] for r in rows]
+    for comp in comps:
+        vals = [float(r[comp]) for r in rows]
+        ax.bar(xs, vals, bottom=bottom, label=comp)
+        bottom = [b + v for b, v in zip(bottom, vals)]
+    ax.set_ylabel("fraction of inter-node requests")
+    ax.set_title("Fig 7 — Translation-module hit/miss breakdown (16 GPUs)")
+    ax.legend(fontsize=8)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig7_hier_breakdown.png"), dpi=130)
+
+
+def plot_traces(results, out, plt):
+    fig, axes = plt.subplots(1, 2, figsize=(10, 3.5))
+    for ax, (name, title) in zip(
+        axes,
+        [
+            ("fig9_trace_1MiB.csv", "Fig 9 — 1 MiB trace"),
+            ("fig10_trace_256MiB.csv", "Fig 10 — 256 MiB trace"),
+        ],
+    ):
+        path = os.path.join(results, name)
+        if not os.path.exists(path):
+            ax.set_title(f"{title} (missing)")
+            continue
+        rows = read_csv(path)
+        xs = [int(r["seq"]) for r in rows]
+        ys = [float(r["rat_ns"]) for r in rows]
+        ax.plot(xs, ys, ",", markersize=1)
+        ax.set_xlabel("request (issue order)")
+        ax.set_ylabel("RAT latency (ns)")
+        ax.set_title(title)
+        ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig9_10_traces.png"), dpi=130)
+
+
+def plot_fig11(results, out, plt):
+    rows = read_csv(os.path.join(results, "fig11_l2_sweep.csv"))
+    fig, ax = plt.subplots(figsize=(7, 3.5))
+    for size in sorted({r["size"] for r in rows}, key=size_key):
+        pts = sorted(
+            ((int(r["l2_entries"]), float(r["overhead_x"])) for r in rows if r["size"] == size)
+        )
+        ax.plot([p[0] for p in pts], [p[1] for p in pts], marker="d", label=size)
+    ax.set_xscale("log", base=2)
+    ax.set_xlabel("L2 Link-TLB entries")
+    ax.set_ylabel("slowdown vs ideal")
+    ax.set_title("Fig 11 — L2-TLB size sweep (32 GPUs)")
+    ax.legend()
+    ax.grid(alpha=0.3)
+    fig.tight_layout()
+    fig.savefig(os.path.join(out, "fig11_l2_sweep.png"), dpi=130)
+
+
+PLOTTERS = {
+    "fig4_overhead.csv": plot_fig4,
+    "fig5_rat_latency.csv": plot_fig5,
+    "fig6_rtt_breakdown.csv": plot_fig6,
+    "fig7_hier_breakdown.csv": plot_fig7,
+    "fig9_trace_1MiB.csv": plot_traces,
+    "fig11_l2_sweep.csv": plot_fig11,
+}
+
+
+def main():
+    p = argparse.ArgumentParser(description=__doc__)
+    p.add_argument("--results", default="results")
+    p.add_argument("--out", default="results/plots")
+    args = p.parse_args()
+
+    import matplotlib
+
+    matplotlib.use("Agg")
+    import matplotlib.pyplot as plt
+
+    os.makedirs(args.out, exist_ok=True)
+    made = 0
+    for csv_name, fn in PLOTTERS.items():
+        if os.path.exists(os.path.join(args.results, csv_name)):
+            fn(args.results, args.out, plt)
+            made += 1
+        else:
+            print(f"skip {csv_name} (not found — run `make figures` first)", file=sys.stderr)
+    print(f"wrote {made} plots to {args.out}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,266 @@
+//! Collective synthesizers (the MSCCLang-example-script substitute).
+
+use super::schedule::{Schedule, SendOp};
+use crate::config::CollectiveKind;
+use crate::util::units::fmt_bytes;
+use anyhow::{bail, Result};
+
+/// Build the schedule for a configured collective.
+pub fn build(kind: CollectiveKind, gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    match kind {
+        CollectiveKind::AllToAll => alltoall_allpairs(gpus, size_bytes),
+        CollectiveKind::AllGather => allgather_direct(gpus, size_bytes),
+        CollectiveKind::AllReduceRing => allreduce_ring(gpus, size_bytes),
+        CollectiveKind::ReduceScatter => reducescatter_direct(gpus, size_bytes),
+    }
+}
+
+/// The paper's workload: all-pairs/direct All-to-All (§3). Each GPU's
+/// input buffer of `size` is split into `gpus` chunks; a unique WG at each
+/// source streams chunk `d` to destination `d`, landing at offset
+/// `src * chunk` of the destination's receive window. All ops concurrent.
+pub fn alltoall_allpairs(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let chunk = chunk_size(gpus, size_bytes)?;
+    let mut ops = Vec::with_capacity((gpus * (gpus - 1)) as usize);
+    for src in 0..gpus {
+        for dst in 0..gpus {
+            if src == dst {
+                continue;
+            }
+            ops.push(SendOp {
+                id: ops.len() as u32,
+                src,
+                dst,
+                dst_offset: src as u64 * chunk,
+                bytes: chunk,
+                after: None,
+            });
+        }
+    }
+    let s = Schedule {
+        name: format!("alltoall-allpairs-{gpus}gpu-{}", fmt_bytes(size_bytes)),
+        gpus,
+        size_bytes,
+        ops,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+/// Direct AllGather: every GPU broadcasts its `size/gpus` shard to every
+/// other GPU; receive window is the full `size` buffer laid out by source
+/// rank. Same traffic volume as All-to-All, same (streaming, no-reuse)
+/// destination page behaviour.
+pub fn allgather_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = chunk_size(gpus, size_bytes)?;
+    let mut ops = Vec::new();
+    for src in 0..gpus {
+        for dst in 0..gpus {
+            if src == dst {
+                continue;
+            }
+            ops.push(SendOp {
+                id: ops.len() as u32,
+                src,
+                dst,
+                dst_offset: src as u64 * shard,
+                bytes: shard,
+                after: None,
+            });
+        }
+    }
+    let s = Schedule {
+        name: format!("allgather-direct-{gpus}gpu-{}", fmt_bytes(size_bytes)),
+        gpus,
+        size_bytes,
+        ops,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+/// Ring AllReduce baseline: reduce-scatter then all-gather, each `gpus-1`
+/// steps around the ring; step `k` of a lane depends on step `k-1`. Each
+/// destination reuses a small scratch region per source — the classic
+/// contrast to all-pairs' wide working set.
+pub fn allreduce_ring(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let chunk = chunk_size(gpus, size_bytes)?;
+    let mut ops: Vec<SendOp> = Vec::new();
+    // Each rank r owns a ring "lane": at phase p it sends one chunk to
+    // (r+1)%gpus. 2*(gpus-1) phases (RS + AG). The chunk index rotates so
+    // each phase touches a different region of the destination window.
+    for r in 0..gpus {
+        let mut prev: Option<u32> = None;
+        for phase in 0..2 * (gpus - 1) {
+            let dst = (r + 1) % gpus;
+            let chunk_idx = (r + gpus - phase % gpus) % gpus;
+            let id = ops.len() as u32;
+            ops.push(SendOp {
+                id,
+                src: r,
+                dst,
+                dst_offset: chunk_idx as u64 * chunk,
+                bytes: chunk,
+                after: prev,
+            });
+            prev = Some(id);
+        }
+    }
+    let s = Schedule {
+        name: format!("allreduce-ring-{gpus}gpu-{}", fmt_bytes(size_bytes)),
+        gpus,
+        size_bytes,
+        ops,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+/// Direct ReduceScatter baseline: every GPU sends the shard destined for
+/// rank `d` directly to `d` (the reduction itself is destination-local
+/// compute, which the pod models as the HBM write). Traffic equals one
+/// all-to-all pass; the destination working set is a single shard.
+pub fn reducescatter_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = chunk_size(gpus, size_bytes)?;
+    let mut ops = Vec::new();
+    for src in 0..gpus {
+        for dst in 0..gpus {
+            if src == dst {
+                continue;
+            }
+            ops.push(SendOp {
+                id: ops.len() as u32,
+                src,
+                dst,
+                dst_offset: dst as u64 * shard,
+                bytes: shard,
+                after: None,
+            });
+        }
+    }
+    // All sources reduce into the same shard region at each destination;
+    // the adds are commutative, but the schedule IR requires ordering for
+    // overlapping writes — chain the sends per destination (two-sided RS
+    // schedules serialize the reducer per peer the same way).
+    let mut prev_at_dst: Vec<Option<u32>> = vec![None; gpus as usize];
+    for i in 0..ops.len() {
+        let dst = ops[i].dst as usize;
+        ops[i].after = prev_at_dst[dst];
+        prev_at_dst[dst] = Some(ops[i].id);
+    }
+    let s = Schedule {
+        name: format!("reducescatter-direct-{gpus}gpu-{}", fmt_bytes(size_bytes)),
+        gpus,
+        size_bytes,
+        ops,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+fn chunk_size(gpus: u32, size_bytes: u64) -> Result<u64> {
+    if gpus < 2 {
+        bail!("collectives need >= 2 GPUs");
+    }
+    let chunk = size_bytes / gpus as u64;
+    if chunk == 0 {
+        bail!("size {size_bytes} too small for {gpus} GPUs");
+    }
+    Ok(chunk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn alltoall_shape() {
+        let s = alltoall_allpairs(16, MIB).unwrap();
+        assert_eq!(s.ops.len(), 16 * 15);
+        let chunk = MIB / 16;
+        assert!(s.ops.iter().all(|o| o.bytes == chunk));
+        assert!(s.ops.iter().all(|o| o.after.is_none()));
+        // Every GPU receives exactly gpus-1 chunks at source-indexed offsets.
+        for dst in 0..16 {
+            let mut offsets: Vec<u64> =
+                s.ops.iter().filter(|o| o.dst == dst).map(|o| o.dst_offset).collect();
+            offsets.sort();
+            let expected: Vec<u64> =
+                (0..16u64).filter(|&x| x != dst as u64).map(|x| x * chunk).collect();
+            assert_eq!(offsets, expected);
+        }
+        // Total traffic = gpus * (gpus-1) * chunk.
+        assert_eq!(s.total_bytes(), 16 * 15 * chunk);
+    }
+
+    #[test]
+    fn alltoall_dst_working_set_scales_with_gpus() {
+        // §4.4: the destination sees ~one active page per participating
+        // GPU; total pages spanned = recv window / page size.
+        let page = 2 * MIB;
+        for gpus in [8u32, 16, 32] {
+            let size = 64 * MIB;
+            let s = alltoall_allpairs(gpus, size).unwrap();
+            let pages = s.dst_pages(0, page);
+            // recv window = size minus dst's own chunk (rank 0 ⇒ the first
+            // chunk/page-sized slots are untouched).
+            let chunk = size / gpus as u64;
+            assert_eq!(pages, size / page - chunk / page);
+        }
+    }
+
+    #[test]
+    fn allgather_mirrors_alltoall_volume() {
+        let a = alltoall_allpairs(8, MIB).unwrap();
+        let g = allgather_direct(8, MIB).unwrap();
+        assert_eq!(a.total_bytes(), g.total_bytes());
+    }
+
+    #[test]
+    fn ring_has_dependency_chains() {
+        let s = allreduce_ring(4, MIB).unwrap();
+        assert_eq!(s.ops.len(), 4 * 6);
+        // Each lane is a chain of 2*(gpus-1) ops.
+        let lane0: Vec<&SendOp> = s.ops.iter().filter(|o| o.src == 0).collect();
+        assert_eq!(lane0.len(), 6);
+        assert!(lane0[0].after.is_none());
+        for w in lane0.windows(2) {
+            assert_eq!(w[1].after, Some(w[0].id));
+        }
+        // Ring volume: 2*(N-1)/N of size per GPU.
+        assert_eq!(s.total_bytes(), 4 * 6 * (MIB / 4));
+    }
+
+    #[test]
+    fn reducescatter_chains_per_destination() {
+        let s = reducescatter_direct(4, MIB).unwrap();
+        assert_eq!(s.ops.len(), 12);
+        // Every destination's shard region receives a chain of 3 ordered
+        // sends (one per other rank).
+        for dst in 0..4u32 {
+            let chain: Vec<&SendOp> = s.ops.iter().filter(|o| o.dst == dst).collect();
+            assert_eq!(chain.len(), 3);
+            assert!(chain[0].after.is_none());
+            assert_eq!(chain[1].after, Some(chain[0].id));
+            assert_eq!(chain[2].after, Some(chain[1].id));
+            assert!(chain.iter().all(|o| o.dst_offset == dst as u64 * (MIB / 4)));
+        }
+        // Destination working set: exactly one shard.
+        assert_eq!(s.recv_window_bytes(2), 3 * (MIB / 4));
+    }
+
+    #[test]
+    fn build_dispatches() {
+        use crate::config::CollectiveKind::*;
+        assert!(build(AllToAll, 8, MIB).unwrap().name.contains("alltoall"));
+        assert!(build(AllGather, 8, MIB).unwrap().name.contains("allgather"));
+        assert!(build(AllReduceRing, 8, MIB).unwrap().name.contains("allreduce"));
+    }
+
+    #[test]
+    fn too_small_sizes_rejected() {
+        assert!(alltoall_allpairs(16, 8).is_err());
+        assert!(alltoall_allpairs(1, MIB).is_err());
+    }
+}

@@ -1,0 +1,14 @@
+//! Collective schedule layer — the ASTRA-sim workload-layer substitute.
+//!
+//! A [`Schedule`] is a set of [`SendOp`]s: `(src, dst, offset, bytes,
+//! after)` remote-store streams, the same two-sided representation the
+//! MSCCLang example scripts synthesize (§3). Generators cover the paper's
+//! all-pairs/direct All-to-All plus direct AllGather and ring AllReduce
+//! baselines; `mscclang` round-trips schedules through a JSON IR.
+
+pub mod generators;
+pub mod mscclang;
+pub mod schedule;
+
+pub use generators::{allgather_direct, allreduce_ring, alltoall_allpairs, build, reducescatter_direct};
+pub use schedule::{OpId, Schedule, SendOp};

@@ -1,0 +1,126 @@
+//! MSCCLang-style JSON schedule interchange.
+//!
+//! The paper generates workloads "with MSCCLang example scripts for the
+//! all-pairs/direct algorithm" and feeds them to ASTRA-sim as XML/JSON. We
+//! mirror that flow: schedules serialize to a JSON IR so users can author
+//! or post-process them outside the simulator, and `import_json` loads
+//! them back (with validation).
+
+use super::schedule::{Schedule, SendOp};
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+
+pub fn export_json(s: &Schedule) -> Json {
+    Json::from_pairs(vec![
+        ("name", Json::from(s.name.as_str())),
+        ("gpus", Json::from(s.gpus as u64)),
+        ("size_bytes", Json::from(s.size_bytes)),
+        (
+            "ops",
+            Json::Arr(
+                s.ops
+                    .iter()
+                    .map(|o| {
+                        Json::from_pairs(vec![
+                            ("id", Json::from(o.id as u64)),
+                            ("src", Json::from(o.src as u64)),
+                            ("dst", Json::from(o.dst as u64)),
+                            ("dst_offset", Json::from(o.dst_offset)),
+                            ("bytes", Json::from(o.bytes)),
+                            (
+                                "after",
+                                o.after.map(|a| Json::from(a as u64)).unwrap_or(Json::Null),
+                            ),
+                        ])
+                    })
+                    .collect(),
+            ),
+        ),
+    ])
+}
+
+pub fn import_json(j: &Json) -> Result<Schedule> {
+    let ops = j
+        .get("ops")
+        .and_then(Json::as_arr)
+        .context("schedule missing `ops` array")?
+        .iter()
+        .map(|o| {
+            Ok(SendOp {
+                id: o.req_u64("id")? as u32,
+                src: o.req_u64("src")? as u32,
+                dst: o.req_u64("dst")? as u32,
+                dst_offset: o.req_u64("dst_offset")?,
+                bytes: o.req_u64("bytes")?,
+                after: o.get("after").and_then(Json::as_u64).map(|a| a as u32),
+            })
+        })
+        .collect::<Result<Vec<_>>>()?;
+    let s = Schedule {
+        name: j.req_str("name")?.to_string(),
+        gpus: j.req_u64("gpus")? as u32,
+        size_bytes: j.req_u64("size_bytes")?,
+        ops,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+pub fn save(s: &Schedule, path: &std::path::Path) -> Result<()> {
+    std::fs::write(path, export_json(s).to_string_pretty())
+        .with_context(|| format!("writing schedule to {}", path.display()))
+}
+
+pub fn load(path: &std::path::Path) -> Result<Schedule> {
+    let text = std::fs::read_to_string(path)
+        .with_context(|| format!("reading schedule from {}", path.display()))?;
+    let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+    import_json(&j)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::collective::generators::{allreduce_ring, alltoall_allpairs};
+    use crate::util::units::MIB;
+
+    #[test]
+    fn roundtrip_alltoall() {
+        let s = alltoall_allpairs(8, MIB).unwrap();
+        let back = import_json(&export_json(&s)).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn roundtrip_with_deps() {
+        let s = allreduce_ring(4, MIB).unwrap();
+        let j = export_json(&s);
+        let text = j.to_string_pretty();
+        let back = import_json(&Json::parse(&text).unwrap()).unwrap();
+        assert_eq!(s, back);
+    }
+
+    #[test]
+    fn import_validates() {
+        let mut j = export_json(&alltoall_allpairs(4, MIB).unwrap());
+        // Corrupt: op 0 becomes a self-send.
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(ops)) = o.get_mut("ops") {
+                let src = ops[0].req_u64("src").unwrap();
+                ops[0].set("dst", Json::from(src));
+            }
+        }
+        assert!(import_json(&j).is_err());
+    }
+
+    #[test]
+    fn file_roundtrip() {
+        let dir = std::env::temp_dir().join("ratsim-mscclang-test");
+        std::fs::create_dir_all(&dir).unwrap();
+        let path = dir.join("sched.json");
+        let s = alltoall_allpairs(4, MIB).unwrap();
+        save(&s, &path).unwrap();
+        assert_eq!(load(&path).unwrap(), s);
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,244 @@
+//! The schedule IR.
+
+use anyhow::{bail, Result};
+
+pub type OpId = u32;
+
+/// One remote-store stream: `src` writes `bytes` into `dst`'s receive
+/// window starting at `dst_offset`. A unique workgroup executes each op
+/// (the all-pairs pattern: "at each GPU source, a unique WG transmits a
+/// chunk of data to each destination"). `after` encodes phase dependencies
+/// (ring algorithms); ops with `after == None` start at t=0.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SendOp {
+    pub id: OpId,
+    pub src: u32,
+    pub dst: u32,
+    /// Byte offset into the destination GPU's receive window (NPA space).
+    pub dst_offset: u64,
+    pub bytes: u64,
+    pub after: Option<OpId>,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct Schedule {
+    pub name: String,
+    pub gpus: u32,
+    /// §3: "the 'size' of the collective is the larger of a single GPU's
+    /// input or output buffer".
+    pub size_bytes: u64,
+    pub ops: Vec<SendOp>,
+}
+
+impl Schedule {
+    /// Total bytes moved over the fabric.
+    pub fn total_bytes(&self) -> u64 {
+        self.ops.iter().map(|o| o.bytes).sum()
+    }
+
+    /// Largest receive-window offset touched at any destination — the
+    /// destination translation working set is `ceil(this / page_bytes)`.
+    pub fn recv_window_bytes(&self, dst: u32) -> u64 {
+        self.ops
+            .iter()
+            .filter(|o| o.dst == dst)
+            .map(|o| o.dst_offset + o.bytes)
+            .max()
+            .unwrap_or(0)
+    }
+
+    /// Distinct translation pages touched at `dst` for `page_bytes` pages.
+    pub fn dst_pages(&self, dst: u32, page_bytes: u64) -> u64 {
+        let mut pages = std::collections::BTreeSet::new();
+        for o in self.ops.iter().filter(|o| o.dst == dst) {
+            let first = o.dst_offset / page_bytes;
+            let last = (o.dst_offset + o.bytes - 1) / page_bytes;
+            for p in first..=last {
+                pages.insert(p);
+            }
+        }
+        pages.len() as u64
+    }
+
+    /// Structural validation: ids dense, no self-sends, deps acyclic and
+    /// in-range, destination regions non-overlapping per (dst).
+    pub fn validate(&self) -> Result<()> {
+        if self.gpus < 2 {
+            bail!("schedule needs >= 2 GPUs");
+        }
+        for (i, op) in self.ops.iter().enumerate() {
+            if op.id != i as u32 {
+                bail!("op ids must be dense and ordered (op {i} has id {})", op.id);
+            }
+            if op.src == op.dst {
+                bail!("op {} is a self-send", op.id);
+            }
+            if op.src >= self.gpus || op.dst >= self.gpus {
+                bail!("op {} references GPU out of range", op.id);
+            }
+            if op.bytes == 0 {
+                bail!("op {} moves zero bytes", op.id);
+            }
+            if let Some(dep) = op.after {
+                if dep >= self.ops.len() as u32 {
+                    bail!("op {} depends on unknown op {dep}", op.id);
+                }
+            }
+        }
+        // Dependency cycles: follow `after` chains; depth > ops.len() means
+        // a cycle.
+        for op in &self.ops {
+            let mut cur = op.after;
+            let mut steps = 0;
+            while let Some(d) = cur {
+                steps += 1;
+                if steps > self.ops.len() {
+                    bail!("dependency cycle involving op {}", op.id);
+                }
+                cur = self.ops[d as usize].after;
+            }
+        }
+        // Overlap check per destination: concurrent ops (no ordering
+        // between them) must write disjoint regions.
+        let mut by_dst: std::collections::BTreeMap<u32, Vec<&SendOp>> = Default::default();
+        for op in &self.ops {
+            by_dst.entry(op.dst).or_default().push(op);
+        }
+        for (dst, ops) in by_dst {
+            let mut regions: Vec<(u64, u64, OpId)> =
+                ops.iter().map(|o| (o.dst_offset, o.dst_offset + o.bytes, o.id)).collect();
+            regions.sort();
+            for w in regions.windows(2) {
+                let (a, b) = (&w[0], &w[1]);
+                if b.0 < a.1 && !self.ordered(a.2, b.2) {
+                    bail!(
+                        "ops {} and {} write overlapping regions at dst {dst} without ordering",
+                        a.2,
+                        b.2
+                    );
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Chain `k` back-to-back iterations of this schedule: iteration i's
+    /// copy of an op depends on iteration i-1's copy (steady-state
+    /// training/inference loops re-run the same collective over warm
+    /// TLBs — the paper's "system warm-up" contrast).
+    pub fn repeat(&self, k: u32) -> Schedule {
+        assert!(k >= 1);
+        let n = self.ops.len() as u32;
+        let mut ops = Vec::with_capacity((n * k) as usize);
+        for iter in 0..k {
+            for op in &self.ops {
+                let mut o = *op;
+                o.id = iter * n + op.id;
+                o.after = match op.after {
+                    Some(dep) => Some(iter * n + dep),
+                    None if iter > 0 => Some((iter - 1) * n + op.id),
+                    None => None,
+                };
+                ops.push(o);
+            }
+        }
+        Schedule {
+            name: format!("{}-x{k}", self.name),
+            gpus: self.gpus,
+            size_bytes: self.size_bytes,
+            ops,
+        }
+    }
+
+    /// Is there an `after` chain ordering between two ops (either way)?
+    fn ordered(&self, a: OpId, b: OpId) -> bool {
+        let chain = |from: OpId, to: OpId| {
+            let mut cur = self.ops[from as usize].after;
+            while let Some(d) = cur {
+                if d == to {
+                    return true;
+                }
+                cur = self.ops[d as usize].after;
+            }
+            false
+        };
+        chain(a, b) || chain(b, a)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn op(id: u32, src: u32, dst: u32, off: u64, bytes: u64, after: Option<u32>) -> SendOp {
+        SendOp { id, src, dst, dst_offset: off, bytes, after }
+    }
+
+    fn sched(ops: Vec<SendOp>) -> Schedule {
+        Schedule { name: "t".into(), gpus: 4, size_bytes: 1024, ops }
+    }
+
+    #[test]
+    fn totals_and_windows() {
+        let s = sched(vec![op(0, 0, 1, 0, 100, None), op(1, 2, 1, 100, 50, None)]);
+        assert_eq!(s.total_bytes(), 150);
+        assert_eq!(s.recv_window_bytes(1), 150);
+        assert_eq!(s.recv_window_bytes(3), 0);
+    }
+
+    #[test]
+    fn dst_pages_counts_spanned_pages() {
+        let s = sched(vec![op(0, 0, 1, 0, 4096, None), op(1, 2, 1, 4096, 100, None)]);
+        assert_eq!(s.dst_pages(1, 4096), 2);
+        assert_eq!(s.dst_pages(1, 1024), 5);
+    }
+
+    #[test]
+    fn validate_accepts_good_schedule() {
+        sched(vec![op(0, 0, 1, 0, 10, None), op(1, 1, 0, 0, 10, None)]).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_self_send_and_sparse_ids() {
+        assert!(sched(vec![op(0, 1, 1, 0, 10, None)]).validate().is_err());
+        assert!(sched(vec![op(5, 0, 1, 0, 10, None)]).validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_unordered_overlap_but_accepts_ordered() {
+        // Unordered overlap at dst 1.
+        let bad = sched(vec![op(0, 0, 1, 0, 100, None), op(1, 2, 1, 50, 100, None)]);
+        assert!(bad.validate().is_err());
+        // Same overlap with ordering is fine (ring-style reuse).
+        let good = sched(vec![op(0, 0, 1, 0, 100, None), op(1, 2, 1, 50, 100, Some(0))]);
+        good.validate().unwrap();
+    }
+
+    #[test]
+    fn repeat_chains_iterations() {
+        let base = sched(vec![op(0, 0, 1, 0, 10, None), op(1, 1, 0, 0, 10, None)]);
+        let r = base.repeat(3);
+        r.validate().unwrap();
+        assert_eq!(r.ops.len(), 6);
+        assert_eq!(r.total_bytes(), 3 * base.total_bytes());
+        // Iteration 0 unchained; iterations 1..k chain to the same op of
+        // the previous iteration.
+        assert_eq!(r.ops[0].after, None);
+        assert_eq!(r.ops[2].after, Some(0));
+        assert_eq!(r.ops[3].after, Some(1));
+        assert_eq!(r.ops[4].after, Some(2));
+        assert_eq!(base.repeat(1), {
+            let mut b = base.clone();
+            b.name = format!("{}-x1", base.name);
+            b
+        });
+    }
+
+    #[test]
+    fn validate_rejects_cycles() {
+        let mut s = sched(vec![op(0, 0, 1, 0, 10, Some(1)), op(1, 1, 0, 0, 10, Some(0))]);
+        assert!(s.validate().is_err());
+        s.ops[1].after = None;
+        s.validate().unwrap();
+    }
+}

@@ -1,0 +1,14 @@
+//! Configuration system.
+//!
+//! `PodConfig` mirrors the paper's Table 1 exactly (see
+//! `presets::paper_baseline`). Configs round-trip through JSON
+//! (`to_json`/`from_json`), validate before use, and expand into sweep
+//! grids for the figure harness.
+
+pub mod presets;
+pub mod sweep;
+pub mod types;
+
+pub use presets::{paper_baseline, paper_ideal, quick_test};
+pub use sweep::{SweepGrid, SweepPoint};
+pub use types::*;

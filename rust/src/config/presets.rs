@@ -1,0 +1,136 @@
+//! Configuration presets.
+//!
+//! `paper_baseline` reproduces Table 1 of the paper verbatim; `paper_ideal`
+//! is the zero-RAT-overhead upper bound every figure normalizes against.
+
+use super::types::*;
+use crate::util::units::MIB;
+
+/// Table 1 baseline: UALink single-level Clos, 4 GPUs/node, 2 MB pages,
+/// L1 Link TLB 32-entry FA @50 ns (256 MSHRs), L2 512-entry 2-way @100 ns,
+/// PWCs 16/32/64/128 2-way @50 ns, 5-level table, 100 parallel walkers,
+/// 150 ns HBM, 16 x4 stations @200 Gbps/lane, 300 ns link + switch.
+pub fn paper_baseline(gpus: u32, size_bytes: u64) -> PodConfig {
+    PodConfig {
+        name: format!("baseline-{gpus}gpu-{}", crate::util::units::fmt_bytes(size_bytes)),
+        gpus,
+        gpus_per_node: 4,
+        seed: 0xA11_2_A11, // deterministic default; sweeps override
+        gpu: GpuConfig {
+            local_fabric_ns: 120,
+            hbm_ns: 150,
+            compute_units: 256,
+            cu_clock_mhz: 2200,
+            // Matches the 256-entry L1 MSHR: a WG can cover a full page of
+            // outstanding stores, which is what two-sided remote-store
+            // schedules from MSCCLang do.
+            wg_window: 256,
+        },
+        link: LinkConfig {
+            stations_per_gpu: 16,
+            lanes_per_station: 4,
+            gbps_per_lane: 200,
+            link_latency_ns: 300,
+            switch_latency_ns: 300,
+            // Credits cover the link+switch round of the crediting loop
+            // (600 ns × 100 GB/s = 60 KB ≈ 235 × 256 B); 512 keeps the
+            // uplink at full rate while still bounding switch buffering.
+            credits: 512,
+            ack_bytes: 32,
+        },
+        trans: TransConfig {
+            enabled: true,
+            page_bytes: 2 * MIB,
+            l1: TlbConfig { entries: 32, assoc: 0, hit_latency_ns: 50 },
+            l1_mshrs: 256,
+            l2: TlbConfig { entries: 512, assoc: 2, hit_latency_ns: 100 },
+            pwc_entries: vec![16, 32, 64, 128],
+            pwc_assoc: 2,
+            pwc_hit_latency_ns: 50,
+            levels: 5,
+            parallel_walkers: 100,
+            walk_mem_ns: 150,
+            walk_fabric_ns: 120,
+            prefetch: PrefetchConfig { enabled: false, depth: 1 },
+            pretranslate: PretranslateConfig { enabled: false, pages_per_pair: 0 },
+        },
+        workload: WorkloadConfig {
+            collective: CollectiveKind::AllToAll,
+            size_bytes,
+            request_sizing: RequestSizing::default(),
+            trace_source_gpu: None,
+        },
+    }
+}
+
+/// The paper's *ideal* configuration: identical network/memory, zero
+/// reverse-translation overhead (upper bound for optimization; §4.1).
+pub fn paper_ideal(gpus: u32, size_bytes: u64) -> PodConfig {
+    let mut cfg = paper_baseline(gpus, size_bytes);
+    cfg.name = format!("ideal-{gpus}gpu-{}", crate::util::units::fmt_bytes(size_bytes));
+    cfg.trans.enabled = false;
+    cfg
+}
+
+/// Small, fast config for unit/integration tests (coarse requests so test
+/// runs stay in the milliseconds).
+pub fn quick_test(gpus: u32, size_bytes: u64) -> PodConfig {
+    let mut cfg = paper_baseline(gpus, size_bytes);
+    cfg.name = format!("quick-{gpus}gpu");
+    cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: 20_000 };
+    cfg
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::{GIB, MIB};
+
+    #[test]
+    fn baseline_matches_table1() {
+        let c = paper_baseline(16, MIB);
+        // System
+        assert_eq!(c.gpus_per_node, 4);
+        assert_eq!(c.gpu.local_fabric_ns, 120);
+        // Per-GPU
+        assert_eq!(c.gpu.compute_units, 256);
+        assert_eq!(c.gpu.cu_clock_mhz, 2200);
+        assert_eq!(c.gpu.hbm_ns, 150);
+        // Reverse translation
+        assert_eq!(c.trans.page_bytes, 2 * MIB);
+        assert_eq!((c.trans.l1.entries, c.trans.l1.assoc, c.trans.l1.hit_latency_ns), (32, 0, 50));
+        assert_eq!(c.trans.l1_mshrs, 256);
+        assert_eq!((c.trans.l2.entries, c.trans.l2.assoc, c.trans.l2.hit_latency_ns), (512, 2, 100));
+        assert_eq!(c.trans.pwc_entries, vec![16, 32, 64, 128]);
+        assert_eq!((c.trans.pwc_assoc, c.trans.pwc_hit_latency_ns), (2, 50));
+        assert_eq!((c.trans.levels, c.trans.parallel_walkers), (5, 100));
+        // UALink
+        assert_eq!(c.link.stations_per_gpu, 16);
+        assert_eq!(c.link.lanes_per_station, 4);
+        assert_eq!(c.link.gbps_per_lane, 200);
+        assert_eq!(c.link.station_gbps(), 800);
+        assert_eq!(c.link.link_latency_ns, 300);
+        assert_eq!(c.link.switch_latency_ns, 300);
+    }
+
+    #[test]
+    fn ideal_differs_only_in_translation() {
+        let b = paper_baseline(8, GIB);
+        let i = paper_ideal(8, GIB);
+        assert!(!i.trans.enabled);
+        let mut b2 = b.clone();
+        b2.trans.enabled = false;
+        b2.name = i.name.clone();
+        assert_eq!(b2, i);
+    }
+
+    #[test]
+    fn all_paper_pod_sizes_validate() {
+        for gpus in [8, 16, 32, 64] {
+            for size in [MIB, 16 * MIB, 256 * MIB, 4 * GIB] {
+                paper_baseline(gpus, size).validate().unwrap();
+                paper_ideal(gpus, size).validate().unwrap();
+            }
+        }
+    }
+}

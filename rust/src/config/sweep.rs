@@ -1,0 +1,162 @@
+//! Parameter sweep grids for the figure harness.
+//!
+//! A `SweepGrid` is the cartesian product of pod sizes, collective sizes,
+//! and config variants (baseline/ideal/optimized/TLB-size overrides). The
+//! coordinator fans grid points out to worker threads.
+
+use super::presets::{paper_baseline, paper_ideal};
+use super::types::PodConfig;
+use crate::util::units::{fmt_bytes, GIB, MIB};
+
+/// A labelled config transformer (e.g. "l2=64" or "prefetch").
+pub type Variant = (String, fn(&mut PodConfig));
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct SweepPoint {
+    pub gpus: u32,
+    pub size_bytes: u64,
+    pub variant: String,
+    pub config: PodConfig,
+}
+
+impl SweepPoint {
+    pub fn label(&self) -> String {
+        format!("{}gpu/{}/{}", self.gpus, fmt_bytes(self.size_bytes), self.variant)
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct SweepGrid {
+    pub points: Vec<SweepPoint>,
+}
+
+impl SweepGrid {
+    /// Baseline + ideal pairs over (gpus × sizes) — the Fig 4/5 sweep.
+    pub fn baseline_vs_ideal(gpu_counts: &[u32], sizes: &[u64]) -> SweepGrid {
+        let mut points = Vec::new();
+        for &g in gpu_counts {
+            for &s in sizes {
+                points.push(SweepPoint {
+                    gpus: g,
+                    size_bytes: s,
+                    variant: "baseline".into(),
+                    config: paper_baseline(g, s),
+                });
+                points.push(SweepPoint {
+                    gpus: g,
+                    size_bytes: s,
+                    variant: "ideal".into(),
+                    config: paper_ideal(g, s),
+                });
+            }
+        }
+        SweepGrid { points }
+    }
+
+    /// Custom variants over (gpus × sizes); each variant also gets the
+    /// paired ideal run for normalization if `with_ideal`.
+    pub fn with_variants(
+        gpu_counts: &[u32],
+        sizes: &[u64],
+        variants: &[(String, Box<dyn Fn(&mut PodConfig)>)],
+        with_ideal: bool,
+    ) -> SweepGrid {
+        let mut points = Vec::new();
+        for &g in gpu_counts {
+            for &s in sizes {
+                for (name, f) in variants {
+                    let mut cfg = paper_baseline(g, s);
+                    f(&mut cfg);
+                    cfg.name = format!("{name}-{g}gpu-{}", fmt_bytes(s));
+                    points.push(SweepPoint {
+                        gpus: g,
+                        size_bytes: s,
+                        variant: name.clone(),
+                        config: cfg,
+                    });
+                }
+                if with_ideal {
+                    points.push(SweepPoint {
+                        gpus: g,
+                        size_bytes: s,
+                        variant: "ideal".into(),
+                        config: paper_ideal(g, s),
+                    });
+                }
+            }
+        }
+        SweepGrid { points }
+    }
+
+    pub fn len(&self) -> usize {
+        self.points.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.points.is_empty()
+    }
+}
+
+/// The paper's collective-size axis, 1 MB → 4 GB in powers of 4 (Figs 4,
+/// 5, 11 sweep "1 MB to 4 GB").
+pub fn paper_sizes() -> Vec<u64> {
+    vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB, 256 * MIB, GIB, 4 * GIB]
+}
+
+/// Reduced size axis for the 16-GPU breakdown figures (Figs 6–8: 1–64 MB
+/// is where the interesting transition happens, matching the paper's bars).
+pub fn breakdown_sizes() -> Vec<u64> {
+    vec![MIB, 2 * MIB, 4 * MIB, 8 * MIB, 16 * MIB, 32 * MIB, 64 * MIB, 256 * MIB]
+}
+
+/// The paper's pod-size axis.
+pub fn paper_gpu_counts() -> Vec<u32> {
+    vec![8, 16, 32, 64]
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn baseline_vs_ideal_grid_shape() {
+        let g = SweepGrid::baseline_vs_ideal(&[8, 16], &[MIB, 4 * MIB, 16 * MIB]);
+        assert_eq!(g.len(), 2 * 3 * 2);
+        let baselines = g.points.iter().filter(|p| p.variant == "baseline").count();
+        assert_eq!(baselines, 6);
+        for p in &g.points {
+            p.config.validate().unwrap();
+            assert_eq!(p.config.trans.enabled, p.variant == "baseline");
+        }
+    }
+
+    #[test]
+    fn variant_grid_applies_transform() {
+        let variants: Vec<(String, Box<dyn Fn(&mut PodConfig)>)> = vec![(
+            "l2-16".to_string(),
+            Box::new(|c: &mut PodConfig| c.trans.l2.entries = 16),
+        )];
+        let g = SweepGrid::with_variants(&[32], &[16 * MIB], &variants, true);
+        assert_eq!(g.len(), 2);
+        let p = g.points.iter().find(|p| p.variant == "l2-16").unwrap();
+        assert_eq!(p.config.trans.l2.entries, 16);
+        assert!(g.points.iter().any(|p| p.variant == "ideal"));
+    }
+
+    #[test]
+    fn paper_axes() {
+        assert_eq!(paper_sizes().first(), Some(&MIB));
+        assert_eq!(paper_sizes().last(), Some(&(4 * GIB)));
+        assert_eq!(paper_gpu_counts(), vec![8, 16, 32, 64]);
+    }
+
+    #[test]
+    fn labels_are_unique() {
+        let g = SweepGrid::baseline_vs_ideal(&paper_gpu_counts(), &paper_sizes());
+        let mut labels: Vec<String> = g.points.iter().map(|p| p.label()).collect();
+        labels.sort();
+        let before = labels.len();
+        labels.dedup();
+        assert_eq!(before, labels.len());
+    }
+}

@@ -1,0 +1,589 @@
+//! Configuration structs (Table 1 of the paper) and JSON round-trip.
+
+use crate::util::json::Json;
+use crate::util::units::{self, Time};
+use anyhow::{bail, Context, Result};
+
+/// Which collective to run (§2.5; the paper evaluates All-to-All).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// all-pairs/direct algorithm from the MSCCLang example scripts.
+    AllToAll,
+    /// direct all-gather (every rank broadcasts its shard).
+    AllGather,
+    /// ring all-reduce (reduce-scatter + all-gather phases).
+    AllReduceRing,
+    /// direct reduce-scatter (per-destination serialized reduction).
+    ReduceScatter,
+}
+
+impl CollectiveKind {
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveKind::AllToAll => "alltoall",
+            CollectiveKind::AllGather => "allgather",
+            CollectiveKind::AllReduceRing => "allreduce-ring",
+            CollectiveKind::ReduceScatter => "reducescatter",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "alltoall" | "a2a" => CollectiveKind::AllToAll,
+            "allgather" | "ag" => CollectiveKind::AllGather,
+            "allreduce-ring" | "ar" | "allreduce" => CollectiveKind::AllReduceRing,
+            "reducescatter" | "rs" => CollectiveKind::ReduceScatter,
+            other => bail!("unknown collective `{other}`"),
+        })
+    }
+}
+
+/// Remote-store request sizing. The paper does not state store granularity;
+/// `Auto` targets a bounded event count while keeping ≥64 requests per 2MB
+/// page so translation concurrency behaviour is preserved (DESIGN.md).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RequestSizing {
+    Fixed(u64),
+    Auto { target_total_requests: u64 },
+}
+
+impl Default for RequestSizing {
+    fn default() -> Self {
+        RequestSizing::Auto { target_total_requests: 2_000_000 }
+    }
+}
+
+/// Link/station parameters (Table 1 "Inter-GPU UALink Configuration").
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkConfig {
+    pub stations_per_gpu: u32,
+    pub lanes_per_station: u32,
+    /// Effective bandwidth per lane, Gbps (200G per UALink 200G 1.0).
+    pub gbps_per_lane: u64,
+    /// Die-to-die link latency, ns (300 ns).
+    pub link_latency_ns: u64,
+    /// Single-level Clos switch latency, ns (300 ns).
+    pub switch_latency_ns: u64,
+    /// Link-level credits (packets in flight past a station uplink).
+    pub credits: u32,
+    /// ACK / response packet size on the reverse path, bytes.
+    pub ack_bytes: u64,
+}
+
+impl LinkConfig {
+    /// Cumulative station bandwidth, Gbps (800 Gbps for x4 @ 200G).
+    pub fn station_gbps(&self) -> u64 {
+        self.gbps_per_lane * self.lanes_per_station as u64
+    }
+
+    pub fn link_latency(&self) -> Time {
+        units::ns(self.link_latency_ns)
+    }
+
+    pub fn switch_latency(&self) -> Time {
+        units::ns(self.switch_latency_ns)
+    }
+}
+
+/// One TLB level's geometry/timing.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TlbConfig {
+    pub entries: u32,
+    /// 0 = fully associative.
+    pub assoc: u32,
+    pub hit_latency_ns: u64,
+}
+
+impl TlbConfig {
+    pub fn hit_latency(&self) -> Time {
+        units::ns(self.hit_latency_ns)
+    }
+}
+
+/// Reverse-translation hierarchy (Table 1 "Reverse Translation Config").
+#[derive(Debug, Clone, PartialEq)]
+pub struct TransConfig {
+    /// false = the paper's *ideal* configuration (zero RAT overhead).
+    pub enabled: bool,
+    /// Translation page size (paper evaluates 2 MB).
+    pub page_bytes: u64,
+    /// Private per-station L1 Link TLB: 32-entry fully-assoc, 50 ns.
+    pub l1: TlbConfig,
+    /// L1 MSHRs per station (256).
+    pub l1_mshrs: u32,
+    /// Shared per-GPU L2 Link TLB: 512-entry 2-way, 100 ns, LRU.
+    pub l2: TlbConfig,
+    /// Page-walk caches, one per non-leaf level, sized 16/32/64/128.
+    pub pwc_entries: Vec<u32>,
+    pub pwc_assoc: u32,
+    pub pwc_hit_latency_ns: u64,
+    /// Page-table depth (5-level).
+    pub levels: u32,
+    /// Concurrent walks supported by the shared walker (100).
+    pub parallel_walkers: u32,
+    /// Memory access latency per walk level, ns (HBM 150 ns).
+    pub walk_mem_ns: u64,
+    /// Local-data-fabric traversal each walker memory access pays on top
+    /// of HBM (§3's constant 120 ns CU/agent → NoC latency).
+    pub walk_fabric_ns: u64,
+    /// §6.2 software-guided TLB prefetching (next-page stride).
+    pub prefetch: PrefetchConfig,
+    /// §6.1 fused pre-translation kernel warmup.
+    pub pretranslate: PretranslateConfig,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PrefetchConfig {
+    pub enabled: bool,
+    /// How many pages ahead of the current stream position to prefetch.
+    pub depth: u32,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct PretranslateConfig {
+    pub enabled: bool,
+    /// Pages per (src,dst) stream pre-translated during the preceding
+    /// compute phase (fused kernel). 0 = unlimited (whole buffer).
+    pub pages_per_pair: u32,
+}
+
+/// GPU-local timing (Table 1 "System" / "Per GPU Config").
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct GpuConfig {
+    /// Constant CU→NoC local data fabric latency (120 ns).
+    pub local_fabric_ns: u64,
+    /// HBM access latency (150 ns).
+    pub hbm_ns: u64,
+    /// Compute units per GPU (256; used by workload generators).
+    pub compute_units: u32,
+    /// CU clock, MHz (2200).
+    pub cu_clock_mhz: u32,
+    /// Per-WG outstanding-request window (memory-system concurrency).
+    pub wg_window: u32,
+}
+
+impl GpuConfig {
+    pub fn local_fabric(&self) -> Time {
+        units::ns(self.local_fabric_ns)
+    }
+
+    pub fn hbm(&self) -> Time {
+        units::ns(self.hbm_ns)
+    }
+}
+
+/// Workload description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadConfig {
+    pub collective: CollectiveKind,
+    /// "Size" = the larger of a single GPU's input/output buffer (§3).
+    pub size_bytes: u64,
+    pub request_sizing: RequestSizing,
+    /// Record a per-request RAT latency trace for requests originating
+    /// from this GPU (Figs 9/10). None = no trace.
+    pub trace_source_gpu: Option<u32>,
+}
+
+/// Full simulation configuration.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PodConfig {
+    pub name: String,
+    pub gpus: u32,
+    pub gpus_per_node: u32,
+    pub seed: u64,
+    pub gpu: GpuConfig,
+    pub link: LinkConfig,
+    pub trans: TransConfig,
+    pub workload: WorkloadConfig,
+}
+
+impl PodConfig {
+    pub fn nodes(&self) -> u32 {
+        self.gpus.div_ceil(self.gpus_per_node)
+    }
+
+    /// Node id of a GPU (4 GPUs/node per Table 1).
+    pub fn node_of(&self, gpu: u32) -> u32 {
+        gpu / self.gpus_per_node
+    }
+
+    /// Whether src→dst crosses an OS domain (inter-node ⇒ NPA addressing
+    /// ⇒ reverse translation at the target; §2.3).
+    pub fn is_internode(&self, src: u32, dst: u32) -> bool {
+        self.node_of(src) != self.node_of(dst)
+    }
+
+    /// Resolve the concrete request size for the configured workload.
+    pub fn request_bytes(&self) -> u64 {
+        let total_moved: u64 = match self.workload.collective {
+            CollectiveKind::AllToAll
+            | CollectiveKind::AllGather
+            | CollectiveKind::ReduceScatter => {
+                self.workload.size_bytes * (self.gpus as u64 - 1)
+            }
+            CollectiveKind::AllReduceRing => 2 * self.workload.size_bytes * (self.gpus as u64 - 1)
+                / self.gpus as u64
+                * self.gpus as u64,
+        };
+        match self.workload.request_sizing {
+            RequestSizing::Fixed(b) => b,
+            RequestSizing::Auto { target_total_requests } => {
+                let raw = total_moved / target_total_requests.max(1);
+                // Keep ≥64 requests per 2MB page; clamp to [256B, 32KiB].
+                let max_per_page = self.trans.page_bytes / 64;
+                raw.next_power_of_two().clamp(256, max_per_page.min(32 * 1024))
+            }
+        }
+    }
+
+    pub fn validate(&self) -> Result<()> {
+        if self.gpus < 2 {
+            bail!("need at least 2 GPUs (got {})", self.gpus);
+        }
+        if self.gpus_per_node == 0 {
+            bail!("gpus_per_node must be > 0");
+        }
+        if self.link.stations_per_gpu == 0 || self.link.lanes_per_station == 0 {
+            bail!("station/lane counts must be > 0");
+        }
+        if self.link.gbps_per_lane == 0 {
+            bail!("lane bandwidth must be > 0");
+        }
+        if !self.trans.page_bytes.is_power_of_two() {
+            bail!("page size must be a power of two (got {})", self.trans.page_bytes);
+        }
+        if self.trans.enabled {
+            if self.trans.levels < 2 {
+                bail!("page table needs >= 2 levels");
+            }
+            if self.trans.pwc_entries.len() != (self.trans.levels - 1) as usize {
+                bail!(
+                    "need one PWC per non-leaf level: levels={} pwcs={}",
+                    self.trans.levels,
+                    self.trans.pwc_entries.len()
+                );
+            }
+            if self.trans.l1.entries == 0 || self.trans.l2.entries == 0 {
+                bail!("TLB entry counts must be > 0");
+            }
+            if self.trans.l2.assoc != 0 && self.trans.l2.entries % self.trans.l2.assoc != 0 {
+                bail!("L2 entries must divide evenly into sets");
+            }
+            if self.trans.parallel_walkers == 0 {
+                bail!("need at least one page-table walker");
+            }
+            if self.trans.l1_mshrs == 0 {
+                bail!("need at least one L1 MSHR");
+            }
+        }
+        if self.workload.size_bytes == 0 {
+            bail!("collective size must be > 0");
+        }
+        let chunk = self.workload.size_bytes / self.gpus as u64;
+        if chunk == 0 {
+            bail!(
+                "collective size {} too small to split across {} GPUs",
+                self.workload.size_bytes,
+                self.gpus
+            );
+        }
+        if let Some(g) = self.workload.trace_source_gpu {
+            if g >= self.gpus {
+                bail!("trace_source_gpu {g} out of range (gpus={})", self.gpus);
+            }
+        }
+        Ok(())
+    }
+
+    // ---- JSON round-trip ----
+
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("gpus", Json::from(self.gpus as u64)),
+            ("gpus_per_node", Json::from(self.gpus_per_node as u64)),
+            ("seed", Json::from(self.seed)),
+            (
+                "gpu",
+                Json::from_pairs(vec![
+                    ("local_fabric_ns", Json::from(self.gpu.local_fabric_ns)),
+                    ("hbm_ns", Json::from(self.gpu.hbm_ns)),
+                    ("compute_units", Json::from(self.gpu.compute_units as u64)),
+                    ("cu_clock_mhz", Json::from(self.gpu.cu_clock_mhz as u64)),
+                    ("wg_window", Json::from(self.gpu.wg_window as u64)),
+                ]),
+            ),
+            (
+                "link",
+                Json::from_pairs(vec![
+                    ("stations_per_gpu", Json::from(self.link.stations_per_gpu as u64)),
+                    ("lanes_per_station", Json::from(self.link.lanes_per_station as u64)),
+                    ("gbps_per_lane", Json::from(self.link.gbps_per_lane)),
+                    ("link_latency_ns", Json::from(self.link.link_latency_ns)),
+                    ("switch_latency_ns", Json::from(self.link.switch_latency_ns)),
+                    ("credits", Json::from(self.link.credits as u64)),
+                    ("ack_bytes", Json::from(self.link.ack_bytes)),
+                ]),
+            ),
+            (
+                "trans",
+                Json::from_pairs(vec![
+                    ("enabled", Json::from(self.trans.enabled)),
+                    ("page_bytes", Json::from(self.trans.page_bytes)),
+                    (
+                        "l1",
+                        Json::from_pairs(vec![
+                            ("entries", Json::from(self.trans.l1.entries as u64)),
+                            ("assoc", Json::from(self.trans.l1.assoc as u64)),
+                            ("hit_latency_ns", Json::from(self.trans.l1.hit_latency_ns)),
+                        ]),
+                    ),
+                    ("l1_mshrs", Json::from(self.trans.l1_mshrs as u64)),
+                    (
+                        "l2",
+                        Json::from_pairs(vec![
+                            ("entries", Json::from(self.trans.l2.entries as u64)),
+                            ("assoc", Json::from(self.trans.l2.assoc as u64)),
+                            ("hit_latency_ns", Json::from(self.trans.l2.hit_latency_ns)),
+                        ]),
+                    ),
+                    (
+                        "pwc_entries",
+                        Json::Arr(
+                            self.trans.pwc_entries.iter().map(|&e| Json::from(e as u64)).collect(),
+                        ),
+                    ),
+                    ("pwc_assoc", Json::from(self.trans.pwc_assoc as u64)),
+                    ("pwc_hit_latency_ns", Json::from(self.trans.pwc_hit_latency_ns)),
+                    ("levels", Json::from(self.trans.levels as u64)),
+                    ("parallel_walkers", Json::from(self.trans.parallel_walkers as u64)),
+                    ("walk_mem_ns", Json::from(self.trans.walk_mem_ns)),
+                    ("walk_fabric_ns", Json::from(self.trans.walk_fabric_ns)),
+                    (
+                        "prefetch",
+                        Json::from_pairs(vec![
+                            ("enabled", Json::from(self.trans.prefetch.enabled)),
+                            ("depth", Json::from(self.trans.prefetch.depth as u64)),
+                        ]),
+                    ),
+                    (
+                        "pretranslate",
+                        Json::from_pairs(vec![
+                            ("enabled", Json::from(self.trans.pretranslate.enabled)),
+                            (
+                                "pages_per_pair",
+                                Json::from(self.trans.pretranslate.pages_per_pair as u64),
+                            ),
+                        ]),
+                    ),
+                ]),
+            ),
+            (
+                "workload",
+                Json::from_pairs(vec![
+                    ("collective", Json::from(self.workload.collective.name())),
+                    ("size_bytes", Json::from(self.workload.size_bytes)),
+                    (
+                        "request_sizing",
+                        match self.workload.request_sizing {
+                            RequestSizing::Fixed(b) => Json::from_pairs(vec![
+                                ("mode", Json::from("fixed")),
+                                ("bytes", Json::from(b)),
+                            ]),
+                            RequestSizing::Auto { target_total_requests } => Json::from_pairs(vec![
+                                ("mode", Json::from("auto")),
+                                ("target_total_requests", Json::from(target_total_requests)),
+                            ]),
+                        },
+                    ),
+                    (
+                        "trace_source_gpu",
+                        match self.workload.trace_source_gpu {
+                            Some(g) => Json::from(g as u64),
+                            None => Json::Null,
+                        },
+                    ),
+                ]),
+            ),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> Result<PodConfig> {
+        let gpu = j.get("gpu").context("missing `gpu` section")?;
+        let link = j.get("link").context("missing `link` section")?;
+        let trans = j.get("trans").context("missing `trans` section")?;
+        let wl = j.get("workload").context("missing `workload` section")?;
+        let l1 = trans.get("l1").context("missing `trans.l1`")?;
+        let l2 = trans.get("l2").context("missing `trans.l2`")?;
+        let sizing = wl.get("request_sizing").context("missing `workload.request_sizing`")?;
+        let request_sizing = match sizing.req_str("mode")? {
+            "fixed" => RequestSizing::Fixed(sizing.req_u64("bytes")?),
+            "auto" => RequestSizing::Auto {
+                target_total_requests: sizing.req_u64("target_total_requests")?,
+            },
+            other => bail!("unknown request_sizing mode `{other}`"),
+        };
+        let cfg = PodConfig {
+            name: j.req_str("name")?.to_string(),
+            gpus: j.req_u64("gpus")? as u32,
+            gpus_per_node: j.req_u64("gpus_per_node")? as u32,
+            seed: j.req_u64("seed")?,
+            gpu: GpuConfig {
+                local_fabric_ns: gpu.req_u64("local_fabric_ns")?,
+                hbm_ns: gpu.req_u64("hbm_ns")?,
+                compute_units: gpu.req_u64("compute_units")? as u32,
+                cu_clock_mhz: gpu.req_u64("cu_clock_mhz")? as u32,
+                wg_window: gpu.req_u64("wg_window")? as u32,
+            },
+            link: LinkConfig {
+                stations_per_gpu: link.req_u64("stations_per_gpu")? as u32,
+                lanes_per_station: link.req_u64("lanes_per_station")? as u32,
+                gbps_per_lane: link.req_u64("gbps_per_lane")?,
+                link_latency_ns: link.req_u64("link_latency_ns")?,
+                switch_latency_ns: link.req_u64("switch_latency_ns")?,
+                credits: link.req_u64("credits")? as u32,
+                ack_bytes: link.req_u64("ack_bytes")?,
+            },
+            trans: TransConfig {
+                enabled: trans.opt_bool("enabled", true),
+                page_bytes: trans.req_u64("page_bytes")?,
+                l1: TlbConfig {
+                    entries: l1.req_u64("entries")? as u32,
+                    assoc: l1.req_u64("assoc")? as u32,
+                    hit_latency_ns: l1.req_u64("hit_latency_ns")?,
+                },
+                l1_mshrs: trans.req_u64("l1_mshrs")? as u32,
+                l2: TlbConfig {
+                    entries: l2.req_u64("entries")? as u32,
+                    assoc: l2.req_u64("assoc")? as u32,
+                    hit_latency_ns: l2.req_u64("hit_latency_ns")?,
+                },
+                pwc_entries: trans
+                    .get("pwc_entries")
+                    .and_then(Json::as_arr)
+                    .context("missing `trans.pwc_entries`")?
+                    .iter()
+                    .map(|v| v.as_u64().map(|x| x as u32).context("pwc entry not u64"))
+                    .collect::<Result<Vec<_>>>()?,
+                pwc_assoc: trans.req_u64("pwc_assoc")? as u32,
+                pwc_hit_latency_ns: trans.req_u64("pwc_hit_latency_ns")?,
+                levels: trans.req_u64("levels")? as u32,
+                parallel_walkers: trans.req_u64("parallel_walkers")? as u32,
+                walk_mem_ns: trans.req_u64("walk_mem_ns")?,
+                walk_fabric_ns: trans.opt_u64("walk_fabric_ns", 120),
+                prefetch: {
+                    let p = trans.get("prefetch").context("missing `trans.prefetch`")?;
+                    PrefetchConfig {
+                        enabled: p.opt_bool("enabled", false),
+                        depth: p.opt_u64("depth", 1) as u32,
+                    }
+                },
+                pretranslate: {
+                    let p = trans.get("pretranslate").context("missing `trans.pretranslate`")?;
+                    PretranslateConfig {
+                        enabled: p.opt_bool("enabled", false),
+                        pages_per_pair: p.opt_u64("pages_per_pair", 0) as u32,
+                    }
+                },
+            },
+            workload: WorkloadConfig {
+                collective: CollectiveKind::parse(wl.req_str("collective")?)?,
+                size_bytes: wl.req_u64("size_bytes")?,
+                request_sizing,
+                trace_source_gpu: wl
+                    .get("trace_source_gpu")
+                    .and_then(Json::as_u64)
+                    .map(|g| g as u32),
+            },
+        };
+        Ok(cfg)
+    }
+
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing config to {}", path.display()))
+    }
+
+    pub fn load(path: &std::path::Path) -> Result<PodConfig> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading config from {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_baseline;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn baseline_validates() {
+        paper_baseline(16, MIB).validate().unwrap();
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        let cfg = paper_baseline(32, 16 * MIB);
+        let j = cfg.to_json();
+        let back = PodConfig::from_json(&j).unwrap();
+        assert_eq!(cfg, back);
+        // And through text.
+        let j2 = Json::parse(&j.to_string_pretty()).unwrap();
+        assert_eq!(PodConfig::from_json(&j2).unwrap(), cfg);
+    }
+
+    #[test]
+    fn validation_catches_bad_configs() {
+        let mut c = paper_baseline(16, MIB);
+        c.gpus = 1;
+        assert!(c.validate().is_err());
+
+        let mut c = paper_baseline(16, MIB);
+        c.trans.page_bytes = 3_000_000;
+        assert!(c.validate().is_err());
+
+        let mut c = paper_baseline(16, MIB);
+        c.trans.pwc_entries.pop();
+        assert!(c.validate().is_err());
+
+        let mut c = paper_baseline(16, MIB);
+        c.workload.trace_source_gpu = Some(99);
+        assert!(c.validate().is_err());
+
+        let mut c = paper_baseline(16, MIB);
+        c.trans.l2.assoc = 3; // 512 % 3 != 0
+        assert!(c.validate().is_err());
+    }
+
+    #[test]
+    fn auto_request_sizing_bounds() {
+        // Small collective → minimum 256B requests.
+        let c = paper_baseline(16, MIB);
+        assert_eq!(c.request_bytes(), 256);
+        // Huge collective → capped at 32KiB so pages keep >=64 requests.
+        let c = paper_baseline(64, 4 * 1024 * MIB);
+        assert_eq!(c.request_bytes(), 32 * 1024);
+        // Fixed passes through.
+        let mut c = paper_baseline(16, MIB);
+        c.workload.request_sizing = RequestSizing::Fixed(512);
+        assert_eq!(c.request_bytes(), 512);
+    }
+
+    #[test]
+    fn internode_detection() {
+        let c = paper_baseline(16, MIB); // 4 GPUs per node
+        assert!(!c.is_internode(0, 3));
+        assert!(c.is_internode(0, 4));
+        assert!(c.is_internode(15, 0));
+        assert_eq!(c.nodes(), 4);
+    }
+
+    #[test]
+    fn collective_kind_parse() {
+        assert_eq!(CollectiveKind::parse("a2a").unwrap(), CollectiveKind::AllToAll);
+        assert_eq!(CollectiveKind::parse("allgather").unwrap(), CollectiveKind::AllGather);
+        assert!(CollectiveKind::parse("bogus").is_err());
+    }
+}

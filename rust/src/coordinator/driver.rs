@@ -1,0 +1,139 @@
+//! Parallel sweep execution.
+
+use crate::config::{PodConfig, SweepGrid, SweepPoint};
+use crate::pod;
+use crate::stats::RunStats;
+use anyhow::Result;
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// One completed grid point.
+#[derive(Debug, Clone)]
+pub struct SweepResult {
+    pub point: SweepPoint,
+    pub stats: RunStats,
+}
+
+impl SweepResult {
+    pub fn label(&self) -> String {
+        self.point.label()
+    }
+}
+
+/// Pick a worker count: `RATSIM_THREADS` override, else available
+/// parallelism (capped by job count).
+fn worker_count(jobs: usize) -> usize {
+    let hw = std::env::var("RATSIM_THREADS")
+        .ok()
+        .and_then(|v| v.parse::<usize>().ok())
+        .filter(|&n| n > 0)
+        .unwrap_or_else(|| {
+            std::thread::available_parallelism().map(|n| n.get()).unwrap_or(4)
+        });
+    hw.min(jobs.max(1))
+}
+
+/// Run every point of a grid in parallel; results return in grid order.
+pub fn run_grid(grid: &SweepGrid) -> Result<Vec<SweepResult>> {
+    run_points(&grid.points)
+}
+
+/// Run a list of sweep points on a worker pool.
+pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
+    let n = points.len();
+    if n == 0 {
+        return Ok(Vec::new());
+    }
+    let next = AtomicUsize::new(0);
+    let results: Vec<Mutex<Option<Result<RunStats>>>> =
+        (0..n).map(|_| Mutex::new(None)).collect();
+    let workers = worker_count(n);
+    log::info!("coordinator: {n} jobs on {workers} workers");
+
+    std::thread::scope(|scope| {
+        for w in 0..workers {
+            let next = &next;
+            let results = &results;
+            scope.spawn(move || loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= n {
+                    break;
+                }
+                let point = &points[i];
+                log::debug!("worker {w}: job {i} {}", point.label());
+                let res = pod::run(&point.config);
+                if let Ok(s) = &res {
+                    log::info!("  [{}/{}] {}", i + 1, n, s.summary());
+                }
+                *results[i].lock().unwrap() = Some(res);
+            });
+        }
+    });
+
+    let mut out = Vec::with_capacity(n);
+    for (i, cell) in results.into_iter().enumerate() {
+        let stats = cell
+            .into_inner()
+            .unwrap()
+            .expect("worker exited without posting a result")?;
+        out.push(SweepResult { point: points[i].clone(), stats });
+    }
+    Ok(out)
+}
+
+/// Convenience: run one config (used by the CLI `run` subcommand).
+pub fn run_single(cfg: &PodConfig) -> Result<RunStats> {
+    pod::run(cfg)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::quick_test;
+    use crate::config::{RequestSizing, SweepPoint};
+    use crate::util::units::MIB;
+
+    fn tiny_point(gpus: u32, size: u64, variant: &str, ideal: bool) -> SweepPoint {
+        let mut config = quick_test(gpus, size);
+        config.workload.request_sizing = RequestSizing::Auto { target_total_requests: 2_000 };
+        config.trans.enabled = !ideal;
+        SweepPoint { gpus, size_bytes: size, variant: variant.into(), config }
+    }
+
+    #[test]
+    fn runs_points_in_order_and_parallel() {
+        let points: Vec<SweepPoint> = vec![
+            tiny_point(4, MIB, "baseline", false),
+            tiny_point(4, MIB, "ideal", true),
+            tiny_point(8, MIB, "baseline", false),
+            tiny_point(8, MIB, "ideal", true),
+        ];
+        let results = run_points(&points).unwrap();
+        assert_eq!(results.len(), 4);
+        for (r, p) in results.iter().zip(&points) {
+            assert_eq!(r.point.label(), p.label());
+            assert!(r.stats.completion > 0);
+        }
+        // Baseline vs ideal pairing is meaningful — at 8 GPUs (4/node)
+        // inter-node RAT exists. (The 4-GPU pod is a single node: all
+        // traffic is intra-node/SPA, so baseline == ideal there.)
+        assert_eq!(results[0].stats.completion, results[1].stats.completion);
+        assert!(results[2].stats.completion > results[3].stats.completion);
+    }
+
+    #[test]
+    fn parallel_results_match_serial() {
+        let points = vec![tiny_point(4, MIB, "baseline", false); 3];
+        let parallel = run_points(&points).unwrap();
+        let serial = pod::run(&points[0].config).unwrap();
+        for r in parallel {
+            assert_eq!(r.stats.completion, serial.completion, "determinism across threads");
+            assert_eq!(r.stats.events, serial.events);
+        }
+    }
+
+    #[test]
+    fn empty_grid_is_fine() {
+        assert!(run_points(&[]).unwrap().is_empty());
+    }
+}

@@ -1,0 +1,11 @@
+//! Leader/worker sweep coordinator.
+//!
+//! A sweep is a list of independent simulation jobs (grid points); the
+//! leader shards them over a worker-thread pool via an atomic work queue
+//! and aggregates `RunStats` in submission order. This is the right
+//! parallel decomposition for DES parameter sweeps: one event loop per
+//! point, no cross-point synchronization.
+
+pub mod driver;
+
+pub use driver::{run_grid, run_points, SweepResult};

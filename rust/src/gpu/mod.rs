@@ -1,0 +1,12 @@
+//! GPU node model: workgroup request streams and local timing.
+//!
+//! The paper models GPUs behaviourally (§3): every CU request pays a
+//! constant 120 ns local-data-fabric traversal, memory accesses miss all
+//! cache levels, and HBM costs 150 ns. The interesting state is the
+//! per-op workgroup: the all-pairs schedule runs "a unique WG per
+//! destination", each streaming remote stores with a bounded
+//! outstanding-request window.
+
+pub mod workgroup;
+
+pub use workgroup::{WgState, WorkGroup};

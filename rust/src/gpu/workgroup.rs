@@ -1,0 +1,157 @@
+//! Workgroup request-stream state machine.
+//!
+//! A `WorkGroup` executes one `SendOp`: it streams the op's bytes as
+//! `request_bytes`-sized remote stores, keeping at most `window` requests
+//! outstanding. `next_request` hands out the byte range of each request in
+//! stream order (the strided, streaming access pattern of §4.4);
+//! `on_ack` retires one and reports whether the op just completed.
+
+use crate::collective::SendOp;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WgState {
+    /// Waiting on a dependency (`after` op not yet complete).
+    Blocked,
+    /// Issuing / draining requests.
+    Running,
+    /// All requests acknowledged.
+    Done,
+}
+
+#[derive(Debug, Clone)]
+pub struct WorkGroup {
+    pub op: SendOp,
+    pub state: WgState,
+    request_bytes: u64,
+    window: u32,
+    /// Next byte offset (relative to op start) to issue.
+    next_offset: u64,
+    pub outstanding: u32,
+    pub issued: u64,
+    pub acked: u64,
+    total_requests: u64,
+}
+
+impl WorkGroup {
+    pub fn new(op: SendOp, request_bytes: u64, window: u32, blocked: bool) -> Self {
+        assert!(request_bytes > 0 && window > 0);
+        let total_requests = op.bytes.div_ceil(request_bytes);
+        Self {
+            op,
+            state: if blocked { WgState::Blocked } else { WgState::Running },
+            request_bytes,
+            window,
+            next_offset: 0,
+            outstanding: 0,
+            issued: 0,
+            acked: 0,
+            total_requests,
+        }
+    }
+
+    pub fn total_requests(&self) -> u64 {
+        self.total_requests
+    }
+
+    /// Unblock (dependency satisfied).
+    pub fn start(&mut self) {
+        debug_assert_eq!(self.state, WgState::Blocked);
+        self.state = WgState::Running;
+    }
+
+    /// Can another request be issued right now?
+    pub fn can_issue(&self) -> bool {
+        self.state == WgState::Running
+            && self.outstanding < self.window
+            && self.issued < self.total_requests
+    }
+
+    /// Issue the next request: returns (dst_offset_bytes, len_bytes) in the
+    /// destination receive window.
+    pub fn next_request(&mut self) -> (u64, u64) {
+        debug_assert!(self.can_issue());
+        let off = self.next_offset;
+        let len = self.request_bytes.min(self.op.bytes - off);
+        self.next_offset += len;
+        self.issued += 1;
+        self.outstanding += 1;
+        (self.op.dst_offset + off, len)
+    }
+
+    /// An ACK returned. True if the whole op just completed.
+    pub fn on_ack(&mut self) -> bool {
+        debug_assert!(self.outstanding > 0);
+        self.outstanding -= 1;
+        self.acked += 1;
+        if self.acked == self.total_requests {
+            self.state = WgState::Done;
+            true
+        } else {
+            false
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PairOf, RangeU64};
+
+    fn op(bytes: u64) -> SendOp {
+        SendOp { id: 0, src: 0, dst: 1, dst_offset: 4096, bytes, after: None }
+    }
+
+    #[test]
+    fn streams_in_order_with_window() {
+        let mut wg = WorkGroup::new(op(1000), 256, 2, false);
+        assert_eq!(wg.total_requests(), 4);
+        assert_eq!(wg.next_request(), (4096, 256));
+        assert_eq!(wg.next_request(), (4096 + 256, 256));
+        assert!(!wg.can_issue(), "window of 2 exhausted");
+        assert!(!wg.on_ack());
+        assert!(wg.can_issue());
+        assert_eq!(wg.next_request(), (4096 + 512, 256));
+        wg.on_ack();
+        assert_eq!(wg.next_request(), (4096 + 768, 232), "tail request is partial");
+        assert!(!wg.can_issue(), "all issued");
+        wg.on_ack();
+        assert!(!wg.on_ack() == false || wg.state == WgState::Done);
+        assert_eq!(wg.state, WgState::Done);
+    }
+
+    #[test]
+    fn blocked_wg_does_not_issue_until_started() {
+        let mut wg = WorkGroup::new(op(512), 256, 4, true);
+        assert!(!wg.can_issue());
+        wg.start();
+        assert!(wg.can_issue());
+    }
+
+    #[test]
+    fn completion_reported_exactly_once() {
+        let mut wg = WorkGroup::new(op(512), 256, 4, false);
+        wg.next_request();
+        wg.next_request();
+        assert!(!wg.on_ack());
+        assert!(wg.on_ack(), "last ack completes the op");
+    }
+
+    #[test]
+    fn prop_issued_bytes_cover_op_exactly() {
+        let strat = PairOf(RangeU64 { lo: 1, hi: 100_000 }, RangeU64 { lo: 1, hi: 4096 });
+        check("wg-covers-op", &strat, 200, |&(bytes, req)| {
+            let mut wg = WorkGroup::new(op(bytes), req, u32::MAX, false);
+            let mut covered = 0u64;
+            let mut expected_off = 4096u64;
+            while wg.can_issue() {
+                let (o, l) = wg.next_request();
+                if o != expected_off || l == 0 || l > req {
+                    return false;
+                }
+                expected_off += l;
+                covered += l;
+            }
+            covered == bytes && wg.issued == wg.total_requests()
+        });
+    }
+}

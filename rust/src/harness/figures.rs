@@ -1,0 +1,605 @@
+//! Per-figure regeneration (Figs 4–11, Table 1, §6 ablation).
+//!
+//! Shapes reproduced, not testbed-absolute numbers — see EXPERIMENTS.md
+//! for paper-vs-measured.
+
+use super::table::Table;
+use crate::config::presets::{paper_baseline, paper_ideal};
+use crate::config::sweep::{breakdown_sizes, paper_gpu_counts, paper_sizes};
+use crate::config::{PodConfig, SweepGrid, SweepPoint};
+use crate::coordinator::{run_grid, run_points, SweepResult};
+use crate::stats::run::write_csv;
+use crate::util::units::{fmt_bytes, to_ns, MIB};
+use anyhow::Result;
+use std::collections::BTreeMap;
+use std::path::PathBuf;
+
+/// Harness options.
+#[derive(Debug, Clone)]
+pub struct FigOpts {
+    pub out_dir: PathBuf,
+    /// Quick mode: smaller request budgets + trimmed axes (for CI/bench).
+    pub quick: bool,
+}
+
+impl Default for FigOpts {
+    fn default() -> Self {
+        Self { out_dir: PathBuf::from("results"), quick: false }
+    }
+}
+
+impl FigOpts {
+    fn sizes(&self) -> Vec<u64> {
+        if self.quick {
+            vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB]
+        } else {
+            paper_sizes()
+        }
+    }
+
+    fn gpu_counts(&self) -> Vec<u32> {
+        if self.quick {
+            vec![8, 16]
+        } else {
+            paper_gpu_counts()
+        }
+    }
+
+    fn tune(&self, cfg: &mut PodConfig) {
+        if self.quick {
+            cfg.workload.request_sizing =
+                crate::config::RequestSizing::Auto { target_total_requests: 100_000 };
+        }
+    }
+}
+
+/// The Fig-4/5 sweep: baseline + ideal over (gpus × sizes). Shared by
+/// both figures so the expensive grid runs once.
+pub fn main_sweep(opts: &FigOpts) -> Result<Vec<SweepResult>> {
+    let mut grid = SweepGrid::baseline_vs_ideal(&opts.gpu_counts(), &opts.sizes());
+    for p in &mut grid.points {
+        opts.tune(&mut p.config);
+    }
+    run_grid(&grid)
+}
+
+fn pair_up(results: &[SweepResult]) -> BTreeMap<(u32, u64), (f64, f64, &SweepResult)> {
+    // (gpus, size) -> (baseline_ns, ideal_ns, baseline result)
+    let mut base: BTreeMap<(u32, u64), &SweepResult> = BTreeMap::new();
+    let mut ideal: BTreeMap<(u32, u64), f64> = BTreeMap::new();
+    for r in results {
+        let key = (r.point.gpus, r.point.size_bytes);
+        match r.point.variant.as_str() {
+            "baseline" => {
+                base.insert(key, r);
+            }
+            "ideal" => {
+                ideal.insert(key, to_ns(r.stats.completion));
+            }
+            _ => {}
+        }
+    }
+    base.into_iter()
+        .map(|(k, b)| {
+            let i = ideal.get(&k).copied().unwrap_or(f64::NAN);
+            (k, (to_ns(b.stats.completion), i, b))
+        })
+        .collect()
+}
+
+/// Fig 4: RAT overhead normalized to ideal, per pod size × collective size.
+pub fn fig4(opts: &FigOpts, sweep: &[SweepResult]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 4 — RAT performance overhead (baseline / ideal completion)",
+        &["gpus", "size", "baseline_ns", "ideal_ns", "overhead_x"],
+    );
+    for ((gpus, size), (b, i, _)) in pair_up(sweep) {
+        t.push(vec![
+            gpus.to_string(),
+            fmt_bytes(size),
+            format!("{b:.0}"),
+            format!("{i:.0}"),
+            format!("{:.3}", b / i),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig4_overhead")?;
+    Ok(t)
+}
+
+/// Fig 5: mean RAT latency per inter-node request.
+pub fn fig5(opts: &FigOpts, sweep: &[SweepResult]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 5 — average reverse-translation latency per request",
+        &["gpus", "size", "mean_rat_ns", "p50_rat_ns", "max_rat_ns"],
+    );
+    for ((gpus, size), (_, _, b)) in pair_up(sweep) {
+        t.push(vec![
+            gpus.to_string(),
+            fmt_bytes(size),
+            format!("{:.1}", b.stats.mean_rat_ns()),
+            format!("{:.1}", to_ns(b.stats.rat_hist.quantile(0.5))),
+            format!("{:.1}", to_ns(b.stats.rat_hist.max())),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig5_rat_latency")?;
+    Ok(t)
+}
+
+/// The 16-GPU breakdown sweep shared by Figs 6–8 (baseline only).
+pub fn breakdown_sweep(opts: &FigOpts) -> Result<Vec<SweepResult>> {
+    let sizes = if opts.quick {
+        vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB]
+    } else {
+        breakdown_sizes()
+    };
+    let points: Vec<SweepPoint> = sizes
+        .iter()
+        .map(|&s| {
+            let mut config = paper_baseline(16, s);
+            opts.tune(&mut config);
+            SweepPoint { gpus: 16, size_bytes: s, variant: "baseline".into(), config }
+        })
+        .collect();
+    run_points(&points)
+}
+
+/// Fig 6: fraction of round-trip latency per request by component.
+pub fn fig6(opts: &FigOpts, sweep: &[SweepResult]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 6 — round-trip latency fraction per component (16 GPUs)",
+        &["size", "fabric", "net_fwd", "reverse_translation", "memory", "net_ack"],
+    );
+    for r in sweep {
+        let f = r.stats.breakdown.fractions();
+        t.push(vec![
+            fmt_bytes(r.point.size_bytes),
+            format!("{:.3}", f[0]),
+            format!("{:.3}", f[1]),
+            format!("{:.3}", f[2]),
+            format!("{:.3}", f[3]),
+            format!("{:.3}", f[4]),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig6_rtt_breakdown")?;
+    Ok(t)
+}
+
+/// Fig 7: hit/miss breakdown at the target translation modules.
+pub fn fig7(opts: &FigOpts, sweep: &[SweepResult]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 7 — translation-module hit/miss breakdown (16 GPUs, inter-node reqs)",
+        &["size", "l1_hit", "l1_mshr_hit", "l2_hit", "l2_hum", "pwc_hit", "full_walk"],
+    );
+    for r in sweep {
+        let f = r.stats.classes.fig7_fractions();
+        let mut row = vec![fmt_bytes(r.point.size_bytes)];
+        row.extend(f.iter().map(|x| format!("{x:.4}")));
+        t.push(row);
+    }
+    t.save_csv(&opts.out_dir, "fig7_hier_breakdown")?;
+    Ok(t)
+}
+
+/// Fig 8: decomposition of L1-MSHR hits (and primaries) by underlying
+/// outcome.
+pub fn fig8(opts: &FigOpts, sweep: &[SweepResult]) -> Result<Table> {
+    let mut t = Table::new(
+        "Fig 8 — L1-MSHR hit-under-miss decomposition (16 GPUs)",
+        &[
+            "size",
+            "l1_hit",
+            "mshr/l2_hit",
+            "mshr/l2_hum",
+            "mshr/pwc_hit",
+            "mshr/full_walk",
+            "prim/l2_hit",
+            "prim/l2_hum",
+            "prim/pwc_hit",
+            "prim/full_walk",
+        ],
+    );
+    for r in sweep {
+        let c = &r.stats.classes;
+        let denom = (c.total() - c.ideal - c.intra_node).max(1) as f64;
+        let frac = |v: u64| format!("{:.4}", v as f64 / denom);
+        t.push(vec![
+            fmt_bytes(r.point.size_bytes),
+            frac(c.l1_hit),
+            frac(c.mshr_l2_hit),
+            frac(c.mshr_l2_hum),
+            frac(c.mshr_pwc_hit.iter().sum()),
+            frac(c.mshr_full_walk),
+            frac(c.prim_l2_hit),
+            frac(c.prim_l2_hum),
+            frac(c.prim_pwc_hit.iter().sum()),
+            frac(c.prim_full_walk),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig8_mshr_decomposition")?;
+    Ok(t)
+}
+
+/// Figs 9/10: per-request RAT latency trace from source GPU 0 (16 GPUs)
+/// at 1 MB and 256 MB. Emits the full trace CSV + a summary table.
+pub fn fig9_10(opts: &FigOpts) -> Result<Table> {
+    let mut t = Table::new(
+        "Figs 9/10 — per-request RAT latency traces (16 GPUs, src GPU 0)",
+        &["size", "requests", "first_ns", "mean_ns", "p99_ceiling_ns", "spikes>500ns"],
+    );
+    let sizes: &[(u64, &str)] = if opts.quick {
+        &[(MIB, "fig9_trace_1MiB"), (64 * MIB, "fig10_trace_64MiB")]
+    } else {
+        &[(MIB, "fig9_trace_1MiB"), (256 * MIB, "fig10_trace_256MiB")]
+    };
+    for &(size, name) in sizes {
+        let mut cfg = paper_baseline(16, size);
+        opts.tune(&mut cfg);
+        cfg.workload.trace_source_gpu = Some(0);
+        let stats = crate::pod::run(&cfg)?;
+        let rows: Vec<Vec<String>> = stats
+            .trace
+            .iter()
+            .map(|&(seq, rat)| vec![seq.to_string(), format!("{:.1}", to_ns(rat))])
+            .collect();
+        write_csv(&opts.out_dir.join(format!("{name}.csv")), &["seq", "rat_ns"], &rows)?;
+        // Terminal preview of the trace shape (full data in the CSV).
+        let pts: Vec<(f64, f64)> = stats
+            .trace
+            .iter()
+            .step_by((stats.trace.len() / 2000).max(1))
+            .map(|&(seq, rat)| (seq as f64, to_ns(rat)))
+            .collect();
+        print!("{}", crate::stats::plot::scatter(name, &pts, 72, 12));
+        let n = stats.trace.len().max(1);
+        let mean =
+            stats.trace.iter().map(|&(_, r)| to_ns(r)).sum::<f64>() / n as f64;
+        let spikes =
+            stats.trace.iter().filter(|&&(_, r)| to_ns(r) > 500.0).count();
+        t.push(vec![
+            fmt_bytes(size),
+            stats.trace.len().to_string(),
+            format!("{:.1}", stats.trace.first().map(|&(_, r)| to_ns(r)).unwrap_or(0.0)),
+            format!("{mean:.1}"),
+            format!("{:.1}", to_ns(stats.rat_hist.quantile(0.99))),
+            spikes.to_string(),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig9_10_trace_summary")?;
+    Ok(t)
+}
+
+/// Fig 11: L2-TLB size sweep at 32 GPUs, normalized to ideal.
+pub fn fig11(opts: &FigOpts) -> Result<Table> {
+    let l2_sizes: &[u32] = &[16, 32, 64, 512, 32768];
+    let sizes = if opts.quick { vec![MIB, 16 * MIB] } else { vec![MIB, 16 * MIB, 256 * MIB] };
+    let gpus = 32;
+    let mut points = Vec::new();
+    for &size in &sizes {
+        for &l2 in l2_sizes {
+            let mut config = paper_baseline(gpus, size);
+            opts.tune(&mut config);
+            config.trans.l2.entries = l2;
+            config.name = format!("l2-{l2}-{gpus}gpu-{}", fmt_bytes(size));
+            points.push(SweepPoint {
+                gpus,
+                size_bytes: size,
+                variant: format!("l2={l2}"),
+                config,
+            });
+        }
+        let mut ideal = paper_ideal(gpus, size);
+        opts.tune(&mut ideal);
+        points.push(SweepPoint { gpus, size_bytes: size, variant: "ideal".into(), config: ideal });
+    }
+    let results = run_points(&points)?;
+    let mut ideal_ns: BTreeMap<u64, f64> = BTreeMap::new();
+    for r in &results {
+        if r.point.variant == "ideal" {
+            ideal_ns.insert(r.point.size_bytes, to_ns(r.stats.completion));
+        }
+    }
+    let mut t = Table::new(
+        "Fig 11 — L2-TLB size sweep (32 GPUs, overhead vs ideal)",
+        &["size", "l2_entries", "overhead_x", "mean_rat_ns", "touched_pages"],
+    );
+    for r in &results {
+        if r.point.variant == "ideal" {
+            continue;
+        }
+        let i = ideal_ns[&r.point.size_bytes];
+        t.push(vec![
+            fmt_bytes(r.point.size_bytes),
+            r.point.variant.trim_start_matches("l2=").to_string(),
+            format!("{:.3}", to_ns(r.stats.completion) / i),
+            format!("{:.1}", r.stats.mean_rat_ns()),
+            r.stats.max_touched_pages.to_string(),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig11_l2_sweep")?;
+    Ok(t)
+}
+
+/// §6 ablation: pre-translation (fused kernel) and software prefetching
+/// vs baseline/ideal on latency-sensitive sizes.
+pub fn ablation(opts: &FigOpts) -> Result<Table> {
+    let gpus = 16;
+    let sizes = if opts.quick { vec![MIB, 16 * MIB] } else { vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB] };
+    let mut points = Vec::new();
+    for &size in &sizes {
+        for variant in ["baseline", "pretranslate", "prefetch", "pretranslate+prefetch"] {
+            let mut config = paper_baseline(gpus, size);
+            opts.tune(&mut config);
+            if variant.contains("pretranslate") {
+                config.trans.pretranslate.enabled = true;
+                config.trans.pretranslate.pages_per_pair = 0;
+            }
+            if variant.contains("prefetch") {
+                config.trans.prefetch.enabled = true;
+                config.trans.prefetch.depth = 2;
+            }
+            config.name = format!("{variant}-{gpus}gpu-{}", fmt_bytes(size));
+            points.push(SweepPoint {
+                gpus,
+                size_bytes: size,
+                variant: variant.into(),
+                config,
+            });
+        }
+        let mut ideal = paper_ideal(gpus, size);
+        opts.tune(&mut ideal);
+        points.push(SweepPoint { gpus, size_bytes: size, variant: "ideal".into(), config: ideal });
+    }
+    let results = run_points(&points)?;
+    let mut ideal_ns: BTreeMap<u64, f64> = BTreeMap::new();
+    for r in &results {
+        if r.point.variant == "ideal" {
+            ideal_ns.insert(r.point.size_bytes, to_ns(r.stats.completion));
+        }
+    }
+    let mut t = Table::new(
+        "§6 ablation — pre-translation & software TLB prefetch (16 GPUs)",
+        &["size", "variant", "overhead_x", "mean_rat_ns", "data_walks", "prefetch_walks"],
+    );
+    for r in &results {
+        if r.point.variant == "ideal" {
+            continue;
+        }
+        let i = ideal_ns[&r.point.size_bytes];
+        let c = &r.stats.classes;
+        let data_walks = c.prim_full_walk + c.prim_pwc_hit.iter().sum::<u64>();
+        t.push(vec![
+            fmt_bytes(r.point.size_bytes),
+            r.point.variant.clone(),
+            format!("{:.3}", to_ns(r.stats.completion) / i),
+            format!("{:.1}", r.stats.mean_rat_ns()),
+            data_walks.to_string(),
+            r.stats.prefetch_walks.to_string(),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "ablation_optimizations")?;
+    Ok(t)
+}
+
+/// Design-choice ablation (beyond the paper's figures): how sensitive the
+/// headline overhead is to the structural knobs DESIGN.md calls out —
+/// page size, walker parallelism, MSHR depth, and L1 Link-TLB reach.
+pub fn design_ablation(opts: &FigOpts) -> Result<Table> {
+    let gpus = 16;
+    let size = if opts.quick { 4 * MIB } else { 16 * MIB };
+    let knobs: Vec<(&str, Box<dyn Fn(&mut PodConfig)>)> = vec![
+        ("baseline", Box::new(|_c: &mut PodConfig| {})),
+        ("page=64KiB", Box::new(|c| c.trans.page_bytes = 64 * 1024)),
+        ("page=512KiB", Box::new(|c| c.trans.page_bytes = 512 * 1024)),
+        ("walkers=1", Box::new(|c| c.trans.parallel_walkers = 1)),
+        ("walkers=10", Box::new(|c| c.trans.parallel_walkers = 10)),
+        ("mshrs=16", Box::new(|c| c.trans.l1_mshrs = 16)),
+        ("l1=8", Box::new(|c| c.trans.l1.entries = 8)),
+        // Minimal PWCs (2 entries = 1 set at 2-way): near-no walk caching.
+        ("tiny-pwc", Box::new(|c| c.trans.pwc_entries = vec![2, 2, 2, 2])),
+    ];
+    let mut points = Vec::new();
+    for (name, f) in &knobs {
+        let mut config = paper_baseline(gpus, size);
+        opts.tune(&mut config);
+        f(&mut config);
+        config.name = format!("design-{name}");
+        points.push(SweepPoint { gpus, size_bytes: size, variant: name.to_string(), config });
+    }
+    let mut ideal = paper_ideal(gpus, size);
+    opts.tune(&mut ideal);
+    points.push(SweepPoint { gpus, size_bytes: size, variant: "ideal".into(), config: ideal });
+    let results = run_points(&points)?;
+    let ideal_ns = results
+        .iter()
+        .find(|r| r.point.variant == "ideal")
+        .map(|r| to_ns(r.stats.completion))
+        .unwrap();
+    let mut t = Table::new(
+        &format!("Design ablation — structural knobs (16 GPUs, {})", fmt_bytes(size)),
+        &["knob", "overhead_x", "mean_rat_ns", "walks", "walks_queued", "mshr_stalls"],
+    );
+    for r in &results {
+        if r.point.variant == "ideal" {
+            continue;
+        }
+        t.push(vec![
+            r.point.variant.clone(),
+            format!("{:.3}", to_ns(r.stats.completion) / ideal_ns),
+            format!("{:.1}", r.stats.mean_rat_ns()),
+            r.stats.walks_started.to_string(),
+            r.stats.walks_queued.to_string(),
+            r.stats.mshr_full_stalls.to_string(),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "design_ablation")?;
+    Ok(t)
+}
+
+/// Warm-up study (extension of §4's "performance is most impacted during
+/// system warm-up"): run the same All-to-All twice back-to-back (second
+/// iteration chained after the first, TLBs stay warm) and compare the
+/// cold first iteration against the warm steady-state iteration and the
+/// ideal bound.
+pub fn warmup(opts: &FigOpts) -> Result<Table> {
+    let gpus = 16;
+    let sizes = if opts.quick { vec![MIB, 16 * MIB] } else { vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB] };
+    let mut t = Table::new(
+        "Warm-up — cold vs steady-state iteration (16 GPUs, AllToAll x2)",
+        &["size", "cold_iter_ns", "warm_iter_ns", "ideal_iter_ns", "cold_x", "warm_x"],
+    );
+    for &size in &sizes {
+        let mut cfg = paper_baseline(gpus, size);
+        opts.tune(&mut cfg);
+        let sched = crate::collective::generators::alltoall_allpairs(gpus, size)?;
+        let once = crate::pod::run_schedule(&cfg, sched.repeat(1))?;
+        let twice = crate::pod::run_schedule(&cfg, sched.repeat(2))?;
+        let mut ideal = paper_ideal(gpus, size);
+        opts.tune(&mut ideal);
+        let ideal_ns = to_ns(crate::pod::run(&ideal)?.completion);
+        let cold = to_ns(once.completion);
+        let warm = to_ns(twice.completion) - cold;
+        t.push(vec![
+            fmt_bytes(size),
+            format!("{cold:.0}"),
+            format!("{warm:.0}"),
+            format!("{ideal_ns:.0}"),
+            format!("{:.3}", cold / ideal_ns),
+            format!("{:.3}", warm / ideal_ns),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "warmup_iterations")?;
+    Ok(t)
+}
+
+/// Table 1: echo the baseline configuration (sanity / documentation).
+pub fn table1(opts: &FigOpts) -> Result<Table> {
+    let c = paper_baseline(16, MIB);
+    let mut t = Table::new("Table 1 — simulation setup (baseline preset)", &["parameter", "value"]);
+    let rows: Vec<(&str, String)> = vec![
+        ("gpus_per_node", c.gpus_per_node.to_string()),
+        ("local_fabric_ns", c.gpu.local_fabric_ns.to_string()),
+        ("compute_units", c.gpu.compute_units.to_string()),
+        ("cu_clock_mhz", c.gpu.cu_clock_mhz.to_string()),
+        ("hbm_ns", c.gpu.hbm_ns.to_string()),
+        ("page_bytes", fmt_bytes(c.trans.page_bytes)),
+        ("l1_tlb", format!("{} entries, assoc {}, {} ns", c.trans.l1.entries, c.trans.l1.assoc, c.trans.l1.hit_latency_ns)),
+        ("l1_mshrs", c.trans.l1_mshrs.to_string()),
+        ("l2_tlb", format!("{} entries, {}-way, {} ns, LRU", c.trans.l2.entries, c.trans.l2.assoc, c.trans.l2.hit_latency_ns)),
+        ("pwc", format!("{:?} entries, {}-way, {} ns", c.trans.pwc_entries, c.trans.pwc_assoc, c.trans.pwc_hit_latency_ns)),
+        ("page_table_levels", c.trans.levels.to_string()),
+        ("parallel_walkers", c.trans.parallel_walkers.to_string()),
+        ("stations_per_gpu", c.link.stations_per_gpu.to_string()),
+        ("lanes_per_station", c.link.lanes_per_station.to_string()),
+        ("gbps_per_lane", c.link.gbps_per_lane.to_string()),
+        ("station_gbps", c.link.station_gbps().to_string()),
+        ("link_latency_ns", c.link.link_latency_ns.to_string()),
+        ("switch_latency_ns", c.link.switch_latency_ns.to_string()),
+    ];
+    for (k, v) in rows {
+        t.push(vec![k.to_string(), v]);
+    }
+    t.save_csv(&opts.out_dir, "table1_config")?;
+    Ok(t)
+}
+
+/// Which figures exist (CLI `--only` values).
+pub const FIGURES: &[&str] = &[
+    "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation",
+    "design", "warmup",
+];
+
+/// Run the selected figures (None = all), printing tables and writing CSVs.
+pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
+    let want = |name: &str| only.map(|o| o.iter().any(|s| s == name)).unwrap_or(true);
+    std::fs::create_dir_all(&opts.out_dir)?;
+    if want("table1") {
+        table1(opts)?.print();
+    }
+    if want("fig4") || want("fig5") {
+        let sweep = main_sweep(opts)?;
+        if want("fig4") {
+            fig4(opts, &sweep)?.print();
+        }
+        if want("fig5") {
+            fig5(opts, &sweep)?.print();
+        }
+    }
+    if want("fig6") || want("fig7") || want("fig8") {
+        let sweep = breakdown_sweep(opts)?;
+        if want("fig6") {
+            fig6(opts, &sweep)?.print();
+        }
+        if want("fig7") {
+            fig7(opts, &sweep)?.print();
+        }
+        if want("fig8") {
+            fig8(opts, &sweep)?.print();
+        }
+    }
+    if want("fig9") || want("fig10") {
+        fig9_10(opts)?.print();
+    }
+    if want("fig11") {
+        fig11(opts)?.print();
+    }
+    if want("ablation") {
+        ablation(opts)?.print();
+    }
+    if want("design") {
+        design_ablation(opts)?.print();
+    }
+    if want("warmup") {
+        warmup(opts)?.print();
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn quick_opts() -> FigOpts {
+        FigOpts {
+            out_dir: std::env::temp_dir().join("ratsim-fig-test"),
+            quick: true,
+        }
+    }
+
+    /// Tiny opts: shrink further for unit tests (minutes → seconds).
+    fn tiny_sweep() -> Vec<SweepResult> {
+        let mut grid = SweepGrid::baseline_vs_ideal(&[8], &[MIB, 4 * MIB]);
+        for p in &mut grid.points {
+            p.config.workload.request_sizing =
+                crate::config::RequestSizing::Auto { target_total_requests: 3_000 };
+        }
+        run_grid(&grid).unwrap()
+    }
+
+    #[test]
+    fn fig4_overhead_decreases_with_size() {
+        let opts = quick_opts();
+        let sweep = tiny_sweep();
+        let t = fig4(&opts, &sweep).unwrap();
+        assert_eq!(t.rows.len(), 2);
+        let ov: Vec<f64> = t.rows.iter().map(|r| r[4].parse().unwrap()).collect();
+        assert!(ov[0] > ov[1], "overhead must shrink with size: {ov:?}");
+        assert!(ov[0] > 1.05);
+    }
+
+    #[test]
+    fn fig5_latency_decreases_with_size() {
+        let opts = quick_opts();
+        let sweep = tiny_sweep();
+        let t = fig5(&opts, &sweep).unwrap();
+        let lat: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
+        assert!(lat[0] > lat[1], "mean RAT latency must shrink with size: {lat:?}");
+    }
+
+    #[test]
+    fn table1_lists_paper_parameters() {
+        let t = table1(&quick_opts()).unwrap();
+        let text = t.render();
+        assert!(text.contains("512 entries, 2-way, 100 ns, LRU"));
+        assert!(text.contains("[16, 32, 64, 128]"));
+    }
+}

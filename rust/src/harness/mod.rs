@@ -1,0 +1,10 @@
+//! Figure/table regeneration harness: one entry point per figure of the
+//! paper's evaluation (Figs 4–11, Table 1) plus the §6 optimization
+//! ablation. Every function prints an aligned text table and writes a CSV
+//! under `results/`.
+
+pub mod figures;
+pub mod table;
+
+pub use figures::*;
+pub use table::Table;

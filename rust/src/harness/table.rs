@@ -1,0 +1,94 @@
+//! Aligned text tables + CSV emission for the figure harness.
+
+use crate::stats::run::write_csv;
+use anyhow::Result;
+use std::path::Path;
+
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub title: String,
+    pub header: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+}
+
+impl Table {
+    pub fn new(title: &str, header: &[&str]) -> Self {
+        Self {
+            title: title.to_string(),
+            header: header.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+        }
+    }
+
+    pub fn push(&mut self, row: Vec<String>) {
+        debug_assert_eq!(row.len(), self.header.len());
+        self.rows.push(row);
+    }
+
+    /// Render with per-column alignment.
+    pub fn render(&self) -> String {
+        let cols = self.header.len();
+        let mut widths: Vec<usize> = self.header.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for c in 0..cols {
+                widths[c] = widths[c].max(row[c].len());
+            }
+        }
+        let mut out = format!("\n== {} ==\n", self.title);
+        let fmt_row = |cells: &[String], widths: &[usize]| {
+            cells
+                .iter()
+                .enumerate()
+                .map(|(i, c)| format!("{:>w$}", c, w = widths[i]))
+                .collect::<Vec<_>>()
+                .join("  ")
+        };
+        out.push_str(&fmt_row(&self.header, &widths));
+        out.push('\n');
+        out.push_str(&"-".repeat(widths.iter().sum::<usize>() + 2 * (cols - 1)));
+        out.push('\n');
+        for row in &self.rows {
+            out.push_str(&fmt_row(row, &widths));
+            out.push('\n');
+        }
+        out
+    }
+
+    pub fn print(&self) {
+        print!("{}", self.render());
+    }
+
+    /// Write `results/<name>.csv`.
+    pub fn save_csv(&self, dir: &Path, name: &str) -> Result<std::path::PathBuf> {
+        let path = dir.join(format!("{name}.csv"));
+        let header: Vec<&str> = self.header.iter().map(String::as_str).collect();
+        write_csv(&path, &header, &self.rows)?;
+        Ok(path)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn renders_aligned() {
+        let mut t = Table::new("demo", &["a", "bbbb"]);
+        t.push(vec!["1".into(), "2".into()]);
+        t.push(vec!["100".into(), "x".into()]);
+        let r = t.render();
+        assert!(r.contains("== demo =="));
+        assert!(r.contains("  a  bbbb"));
+        assert!(r.contains("100     x"));
+    }
+
+    #[test]
+    fn saves_csv() {
+        let dir = std::env::temp_dir().join("ratsim-table-test");
+        let mut t = Table::new("d", &["x", "y"]);
+        t.push(vec!["1".into(), "2".into()]);
+        let p = t.save_csv(&dir, "demo").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "x,y\n1,2\n");
+        std::fs::remove_file(p).ok();
+    }
+}

@@ -1,0 +1,35 @@
+//! # ratsim — Reverse Address Translation in Multi-GPU Scale-Up Pods
+//!
+//! A discrete-event simulator of UALink-class scale-up pods with detailed
+//! destination-side (reverse) address-translation models, reproducing
+//! *"Analyzing Reverse Address Translation Overheads in Multi-GPU Scale-Up
+//! Pods"* (CS.DC 2026). See DESIGN.md for the system inventory and
+//! EXPERIMENTS.md for paper-vs-measured results.
+//!
+//! Layers:
+//! * [`sim`] — the discrete-event kernel (Omnet++ substitute);
+//! * [`net`] — UALink stations / links / single-level Clos switches;
+//! * [`trans`] + [`mem`] — the Link-MMU reverse-translation hierarchy;
+//! * [`collective`] — MSCCLang-style schedules (all-pairs All-to-All, …);
+//! * [`pod`] — the full pod simulation tying the above together;
+//! * [`coordinator`] — parallel sweep driver (leader/worker);
+//! * [`harness`] — regenerates every figure in the paper's evaluation;
+//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
+//!   artifacts (the MoE workload of the end-to-end example).
+
+pub mod collective;
+pub mod config;
+pub mod coordinator;
+pub mod gpu;
+pub mod harness;
+pub mod mem;
+pub mod net;
+pub mod pod;
+pub mod runtime;
+pub mod sim;
+pub mod stats;
+pub mod trans;
+pub mod util;
+
+/// Crate version string (also printed by the CLI).
+pub const VERSION: &str = env!("CARGO_PKG_VERSION");

@@ -1,0 +1,264 @@
+//! `ratsim` CLI — the pod-simulation launcher.
+//!
+//! Subcommands:
+//! * `run`      — simulate one collective and print the stats report;
+//! * `sweep`    — baseline-vs-ideal grid over `--gpus`/`--sizes`;
+//! * `figures`  — regenerate the paper's figures (CSV + tables);
+//! * `schedule` — export a collective schedule as MSCCLang-style JSON;
+//! * `config`   — dump or validate a config JSON.
+
+use anyhow::Result;
+use ratsim::collective;
+use ratsim::config::presets::{paper_baseline, paper_ideal};
+use ratsim::config::{CollectiveKind, PodConfig, RequestSizing, SweepGrid};
+use ratsim::coordinator;
+use ratsim::harness::{run_figures, FigOpts, FIGURES};
+use ratsim::util::cli::{parse, usage, ArgSpec, Args};
+use ratsim::util::units::{fmt_bytes, parse_bytes, MIB};
+
+fn main() {
+    ratsim::util::logger::init();
+    let argv: Vec<String> = std::env::args().skip(1).collect();
+    if let Err(e) = dispatch(&argv) {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn dispatch(argv: &[String]) -> Result<()> {
+    let Some(cmd) = argv.first() else {
+        print_help();
+        return Ok(());
+    };
+    let rest = &argv[1..];
+    match cmd.as_str() {
+        "run" => cmd_run(rest),
+        "sweep" => cmd_sweep(rest),
+        "figures" => cmd_figures(rest),
+        "schedule" => cmd_schedule(rest),
+        "config" => cmd_config(rest),
+        "--help" | "-h" | "help" => {
+            print_help();
+            Ok(())
+        }
+        "--version" => {
+            println!("ratsim {}", ratsim::VERSION);
+            Ok(())
+        }
+        other => anyhow::bail!("unknown subcommand `{other}` (see --help)"),
+    }
+}
+
+fn print_help() {
+    println!(
+        "ratsim {} — Reverse Address Translation simulator for UALink scale-up pods\n\n\
+         subcommands:\n\
+         \x20 run       simulate one collective (--gpus, --size, --collective, --ideal, ...)\n\
+         \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB)\n\
+         \x20 figures   regenerate paper figures (--only fig4,fig11 --quick --out results)\n\
+         \x20 schedule  export a schedule JSON (--collective a2a --gpus 8 --size 1MiB --out s.json)\n\
+         \x20 config    dump/validate configs (--dump base.json | --check cfg.json)\n",
+        ratsim::VERSION
+    );
+}
+
+fn common_run_spec() -> Vec<ArgSpec> {
+    vec![
+        ArgSpec { name: "gpus", help: "number of GPUs in the pod", is_flag: false, default: Some("16") },
+        ArgSpec { name: "size", help: "collective size (e.g. 1MiB, 4GB)", is_flag: false, default: Some("1MiB") },
+        ArgSpec { name: "collective", help: "alltoall | allgather | allreduce-ring", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
+        ArgSpec { name: "config", help: "load full config from JSON (overrides other flags)", is_flag: false, default: None },
+        ArgSpec { name: "requests", help: "auto request-sizing target (total requests)", is_flag: false, default: None },
+        ArgSpec { name: "request-bytes", help: "fixed request size in bytes", is_flag: false, default: None },
+        ArgSpec { name: "l2-entries", help: "override L2 Link-TLB entries", is_flag: false, default: None },
+        ArgSpec { name: "pretranslate", help: "enable §6.1 fused pre-translation warmup", is_flag: true, default: None },
+        ArgSpec { name: "prefetch", help: "enable §6.2 software TLB prefetching", is_flag: true, default: None },
+        ArgSpec { name: "trace-gpu", help: "record per-request RAT trace for this source GPU", is_flag: false, default: None },
+        ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
+        ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
+    ]
+}
+
+fn build_config(a: &Args) -> Result<PodConfig> {
+    if let Some(path) = a.get("config") {
+        let mut cfg = PodConfig::load(std::path::Path::new(path))?;
+        apply_overrides(a, &mut cfg)?;
+        return Ok(cfg);
+    }
+    let gpus = a.get_u64("gpus")?.unwrap_or(16) as u32;
+    let size = a.get_bytes("size")?.unwrap_or(MIB);
+    let mut cfg =
+        if a.flag("ideal") { paper_ideal(gpus, size) } else { paper_baseline(gpus, size) };
+    cfg.workload.collective = CollectiveKind::parse(a.get("collective").unwrap_or("alltoall"))?;
+    apply_overrides(a, &mut cfg)?;
+    Ok(cfg)
+}
+
+fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
+    if let Some(n) = a.get_u64("requests")? {
+        cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
+    }
+    if let Some(b) = a.get_u64("request-bytes")? {
+        cfg.workload.request_sizing = RequestSizing::Fixed(b);
+    }
+    if let Some(e) = a.get_u64("l2-entries")? {
+        cfg.trans.l2.entries = e as u32;
+    }
+    if a.flag("pretranslate") {
+        cfg.trans.pretranslate.enabled = true;
+    }
+    if a.flag("prefetch") {
+        cfg.trans.prefetch.enabled = true;
+    }
+    if let Some(g) = a.get_u64("trace-gpu")? {
+        cfg.workload.trace_source_gpu = Some(g as u32);
+    }
+    if let Some(s) = a.get_u64("seed")? {
+        cfg.seed = s;
+    }
+    Ok(())
+}
+
+fn cmd_run(argv: &[String]) -> Result<()> {
+    let spec = common_run_spec();
+    let a = parse(argv, &spec)?;
+    let cfg = build_config(&a)?;
+    log::info!("running {} ({} request bytes)", cfg.name, cfg.request_bytes());
+    let stats = coordinator::driver::run_single(&cfg)?;
+    if a.flag("json") {
+        println!("{}", stats.to_json().to_string_pretty());
+    } else {
+        println!("{}", stats.summary());
+        let f = stats.breakdown.fractions();
+        println!(
+            "  rtt fractions: fabric {:.1}% | net-fwd {:.1}% | translation {:.1}% | memory {:.1}% | net-ack {:.1}%",
+            100.0 * f[0], 100.0 * f[1], 100.0 * f[2], 100.0 * f[3], 100.0 * f[4]
+        );
+        let c = stats.classes.fig7_fractions();
+        println!(
+            "  translation outcomes: l1-hit {:.1}% | mshr-hit {:.1}% | l2-hit {:.1}% | l2-hum {:.1}% | pwc {:.1}% | walk {:.1}%",
+            100.0 * c[0], 100.0 * c[1], 100.0 * c[2], 100.0 * c[3], 100.0 * c[4], 100.0 * c[5]
+        );
+    }
+    Ok(())
+}
+
+fn cmd_sweep(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec { name: "gpus", help: "comma-separated pod sizes", is_flag: false, default: Some("8,16,32,64") },
+        ArgSpec { name: "sizes", help: "comma-separated collective sizes", is_flag: false, default: Some("1MiB,4MiB,16MiB,64MiB") },
+        ArgSpec { name: "requests", help: "auto request-sizing target", is_flag: false, default: None },
+        ArgSpec { name: "csv", help: "write results CSV here", is_flag: false, default: None },
+        ArgSpec { name: "help", help: "show help", is_flag: true, default: None },
+    ];
+    let a = parse(argv, &spec)?;
+    if a.flag("help") {
+        println!("{}", usage("sweep", "baseline-vs-ideal grid", &spec));
+        return Ok(());
+    }
+    let gpus: Vec<u32> = a
+        .get_list("gpus")
+        .unwrap_or_default()
+        .iter()
+        .map(|s| s.parse::<u32>().map_err(|_| anyhow::anyhow!("bad gpu count `{s}`")))
+        .collect::<Result<_>>()?;
+    let sizes: Vec<u64> = a
+        .get_list("sizes")
+        .unwrap_or_default()
+        .iter()
+        .map(|s| parse_bytes(s).ok_or_else(|| anyhow::anyhow!("bad size `{s}`")))
+        .collect::<Result<_>>()?;
+    let mut grid = SweepGrid::baseline_vs_ideal(&gpus, &sizes);
+    if let Some(n) = a.get_u64("requests")? {
+        for p in &mut grid.points {
+            p.config.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
+        }
+    }
+    let results = coordinator::run_grid(&grid)?;
+    let mut table = ratsim::harness::Table::new(
+        "sweep — baseline vs ideal",
+        &["gpus", "size", "variant", "completion_ns", "mean_rat_ns", "rat_frac"],
+    );
+    for r in &results {
+        table.push(vec![
+            r.point.gpus.to_string(),
+            fmt_bytes(r.point.size_bytes),
+            r.point.variant.clone(),
+            format!("{:.0}", ratsim::util::units::to_ns(r.stats.completion)),
+            format!("{:.1}", r.stats.mean_rat_ns()),
+            format!("{:.3}", r.stats.rat_fraction()),
+        ]);
+    }
+    table.print();
+    if let Some(path) = a.get("csv") {
+        let header: Vec<&str> = table.header.iter().map(String::as_str).collect();
+        ratsim::stats::run::write_csv(std::path::Path::new(path), &header, &table.rows)?;
+        log::info!("wrote {path}");
+    }
+    Ok(())
+}
+
+fn cmd_figures(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec { name: "only", help: "comma list of figures (table1,fig4..fig11,ablation)", is_flag: false, default: None },
+        ArgSpec { name: "quick", help: "trimmed axes + smaller request budgets", is_flag: true, default: None },
+        ArgSpec { name: "out", help: "output directory for CSVs", is_flag: false, default: Some("results") },
+    ];
+    let a = parse(argv, &spec)?;
+    let only = a.get_list("only");
+    if let Some(only) = &only {
+        for f in only {
+            anyhow::ensure!(FIGURES.contains(&f.as_str()), "unknown figure `{f}` (have {FIGURES:?})");
+        }
+    }
+    let opts = FigOpts {
+        out_dir: a.get("out").unwrap_or("results").into(),
+        quick: a.flag("quick"),
+    };
+    run_figures(&opts, only.as_deref())
+}
+
+fn cmd_schedule(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec { name: "collective", help: "alltoall | allgather | allreduce-ring", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "gpus", help: "pod size", is_flag: false, default: Some("8") },
+        ArgSpec { name: "size", help: "collective size", is_flag: false, default: Some("1MiB") },
+        ArgSpec { name: "out", help: "output JSON path", is_flag: false, default: Some("schedule.json") },
+    ];
+    let a = parse(argv, &spec)?;
+    let kind = CollectiveKind::parse(a.get("collective").unwrap())?;
+    let gpus = a.get_u64("gpus")?.unwrap() as u32;
+    let size = a.get_bytes("size")?.unwrap();
+    let sched = collective::generators::build(kind, gpus, size)?;
+    let out = a.get("out").unwrap();
+    collective::mscclang::save(&sched, std::path::Path::new(out))?;
+    println!("wrote {} ({} ops, {} total bytes)", out, sched.ops.len(), sched.total_bytes());
+    Ok(())
+}
+
+fn cmd_config(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec { name: "dump", help: "write the Table-1 baseline preset to this path", is_flag: false, default: None },
+        ArgSpec { name: "check", help: "validate a config JSON", is_flag: false, default: None },
+        ArgSpec { name: "gpus", help: "pod size for --dump", is_flag: false, default: Some("16") },
+        ArgSpec { name: "size", help: "collective size for --dump", is_flag: false, default: Some("1MiB") },
+    ];
+    let a = parse(argv, &spec)?;
+    if let Some(path) = a.get("dump") {
+        let cfg = paper_baseline(
+            a.get_u64("gpus")?.unwrap() as u32,
+            a.get_bytes("size")?.unwrap(),
+        );
+        cfg.save(std::path::Path::new(path))?;
+        println!("wrote {path}");
+        return Ok(());
+    }
+    if let Some(path) = a.get("check") {
+        let cfg = PodConfig::load(std::path::Path::new(path))?;
+        cfg.validate()?;
+        println!("{path}: OK ({} GPUs, {})", cfg.gpus, fmt_bytes(cfg.workload.size_bytes));
+        return Ok(());
+    }
+    anyhow::bail!("config: pass --dump <path> or --check <path>");
+}

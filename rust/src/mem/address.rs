@@ -1,0 +1,105 @@
+//! Network Physical Addresses (NPA) and System Physical Addresses (SPA).
+//!
+//! §2.3: a source GPU's MMU emits an **NPA** for inter-node accesses; the
+//! target's Link MMU reverse-translates NPA → SPA. We encode an NPA as
+//! `(target_gpu << GPU_SHIFT) | byte_offset` — the pod-global address of a
+//! byte in some GPU's exported memory window. Translation operates on
+//! *pages* of the NPA offset.
+
+/// 48-bit per-GPU offset space, GPU id in the top bits — mirrors how
+/// NVLink-network / UALink carve a fabric address space per endpoint.
+pub const GPU_SHIFT: u32 = 48;
+pub const OFFSET_MASK: u64 = (1u64 << GPU_SHIFT) - 1;
+
+/// A network physical address.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct Npa(pub u64);
+
+/// A system physical address at the target node.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Spa(pub u64);
+
+/// A translation unit: the page index of an NPA *offset* within its target
+/// GPU (i.e. the Link-MMU key). Page size comes from the config.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub struct PageId(pub u64);
+
+impl Npa {
+    #[inline]
+    pub fn new(target_gpu: u32, offset: u64) -> Npa {
+        debug_assert!(offset <= OFFSET_MASK, "offset {offset:#x} exceeds NPA window");
+        Npa(((target_gpu as u64) << GPU_SHIFT) | offset)
+    }
+
+    #[inline]
+    pub fn target_gpu(&self) -> u32 {
+        (self.0 >> GPU_SHIFT) as u32
+    }
+
+    #[inline]
+    pub fn offset(&self) -> u64 {
+        self.0 & OFFSET_MASK
+    }
+
+    /// The translation page this NPA falls in for `page_bytes` pages.
+    #[inline]
+    pub fn page(&self, page_bytes: u64) -> PageId {
+        debug_assert!(page_bytes.is_power_of_two());
+        PageId(self.offset() >> page_bytes.trailing_zeros())
+    }
+}
+
+impl PageId {
+    /// Radix-tree index of this page at `level` (1-based from the leaf's
+    /// parent; 9 bits per level like x86-64). Pages sharing a prefix share
+    /// upper-level page-table entries — the structure PWCs exploit.
+    #[inline]
+    pub fn level_prefix(&self, level: u32) -> u64 {
+        self.0 >> (9 * level)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PairOf, RangeU64};
+    use crate::util::units::MIB;
+
+    #[test]
+    fn npa_encodes_gpu_and_offset() {
+        let a = Npa::new(13, 0xDEAD_BEEF);
+        assert_eq!(a.target_gpu(), 13);
+        assert_eq!(a.offset(), 0xDEAD_BEEF);
+    }
+
+    #[test]
+    fn page_extraction_2mib() {
+        let p = 2 * MIB;
+        assert_eq!(Npa::new(0, 0).page(p), PageId(0));
+        assert_eq!(Npa::new(0, 2 * MIB - 1).page(p), PageId(0));
+        assert_eq!(Npa::new(0, 2 * MIB).page(p), PageId(1));
+        assert_eq!(Npa::new(3, 7 * MIB).page(p), PageId(3));
+    }
+
+    #[test]
+    fn prop_npa_roundtrip() {
+        let strat = PairOf(RangeU64 { lo: 0, hi: 1023 }, RangeU64 { lo: 0, hi: OFFSET_MASK });
+        check("npa-roundtrip", &strat, 300, |&(gpu, off)| {
+            let a = Npa::new(gpu as u32, off);
+            a.target_gpu() == gpu as u32 && a.offset() == off
+        });
+    }
+
+    #[test]
+    fn level_prefixes_shared_by_neighbours() {
+        // Adjacent pages share all non-zero level prefixes.
+        let a = PageId(512 * 7 + 3);
+        let b = PageId(512 * 7 + 4);
+        assert_eq!(a.level_prefix(1), b.level_prefix(1));
+        assert_eq!(a.level_prefix(2), b.level_prefix(2));
+        // Pages 512 apart differ at level 1 but share level 2.
+        let c = PageId(512 * 8 + 3);
+        assert_ne!(a.level_prefix(1), c.level_prefix(1));
+        assert_eq!(a.level_prefix(2), c.level_prefix(2));
+    }
+}

@@ -1,0 +1,8 @@
+//! Memory substrate: NPA/SPA address spaces and the per-GPU 5-level page
+//! table that reverse translation walks.
+
+pub mod address;
+pub mod page_table;
+
+pub use address::{Npa, PageId, Spa};
+pub use page_table::PageTable;

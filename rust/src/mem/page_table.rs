@@ -1,0 +1,129 @@
+//! Per-GPU page table for reverse translation.
+//!
+//! §2.4: the Link MMU walks a 5-level radix page table to resolve an NPA
+//! page to an SPA frame. We materialize the mapping lazily and
+//! deterministically: frame = a seeded hash of (gpu, page), which gives a
+//! realistic scattered SPA layout without storing terabytes of entries.
+//! The *structure* (which levels two pages share) is what timing cares
+//! about and comes from `PageId::level_prefix`.
+
+use super::address::{PageId, Spa};
+use crate::util::rng::SplitMix64;
+use std::collections::HashMap;
+
+#[derive(Debug)]
+pub struct PageTable {
+    gpu: u32,
+    seed: u64,
+    levels: u32,
+    page_bytes: u64,
+    /// Lazily materialized translations (also doubles as "has this page
+    /// ever been walked" for test introspection).
+    entries: HashMap<PageId, Spa>,
+}
+
+impl PageTable {
+    pub fn new(gpu: u32, seed: u64, levels: u32, page_bytes: u64) -> Self {
+        assert!(levels >= 2, "page table needs at least 2 levels");
+        assert!(page_bytes.is_power_of_two());
+        Self { gpu, seed, levels, page_bytes, entries: HashMap::new() }
+    }
+
+    pub fn levels(&self) -> u32 {
+        self.levels
+    }
+
+    pub fn page_bytes(&self) -> u64 {
+        self.page_bytes
+    }
+
+    /// Resolve a page, materializing the PTE on first touch (the simulated
+    /// OS mapped the export window before the collective started — the
+    /// *timing* of the walk is modeled by the walker, not here).
+    pub fn resolve(&mut self, page: PageId) -> Spa {
+        let gpu = self.gpu;
+        let seed = self.seed;
+        let page_bytes = self.page_bytes;
+        *self.entries.entry(page).or_insert_with(|| {
+            // Deterministic scatter: hash (seed, gpu, page) to a frame.
+            let mut h = SplitMix64::new(seed ^ ((gpu as u64) << 32) ^ page.0);
+            let frame = h.next_u64() & ((1u64 << 34) - 1); // 16 TiB SPA space
+            Spa(frame.wrapping_mul(page_bytes))
+        })
+    }
+
+    /// Number of distinct pages ever resolved (the translation working set).
+    pub fn touched_pages(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Non-leaf levels a walk must traverse when the deepest cached level
+    /// is `cached_level` (0 = nothing cached → walk all `levels` steps;
+    /// k = PWC hit at level k → `k` remaining accesses).
+    pub fn accesses_for_walk(&self, cached_level: u32) -> u32 {
+        debug_assert!(cached_level < self.levels);
+        self.levels - cached_level.min(self.levels)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::MIB;
+
+    fn pt() -> PageTable {
+        PageTable::new(3, 42, 5, 2 * MIB)
+    }
+
+    #[test]
+    fn resolve_is_stable() {
+        let mut t = pt();
+        let a = t.resolve(PageId(7));
+        let b = t.resolve(PageId(7));
+        assert_eq!(a, b);
+        assert_eq!(t.touched_pages(), 1);
+    }
+
+    #[test]
+    fn resolve_is_deterministic_across_instances() {
+        let mut t1 = pt();
+        let mut t2 = pt();
+        for p in 0..100 {
+            assert_eq!(t1.resolve(PageId(p)), t2.resolve(PageId(p)));
+        }
+    }
+
+    #[test]
+    fn different_gpus_map_differently() {
+        let mut t1 = PageTable::new(0, 42, 5, 2 * MIB);
+        let mut t2 = PageTable::new(1, 42, 5, 2 * MIB);
+        let same = (0..64).filter(|&p| t1.resolve(PageId(p)) == t2.resolve(PageId(p))).count();
+        assert!(same < 4, "mappings should be (mostly) distinct, {same}/64 equal");
+    }
+
+    #[test]
+    fn frames_are_page_aligned() {
+        let mut t = pt();
+        for p in 0..200 {
+            let Spa(s) = t.resolve(PageId(p));
+            assert_eq!(s % (2 * MIB), 0);
+        }
+    }
+
+    #[test]
+    fn walk_access_counts() {
+        let t = pt();
+        assert_eq!(t.accesses_for_walk(0), 5); // cold: all 5 levels
+        assert_eq!(t.accesses_for_walk(4), 1); // deepest PWC hit: 1 access
+        assert_eq!(t.accesses_for_walk(2), 3);
+    }
+
+    #[test]
+    fn working_set_counts_distinct_pages() {
+        let mut t = pt();
+        for p in [1u64, 2, 3, 2, 1, 9] {
+            t.resolve(PageId(p));
+        }
+        assert_eq!(t.touched_pages(), 4);
+    }
+}

@@ -1,0 +1,18 @@
+//! UALink fabric model (§2.2): stations, links, single-level Clos.
+//!
+//! Topology: each GPU exposes `stations_per_gpu` x4 stations; switch *k*
+//! of the Clos connects station *k* of every GPU (one dedicated port per
+//! accelerator, §2.2 / Figure 1). A (src,dst) flow uses rail
+//! `(src+dst) % stations`, giving every pair a private rail at both
+//! endpoints for pods up to `stations` GPUs and an even spread beyond.
+//!
+//! Resources are analytic FIFO servers (`sim::server`): a station uplink
+//! serializes at the station's cumulative bandwidth with link-level
+//! credits; each switch output port serializes independently after the
+//! switch's pipeline latency.
+
+pub mod resources;
+pub mod topology;
+
+pub use resources::NetResources;
+pub use topology::Topology;

@@ -1,0 +1,153 @@
+//! Pod topology and rail routing.
+
+/// Static description of the pod's UALink wiring.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Topology {
+    pub gpus: u32,
+    pub stations_per_gpu: u32,
+}
+
+impl Topology {
+    pub fn new(gpus: u32, stations_per_gpu: u32) -> Self {
+        assert!(gpus >= 2 && stations_per_gpu >= 1);
+        Self { gpus, stations_per_gpu }
+    }
+
+    /// Number of Clos switches = number of stations per GPU (switch *k*
+    /// connects station *k* of every accelerator; §2.2's 32-GPU example
+    /// uses 32 switches of 32 x1 links — with x4 bundling that folds to
+    /// one switch per station index).
+    pub fn switches(&self) -> u32 {
+        self.stations_per_gpu
+    }
+
+    /// The rail (= station index at **both** endpoints = switch id) a
+    /// (src,dst) flow uses. `(src+dst) % stations` gives each ordered pair
+    /// a rail such that (a) a source spreads its `gpus-1` flows across all
+    /// of its stations, and (b) a destination receives each source's flow
+    /// on a distinct station while pods ≤ `stations` GPUs — so private L1
+    /// Link TLBs see per-source page streams, matching the paper's
+    /// "destination sees ~one active page per participating GPU" analysis.
+    #[inline]
+    pub fn rail(&self, src: u32, dst: u32) -> u32 {
+        debug_assert!(src != dst);
+        (src + dst) % self.stations_per_gpu
+    }
+
+    /// Flat index of a station resource.
+    #[inline]
+    pub fn station_idx(&self, gpu: u32, rail: u32) -> usize {
+        (gpu * self.stations_per_gpu + rail) as usize
+    }
+
+    /// Flat index of a switch output port (toward `dst`).
+    #[inline]
+    pub fn switch_port_idx(&self, rail: u32, dst: u32) -> usize {
+        (rail * self.gpus + dst) as usize
+    }
+
+    pub fn total_stations(&self) -> usize {
+        (self.gpus * self.stations_per_gpu) as usize
+    }
+
+    pub fn total_switch_ports(&self) -> usize {
+        (self.switches() * self.gpus) as usize
+    }
+
+    /// Sources whose flows to `dst` land on `(dst, rail)` — the set of
+    /// streams a given L1 Link TLB observes.
+    pub fn sources_on_rail(&self, dst: u32, rail: u32) -> Vec<u32> {
+        (0..self.gpus).filter(|&s| s != dst && self.rail(s, dst) == rail).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PairOf, RangeU64};
+
+    #[test]
+    fn rail_is_symmetric_and_in_range() {
+        let t = Topology::new(16, 16);
+        for s in 0..16 {
+            for d in 0..16 {
+                if s == d {
+                    continue;
+                }
+                let r = t.rail(s, d);
+                assert!(r < 16);
+                assert_eq!(r, t.rail(d, s), "request and ack share the rail");
+            }
+        }
+    }
+
+    #[test]
+    fn pods_up_to_station_count_get_private_rails() {
+        // With gpus <= stations, each destination receives every source on
+        // a distinct station.
+        let t = Topology::new(16, 16);
+        for d in 0..16 {
+            let mut rails: Vec<u32> =
+                (0..16).filter(|&s| s != d).map(|s| t.rail(s, d)).collect();
+            rails.sort();
+            rails.dedup();
+            assert_eq!(rails.len(), 15, "15 sources on 15 distinct rails");
+        }
+    }
+
+    #[test]
+    fn oversubscribed_pods_spread_evenly() {
+        // 64 GPUs on 16 stations: 4 sources per destination rail.
+        let t = Topology::new(64, 16);
+        for d in 0..64 {
+            for r in 0..16 {
+                let n = t.sources_on_rail(d, r).len();
+                assert!((3..=4).contains(&n), "rail {r} at dst {d} has {n} sources");
+            }
+        }
+    }
+
+    #[test]
+    fn source_spreads_flows_across_own_stations() {
+        let t = Topology::new(16, 16);
+        for s in 0..16 {
+            let mut rails: Vec<u32> =
+                (0..16).filter(|&d| d != s).map(|d| t.rail(s, d)).collect();
+            rails.sort();
+            rails.dedup();
+            assert_eq!(rails.len(), 15);
+        }
+    }
+
+    #[test]
+    fn flat_indices_are_dense_and_unique() {
+        let t = Topology::new(8, 16);
+        let mut seen = std::collections::HashSet::new();
+        for g in 0..8 {
+            for r in 0..16 {
+                assert!(seen.insert(t.station_idx(g, r)));
+                assert!(t.station_idx(g, r) < t.total_stations());
+            }
+        }
+        let mut ports = std::collections::HashSet::new();
+        for r in 0..16 {
+            for d in 0..8 {
+                assert!(ports.insert(t.switch_port_idx(r, d)));
+                assert!(t.switch_port_idx(r, d) < t.total_switch_ports());
+            }
+        }
+    }
+
+    #[test]
+    fn prop_rail_in_range_any_shape() {
+        let strat = PairOf(RangeU64 { lo: 2, hi: 128 }, RangeU64 { lo: 1, hi: 64 });
+        check("rail-range", &strat, 200, |&(gpus, stations)| {
+            let t = Topology::new(gpus as u32, stations as u32);
+            (0..gpus as u32).all(|s| {
+                (0..gpus as u32)
+                    .filter(|&d| d != s)
+                    .all(|d| t.rail(s, d) < stations as u32)
+            })
+        });
+    }
+}

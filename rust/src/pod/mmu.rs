@@ -1,0 +1,137 @@
+//! Per-GPU Link MMU: the composite of Figure 3 — per-station L1 Link TLBs
+//! + MSHR files, the shared L2 Link TLB, page-walk caches, the shared
+//! walker pool, and the GPU's page table. Timing lives in the pod event
+//! loop; this struct owns state and bookkeeping.
+
+use crate::config::TransConfig;
+use crate::mem::{PageId, PageTable};
+use crate::trans::class::PrimaryOutcome;
+use crate::trans::{MshrFile, PwcStack, Tlb, WalkerPool};
+use std::collections::{HashMap, VecDeque};
+
+/// An in-flight page walk and the stations whose MSHR entries it will
+/// complete. `outcomes[i]` is the primary outcome requests from
+/// `stations[i]` are classified with (the initiating station gets
+/// PwcHit/FullWalk; later attachers get L2HitUnderMiss).
+#[derive(Debug)]
+pub struct WalkRec {
+    pub stations: Vec<(u32, PrimaryOutcome)>,
+    pub prefetch: bool,
+}
+
+#[derive(Debug)]
+pub struct GpuMmu {
+    pub gpu: u32,
+    /// Private L1 Link TLB per UALink station.
+    pub l1: Vec<Tlb>,
+    /// MSHR file per station.
+    pub mshr: Vec<MshrFile>,
+    /// Requests stalled on a full MSHR file, per station.
+    pub stalled: Vec<VecDeque<u32>>,
+    /// Shared L2 Link TLB.
+    pub l2: Tlb,
+    /// Split page-walk caches.
+    pub pwc: PwcStack,
+    /// Shared walker pool (≤ N concurrent walks).
+    pub walkers: WalkerPool,
+    /// Page → in-flight walk.
+    pub pending_walks: HashMap<PageId, WalkRec>,
+    pub page_table: PageTable,
+    /// Largest valid page index in this GPU's receive window (prefetch
+    /// bound; set from the schedule).
+    pub max_page: u64,
+}
+
+impl GpuMmu {
+    pub fn new(gpu: u32, seed: u64, stations: u32, cfg: &TransConfig) -> Self {
+        Self {
+            gpu,
+            l1: (0..stations).map(|_| Tlb::new(cfg.l1.entries, cfg.l1.assoc)).collect(),
+            mshr: (0..stations).map(|_| MshrFile::new(cfg.l1_mshrs)).collect(),
+            stalled: (0..stations).map(|_| VecDeque::new()).collect(),
+            l2: Tlb::new(cfg.l2.entries, cfg.l2.assoc),
+            pwc: PwcStack::from_table1(&cfg.pwc_entries, cfg.pwc_assoc),
+            walkers: WalkerPool::new(cfg.parallel_walkers),
+            pending_walks: HashMap::new(),
+            page_table: PageTable::new(gpu, seed ^ gpu as u64, cfg.levels, cfg.page_bytes),
+            max_page: 0,
+        }
+    }
+
+    /// Fill every level for `page` as if a walk completed (mostly-
+    /// inclusive): PWCs, L2, and the given station's L1 (or all L1s when
+    /// `station` is None — used by pre-translation warmup).
+    pub fn warm_fill(&mut self, page: PageId, station: Option<u32>) {
+        self.page_table.resolve(page);
+        self.pwc.fill_walk(page);
+        self.l2.fill(page.0);
+        match station {
+            Some(s) => {
+                self.l1[s as usize].fill(page.0);
+            }
+            None => {
+                for l1 in &mut self.l1 {
+                    l1.fill(page.0);
+                }
+            }
+        }
+    }
+
+    /// Aggregate MSHR occupancy (conservation checks).
+    pub fn mshr_occupancy(&self) -> usize {
+        self.mshr.iter().map(|m| m.occupancy()).sum()
+    }
+
+    pub fn mshr_peak(&self) -> usize {
+        self.mshr.iter().map(|m| m.peak_occupancy).max().unwrap_or(0)
+    }
+
+    pub fn mshr_full_stalls(&self) -> u64 {
+        self.mshr.iter().map(|m| m.full_stalls).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_baseline;
+    use crate::util::units::MIB;
+
+    fn mmu() -> GpuMmu {
+        let cfg = paper_baseline(16, MIB);
+        GpuMmu::new(3, 42, cfg.link.stations_per_gpu, &cfg.trans)
+    }
+
+    #[test]
+    fn geometry_matches_config() {
+        let m = mmu();
+        assert_eq!(m.l1.len(), 16);
+        assert_eq!(m.mshr.len(), 16);
+        assert_eq!(m.l1[0].entries(), 32);
+        assert_eq!(m.l2.entries(), 512);
+        assert_eq!(m.pwc.levels(), 4);
+    }
+
+    #[test]
+    fn warm_fill_populates_hierarchy() {
+        let mut m = mmu();
+        let p = PageId(7);
+        m.warm_fill(p, Some(2));
+        assert!(m.l2.contains(p.0));
+        assert!(m.l1[2].contains(p.0));
+        assert!(!m.l1[3].contains(p.0));
+        assert_eq!(m.pwc.probe(p), 1);
+        // All-station variant.
+        let q = PageId(9);
+        m.warm_fill(q, None);
+        assert!(m.l1.iter().all(|t| t.contains(q.0)));
+    }
+
+    #[test]
+    fn occupancy_starts_empty() {
+        let m = mmu();
+        assert_eq!(m.mshr_occupancy(), 0);
+        assert_eq!(m.mshr_peak(), 0);
+        assert!(m.pending_walks.is_empty());
+    }
+}

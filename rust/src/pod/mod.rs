@@ -1,0 +1,12 @@
+//! The pod simulation: ties GPUs, the UALink fabric, and the
+//! reverse-translation hierarchy into one event-driven model and runs a
+//! collective schedule to completion.
+//!
+//! See DESIGN.md "Request lifecycle" for the modeled path. Entry points:
+//! [`run`] (config → stats) and [`run_schedule`] (custom schedule).
+
+pub mod mmu;
+pub mod sim;
+
+pub use mmu::GpuMmu;
+pub use sim::{run, run_schedule, PodSim};

@@ -1,0 +1,120 @@
+//! Artifact manifest: `python/compile/aot.py` writes
+//! `artifacts/manifest.json` describing each lowered HLO module (name,
+//! file, input shapes/dtypes, outputs). The Rust runtime reads it to know
+//! what to load and how to feed it.
+
+use crate::util::json::Json;
+use anyhow::{Context, Result};
+use std::path::{Path, PathBuf};
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactSpec {
+    pub name: String,
+    /// HLO text file, relative to the manifest's directory.
+    pub file: String,
+    /// Input shapes (row-major dims) in call order.
+    pub input_shapes: Vec<Vec<usize>>,
+    /// Input dtypes ("f32", "i32", ...), same order.
+    pub input_dtypes: Vec<String>,
+    /// Number of outputs in the result tuple.
+    pub num_outputs: usize,
+}
+
+#[derive(Debug, Clone, PartialEq)]
+pub struct ArtifactManifest {
+    pub dir: PathBuf,
+    pub artifacts: Vec<ArtifactSpec>,
+}
+
+impl ArtifactManifest {
+    pub fn load(dir: &Path) -> Result<ArtifactManifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading artifact manifest {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(dir, &j)
+    }
+
+    pub fn from_json(dir: &Path, j: &Json) -> Result<ArtifactManifest> {
+        let artifacts = j
+            .get("artifacts")
+            .and_then(Json::as_arr)
+            .context("manifest missing `artifacts`")?
+            .iter()
+            .map(|a| {
+                let shapes = a
+                    .get("input_shapes")
+                    .and_then(Json::as_arr)
+                    .context("artifact missing input_shapes")?
+                    .iter()
+                    .map(|s| {
+                        Ok(s.as_arr()
+                            .context("shape not an array")?
+                            .iter()
+                            .map(|d| d.as_u64().map(|x| x as usize).context("bad dim"))
+                            .collect::<Result<Vec<_>>>()?)
+                    })
+                    .collect::<Result<Vec<_>>>()?;
+                let dtypes = a
+                    .get("input_dtypes")
+                    .and_then(Json::as_arr)
+                    .context("artifact missing input_dtypes")?
+                    .iter()
+                    .map(|d| Ok(d.as_str().context("dtype not a string")?.to_string()))
+                    .collect::<Result<Vec<_>>>()?;
+                Ok(ArtifactSpec {
+                    name: a.req_str("name")?.to_string(),
+                    file: a.req_str("file")?.to_string(),
+                    input_shapes: shapes,
+                    input_dtypes: dtypes,
+                    num_outputs: a.req_u64("num_outputs")? as usize,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        Ok(ArtifactManifest { dir: dir.to_path_buf(), artifacts })
+    }
+
+    pub fn find(&self, name: &str) -> Option<&ArtifactSpec> {
+        self.artifacts.iter().find(|a| a.name == name)
+    }
+
+    pub fn hlo_path(&self, spec: &ArtifactSpec) -> PathBuf {
+        self.dir.join(&spec.file)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    const SAMPLE: &str = r#"{
+      "artifacts": [
+        {
+          "name": "moe_layer",
+          "file": "moe_layer.hlo.txt",
+          "input_shapes": [[64, 32], [4, 32, 64], [4, 64, 32]],
+          "input_dtypes": ["f32", "f32", "f32"],
+          "num_outputs": 2
+        }
+      ]
+    }"#;
+
+    #[test]
+    fn parses_manifest() {
+        let j = Json::parse(SAMPLE).unwrap();
+        let m = ArtifactManifest::from_json(Path::new("/tmp/arts"), &j).unwrap();
+        assert_eq!(m.artifacts.len(), 1);
+        let a = m.find("moe_layer").unwrap();
+        assert_eq!(a.input_shapes[1], vec![4, 32, 64]);
+        assert_eq!(a.input_dtypes.len(), 3);
+        assert_eq!(a.num_outputs, 2);
+        assert_eq!(m.hlo_path(a), Path::new("/tmp/arts/moe_layer.hlo.txt"));
+        assert!(m.find("nope").is_none());
+    }
+
+    #[test]
+    fn missing_fields_error() {
+        let j = Json::parse(r#"{"artifacts": [{"name": "x"}]}"#).unwrap();
+        assert!(ArtifactManifest::from_json(Path::new("."), &j).is_err());
+    }
+}

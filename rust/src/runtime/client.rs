@@ -1,0 +1,96 @@
+//! PJRT client wrapper (pattern from /opt/xla-example/load_hlo).
+
+use super::artifacts::{ArtifactManifest, ArtifactSpec};
+use anyhow::{Context, Result};
+use std::path::Path;
+
+/// A compiled HLO module plus its spec.
+pub struct Executable {
+    pub spec: ArtifactSpec,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// CPU PJRT runtime. One client, many compiled executables.
+pub struct PjrtRuntime {
+    client: xla::PjRtClient,
+}
+
+impl PjrtRuntime {
+    pub fn cpu() -> Result<PjrtRuntime> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        log::info!(
+            "PJRT client up: platform={} devices={}",
+            client.platform_name(),
+            client.device_count()
+        );
+        Ok(PjrtRuntime { client })
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Load + compile one HLO text file.
+    pub fn compile_file(&self, spec: &ArtifactSpec, path: &Path) -> Result<Executable> {
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().context("non-utf8 artifact path")?,
+        )
+        .with_context(|| format!("parsing HLO text {}", path.display()))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling {}", spec.name))?;
+        Ok(Executable { spec: spec.clone(), exe })
+    }
+
+    /// Load every artifact in a manifest.
+    pub fn load_manifest(&self, manifest: &ArtifactManifest) -> Result<Vec<Executable>> {
+        manifest
+            .artifacts
+            .iter()
+            .map(|spec| self.compile_file(spec, &manifest.hlo_path(spec)))
+            .collect()
+    }
+}
+
+impl Executable {
+    /// Execute with f32 inputs (shape-checked against the spec); returns
+    /// the flattened f32 outputs of the result tuple.
+    pub fn run_f32(&self, inputs: &[Vec<f32>]) -> Result<Vec<Vec<f32>>> {
+        anyhow::ensure!(
+            inputs.len() == self.spec.input_shapes.len(),
+            "{} expects {} inputs, got {}",
+            self.spec.name,
+            self.spec.input_shapes.len(),
+            inputs.len()
+        );
+        let mut literals = Vec::with_capacity(inputs.len());
+        for (i, (data, shape)) in inputs.iter().zip(&self.spec.input_shapes).enumerate() {
+            let expect: usize = shape.iter().product();
+            anyhow::ensure!(
+                data.len() == expect,
+                "{} input {i}: expected {expect} elements for shape {shape:?}, got {}",
+                self.spec.name,
+                data.len()
+            );
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(data).reshape(&dims)?;
+            literals.push(lit);
+        }
+        let mut result = self.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True.
+        let tuple = result.decompose_tuple()?;
+        anyhow::ensure!(
+            tuple.len() == self.spec.num_outputs,
+            "{}: expected {} outputs, got {}",
+            self.spec.name,
+            self.spec.num_outputs,
+            tuple.len()
+        );
+        tuple.into_iter().map(|l| Ok(l.to_vec::<f32>()?)).collect()
+    }
+}
+
+// NOTE: tests that need real artifacts live in rust/tests/runtime_e2e.rs
+// (they require `make artifacts` to have produced artifacts/).

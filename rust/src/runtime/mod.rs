@@ -1,0 +1,13 @@
+//! PJRT runtime: load and execute the AOT-compiled JAX/Pallas artifacts.
+//!
+//! Python runs only at build time (`make artifacts`); this module makes
+//! the compiled HLO executable from the Rust side via the `xla` crate
+//! (PJRT C API). Interchange format is HLO *text* — see
+//! /opt/xla-example/README.md: jax ≥ 0.5 serialized protos use 64-bit ids
+//! that xla_extension 0.5.1 rejects; the text parser reassigns ids.
+
+pub mod artifacts;
+pub mod client;
+
+pub use artifacts::{ArtifactManifest, ArtifactSpec};
+pub use client::{Executable, PjrtRuntime};

@@ -1,0 +1,18 @@
+//! Discrete-event simulation core — the Omnet++ substitute.
+//!
+//! A deliberately small, fast kernel: an event is `(Time, seq, payload)`;
+//! the engine pops events in `(time, seq)` order so that same-timestamp
+//! events are processed in FIFO scheduling order, which makes every run a
+//! pure, bit-deterministic function of (config, seed). The model (the pod)
+//! owns the engine and drives the loop itself, so handlers can mutate the
+//! whole model without borrow gymnastics.
+
+pub mod engine;
+pub mod queue;
+pub mod server;
+
+pub use engine::Engine;
+pub use queue::EventQueue;
+pub use server::{BoundedServer, Server};
+
+pub use crate::util::units::Time;

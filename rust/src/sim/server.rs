@@ -1,0 +1,208 @@
+//! Work-conserving resource models.
+//!
+//! Most fixed-rate resources in the pod (link serializers, switch ports,
+//! the local data fabric) are modeled *analytically* instead of with
+//! per-packet "egress" events: a `Server` tracks when it next becomes free
+//! and computes each arrival's departure time in O(1). This is exact for
+//! FIFO work-conserving servers and removes ~40% of events from the hot
+//! loop (see EXPERIMENTS.md §Perf).
+//!
+//! `BoundedServer` adds credit-based flow control: at most `credits`
+//! packets may be in flight past the server at once (UALink link-level
+//! crediting); when credits are exhausted the admission time is pushed to
+//! the time the oldest in-flight packet retires.
+
+use crate::util::units::Time;
+use std::collections::VecDeque;
+
+/// FIFO, work-conserving, single-lane server.
+#[derive(Debug, Clone, Default)]
+pub struct Server {
+    next_free: Time,
+    busy_accum: Time,
+}
+
+impl Server {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Admit work arriving at `arrival` needing `service` time.
+    /// Returns (start, done).
+    #[inline]
+    pub fn admit(&mut self, arrival: Time, service: Time) -> (Time, Time) {
+        let start = arrival.max(self.next_free);
+        let done = start + service;
+        self.next_free = done;
+        self.busy_accum += service;
+        (start, done)
+    }
+
+    /// When the server next becomes free.
+    pub fn next_free(&self) -> Time {
+        self.next_free
+    }
+
+    /// Total busy time — used for utilization reporting.
+    pub fn busy_time(&self) -> Time {
+        self.busy_accum
+    }
+}
+
+/// Server with a credit window: admission additionally waits until fewer
+/// than `credits` previously-admitted packets remain "in flight", where a
+/// packet is in flight from its service start until `retire_at` (supplied
+/// by the caller — e.g. when the downstream hop drains it).
+#[derive(Debug, Clone)]
+pub struct BoundedServer {
+    server: Server,
+    credits: usize,
+    inflight: VecDeque<Time>, // retire times, non-decreasing for FIFO traffic
+}
+
+impl BoundedServer {
+    pub fn new(credits: usize) -> Self {
+        assert!(credits > 0);
+        Self { server: Server::new(), credits, inflight: VecDeque::new() }
+    }
+
+    /// Admit work arriving at `arrival` with service time `service`; the
+    /// packet occupies a credit until `retire_after` past its departure.
+    /// Returns (start, done).
+    #[inline]
+    pub fn admit(&mut self, arrival: Time, service: Time, retire_after: Time) -> (Time, Time) {
+        // Drop retired packets as of `arrival`.
+        while let Some(&front) = self.inflight.front() {
+            if front <= arrival {
+                self.inflight.pop_front();
+            } else {
+                break;
+            }
+        }
+        let mut earliest = arrival;
+        if self.inflight.len() >= self.credits {
+            // Must wait for the oldest in-flight packet to retire.
+            let idx = self.inflight.len() - self.credits;
+            earliest = earliest.max(self.inflight[idx]);
+            // Retire everything up to that time.
+            while let Some(&front) = self.inflight.front() {
+                if front <= earliest {
+                    self.inflight.pop_front();
+                } else {
+                    break;
+                }
+            }
+        }
+        let (start, done) = self.server.admit(earliest, service);
+        self.inflight.push_back(done + retire_after);
+        (start, done)
+    }
+
+    pub fn busy_time(&self) -> Time {
+        self.server.busy_time()
+    }
+
+    pub fn in_flight(&self) -> usize {
+        self.inflight.len()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::proptest::{check, PairOf, RangeU64, VecOf};
+
+    #[test]
+    fn idle_server_starts_immediately() {
+        let mut s = Server::new();
+        assert_eq!(s.admit(100, 10), (100, 110));
+        assert_eq!(s.next_free(), 110);
+    }
+
+    #[test]
+    fn busy_server_queues_fifo() {
+        let mut s = Server::new();
+        s.admit(0, 50);
+        assert_eq!(s.admit(10, 5), (50, 55));
+        assert_eq!(s.admit(60, 5), (60, 65));
+        assert_eq!(s.busy_time(), 60);
+    }
+
+    #[test]
+    fn prop_server_conserves_work_and_order() {
+        // For arrivals in non-decreasing order, departures are
+        // non-decreasing and total busy time equals sum of services.
+        let strat = VecOf {
+            elem: PairOf(RangeU64 { lo: 0, hi: 50 }, RangeU64 { lo: 1, hi: 20 }),
+            max_len: 200,
+        };
+        check("server-work-conservation", &strat, 150, |jobs| {
+            let mut s = Server::new();
+            let mut t = 0u64;
+            let mut last_done = 0u64;
+            let mut total_service = 0u64;
+            for &(gap, service) in jobs {
+                t += gap;
+                let (start, done) = s.admit(t, service);
+                if start < t || done != start + service || done < last_done {
+                    return false;
+                }
+                last_done = done;
+                total_service += service;
+            }
+            s.busy_time() == total_service
+        });
+    }
+
+    #[test]
+    fn bounded_server_blocks_on_credits() {
+        // 2 credits, service 10, retire 100 after departure.
+        let mut s = BoundedServer::new(2);
+        let (_, d1) = s.admit(0, 10, 100); // done 10, retires 110
+        let (_, d2) = s.admit(0, 10, 100); // done 20, retires 120
+        assert_eq!((d1, d2), (10, 20));
+        // Third packet must wait for packet 1 to retire at 110.
+        let (start3, done3) = s.admit(0, 10, 100);
+        assert_eq!(start3, 110);
+        assert_eq!(done3, 120);
+    }
+
+    #[test]
+    fn bounded_server_credits_replenish() {
+        let mut s = BoundedServer::new(1);
+        s.admit(0, 10, 10); // retires at 20
+        // Arriving after retirement: no stall.
+        let (start, _) = s.admit(30, 10, 10);
+        assert_eq!(start, 30);
+        assert!(s.in_flight() <= 1);
+    }
+
+    #[test]
+    fn prop_bounded_never_exceeds_credits() {
+        let strat = VecOf {
+            elem: PairOf(RangeU64 { lo: 0, hi: 5 }, RangeU64 { lo: 1, hi: 8 }),
+            max_len: 100,
+        };
+        check("bounded-credit-invariant", &strat, 100, |jobs| {
+            let credits = 4;
+            let mut s = BoundedServer::new(credits);
+            let mut t = 0;
+            let mut events: Vec<(u64, i64)> = Vec::new(); // (time, +1 start / -1 retire)
+            for &(gap, service) in jobs {
+                t += gap;
+                let (start, done) = s.admit(t, service, 50);
+                events.push((start, 1));
+                events.push((done + 50, -1));
+            }
+            events.sort();
+            let mut occ = 0i64;
+            for (_, d) in events {
+                occ += d;
+                if occ > credits as i64 {
+                    return false;
+                }
+            }
+            true
+        });
+    }
+}

@@ -1,0 +1,9 @@
+//! Measurement: per-run statistics, latency breakdowns, per-request
+//! traces, histograms, terminal plots, and report/CSV emission.
+
+pub mod histogram;
+pub mod plot;
+pub mod run;
+
+pub use histogram::LogHistogram;
+pub use run::{LatencyBreakdown, RunStats};

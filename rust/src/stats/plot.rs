@@ -1,0 +1,96 @@
+//! Terminal ASCII plots for figure previews (`ratsim figures` output is
+//! CSV-first; these render quick-look bar and scatter charts so shapes
+//! are visible without leaving the terminal).
+
+/// Horizontal bar chart. `rows` are (label, value); bars scale to
+/// `width` columns of the maximum value.
+pub fn bar_chart(title: &str, rows: &[(String, f64)], width: usize) -> String {
+    let mut out = format!("\n-- {title} --\n");
+    if rows.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let max = rows.iter().map(|r| r.1).fold(f64::MIN, f64::max).max(1e-12);
+    let label_w = rows.iter().map(|r| r.0.len()).max().unwrap_or(0);
+    for (label, v) in rows {
+        let n = ((v / max) * width as f64).round() as usize;
+        out.push_str(&format!(
+            "{label:>label_w$} | {}{} {v:.3}\n",
+            "█".repeat(n),
+            " ".repeat(width - n.min(width)),
+        ));
+    }
+    out
+}
+
+/// Scatter/step plot of an (x, y) series into a character grid —
+/// used for the Fig-9/10 latency traces.
+pub fn scatter(title: &str, points: &[(f64, f64)], cols: usize, rows: usize) -> String {
+    let mut out = format!("\n-- {title} --\n");
+    if points.is_empty() {
+        out.push_str("(no data)\n");
+        return out;
+    }
+    let (xmin, xmax) = points
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.0), hi.max(p.0)));
+    let (ymin, ymax) = points
+        .iter()
+        .fold((f64::MAX, f64::MIN), |(lo, hi), p| (lo.min(p.1), hi.max(p.1)));
+    let xspan = (xmax - xmin).max(1e-12);
+    let yspan = (ymax - ymin).max(1e-12);
+    let mut grid = vec![vec![b' '; cols]; rows];
+    for &(x, y) in points {
+        let c = (((x - xmin) / xspan) * (cols - 1) as f64).round() as usize;
+        let r = (((y - ymin) / yspan) * (rows - 1) as f64).round() as usize;
+        grid[rows - 1 - r][c] = b'*';
+    }
+    for (i, line) in grid.iter().enumerate() {
+        let yl = ymax - yspan * i as f64 / (rows - 1) as f64;
+        out.push_str(&format!("{yl:>10.1} |{}\n", String::from_utf8_lossy(line)));
+    }
+    out.push_str(&format!(
+        "{:>10} +{}\n{:>10}  {:<cols$.1}{:>.1}\n",
+        "", "-".repeat(cols), "", xmin, xmax
+    ));
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bar_chart_scales_to_max() {
+        let rows = vec![("a".to_string(), 1.0), ("bb".to_string(), 2.0)];
+        let s = bar_chart("t", &rows, 10);
+        assert!(s.contains("-- t --"));
+        // Max value gets full width, half value gets half.
+        assert!(s.contains(&"█".repeat(10)));
+        assert!(s.contains(&"█".repeat(5)));
+        assert!(s.contains(" a |"));
+        assert!(s.contains("bb |"));
+    }
+
+    #[test]
+    fn bar_chart_empty_is_safe() {
+        assert!(bar_chart("x", &[], 10).contains("(no data)"));
+    }
+
+    #[test]
+    fn scatter_places_extremes() {
+        let pts = vec![(0.0, 0.0), (10.0, 100.0)];
+        let s = scatter("tr", &pts, 20, 5);
+        let lines: Vec<&str> = s.lines().collect();
+        // lines[0] = "", lines[1] = title; grid rows follow.
+        assert!(lines[2].contains('*'), "max y on the first grid row");
+        assert!(lines[6].contains('*'), "min y on the last grid row");
+    }
+
+    #[test]
+    fn scatter_handles_constant_series() {
+        let pts = vec![(0.0, 5.0), (1.0, 5.0), (2.0, 5.0)];
+        let s = scatter("flat", &pts, 10, 3);
+        assert!(s.matches('*').count() >= 1);
+    }
+}

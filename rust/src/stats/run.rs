@@ -1,0 +1,221 @@
+//! Per-run statistics: everything the figures need from one simulation.
+
+use super::histogram::LogHistogram;
+use crate::trans::class::ClassCounts;
+use crate::util::json::Json;
+use crate::util::units::{to_ns, Time};
+
+/// Additive round-trip latency decomposition (Fig 6). All sums in ps;
+/// divide by `requests` for per-request means.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct LatencyBreakdown {
+    pub fabric: u128,
+    pub net_fwd: u128,
+    pub translation: u128,
+    pub memory: u128,
+    pub net_ack: u128,
+}
+
+impl LatencyBreakdown {
+    pub fn total(&self) -> u128 {
+        self.fabric + self.net_fwd + self.translation + self.memory + self.net_ack
+    }
+
+    /// Fractions (fabric, fwd, trans, mem, ack); zero-safe.
+    pub fn fractions(&self) -> [f64; 5] {
+        let t = self.total().max(1) as f64;
+        [
+            self.fabric as f64 / t,
+            self.net_fwd as f64 / t,
+            self.translation as f64 / t,
+            self.memory as f64 / t,
+            self.net_ack as f64 / t,
+        ]
+    }
+}
+
+/// Full result set of one simulated collective.
+#[derive(Debug, Clone, Default)]
+pub struct RunStats {
+    pub config_name: String,
+    /// Collective completion time (last ACK).
+    pub completion: Time,
+    pub requests: u64,
+    pub internode_requests: u64,
+    pub breakdown: LatencyBreakdown,
+    pub classes: ClassCounts,
+    pub rat_hist: LogHistogram,
+    pub rtt_hist: LogHistogram,
+    /// (per-source-GPU issue sequence, RAT latency) for the traced GPU
+    /// (Figs 9/10).
+    pub trace: Vec<(u64, Time)>,
+    /// Walker/queue pressure.
+    pub walks_started: u64,
+    pub walks_queued: u64,
+    pub peak_active_walks: u32,
+    pub prefetch_walks: u64,
+    pub pretranslated_pages: u64,
+    pub mshr_peak: usize,
+    pub mshr_full_stalls: u64,
+    /// Destination translation working set (max distinct pages resolved
+    /// at any one GPU).
+    pub max_touched_pages: usize,
+    /// Simulator engine events processed (perf accounting).
+    pub events: u64,
+    /// Host wall time for the run, seconds.
+    pub wall_seconds: f64,
+}
+
+impl RunStats {
+    /// Mean reverse-translation latency per inter-node request, ns (Fig 5).
+    pub fn mean_rat_ns(&self) -> f64 {
+        if self.internode_requests == 0 {
+            return 0.0;
+        }
+        to_ns((self.breakdown.translation / self.internode_requests as u128) as u64)
+    }
+
+    /// Mean round-trip time per request, ns.
+    pub fn mean_rtt_ns(&self) -> f64 {
+        if self.requests == 0 {
+            return 0.0;
+        }
+        to_ns((self.breakdown.total() / self.requests as u128) as u64)
+    }
+
+    /// Fraction of RTT spent in reverse translation (Fig 6's headline).
+    pub fn rat_fraction(&self) -> f64 {
+        self.breakdown.fractions()[2]
+    }
+
+    pub fn events_per_second(&self) -> f64 {
+        if self.wall_seconds <= 0.0 {
+            0.0
+        } else {
+            self.events as f64 / self.wall_seconds
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let f = self.breakdown.fractions();
+        Json::from_pairs(vec![
+            ("config", Json::from(self.config_name.as_str())),
+            ("completion_ns", Json::from(to_ns(self.completion))),
+            ("requests", Json::from(self.requests)),
+            ("internode_requests", Json::from(self.internode_requests)),
+            ("mean_rat_ns", Json::from(self.mean_rat_ns())),
+            ("mean_rtt_ns", Json::from(self.mean_rtt_ns())),
+            (
+                "rtt_fractions",
+                Json::from_pairs(vec![
+                    ("fabric", Json::from(f[0])),
+                    ("net_fwd", Json::from(f[1])),
+                    ("translation", Json::from(f[2])),
+                    ("memory", Json::from(f[3])),
+                    ("net_ack", Json::from(f[4])),
+                ]),
+            ),
+            ("l1_hits", Json::from(self.classes.l1_hit)),
+            ("mshr_hits", Json::from(self.classes.mshr_total())),
+            ("primary_misses", Json::from(self.classes.primary_total())),
+            ("walks_started", Json::from(self.walks_started)),
+            ("walks_queued", Json::from(self.walks_queued)),
+            ("prefetch_walks", Json::from(self.prefetch_walks)),
+            ("pretranslated_pages", Json::from(self.pretranslated_pages)),
+            ("max_touched_pages", Json::from(self.max_touched_pages)),
+            ("events", Json::from(self.events)),
+            ("wall_seconds", Json::from(self.wall_seconds)),
+        ])
+    }
+
+    /// One-line human summary.
+    pub fn summary(&self) -> String {
+        format!(
+            "{}: done={} reqs={} meanRAT={:.1}ns meanRTT={:.1}ns ratFrac={:.1}% events={} ({:.1}M ev/s)",
+            self.config_name,
+            crate::util::units::fmt_time(self.completion),
+            self.requests,
+            self.mean_rat_ns(),
+            self.mean_rtt_ns(),
+            100.0 * self.rat_fraction(),
+            self.events,
+            self.events_per_second() / 1e6,
+        )
+    }
+}
+
+/// Write a CSV file from header + rows (figure harness output).
+pub fn write_csv(
+    path: &std::path::Path,
+    header: &[&str],
+    rows: &[Vec<String>],
+) -> anyhow::Result<()> {
+    use std::io::Write;
+    if let Some(parent) = path.parent() {
+        std::fs::create_dir_all(parent)?;
+    }
+    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+    writeln!(f, "{}", header.join(","))?;
+    for row in rows {
+        writeln!(f, "{}", row.join(","))?;
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::ns;
+
+    #[test]
+    fn breakdown_fractions_sum_to_one() {
+        let b = LatencyBreakdown {
+            fabric: 120,
+            net_fwd: 900,
+            translation: 300,
+            memory: 150,
+            net_ack: 530,
+        };
+        let f = b.fractions();
+        assert!((f.iter().sum::<f64>() - 1.0).abs() < 1e-12);
+        assert!((f[2] - 300.0 / 2000.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn mean_rat_uses_internode_denominator() {
+        let mut s = RunStats::default();
+        s.requests = 10;
+        s.internode_requests = 5;
+        s.breakdown.translation = ns(100) as u128 * 5;
+        assert_eq!(s.mean_rat_ns(), 100.0);
+    }
+
+    #[test]
+    fn zero_request_stats_are_finite() {
+        let s = RunStats::default();
+        assert_eq!(s.mean_rat_ns(), 0.0);
+        assert_eq!(s.mean_rtt_ns(), 0.0);
+        assert_eq!(s.events_per_second(), 0.0);
+    }
+
+    #[test]
+    fn json_contains_key_fields() {
+        let mut s = RunStats::default();
+        s.config_name = "x".into();
+        s.requests = 3;
+        let j = s.to_json();
+        assert_eq!(j.req_str("config").unwrap(), "x");
+        assert_eq!(j.req_u64("requests").unwrap(), 3);
+        assert!(j.get("rtt_fractions").is_some());
+    }
+
+    #[test]
+    fn csv_roundtrip() {
+        let dir = std::env::temp_dir().join("ratsim-csv-test");
+        let path = dir.join("t.csv");
+        write_csv(&path, &["a", "b"], &[vec!["1".into(), "2".into()]]).unwrap();
+        let text = std::fs::read_to_string(&path).unwrap();
+        assert_eq!(text, "a,b\n1,2\n");
+        std::fs::remove_file(&path).ok();
+    }
+}

@@ -1,0 +1,221 @@
+//! The hit/miss taxonomy used throughout the evaluation (Figs 7 & 8).
+//!
+//! Every inter-node request is classified exactly once at the target's
+//! translation hierarchy:
+//!
+//! * `L1Hit` — hit in the station's private L1 Link TLB.
+//! * `MshrHit(primary)` — L1 miss, but a walk/lookup for the same page is
+//!   already pending at this station (hit-under-miss). `primary` records
+//!   how the *primary* miss resolved — Fig 8 decomposes these.
+//! * `Primary(primary)` — L1 miss that itself went down the hierarchy.
+//!
+//! `PrimaryOutcome` is where the primary miss was served:
+//! `L2Hit`, `L2HitUnderMiss` (another station's walk already pending at
+//! L2), `PwcHit(level)` (partial walk), `FullWalk`.
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum PrimaryOutcome {
+    L2Hit,
+    L2HitUnderMiss,
+    /// Deepest page-walk-cache hit level (1..=levels-1); walk was partial.
+    PwcHit(u32),
+    FullWalk,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum TransClass {
+    /// Translation disabled (the paper's ideal configuration).
+    Ideal,
+    /// Intra-node access — SPA addressing, no reverse translation (§2.3).
+    IntraNode,
+    L1Hit,
+    MshrHit(PrimaryOutcome),
+    Primary(PrimaryOutcome),
+}
+
+impl PrimaryOutcome {
+    pub fn name(&self) -> String {
+        match self {
+            PrimaryOutcome::L2Hit => "l2-hit".into(),
+            PrimaryOutcome::L2HitUnderMiss => "l2-hit-under-miss".into(),
+            PrimaryOutcome::PwcHit(l) => format!("pwc-hit-l{l}"),
+            PrimaryOutcome::FullWalk => "full-walk".into(),
+        }
+    }
+}
+
+impl TransClass {
+    pub fn name(&self) -> String {
+        match self {
+            TransClass::Ideal => "ideal".into(),
+            TransClass::IntraNode => "intra-node".into(),
+            TransClass::L1Hit => "l1-hit".into(),
+            TransClass::MshrHit(p) => format!("l1-mshr-hit/{}", p.name()),
+            TransClass::Primary(p) => format!("l1-miss/{}", p.name()),
+        }
+    }
+
+    /// Is this request counted in the Fig-7 "L1-MSHR hit" bar?
+    pub fn is_mshr_hit(&self) -> bool {
+        matches!(self, TransClass::MshrHit(_))
+    }
+
+    pub fn primary(&self) -> Option<PrimaryOutcome> {
+        match self {
+            TransClass::MshrHit(p) | TransClass::Primary(p) => Some(*p),
+            _ => None,
+        }
+    }
+}
+
+/// Dense counters over the taxonomy. PWC hit levels are folded per level
+/// (up to 8 levels is plenty).
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct ClassCounts {
+    pub ideal: u64,
+    pub intra_node: u64,
+    pub l1_hit: u64,
+    pub mshr_l2_hit: u64,
+    pub mshr_l2_hum: u64,
+    pub mshr_pwc_hit: [u64; 8],
+    pub mshr_full_walk: u64,
+    pub prim_l2_hit: u64,
+    pub prim_l2_hum: u64,
+    pub prim_pwc_hit: [u64; 8],
+    pub prim_full_walk: u64,
+}
+
+impl ClassCounts {
+    pub fn record(&mut self, c: TransClass) {
+        match c {
+            TransClass::Ideal => self.ideal += 1,
+            TransClass::IntraNode => self.intra_node += 1,
+            TransClass::L1Hit => self.l1_hit += 1,
+            TransClass::MshrHit(p) => match p {
+                PrimaryOutcome::L2Hit => self.mshr_l2_hit += 1,
+                PrimaryOutcome::L2HitUnderMiss => self.mshr_l2_hum += 1,
+                PrimaryOutcome::PwcHit(l) => self.mshr_pwc_hit[(l as usize).min(7)] += 1,
+                PrimaryOutcome::FullWalk => self.mshr_full_walk += 1,
+            },
+            TransClass::Primary(p) => match p {
+                PrimaryOutcome::L2Hit => self.prim_l2_hit += 1,
+                PrimaryOutcome::L2HitUnderMiss => self.prim_l2_hum += 1,
+                PrimaryOutcome::PwcHit(l) => self.prim_pwc_hit[(l as usize).min(7)] += 1,
+                PrimaryOutcome::FullWalk => self.prim_full_walk += 1,
+            },
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.ideal
+            + self.intra_node
+            + self.l1_hit
+            + self.mshr_total()
+            + self.primary_total()
+    }
+
+    pub fn mshr_total(&self) -> u64 {
+        self.mshr_l2_hit
+            + self.mshr_l2_hum
+            + self.mshr_pwc_hit.iter().sum::<u64>()
+            + self.mshr_full_walk
+    }
+
+    pub fn primary_total(&self) -> u64 {
+        self.prim_l2_hit
+            + self.prim_l2_hum
+            + self.prim_pwc_hit.iter().sum::<u64>()
+            + self.prim_full_walk
+    }
+
+    pub fn merge(&mut self, other: &ClassCounts) {
+        self.ideal += other.ideal;
+        self.intra_node += other.intra_node;
+        self.l1_hit += other.l1_hit;
+        self.mshr_l2_hit += other.mshr_l2_hit;
+        self.mshr_l2_hum += other.mshr_l2_hum;
+        self.mshr_full_walk += other.mshr_full_walk;
+        self.prim_l2_hit += other.prim_l2_hit;
+        self.prim_l2_hum += other.prim_l2_hum;
+        self.prim_full_walk += other.prim_full_walk;
+        for i in 0..8 {
+            self.mshr_pwc_hit[i] += other.mshr_pwc_hit[i];
+            self.prim_pwc_hit[i] += other.prim_pwc_hit[i];
+        }
+    }
+
+    /// Fig-7 stack: fractions of inter-node requests by top-level outcome.
+    /// Returns (l1_hit, l1_mshr_hit, l2_hit, l2_hum, pwc_hit, full_walk).
+    pub fn fig7_fractions(&self) -> [f64; 6] {
+        let denom = (self.total() - self.ideal - self.intra_node).max(1) as f64;
+        [
+            self.l1_hit as f64 / denom,
+            self.mshr_total() as f64 / denom,
+            self.prim_l2_hit as f64 / denom,
+            self.prim_l2_hum as f64 / denom,
+            self.prim_pwc_hit.iter().sum::<u64>() as f64 / denom,
+            self.prim_full_walk as f64 / denom,
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn record_and_total() {
+        let mut c = ClassCounts::default();
+        c.record(TransClass::L1Hit);
+        c.record(TransClass::MshrHit(PrimaryOutcome::FullWalk));
+        c.record(TransClass::MshrHit(PrimaryOutcome::PwcHit(2)));
+        c.record(TransClass::Primary(PrimaryOutcome::L2Hit));
+        c.record(TransClass::Primary(PrimaryOutcome::L2HitUnderMiss));
+        c.record(TransClass::Ideal);
+        assert_eq!(c.total(), 6);
+        assert_eq!(c.mshr_total(), 2);
+        assert_eq!(c.primary_total(), 2);
+        assert_eq!(c.mshr_pwc_hit[2], 1);
+    }
+
+    #[test]
+    fn fig7_fractions_sum_to_one() {
+        let mut c = ClassCounts::default();
+        for _ in 0..90 {
+            c.record(TransClass::MshrHit(PrimaryOutcome::FullWalk));
+        }
+        for _ in 0..5 {
+            c.record(TransClass::L1Hit);
+        }
+        for _ in 0..5 {
+            c.record(TransClass::Primary(PrimaryOutcome::FullWalk));
+        }
+        let f = c.fig7_fractions();
+        let sum: f64 = f.iter().sum();
+        assert!((sum - 1.0).abs() < 1e-9);
+        assert!((f[1] - 0.9).abs() < 1e-9, "MSHR fraction should be 90%");
+    }
+
+    #[test]
+    fn merge_adds_counts() {
+        let mut a = ClassCounts::default();
+        a.record(TransClass::L1Hit);
+        let mut b = ClassCounts::default();
+        b.record(TransClass::L1Hit);
+        b.record(TransClass::Primary(PrimaryOutcome::FullWalk));
+        a.merge(&b);
+        assert_eq!(a.l1_hit, 2);
+        assert_eq!(a.prim_full_walk, 1);
+        assert_eq!(a.total(), 3);
+    }
+
+    #[test]
+    fn names_are_stable() {
+        assert_eq!(TransClass::L1Hit.name(), "l1-hit");
+        assert_eq!(
+            TransClass::MshrHit(PrimaryOutcome::PwcHit(3)).name(),
+            "l1-mshr-hit/pwc-hit-l3"
+        );
+        assert_eq!(TransClass::Primary(PrimaryOutcome::L2HitUnderMiss).name(), "l1-miss/l2-hit-under-miss");
+    }
+}

@@ -1,0 +1,20 @@
+//! Reverse Address Translation hierarchy (§2.4, Figure 3).
+//!
+//! Passive state machines — the pod's event loop supplies timing. Each
+//! UALink station owns a private L1 Link TLB + MSHR file; each GPU owns a
+//! shared L2 Link TLB, per-level page-walk caches, and a shared walker pool
+//! with bounded concurrency. Fill policy is mostly-inclusive: a completed
+//! walk populates both L2 and the requesting L1(s); evictions do not
+//! back-invalidate.
+
+pub mod class;
+pub mod mshr;
+pub mod pwc;
+pub mod tlb;
+pub mod walker;
+
+pub use class::TransClass;
+pub use mshr::MshrFile;
+pub use pwc::PwcStack;
+pub use tlb::Tlb;
+pub use walker::WalkerPool;

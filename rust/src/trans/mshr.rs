@@ -1,0 +1,144 @@
+//! Miss Status Holding Registers for the L1 Link TLBs.
+//!
+//! One MSHR file per UALink station (Table 1: 256 entries). An entry
+//! tracks the pending translation of one page plus every request that
+//! arrived for that page while the primary miss is outstanding
+//! (hit-under-miss). When the file is full, new misses stall in a FIFO and
+//! re-try as entries free up — the stall is visible in request latency.
+
+use crate::mem::PageId;
+
+#[derive(Debug)]
+struct Entry {
+    page: PageId,
+    /// Requests coalesced behind the primary miss (request ids).
+    waiters: Vec<u32>,
+}
+
+#[derive(Debug)]
+pub struct MshrFile {
+    capacity: usize,
+    entries: Vec<Entry>,
+    pub peak_occupancy: usize,
+    pub allocations: u64,
+    pub coalesced: u64,
+    pub full_stalls: u64,
+}
+
+pub enum MshrOutcome {
+    /// Allocated a new entry — caller must start the L2 lookup (primary).
+    Allocated,
+    /// Coalesced behind an existing entry (hit-under-miss).
+    Coalesced,
+    /// File full — caller must queue and retry on next release.
+    Full,
+}
+
+impl MshrFile {
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity: capacity as usize,
+            entries: Vec::new(),
+            peak_occupancy: 0,
+            allocations: 0,
+            coalesced: 0,
+            full_stalls: 0,
+        }
+    }
+
+    pub fn occupancy(&self) -> usize {
+        self.entries.len()
+    }
+
+    pub fn is_pending(&self, page: PageId) -> bool {
+        self.entries.iter().any(|e| e.page == page)
+    }
+
+    /// A request missed L1 for `page`. Coalesce or allocate.
+    pub fn lookup_or_alloc(&mut self, page: PageId, req: u32) -> MshrOutcome {
+        if let Some(e) = self.entries.iter_mut().find(|e| e.page == page) {
+            e.waiters.push(req);
+            self.coalesced += 1;
+            return MshrOutcome::Coalesced;
+        }
+        if self.entries.len() >= self.capacity {
+            self.full_stalls += 1;
+            return MshrOutcome::Full;
+        }
+        // The primary request rides in the entry too (index 0), so
+        // `complete` returns every request waiting on the page with the
+        // primary first.
+        self.entries.push(Entry { page, waiters: vec![req] });
+        self.allocations += 1;
+        self.peak_occupancy = self.peak_occupancy.max(self.entries.len());
+        MshrOutcome::Allocated
+    }
+
+    /// Translation for `page` completed: release the entry and return all
+    /// requests (primary first, then coalesced waiters).
+    pub fn complete(&mut self, page: PageId) -> Vec<u32> {
+        let idx = self
+            .entries
+            .iter()
+            .position(|e| e.page == page)
+            .expect("completing a page with no MSHR entry");
+        self.entries.swap_remove(idx).waiters
+    }
+
+    pub fn has_free(&self) -> bool {
+        self.entries.len() < self.capacity
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn allocate_then_coalesce() {
+        let mut m = MshrFile::new(4);
+        assert!(matches!(m.lookup_or_alloc(PageId(1), 100), MshrOutcome::Allocated));
+        assert!(matches!(m.lookup_or_alloc(PageId(1), 101), MshrOutcome::Coalesced));
+        assert!(matches!(m.lookup_or_alloc(PageId(1), 102), MshrOutcome::Coalesced));
+        assert!(m.is_pending(PageId(1)));
+        let waiters = m.complete(PageId(1));
+        assert_eq!(waiters, vec![100, 101, 102], "primary first, then coalesced");
+        assert!(!m.is_pending(PageId(1)));
+        assert_eq!(m.occupancy(), 0);
+        assert_eq!((m.allocations, m.coalesced), (1, 2));
+    }
+
+    #[test]
+    fn full_file_stalls() {
+        let mut m = MshrFile::new(2);
+        assert!(matches!(m.lookup_or_alloc(PageId(1), 0), MshrOutcome::Allocated));
+        assert!(matches!(m.lookup_or_alloc(PageId(2), 1), MshrOutcome::Allocated));
+        assert!(matches!(m.lookup_or_alloc(PageId(3), 2), MshrOutcome::Full));
+        // Coalescing still works when full.
+        assert!(matches!(m.lookup_or_alloc(PageId(2), 3), MshrOutcome::Coalesced));
+        m.complete(PageId(1));
+        assert!(m.has_free());
+        assert!(matches!(m.lookup_or_alloc(PageId(3), 2), MshrOutcome::Allocated));
+        assert_eq!(m.full_stalls, 1);
+    }
+
+    #[test]
+    fn peak_occupancy_tracked() {
+        let mut m = MshrFile::new(8);
+        for p in 0..5 {
+            m.lookup_or_alloc(PageId(p), p as u32);
+        }
+        m.complete(PageId(0));
+        m.complete(PageId(1));
+        assert_eq!(m.peak_occupancy, 5);
+        assert_eq!(m.occupancy(), 3);
+    }
+
+    #[test]
+    #[should_panic(expected = "no MSHR entry")]
+    fn completing_unknown_page_panics() {
+        let mut m = MshrFile::new(2);
+        m.complete(PageId(9));
+    }
+}

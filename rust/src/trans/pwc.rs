@@ -1,0 +1,143 @@
+//! Page-walk caches (PWCs).
+//!
+//! Table 1: one PWC per non-leaf page-table level, sized 16/32/64/128
+//! entries, 2-way, 50 ns. PWC for level *k* caches the physical location
+//! of the level-*k* table indexed by the page's level-*k* prefix: a hit at
+//! level *k* lets the walker skip all accesses above *k* and perform only
+//! *k* remaining memory accesses. Probing is modeled as one parallel
+//! 50 ns lookup across all levels (deepest hit wins), which is how
+//! commercial walkers index their split PWCs.
+
+use crate::mem::PageId;
+use crate::trans::tlb::Tlb;
+
+#[derive(Debug)]
+pub struct PwcStack {
+    /// index 0 => level 1 (leaf's parent) … index n-1 => level n (root-1).
+    caches: Vec<Tlb>,
+    pub probes: u64,
+    pub deepest_hits: Vec<u64>,
+}
+
+impl PwcStack {
+    /// `entries[i]` sizes the PWC for level `i+1`. Table 1's "16,32,64,128"
+    /// lists root-side first; callers pass leaf-parent-side first
+    /// ([128,64,32,16] reversed) — see `from_table1`.
+    pub fn new(entries: &[u32], assoc: u32) -> Self {
+        let caches = entries.iter().map(|&e| Tlb::new(e, assoc)).collect::<Vec<_>>();
+        let n = entries.len();
+        Self { caches, probes: 0, deepest_hits: vec![0; n + 1] }
+    }
+
+    /// Build from the Table-1 ordering (root-side level first: 16,32,64,
+    /// 128 ⇒ level4=16 … level1=128 — lower levels cover more address
+    /// space so they get more entries).
+    pub fn from_table1(entries_root_first: &[u32], assoc: u32) -> Self {
+        let mut rev = entries_root_first.to_vec();
+        rev.reverse();
+        Self::new(&rev, assoc)
+    }
+
+    pub fn levels(&self) -> u32 {
+        self.caches.len() as u32
+    }
+
+    /// Probe all levels for `page`; returns the deepest level with a hit
+    /// (1 = best: only one memory access left), or 0 for a full walk.
+    /// Updates LRU at the hit level only.
+    pub fn probe(&mut self, page: PageId) -> u32 {
+        self.probes += 1;
+        for (i, cache) in self.caches.iter_mut().enumerate() {
+            let level = (i + 1) as u32;
+            if cache.lookup(page.level_prefix(level)) {
+                self.deepest_hits[level as usize] += 1;
+                return level;
+            }
+        }
+        self.deepest_hits[0] += 1;
+        0
+    }
+
+    /// A completed walk resolved every level: fill all PWC levels with the
+    /// prefixes it traversed.
+    pub fn fill_walk(&mut self, page: PageId) {
+        for (i, cache) in self.caches.iter_mut().enumerate() {
+            let level = (i + 1) as u32;
+            cache.fill(page.level_prefix(level));
+        }
+    }
+
+    pub fn flush(&mut self) {
+        for c in &mut self.caches {
+            c.flush();
+        }
+    }
+
+    #[cfg(test)]
+    pub fn contains(&self, level: u32, page: PageId) -> bool {
+        self.caches[(level - 1) as usize].contains(page.level_prefix(level))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn stack() -> PwcStack {
+        PwcStack::from_table1(&[16, 32, 64, 128], 2)
+    }
+
+    #[test]
+    fn table1_ordering_reverses() {
+        let s = stack();
+        assert_eq!(s.levels(), 4);
+        // level 1 (leaf parent) should be the 128-entry cache.
+        assert_eq!(s.caches[0].entries(), 128);
+        assert_eq!(s.caches[3].entries(), 16);
+    }
+
+    #[test]
+    fn cold_probe_misses_filled_probe_hits_deepest() {
+        let mut s = stack();
+        let p = PageId(0x12345);
+        assert_eq!(s.probe(p), 0);
+        s.fill_walk(p);
+        assert_eq!(s.probe(p), 1, "deepest level wins after a full fill");
+    }
+
+    #[test]
+    fn neighbour_page_gets_partial_hit() {
+        let mut s = stack();
+        let a = PageId(100);
+        let b = PageId(101); // same level-1 prefix (both >> 9 == 0)
+        s.fill_walk(a);
+        assert_eq!(s.probe(b), 1, "adjacent pages share the level-1 entry");
+        // A page 512 pages away shares level 2 but not level 1.
+        let c = PageId(100 + 512);
+        assert_eq!(s.probe(c), 2);
+        // A page 512*512 away shares only level 3.
+        let d = PageId(100 + 512 * 512);
+        assert_eq!(s.probe(d), 3);
+    }
+
+    #[test]
+    fn flush_restores_cold_state() {
+        let mut s = stack();
+        s.fill_walk(PageId(5));
+        s.flush();
+        assert_eq!(s.probe(PageId(5)), 0);
+    }
+
+    #[test]
+    fn hit_histogram_tracks_levels() {
+        let mut s = stack();
+        s.fill_walk(PageId(0));
+        s.probe(PageId(1)); // level-1 hit
+        s.probe(PageId(513)); // level-2 hit
+        s.probe(PageId(1 << 40)); // differs at every level incl. root side: miss
+        assert_eq!(s.deepest_hits[1], 1);
+        assert_eq!(s.deepest_hits[2], 1);
+        assert_eq!(s.deepest_hits[0], 1);
+        assert_eq!(s.probes, 3);
+    }
+}

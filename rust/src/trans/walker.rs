@@ -1,0 +1,140 @@
+//! Shared page-table walker pool.
+//!
+//! Table 1: one walker block per GPU shared across all UALink stations,
+//! supporting up to 100 concurrent walks. Walks that arrive while all
+//! walker slots are busy queue FIFO; the pod's event loop calls
+//! `try_start`/`finish` and schedules `WalkDone` events with the latency
+//! the caller computed from the PWC probe.
+
+use crate::mem::PageId;
+use std::collections::VecDeque;
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct QueuedWalk {
+    pub page: PageId,
+    pub gpu: u32,
+    /// Memory accesses this walk needs (from the PWC probe).
+    pub accesses: u32,
+    /// True for §6.2 software-prefetch walks (fill L2 only, no waiters).
+    pub prefetch: bool,
+}
+
+#[derive(Debug)]
+pub struct WalkerPool {
+    capacity: u32,
+    active: u32,
+    queue: VecDeque<QueuedWalk>,
+    pub started: u64,
+    pub queued_total: u64,
+    pub peak_active: u32,
+    pub peak_queue: usize,
+}
+
+impl WalkerPool {
+    pub fn new(capacity: u32) -> Self {
+        assert!(capacity > 0);
+        Self {
+            capacity,
+            active: 0,
+            queue: VecDeque::new(),
+            started: 0,
+            queued_total: 0,
+            peak_active: 0,
+            peak_queue: 0,
+        }
+    }
+
+    pub fn active(&self) -> u32 {
+        self.active
+    }
+
+    pub fn queued(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Try to start a walk now. Returns true if a slot was taken; false if
+    /// it was queued (it will be returned by a later `finish`).
+    pub fn try_start(&mut self, walk: QueuedWalk) -> bool {
+        if self.active < self.capacity {
+            self.active += 1;
+            self.started += 1;
+            self.peak_active = self.peak_active.max(self.active);
+            true
+        } else {
+            self.queue.push_back(walk);
+            self.queued_total += 1;
+            self.peak_queue = self.peak_queue.max(self.queue.len());
+            false
+        }
+    }
+
+    /// A walk finished: free the slot and, if something was queued, start
+    /// it (returns it so the caller can schedule its completion event).
+    pub fn finish(&mut self) -> Option<QueuedWalk> {
+        debug_assert!(self.active > 0, "finish with no active walks");
+        self.active -= 1;
+        if let Some(next) = self.queue.pop_front() {
+            self.active += 1;
+            self.started += 1;
+            Some(next)
+        } else {
+            None
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn walk(p: u64) -> QueuedWalk {
+        QueuedWalk { page: PageId(p), gpu: 0, accesses: 5, prefetch: false }
+    }
+
+    #[test]
+    fn starts_until_capacity_then_queues() {
+        let mut w = WalkerPool::new(2);
+        assert!(w.try_start(walk(1)));
+        assert!(w.try_start(walk(2)));
+        assert!(!w.try_start(walk(3)));
+        assert_eq!(w.active(), 2);
+        assert_eq!(w.queued(), 1);
+    }
+
+    #[test]
+    fn finish_dequeues_fifo() {
+        let mut w = WalkerPool::new(1);
+        assert!(w.try_start(walk(1)));
+        assert!(!w.try_start(walk(2)));
+        assert!(!w.try_start(walk(3)));
+        let next = w.finish().unwrap();
+        assert_eq!(next.page, PageId(2));
+        assert_eq!(w.active(), 1);
+        let next = w.finish().unwrap();
+        assert_eq!(next.page, PageId(3));
+        assert!(w.finish().is_none());
+        assert_eq!(w.active(), 0);
+    }
+
+    #[test]
+    fn conservation_active_plus_queued() {
+        let mut w = WalkerPool::new(3);
+        let mut submitted = 0u32;
+        let mut completed = 0u32;
+        for i in 0..10 {
+            w.try_start(walk(i));
+            submitted += 1;
+        }
+        while w.active() > 0 {
+            if w.finish().is_none() {
+                completed += 1;
+            } else {
+                completed += 1; // finished one, started a queued one
+            }
+        }
+        assert_eq!(completed, submitted);
+        assert_eq!(w.queued(), 0);
+        assert_eq!(w.peak_active, 3);
+        assert_eq!(w.started, 10);
+    }
+}

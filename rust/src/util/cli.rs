@@ -1,0 +1,176 @@
+//! Tiny command-line argument parser (no `clap` in the offline registry).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! subcommands. The binary defines a spec per subcommand; unknown flags are
+//! hard errors so typos don't silently change a sweep.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone)]
+pub struct ArgSpec {
+    pub name: &'static str,
+    pub help: &'static str,
+    /// true => boolean flag, false => takes a value.
+    pub is_flag: bool,
+    pub default: Option<&'static str>,
+}
+
+#[derive(Debug, Default)]
+pub struct Args {
+    pub values: BTreeMap<String, String>,
+    pub flags: BTreeMap<String, bool>,
+    pub positional: Vec<String>,
+}
+
+impl Args {
+    pub fn get(&self, name: &str) -> Option<&str> {
+        self.values.get(name).map(String::as_str)
+    }
+
+    pub fn flag(&self, name: &str) -> bool {
+        self.flags.get(name).copied().unwrap_or(false)
+    }
+
+    pub fn get_u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => v
+                .parse::<u64>()
+                .map(Some)
+                .map_err(|_| anyhow::anyhow!("--{name} expects an integer, got `{v}`")),
+        }
+    }
+
+    pub fn get_bytes(&self, name: &str) -> anyhow::Result<Option<u64>> {
+        match self.get(name) {
+            None => Ok(None),
+            Some(v) => crate::util::units::parse_bytes(v)
+                .map(Some)
+                .ok_or_else(|| anyhow::anyhow!("--{name} expects a size (e.g. 1MiB), got `{v}`")),
+        }
+    }
+
+    /// Comma-separated list value, e.g. `--gpus 8,16,32`.
+    pub fn get_list(&self, name: &str) -> Option<Vec<String>> {
+        self.get(name)
+            .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
+    }
+}
+
+/// Parse `argv` (without the program name) against a spec.
+pub fn parse(argv: &[String], spec: &[ArgSpec]) -> anyhow::Result<Args> {
+    let mut args = Args::default();
+    // Seed defaults.
+    for s in spec {
+        if let Some(d) = s.default {
+            args.values.insert(s.name.to_string(), d.to_string());
+        }
+    }
+    let mut i = 0;
+    while i < argv.len() {
+        let a = &argv[i];
+        if let Some(body) = a.strip_prefix("--") {
+            let (name, inline_val) = match body.split_once('=') {
+                Some((n, v)) => (n, Some(v.to_string())),
+                None => (body, None),
+            };
+            let s = spec
+                .iter()
+                .find(|s| s.name == name)
+                .ok_or_else(|| anyhow::anyhow!("unknown option --{name}"))?;
+            if s.is_flag {
+                if inline_val.is_some() {
+                    anyhow::bail!("--{name} is a flag and takes no value");
+                }
+                args.flags.insert(name.to_string(), true);
+            } else {
+                let val = match inline_val {
+                    Some(v) => v,
+                    None => {
+                        i += 1;
+                        argv.get(i)
+                            .cloned()
+                            .ok_or_else(|| anyhow::anyhow!("--{name} expects a value"))?
+                    }
+                };
+                args.values.insert(name.to_string(), val);
+            }
+        } else {
+            args.positional.push(a.clone());
+        }
+        i += 1;
+    }
+    Ok(args)
+}
+
+/// Render a help string for a subcommand.
+pub fn usage(cmd: &str, about: &str, spec: &[ArgSpec]) -> String {
+    let mut s = format!("{cmd} — {about}\n\noptions:\n");
+    for a in spec {
+        let kind = if a.is_flag { "" } else { " <v>" };
+        let def = a.default.map(|d| format!(" [default: {d}]")).unwrap_or_default();
+        s.push_str(&format!("  --{}{kind}\n      {}{def}\n", a.name, a.help));
+    }
+    s
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn spec() -> Vec<ArgSpec> {
+        vec![
+            ArgSpec { name: "gpus", help: "gpu count", is_flag: false, default: Some("16") },
+            ArgSpec { name: "size", help: "collective size", is_flag: false, default: None },
+            ArgSpec { name: "ideal", help: "zero-RAT config", is_flag: true, default: None },
+        ]
+    }
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    #[test]
+    fn parses_values_flags_positionals() {
+        let a = parse(&argv(&["--gpus", "32", "--ideal", "--size=1MiB", "out.csv"]), &spec())
+            .unwrap();
+        assert_eq!(a.get("gpus"), Some("32"));
+        assert_eq!(a.get("size"), Some("1MiB"));
+        assert!(a.flag("ideal"));
+        assert_eq!(a.positional, vec!["out.csv"]);
+    }
+
+    #[test]
+    fn defaults_apply() {
+        let a = parse(&argv(&[]), &spec()).unwrap();
+        assert_eq!(a.get("gpus"), Some("16"));
+        assert_eq!(a.get("size"), None);
+        assert!(!a.flag("ideal"));
+    }
+
+    #[test]
+    fn unknown_flag_is_error() {
+        assert!(parse(&argv(&["--bogus"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn missing_value_is_error() {
+        assert!(parse(&argv(&["--size"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn flag_with_value_is_error() {
+        assert!(parse(&argv(&["--ideal=yes"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn list_and_numeric_accessors() {
+        let sp = vec![ArgSpec { name: "gpus", help: "", is_flag: false, default: None }];
+        let a = parse(&argv(&["--gpus", "8, 16,32"]), &sp).unwrap();
+        assert_eq!(a.get_list("gpus").unwrap(), vec!["8", "16", "32"]);
+        let a = parse(&argv(&["--gpus", "12"]), &sp).unwrap();
+        assert_eq!(a.get_u64("gpus").unwrap(), Some(12));
+        let a = parse(&argv(&["--gpus", "abc"]), &sp).unwrap();
+        assert!(a.get_u64("gpus").is_err());
+    }
+}

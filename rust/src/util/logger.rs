@@ -1,0 +1,87 @@
+//! Stderr logger backend for the `log` facade.
+//!
+//! Level comes from `RATSIM_LOG` (error|warn|info|debug|trace), default
+//! `info`. Install once from `main`/examples; library code only uses the
+//! `log` macros.
+
+use log::{Level, LevelFilter, Metadata, Record};
+use std::io::Write;
+use std::sync::OnceLock;
+use std::time::Instant;
+
+struct StderrLogger {
+    start: Instant,
+}
+
+static LOGGER: OnceLock<StderrLogger> = OnceLock::new();
+
+impl log::Log for StderrLogger {
+    fn enabled(&self, metadata: &Metadata) -> bool {
+        metadata.level() <= log::max_level()
+    }
+
+    fn log(&self, record: &Record) {
+        if !self.enabled(record.metadata()) {
+            return;
+        }
+        let t = self.start.elapsed().as_secs_f64();
+        let lvl = match record.level() {
+            Level::Error => "ERROR",
+            Level::Warn => "WARN ",
+            Level::Info => "INFO ",
+            Level::Debug => "DEBUG",
+            Level::Trace => "TRACE",
+        };
+        let mut err = std::io::stderr().lock();
+        let _ = writeln!(err, "[{t:9.3}s {lvl} {}] {}", record.target(), record.args());
+    }
+
+    fn flush(&self) {}
+}
+
+/// Parse a level string; unknown strings fall back to Info.
+pub fn parse_level(s: &str) -> LevelFilter {
+    match s.to_ascii_lowercase().as_str() {
+        "off" => LevelFilter::Off,
+        "error" => LevelFilter::Error,
+        "warn" => LevelFilter::Warn,
+        "debug" => LevelFilter::Debug,
+        "trace" => LevelFilter::Trace,
+        _ => LevelFilter::Info,
+    }
+}
+
+/// Install the logger (idempotent).
+pub fn init() {
+    let level = std::env::var("RATSIM_LOG")
+        .map(|v| parse_level(&v))
+        .unwrap_or(LevelFilter::Info);
+    init_with_level(level);
+}
+
+pub fn init_with_level(level: LevelFilter) {
+    let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
+    // set_logger fails if already installed — that's fine (idempotent).
+    let _ = log::set_logger(logger);
+    log::set_max_level(level);
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn level_parsing() {
+        assert_eq!(parse_level("error"), LevelFilter::Error);
+        assert_eq!(parse_level("TRACE"), LevelFilter::Trace);
+        assert_eq!(parse_level("nonsense"), LevelFilter::Info);
+        assert_eq!(parse_level("off"), LevelFilter::Off);
+    }
+
+    #[test]
+    fn init_is_idempotent() {
+        init_with_level(LevelFilter::Warn);
+        init_with_level(LevelFilter::Info);
+        log::info!("logger smoke");
+    }
+}

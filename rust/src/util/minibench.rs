@@ -1,0 +1,204 @@
+//! Micro-benchmark harness (no `criterion` in the offline registry).
+//!
+//! `cargo bench` targets in `benches/` use `harness = false` and drive this
+//! module. It does what we need from criterion: warmup, timed iterations,
+//! mean / stddev / percentiles, and throughput reporting — plus a
+//! machine-readable JSON line per benchmark so EXPERIMENTS.md numbers are
+//! reproducible by grepping bench output.
+
+use crate::util::json::Json;
+use std::time::{Duration, Instant};
+
+#[derive(Debug, Clone)]
+pub struct BenchConfig {
+    pub warmup_iters: u32,
+    pub min_iters: u32,
+    pub max_iters: u32,
+    /// Stop once this much wall time has been spent measuring.
+    pub max_time: Duration,
+}
+
+impl Default for BenchConfig {
+    fn default() -> Self {
+        Self {
+            warmup_iters: 2,
+            min_iters: 5,
+            max_iters: 200,
+            max_time: Duration::from_secs(10),
+        }
+    }
+}
+
+#[derive(Debug, Clone)]
+pub struct BenchResult {
+    pub name: String,
+    pub iters: u32,
+    pub mean: Duration,
+    pub stddev: Duration,
+    pub min: Duration,
+    pub p50: Duration,
+    pub p95: Duration,
+    pub max: Duration,
+    /// Optional items-per-iteration for throughput reporting.
+    pub items: Option<u64>,
+}
+
+impl BenchResult {
+    pub fn throughput(&self) -> Option<f64> {
+        self.items.map(|n| n as f64 / self.mean.as_secs_f64())
+    }
+
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::from_pairs(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("iters", Json::from(self.iters as u64)),
+            ("mean_ns", Json::from(self.mean.as_nanos() as f64)),
+            ("stddev_ns", Json::from(self.stddev.as_nanos() as f64)),
+            ("min_ns", Json::from(self.min.as_nanos() as f64)),
+            ("p50_ns", Json::from(self.p50.as_nanos() as f64)),
+            ("p95_ns", Json::from(self.p95.as_nanos() as f64)),
+            ("max_ns", Json::from(self.max.as_nanos() as f64)),
+        ]);
+        if let Some(tp) = self.throughput() {
+            j.set("items_per_sec", Json::from(tp));
+        }
+        j
+    }
+
+    pub fn report(&self) -> String {
+        let tp = self
+            .throughput()
+            .map(|t| format!("  {:>12.0} items/s", t))
+            .unwrap_or_default();
+        format!(
+            "{:<44} {:>10.3?} ±{:>9.3?}  (n={}, p95={:.3?}){tp}",
+            self.name, self.mean, self.stddev, self.iters, self.p95
+        )
+    }
+}
+
+/// Run one benchmark: `f` is a full iteration (setup outside, please).
+pub fn bench<F: FnMut()>(name: &str, cfg: &BenchConfig, mut f: F) -> BenchResult {
+    bench_with_items(name, cfg, None, &mut f)
+}
+
+/// Like `bench` but reports `items`/iteration throughput.
+pub fn bench_items<F: FnMut()>(name: &str, cfg: &BenchConfig, items: u64, mut f: F) -> BenchResult {
+    bench_with_items(name, cfg, Some(items), &mut f)
+}
+
+fn bench_with_items(
+    name: &str,
+    cfg: &BenchConfig,
+    items: Option<u64>,
+    f: &mut dyn FnMut(),
+) -> BenchResult {
+    for _ in 0..cfg.warmup_iters {
+        f();
+    }
+    let mut samples: Vec<Duration> = Vec::new();
+    let started = Instant::now();
+    while (samples.len() as u32) < cfg.min_iters
+        || ((samples.len() as u32) < cfg.max_iters && started.elapsed() < cfg.max_time)
+    {
+        let t0 = Instant::now();
+        f();
+        samples.push(t0.elapsed());
+    }
+    summarize(name, &mut samples, items)
+}
+
+fn summarize(name: &str, samples: &mut [Duration], items: Option<u64>) -> BenchResult {
+    samples.sort_unstable();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    let mean = total / n as u32;
+    let mean_s = mean.as_secs_f64();
+    let var = samples
+        .iter()
+        .map(|s| {
+            let d = s.as_secs_f64() - mean_s;
+            d * d
+        })
+        .sum::<f64>()
+        / n as f64;
+    let pct = |p: f64| samples[((n as f64 * p) as usize).min(n - 1)];
+    BenchResult {
+        name: name.to_string(),
+        iters: n as u32,
+        mean,
+        stddev: Duration::from_secs_f64(var.sqrt()),
+        min: samples[0],
+        p50: pct(0.50),
+        p95: pct(0.95),
+        max: samples[n - 1],
+        items,
+    }
+}
+
+/// Pretty header used by every bench binary.
+pub fn print_header(title: &str) {
+    println!("\n=== {title} ===");
+}
+
+/// Print result line + a `BENCHJSON` machine line.
+pub fn print_result(r: &BenchResult) {
+    println!("{}", r.report());
+    println!("BENCHJSON {}", r.to_json().to_string_compact());
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn runs_and_summarizes() {
+        let cfg = BenchConfig {
+            warmup_iters: 1,
+            min_iters: 5,
+            max_iters: 10,
+            max_time: Duration::from_millis(200),
+        };
+        let mut counter = 0u64;
+        let r = bench("spin", &cfg, || {
+            for i in 0..10_000u64 {
+                counter = counter.wrapping_add(i);
+            }
+        });
+        assert!(r.iters >= 5);
+        assert!(r.mean >= r.min && r.mean <= r.max.max(r.mean));
+        assert!(r.p50 <= r.p95);
+    }
+
+    #[test]
+    fn throughput_reported() {
+        let cfg = BenchConfig {
+            warmup_iters: 0,
+            min_iters: 3,
+            max_iters: 3,
+            max_time: Duration::from_secs(1),
+        };
+        let r = bench_items("tp", &cfg, 1000, || {
+            std::hint::black_box((0..1000u64).sum::<u64>());
+        });
+        assert!(r.throughput().unwrap() > 0.0);
+        let j = r.to_json();
+        assert!(j.get("items_per_sec").is_some());
+    }
+
+    #[test]
+    fn summary_percentiles_ordered() {
+        let mut samples = vec![
+            Duration::from_nanos(10),
+            Duration::from_nanos(30),
+            Duration::from_nanos(20),
+            Duration::from_nanos(40),
+            Duration::from_nanos(50),
+        ];
+        let r = summarize("s", &mut samples, None);
+        assert_eq!(r.min, Duration::from_nanos(10));
+        assert_eq!(r.max, Duration::from_nanos(50));
+        assert_eq!(r.p50, Duration::from_nanos(30));
+        assert_eq!(r.mean, Duration::from_nanos(30));
+    }
+}

@@ -1,0 +1,12 @@
+//! Foundational substrates built from scratch (the offline crate registry
+//! only carries `xla`, `anyhow`, `thiserror`, `log`): JSON codec, CLI
+//! parser, deterministic RNG, logger, micro-benchmark harness, and a
+//! property-testing mini-framework.
+
+pub mod cli;
+pub mod json;
+pub mod logger;
+pub mod minibench;
+pub mod proptest;
+pub mod rng;
+pub mod units;

@@ -1,0 +1,205 @@
+//! Property-based testing mini-framework (no `proptest` offline).
+//!
+//! Provides seeded generators and a `check` runner with linear input
+//! shrinking: on failure it retries with progressively "smaller" inputs
+//! produced by the strategy's `shrink` and reports the smallest failing
+//! case plus the seed to reproduce. Used across the simulator's invariant
+//! tests (TLB/LRU behaviour, event ordering, routing, conservation laws).
+
+use crate::util::rng::Rng;
+use std::fmt::Debug;
+
+/// A strategy produces random values and can propose smaller variants.
+pub trait Strategy {
+    type Value: Clone + Debug;
+    fn generate(&self, rng: &mut Rng) -> Self::Value;
+    /// Candidate shrinks, ordered most-aggressive first. Default: none.
+    fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
+        Vec::new()
+    }
+}
+
+/// Run `cases` random cases of `prop` over `strat`. Panics with the
+/// smallest failing input found.
+pub fn check<S: Strategy>(name: &str, strat: &S, cases: u32, prop: impl Fn(&S::Value) -> bool) {
+    let seed = std::env::var("RATSIM_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0xDEC0DE);
+    let mut rng = Rng::new(seed);
+    for case in 0..cases {
+        let v = strat.generate(&mut rng);
+        if !prop(&v) {
+            let minimal = shrink_failure(strat, v, &prop);
+            panic!(
+                "property `{name}` failed (case {case}, seed {seed}).\n\
+                 minimal failing input: {minimal:?}\n\
+                 reproduce with RATSIM_PROP_SEED={seed}"
+            );
+        }
+    }
+}
+
+fn shrink_failure<S: Strategy>(
+    strat: &S,
+    mut failing: S::Value,
+    prop: &impl Fn(&S::Value) -> bool,
+) -> S::Value {
+    // Greedy descent: keep taking the first shrink candidate that still
+    // fails, up to a budget.
+    let mut budget = 1000;
+    'outer: while budget > 0 {
+        for cand in strat.shrink(&failing) {
+            budget -= 1;
+            if !prop(&cand) {
+                failing = cand;
+                continue 'outer;
+            }
+            if budget == 0 {
+                break;
+            }
+        }
+        break;
+    }
+    failing
+}
+
+// ---------- stock strategies ----------
+
+/// Uniform u64 in [lo, hi].
+pub struct RangeU64 {
+    pub lo: u64,
+    pub hi: u64,
+}
+
+impl Strategy for RangeU64 {
+    type Value = u64;
+    fn generate(&self, rng: &mut Rng) -> u64 {
+        self.lo + rng.gen_range(self.hi - self.lo + 1)
+    }
+    fn shrink(&self, v: &u64) -> Vec<u64> {
+        let mut out = Vec::new();
+        if *v > self.lo {
+            out.push(self.lo);
+            out.push(self.lo + (v - self.lo) / 2);
+            out.push(v - 1);
+        }
+        out.dedup();
+        out
+    }
+}
+
+/// Vec of values from an element strategy, length in [0, max_len].
+pub struct VecOf<S> {
+    pub elem: S,
+    pub max_len: usize,
+}
+
+impl<S: Strategy> Strategy for VecOf<S> {
+    type Value = Vec<S::Value>;
+    fn generate(&self, rng: &mut Rng) -> Vec<S::Value> {
+        let len = rng.index(self.max_len + 1);
+        (0..len).map(|_| self.elem.generate(rng)).collect()
+    }
+    fn shrink(&self, v: &Vec<S::Value>) -> Vec<Vec<S::Value>> {
+        let mut out = Vec::new();
+        if v.is_empty() {
+            return out;
+        }
+        // Halve, drop one element, shrink one element.
+        out.push(v[..v.len() / 2].to_vec());
+        if v.len() > 1 {
+            let mut t = v.clone();
+            t.pop();
+            out.push(t);
+            let mut h = v.clone();
+            h.remove(0);
+            out.push(h);
+        }
+        for cand in self.elem.shrink(&v[0]) {
+            let mut t = v.clone();
+            t[0] = cand;
+            out.push(t);
+        }
+        out
+    }
+}
+
+/// Pair of independent strategies.
+pub struct PairOf<A, B>(pub A, pub B);
+
+impl<A: Strategy, B: Strategy> Strategy for PairOf<A, B> {
+    type Value = (A::Value, B::Value);
+    fn generate(&self, rng: &mut Rng) -> Self::Value {
+        (self.0.generate(rng), self.1.generate(rng))
+    }
+    fn shrink(&self, v: &Self::Value) -> Vec<Self::Value> {
+        let mut out: Vec<Self::Value> =
+            self.0.shrink(&v.0).into_iter().map(|a| (a, v.1.clone())).collect();
+        out.extend(self.1.shrink(&v.1).into_iter().map(|b| (v.0.clone(), b)));
+        out
+    }
+}
+
+/// Choose uniformly from a fixed set.
+pub struct OneOf<T: Clone + Debug>(pub Vec<T>);
+
+impl<T: Clone + Debug> Strategy for OneOf<T> {
+    type Value = T;
+    fn generate(&self, rng: &mut Rng) -> T {
+        rng.choose(&self.0).clone()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_passes() {
+        check("sum-commutes", &PairOf(RangeU64 { lo: 0, hi: 1000 }, RangeU64 { lo: 0, hi: 1000 }), 200, |(a, b)| {
+            a + b == b + a
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property `always-false` failed")]
+    fn failing_property_panics() {
+        check("always-false", &RangeU64 { lo: 0, hi: 10 }, 10, |_| false);
+    }
+
+    #[test]
+    fn shrinking_finds_boundary() {
+        // Property "v < 500" fails for v >= 500; the shrinker should walk
+        // failures down toward 500.
+        let strat = RangeU64 { lo: 0, hi: 10_000 };
+        let failing = 9_731u64;
+        let minimal = shrink_failure(&strat, failing, &|v: &u64| *v < 500);
+        assert!(minimal >= 500, "shrunk input must still fail");
+        assert!(minimal <= failing);
+        assert!(minimal < 1200, "expected descent toward the boundary, got {minimal}");
+    }
+
+    #[test]
+    fn vec_strategy_respects_max_len_and_shrinks() {
+        let strat = VecOf { elem: RangeU64 { lo: 0, hi: 9 }, max_len: 16 };
+        let mut rng = Rng::new(1);
+        for _ in 0..100 {
+            let v = strat.generate(&mut rng);
+            assert!(v.len() <= 16);
+            assert!(v.iter().all(|&x| x <= 9));
+        }
+        let shr = strat.shrink(&vec![5, 6, 7, 8]);
+        assert!(shr.iter().any(|s| s.len() < 4));
+    }
+
+    #[test]
+    fn one_of_only_yields_members() {
+        let strat = OneOf(vec!["a", "b", "c"]);
+        let mut rng = Rng::new(2);
+        for _ in 0..50 {
+            let v = strat.generate(&mut rng);
+            assert!(["a", "b", "c"].contains(&v));
+        }
+    }
+}

@@ -1,0 +1,161 @@
+//! Time and byte units.
+//!
+//! Simulated time is an integer count of **picoseconds** (`Time`). The
+//! finest-grained physical quantity in the model is the serialization time
+//! of one byte on a 200 Gbps lane (= 40 ps at x1, 10 ps at x4), so integer
+//! picoseconds represent every delay in Table 1 exactly and keep the
+//! simulator bit-deterministic (no float accumulation on the hot path).
+
+/// Simulated time in picoseconds.
+pub type Time = u64;
+
+pub const PS: Time = 1;
+pub const NS: Time = 1_000;
+pub const US: Time = 1_000_000;
+pub const MS: Time = 1_000_000_000;
+pub const SEC: Time = 1_000_000_000_000;
+
+/// Convert nanoseconds (as in Table 1) to `Time`.
+#[inline]
+pub const fn ns(v: u64) -> Time {
+    v * NS
+}
+
+/// Convert microseconds to `Time`.
+#[inline]
+pub const fn us(v: u64) -> Time {
+    v * US
+}
+
+/// `Time` to fractional nanoseconds (for reporting only).
+#[inline]
+pub fn to_ns(t: Time) -> f64 {
+    t as f64 / NS as f64
+}
+
+/// `Time` to fractional microseconds (for reporting only).
+#[inline]
+pub fn to_us(t: Time) -> f64 {
+    t as f64 / US as f64
+}
+
+pub const KIB: u64 = 1 << 10;
+pub const MIB: u64 = 1 << 20;
+pub const GIB: u64 = 1 << 30;
+
+/// Serialization delay of `bytes` at `gbps` (decimal gigabits/second),
+/// rounded up to the next picosecond. 800 Gbps = 100 GB/s = 10 ps/byte.
+#[inline]
+pub fn ser_time(bytes: u64, gbps: u64) -> Time {
+    // ps = bytes * 8 bits / (gbps * 1e9 b/s) * 1e12 ps/s = bytes * 8000 / gbps
+    (bytes * 8_000).div_ceil(gbps)
+}
+
+/// Human-readable byte size ("64KiB", "1GiB", "1.5MiB").
+pub fn fmt_bytes(b: u64) -> String {
+    if b >= GIB && b % GIB == 0 {
+        format!("{}GiB", b / GIB)
+    } else if b >= MIB && b % MIB == 0 {
+        format!("{}MiB", b / MIB)
+    } else if b >= KIB && b % KIB == 0 {
+        format!("{}KiB", b / KIB)
+    } else if b >= MIB {
+        format!("{:.1}MiB", b as f64 / MIB as f64)
+    } else {
+        format!("{b}B")
+    }
+}
+
+/// Parse "1MiB", "4GB", "256MB", "64KB", "512" (plain bytes).
+/// Decimal suffixes (KB/MB/GB) are treated as binary, matching the paper's
+/// loose usage ("1MB collective" = 2^20 bytes).
+pub fn parse_bytes(s: &str) -> Option<u64> {
+    let s = s.trim();
+    let lower = s.to_ascii_lowercase();
+    let (num, mult) = if let Some(p) = lower.strip_suffix("gib").or(lower.strip_suffix("gb")) {
+        (p, GIB)
+    } else if let Some(p) = lower.strip_suffix("mib").or(lower.strip_suffix("mb")) {
+        (p, MIB)
+    } else if let Some(p) = lower.strip_suffix("kib").or(lower.strip_suffix("kb")) {
+        (p, KIB)
+    } else if let Some(p) = lower.strip_suffix('g') {
+        (p, GIB)
+    } else if let Some(p) = lower.strip_suffix('m') {
+        (p, MIB)
+    } else if let Some(p) = lower.strip_suffix('k') {
+        (p, KIB)
+    } else if let Some(p) = lower.strip_suffix('b') {
+        (p, 1)
+    } else {
+        (lower.as_str(), 1)
+    };
+    let num = num.trim();
+    if let Ok(v) = num.parse::<u64>() {
+        return Some(v * mult);
+    }
+    num.parse::<f64>().ok().map(|f| (f * mult as f64) as u64)
+}
+
+/// Human-readable time ("1.23us", "450ns").
+pub fn fmt_time(t: Time) -> String {
+    if t >= SEC {
+        format!("{:.3}s", t as f64 / SEC as f64)
+    } else if t >= MS {
+        format!("{:.3}ms", t as f64 / MS as f64)
+    } else if t >= US {
+        format!("{:.3}us", t as f64 / US as f64)
+    } else if t >= NS {
+        format!("{:.2}ns", t as f64 / NS as f64)
+    } else {
+        format!("{t}ps")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn serialization_times_match_table1_rates() {
+        // 800 Gbps cumulative link bandwidth: 256B -> 2.56ns.
+        assert_eq!(ser_time(256, 800), 2_560);
+        // One byte on a 200 Gbps lane: 40ps.
+        assert_eq!(ser_time(1, 200), 40);
+        // Rounds up.
+        assert_eq!(ser_time(1, 3), 2_667);
+    }
+
+    #[test]
+    fn byte_parse_roundtrip() {
+        assert_eq!(parse_bytes("1MiB"), Some(MIB));
+        assert_eq!(parse_bytes("1MB"), Some(MIB));
+        assert_eq!(parse_bytes("4GB"), Some(4 * GIB));
+        assert_eq!(parse_bytes("64kb"), Some(64 * KIB));
+        assert_eq!(parse_bytes("512"), Some(512));
+        assert_eq!(parse_bytes("256b"), Some(256));
+        assert_eq!(parse_bytes("1.5m"), Some(3 * MIB / 2));
+        assert_eq!(parse_bytes("x"), None);
+    }
+
+    #[test]
+    fn fmt_bytes_picks_natural_unit() {
+        assert_eq!(fmt_bytes(MIB), "1MiB");
+        assert_eq!(fmt_bytes(4 * GIB), "4GiB");
+        assert_eq!(fmt_bytes(64 * KIB), "64KiB");
+        assert_eq!(fmt_bytes(100), "100B");
+    }
+
+    #[test]
+    fn fmt_time_scales() {
+        assert_eq!(fmt_time(ns(120)), "120.00ns");
+        assert_eq!(fmt_time(us(3)), "3.000us");
+        assert_eq!(fmt_time(500), "500ps");
+    }
+
+    #[test]
+    fn time_constants_consistent() {
+        assert_eq!(ns(1000), US);
+        assert_eq!(us(1000), MS);
+        assert_eq!(to_ns(NS), 1.0);
+    }
+}

@@ -1,0 +1,233 @@
+//! Cross-module integration tests: whole-pod simulations exercising the
+//! config system, collective generators, network, translation hierarchy
+//! and stats together. Heavier invariants than the per-module unit tests.
+
+use ratsim::collective::{generators, mscclang};
+use ratsim::config::presets::{paper_baseline, paper_ideal, quick_test};
+use ratsim::config::{CollectiveKind, PodConfig, RequestSizing};
+use ratsim::pod;
+use ratsim::util::units::{GIB, MIB};
+
+fn tiny(gpus: u32, size: u64) -> PodConfig {
+    let mut c = quick_test(gpus, size);
+    c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 8_000 };
+    c
+}
+
+#[test]
+fn overhead_monotonically_amortizes_with_size() {
+    // §4.1: the RAT overhead ratio decays as collective size grows.
+    let mut ratios = Vec::new();
+    for size in [MIB, 8 * MIB, 64 * MIB] {
+        let b = pod::run(&tiny(8, size)).unwrap();
+        let mut ic = tiny(8, size);
+        ic.trans.enabled = false;
+        let i = pod::run(&ic).unwrap();
+        ratios.push(b.completion as f64 / i.completion as f64);
+    }
+    assert!(ratios[0] > ratios[1] && ratios[1] >= ratios[2], "ratios not decaying: {ratios:?}");
+    // 8-GPU pods see a milder penalty than 16-GPU ones (shorter
+    // serialization window per pair hides less of the walk at 16).
+    assert!(ratios[0] > 1.05, "1MiB overhead too small: {}", ratios[0]);
+}
+
+#[test]
+fn mean_rat_latency_decays_with_size() {
+    // §4.2 / Fig 5.
+    let small = pod::run(&tiny(16, MIB)).unwrap();
+    let large = pod::run(&tiny(16, 64 * MIB)).unwrap();
+    assert!(
+        small.mean_rat_ns() > 4.0 * large.mean_rat_ns(),
+        "cold-dominated small collectives must have much higher per-request RAT: {} vs {}",
+        small.mean_rat_ns(),
+        large.mean_rat_ns()
+    );
+}
+
+#[test]
+fn translation_working_set_tracks_gpu_count() {
+    // §4.4: the destination's *translated* working set is exactly the
+    // inter-node sources' regions — intra-node traffic is SPA-addressed
+    // and never walks (§2.3). With 4 GPUs/node, gpus-4 sources are
+    // inter-node, each contributing chunk/page pages.
+    for gpus in [8u32, 16] {
+        let s = pod::run(&tiny(gpus, 64 * MIB)).unwrap();
+        let chunk_pages = (64 * MIB / gpus as u64 / (2 * MIB)) as usize;
+        let expected = chunk_pages * (gpus as usize - 4);
+        assert_eq!(
+            s.max_touched_pages, expected,
+            "{gpus} GPUs: touched {} != inter-node working set {expected}",
+            s.max_touched_pages
+        );
+    }
+}
+
+#[test]
+fn l2_sizing_insight_fig11() {
+    // §4.5: shrinking L2 below the working set hurts; growing it beyond
+    // the per-GPU stream count doesn't help.
+    let run_with_l2 = |entries: u32| {
+        let mut c = tiny(16, 16 * MIB);
+        c.trans.l2.entries = entries;
+        pod::run(&c).unwrap().completion
+    };
+    let small = run_with_l2(16);
+    let fits = run_with_l2(32);
+    let huge = run_with_l2(32768);
+    let rel = |a: u64, b: u64| (a as f64 - b as f64).abs() / b as f64;
+    assert!(
+        rel(fits, huge) < 0.02,
+        "32-entry L2 should match 32768-entry: {fits} vs {huge}"
+    );
+    assert!(small >= fits, "undersized L2 cannot be faster");
+}
+
+#[test]
+fn custom_schedule_roundtrips_through_json_and_runs() {
+    // MSCCLang-style flow: synthesize → export JSON → import → simulate.
+    let sched = generators::alltoall_allpairs(8, MIB).unwrap();
+    let dir = std::env::temp_dir().join("ratsim-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("a2a.json");
+    mscclang::save(&sched, &path).unwrap();
+    let loaded = mscclang::load(&path).unwrap();
+    let stats = pod::run_schedule(&tiny(8, MIB), loaded).unwrap();
+    assert!(stats.completion > 0);
+    // Identical to generating directly.
+    let direct = pod::run_schedule(&tiny(8, MIB), sched).unwrap();
+    assert_eq!(stats.completion, direct.completion);
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn collectives_have_expected_relative_cost() {
+    let mut cfg = tiny(8, 4 * MIB);
+    cfg.workload.collective = CollectiveKind::AllToAll;
+    let a2a = pod::run(&cfg).unwrap();
+    cfg.workload.collective = CollectiveKind::AllGather;
+    let ag = pod::run(&cfg).unwrap();
+    cfg.workload.collective = CollectiveKind::AllReduceRing;
+    let ar = pod::run(&cfg).unwrap();
+    // Direct AG and A2A move the same volume concurrently — within 25%.
+    let rel = (a2a.completion as f64 - ag.completion as f64).abs() / ag.completion as f64;
+    assert!(rel < 0.25, "A2A vs AG mismatch: {} vs {}", a2a.completion, ag.completion);
+    // Ring is serialized into 2(N-1) dependent phases: much slower.
+    assert!(ar.completion > 3 * ag.completion);
+}
+
+#[test]
+fn config_json_roundtrip_preserves_simulation() {
+    let cfg = tiny(8, MIB);
+    let dir = std::env::temp_dir().join("ratsim-integration");
+    std::fs::create_dir_all(&dir).unwrap();
+    let path = dir.join("cfg.json");
+    cfg.save(&path).unwrap();
+    let loaded = PodConfig::load(&path).unwrap();
+    assert_eq!(
+        pod::run(&cfg).unwrap().completion,
+        pod::run(&loaded).unwrap().completion
+    );
+    std::fs::remove_file(path).ok();
+}
+
+#[test]
+fn seeds_change_page_tables_not_results_shape() {
+    let mut a = tiny(8, MIB);
+    a.seed = 1;
+    let mut b = tiny(8, MIB);
+    b.seed = 2;
+    let ra = pod::run(&a).unwrap();
+    let rb = pod::run(&b).unwrap();
+    // The schedule is deterministic, so timing is identical; only the SPA
+    // scatter differs (not visible in timing for this model).
+    assert_eq!(ra.requests, rb.requests);
+    assert_eq!(ra.completion, rb.completion);
+}
+
+#[test]
+fn intra_node_only_pod_has_zero_rat() {
+    // 4 GPUs on one node: all SPA traffic.
+    let s = pod::run(&tiny(4, MIB)).unwrap();
+    assert_eq!(s.internode_requests, 0);
+    assert_eq!(s.breakdown.translation, 0);
+    assert_eq!(s.classes.intra_node, s.requests);
+}
+
+#[test]
+fn pretranslate_capped_pages_partial_benefit() {
+    // §6.1 with a budget: warming only the first page per pair helps less
+    // than warming everything but more than nothing.
+    let size = 32 * MIB;
+    let cold = pod::run(&tiny(8, size)).unwrap();
+    let mut one = tiny(8, size);
+    one.trans.pretranslate.enabled = true;
+    one.trans.pretranslate.pages_per_pair = 1;
+    let one_page = pod::run(&one).unwrap();
+    let mut all = tiny(8, size);
+    all.trans.pretranslate.enabled = true;
+    all.trans.pretranslate.pages_per_pair = 0;
+    let all_pages = pod::run(&all).unwrap();
+    assert!(one_page.completion <= cold.completion);
+    assert!(all_pages.completion <= one_page.completion);
+    assert!(all_pages.pretranslated_pages > one_page.pretranslated_pages);
+}
+
+#[test]
+fn fixed_request_sizing_respected() {
+    let mut c = tiny(8, MIB);
+    c.workload.request_sizing = RequestSizing::Fixed(1024);
+    assert_eq!(c.request_bytes(), 1024);
+    let s = pod::run(&c).unwrap();
+    // 8 GPUs × 7 dsts × (1MiB/8 / 1KiB) requests
+    assert_eq!(s.requests, 8 * 7 * (MIB / 8) / 1024);
+}
+
+#[test]
+fn four_gib_collective_is_simulable() {
+    // The paper's largest size: auto-coarsening keeps this tractable.
+    let mut c = quick_test(8, 4 * GIB);
+    c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 50_000 };
+    let s = pod::run(&c).unwrap();
+    assert!(s.completion > 0);
+    // Auto-coarsening caps at 32 KiB requests (>= 64 per 2 MiB page), so
+    // 28 GiB of traffic becomes ~917k requests — tractable, not millions.
+    assert!(s.requests <= 1_000_000);
+    // Large collectives amortize: RAT is a tiny fraction (§4.1).
+    assert!(s.rat_fraction() < 0.02, "rat fraction {}", s.rat_fraction());
+}
+
+#[test]
+fn second_iteration_runs_warm() {
+    // §4: warm-up dominates. A second back-to-back All-to-All (TLBs warm)
+    // must cost nearly the ideal iteration, unlike the cold first.
+    let cfg = tiny(16, MIB);
+    let sched = generators::alltoall_allpairs(16, MIB).unwrap();
+    let once = pod::run_schedule(&cfg, sched.repeat(1)).unwrap();
+    let twice = pod::run_schedule(&cfg, sched.repeat(2)).unwrap();
+    let mut icfg = cfg.clone();
+    icfg.trans.enabled = false;
+    let ideal = pod::run(&icfg).unwrap();
+    let cold = once.completion as f64;
+    let warm = twice.completion as f64 - cold;
+    let ideal_t = ideal.completion as f64;
+    assert!(cold / ideal_t > 1.15, "cold iteration should carry the RAT penalty");
+    assert!(
+        warm / ideal_t < 1.10,
+        "warm iteration should be near-ideal: warm={warm} ideal={ideal_t}"
+    );
+    // No new walks in iteration 2: walk count identical to a single run.
+    assert_eq!(twice.walks_started, once.walks_started);
+}
+
+#[test]
+fn paper_presets_run_at_full_fidelity_1mib() {
+    // Full Table-1 fidelity for the headline cell (256 B requests).
+    let b = pod::run(&paper_baseline(16, MIB)).unwrap();
+    let i = pod::run(&paper_ideal(16, MIB)).unwrap();
+    let ratio = b.completion as f64 / i.completion as f64;
+    assert!((1.15..=1.6).contains(&ratio), "headline overhead {ratio:.3} out of band");
+    // Fig 6: ~30% of RTT in translation at 1 MiB.
+    assert!((0.15..=0.45).contains(&b.rat_fraction()), "rat fraction {}", b.rat_fraction());
+    // Fig 7: L1-MSHR hits dominate.
+    assert!(b.classes.fig7_fractions()[1] > 0.80);
+}

@@ -1,0 +1,103 @@
+//! Cross-language contract tests: the AOT artifacts produced by
+//! python/compile/aot.py execute through PJRT from Rust and reproduce the
+//! golden outputs computed by JAX.
+//!
+//! These tests are skipped (with a loud message) when `artifacts/` is
+//! absent — run `make artifacts` first. CI runs them via `make test`.
+
+use ratsim::runtime::{ArtifactManifest, PjrtRuntime};
+use ratsim::util::json::Json;
+use std::path::Path;
+
+fn artifacts_dir() -> Option<&'static Path> {
+    let dir = Path::new("artifacts");
+    if dir.join("manifest.json").exists() {
+        Some(dir)
+    } else {
+        eprintln!("SKIP: artifacts/ missing — run `make artifacts`");
+        None
+    }
+}
+
+#[test]
+fn manifest_loads_and_lists_both_artifacts() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = ArtifactManifest::load(dir).unwrap();
+    assert!(m.find("moe_layer").is_some());
+    assert!(m.find("page_schedule").is_some());
+    for a in &m.artifacts {
+        assert!(m.hlo_path(a).exists(), "missing {}", a.file);
+        assert_eq!(a.input_shapes.len(), a.input_dtypes.len());
+    }
+}
+
+#[test]
+fn moe_layer_matches_jax_golden() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = ArtifactManifest::load(dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let exe = rt
+        .compile_file(m.find("moe_layer").unwrap(), &m.hlo_path(m.find("moe_layer").unwrap()))
+        .unwrap();
+
+    let golden = Json::parse(&std::fs::read_to_string(dir.join("golden.json")).unwrap())
+        .unwrap();
+    let case = golden.get("moe_layer").unwrap();
+    let to_vec = |j: &Json| -> Vec<f32> {
+        j.as_arr().unwrap().iter().map(|v| v.as_f64().unwrap() as f32).collect()
+    };
+    let inputs: Vec<Vec<f32>> =
+        case.get("inputs").unwrap().as_arr().unwrap().iter().map(to_vec).collect();
+    let want: Vec<Vec<f32>> =
+        case.get("outputs").unwrap().as_arr().unwrap().iter().map(to_vec).collect();
+
+    let got = exe.run_f32(&inputs).unwrap();
+    assert_eq!(got.len(), want.len());
+    for (o, (g, w)) in got.iter().zip(want.iter()).enumerate() {
+        assert_eq!(g.len(), w.len(), "output {o} length");
+        for (i, (a, b)) in g.iter().zip(w.iter()).enumerate() {
+            assert!(
+                (a - b).abs() <= 1e-4 + 1e-4 * b.abs(),
+                "output {o}[{i}]: rust/PJRT {a} vs jax {b}"
+            );
+        }
+    }
+}
+
+#[test]
+fn page_schedule_kernel_runs_from_rust() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = ArtifactManifest::load(dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let spec = m.find("page_schedule").unwrap();
+    let exe = rt.compile_file(spec, &m.hlo_path(spec)).unwrap();
+
+    let n = spec.input_shapes[0][0];
+    // Streams of 1 MiB at 1 MiB strides inside 2 MiB pages: stream i
+    // touches exactly page i/2.
+    let mib = (1u64 << 20) as f32;
+    let bases: Vec<f32> = (0..n).map(|i| i as f32 * mib).collect();
+    let lens: Vec<f32> = vec![mib; n];
+    let out = exe.run_f32(&[bases, lens]).unwrap();
+    assert_eq!(out.len(), 1);
+    let sched = &out[0];
+    assert_eq!(sched.len(), n * 8);
+    for i in 0..n {
+        let row = &sched[i * 8..(i + 1) * 8];
+        assert_eq!(row[0], (i / 2) as f32, "stream {i} first page");
+        assert!(row[1..].iter().all(|&p| p == -1.0), "stream {i} spans one page");
+    }
+}
+
+#[test]
+fn shape_mismatch_is_rejected() {
+    let Some(dir) = artifacts_dir() else { return };
+    let m = ArtifactManifest::load(dir).unwrap();
+    let rt = PjrtRuntime::cpu().unwrap();
+    let spec = m.find("page_schedule").unwrap();
+    let exe = rt.compile_file(spec, &m.hlo_path(spec)).unwrap();
+    // Wrong arity.
+    assert!(exe.run_f32(&[vec![0.0]]).is_err());
+    // Wrong element count.
+    assert!(exe.run_f32(&[vec![0.0; 3], vec![0.0; 3]]).is_err());
+}
