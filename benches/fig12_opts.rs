@@ -1,0 +1,8 @@
+//! Regenerates Fig 12 (§6 translation hiding: sw-guided prefetch + fused
+//! pre-translation vs baseline/ideal, with hint counters).
+mod bench_common;
+use ratsim::harness::fig12_opts;
+
+fn main() {
+    bench_common::run_figure("fig12_opts", fig12_opts);
+}

@@ -53,6 +53,7 @@ pub fn paper_baseline(gpus: u32, size_bytes: u64) -> PodConfig {
             walk_fabric_ns: 120,
             prefetch: PrefetchConfig { enabled: false, depth: 1 },
             pretranslate: PretranslateConfig { enabled: false, pages_per_pair: 0 },
+            prefetch_policy: PrefetchPolicy::Off,
         },
         workload: WorkloadConfig {
             collective: CollectiveKind::AllToAll,

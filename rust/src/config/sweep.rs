@@ -5,7 +5,7 @@
 //! coordinator fans grid points out to worker threads.
 
 use super::presets::{paper_baseline, paper_ideal};
-use super::types::PodConfig;
+use super::types::{PodConfig, PrefetchPolicy};
 use crate::util::units::{fmt_bytes, GIB, MIB};
 
 /// A labelled config transformer (e.g. "l2=64" or "prefetch").
@@ -88,6 +88,38 @@ impl SweepGrid {
         SweepGrid { points }
     }
 
+    /// The §6 translation-hiding ablation grid (Fig 12): baseline vs the
+    /// free-warmup pre-translation model vs software-guided hint streams
+    /// vs fused pre-translation, each normalized against the paired ideal.
+    ///
+    /// Variant names are stable (CSV/figure contracts): `baseline`,
+    /// `pretranslate`, `prefetch` (SwGuided), `fused`, `ideal`.
+    pub fn optimization_ablation(gpu_counts: &[u32], sizes: &[u64]) -> SweepGrid {
+        let variants: Vec<(String, Box<dyn Fn(&mut PodConfig)>)> = vec![
+            ("baseline".to_string(), Box::new(|_c: &mut PodConfig| {})),
+            (
+                "pretranslate".to_string(),
+                Box::new(|c: &mut PodConfig| {
+                    c.trans.pretranslate.enabled = true;
+                    c.trans.pretranslate.pages_per_pair = 0;
+                }),
+            ),
+            (
+                "prefetch".to_string(),
+                Box::new(|c: &mut PodConfig| {
+                    c.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+                }),
+            ),
+            (
+                "fused".to_string(),
+                Box::new(|c: &mut PodConfig| {
+                    c.trans.prefetch_policy = PrefetchPolicy::Fused;
+                }),
+            ),
+        ];
+        Self::with_variants(gpu_counts, sizes, &variants, true)
+    }
+
     pub fn len(&self) -> usize {
         self.points.len()
     }
@@ -141,6 +173,32 @@ mod tests {
         let p = g.points.iter().find(|p| p.variant == "l2-16").unwrap();
         assert_eq!(p.config.trans.l2.entries, 16);
         assert!(g.points.iter().any(|p| p.variant == "ideal"));
+    }
+
+    #[test]
+    fn optimization_ablation_grid_shape() {
+        let g = SweepGrid::optimization_ablation(&[16], &[MIB, 16 * MIB]);
+        // 4 optimization variants + 1 ideal, per size.
+        assert_eq!(g.len(), 2 * 5);
+        for p in &g.points {
+            p.config.validate().unwrap();
+            match p.variant.as_str() {
+                "baseline" => {
+                    assert!(p.config.trans.prefetch_policy.is_off());
+                    assert!(!p.config.trans.pretranslate.enabled);
+                }
+                "pretranslate" => assert!(p.config.trans.pretranslate.enabled),
+                "prefetch" => assert!(matches!(
+                    p.config.trans.prefetch_policy,
+                    PrefetchPolicy::SwGuided { .. }
+                )),
+                "fused" => {
+                    assert_eq!(p.config.trans.prefetch_policy, PrefetchPolicy::Fused)
+                }
+                "ideal" => assert!(!p.config.trans.enabled),
+                other => panic!("unexpected variant {other}"),
+            }
+        }
     }
 
     #[test]

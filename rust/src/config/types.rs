@@ -130,6 +130,10 @@ pub struct TransConfig {
     pub prefetch: PrefetchConfig,
     /// §6.1 fused pre-translation kernel warmup.
     pub pretranslate: PretranslateConfig,
+    /// Schedule-driven translation hiding with real walker contention
+    /// (`trans::prefetch`): software-guided hint streams or fused
+    /// pre-translation at op start.
+    pub prefetch_policy: PrefetchPolicy,
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -137,6 +141,65 @@ pub struct PrefetchConfig {
     pub enabled: bool,
     /// How many pages ahead of the current stream position to prefetch.
     pub depth: u32,
+}
+
+/// Schedule-driven translation-hiding policy (§6, `trans::prefetch`).
+///
+/// Orthogonal to the reactive next-page stride prefetcher
+/// ([`PrefetchConfig`]) and to the free-warmup pre-translation model
+/// ([`PretranslateConfig`]): these policies issue *hint walks* that
+/// contend for the real walker/MSHR/L2 bandwidth of the target GPU.
+///
+/// * `SwGuided` — the MSCCLang-style schedule exposes every upcoming
+///   destination page; the runtime emits per-GPU hint streams that warm
+///   the Link TLBs `lead_ps` ahead of each page's estimated first packet
+///   arrival, with at most `rate` hint walks in flight per GPU.
+/// * `Fused` — fused pre-translation kernels: the compute phase preceding
+///   each op issues hint walks for the op's whole receive window the
+///   moment the op becomes runnable, overlapping walk latency with the
+///   packets' network flight time (no pacing).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PrefetchPolicy {
+    Off,
+    SwGuided {
+        /// How far ahead of a page's estimated first-arrival time its
+        /// hint walk is issued, ps.
+        lead_ps: u64,
+        /// Max hint walks in flight per GPU (software pacing; hints past
+        /// the cap queue and reissue as earlier hints complete).
+        rate: u32,
+    },
+    Fused,
+}
+
+impl PrefetchPolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            PrefetchPolicy::Off => "off",
+            PrefetchPolicy::SwGuided { .. } => "sw-guided",
+            PrefetchPolicy::Fused => "fused",
+        }
+    }
+
+    pub fn is_off(&self) -> bool {
+        matches!(self, PrefetchPolicy::Off)
+    }
+
+    /// Hint walks in flight allowed per GPU (0 when off).
+    pub fn max_in_flight(&self) -> u32 {
+        match self {
+            PrefetchPolicy::Off => 0,
+            PrefetchPolicy::SwGuided { rate, .. } => (*rate).max(1),
+            PrefetchPolicy::Fused => u32::MAX,
+        }
+    }
+
+    /// The default software-guided configuration used by sweeps/CLI:
+    /// 2 µs lead (ample for the ~1 µs pod flight time) and 16 hint walks
+    /// in flight per GPU.
+    pub fn sw_guided_default() -> PrefetchPolicy {
+        PrefetchPolicy::SwGuided { lead_ps: units::us(2), rate: 16 }
+    }
 }
 
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -275,6 +338,11 @@ impl PodConfig {
             if self.trans.l1_mshrs == 0 {
                 bail!("need at least one L1 MSHR");
             }
+            if let PrefetchPolicy::SwGuided { rate, .. } = self.trans.prefetch_policy {
+                if rate == 0 {
+                    bail!("sw-guided prefetch rate must be > 0");
+                }
+            }
         }
         if self.workload.size_bytes == 0 {
             bail!("collective size must be > 0");
@@ -375,6 +443,22 @@ impl PodConfig {
                                 Json::from(self.trans.pretranslate.pages_per_pair as u64),
                             ),
                         ]),
+                    ),
+                    (
+                        "prefetch_policy",
+                        match self.trans.prefetch_policy {
+                            PrefetchPolicy::Off => {
+                                Json::from_pairs(vec![("mode", Json::from("off"))])
+                            }
+                            PrefetchPolicy::SwGuided { lead_ps, rate } => Json::from_pairs(vec![
+                                ("mode", Json::from("sw-guided")),
+                                ("lead_ps", Json::from(lead_ps)),
+                                ("rate", Json::from(rate as u64)),
+                            ]),
+                            PrefetchPolicy::Fused => {
+                                Json::from_pairs(vec![("mode", Json::from("fused"))])
+                            }
+                        },
                     ),
                 ]),
             ),
@@ -485,6 +569,20 @@ impl PodConfig {
                         pages_per_pair: p.opt_u64("pages_per_pair", 0) as u32,
                     }
                 },
+                // Optional for backward compatibility with pre-policy
+                // config files: absent ⇒ Off.
+                prefetch_policy: match trans.get("prefetch_policy") {
+                    None => PrefetchPolicy::Off,
+                    Some(p) => match p.req_str("mode")? {
+                        "off" => PrefetchPolicy::Off,
+                        "sw-guided" => PrefetchPolicy::SwGuided {
+                            lead_ps: p.opt_u64("lead_ps", units::us(2)),
+                            rate: p.opt_u64("rate", 16) as u32,
+                        },
+                        "fused" => PrefetchPolicy::Fused,
+                        other => bail!("unknown prefetch_policy mode `{other}`"),
+                    },
+                },
             },
             workload: WorkloadConfig {
                 collective: CollectiveKind::parse(wl.req_str("collective")?)?,
@@ -532,6 +630,39 @@ mod tests {
         // And through text.
         let j2 = Json::parse(&j.to_string_pretty()).unwrap();
         assert_eq!(PodConfig::from_json(&j2).unwrap(), cfg);
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_prefetch_policy() {
+        for policy in [
+            PrefetchPolicy::Off,
+            PrefetchPolicy::SwGuided { lead_ps: 1_234_567, rate: 3 },
+            PrefetchPolicy::Fused,
+        ] {
+            let mut cfg = paper_baseline(16, MIB);
+            cfg.trans.prefetch_policy = policy;
+            let back = PodConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.trans.prefetch_policy, policy);
+            assert_eq!(back, cfg);
+        }
+        // Configs written before the policy existed still load (⇒ Off).
+        let mut j = paper_baseline(16, MIB).to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(t)) = o.get_mut("trans") {
+                t.remove("prefetch_policy");
+            }
+        }
+        let back = PodConfig::from_json(&j).unwrap();
+        assert!(back.trans.prefetch_policy.is_off());
+    }
+
+    #[test]
+    fn sw_guided_zero_rate_rejected() {
+        let mut c = paper_baseline(16, MIB);
+        c.trans.prefetch_policy = PrefetchPolicy::SwGuided { lead_ps: 0, rate: 0 };
+        assert!(c.validate().is_err());
+        c.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+        c.validate().unwrap();
     }
 
     #[test]

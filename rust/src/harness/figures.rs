@@ -63,6 +63,24 @@ pub fn main_sweep(opts: &FigOpts) -> Result<Vec<SweepResult>> {
     run_grid(&grid)
 }
 
+/// Ideal completion (ns) per collective size — the normalization map the
+/// single-pod-size figures (11, 12, §6 ablation) divide by.
+fn ideal_ns_by_size(results: &[SweepResult]) -> BTreeMap<u64, f64> {
+    let mut m = BTreeMap::new();
+    for r in results {
+        if r.point.variant == "ideal" {
+            m.insert(r.point.size_bytes, to_ns(r.stats.completion));
+        }
+    }
+    m
+}
+
+/// Demand-initiated walks: the primary misses that went past the L2
+/// (partial or full walks), excluding prefetch-initiated walks.
+fn data_walks(c: &crate::trans::class::ClassCounts) -> u64 {
+    c.prim_full_walk + c.prim_pwc_hit.iter().sum::<u64>()
+}
+
 fn pair_up(results: &[SweepResult]) -> BTreeMap<(u32, u64), (f64, f64, &SweepResult)> {
     // (gpus, size) -> (baseline_ns, ideal_ns, baseline result)
     let mut base: BTreeMap<(u32, u64), &SweepResult> = BTreeMap::new();
@@ -292,12 +310,7 @@ pub fn fig11(opts: &FigOpts) -> Result<Table> {
         points.push(SweepPoint { gpus, size_bytes: size, variant: "ideal".into(), config: ideal });
     }
     let results = run_points(&points)?;
-    let mut ideal_ns: BTreeMap<u64, f64> = BTreeMap::new();
-    for r in &results {
-        if r.point.variant == "ideal" {
-            ideal_ns.insert(r.point.size_bytes, to_ns(r.stats.completion));
-        }
-    }
+    let ideal_ns = ideal_ns_by_size(&results);
     let mut t = Table::new(
         "Fig 11 — L2-TLB size sweep (32 GPUs, overhead vs ideal)",
         &["size", "l2_entries", "overhead_x", "mean_rat_ns", "touched_pages"],
@@ -350,12 +363,7 @@ pub fn ablation(opts: &FigOpts) -> Result<Table> {
         points.push(SweepPoint { gpus, size_bytes: size, variant: "ideal".into(), config: ideal });
     }
     let results = run_points(&points)?;
-    let mut ideal_ns: BTreeMap<u64, f64> = BTreeMap::new();
-    for r in &results {
-        if r.point.variant == "ideal" {
-            ideal_ns.insert(r.point.size_bytes, to_ns(r.stats.completion));
-        }
-    }
+    let ideal_ns = ideal_ns_by_size(&results);
     let mut t = Table::new(
         "§6 ablation — pre-translation & software TLB prefetch (16 GPUs)",
         &["size", "variant", "overhead_x", "mean_rat_ns", "data_walks", "prefetch_walks"],
@@ -365,18 +373,72 @@ pub fn ablation(opts: &FigOpts) -> Result<Table> {
             continue;
         }
         let i = ideal_ns[&r.point.size_bytes];
-        let c = &r.stats.classes;
-        let data_walks = c.prim_full_walk + c.prim_pwc_hit.iter().sum::<u64>();
         t.push(vec![
             fmt_bytes(r.point.size_bytes),
             r.point.variant.clone(),
             format!("{:.3}", to_ns(r.stats.completion) / i),
             format!("{:.1}", r.stats.mean_rat_ns()),
-            data_walks.to_string(),
+            data_walks(&r.stats.classes).to_string(),
             r.stats.prefetch_walks.to_string(),
         ]);
     }
     t.save_csv(&opts.out_dir, "ablation_optimizations")?;
+    Ok(t)
+}
+
+/// Fig 12 (§6): the translation-hiding optimization ablation — baseline
+/// vs free-warmup pre-translation vs software-guided Link-TLB prefetch
+/// vs fused pre-translation, normalized to the ideal, with the per-variant
+/// hint counters (issued/useful/late/useless) that show *why* each policy
+/// wins or stops winning. The paper's qualitative claim reproduced here:
+/// the largest relative gains land on small (cold-miss-dominated)
+/// collectives; large collectives amortize the walks and see diminishing
+/// returns.
+pub fn fig12_opts(opts: &FigOpts) -> Result<Table> {
+    let gpus = 16;
+    let sizes = if opts.quick {
+        vec![MIB, 16 * MIB]
+    } else {
+        vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB, 256 * MIB]
+    };
+    let mut grid = crate::config::SweepGrid::optimization_ablation(&[gpus], &sizes);
+    for p in &mut grid.points {
+        opts.tune(&mut p.config);
+    }
+    let results = run_grid(&grid)?;
+    let ideal_ns = ideal_ns_by_size(&results);
+    let mut t = Table::new(
+        "Fig 12 — §6 translation hiding: prefetch & fused pre-translation (16 GPUs)",
+        &[
+            "size",
+            "variant",
+            "overhead_x",
+            "mean_rat_ns",
+            "data_walks",
+            "pf_issued",
+            "pf_useful",
+            "pf_late",
+            "pf_useless",
+        ],
+    );
+    for r in &results {
+        if r.point.variant == "ideal" {
+            continue;
+        }
+        let i = ideal_ns[&r.point.size_bytes];
+        t.push(vec![
+            fmt_bytes(r.point.size_bytes),
+            r.point.variant.clone(),
+            format!("{:.3}", to_ns(r.stats.completion) / i),
+            format!("{:.1}", r.stats.mean_rat_ns()),
+            data_walks(&r.stats.classes).to_string(),
+            r.stats.prefetch_issued.to_string(),
+            r.stats.prefetch_useful.to_string(),
+            r.stats.prefetch_late.to_string(),
+            r.stats.prefetch_useless.to_string(),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "fig12_opts")?;
     Ok(t)
 }
 
@@ -504,8 +566,8 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
-    "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "ablation",
-    "design", "warmup",
+    "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
+    "ablation", "design", "warmup",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -541,6 +603,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     }
     if want("fig11") {
         fig11(opts)?.print();
+    }
+    if want("fig12") {
+        fig12_opts(opts)?.print();
     }
     if want("ablation") {
         ablation(opts)?.print();

@@ -14,8 +14,10 @@
 //! * [`pod`] — the full pod simulation tying the above together;
 //! * [`coordinator`] — parallel sweep driver (leader/worker);
 //! * [`harness`] — regenerates every figure in the paper's evaluation;
-//! * [`runtime`] — PJRT executor for the AOT-compiled JAX/Pallas
-//!   artifacts (the MoE workload of the end-to-end example).
+//! * `runtime` — PJRT executor for the AOT-compiled JAX/Pallas
+//!   artifacts (the MoE workload of the end-to-end example). Gated behind
+//!   the off-by-default `pjrt` cargo feature: it needs the `xla` crate,
+//!   which is unavailable in offline registries.
 
 pub mod collective;
 pub mod config;
@@ -25,6 +27,7 @@ pub mod harness;
 pub mod mem;
 pub mod net;
 pub mod pod;
+#[cfg(feature = "pjrt")]
 pub mod runtime;
 pub mod sim;
 pub mod stats;

@@ -10,7 +10,7 @@
 use anyhow::Result;
 use ratsim::collective;
 use ratsim::config::presets::{paper_baseline, paper_ideal};
-use ratsim::config::{CollectiveKind, PodConfig, RequestSizing, SweepGrid};
+use ratsim::config::{CollectiveKind, PodConfig, PrefetchPolicy, RequestSizing, SweepGrid};
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
 use ratsim::util::cli::{parse, usage, ArgSpec, Args};
@@ -53,9 +53,11 @@ fn print_help() {
     println!(
         "ratsim {} — Reverse Address Translation simulator for UALink scale-up pods\n\n\
          subcommands:\n\
-         \x20 run       simulate one collective (--gpus, --size, --collective, --ideal, ...)\n\
-         \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB)\n\
-         \x20 figures   regenerate paper figures (--only fig4,fig11 --quick --out results)\n\
+         \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
+         \x20           --prefetch-policy sw-guided|fused, ...)\n\
+         \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB);\n\
+         \x20           --opts for the §6 optimization ablation\n\
+         \x20 figures   regenerate paper figures (--only fig4,fig12 --quick --out results)\n\
          \x20 schedule  export a schedule JSON (--collective a2a --gpus 8 --size 1MiB --out s.json)\n\
          \x20 config    dump/validate configs (--dump base.json | --check cfg.json)\n",
         ratsim::VERSION
@@ -74,6 +76,9 @@ fn common_run_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "l2-entries", help: "override L2 Link-TLB entries", is_flag: false, default: None },
         ArgSpec { name: "pretranslate", help: "enable §6.1 fused pre-translation warmup", is_flag: true, default: None },
         ArgSpec { name: "prefetch", help: "enable §6.2 software TLB prefetching", is_flag: true, default: None },
+        ArgSpec { name: "prefetch-policy", help: "translation hiding: off | sw-guided | fused", is_flag: false, default: None },
+        ArgSpec { name: "prefetch-lead-ns", help: "sw-guided hint lead time, ns (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
+        ArgSpec { name: "prefetch-rate", help: "sw-guided hint walks in flight per GPU (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
         ArgSpec { name: "trace-gpu", help: "record per-request RAT trace for this source GPU", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
         ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
@@ -111,6 +116,35 @@ fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
     if a.flag("prefetch") {
         cfg.trans.prefetch.enabled = true;
     }
+    if let Some(policy) = a.get("prefetch-policy") {
+        cfg.trans.prefetch_policy = match policy {
+            // Defaults come from the library preset (one source of truth).
+            "off" => PrefetchPolicy::Off,
+            "sw-guided" | "sw" => PrefetchPolicy::sw_guided_default(),
+            "fused" => PrefetchPolicy::Fused,
+            other => anyhow::bail!("unknown prefetch policy `{other}` (off|sw-guided|fused)"),
+        };
+    }
+    // Pacing knobs tune whatever sw-guided policy is in effect (from
+    // --prefetch-policy or a loaded config); reject them otherwise rather
+    // than silently ignoring them.
+    let lead = a.get_u64("prefetch-lead-ns")?;
+    let rate = a.get_u64("prefetch-rate")?;
+    if lead.is_some() || rate.is_some() {
+        if let PrefetchPolicy::SwGuided { lead_ps, rate: r } = &mut cfg.trans.prefetch_policy {
+            if let Some(l) = lead {
+                *lead_ps = ratsim::util::units::ns(l);
+            }
+            if let Some(n) = rate {
+                *r = n as u32;
+            }
+        } else {
+            anyhow::bail!(
+                "--prefetch-lead-ns/--prefetch-rate require a sw-guided prefetch policy \
+                 (pass --prefetch-policy sw-guided)"
+            );
+        }
+    }
     if let Some(g) = a.get_u64("trace-gpu")? {
         cfg.workload.trace_source_gpu = Some(g as u32);
     }
@@ -140,6 +174,16 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             "  translation outcomes: l1-hit {:.1}% | mshr-hit {:.1}% | l2-hit {:.1}% | l2-hum {:.1}% | pwc {:.1}% | walk {:.1}%",
             100.0 * c[0], 100.0 * c[1], 100.0 * c[2], 100.0 * c[3], 100.0 * c[4], 100.0 * c[5]
         );
+        if stats.prefetch_issued > 0 || stats.prefetch_useless > 0 {
+            println!(
+                "  prefetch hints: issued {} | useful {} | late {} | useless {} | deferred {}",
+                stats.prefetch_issued,
+                stats.prefetch_useful,
+                stats.prefetch_late,
+                stats.prefetch_useless,
+                stats.prefetch_deferred
+            );
+        }
     }
     Ok(())
 }
@@ -149,12 +193,13 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         ArgSpec { name: "gpus", help: "comma-separated pod sizes", is_flag: false, default: Some("8,16,32,64") },
         ArgSpec { name: "sizes", help: "comma-separated collective sizes", is_flag: false, default: Some("1MiB,4MiB,16MiB,64MiB") },
         ArgSpec { name: "requests", help: "auto request-sizing target", is_flag: false, default: None },
+        ArgSpec { name: "opts", help: "§6 optimization ablation grid (baseline/pretranslate/prefetch/fused/ideal)", is_flag: true, default: None },
         ArgSpec { name: "csv", help: "write results CSV here", is_flag: false, default: None },
         ArgSpec { name: "help", help: "show help", is_flag: true, default: None },
     ];
     let a = parse(argv, &spec)?;
     if a.flag("help") {
-        println!("{}", usage("sweep", "baseline-vs-ideal grid", &spec));
+        println!("{}", usage("sweep", "baseline-vs-ideal or optimization-ablation grid", &spec));
         return Ok(());
     }
     let gpus: Vec<u32> = a
@@ -169,16 +214,35 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .iter()
         .map(|s| parse_bytes(s).ok_or_else(|| anyhow::anyhow!("bad size `{s}`")))
         .collect::<Result<_>>()?;
-    let mut grid = SweepGrid::baseline_vs_ideal(&gpus, &sizes);
+    let mut grid = if a.flag("opts") {
+        SweepGrid::optimization_ablation(&gpus, &sizes)
+    } else {
+        SweepGrid::baseline_vs_ideal(&gpus, &sizes)
+    };
     if let Some(n) = a.get_u64("requests")? {
         for p in &mut grid.points {
             p.config.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
         }
     }
     let results = coordinator::run_grid(&grid)?;
+    let title = if a.flag("opts") {
+        "sweep — §6 optimization ablation"
+    } else {
+        "sweep — baseline vs ideal"
+    };
     let mut table = ratsim::harness::Table::new(
-        "sweep — baseline vs ideal",
-        &["gpus", "size", "variant", "completion_ns", "mean_rat_ns", "rat_frac"],
+        title,
+        &[
+            "gpus",
+            "size",
+            "variant",
+            "completion_ns",
+            "mean_rat_ns",
+            "rat_frac",
+            "pf_issued",
+            "pf_useful",
+            "pf_late",
+        ],
     );
     for r in &results {
         table.push(vec![
@@ -188,6 +252,9 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
             format!("{:.0}", ratsim::util::units::to_ns(r.stats.completion)),
             format!("{:.1}", r.stats.mean_rat_ns()),
             format!("{:.3}", r.stats.rat_fraction()),
+            r.stats.prefetch_issued.to_string(),
+            r.stats.prefetch_useful.to_string(),
+            r.stats.prefetch_late.to_string(),
         ]);
     }
     table.print();

@@ -16,7 +16,12 @@ use std::collections::{HashMap, VecDeque};
 #[derive(Debug)]
 pub struct WalkRec {
     pub stations: Vec<(u32, PrimaryOutcome)>,
+    /// Walk initiated by a prefetcher (stride or hint), not a demand miss.
     pub prefetch: bool,
+    /// For schedule-driven hint walks (`trans::prefetch`): the rail whose
+    /// stream the hint belongs to. Its L1 is warmed on completion, and the
+    /// walk is accounted useful/late against the hint counters.
+    pub hint_rail: Option<u32>,
 }
 
 #[derive(Debug)]

@@ -2,7 +2,7 @@
 
 use super::mmu::{GpuMmu, WalkRec};
 use crate::collective::{generators, Schedule};
-use crate::config::PodConfig;
+use crate::config::{PodConfig, PrefetchPolicy};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{NetResources, Topology};
@@ -10,6 +10,7 @@ use crate::sim::Engine;
 use crate::stats::RunStats;
 use crate::trans::class::{PrimaryOutcome, TransClass};
 use crate::trans::mshr::MshrOutcome;
+use crate::trans::prefetch::{Hint, Prefetcher};
 use crate::trans::walker::QueuedWalk;
 use crate::util::units::Time;
 use anyhow::Result;
@@ -38,6 +39,13 @@ enum Ev {
     AckSwitchOut { req: u32 },
     /// ACK reached the source WG.
     AckArrive { req: u32 },
+    /// A schedule-driven translation hint became due at (gpu, page) for
+    /// the stream arriving on `rail` (`trans::prefetch`).
+    PrefetchIssue { gpu: u32, page: u64, rail: u32 },
+    /// A prefetch-initiated walk (hint or next-page stride) completed at
+    /// (gpu, page). Shares the walk-completion path with `WalkDone`; the
+    /// distinct event keeps the prefetch pipeline visible in traces.
+    PrefetchDone { gpu: u32, page: u64 },
 }
 
 /// In-flight request state (slab-allocated, recycled on completion).
@@ -74,6 +82,8 @@ pub struct PodSim {
     issue_seq: Vec<u64>,
     total_requests: u64,
     acked: u64,
+    /// §6 schedule-driven translation-hiding state (hint pacing/stats).
+    prefetcher: Prefetcher,
     stats: RunStats,
     // cached timing constants (ps)
     t_fabric: Time,
@@ -82,6 +92,23 @@ pub struct PodSim {
     t_l2: Time,
     t_pwc: Time,
     t_walk_mem: Time,
+}
+
+/// The completion event for a walk: prefetch-initiated walks (hint or
+/// stride) resolve via `PrefetchDone`, demand walks via `WalkDone`.
+fn completion_ev(prefetch: bool, gpu: u32, page: PageId) -> Ev {
+    if prefetch {
+        Ev::PrefetchDone { gpu, page: page.0 }
+    } else {
+        Ev::WalkDone { gpu, page: page.0 }
+    }
+}
+
+/// Is `page` already covered at this GPU — outside the receive window,
+/// resident in the L2, or being walked? (Shared by the hint and stride
+/// prefetch admission paths.)
+fn page_covered(mmu: &GpuMmu, page: PageId) -> bool {
+    page.0 > mmu.max_page || mmu.l2.contains(page.0) || mmu.pending_walks.contains_key(&page)
 }
 
 /// Run the configured collective and return its stats.
@@ -135,8 +162,11 @@ impl PodSim {
             .collect();
         let total_requests = wgs.iter().map(|w| w.total_requests()).sum();
 
-        let mut stats = RunStats::default();
-        stats.config_name = cfg.name.clone();
+        let stats = RunStats { config_name: cfg.name.clone(), ..RunStats::default() };
+        // Hint walks only exist where reverse translation does.
+        let policy =
+            if cfg.trans.enabled { cfg.trans.prefetch_policy } else { PrefetchPolicy::Off };
+        let prefetcher = Prefetcher::new(policy, cfg.gpus);
 
         let t_fabric = crate::util::units::ns(cfg.gpu.local_fabric_ns);
         let t_hbm = crate::util::units::ns(cfg.gpu.hbm_ns);
@@ -168,6 +198,7 @@ impl PodSim {
             issue_seq: vec![0; topo.gpus as usize],
             total_requests,
             acked: 0,
+            prefetcher,
             stats,
             t_fabric,
             t_hbm,
@@ -238,6 +269,16 @@ impl PodSim {
         for wg in &self.wgs {
             assert_eq!(wg.state, WgState::Done, "op {} incomplete", wg.op.id);
         }
+        assert_eq!(self.prefetcher.in_flight_total(), 0, "hint walks leaked");
+        assert_eq!(self.prefetcher.backlog_total(), 0, "deferred hints never reissued");
+        let pf = self.prefetcher.counters;
+        assert_eq!(pf.issued, pf.useful + pf.late, "hint walk accounting out of balance");
+        self.stats.prefetch_issued = pf.issued;
+        self.stats.prefetch_useful = pf.useful;
+        self.stats.prefetch_late = pf.late;
+        self.stats.prefetch_useless = pf.useless;
+        self.stats.prefetch_deferred = pf.deferred;
+        self.stats.l2_fills = self.mmus.iter().map(|m| m.l2.stats.fills).sum();
         self.stats.events = self.engine.processed();
         self.stats.requests = self.total_requests;
         self.stats.walks_started = self.mmus.iter().map(|m| m.walkers.started).sum();
@@ -269,6 +310,10 @@ impl PodSim {
             Ev::HbmDone { req } => self.on_hbm_done(now, req),
             Ev::AckSwitchOut { req } => self.on_ack_switch_out(now, req),
             Ev::AckArrive { req } => self.on_ack_arrive(now, req),
+            Ev::PrefetchIssue { gpu, page, rail } => {
+                self.admit_hint(now, gpu, Hint { page: PageId(page), rail })
+            }
+            Ev::PrefetchDone { gpu, page } => self.on_walk_done(now, gpu, page),
         }
     }
 
@@ -276,6 +321,9 @@ impl PodSim {
         if self.wgs[wg as usize].state == WgState::Blocked {
             self.wgs[wg as usize].start();
         }
+        // §6: the schedule exposes this op's receive window — emit its
+        // hint stream now (WgStart fires exactly once per op).
+        self.plan_hints(now, wg);
         // A WG issues one store per CU cycle — pace the initial window so
         // a 256-deep burst doesn't materialize in a single picosecond.
         let cycle = 1_000_000 / self.cfg.gpu.cu_clock_mhz as u64; // ps
@@ -309,6 +357,84 @@ impl PodSim {
         };
         let rid = self.alloc(req);
         self.engine.schedule_at(now + self.t_fabric, Ev::StationTx { req: rid });
+    }
+
+    /// Schedule `PrefetchIssue` events for one op's upcoming pages
+    /// (no-op for intra-node ops — SPA traffic never translates).
+    fn plan_hints(&mut self, now: Time, wg: u32) {
+        if !self.prefetcher.enabled() {
+            return;
+        }
+        let op = self.wgs[wg as usize].op;
+        if !self.cfg.is_internode(op.src, op.dst) {
+            return;
+        }
+        let rail = self.topo.rail(op.src, op.dst);
+        for (delay, h) in self.prefetcher.plan_op(&self.cfg, rail, &op) {
+            self.engine.schedule_at(
+                now + delay,
+                Ev::PrefetchIssue { gpu: op.dst, page: h.page.0, rail: h.rail },
+            );
+        }
+    }
+
+    /// A hint became due: drop it if the page is already covered, defer it
+    /// past the rate cap, else start its walk on the real walker pool.
+    fn admit_hint(&mut self, now: Time, gpu: u32, hint: Hint) {
+        let page = hint.page;
+        if page_covered(&self.mmus[gpu as usize], page) {
+            self.prefetcher.counters.useless += 1;
+            // Keep the deferred queue draining even when reissued hints
+            // die here: a free slot means no completion event will come
+            // along to pop the next one.
+            if self.prefetcher.has_slot(gpu) {
+                self.reissue_next_deferred(now, gpu);
+            }
+            return;
+        }
+        if !self.prefetcher.has_slot(gpu) {
+            self.prefetcher.defer(gpu, hint);
+            return;
+        }
+        self.prefetcher.start(gpu);
+        self.start_walk(now, gpu, page, |_| WalkRec {
+            stations: Vec::new(),
+            prefetch: true,
+            hint_rail: Some(hint.rail),
+        });
+    }
+
+    /// Put the oldest deferred hint (if any) back on the event stream —
+    /// called whenever a hint slot frees up.
+    fn reissue_next_deferred(&mut self, now: Time, gpu: u32) {
+        if let Some(h) = self.prefetcher.next_deferred(gpu) {
+            self.engine.schedule_at(now, Ev::PrefetchIssue { gpu, page: h.page.0, rail: h.rail });
+        }
+    }
+
+    /// Register `page`'s walk record (built from the deepest PWC hit) and
+    /// start — or queue — its walk. The single place that decides which
+    /// completion event a walk gets: `PrefetchDone` for prefetch-initiated
+    /// walks, `WalkDone` for demand walks. Queued walks are scheduled by a
+    /// later `finish` with the same rule.
+    fn start_walk(&mut self, at: Time, gpu: u32, page: PageId, rec: impl FnOnce(u32) -> WalkRec) {
+        let (prefetch, started) = {
+            let mmu = &mut self.mmus[gpu as usize];
+            let deepest = mmu.pwc.probe(page);
+            let accesses = mmu.page_table.accesses_for_walk(deepest);
+            let rec = rec(deepest);
+            let prefetch = rec.prefetch;
+            mmu.pending_walks.insert(page, rec);
+            if mmu.walkers.try_start(QueuedWalk { page, gpu, accesses, prefetch }) {
+                (prefetch, Some(accesses))
+            } else {
+                (prefetch, None) // queued; scheduled by a later `finish`
+            }
+        };
+        if let Some(accesses) = started {
+            let latency = self.walk_latency(accesses);
+            self.engine.schedule_at(at + latency, completion_ev(prefetch, gpu, page));
+        }
     }
 
     fn alloc(&mut self, r: Request) -> u32 {
@@ -400,21 +526,14 @@ impl PodSim {
             return;
         }
         // Start a walk: split-PWC probe, then the remaining levels in HBM.
-        let deepest = mmu.pwc.probe(page);
-        let accesses = mmu.page_table.accesses_for_walk(deepest);
-        let outcome = if deepest > 0 {
-            PrimaryOutcome::PwcHit(deepest)
-        } else {
-            PrimaryOutcome::FullWalk
-        };
-        mmu.pending_walks
-            .insert(page, WalkRec { stations: vec![(station, outcome)], prefetch: false });
-        let walk = QueuedWalk { page, gpu, accesses, prefetch: false };
-        if mmu.walkers.try_start(walk) {
-            let latency = self.walk_latency(accesses);
-            self.engine.schedule_at(decision + latency, Ev::WalkDone { gpu, page: page.0 });
-        }
-        // else: queued; scheduled by a later `finish`.
+        self.start_walk(decision, gpu, page, |deepest| {
+            let outcome = if deepest > 0 {
+                PrimaryOutcome::PwcHit(deepest)
+            } else {
+                PrimaryOutcome::FullWalk
+            };
+            WalkRec { stations: vec![(station, outcome)], prefetch: false, hint_rail: None }
+        });
     }
 
     #[inline]
@@ -422,6 +541,7 @@ impl PodSim {
         self.t_pwc + accesses as u64 * self.t_walk_mem
     }
 
+    /// Shared walk-completion path (`WalkDone` and `PrefetchDone`).
     fn on_walk_done(&mut self, now: Time, gpu: u32, page: u64) {
         let page = PageId(page);
         let rec = self.mmus[gpu as usize]
@@ -434,9 +554,20 @@ impl PodSim {
             mmu.page_table.resolve(page);
             mmu.pwc.fill_walk(page);
             mmu.l2.fill(page.0);
+            // Schedule-driven hints know the arrival rail — warm its
+            // private L1 so the stream's first packets hit there.
+            if let Some(rail) = rec.hint_rail {
+                mmu.l1[rail as usize].fill(page.0);
+            }
         }
         if rec.prefetch {
             self.stats.prefetch_walks += 1;
+        }
+        if rec.hint_rail.is_some() {
+            // Fully hidden iff no demand request attached while in flight.
+            self.prefetcher.complete(gpu, rec.stations.is_empty());
+            // The freed slot unparks the oldest deferred hint, if any.
+            self.reissue_next_deferred(now, gpu);
         }
         for &(station, outcome) in &rec.stations {
             self.complete_station(now, gpu, station, page, outcome);
@@ -445,7 +576,7 @@ impl PodSim {
         if let Some(next) = self.mmus[gpu as usize].walkers.finish() {
             let latency = self.walk_latency(next.accesses);
             self.engine
-                .schedule_at(now + latency, Ev::WalkDone { gpu: next.gpu, page: next.page.0 });
+                .schedule_at(now + latency, completion_ev(next.prefetch, next.gpu, next.page));
         }
         // §6.2 software-guided next-page prefetch.
         if self.cfg.trans.prefetch.enabled && !rec.prefetch {
@@ -457,21 +588,14 @@ impl PodSim {
     }
 
     fn maybe_prefetch(&mut self, now: Time, gpu: u32, page: PageId) {
-        let mmu = &mut self.mmus[gpu as usize];
-        if page.0 > mmu.max_page
-            || mmu.l2.contains(page.0)
-            || mmu.pending_walks.contains_key(&page)
-        {
+        if page_covered(&self.mmus[gpu as usize], page) {
             return;
         }
-        let deepest = mmu.pwc.probe(page);
-        let accesses = mmu.page_table.accesses_for_walk(deepest);
-        mmu.pending_walks.insert(page, WalkRec { stations: Vec::new(), prefetch: true });
-        let walk = QueuedWalk { page, gpu, accesses, prefetch: true };
-        if mmu.walkers.try_start(walk) {
-            let latency = self.walk_latency(accesses);
-            self.engine.schedule_at(now + latency, Ev::WalkDone { gpu, page: page.0 });
-        }
+        self.start_walk(now, gpu, page, |_| WalkRec {
+            stations: Vec::new(),
+            prefetch: true,
+            hint_rail: None,
+        });
     }
 
     /// A page became available for `station`: fill its L1, drain its MSHR
@@ -570,8 +694,8 @@ impl PodSim {
 
         let op_done = self.wgs[wg as usize].on_ack();
         if op_done {
-            for i in 0..self.children[self.wgs[wg as usize].op.id as usize].len() {
-                let child = self.children[self.wgs[wg as usize].op.id as usize][i];
+            let op_id = self.wgs[wg as usize].op.id as usize;
+            for &child in &self.children[op_id] {
                 self.engine.schedule_at(now, Ev::WgStart { wg: child });
             }
         } else {
@@ -712,6 +836,63 @@ mod tests {
             "§6.2 prefetch should absorb page-boundary walks ({pf_data_walks} vs {cold_data_walks})"
         );
         assert!(pf.completion <= cold.completion);
+    }
+
+    #[test]
+    fn sw_guided_prefetch_hides_cold_walks() {
+        let cold = run(&small(16, MIB)).unwrap();
+        let mut cfg = small(16, MIB);
+        cfg.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+        let s = run(&cfg).unwrap();
+        assert!(s.prefetch_issued > 0, "hint stream must issue walks");
+        assert_eq!(s.prefetch_issued, s.prefetch_useful + s.prefetch_late);
+        assert!(
+            s.completion < cold.completion,
+            "§6.2 hints must hide cold-walk latency: {} vs {}",
+            s.completion,
+            cold.completion
+        );
+        // With a generous lead every receive-window page is hinted before
+        // its first packet lands: demand requests never initiate walks.
+        let data_walks = s.classes.prim_full_walk + s.classes.prim_pwc_hit.iter().sum::<u64>();
+        assert_eq!(data_walks, 0, "demand-initiated walks should vanish");
+    }
+
+    #[test]
+    fn fused_pretranslation_policy_hides_cold_walks() {
+        let cold = run(&small(16, MIB)).unwrap();
+        let mut cfg = small(16, MIB);
+        cfg.trans.prefetch_policy = PrefetchPolicy::Fused;
+        let s = run(&cfg).unwrap();
+        assert!(s.prefetch_issued > 0);
+        assert_eq!(s.prefetch_issued, s.prefetch_useful + s.prefetch_late);
+        assert!(s.completion < cold.completion, "fused pre-translation must help");
+        let data_walks = s.classes.prim_full_walk + s.classes.prim_pwc_hit.iter().sum::<u64>();
+        assert_eq!(data_walks, 0);
+    }
+
+    #[test]
+    fn sw_guided_rate_cap_defers_and_still_completes() {
+        // 4 receive-window pages per GPU but only 1 hint walk in flight:
+        // the pacing backlog must engage and fully drain.
+        let mut cfg = small(16, 8 * MIB);
+        cfg.trans.prefetch_policy =
+            PrefetchPolicy::SwGuided { lead_ps: crate::util::units::us(50), rate: 1 };
+        let s = run(&cfg).unwrap();
+        assert!(s.prefetch_deferred > 0, "rate cap of 1 must defer hints");
+        assert!(s.prefetch_issued > 0);
+        assert_eq!(s.prefetch_issued, s.prefetch_useful + s.prefetch_late);
+        assert_eq!(s.requests, s.classes.total());
+    }
+
+    #[test]
+    fn policy_inert_when_translation_disabled() {
+        let mut c = small(8, MIB);
+        c.trans.enabled = false;
+        c.trans.prefetch_policy = PrefetchPolicy::Fused;
+        let s = run(&c).unwrap();
+        assert_eq!(s.prefetch_issued, 0);
+        assert_eq!(s.breakdown.translation, 0);
     }
 
     #[test]

@@ -55,6 +55,16 @@ pub struct RunStats {
     pub peak_active_walks: u32,
     pub prefetch_walks: u64,
     pub pretranslated_pages: u64,
+    /// §6 schedule-driven hint-stream accounting (`trans::prefetch`).
+    /// Invariant: `prefetch_issued == prefetch_useful + prefetch_late`.
+    pub prefetch_issued: u64,
+    pub prefetch_useful: u64,
+    pub prefetch_late: u64,
+    pub prefetch_useless: u64,
+    pub prefetch_deferred: u64,
+    /// Total L2 Link-TLB fills across GPUs — every completed walk fills
+    /// the L2 exactly once, so this reconciles hint + demand walk counts.
+    pub l2_fills: u64,
     pub mshr_peak: usize,
     pub mshr_full_stalls: u64,
     /// Destination translation working set (max distinct pages resolved
@@ -122,6 +132,17 @@ impl RunStats {
             ("walks_queued", Json::from(self.walks_queued)),
             ("prefetch_walks", Json::from(self.prefetch_walks)),
             ("pretranslated_pages", Json::from(self.pretranslated_pages)),
+            (
+                "prefetch",
+                Json::from_pairs(vec![
+                    ("issued", Json::from(self.prefetch_issued)),
+                    ("useful", Json::from(self.prefetch_useful)),
+                    ("late", Json::from(self.prefetch_late)),
+                    ("useless", Json::from(self.prefetch_useless)),
+                    ("deferred", Json::from(self.prefetch_deferred)),
+                ]),
+            ),
+            ("l2_fills", Json::from(self.l2_fills)),
             ("max_touched_pages", Json::from(self.max_touched_pages)),
             ("events", Json::from(self.events)),
             ("wall_seconds", Json::from(self.wall_seconds)),

@@ -9,12 +9,14 @@
 
 pub mod class;
 pub mod mshr;
+pub mod prefetch;
 pub mod pwc;
 pub mod tlb;
 pub mod walker;
 
 pub use class::TransClass;
 pub use mshr::MshrFile;
+pub use prefetch::{Hint, PrefetchCounters, Prefetcher};
 pub use pwc::PwcStack;
 pub use tlb::Tlb;
 pub use walker::WalkerPool;

@@ -1,0 +1,258 @@
+//! §6 translation-hiding optimization layer: schedule-driven Link-TLB
+//! hint streams.
+//!
+//! MSCCLang-style schedules make every future destination page knowable
+//! before its packets arrive: each [`SendOp`] names its receive window up
+//! front. The two policies of [`PrefetchPolicy`] exploit that:
+//!
+//! * **Software-guided prefetch** (`SwGuided`) — the runtime walks the
+//!   op's upcoming-page list and issues each page's *hint walk*
+//!   `lead_ps` ahead of the page's estimated first-packet arrival, with
+//!   at most `rate` hint walks in flight per GPU. Hints past the cap
+//!   queue here and reissue as earlier hints retire.
+//! * **Fused pre-translation** (`Fused`) — the compute kernel preceding
+//!   each op is fused with a pre-translation prologue: every page of the
+//!   op's receive window is hinted the moment the op becomes runnable,
+//!   overlapping walk latency with the packets' network flight time.
+//!
+//! Unlike the free-warmup `pretranslate` model, hint walks are *real*:
+//! they occupy walker slots, probe and fill the PWCs, and fill the L2 (and
+//! the arrival rail's L1) only when their walk completes — so they contend
+//! with demand misses for walker/MSHR bandwidth exactly as §6 describes.
+//! The pod event loop drives them through `Ev::PrefetchIssue` /
+//! `Ev::PrefetchDone`; this module owns planning, pacing state, and the
+//! hit/late/useless accounting the figures report.
+
+use crate::collective::SendOp;
+use crate::config::{PodConfig, PrefetchPolicy};
+use crate::mem::PageId;
+use crate::util::units::{ns, ser_time, Time};
+use std::collections::VecDeque;
+
+/// One upcoming-page hint: warm `page` at the destination, on the rail
+/// the stream will arrive over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Hint {
+    pub page: PageId,
+    pub rail: u32,
+}
+
+/// Hint-stream accounting for one run.
+///
+/// Invariant at completion: `issued == useful + late` (every hint walk
+/// that starts also finishes), and each issued hint fills the L2 exactly
+/// once — so `issued + demand_walks == l2_fills` when the stride
+/// prefetcher is off.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PrefetchCounters {
+    /// Hint walks that entered the walker pipeline.
+    pub issued: u64,
+    /// Issued walks that completed before any demand request needed the
+    /// page (the walk latency was fully hidden).
+    pub useful: u64,
+    /// Issued walks that demand requests caught in flight — partial
+    /// hiding only (the lead time was too short).
+    pub late: u64,
+    /// Hints dropped on arrival: page already resident in L2, already
+    /// being walked, or outside the receive window.
+    pub useless: u64,
+    /// Hints deferred by the per-GPU rate cap (each is reissued later).
+    pub deferred: u64,
+}
+
+/// Per-pod hint pacing state. The pod simulation owns one and consults it
+/// from its `PrefetchIssue`/`PrefetchDone` handlers.
+#[derive(Debug)]
+pub struct Prefetcher {
+    policy: PrefetchPolicy,
+    /// Per-GPU hints waiting for a free hint-walk slot (FIFO).
+    backlog: Vec<VecDeque<Hint>>,
+    /// Per-GPU hint walks currently in flight.
+    in_flight: Vec<u32>,
+    pub counters: PrefetchCounters,
+}
+
+impl Prefetcher {
+    pub fn new(policy: PrefetchPolicy, gpus: u32) -> Self {
+        Self {
+            policy,
+            backlog: (0..gpus).map(|_| VecDeque::new()).collect(),
+            in_flight: vec![0; gpus as usize],
+            counters: PrefetchCounters::default(),
+        }
+    }
+
+    pub fn policy(&self) -> PrefetchPolicy {
+        self.policy
+    }
+
+    pub fn enabled(&self) -> bool {
+        !self.policy.is_off()
+    }
+
+    /// Can `gpu` start another hint walk right now?
+    pub fn has_slot(&self, gpu: u32) -> bool {
+        self.in_flight[gpu as usize] < self.policy.max_in_flight()
+    }
+
+    /// Account a hint walk entering the walker pipeline.
+    pub fn start(&mut self, gpu: u32) {
+        self.in_flight[gpu as usize] += 1;
+        self.counters.issued += 1;
+    }
+
+    /// Park a hint that hit the rate cap; reissued via `next_deferred`.
+    pub fn defer(&mut self, gpu: u32, hint: Hint) {
+        self.backlog[gpu as usize].push_back(hint);
+        self.counters.deferred += 1;
+    }
+
+    /// Account a hint walk completing. `untouched` = no demand request
+    /// attached while it was in flight (fully hidden ⇒ useful).
+    pub fn complete(&mut self, gpu: u32, untouched: bool) {
+        debug_assert!(self.in_flight[gpu as usize] > 0, "hint walk completion underflow");
+        self.in_flight[gpu as usize] -= 1;
+        if untouched {
+            self.counters.useful += 1;
+        } else {
+            self.counters.late += 1;
+        }
+    }
+
+    /// Pop the oldest deferred hint for `gpu`, if any.
+    pub fn next_deferred(&mut self, gpu: u32) -> Option<Hint> {
+        self.backlog[gpu as usize].pop_front()
+    }
+
+    /// Hint walks in flight across all GPUs (conservation checks).
+    pub fn in_flight_total(&self) -> u64 {
+        self.in_flight.iter().map(|&n| n as u64).sum()
+    }
+
+    /// Deferred hints not yet reissued (must be 0 once the run drains).
+    pub fn backlog_total(&self) -> usize {
+        self.backlog.iter().map(VecDeque::len).sum()
+    }
+
+    /// Plan the hint stream for one schedule op: every page of the op's
+    /// receive range, each with the delay (relative to the op becoming
+    /// runnable) at which its hint should issue.
+    ///
+    /// `SwGuided` staggers hints along the stream's estimated arrival
+    /// timeline — first-packet flight time plus in-order serialization of
+    /// the bytes preceding the page — minus the configured lead.
+    /// `Fused` issues the whole window at op start.
+    pub fn plan_op(&self, cfg: &PodConfig, rail: u32, op: &SendOp) -> Vec<(Time, Hint)> {
+        if self.policy.is_off() {
+            return Vec::new();
+        }
+        let page_bytes = cfg.trans.page_bytes;
+        let first = op.dst_offset / page_bytes;
+        let last = (op.dst_offset + op.bytes - 1) / page_bytes;
+        let mut out = Vec::with_capacity((last - first + 1) as usize);
+        for p in first..=last {
+            let due = match self.policy {
+                PrefetchPolicy::Off => unreachable!("checked above"),
+                PrefetchPolicy::Fused => 0,
+                PrefetchPolicy::SwGuided { lead_ps, .. } => {
+                    let page_start = (p * page_bytes).max(op.dst_offset);
+                    let bytes_before = page_start - op.dst_offset;
+                    let est_first_touch = first_packet_flight(cfg)
+                        + ser_time(bytes_before, cfg.link.station_gbps());
+                    est_first_touch.saturating_sub(lead_ps)
+                }
+            };
+            out.push((due, Hint { page: PageId(p), rail }));
+        }
+        out
+    }
+}
+
+/// Estimated flight time of an op's first packet: local fabric, both
+/// die-to-die link hops, and the switch pipeline. Only used to *time*
+/// hints (software would use the same static estimate); actual packet
+/// timing is simulated.
+fn first_packet_flight(cfg: &PodConfig) -> Time {
+    ns(cfg.gpu.local_fabric_ns + 2 * cfg.link.link_latency_ns + cfg.link.switch_latency_ns)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::paper_baseline;
+    use crate::util::units::{us, MIB};
+
+    fn op(dst_offset: u64, bytes: u64) -> SendOp {
+        SendOp { id: 0, src: 4, dst: 0, dst_offset, bytes, after: None }
+    }
+
+    #[test]
+    fn off_policy_plans_nothing() {
+        let cfg = paper_baseline(16, MIB);
+        let p = Prefetcher::new(PrefetchPolicy::Off, 16);
+        assert!(!p.enabled());
+        assert!(p.plan_op(&cfg, 4, &op(0, 8 * MIB)).is_empty());
+        assert!(!p.has_slot(0), "off policy has no hint slots");
+    }
+
+    #[test]
+    fn plan_covers_exactly_the_receive_range() {
+        let cfg = paper_baseline(16, MIB); // 2 MiB pages
+        let p = Prefetcher::new(PrefetchPolicy::Fused, 16);
+        // [3 MiB, 11 MiB) spans pages 1..=5.
+        let hints = p.plan_op(&cfg, 7, &op(3 * MIB, 8 * MIB));
+        assert_eq!(hints.len(), 5);
+        let pages: Vec<u64> = hints.iter().map(|(_, h)| h.page.0).collect();
+        assert_eq!(pages, vec![1, 2, 3, 4, 5]);
+        assert!(hints.iter().all(|&(due, h)| due == 0 && h.rail == 7), "fused: all at op start");
+    }
+
+    #[test]
+    fn sw_guided_staggers_and_lead_saturates() {
+        let cfg = paper_baseline(16, MIB);
+        let p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 4 }, 16);
+        let hints = p.plan_op(&cfg, 0, &op(0, 8 * MIB));
+        assert_eq!(hints.len(), 4);
+        // Zero lead: dues follow the arrival estimate, strictly increasing
+        // across pages, starting at the first-packet flight time.
+        assert_eq!(hints[0].0, first_packet_flight(&cfg));
+        for w in hints.windows(2) {
+            assert!(w[0].0 < w[1].0, "dues must be staggered: {:?}", hints);
+        }
+        // A generous lead pulls every hint to the op start.
+        let eager = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: us(50), rate: 4 }, 16);
+        assert!(eager.plan_op(&cfg, 0, &op(0, 8 * MIB)).iter().all(|&(due, _)| due == 0));
+    }
+
+    #[test]
+    fn pacing_and_counters_reconcile() {
+        let mut p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 2 }, 4);
+        assert!(p.has_slot(1));
+        p.start(1);
+        p.start(1);
+        assert!(!p.has_slot(1), "rate cap of 2 reached");
+        assert!(p.has_slot(2), "caps are per GPU");
+        p.defer(1, Hint { page: PageId(9), rail: 3 });
+        assert_eq!(p.counters.deferred, 1);
+        p.complete(1, true);
+        assert!(p.has_slot(1));
+        let h = p.next_deferred(1).unwrap();
+        assert_eq!((h.page, h.rail), (PageId(9), 3));
+        assert!(p.next_deferred(1).is_none());
+        p.start(1);
+        p.complete(1, false);
+        p.complete(1, false);
+        assert_eq!(p.in_flight_total(), 0);
+        assert_eq!(p.backlog_total(), 0);
+        let c = p.counters;
+        assert_eq!((c.issued, c.useful, c.late), (3, 1, 2));
+        assert_eq!(c.issued, c.useful + c.late, "every issued hint walk completes");
+    }
+
+    #[test]
+    fn fused_never_defers() {
+        let p = Prefetcher::new(PrefetchPolicy::Fused, 2);
+        assert_eq!(p.policy().max_in_flight(), u32::MAX);
+        assert!(p.has_slot(0));
+    }
+}

@@ -131,6 +131,15 @@ impl Tlb {
         let evicted = self.lines[victim].tag;
         self.lines[victim] = Line { tag, valid: true, last_use: self.clock };
         self.stats.evictions += 1;
+        // The MRU filter may still point at the victim line; left stale it
+        // would key future fast-path probes off a recycled slot. The tag
+        // re-check in `lookup` keeps that *correct*, but the filter must
+        // not outlive the line it summarizes — drop it on eviction.
+        if let Some((_, idx)) = self.mru {
+            if idx as usize == victim {
+                self.mru = None;
+            }
+        }
         Some(evicted)
     }
 
@@ -244,6 +253,146 @@ mod tests {
             }
             recent.iter().all(|&tag| t.contains(tag))
         });
+    }
+
+    /// Reference TLB with no MRU filter: the same set-associative
+    /// true-LRU policy implemented the obvious way. The real `Tlb` must be
+    /// observationally identical to this under any op stream — lookup
+    /// outcomes, residency, and stats — which pins down the MRU filter as
+    /// a pure optimization (the bug this guards: `fill` evicting the MRU
+    /// line without dropping the filter).
+    struct RefTlb {
+        sets: usize,
+        ways: usize,
+        lines: Vec<Line>,
+        clock: u64,
+        stats: TlbStats,
+    }
+
+    impl RefTlb {
+        fn new(entries: u32, assoc: u32) -> Self {
+            let ways = if assoc == 0 { entries as usize } else { assoc as usize };
+            let sets = entries as usize / ways;
+            Self {
+                sets,
+                ways,
+                lines: vec![INVALID; entries as usize],
+                clock: 0,
+                stats: TlbStats::default(),
+            }
+        }
+
+        fn set_base(&self, tag: u64) -> usize {
+            ((tag as usize) & (self.sets - 1)) * self.ways
+        }
+
+        fn lookup(&mut self, tag: u64) -> bool {
+            self.clock += 1;
+            let base = self.set_base(tag);
+            for line in &mut self.lines[base..base + self.ways] {
+                if line.valid && line.tag == tag {
+                    line.last_use = self.clock;
+                    self.stats.hits += 1;
+                    return true;
+                }
+            }
+            self.stats.misses += 1;
+            false
+        }
+
+        fn fill(&mut self, tag: u64) {
+            self.clock += 1;
+            let base = self.set_base(tag);
+            for line in &mut self.lines[base..base + self.ways] {
+                if line.valid && line.tag == tag {
+                    line.last_use = self.clock;
+                    return;
+                }
+            }
+            self.stats.fills += 1;
+            let mut victim = base;
+            let mut victim_use = u64::MAX;
+            for (i, line) in self.lines[base..base + self.ways].iter().enumerate() {
+                if !line.valid {
+                    self.lines[base + i] = Line { tag, valid: true, last_use: self.clock };
+                    return;
+                }
+                if line.last_use < victim_use {
+                    victim_use = line.last_use;
+                    victim = base + i;
+                }
+            }
+            self.lines[victim] = Line { tag, valid: true, last_use: self.clock };
+            self.stats.evictions += 1;
+        }
+
+        fn flush(&mut self) {
+            self.lines.fill(INVALID);
+        }
+
+        fn contains(&self, tag: u64) -> bool {
+            let base = self.set_base(tag);
+            self.lines[base..base + self.ways].iter().any(|l| l.valid && l.tag == tag)
+        }
+    }
+
+    #[test]
+    fn prop_mru_filter_is_invisible() {
+        // Random fill/lookup/flush streams over a small tag space (small
+        // so the same line is evicted and recycled constantly, the exact
+        // regime where a stale MRU filter would diverge). Encoding:
+        // op = kind % 8 → 0..=4 lookup, 5..=6 fill, 7 flush.
+        use crate::util::proptest::PairOf;
+        let strat = VecOf {
+            elem: PairOf(RangeU64 { lo: 0, hi: 7 }, RangeU64 { lo: 0, hi: 24 }),
+            max_len: 400,
+        };
+        for (entries, assoc) in [(8u32, 0u32), (16, 2), (4, 4)] {
+            check("tlb-mru-filter-invisible", &strat, 80, |ops| {
+                let mut t = Tlb::new(entries, assoc);
+                let mut r = RefTlb::new(entries, assoc);
+                for &(kind, tag) in ops {
+                    match kind {
+                        0..=4 => {
+                            if t.lookup(tag) != r.lookup(tag) {
+                                return false;
+                            }
+                        }
+                        5 | 6 => {
+                            t.fill(tag);
+                            r.fill(tag);
+                        }
+                        _ => {
+                            t.flush();
+                            r.flush();
+                        }
+                    }
+                }
+                t.stats == r.stats && (0..=24u64).all(|tag| t.contains(tag) == r.contains(tag))
+            });
+        }
+    }
+
+    #[test]
+    fn mru_filter_dropped_when_its_line_is_evicted() {
+        // Drive the exact eviction-of-the-MRU-line sequence: a hit arms
+        // the filter, a `fill` refresh of the *other* line then makes the
+        // filtered line the LRU victim of the next insertion. After the
+        // eviction recycles that slot, probes of the old MRU tag must miss
+        // and probes of the new occupant must hit, with stats intact.
+        let mut t = Tlb::new(2, 0);
+        t.fill(0); // line A: tag 0
+        t.fill(1); // line B: tag 1
+        assert!(t.lookup(1), "arm the MRU filter on tag 1");
+        t.fill(0); // refresh tag 0's recency — tag 1 (the MRU line) is now LRU
+        t.fill(2); // evicts tag 1, recycling the line the filter points at
+        assert!(!t.contains(1));
+        assert!(!t.lookup(1), "evicted MRU tag must miss");
+        assert!(t.lookup(2), "new occupant of the recycled line must hit");
+        assert!(t.lookup(0));
+        assert_eq!(t.stats.evictions, 1);
+        assert_eq!(t.stats.hits, 3);
+        assert_eq!(t.stats.misses, 1);
     }
 
     #[test]
