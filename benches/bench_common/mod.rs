@@ -1,11 +1,21 @@
-//! Shared scaffolding for the figure benches (`harness = false`).
+//! Shared scaffolding for the bench binaries (`harness = false`).
 //!
-//! Each bench binary regenerates one paper table/figure in `--quick` axes
+//! Each figure bench regenerates one paper table/figure in `--quick` axes
 //! and reports wall time + simulator throughput via `util::minibench`,
 //! so `cargo bench | tee bench_output.txt` reproduces every figure's data
-//! alongside its cost.
+//! alongside its cost. `sim_core` additionally aggregates its BENCHJSON
+//! records into a snapshot file (`write_benchjson_file`) and compares
+//! against the checked-in `BENCH_baseline.json` (`load_baseline`), which
+//! tracks the perf trajectory PR over PR.
+
+// Each bench binary compiles this module independently and uses a subset
+// of it; unused-item warnings here would be false positives.
+#![allow(dead_code)]
 
 use ratsim::harness::FigOpts;
+use ratsim::util::json::Json;
+use std::collections::BTreeMap;
+use std::path::Path;
 use std::time::Instant;
 
 pub fn opts() -> FigOpts {
@@ -35,4 +45,43 @@ where
             std::process::exit(1);
         }
     }
+}
+
+/// Write an aggregate BENCHJSON snapshot: one object per benchmark (the
+/// same records the `BENCHJSON` stdout lines carry), plus provenance.
+pub fn write_benchjson_file(path: &Path, records: Vec<Json>) -> std::io::Result<()> {
+    let mut top = Json::obj();
+    top.set("format", Json::from("ratsim-benchjson-v1"));
+    top.set("results", Json::Arr(records));
+    std::fs::write(path, top.to_string_pretty())
+}
+
+/// Load a BENCHJSON snapshot, returning `name → (mean_ns, events_per_sec)`
+/// for every record that actually carries numbers (placeholder snapshots
+/// with `null` fields contribute nothing).
+pub fn load_baseline(path: &Path) -> BTreeMap<String, (f64, f64)> {
+    let mut map = BTreeMap::new();
+    let Ok(text) = std::fs::read_to_string(path) else {
+        return map;
+    };
+    let Ok(j) = Json::parse(&text) else {
+        return map;
+    };
+    let Some(results) = j.get("results").and_then(Json::as_arr) else {
+        return map;
+    };
+    for r in results {
+        let name = r.get("name").and_then(Json::as_str);
+        let mean = r.get("mean_ns").and_then(Json::as_f64);
+        // Pod workloads record events/s explicitly; the pending-set
+        // microbenches carry it as minibench's items_per_sec.
+        let evps = r
+            .get("events_per_sec")
+            .or_else(|| r.get("items_per_sec"))
+            .and_then(Json::as_f64);
+        if let (Some(name), Some(mean), Some(evps)) = (name, mean, evps) {
+            map.insert(name.to_string(), (mean, evps));
+        }
+    }
+    map
 }

@@ -1,28 +1,55 @@
 //! Simulator-core performance microbenches (the §Perf hot paths):
-//! event-queue ops, end-to-end events/second, and the standard pod
-//! workloads used for the optimization log in EXPERIMENTS.md §Perf.
+//! pending-set ops (4-ary heap vs timing wheel), end-to-end pod
+//! events/second on the standard perf workloads, and the fused-vs-per-hop
+//! engine comparison used for the optimization log in EXPERIMENTS.md §Perf.
+//!
+//! Env knobs:
+//! * `RATSIM_BENCH_QUICK=1` — trimmed iterations/request budgets (CI smoke).
+//! * `RATSIM_BENCH_OUT=path` — write the aggregate BENCHJSON snapshot
+//!   (the format of `BENCH_baseline.json`) to `path`.
+//!
+//! If `BENCH_baseline.json` carries recorded numbers, a final section
+//! prints the current-vs-baseline events/s ratio per workload.
+
+mod bench_common;
 
 use ratsim::config::presets::paper_baseline;
-use ratsim::config::RequestSizing;
+use ratsim::config::{EnginePolicy, RequestSizing};
 use ratsim::pod;
-use ratsim::sim::EventQueue;
-use ratsim::util::minibench::{bench, bench_items, print_header, print_result, BenchConfig};
+use ratsim::sim::{EventQueue, TimingWheel};
+use ratsim::util::json::Json;
+use ratsim::util::minibench::{bench_items, print_header, print_result, BenchConfig};
 use ratsim::util::rng::Rng;
 use std::time::Duration;
 
+fn quick() -> bool {
+    std::env::var("RATSIM_BENCH_QUICK").is_ok()
+}
+
 fn main() {
     ratsim::util::logger::init_with_level(log::LevelFilter::Warn);
-    print_header("sim core microbenches");
-    let cfg = BenchConfig {
-        warmup_iters: 1,
-        min_iters: 3,
-        max_iters: 20,
-        max_time: Duration::from_secs(8),
+    let cfg = if quick() {
+        BenchConfig {
+            warmup_iters: 0,
+            min_iters: 1,
+            max_iters: 3,
+            max_time: Duration::from_secs(2),
+        }
+    } else {
+        BenchConfig {
+            warmup_iters: 1,
+            min_iters: 3,
+            max_iters: 20,
+            max_time: Duration::from_secs(8),
+        }
     };
+    let mut records: Vec<Json> = Vec::new();
 
-    // Event queue: push+pop throughput at a realistic pending-set size.
+    print_header("pending-set microbenches (4-ary heap vs timing wheel)");
     let mut rng = Rng::new(7);
     let times: Vec<u64> = (0..100_000).map(|_| rng.gen_range(1_000_000)).collect();
+
+    // Bulk load + full drain at a realistic pending-set size.
     let r = bench_items("eventqueue_100k_push_pop", &cfg, times.len() as u64, || {
         let mut q = EventQueue::with_capacity(times.len());
         for (i, &t) in times.iter().enumerate() {
@@ -31,6 +58,17 @@ fn main() {
         while q.pop().is_some() {}
     });
     print_result(&r);
+    records.push(r.to_json());
+
+    let r = bench_items("wheel_100k_push_pop", &cfg, times.len() as u64, || {
+        let mut q = TimingWheel::new();
+        for (i, &t) in times.iter().enumerate() {
+            q.push(t, i as u64, i as u32);
+        }
+        while q.pop().is_some() {}
+    });
+    print_result(&r);
+    records.push(r.to_json());
 
     // Steady-state churn: hold 50k pending, push+pop 100k more.
     let r = bench_items("eventqueue_churn_50k_hold", &cfg, 100_000, || {
@@ -43,32 +81,120 @@ fn main() {
             seq += 1;
         }
         for _ in 0..100_000 {
-            let (t, _) = q.pop().unwrap();
+            let (t, _, _) = q.pop().unwrap();
             now = t;
             q.push(now + rng.gen_range(10_000), seq, ());
             seq += 1;
         }
     });
     print_result(&r);
+    records.push(r.to_json());
 
-    // Whole-pod events/second on the standard perf workloads.
-    print_header("pod simulation throughput (events/second)");
+    let r = bench_items("wheel_churn_50k_hold", &cfg, 100_000, || {
+        let mut q = TimingWheel::with_capacity(64 * 1024);
+        let mut seq = 0u64;
+        let mut rng = Rng::new(3);
+        let mut now = 0u64;
+        for _ in 0..50_000 {
+            q.push(now + rng.gen_range(10_000), seq, ());
+            seq += 1;
+        }
+        for _ in 0..100_000 {
+            let (t, _, _) = q.pop().unwrap();
+            now = t;
+            q.push(now + rng.gen_range(10_000), seq, ());
+            seq += 1;
+        }
+    });
+    print_result(&r);
+    records.push(r.to_json());
+
+    // Whole-pod events/second on the standard perf workloads (fused
+    // engine — the default), plus a single per-hop reference run each so
+    // the fusion speedup is visible in-place.
+    print_header("pod simulation throughput (events/second, fused engine)");
     for (name, gpus, size_mib, reqs) in [
         ("pod_16gpu_1MiB_full_fidelity", 16u32, 1u64, 0u64),
         ("pod_16gpu_64MiB_500k_reqs", 16, 64, 500_000),
         ("pod_64gpu_16MiB_500k_reqs", 64, 16, 500_000),
+        ("pod_256gpu_16MiB_500k_reqs", 256, 16, 500_000),
     ] {
         let mut pc = paper_baseline(gpus, size_mib * (1 << 20));
-        if reqs > 0 {
-            pc.workload.request_sizing = RequestSizing::Auto { target_total_requests: reqs };
+        let target = if quick() {
+            Some(30_000)
+        } else if reqs > 0 {
+            Some(reqs)
+        } else {
+            None
+        };
+        if let Some(t) = target {
+            pc.workload.request_sizing = RequestSizing::Auto { target_total_requests: t };
         }
-        let events = std::cell::Cell::new(0u64);
-        let r = bench(name, &cfg, || {
-            let s = pod::run(&pc).expect("pod run");
-            events.set(s.events);
+        // One counted run up front: event/request volumes for throughput.
+        let s0 = pod::run(&pc).expect("pod run");
+        let (events, requests) = (s0.events, s0.requests);
+        let r = bench_items(name, &cfg, events, || {
+            pod::run(&pc).expect("pod run");
         });
-        let evps = events.get() as f64 / r.mean.as_secs_f64();
         print_result(&r);
-        println!("  -> {} events/run, {:.2}M events/s", events.get(), evps / 1e6);
+        let evps = events as f64 / r.mean.as_secs_f64();
+        let rps = requests as f64 / r.mean.as_secs_f64();
+        println!(
+            "  -> {events} events/run ({requests} requests), {:.2}M events/s, {:.2}M reqs/s",
+            evps / 1e6,
+            rps / 1e6
+        );
+        let mut ph = pc.clone();
+        ph.engine = EnginePolicy::PerHop;
+        let t0 = std::time::Instant::now();
+        let sp = pod::run(&ph).expect("per-hop run");
+        let ph_wall = t0.elapsed().as_secs_f64();
+        println!(
+            "  -> per-hop reference: {} events in {:.2}s ({:.2}x fused wall, {:.2}x events)",
+            sp.events,
+            ph_wall,
+            ph_wall / r.mean.as_secs_f64(),
+            sp.events as f64 / events as f64
+        );
+        let mut j = r.to_json();
+        j.set("events", Json::from(events));
+        j.set("requests", Json::from(requests));
+        j.set("events_per_sec", Json::from(evps));
+        j.set("requests_per_sec", Json::from(rps));
+        j.set("per_hop_events", Json::from(sp.events));
+        j.set("per_hop_wall_seconds", Json::from(ph_wall));
+        records.push(j);
+    }
+
+    // Perf-trajectory tracking: compare against the recorded snapshot.
+    let baseline = bench_common::load_baseline(std::path::Path::new("BENCH_baseline.json"));
+    if baseline.is_empty() {
+        println!(
+            "\nBENCH_baseline.json carries no recorded numbers on this checkout — \
+             record one with RATSIM_BENCH_OUT=BENCH_baseline.json cargo bench --bench sim_core"
+        );
+    } else {
+        print_header("vs BENCH_baseline.json");
+        for j in &records {
+            let name = j.get("name").and_then(Json::as_str).unwrap_or("?");
+            let Some(evps) = j
+                .get("events_per_sec")
+                .or_else(|| j.get("items_per_sec"))
+                .and_then(Json::as_f64)
+            else {
+                continue;
+            };
+            if let Some(&(_, base_evps)) = baseline.get(name) {
+                if base_evps > 0.0 {
+                    println!("  {name}: {:.2}x events/s vs recorded baseline", evps / base_evps);
+                }
+            }
+        }
+    }
+
+    if let Ok(out) = std::env::var("RATSIM_BENCH_OUT") {
+        let path = std::path::PathBuf::from(&out);
+        bench_common::write_benchjson_file(&path, records).expect("write BENCHJSON snapshot");
+        println!("\nwrote BENCHJSON snapshot to {out}");
     }
 }

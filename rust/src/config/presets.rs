@@ -61,6 +61,7 @@ pub fn paper_baseline(gpus: u32, size_bytes: u64) -> PodConfig {
             request_sizing: RequestSizing::default(),
             trace_source_gpu: None,
         },
+        engine: EnginePolicy::default(),
     }
 }
 

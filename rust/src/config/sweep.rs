@@ -146,6 +146,14 @@ pub fn paper_gpu_counts() -> Vec<u32> {
     vec![8, 16, 32, 64]
 }
 
+/// The scale axis beyond the paper: UALink/NVLink-class pods up to 256
+/// GPUs on the oversubscribed-rail topology (≤16 stations/GPU means ≥2
+/// sources share each destination rail past 16 GPUs). Tractable on full
+/// size axes thanks to the fused event engine — see EXPERIMENTS.md §Perf.
+pub fn scaled_gpu_counts() -> Vec<u32> {
+    vec![32, 64, 128, 256]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -206,6 +214,12 @@ mod tests {
         assert_eq!(paper_sizes().first(), Some(&MIB));
         assert_eq!(paper_sizes().last(), Some(&(4 * GIB)));
         assert_eq!(paper_gpu_counts(), vec![8, 16, 32, 64]);
+        assert_eq!(scaled_gpu_counts(), vec![32, 64, 128, 256]);
+        // Every scale-axis pod size builds a valid baseline/ideal pair.
+        for &g in &scaled_gpu_counts() {
+            paper_baseline(g, MIB).validate().unwrap();
+            paper_ideal(g, MIB).validate().unwrap();
+        }
     }
 
     #[test]

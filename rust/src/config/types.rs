@@ -38,6 +38,48 @@ impl CollectiveKind {
     }
 }
 
+/// Event-engine execution policy for the deterministic portions of the
+/// request lifecycle (`pod::sim`).
+///
+/// Both policies compute every hop timestamp of the forward
+/// (`StationTx → SwitchOut → TargetArrive`) and response
+/// (`HbmDone → AckSwitchOut → AckArrive`) chains eagerly, in one pass,
+/// at the same decision points — the chains are fixed latencies plus
+/// analytic-server serialization, admitted in decision order (see
+/// `NetResources::path` for the contention-ordering semantics this
+/// implies). The policies differ only in how many events materialize:
+///
+/// * `Fused` — schedule only the chain's terminal event (`TargetArrive`
+///   for translated requests, `AckArrive` once translation resolves);
+///   intermediate timestamps exist purely as numbers. 3–5× fewer events.
+/// * `PerHop` — additionally materialize one marker event per
+///   intermediate hop, recreating the classic one-event-per-hop timeline
+///   (for debugging cadence and for the fused-vs-per-hop differential
+///   tests, which require bit-identical `RunStats` from both).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum EnginePolicy {
+    #[default]
+    Fused,
+    PerHop,
+}
+
+impl EnginePolicy {
+    pub fn name(&self) -> &'static str {
+        match self {
+            EnginePolicy::Fused => "fused",
+            EnginePolicy::PerHop => "per-hop",
+        }
+    }
+
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "fused" => EnginePolicy::Fused,
+            "per-hop" | "perhop" => EnginePolicy::PerHop,
+            other => bail!("unknown engine policy `{other}` (fused|per-hop)"),
+        })
+    }
+}
+
 /// Remote-store request sizing. The paper does not state store granularity;
 /// `Auto` targets a bounded event count while keeping ≥64 requests per 2MB
 /// page so translation concurrency behaviour is preserved (DESIGN.md).
@@ -258,6 +300,9 @@ pub struct PodConfig {
     pub link: LinkConfig,
     pub trans: TransConfig,
     pub workload: WorkloadConfig,
+    /// Event-fusion policy; `Fused` is the default, `PerHop` exists for
+    /// differential testing and timeline debugging.
+    pub engine: EnginePolicy,
 }
 
 impl PodConfig {
@@ -302,6 +347,11 @@ impl PodConfig {
     pub fn validate(&self) -> Result<()> {
         if self.gpus < 2 {
             bail!("need at least 2 GPUs (got {})", self.gpus);
+        }
+        if self.gpus > u16::MAX as u32 {
+            // Event payloads and the request slab pack GPU/rail ids into
+            // u16 for queue cache density (§Perf).
+            bail!("pods larger than {} GPUs are not supported (got {})", u16::MAX, self.gpus);
         }
         if self.gpus_per_node == 0 {
             bail!("gpus_per_node must be > 0");
@@ -462,6 +512,7 @@ impl PodConfig {
                     ),
                 ]),
             ),
+            ("engine", Json::from(self.engine.name())),
             (
                 "workload",
                 Json::from_pairs(vec![
@@ -584,6 +635,12 @@ impl PodConfig {
                     },
                 },
             },
+            // Optional for configs written before the engine knob existed:
+            // absent ⇒ the fused default.
+            engine: match j.get("engine").and_then(Json::as_str) {
+                None => EnginePolicy::default(),
+                Some(s) => EnginePolicy::parse(s)?,
+            },
             workload: WorkloadConfig {
                 collective: CollectiveKind::parse(wl.req_str("collective")?)?,
                 size_bytes: wl.req_u64("size_bytes")?,
@@ -654,6 +711,28 @@ mod tests {
         }
         let back = PodConfig::from_json(&j).unwrap();
         assert!(back.trans.prefetch_policy.is_off());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_engine_policy() {
+        for policy in [EnginePolicy::Fused, EnginePolicy::PerHop] {
+            let mut cfg = paper_baseline(16, MIB);
+            cfg.engine = policy;
+            let back = PodConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.engine, policy);
+            assert_eq!(back, cfg);
+        }
+        // Configs written before the knob existed still load (⇒ Fused).
+        let mut j = paper_baseline(16, MIB).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("engine");
+        }
+        let back = PodConfig::from_json(&j).unwrap();
+        assert_eq!(back.engine, EnginePolicy::Fused);
+        // Unknown names are rejected, not silently defaulted.
+        let mut j = paper_baseline(16, MIB).to_json();
+        j.set("engine", Json::from("bogus"));
+        assert!(PodConfig::from_json(&j).is_err());
     }
 
     #[test]

@@ -72,10 +72,26 @@ pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
 
     let mut out = Vec::with_capacity(n);
     for (i, cell) in results.into_iter().enumerate() {
-        let stats = cell
-            .into_inner()
-            .unwrap()
-            .expect("worker exited without posting a result")?;
+        // Propagate worker failures as errors naming the grid point — a
+        // panicking or failing worker must not take the whole sweep (and
+        // the caller's process) down with an opaque message.
+        let stats = match cell.into_inner().unwrap() {
+            Some(Ok(stats)) => stats,
+            Some(Err(e)) => {
+                return Err(e.context(format!(
+                    "sweep point {}/{} ({}) failed",
+                    i + 1,
+                    n,
+                    points[i].label()
+                )))
+            }
+            None => anyhow::bail!(
+                "worker exited without posting a result for point {}/{} ({})",
+                i + 1,
+                n,
+                points[i].label()
+            ),
+        };
         out.push(SweepResult { point: points[i].clone(), stats });
     }
     Ok(out)
@@ -135,5 +151,25 @@ mod tests {
     #[test]
     fn empty_grid_is_fine() {
         assert!(run_points(&[]).unwrap().is_empty());
+    }
+
+    #[test]
+    fn mid_grid_failure_propagates_with_point_label() {
+        // A config that fails validation in the middle of the grid must
+        // surface as an error naming the point — not a worker panic.
+        let mut bad = tiny_point(4, MIB, "broken-variant", false);
+        bad.config.workload.size_bytes = 0; // rejected by validate()
+        let points = vec![
+            tiny_point(4, MIB, "baseline", false),
+            bad,
+            tiny_point(8, MIB, "baseline", false),
+        ];
+        let err = run_points(&points).expect_err("invalid mid-grid point must fail the sweep");
+        let msg = format!("{err:#}");
+        assert!(
+            msg.contains("broken-variant"),
+            "error should name the failing point label: {msg}"
+        );
+        assert!(msg.contains("2/3"), "error should locate the point in the grid: {msg}");
     }
 }

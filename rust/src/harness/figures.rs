@@ -5,8 +5,8 @@
 
 use super::table::Table;
 use crate::config::presets::{paper_baseline, paper_ideal};
-use crate::config::sweep::{breakdown_sizes, paper_gpu_counts, paper_sizes};
-use crate::config::{PodConfig, SweepGrid, SweepPoint};
+use crate::config::sweep::{breakdown_sizes, paper_gpu_counts, paper_sizes, scaled_gpu_counts};
+use crate::config::{PodConfig, RequestSizing, SweepGrid, SweepPoint};
 use crate::coordinator::{run_grid, run_points, SweepResult};
 use crate::stats::run::write_csv;
 use crate::util::units::{fmt_bytes, to_ns, MIB};
@@ -48,7 +48,7 @@ impl FigOpts {
     fn tune(&self, cfg: &mut PodConfig) {
         if self.quick {
             cfg.workload.request_sizing =
-                crate::config::RequestSizing::Auto { target_total_requests: 100_000 };
+                RequestSizing::Auto { target_total_requests: 100_000 };
         }
     }
 }
@@ -533,6 +533,40 @@ pub fn warmup(opts: &FigOpts) -> Result<Table> {
     Ok(t)
 }
 
+/// Pod-scale sweep (beyond the paper's 64-GPU axis): baseline-vs-ideal
+/// overhead at 32–256 GPUs. Past 16 GPUs the destination rails are
+/// oversubscribed (multiple source streams share each L1 Link TLB), so
+/// this is where capacity pressure on the translation hierarchy actually
+/// grows with pod size. Request counts are capped per cell so the
+/// 256-GPU points stay CI-tolerable on the fused engine.
+pub fn pod_scale(opts: &FigOpts) -> Result<Table> {
+    let gpus = if opts.quick { vec![32, 64] } else { scaled_gpu_counts() };
+    let sizes = if opts.quick { vec![MIB, 16 * MIB] } else { vec![MIB, 16 * MIB, 256 * MIB] };
+    let mut grid = SweepGrid::baseline_vs_ideal(&gpus, &sizes);
+    let cap = if opts.quick { 100_000 } else { 500_000 };
+    for p in &mut grid.points {
+        p.config.workload.request_sizing = RequestSizing::Auto { target_total_requests: cap };
+    }
+    let results = run_grid(&grid)?;
+    let mut t = Table::new(
+        "Pod scale — RAT overhead at 32–256 GPUs (oversubscribed rails)",
+        &["gpus", "size", "overhead_x", "mean_rat_ns", "touched_pages", "events", "Mev_per_s"],
+    );
+    for ((gpus, size), (b, i, r)) in pair_up(&results) {
+        t.push(vec![
+            gpus.to_string(),
+            fmt_bytes(size),
+            format!("{:.3}", b / i),
+            format!("{:.1}", r.stats.mean_rat_ns()),
+            r.stats.max_touched_pages.to_string(),
+            r.stats.events.to_string(),
+            format!("{:.2}", r.stats.events_per_second() / 1e6),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "pod_scale")?;
+    Ok(t)
+}
+
 /// Table 1: echo the baseline configuration (sanity / documentation).
 pub fn table1(opts: &FigOpts) -> Result<Table> {
     let c = paper_baseline(16, MIB);
@@ -567,7 +601,7 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "ablation", "design", "warmup",
+    "ablation", "design", "warmup", "scale",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -615,6 +649,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     }
     if want("warmup") {
         warmup(opts)?.print();
+    }
+    if want("scale") {
+        pod_scale(opts)?.print();
     }
     Ok(())
 }

@@ -10,7 +10,9 @@
 use anyhow::Result;
 use ratsim::collective;
 use ratsim::config::presets::{paper_baseline, paper_ideal};
-use ratsim::config::{CollectiveKind, PodConfig, PrefetchPolicy, RequestSizing, SweepGrid};
+use ratsim::config::{
+    CollectiveKind, EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing, SweepGrid,
+};
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
 use ratsim::util::cli::{parse, usage, ArgSpec, Args};
@@ -54,7 +56,7 @@ fn print_help() {
         "ratsim {} — Reverse Address Translation simulator for UALink scale-up pods\n\n\
          subcommands:\n\
          \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
-         \x20           --prefetch-policy sw-guided|fused, ...)\n\
+         \x20           --prefetch-policy sw-guided|fused, --engine fused|per-hop, ...)\n\
          \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB);\n\
          \x20           --opts for the §6 optimization ablation\n\
          \x20 figures   regenerate paper figures (--only fig4,fig12 --quick --out results)\n\
@@ -79,6 +81,7 @@ fn common_run_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "prefetch-policy", help: "translation hiding: off | sw-guided | fused", is_flag: false, default: None },
         ArgSpec { name: "prefetch-lead-ns", help: "sw-guided hint lead time, ns (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
         ArgSpec { name: "prefetch-rate", help: "sw-guided hint walks in flight per GPU (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
+        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop (marker event per hop; differential testing)", is_flag: false, default: None },
         ArgSpec { name: "trace-gpu", help: "record per-request RAT trace for this source GPU", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
         ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
@@ -144,6 +147,9 @@ fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
                  (pass --prefetch-policy sw-guided)"
             );
         }
+    }
+    if let Some(e) = a.get("engine") {
+        cfg.engine = EnginePolicy::parse(e)?;
     }
     if let Some(g) = a.get_u64("trace-gpu")? {
         cfg.workload.trace_source_gpu = Some(g as u32);

@@ -1,8 +1,21 @@
 //! The event-driven pod simulation (request lifecycle of DESIGN.md).
+//!
+//! §Perf — the fused fast path: every hop of a request's forward chain
+//! (`StationTx → SwitchOut → TargetArrive`) and response chain
+//! (`HbmDone → AckSwitchOut → AckArrive`) is a fixed latency plus
+//! analytic-server serialization, so the whole chain is computed eagerly
+//! in one pass at its decision point (issue / translation-complete) and
+//! only the terminal event is scheduled. Translation itself stays fully
+//! event-driven — L1/MSHR/L2/walker state genuinely depends on event
+//! interleaving. [`EnginePolicy::PerHop`] additionally materializes one
+//! marker event per intermediate hop at the precomputed timestamps;
+//! because both policies perform the identical model mutations in the
+//! identical order, they produce bit-identical `RunStats` (raw event
+//! count excepted) — enforced by `rust/tests/engine_diff.rs`.
 
 use super::mmu::{GpuMmu, WalkRec};
 use crate::collective::{generators, Schedule};
-use crate::config::{PodConfig, PrefetchPolicy};
+use crate::config::{EnginePolicy, PodConfig, PrefetchPolicy};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{NetResources, Topology};
@@ -15,55 +28,52 @@ use crate::trans::walker::QueuedWalk;
 use crate::util::units::Time;
 use anyhow::Result;
 
-/// Simulation events. All payloads are small ids; request state lives in
-/// the slab.
+/// Simulation events. Payloads are packed small (16-byte variants) for
+/// queue cache density; request state lives in the slab.
 #[derive(Debug, Clone, Copy)]
 enum Ev {
     /// A workgroup becomes runnable (t=0 roots, or dependency satisfied).
     WgStart { wg: u32 },
-    /// Data packet reaches its source station ingress (after local fabric).
-    StationTx { req: u32 },
-    /// Data packet is eligible at its switch output port.
-    SwitchOut { req: u32 },
+    /// Per-hop marker (`EnginePolicy::PerHop` only): an intermediate hop
+    /// timestamp materialized as an event. No model effect — the hop's
+    /// outcome was already computed when its chain was fused.
+    Hop,
     /// Data packet reaches the target station → start reverse translation.
     TargetArrive { req: u32 },
     /// Retry translation after an MSHR-full stall cleared.
     Retry { req: u32 },
     /// L1 miss resolved its lookup; run the L2 stage for (gpu, station, page).
-    L2Decision { gpu: u32, station: u32, page: u64 },
+    L2Decision { gpu: u16, station: u16, page: u64 },
     /// A page walk completed at (gpu, page).
-    WalkDone { gpu: u32, page: u64 },
-    /// HBM write done; ACK enters the target station uplink.
-    HbmDone { req: u32 },
-    /// ACK eligible at the switch output port toward the source.
-    AckSwitchOut { req: u32 },
+    WalkDone { gpu: u16, page: u64 },
     /// ACK reached the source WG.
     AckArrive { req: u32 },
     /// A schedule-driven translation hint became due at (gpu, page) for
     /// the stream arriving on `rail` (`trans::prefetch`).
-    PrefetchIssue { gpu: u32, page: u64, rail: u32 },
+    PrefetchIssue { gpu: u16, rail: u16, page: u64 },
     /// A prefetch-initiated walk (hint or next-page stride) completed at
     /// (gpu, page). Shares the walk-completion path with `WalkDone`; the
     /// distinct event keeps the prefetch pipeline visible in traces.
-    PrefetchDone { gpu: u32, page: u64 },
+    PrefetchDone { gpu: u16, page: u64 },
 }
 
 /// In-flight request state (slab-allocated, recycled on completion).
+/// Deliberately lean — 40 bytes — since the slab is hot: per-hop
+/// timestamps are consumed at the decision points that compute them, and
+/// per-request accounting happens at translation-complete, so only the
+/// fields the translation stage and the final ACK need persist here.
 #[derive(Debug, Clone)]
 struct Request {
+    page: u64,
+    issue: Time,
+    target_arrive: Time,
     wg: u32,
     /// Per-source-GPU issue sequence (trace key).
-    seq: u64,
-    bytes: u32,
-    page: u64,
+    seq: u32,
     src: u16,
     dst: u16,
     rail: u16,
     internode: bool,
-    issue: Time,
-    target_arrive: Time,
-    rat_done: Time,
-    class: TransClass,
 }
 
 pub struct PodSim {
@@ -85,6 +95,10 @@ pub struct PodSim {
     /// §6 schedule-driven translation-hiding state (hint pacing/stats).
     prefetcher: Prefetcher,
     stats: RunStats,
+    /// Materialize per-hop marker events (EnginePolicy::PerHop)?
+    per_hop: bool,
+    /// Cached `workload.trace_source_gpu` (hot-path compare).
+    trace_src: Option<u16>,
     // cached timing constants (ps)
     t_fabric: Time,
     t_hbm: Time,
@@ -98,9 +112,9 @@ pub struct PodSim {
 /// stride) resolve via `PrefetchDone`, demand walks via `WalkDone`.
 fn completion_ev(prefetch: bool, gpu: u32, page: PageId) -> Ev {
     if prefetch {
-        Ev::PrefetchDone { gpu, page: page.0 }
+        Ev::PrefetchDone { gpu: gpu as u16, page: page.0 }
     } else {
-        Ev::WalkDone { gpu, page: page.0 }
+        Ev::WalkDone { gpu: gpu as u16, page: page.0 }
     }
 }
 
@@ -176,18 +190,20 @@ impl PodSim {
         let t_walk_mem =
             crate::util::units::ns(cfg.trans.walk_mem_ns + cfg.trans.walk_fabric_ns);
 
-        // §Perf: pre-size the slab to the peak outstanding-request bound
-        // (sum of WG windows, capped by total) so the hot loop never
-        // reallocates it.
+        // §Perf: pre-size the slab and the engine's pending set to the
+        // peak outstanding-request bound (sum of WG windows, capped by
+        // total) so the hot loop never reallocates either.
         let peak_outstanding = wgs
             .iter()
             .map(|w| (cfg.gpu.wg_window as u64).min(w.total_requests()))
             .sum::<u64>()
             .min(total_requests) as usize;
+        let per_hop = cfg.engine == EnginePolicy::PerHop;
+        let trace_src = cfg.workload.trace_source_gpu.map(|g| g as u16);
         let mut sim = PodSim {
             cfg,
             schedule,
-            engine: Engine::new(),
+            engine: Engine::with_capacity(peak_outstanding.max(1024)),
             topo,
             net,
             mmus,
@@ -200,6 +216,8 @@ impl PodSim {
             acked: 0,
             prefetcher,
             stats,
+            per_hop,
+            trace_src,
             t_fabric,
             t_hbm,
             t_l1,
@@ -301,19 +319,18 @@ impl PodSim {
     fn handle(&mut self, now: Time, ev: Ev) {
         match ev {
             Ev::WgStart { wg } => self.on_wg_start(now, wg),
-            Ev::StationTx { req } => self.on_station_tx(now, req),
-            Ev::SwitchOut { req } => self.on_switch_out(now, req),
+            Ev::Hop => {}
             Ev::TargetArrive { req } => self.on_target_arrive(now, req),
             Ev::Retry { req } => self.translate(now, req),
-            Ev::L2Decision { gpu, station, page } => self.on_l2(now, gpu, station, page),
-            Ev::WalkDone { gpu, page } => self.on_walk_done(now, gpu, page),
-            Ev::HbmDone { req } => self.on_hbm_done(now, req),
-            Ev::AckSwitchOut { req } => self.on_ack_switch_out(now, req),
-            Ev::AckArrive { req } => self.on_ack_arrive(now, req),
-            Ev::PrefetchIssue { gpu, page, rail } => {
-                self.admit_hint(now, gpu, Hint { page: PageId(page), rail })
+            Ev::L2Decision { gpu, station, page } => {
+                self.on_l2(now, gpu as u32, station as u32, page)
             }
-            Ev::PrefetchDone { gpu, page } => self.on_walk_done(now, gpu, page),
+            Ev::WalkDone { gpu, page } => self.on_walk_done(now, gpu as u32, page),
+            Ev::AckArrive { req } => self.on_ack_arrive(now, req),
+            Ev::PrefetchIssue { gpu, rail, page } => {
+                self.admit_hint(now, gpu as u32, Hint { page: PageId(page), rail: rail as u32 })
+            }
+            Ev::PrefetchDone { gpu, page } => self.on_walk_done(now, gpu as u32, page),
         }
     }
 
@@ -334,6 +351,13 @@ impl PodSim {
         }
     }
 
+    /// Issue one remote store at `now`, fusing its forward hop chain:
+    /// local fabric, station uplink serialization, switch pipeline and
+    /// egress serialization are all computed here in one pass, and only
+    /// the terminal `TargetArrive` is scheduled (plus `Hop` markers under
+    /// the per-hop policy). Requests that never translate — intra-node
+    /// SPA traffic (§2.3) or disabled-RAT ideal runs — fuse all the way
+    /// through the response path and cost a single `AckArrive` event.
     fn issue_one(&mut self, now: Time, wg: u32) {
         let page_bytes = self.cfg.trans.page_bytes;
         let w = &mut self.wgs[wg as usize];
@@ -341,22 +365,43 @@ impl PodSim {
         let op = w.op;
         let seq = self.issue_seq[op.src as usize];
         self.issue_seq[op.src as usize] += 1;
+        debug_assert!(seq <= u32::MAX as u64, "per-source issue sequence overflows u32");
+        let rail = self.topo.rail(op.src, op.dst);
+        let internode = self.cfg.is_internode(op.src, op.dst);
+        let t_tx = now + self.t_fabric;
+        let (t_switch_out, t_arrive) = self.net.path(op.src, op.dst, rail, t_tx, len);
         let req = Request {
-            wg,
-            seq,
-            bytes: len as u32,
             page: dst_offset / page_bytes,
+            issue: now,
+            target_arrive: t_arrive,
+            wg,
+            seq: seq as u32,
             src: op.src as u16,
             dst: op.dst as u16,
-            rail: self.topo.rail(op.src, op.dst) as u16,
-            internode: self.cfg.is_internode(op.src, op.dst),
-            issue: now,
-            target_arrive: 0,
-            rat_done: 0,
-            class: TransClass::Ideal,
+            rail: rail as u16,
+            internode,
         };
         let rid = self.alloc(req);
-        self.engine.schedule_at(now + self.t_fabric, Ev::StationTx { req: rid });
+        if self.per_hop {
+            self.engine.schedule_at(t_tx, Ev::Hop);
+            self.engine.schedule_at(t_switch_out, Ev::Hop);
+        }
+        if self.cfg.trans.enabled && internode {
+            self.engine.schedule_at(t_arrive, Ev::TargetArrive { req: rid });
+        } else {
+            // No reverse translation at the target: the response chain is
+            // deterministic too — fuse it now (class matches the old
+            // per-event engine: disabled RAT ⇒ Ideal, else SPA intra-node).
+            let class = if self.cfg.trans.enabled {
+                TransClass::IntraNode
+            } else {
+                TransClass::Ideal
+            };
+            if self.per_hop {
+                self.engine.schedule_at(t_arrive, Ev::Hop);
+            }
+            self.finish_translation(t_arrive, rid, class);
+        }
     }
 
     /// Schedule `PrefetchIssue` events for one op's upcoming pages
@@ -373,7 +418,11 @@ impl PodSim {
         for (delay, h) in self.prefetcher.plan_op(&self.cfg, rail, &op) {
             self.engine.schedule_at(
                 now + delay,
-                Ev::PrefetchIssue { gpu: op.dst, page: h.page.0, rail: h.rail },
+                Ev::PrefetchIssue {
+                    gpu: op.dst as u16,
+                    rail: h.rail as u16,
+                    page: h.page.0,
+                },
             );
         }
     }
@@ -408,7 +457,10 @@ impl PodSim {
     /// called whenever a hint slot frees up.
     fn reissue_next_deferred(&mut self, now: Time, gpu: u32) {
         if let Some(h) = self.prefetcher.next_deferred(gpu) {
-            self.engine.schedule_at(now, Ev::PrefetchIssue { gpu, page: h.page.0, rail: h.rail });
+            self.engine.schedule_at(
+                now,
+                Ev::PrefetchIssue { gpu: gpu as u16, rail: h.rail as u16, page: h.page.0 },
+            );
         }
     }
 
@@ -447,40 +499,13 @@ impl PodSim {
         }
     }
 
-    // ---------- forward network path ----------
-
-    fn on_station_tx(&mut self, now: Time, req: u32) {
-        let (src, rail, bytes) = {
-            let r = &self.slab[req as usize];
-            (r.src as u32, r.rail as u32, r.bytes as u64)
-        };
-        let sw_arr = self.net.station_to_switch(src, rail, now, bytes);
-        self.engine
-            .schedule_at(sw_arr + self.net.switch_latency(), Ev::SwitchOut { req });
-    }
-
-    fn on_switch_out(&mut self, now: Time, req: u32) {
-        let (dst, rail, bytes) = {
-            let r = &self.slab[req as usize];
-            (r.dst as u32, r.rail as u32, r.bytes as u64)
-        };
-        let dst_arr = self.net.switch_to_station(rail, dst, now, bytes);
-        self.engine.schedule_at(dst_arr, Ev::TargetArrive { req });
-    }
-
     // ---------- reverse translation at the target ----------
 
     fn on_target_arrive(&mut self, now: Time, req: u32) {
-        self.slab[req as usize].target_arrive = now;
-        let internode = self.slab[req as usize].internode;
-        if !self.cfg.trans.enabled {
-            self.complete_translation(now, req, TransClass::Ideal);
-        } else if !internode {
-            // Intra-node: SPA addressing, no reverse translation (§2.3).
-            self.complete_translation(now, req, TransClass::IntraNode);
-        } else {
-            self.translate(now, req);
-        }
+        debug_assert_eq!(self.slab[req as usize].target_arrive, now);
+        // Only translated requests schedule a real `TargetArrive` (the
+        // bypass classes fused straight through at issue).
+        self.translate(now, req);
     }
 
     /// L1 stage (also the retry entry point after MSHR-full stalls).
@@ -492,7 +517,7 @@ impl PodSim {
         let decision = now + self.t_l1;
         let mmu = &mut self.mmus[dst];
         if mmu.l1[rail].lookup(page.0) {
-            self.complete_translation(decision, req, TransClass::L1Hit);
+            self.finish_translation(decision, req, TransClass::L1Hit);
             return;
         }
         match mmu.mshr[rail].lookup_or_alloc(page, req) {
@@ -502,7 +527,7 @@ impl PodSim {
             MshrOutcome::Allocated => {
                 self.engine.schedule_at(
                     decision,
-                    Ev::L2Decision { gpu: dst as u32, station: rail as u32, page: page.0 },
+                    Ev::L2Decision { gpu: dst as u16, station: rail as u16, page: page.0 },
                 );
             }
             MshrOutcome::Full => {
@@ -617,7 +642,7 @@ impl PodSim {
             } else {
                 TransClass::MshrHit(outcome)
             };
-            self.complete_translation(now, rid, class);
+            self.finish_translation(now, rid, class);
         }
         // MSHR slots freed: retry stalled requests (they re-run the L1
         // stage; the page may now hit).
@@ -629,66 +654,51 @@ impl PodSim {
         }
     }
 
-    /// Translation resolved (or bypassed): account, then HBM write.
-    fn complete_translation(&mut self, now: Time, req: u32, class: TransClass) {
-        {
-            let r = &mut self.slab[req as usize];
-            r.rat_done = now;
-            r.class = class;
-        }
+    /// Translation resolved (or bypassed) at time `at`: classify, fuse the
+    /// deterministic response chain — HBM write, ACK uplink serialization,
+    /// switch pipeline/egress, return fabric — in one pass, schedule the
+    /// terminal `AckArrive`, and record every per-request latency
+    /// component (all of them are known here; the histograms and
+    /// breakdown sums are order-insensitive, so accounting at this point
+    /// instead of at the ACK leaves `RunStats` bit-identical).
+    fn finish_translation(&mut self, at: Time, req: u32, class: TransClass) {
         self.stats.classes.record(class);
-        self.engine.schedule_at(now + self.t_hbm, Ev::HbmDone { req });
+        let (src, dst, rail, issue, target_arrive, internode, seq) = {
+            let r = &self.slab[req as usize];
+            (r.src, r.dst as u32, r.rail as u32, r.issue, r.target_arrive, r.internode, r.seq)
+        };
+        let t_hbm_done = at + self.t_hbm;
+        let ack = self.cfg.link.ack_bytes;
+        let (t_ack_switch_out, ack_arr) =
+            self.net.path(dst, src as u32, rail, t_hbm_done, ack);
+        let t_ack = ack_arr + self.t_fabric;
+        if self.per_hop {
+            self.engine.schedule_at(t_hbm_done, Ev::Hop);
+            self.engine.schedule_at(t_ack_switch_out, Ev::Hop);
+        }
+        self.engine.schedule_at(t_ack, Ev::AckArrive { req });
+        // Per-request accounting (previously on the ACK event; every
+        // component is already determined here).
+        let rat = at - target_arrive;
+        self.stats.breakdown.fabric += 2 * self.t_fabric as u128;
+        self.stats.breakdown.net_fwd += (target_arrive - (issue + self.t_fabric)) as u128;
+        self.stats.breakdown.translation += rat as u128;
+        self.stats.breakdown.memory += self.t_hbm as u128;
+        self.stats.breakdown.net_ack += ((t_ack - self.t_fabric) - t_hbm_done) as u128;
+        self.stats.rtt_hist.record(t_ack - issue);
+        if internode {
+            self.stats.internode_requests += 1;
+            self.stats.rat_hist.record(rat);
+            if self.trace_src == Some(src) {
+                self.stats.trace.push((seq as u64, rat));
+            }
+        }
     }
 
     // ---------- response path ----------
 
-    fn on_hbm_done(&mut self, now: Time, req: u32) {
-        let (dst, rail) = {
-            let r = &self.slab[req as usize];
-            (r.dst as u32, r.rail as u32)
-        };
-        let ack = self.cfg.link.ack_bytes;
-        let sw_arr = self.net.station_to_switch(dst, rail, now, ack);
-        self.engine
-            .schedule_at(sw_arr + self.net.switch_latency(), Ev::AckSwitchOut { req });
-    }
-
-    fn on_ack_switch_out(&mut self, now: Time, req: u32) {
-        let (src, rail) = {
-            let r = &self.slab[req as usize];
-            (r.src as u32, r.rail as u32)
-        };
-        let ack = self.cfg.link.ack_bytes;
-        let arr = self.net.switch_to_station(rail, src, now, ack);
-        self.engine.schedule_at(arr + self.t_fabric, Ev::AckArrive { req });
-    }
-
     fn on_ack_arrive(&mut self, now: Time, req: u32) {
-        // Account the completed request.
-        let (wg, trace_entry) = {
-            let r = &self.slab[req as usize];
-            let rat = r.rat_done - r.target_arrive;
-            let hbm_done = r.rat_done + self.t_hbm;
-            self.stats.breakdown.fabric += 2 * self.t_fabric as u128;
-            self.stats.breakdown.net_fwd +=
-                (r.target_arrive - (r.issue + self.t_fabric)) as u128;
-            self.stats.breakdown.translation += rat as u128;
-            self.stats.breakdown.memory += self.t_hbm as u128;
-            self.stats.breakdown.net_ack += ((now - self.t_fabric) - hbm_done) as u128;
-            self.stats.rtt_hist.record(now - r.issue);
-            if r.internode {
-                self.stats.internode_requests += 1;
-                self.stats.rat_hist.record(rat);
-            }
-            let trace = match self.cfg.workload.trace_source_gpu {
-                Some(g) if g as u16 == r.src && r.internode => Some((r.seq, rat)),
-                _ => None,
-            };
-            (r.wg, trace)
-        };
-        if let Some(t) = trace_entry {
-            self.stats.trace.push(t);
-        }
+        let wg = self.slab[req as usize].wg;
         self.free.push(req);
         self.acked += 1;
 
@@ -766,6 +776,25 @@ mod tests {
         assert_eq!(a.classes, b.classes);
         assert_eq!(a.breakdown, b.breakdown);
         assert_eq!(a.events, b.events);
+    }
+
+    #[test]
+    fn per_hop_engine_matches_fused_and_costs_more_events() {
+        // The cheap in-module differential (the full preset grid lives in
+        // rust/tests/engine_diff.rs): identical results, ~3× the events.
+        let fused = run(&small(8, 4 * MIB)).unwrap();
+        let mut phc = small(8, 4 * MIB);
+        phc.engine = EnginePolicy::PerHop;
+        let per_hop = run(&phc).unwrap();
+        assert_eq!(fused.completion, per_hop.completion);
+        assert_eq!(fused.classes, per_hop.classes);
+        assert_eq!(fused.breakdown, per_hop.breakdown);
+        assert!(
+            per_hop.events as f64 >= 2.5 * fused.events as f64,
+            "hop markers should triple the event count: fused {} vs per-hop {}",
+            fused.events,
+            per_hop.events
+        );
     }
 
     #[test]

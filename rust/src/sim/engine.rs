@@ -5,15 +5,19 @@
 //! handlers schedule follow-on events with `schedule_at`/`schedule_in`.
 //! Monotonicity is enforced: scheduling into the past is a model bug and
 //! panics in debug builds (clamped to `now` in release).
+//!
+//! The pending set is a timing wheel fronting a 4-ary heap
+//! (`sim::wheel`): near-future events take the O(1) ring path, far-future
+//! ones the heap, with exact `(time, seq)` FIFO ordering across both.
 
-use super::queue::EventQueue;
+use super::wheel::TimingWheel;
 use crate::util::units::Time;
 
 #[derive(Debug)]
 pub struct Engine<E> {
     now: Time,
     seq: u64,
-    queue: EventQueue<E>,
+    queue: TimingWheel<E>,
     processed: u64,
     /// Optional event-count limit — a runaway-model backstop.
     pub max_events: u64,
@@ -27,10 +31,16 @@ impl<E> Default for Engine<E> {
 
 impl<E> Engine<E> {
     pub fn new() -> Self {
+        Self::with_capacity(1024)
+    }
+
+    /// Pre-size the pending set for `cap` events (models pass their
+    /// peak-outstanding bound so the hot loop never reallocates).
+    pub fn with_capacity(cap: usize) -> Self {
         Self {
             now: 0,
             seq: 0,
-            queue: EventQueue::with_capacity(1024),
+            queue: TimingWheel::with_capacity(cap),
             processed: 0,
             max_events: u64::MAX,
         }
@@ -65,22 +75,24 @@ impl<E> Engine<E> {
         self.seq += 1;
     }
 
+    /// True if the event set is exhausted.
+    pub fn idle(&self) -> bool {
+        self.queue.is_empty()
+    }
+}
+
+impl<E: Clone> Engine<E> {
     /// Pop the next event, advancing the clock to its timestamp.
     #[inline]
     pub fn next(&mut self) -> Option<(Time, E)> {
         if self.processed >= self.max_events {
             return None;
         }
-        let (t, ev) = self.queue.pop()?;
+        let (t, _seq, ev) = self.queue.pop()?;
         debug_assert!(t >= self.now);
         self.now = t;
         self.processed += 1;
         Some((t, ev))
-    }
-
-    /// True if the event set is exhausted.
-    pub fn idle(&self) -> bool {
-        self.queue.is_empty()
     }
 }
 
@@ -158,6 +170,21 @@ mod tests {
             e.schedule_in(1, v + 1);
         }
         assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn far_future_and_near_events_interleave_correctly() {
+        // Cross the wheel horizon in both directions: earlier events pop
+        // first regardless of scheduling order or which half of the
+        // pending set (ring vs overflow heap) holds them.
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(100_000_000, 1);
+        e.schedule_at(500, 0);
+        assert_eq!(e.next(), Some((500, 0)));
+        e.schedule_at(1_000, 2); // while the far event is pending
+        assert_eq!(e.next(), Some((1_000, 2)));
+        assert_eq!(e.next(), Some((100_000_000, 1)));
+        assert!(e.idle());
     }
 
     #[test]

@@ -3,16 +3,20 @@
 //! A deliberately small, fast kernel: an event is `(Time, seq, payload)`;
 //! the engine pops events in `(time, seq)` order so that same-timestamp
 //! events are processed in FIFO scheduling order, which makes every run a
-//! pure, bit-deterministic function of (config, seed). The model (the pod)
-//! owns the engine and drives the loop itself, so handlers can mutate the
+//! pure, bit-deterministic function of (config, seed). The pending set is
+//! a timing wheel (near-future ring) backed by a 4-ary heap (far-future
+//! overflow); ordering stays exact across both. The model (the pod) owns
+//! the engine and drives the loop itself, so handlers can mutate the
 //! whole model without borrow gymnastics.
 
 pub mod engine;
 pub mod queue;
 pub mod server;
+pub mod wheel;
 
 pub use engine::Engine;
 pub use queue::EventQueue;
 pub use server::{BoundedServer, Server};
+pub use wheel::TimingWheel;
 
 pub use crate::util::units::Time;

@@ -2,8 +2,10 @@
 //!
 //! A d-ary (4-ary) implicit heap keyed by `(time, seq)` with the payload
 //! stored inline. 4-ary beats binary here because sift-down dominates on
-//! pop and a 4-ary heap halves tree height; this queue is the hottest
-//! structure in the simulator (see EXPERIMENTS.md §Perf).
+//! pop and a 4-ary heap halves tree height. Since the timing-wheel front
+//! landed (`sim::wheel`) this heap serves as the wheel's overflow store
+//! for far-future events and as the reference ordering structure in the
+//! wheel's differential tests (see EXPERIMENTS.md §Perf).
 
 use crate::util::units::Time;
 
@@ -55,8 +57,11 @@ impl<E> EventQueue<E> {
         self.sift_up(self.heap.len() - 1);
     }
 
+    /// Pop the earliest event, returning its full `(time, seq)` key so
+    /// callers (traces, the wheel differential tests) can assert exact
+    /// FIFO ordering among simultaneous events.
     #[inline]
-    pub fn pop(&mut self) -> Option<(Time, E)> {
+    pub fn pop(&mut self) -> Option<(Time, u64, E)> {
         let n = self.heap.len();
         if n == 0 {
             return None;
@@ -67,7 +72,7 @@ impl<E> EventQueue<E> {
         if !self.heap.is_empty() {
             self.sift_down(0);
         }
-        Some((top.time, top.ev))
+        Some((top.time, top.seq, top.ev))
     }
 
     #[inline]
@@ -123,9 +128,9 @@ mod tests {
         q.push(30, 0, "c");
         q.push(10, 1, "a");
         q.push(20, 2, "b");
-        assert_eq!(q.pop(), Some((10, "a")));
-        assert_eq!(q.pop(), Some((20, "b")));
-        assert_eq!(q.pop(), Some((30, "c")));
+        assert_eq!(q.pop(), Some((10, 1, "a")));
+        assert_eq!(q.pop(), Some((20, 2, "b")));
+        assert_eq!(q.pop(), Some((30, 0, "c")));
         assert_eq!(q.pop(), None);
     }
 
@@ -136,7 +141,7 @@ mod tests {
             q.push(5, i, i);
         }
         for i in 0..100u64 {
-            assert_eq!(q.pop(), Some((5, i)));
+            assert_eq!(q.pop(), Some((5, i, i)));
         }
     }
 
@@ -161,7 +166,10 @@ mod tests {
                 q.push(t, i as u64, (t, i as u64));
             }
             let mut last: Option<(u64, u64)> = None;
-            while let Some((_, key)) = q.pop() {
+            while let Some((t, s, key)) = q.pop() {
+                if (t, s) != key {
+                    return false;
+                }
                 if let Some(prev) = last {
                     if prev > key {
                         return false;
@@ -184,12 +192,12 @@ mod tests {
                 seq += 1;
             }
             if round % 3 == 0 {
-                if let Some((t, _)) = q.pop() {
+                if let Some((t, _, _)) = q.pop() {
                     popped.push(t);
                 }
             }
         }
-        while let Some((t, _)) = q.pop() {
+        while let Some((t, _, _)) = q.pop() {
             popped.push(t);
         }
         assert_eq!(popped.len(), 500);

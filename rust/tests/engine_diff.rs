@@ -1,0 +1,153 @@
+//! Fused-vs-per-hop engine differential: the correctness bar for the
+//! event-fusion fast path (`pod::sim`, `EnginePolicy`).
+//!
+//! Both policies must produce **bit-identical** `RunStats` — every
+//! completion time, latency sum, histogram, translation-class counter,
+//! trace entry and conservation counter — across the preset grid,
+//! including prefetch-enabled and stall-heavy configurations. Only the
+//! raw processed-event count may (and must) differ: the per-hop engine
+//! materializes its marker events, the fused engine doesn't.
+
+use ratsim::config::presets::quick_test;
+use ratsim::config::{EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing};
+use ratsim::pod;
+use ratsim::stats::RunStats;
+use ratsim::util::units::MIB;
+
+fn base(gpus: u32, size: u64) -> PodConfig {
+    let mut c = quick_test(gpus, size);
+    c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 5_000 };
+    c
+}
+
+/// Field-by-field equality, `events` and `wall_seconds` excepted.
+fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
+    assert_eq!(fused.completion, per_hop.completion, "{label}: completion");
+    assert_eq!(fused.requests, per_hop.requests, "{label}: requests");
+    assert_eq!(
+        fused.internode_requests, per_hop.internode_requests,
+        "{label}: internode_requests"
+    );
+    assert_eq!(fused.breakdown, per_hop.breakdown, "{label}: latency breakdown");
+    assert_eq!(fused.classes, per_hop.classes, "{label}: translation classes");
+    assert_eq!(fused.rat_hist, per_hop.rat_hist, "{label}: RAT histogram");
+    assert_eq!(fused.rtt_hist, per_hop.rtt_hist, "{label}: RTT histogram");
+    assert_eq!(fused.trace, per_hop.trace, "{label}: per-request trace");
+    assert_eq!(fused.walks_started, per_hop.walks_started, "{label}: walks_started");
+    assert_eq!(fused.walks_queued, per_hop.walks_queued, "{label}: walks_queued");
+    assert_eq!(
+        fused.peak_active_walks, per_hop.peak_active_walks,
+        "{label}: peak_active_walks"
+    );
+    assert_eq!(fused.prefetch_walks, per_hop.prefetch_walks, "{label}: prefetch_walks");
+    assert_eq!(
+        fused.pretranslated_pages, per_hop.pretranslated_pages,
+        "{label}: pretranslated_pages"
+    );
+    assert_eq!(fused.prefetch_issued, per_hop.prefetch_issued, "{label}: prefetch_issued");
+    assert_eq!(fused.prefetch_useful, per_hop.prefetch_useful, "{label}: prefetch_useful");
+    assert_eq!(fused.prefetch_late, per_hop.prefetch_late, "{label}: prefetch_late");
+    assert_eq!(
+        fused.prefetch_useless, per_hop.prefetch_useless,
+        "{label}: prefetch_useless"
+    );
+    assert_eq!(
+        fused.prefetch_deferred, per_hop.prefetch_deferred,
+        "{label}: prefetch_deferred"
+    );
+    assert_eq!(fused.l2_fills, per_hop.l2_fills, "{label}: l2_fills");
+    assert_eq!(fused.mshr_peak, per_hop.mshr_peak, "{label}: mshr_peak");
+    assert_eq!(fused.mshr_full_stalls, per_hop.mshr_full_stalls, "{label}: mshr_full_stalls");
+    assert_eq!(
+        fused.max_touched_pages, per_hop.max_touched_pages,
+        "{label}: max_touched_pages"
+    );
+    // The engines must actually differ in event volume, or the knob is
+    // wired to nothing.
+    assert!(
+        per_hop.events > fused.events,
+        "{label}: per-hop must process more events (fused {}, per-hop {})",
+        fused.events,
+        per_hop.events
+    );
+}
+
+fn run_both(mut cfg: PodConfig, label: &str) {
+    cfg.engine = EnginePolicy::Fused;
+    let fused = pod::run(&cfg).unwrap_or_else(|e| panic!("{label}: fused run failed: {e:#}"));
+    cfg.engine = EnginePolicy::PerHop;
+    let per_hop =
+        pod::run(&cfg).unwrap_or_else(|e| panic!("{label}: per-hop run failed: {e:#}"));
+    assert_bit_identical(&fused, &per_hop, label);
+}
+
+#[test]
+fn preset_grid_is_bit_identical() {
+    // Pod sizes × collective sizes: single-node (all intra-node), the
+    // paper's 8/16-GPU cells, and an oversubscribed-rail pod.
+    for gpus in [4u32, 8, 16, 32] {
+        for size in [MIB, 8 * MIB] {
+            run_both(base(gpus, size), &format!("baseline-{gpus}gpu-{size}B"));
+        }
+    }
+}
+
+#[test]
+fn ideal_runs_are_bit_identical() {
+    // Translation disabled: every request takes the fully-fused
+    // single-event path.
+    for gpus in [8u32, 16] {
+        let mut c = base(gpus, 4 * MIB);
+        c.trans.enabled = false;
+        run_both(c, &format!("ideal-{gpus}gpu"));
+    }
+}
+
+#[test]
+fn prefetch_policies_are_bit_identical() {
+    // §6 hint streams contend for walkers — the richest event mix.
+    let mut sw = base(16, 8 * MIB);
+    sw.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+    run_both(sw, "sw-guided");
+
+    let mut paced = base(16, 8 * MIB);
+    paced.trans.prefetch_policy =
+        PrefetchPolicy::SwGuided { lead_ps: ratsim::util::units::us(50), rate: 1 };
+    run_both(paced, "sw-guided-rate1");
+
+    let mut fused_policy = base(16, MIB);
+    fused_policy.trans.prefetch_policy = PrefetchPolicy::Fused;
+    run_both(fused_policy, "fused-pretranslation");
+
+    let mut stride = base(8, 16 * MIB);
+    stride.trans.prefetch.enabled = true;
+    stride.trans.prefetch.depth = 2;
+    run_both(stride, "stride-prefetch");
+
+    let mut pre = base(8, 4 * MIB);
+    pre.trans.pretranslate.enabled = true;
+    pre.trans.pretranslate.pages_per_pair = 0;
+    run_both(pre, "pretranslate");
+}
+
+#[test]
+fn stall_and_serialization_paths_are_bit_identical() {
+    // MSHR-full stalls + retries.
+    let mut stall = base(8, 8 * MIB);
+    stall.trans.page_bytes = 64 * 1024;
+    stall.trans.l1_mshrs = 1;
+    stall.trans.l1.entries = 2;
+    run_both(stall, "mshr-stalls");
+
+    // Single walker: queued walks re-scheduled from completions.
+    let mut one = base(8, 16 * MIB);
+    one.trans.parallel_walkers = 1;
+    run_both(one, "single-walker");
+}
+
+#[test]
+fn traced_runs_are_bit_identical() {
+    let mut c = base(16, MIB);
+    c.workload.trace_source_gpu = Some(0);
+    run_both(c, "traced");
+}
