@@ -166,6 +166,46 @@ fn main() {
         records.push(j);
     }
 
+    // Multi-tenant serving workload (the tenancy axis): a 64-GPU pod
+    // shared by a 3-decode + 1-prefill inference mix, run through
+    // `pod::run_workload` (per-job accounting + cross-job eviction
+    // tracking on the hot path).
+    print_header("multi-tenant workload throughput (events/second)");
+    {
+        use ratsim::collective::workload::Workload;
+        use ratsim::config::presets::inference_mix_spec;
+        let name = "pod_64gpu_4job_mix_500k_reqs";
+        let mut pc = paper_baseline(64, 64 << 20);
+        pc.name = name.into();
+        let target = if quick() { 30_000 } else { 500_000 };
+        pc.workload.request_sizing = RequestSizing::Auto { target_total_requests: target };
+        let spec = inference_mix_spec(3, 1);
+        let workload =
+            Workload::from_spec(&spec, 64, pc.trans.page_bytes).expect("workload build");
+        let s0 = pod::run_workload(&pc, workload.clone()).expect("workload run");
+        let (events, requests) = (s0.events, s0.requests);
+        let r = bench_items(name, &cfg, events, || {
+            pod::run_workload(&pc, workload.clone()).expect("workload run");
+        });
+        print_result(&r);
+        let evps = events as f64 / r.mean.as_secs_f64();
+        let rps = requests as f64 / r.mean.as_secs_f64();
+        println!(
+            "  -> {events} events/run ({requests} requests, {} jobs, {} cross-job L2 evictions), {:.2}M events/s, {:.2}M reqs/s",
+            s0.jobs.len(),
+            s0.cross_job_l2_evictions,
+            evps / 1e6,
+            rps / 1e6
+        );
+        let mut j = r.to_json();
+        j.set("events", Json::from(events));
+        j.set("requests", Json::from(requests));
+        j.set("events_per_sec", Json::from(evps));
+        j.set("requests_per_sec", Json::from(rps));
+        j.set("jobs", Json::from(s0.jobs.len() as u64));
+        records.push(j);
+    }
+
     // Perf-trajectory tracking: compare against the recorded snapshot.
     let baseline = bench_common::load_baseline(std::path::Path::new("BENCH_baseline.json"));
     if baseline.is_empty() {

@@ -34,6 +34,7 @@ pub fn alltoall_allpairs(gpus: u32, size_bytes: u64) -> Result<Schedule> {
                 dst_offset: src as u64 * chunk,
                 bytes: chunk,
                 after: None,
+                job: 0,
             });
         }
     }
@@ -66,6 +67,7 @@ pub fn allgather_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
                 dst_offset: src as u64 * shard,
                 bytes: shard,
                 after: None,
+                job: 0,
             });
         }
     }
@@ -102,6 +104,7 @@ pub fn allreduce_ring(gpus: u32, size_bytes: u64) -> Result<Schedule> {
                 dst_offset: chunk_idx as u64 * chunk,
                 bytes: chunk,
                 after: prev,
+                job: 0,
             });
             prev = Some(id);
         }
@@ -135,6 +138,7 @@ pub fn reducescatter_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
                 dst_offset: dst as u64 * shard,
                 bytes: shard,
                 after: None,
+                job: 0,
             });
         }
     }
@@ -150,6 +154,95 @@ pub fn reducescatter_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
     }
     let s = Schedule {
         name: format!("reducescatter-direct-{gpus}gpu-{}", fmt_bytes(size_bytes)),
+        gpus,
+        size_bytes,
+        ops,
+    };
+    s.validate()?;
+    Ok(s)
+}
+
+/// MoE expert-parallel All-to-All with skewed expert routing (the
+/// inference-serving traffic pattern; see WORKLOADS.md).
+///
+/// Token routing in Mixture-of-Experts serving is rarely uniform: hot
+/// experts receive a disproportionate share of every source's tokens
+/// (production collective profiles report heavily skewed all-to-all
+/// sizes). This generator models that with a Zipf-like popularity over
+/// expert hosts: the destination ranked `r` under a seeded shuffle gets
+/// weight `1/(r+1)^skew`. `skew = 0.0` degenerates to the uniform
+/// all-pairs split; `skew ≈ 1.0–2.0` concentrates most bytes on a few hot
+/// GPUs. Which GPUs are hot is drawn deterministically from `seed`.
+///
+/// Each source routes its `size_bytes` of tokens across all experts by
+/// weight (the self-share stays local and is not sent); each destination
+/// lays sources out contiguously in source-rank order, so its receive
+/// window equals the bytes actually routed to it. All ops are concurrent,
+/// like the uniform all-pairs schedule. (src, dst) pairs whose weighted
+/// share rounds to zero bytes simply get no op — `validate()` rejects
+/// zero-byte sends.
+pub fn moe_alltoall_skewed(gpus: u32, size_bytes: u64, skew: f64, seed: u64) -> Result<Schedule> {
+    if gpus < 2 {
+        bail!("collectives need >= 2 GPUs");
+    }
+    if !(0.0..=4.0).contains(&skew) || !skew.is_finite() {
+        bail!("expert-routing skew must be in [0, 4], got {skew}");
+    }
+    if size_bytes < gpus as u64 {
+        bail!("size {size_bytes} too small for {gpus} GPUs");
+    }
+    // Zipf-like weight per destination over a seeded hot-expert ranking.
+    let mut order: Vec<u32> = (0..gpus).collect();
+    let mut rng = crate::util::rng::Rng::new(seed ^ 0x4D6F_4532); // "MoE2"
+    rng.shuffle(&mut order);
+    let mut weight = vec![0f64; gpus as usize];
+    for (rank, &g) in order.iter().enumerate() {
+        weight[g as usize] = 1.0 / ((rank + 1) as f64).powf(skew);
+    }
+    let wsum: f64 = weight.iter().sum();
+    // Integer share matrix: share[src][dst], each source's shares summing
+    // exactly to size_bytes (the rounding remainder goes to the rank-0
+    // GPU of the seeded shuffle, so totals are conserved exactly).
+    let hottest = order[0] as usize;
+    let mut share = vec![vec![0u64; gpus as usize]; gpus as usize];
+    for row in &mut share {
+        let mut given = 0u64;
+        for (d, &w) in weight.iter().enumerate() {
+            row[d] = ((size_bytes as f64) * w / wsum).floor() as u64;
+            given += row[d];
+        }
+        row[hottest] += size_bytes - given;
+    }
+    // Destination layout: contiguous per-source slots in source order.
+    let mut ops = Vec::new();
+    for d in 0..gpus as usize {
+        let mut offset = 0u64;
+        for (s, row) in share.iter().enumerate() {
+            let bytes = row[d];
+            if s == d || bytes == 0 {
+                continue;
+            }
+            ops.push(SendOp {
+                id: 0, // re-assigned densely below (dst-major build order)
+                src: s as u32,
+                dst: d as u32,
+                dst_offset: offset,
+                bytes,
+                after: None,
+                job: 0,
+            });
+            offset += bytes;
+        }
+    }
+    for (i, op) in ops.iter_mut().enumerate() {
+        op.id = i as u32;
+    }
+    let s = Schedule {
+        name: format!(
+            "moe-a2a-skew{:.2}-{gpus}gpu-{}",
+            skew,
+            fmt_bytes(size_bytes)
+        ),
         gpus,
         size_bytes,
         ops,
@@ -262,5 +355,68 @@ mod tests {
     fn too_small_sizes_rejected() {
         assert!(alltoall_allpairs(16, 8).is_err());
         assert!(alltoall_allpairs(1, MIB).is_err());
+    }
+
+    #[test]
+    fn moe_skew_conserves_per_source_totals() {
+        let gpus = 16u32;
+        let s = moe_alltoall_skewed(gpus, MIB, 1.2, 7).unwrap();
+        s.validate().unwrap();
+        // Every source sends exactly size minus its (local) self-share; in
+        // aggregate that is gpus*size minus the sum of self-shares, and no
+        // source exceeds size.
+        for src in 0..gpus {
+            let sent: u64 = s.ops.iter().filter(|o| o.src == src).map(|o| o.bytes).sum();
+            assert!(sent <= MIB, "src {src} oversends: {sent}");
+            assert!(sent > 0, "src {src} sends nothing");
+        }
+        // Receive windows are dense (no holes): window == received bytes.
+        for dst in 0..gpus {
+            let recv: u64 = s.ops.iter().filter(|o| o.dst == dst).map(|o| o.bytes).sum();
+            assert_eq!(s.recv_window_bytes(dst), recv);
+        }
+    }
+
+    #[test]
+    fn moe_zero_skew_is_uniform() {
+        let s = moe_alltoall_skewed(8, MIB, 0.0, 3).unwrap();
+        // Uniform weights: every (src,dst) share is size/gpus, except the
+        // remainder-absorbing hottest destination.
+        let shares: Vec<u64> = s.ops.iter().map(|o| o.bytes).collect();
+        let base = MIB / 8;
+        assert!(shares.iter().all(|&b| b == base || b == base + (MIB - 8 * base)));
+        assert_eq!(s.ops.len(), 8 * 7);
+    }
+
+    #[test]
+    fn moe_high_skew_concentrates_traffic() {
+        let gpus = 16u32;
+        let s = moe_alltoall_skewed(gpus, 16 * MIB, 2.0, 11).unwrap();
+        let windows: Vec<u64> = (0..gpus).map(|d| s.recv_window_bytes(d)).collect();
+        let hot = *windows.iter().max().unwrap();
+        let cold = *windows.iter().min().unwrap();
+        assert!(
+            hot > 4 * cold.max(1),
+            "skew 2.0 should concentrate traffic: hot {hot} vs cold {cold}"
+        );
+        // Uniform reference: each destination receives (gpus-1) shares.
+        let uniform = (gpus as u64 - 1) * (16 * MIB / gpus as u64);
+        assert!(hot > uniform, "hottest expert must beat the uniform window");
+    }
+
+    #[test]
+    fn moe_is_seed_deterministic() {
+        let a = moe_alltoall_skewed(16, MIB, 1.2, 42).unwrap();
+        let b = moe_alltoall_skewed(16, MIB, 1.2, 42).unwrap();
+        assert_eq!(a, b, "same seed must give a bit-identical schedule");
+        let c = moe_alltoall_skewed(16, MIB, 1.2, 43).unwrap();
+        assert_ne!(a.ops, c.ops, "different seeds should pick different hot experts");
+    }
+
+    #[test]
+    fn moe_rejects_bad_skew() {
+        assert!(moe_alltoall_skewed(8, MIB, -0.5, 0).is_err());
+        assert!(moe_alltoall_skewed(8, MIB, 9.0, 0).is_err());
+        assert!(moe_alltoall_skewed(8, MIB, f64::NAN, 0).is_err());
     }
 }

@@ -1,14 +1,23 @@
 //! Collective schedule layer — the ASTRA-sim workload-layer substitute.
 //!
 //! A [`Schedule`] is a set of [`SendOp`]s: `(src, dst, offset, bytes,
-//! after)` remote-store streams, the same two-sided representation the
-//! MSCCLang example scripts synthesize (§3). Generators cover the paper's
-//! all-pairs/direct All-to-All plus direct AllGather and ring AllReduce
-//! baselines; `mscclang` round-trips schedules through a JSON IR.
+//! after, job)` remote-store streams, the same two-sided representation
+//! the MSCCLang example scripts synthesize (§3). Generators cover the
+//! paper's all-pairs/direct All-to-All plus direct AllGather, ring
+//! AllReduce and direct ReduceScatter baselines and a skewed MoE
+//! expert-parallel All-to-All for serving traffic; `mscclang` round-trips
+//! schedules through a JSON IR, and [`workload`] composes many per-job
+//! schedules into one multi-tenant run (see WORKLOADS.md for the full
+//! scenario catalog).
 
 pub mod generators;
 pub mod mscclang;
 pub mod schedule;
+pub mod workload;
 
-pub use generators::{allgather_direct, allreduce_ring, alltoall_allpairs, build, reducescatter_direct};
-pub use schedule::{OpId, Schedule, SendOp};
+pub use generators::{
+    allgather_direct, allreduce_ring, alltoall_allpairs, build, moe_alltoall_skewed,
+    reducescatter_direct,
+};
+pub use schedule::{JobId, OpId, Schedule, SendOp};
+pub use workload::{arrival_offsets, JobDesc, Workload, WorkloadBuilder};

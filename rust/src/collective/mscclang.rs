@@ -10,6 +10,8 @@ use super::schedule::{Schedule, SendOp};
 use crate::util::json::Json;
 use anyhow::{Context, Result};
 
+/// Serialize a schedule to the JSON IR (op list + metadata). The `job`
+/// tag is included so multi-tenant merged schedules round-trip.
 pub fn export_json(s: &Schedule) -> Json {
     Json::from_pairs(vec![
         ("name", Json::from(s.name.as_str())),
@@ -31,6 +33,7 @@ pub fn export_json(s: &Schedule) -> Json {
                                 "after",
                                 o.after.map(|a| Json::from(a as u64)).unwrap_or(Json::Null),
                             ),
+                            ("job", Json::from(o.job as u64)),
                         ])
                     })
                     .collect(),
@@ -39,6 +42,8 @@ pub fn export_json(s: &Schedule) -> Json {
     ])
 }
 
+/// Parse a schedule from the JSON IR and validate it. Schedules written
+/// before the `job` tag existed load with every op on job 0.
 pub fn import_json(j: &Json) -> Result<Schedule> {
     let ops = j
         .get("ops")
@@ -53,6 +58,15 @@ pub fn import_json(j: &Json) -> Result<Schedule> {
                 dst_offset: o.req_u64("dst_offset")?,
                 bytes: o.req_u64("bytes")?,
                 after: o.get("after").and_then(Json::as_u64).map(|a| a as u32),
+                job: {
+                    let job = o.get("job").and_then(Json::as_u64).unwrap_or(0);
+                    anyhow::ensure!(
+                        job <= u16::MAX as u64,
+                        "op job tag {job} exceeds the {} job limit",
+                        u16::MAX
+                    );
+                    job as u16
+                },
             })
         })
         .collect::<Result<Vec<_>>>()?;
@@ -66,11 +80,13 @@ pub fn import_json(j: &Json) -> Result<Schedule> {
     Ok(s)
 }
 
+/// Write a schedule's JSON IR to `path` (pretty-printed).
 pub fn save(s: &Schedule, path: &std::path::Path) -> Result<()> {
     std::fs::write(path, export_json(s).to_string_pretty())
         .with_context(|| format!("writing schedule to {}", path.display()))
 }
 
+/// Read and validate a schedule from a JSON IR file.
 pub fn load(path: &std::path::Path) -> Result<Schedule> {
     let text = std::fs::read_to_string(path)
         .with_context(|| format!("reading schedule from {}", path.display()))?;
@@ -98,6 +114,29 @@ mod tests {
         let text = j.to_string_pretty();
         let back = import_json(&Json::parse(&text).unwrap()).unwrap();
         assert_eq!(s, back);
+    }
+
+    #[test]
+    fn job_tags_roundtrip_and_default_to_zero() {
+        let mut s = alltoall_allpairs(4, MIB).unwrap();
+        for (i, op) in s.ops.iter_mut().enumerate() {
+            op.job = (i % 3) as u16;
+        }
+        let back = import_json(&export_json(&s)).unwrap();
+        assert_eq!(s, back);
+        // Pre-job IR files (no `job` field) load with job 0 everywhere.
+        let mut j = export_json(&s);
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Arr(ops)) = o.get_mut("ops") {
+                for op in ops {
+                    if let Json::Obj(fields) = op {
+                        fields.remove("job");
+                    }
+                }
+            }
+        }
+        let legacy = import_json(&j).unwrap();
+        assert!(legacy.ops.iter().all(|o| o.job == 0));
     }
 
     #[test]

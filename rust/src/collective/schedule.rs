@@ -2,31 +2,49 @@
 
 use anyhow::{bail, Result};
 
+/// Dense identifier of a [`SendOp`] within its [`Schedule`].
 pub type OpId = u32;
+
+/// Identifier of the tenant job a [`SendOp`] belongs to. Single-schedule
+/// runs use job 0 throughout; the multi-tenant composer
+/// ([`crate::collective::workload`]) tags each merged op with its job.
+pub type JobId = u16;
 
 /// One remote-store stream: `src` writes `bytes` into `dst`'s receive
 /// window starting at `dst_offset`. A unique workgroup executes each op
 /// (the all-pairs pattern: "at each GPU source, a unique WG transmits a
 /// chunk of data to each destination"). `after` encodes phase dependencies
-/// (ring algorithms); ops with `after == None` start at t=0.
+/// (ring algorithms); ops with `after == None` start when their job
+/// arrives (t=0 for single-schedule runs).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct SendOp {
+    /// Dense, ordered op id (index into `Schedule::ops`).
     pub id: OpId,
+    /// Source GPU issuing the remote stores.
     pub src: u32,
+    /// Destination GPU whose Link MMU translates the stream.
     pub dst: u32,
     /// Byte offset into the destination GPU's receive window (NPA space).
     pub dst_offset: u64,
+    /// Bytes this op moves over the fabric (must be > 0).
     pub bytes: u64,
+    /// Phase dependency: this op starts when op `after` completes.
     pub after: Option<OpId>,
+    /// Tenant job this op belongs to (0 for single-job schedules).
+    pub job: JobId,
 }
 
+/// A collective schedule: the set of [`SendOp`] streams one run executes.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Schedule {
+    /// Human-readable label (flows into `RunStats::config_name` contexts).
     pub name: String,
+    /// Pod size the schedule was generated for.
     pub gpus: u32,
     /// §3: "the 'size' of the collective is the larger of a single GPU's
     /// input or output buffer".
     pub size_bytes: u64,
+    /// The send streams, in dense id order.
     pub ops: Vec<SendOp>,
 }
 
@@ -48,9 +66,11 @@ impl Schedule {
     }
 
     /// Distinct translation pages touched at `dst` for `page_bytes` pages.
+    /// Zero-byte ops (rejected by [`Schedule::validate`]) are skipped so an
+    /// unvalidated schedule cannot register phantom pages here.
     pub fn dst_pages(&self, dst: u32, page_bytes: u64) -> u64 {
         let mut pages = std::collections::BTreeSet::new();
-        for o in self.ops.iter().filter(|o| o.dst == dst) {
+        for o in self.ops.iter().filter(|o| o.dst == dst && o.bytes > 0) {
             let first = o.dst_offset / page_bytes;
             let last = (o.dst_offset + o.bytes - 1) / page_bytes;
             for p in first..=last {
@@ -60,8 +80,10 @@ impl Schedule {
         pages.len() as u64
     }
 
-    /// Structural validation: ids dense, no self-sends, deps acyclic and
-    /// in-range, destination regions non-overlapping per (dst).
+    /// Structural validation: ids dense, no self-sends, no zero-byte sends
+    /// (either would register phantom pages in [`Schedule::dst_pages`] /
+    /// the destination working set), deps acyclic and in-range,
+    /// destination regions non-overlapping per (dst).
     pub fn validate(&self) -> Result<()> {
         if self.gpus < 2 {
             bail!("schedule needs >= 2 GPUs");
@@ -71,13 +93,13 @@ impl Schedule {
                 bail!("op ids must be dense and ordered (op {i} has id {})", op.id);
             }
             if op.src == op.dst {
-                bail!("op {} is a self-send", op.id);
+                bail!("op {} is a self-send (src == dst == {})", op.id, op.src);
             }
             if op.src >= self.gpus || op.dst >= self.gpus {
                 bail!("op {} references GPU out of range", op.id);
             }
             if op.bytes == 0 {
-                bail!("op {} moves zero bytes", op.id);
+                bail!("op {} is a zero-byte send (would register phantom pages)", op.id);
             }
             if let Some(dep) = op.after {
                 if dep >= self.ops.len() as u32 {
@@ -171,7 +193,7 @@ mod tests {
     use super::*;
 
     fn op(id: u32, src: u32, dst: u32, off: u64, bytes: u64, after: Option<u32>) -> SendOp {
-        SendOp { id, src, dst, dst_offset: off, bytes, after }
+        SendOp { id, src, dst, dst_offset: off, bytes, after, job: 0 }
     }
 
     fn sched(ops: Vec<SendOp>) -> Schedule {
@@ -200,8 +222,32 @@ mod tests {
 
     #[test]
     fn validate_rejects_self_send_and_sparse_ids() {
-        assert!(sched(vec![op(0, 1, 1, 0, 10, None)]).validate().is_err());
+        let err = sched(vec![op(0, 1, 1, 0, 10, None)]).validate().unwrap_err();
+        assert!(err.to_string().contains("self-send"), "unlabeled error: {err}");
         assert!(sched(vec![op(5, 0, 1, 0, 10, None)]).validate().is_err());
+    }
+
+    #[test]
+    fn validate_rejects_zero_byte_sends() {
+        let err = sched(vec![op(0, 0, 1, 0, 0, None)]).validate().unwrap_err();
+        assert!(err.to_string().contains("zero-byte"), "unlabeled error: {err}");
+        // Zero-byte ops mixed into an otherwise-valid schedule are caught
+        // too, and dst_pages never counts their phantom pages (no
+        // underflow at offset 0 either).
+        let s = sched(vec![op(0, 0, 1, 0, 10, None), op(1, 2, 1, 4096, 0, None)]);
+        assert!(s.validate().is_err());
+        assert_eq!(s.dst_pages(1, 4096), 1, "zero-byte op must not touch pages");
+    }
+
+    #[test]
+    fn job_ids_survive_repeat() {
+        let mut base = sched(vec![op(0, 0, 1, 0, 10, None), op(1, 1, 0, 0, 10, None)]);
+        base.ops[0].job = 3;
+        base.ops[1].job = 7;
+        let r = base.repeat(2);
+        assert_eq!(r.ops[0].job, 3);
+        assert_eq!(r.ops[2].job, 3, "iteration copies keep the op's job");
+        assert_eq!(r.ops[3].job, 7);
     }
 
     #[test]

@@ -1,0 +1,446 @@
+//! Multi-tenant workload composer: many collectives through one pod.
+//!
+//! The paper's headline cost — cold Link-TLB misses on small collectives
+//! — matters most for *inference serving*, where many small,
+//! latency-sensitive collectives from different jobs land on the same
+//! destination-side translation hierarchy concurrently. A [`Workload`] is
+//! that regime made runnable: per-job [`Schedule`]s are merged into one
+//! job-tagged schedule whose destination receive windows are partitioned
+//! per job (page-aligned, so no translation page is shared across
+//! tenants), plus per-job arrival offsets drawn from a deterministic
+//! arrival process ([`arrival_offsets`]).
+//!
+//! The pod runs a workload through `pod::run_workload`, which reports
+//! per-job completion/latency percentiles and the cross-job L1/L2
+//! Link-TLB eviction counters that quantify tenant interference. A
+//! single-job workload is bit-identical to the plain `pod::run_schedule`
+//! path (pinned by `rust/tests/workload.rs`).
+
+use super::generators;
+use super::schedule::Schedule;
+use crate::config::{ArrivalSpec, JobKind, WorkloadSpec};
+use crate::util::rng::SplitMix64;
+use crate::util::units::{Time, MIB};
+use anyhow::{bail, Context, Result};
+
+/// One tenant job inside a merged [`Workload`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobDesc {
+    /// Human-readable job name (unique within the workload).
+    pub name: String,
+    /// Simulated time at which the job's root ops become runnable.
+    pub arrival: Time,
+    /// Fabric bytes this job moves (sum over its ops).
+    pub bytes: u64,
+    /// Number of schedule ops belonging to this job.
+    pub ops: u32,
+    /// The job's own collective size (§3 semantics, pre-merge).
+    pub size_bytes: u64,
+}
+
+/// A merged multi-tenant workload: job descriptors plus the single
+/// job-tagged [`Schedule`] the pod executes.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Workload {
+    /// Workload label (the merged schedule carries the same name).
+    pub name: String,
+    /// Pod size every member schedule was generated for.
+    pub gpus: u32,
+    /// Per-job descriptors; index = the job id tagged on the ops.
+    pub jobs: Vec<JobDesc>,
+    /// The merged, validated schedule (ops carry their `job` tag and
+    /// per-job page-aligned destination offsets).
+    pub schedule: Schedule,
+}
+
+impl Workload {
+    /// Wrap one schedule as a workload. Jobs are inferred from the ops'
+    /// existing `job` tags (plain generated schedules ⇒ one job, id 0),
+    /// all arriving at t = 0 — this is what `pod::run_schedule` uses, so
+    /// single-schedule runs keep their exact pre-multi-tenant behavior.
+    pub fn single(schedule: Schedule) -> Workload {
+        let njobs = schedule.ops.iter().map(|o| o.job as usize).max().map_or(1, |m| m + 1);
+        let mut jobs: Vec<JobDesc> = (0..njobs)
+            .map(|j| JobDesc {
+                name: if njobs == 1 {
+                    schedule.name.clone()
+                } else {
+                    format!("{}/job{j}", schedule.name)
+                },
+                arrival: 0,
+                bytes: 0,
+                ops: 0,
+                size_bytes: schedule.size_bytes,
+            })
+            .collect();
+        for op in &schedule.ops {
+            let j = &mut jobs[op.job as usize];
+            j.bytes += op.bytes;
+            j.ops += 1;
+        }
+        Workload { name: schedule.name.clone(), gpus: schedule.gpus, jobs, schedule }
+    }
+
+    /// Instantiate a declarative [`WorkloadSpec`] for a concrete pod:
+    /// expand job templates, generate each job's schedule (collective
+    /// generators / skewed MoE routing), draw arrival offsets from the
+    /// spec's seed, and merge. `page_bytes` sets the per-job receive-window
+    /// alignment so tenants never share a translation page.
+    pub fn from_spec(spec: &WorkloadSpec, gpus: u32, page_bytes: u64) -> Result<Workload> {
+        spec.validate()?;
+        let n = spec.total_jobs() as usize;
+        let arrivals = arrival_offsets(spec.arrival, n, spec.seed);
+        // Independent deterministic stream for MoE hot-expert draws, so
+        // each MoE job copy gets its own skew pattern.
+        let mut moe_seed = SplitMix64::new(spec.seed ^ 0x4D6F_4545);
+        let mut b = WorkloadBuilder::new(spec.name.clone(), gpus).align(page_bytes);
+        let mut idx = 0usize;
+        for t in &spec.jobs {
+            for c in 0..t.count {
+                let name =
+                    if t.count == 1 { t.name.clone() } else { format!("{}-{c}", t.name) };
+                let sched = match t.kind {
+                    JobKind::Collective(k) => generators::build(k, gpus, t.size_bytes)?,
+                    JobKind::MoeAllToAll { skew } => generators::moe_alltoall_skewed(
+                        gpus,
+                        t.size_bytes,
+                        skew,
+                        moe_seed.next_u64(),
+                    )?,
+                };
+                let sched = if t.repeat > 1 { sched.repeat(t.repeat) } else { sched };
+                b = b.job(name, sched, arrivals[idx]);
+                idx += 1;
+            }
+        }
+        b.build()
+    }
+
+    /// Total fabric bytes across all jobs.
+    pub fn total_bytes(&self) -> u64 {
+        self.jobs.iter().map(|j| j.bytes).sum()
+    }
+}
+
+/// Builds a [`Workload`] from per-job schedules.
+///
+/// Merging partitions every destination GPU's receive window per job:
+/// job *j*'s region at GPU *g* starts at the aligned cumulative end of
+/// the previous jobs' windows at *g*. With the alignment set to the
+/// translation page size (the default, 2 MiB), no page is ever shared
+/// across jobs — which is what makes the cross-job eviction counters
+/// well-defined and keeps the merged schedule's overlap validation
+/// trivially satisfied across tenants.
+#[derive(Debug)]
+pub struct WorkloadBuilder {
+    name: String,
+    gpus: u32,
+    align: u64,
+    jobs: Vec<(String, Schedule, Time)>,
+}
+
+impl WorkloadBuilder {
+    /// Start a workload for a `gpus`-GPU pod. Receive-window alignment
+    /// defaults to the paper's 2 MiB translation page.
+    pub fn new(name: impl Into<String>, gpus: u32) -> WorkloadBuilder {
+        WorkloadBuilder { name: name.into(), gpus, align: 2 * MIB, jobs: Vec::new() }
+    }
+
+    /// Set the per-job receive-window alignment (must be a power of two;
+    /// pass the configured `trans.page_bytes` for page-exclusive tenants).
+    pub fn align(mut self, bytes: u64) -> WorkloadBuilder {
+        assert!(bytes.is_power_of_two(), "alignment must be a power of two (got {bytes})");
+        self.align = bytes;
+        self
+    }
+
+    /// Add one job arriving at `arrival` with its own (validated,
+    /// pre-merge) schedule.
+    pub fn job(mut self, name: impl Into<String>, schedule: Schedule, arrival: Time) -> Self {
+        self.jobs.push((name.into(), schedule, arrival));
+        self
+    }
+
+    /// Merge the jobs into a single job-tagged schedule and validate it.
+    pub fn build(self) -> Result<Workload> {
+        if self.jobs.is_empty() {
+            bail!("workload `{}` has no jobs", self.name);
+        }
+        if self.jobs.len() > u16::MAX as usize {
+            bail!("workload `{}` has {} jobs (max {})", self.name, self.jobs.len(), u16::MAX);
+        }
+        let gpus = self.gpus;
+        let align = self.align;
+        let mut cursor = vec![0u64; gpus as usize];
+        let mut ops = Vec::new();
+        let mut descs = Vec::with_capacity(self.jobs.len());
+        let mut id_off: u64 = 0;
+        for (j, (name, sched, arrival)) in self.jobs.into_iter().enumerate() {
+            sched
+                .validate()
+                .with_context(|| format!("job `{name}` has an invalid schedule"))?;
+            if sched.gpus != gpus {
+                bail!(
+                    "job `{name}` is for {} GPUs, workload `{}` is for {gpus}",
+                    sched.gpus,
+                    self.name
+                );
+            }
+            let bases = cursor.clone();
+            for (g, c) in cursor.iter_mut().enumerate() {
+                let w = sched.recv_window_bytes(g as u32);
+                *c += w.div_ceil(align) * align;
+            }
+            for op in &sched.ops {
+                let mut o = *op;
+                o.id = (id_off + op.id as u64) as u32;
+                o.after = op.after.map(|d| (id_off + d as u64) as u32);
+                o.dst_offset = bases[op.dst as usize] + op.dst_offset;
+                o.job = j as u16;
+                ops.push(o);
+            }
+            id_off += sched.ops.len() as u64;
+            if id_off > u32::MAX as u64 {
+                bail!("workload `{}` exceeds {} total ops", self.name, u32::MAX);
+            }
+            descs.push(JobDesc {
+                name,
+                arrival,
+                bytes: sched.total_bytes(),
+                ops: sched.ops.len() as u32,
+                size_bytes: sched.size_bytes,
+            });
+        }
+        let mut merged = Schedule { name: self.name.clone(), gpus, size_bytes: 0, ops };
+        merged.size_bytes =
+            (0..gpus).map(|g| merged.recv_window_bytes(g)).max().unwrap_or(0).max(1);
+        merged.validate().context("merged multi-tenant schedule failed validation")?;
+        Ok(Workload { name: self.name, gpus, jobs: descs, schedule: merged })
+    }
+}
+
+/// Deterministic per-job start offsets for `n` jobs under an arrival
+/// process. `Synchronized` and `Staggered` ignore the seed; `Poisson`
+/// draws exponential inter-arrival gaps from a SplitMix64 stream (job 0
+/// arrives at t = 0), so identical seeds give bit-identical offsets.
+pub fn arrival_offsets(spec: ArrivalSpec, n: usize, seed: u64) -> Vec<Time> {
+    match spec {
+        ArrivalSpec::Synchronized => vec![0; n],
+        ArrivalSpec::Staggered { gap_ps } => (0..n as u64).map(|i| i * gap_ps).collect(),
+        ArrivalSpec::Poisson { mean_gap_ps } => {
+            let mut sm = SplitMix64::new(seed ^ 0x0A88_7661);
+            let mut t: Time = 0;
+            let mut out = Vec::with_capacity(n);
+            for i in 0..n {
+                if i > 0 {
+                    // u ∈ (0, 1]: 53 high bits of the draw, shifted into the
+                    // unit interval, never exactly 0 — so ln(u) is finite.
+                    let u = ((sm.next_u64() >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64);
+                    let gap = (-u.ln() * mean_gap_ps as f64).round() as u64;
+                    t = t.saturating_add(gap);
+                }
+                out.push(t);
+            }
+            out
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CollectiveKind, JobTemplate};
+    use crate::util::units::us;
+    use std::collections::BTreeSet;
+
+    fn a2a(gpus: u32, size: u64) -> Schedule {
+        generators::alltoall_allpairs(gpus, size).unwrap()
+    }
+
+    fn two_job_workload() -> Workload {
+        WorkloadBuilder::new("two", 8)
+            .align(2 * MIB)
+            .job("small", a2a(8, MIB), 0)
+            .job("big", a2a(8, 8 * MIB), us(1))
+            .build()
+            .unwrap()
+    }
+
+    #[test]
+    fn merged_schedule_validates_and_tags_jobs() {
+        let w = two_job_workload();
+        w.schedule.validate().unwrap();
+        assert_eq!(w.jobs.len(), 2);
+        let jobs: BTreeSet<u16> = w.schedule.ops.iter().map(|o| o.job).collect();
+        assert_eq!(jobs, BTreeSet::from([0, 1]));
+        assert_eq!(w.jobs[1].arrival, us(1));
+        // Op count and ids are dense across the merge.
+        assert_eq!(w.schedule.ops.len(), 2 * 8 * 7);
+        for (i, op) in w.schedule.ops.iter().enumerate() {
+            assert_eq!(op.id, i as u32);
+        }
+    }
+
+    #[test]
+    fn per_job_byte_totals_are_conserved() {
+        let w = two_job_workload();
+        assert_eq!(w.jobs[0].bytes, a2a(8, MIB).total_bytes());
+        assert_eq!(w.jobs[1].bytes, a2a(8, 8 * MIB).total_bytes());
+        assert_eq!(w.total_bytes(), w.schedule.total_bytes());
+        // Re-derive per-job bytes from the merged tags.
+        for (j, desc) in w.jobs.iter().enumerate() {
+            let tagged: u64 = w
+                .schedule
+                .ops
+                .iter()
+                .filter(|o| o.job == j as u16)
+                .map(|o| o.bytes)
+                .sum();
+            assert_eq!(tagged, desc.bytes, "job {j} bytes");
+        }
+    }
+
+    #[test]
+    fn jobs_never_share_a_translation_page() {
+        let page = 2 * MIB;
+        let w = WorkloadBuilder::new("three", 8)
+            .align(page)
+            .job("a", a2a(8, MIB), 0)
+            .job("b", a2a(8, 3 * MIB), 0)
+            .job("c", a2a(8, 8 * MIB), 0)
+            .build()
+            .unwrap();
+        for dst in 0..8u32 {
+            let mut owner: std::collections::BTreeMap<u64, u16> = Default::default();
+            for op in w.schedule.ops.iter().filter(|o| o.dst == dst) {
+                let first = op.dst_offset / page;
+                let last = (op.dst_offset + op.bytes - 1) / page;
+                for p in first..=last {
+                    if let Some(&prev) = owner.get(&p) {
+                        assert_eq!(prev, op.job, "page {p} at dst {dst} shared across jobs");
+                    }
+                    owner.insert(p, op.job);
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn poisson_arrivals_are_seed_deterministic() {
+        let spec = ArrivalSpec::Poisson { mean_gap_ps: us(5) };
+        let a = arrival_offsets(spec, 16, 1234);
+        let b = arrival_offsets(spec, 16, 1234);
+        assert_eq!(a, b, "identical seeds must give bit-identical offsets");
+        let c = arrival_offsets(spec, 16, 1235);
+        assert_ne!(a, c, "different seeds should give different offsets");
+        assert_eq!(a[0], 0, "job 0 arrives at t=0");
+        assert!(a.windows(2).all(|w| w[0] <= w[1]), "offsets are non-decreasing");
+        // Mean gap lands in a sane band around the configured mean.
+        let mean = (a[15] - a[0]) as f64 / 15.0;
+        assert!(
+            (0.2..=5.0).contains(&(mean / us(5) as f64)),
+            "empirical mean gap {mean} far from configured"
+        );
+    }
+
+    #[test]
+    fn staggered_and_synchronized_offsets() {
+        assert_eq!(arrival_offsets(ArrivalSpec::Synchronized, 3, 9), vec![0, 0, 0]);
+        assert_eq!(
+            arrival_offsets(ArrivalSpec::Staggered { gap_ps: 10 }, 4, 9),
+            vec![0, 10, 20, 30]
+        );
+        assert!(arrival_offsets(ArrivalSpec::Synchronized, 0, 9).is_empty());
+    }
+
+    #[test]
+    fn from_spec_expands_templates() {
+        let spec = WorkloadSpec {
+            name: "mix".into(),
+            seed: 7,
+            arrival: ArrivalSpec::Staggered { gap_ps: us(2) },
+            jobs: vec![
+                JobTemplate {
+                    name: "decode".into(),
+                    kind: JobKind::Collective(CollectiveKind::AllToAll),
+                    size_bytes: MIB,
+                    count: 3,
+                    repeat: 2,
+                },
+                JobTemplate {
+                    name: "prefill".into(),
+                    kind: JobKind::Collective(CollectiveKind::AllGather),
+                    size_bytes: 8 * MIB,
+                    count: 1,
+                    repeat: 1,
+                },
+            ],
+        };
+        let w = Workload::from_spec(&spec, 8, 2 * MIB).unwrap();
+        assert_eq!(w.jobs.len(), 4);
+        assert_eq!(w.jobs[0].name, "decode-0");
+        assert_eq!(w.jobs[2].name, "decode-2");
+        assert_eq!(w.jobs[3].name, "prefill");
+        assert_eq!(w.jobs[1].arrival, us(2));
+        // repeat=2 doubles the decode jobs' op and byte counts.
+        assert_eq!(w.jobs[0].ops, 2 * 8 * 7);
+        assert_eq!(w.jobs[0].bytes, 2 * a2a(8, MIB).total_bytes());
+        w.schedule.validate().unwrap();
+    }
+
+    #[test]
+    fn from_spec_is_deterministic_including_moe() {
+        let spec = WorkloadSpec {
+            name: "moe".into(),
+            seed: 21,
+            arrival: ArrivalSpec::Poisson { mean_gap_ps: us(1) },
+            jobs: vec![JobTemplate {
+                name: "expert".into(),
+                kind: JobKind::MoeAllToAll { skew: 1.5 },
+                size_bytes: 4 * MIB,
+                count: 3,
+                repeat: 1,
+            }],
+        };
+        let a = Workload::from_spec(&spec, 16, 2 * MIB).unwrap();
+        let b = Workload::from_spec(&spec, 16, 2 * MIB).unwrap();
+        assert_eq!(a, b, "same spec + seed must rebuild bit-identically");
+        // Distinct copies draw distinct hot-expert patterns.
+        let win = |w: &Workload, job: u16, dst: u32| -> u64 {
+            w.schedule
+                .ops
+                .iter()
+                .filter(|o| o.job == job && o.dst == dst)
+                .map(|o| o.bytes)
+                .sum()
+        };
+        let j0: Vec<u64> = (0..16).map(|d| win(&a, 0, d)).collect();
+        let j1: Vec<u64> = (0..16).map(|d| win(&a, 1, d)).collect();
+        assert_ne!(j0, j1, "MoE copies should route to different hot experts");
+    }
+
+    #[test]
+    fn single_wraps_without_touching_the_schedule() {
+        let s = a2a(8, MIB);
+        let w = Workload::single(s.clone());
+        assert_eq!(w.schedule, s);
+        assert_eq!(w.jobs.len(), 1);
+        assert_eq!(w.jobs[0].arrival, 0);
+        assert_eq!(w.jobs[0].bytes, s.total_bytes());
+        // A merged schedule re-wrapped through `single` keeps its jobs.
+        let merged = two_job_workload();
+        let rewrapped = Workload::single(merged.schedule.clone());
+        assert_eq!(rewrapped.jobs.len(), 2);
+        assert_eq!(rewrapped.jobs[1].bytes, merged.jobs[1].bytes);
+    }
+
+    #[test]
+    fn build_rejects_mismatched_pods_and_empty_workloads() {
+        assert!(WorkloadBuilder::new("empty", 8).build().is_err());
+        let err = WorkloadBuilder::new("mismatch", 16)
+            .job("j", a2a(8, MIB), 0)
+            .build()
+            .unwrap_err();
+        assert!(format!("{err:#}").contains("8 GPUs"), "{err:#}");
+    }
+}

@@ -1,9 +1,10 @@
 //! Configuration system.
 //!
 //! `PodConfig` mirrors the paper's Table 1 exactly (see
-//! `presets::paper_baseline`). Configs round-trip through JSON
-//! (`to_json`/`from_json`), validate before use, and expand into sweep
-//! grids for the figure harness.
+//! `presets::paper_baseline`), and `WorkloadSpec` declares multi-tenant
+//! serving workloads (job templates + arrival process). Both round-trip
+//! through JSON (`to_json`/`from_json`), validate before use, and expand
+//! into sweep grids / merged workloads for the figure harness.
 
 pub mod presets;
 pub mod sweep;

@@ -83,6 +83,77 @@ pub fn quick_test(gpus: u32, size_bytes: u64) -> PodConfig {
     cfg
 }
 
+// ---- multi-tenant workload presets (see WORKLOADS.md) ----
+
+/// Deterministic default seed for the workload presets (sweeps/CLI
+/// override it with `--seed`).
+pub const TENANCY_SEED: u64 = 0x7E4A_11C7;
+
+/// N identical tenants running the same collective, all arriving at t=0 —
+/// the cleanest interference probe: fixed per-job traffic, rising tenant
+/// count, shared destination translation hierarchy.
+pub fn uniform_tenancy_spec(jobs: u32, kind: CollectiveKind, size_bytes: u64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: format!("uniform-{jobs}x{}-{}", kind.name(), crate::util::units::fmt_bytes(size_bytes)),
+        seed: TENANCY_SEED,
+        arrival: ArrivalSpec::Synchronized,
+        jobs: vec![JobTemplate {
+            name: "tenant".into(),
+            kind: JobKind::Collective(kind),
+            size_bytes,
+            count: jobs,
+            repeat: 1,
+        }],
+    }
+}
+
+/// The serving mix of §motivation: many small, latency-sensitive decode
+/// jobs (closed-loop, iterated All-to-Alls) sharing the pod with a few
+/// large prefill jobs (one-shot AllGathers), arriving open-loop with
+/// Poisson-like gaps. Sizes follow the paper's latency-sensitive band
+/// (1 MiB decode) vs the amortized band (64 MiB prefill).
+pub fn inference_mix_spec(decode_jobs: u32, prefill_jobs: u32) -> WorkloadSpec {
+    WorkloadSpec {
+        name: format!("inference-mix-{decode_jobs}d{prefill_jobs}p"),
+        seed: TENANCY_SEED,
+        arrival: ArrivalSpec::Poisson { mean_gap_ps: crate::util::units::us(2) },
+        jobs: vec![
+            JobTemplate {
+                name: "decode".into(),
+                kind: JobKind::Collective(CollectiveKind::AllToAll),
+                size_bytes: crate::util::units::MIB,
+                count: decode_jobs,
+                repeat: 4,
+            },
+            JobTemplate {
+                name: "prefill".into(),
+                kind: JobKind::Collective(CollectiveKind::AllGather),
+                size_bytes: 64 * crate::util::units::MIB,
+                count: prefill_jobs,
+                repeat: 1,
+            },
+        ],
+    }
+}
+
+/// MoE expert-parallel serving: N tenants each running a skewed
+/// expert-routing All-to-All (hot experts drawn per tenant from the
+/// seed), staggered arrivals.
+pub fn moe_serving_spec(jobs: u32, size_bytes: u64, skew: f64) -> WorkloadSpec {
+    WorkloadSpec {
+        name: format!("moe-serving-{jobs}x{}", crate::util::units::fmt_bytes(size_bytes)),
+        seed: TENANCY_SEED,
+        arrival: ArrivalSpec::Staggered { gap_ps: crate::util::units::us(1) },
+        jobs: vec![JobTemplate {
+            name: "expert".into(),
+            kind: JobKind::MoeAllToAll { skew },
+            size_bytes,
+            count: jobs,
+            repeat: 1,
+        }],
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -113,6 +184,20 @@ mod tests {
         assert_eq!(c.link.station_gbps(), 800);
         assert_eq!(c.link.link_latency_ns, 300);
         assert_eq!(c.link.switch_latency_ns, 300);
+    }
+
+    #[test]
+    fn workload_presets_validate_and_roundtrip() {
+        for spec in [
+            uniform_tenancy_spec(4, CollectiveKind::AllToAll, 16 * MIB),
+            inference_mix_spec(3, 1),
+            moe_serving_spec(4, 8 * MIB, 1.2),
+        ] {
+            spec.validate().unwrap();
+            assert_eq!(WorkloadSpec::from_json(&spec.to_json()).unwrap(), spec);
+        }
+        assert_eq!(inference_mix_spec(3, 1).total_jobs(), 4);
+        assert_eq!(uniform_tenancy_spec(8, CollectiveKind::AllGather, MIB).total_jobs(), 8);
     }
 
     #[test]

@@ -11,22 +11,30 @@ use crate::util::units::{fmt_bytes, GIB, MIB};
 /// A labelled config transformer (e.g. "l2=64" or "prefetch").
 pub type Variant = (String, fn(&mut PodConfig));
 
+/// One cell of a sweep grid: a concrete config plus its axis labels.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SweepPoint {
+    /// Pod size axis value.
     pub gpus: u32,
+    /// Collective size axis value.
     pub size_bytes: u64,
+    /// Variant label (e.g. `baseline`, `ideal`, `l2=64`).
     pub variant: String,
+    /// The fully-resolved configuration to run.
     pub config: PodConfig,
 }
 
 impl SweepPoint {
+    /// Unique human-readable label (`<gpus>gpu/<size>/<variant>`).
     pub fn label(&self) -> String {
         format!("{}gpu/{}/{}", self.gpus, fmt_bytes(self.size_bytes), self.variant)
     }
 }
 
+/// A list of sweep points the coordinator fans out to workers.
 #[derive(Debug, Default)]
 pub struct SweepGrid {
+    /// The grid cells, in construction order.
     pub points: Vec<SweepPoint>,
 }
 
@@ -120,10 +128,12 @@ impl SweepGrid {
         Self::with_variants(gpu_counts, sizes, &variants, true)
     }
 
+    /// Number of grid points.
     pub fn len(&self) -> usize {
         self.points.len()
     }
 
+    /// Is the grid empty?
     pub fn is_empty(&self) -> bool {
         self.points.is_empty()
     }

@@ -18,6 +18,7 @@ pub enum CollectiveKind {
 }
 
 impl CollectiveKind {
+    /// Stable name used in config JSON, CSVs and run labels.
     pub fn name(&self) -> &'static str {
         match self {
             CollectiveKind::AllToAll => "alltoall",
@@ -27,6 +28,7 @@ impl CollectiveKind {
         }
     }
 
+    /// Parse a collective name (accepts the short aliases the CLI uses).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "alltoall" | "a2a" => CollectiveKind::AllToAll,
@@ -58,12 +60,16 @@ impl CollectiveKind {
 ///   tests, which require bit-identical `RunStats` from both).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EnginePolicy {
+    /// Schedule only each chain's terminal event (the default).
     #[default]
     Fused,
+    /// Materialize a marker event per intermediate hop (differential
+    /// testing / timeline debugging).
     PerHop,
 }
 
 impl EnginePolicy {
+    /// Stable name used in config JSON and the CLI `--engine` flag.
     pub fn name(&self) -> &'static str {
         match self {
             EnginePolicy::Fused => "fused",
@@ -71,6 +77,7 @@ impl EnginePolicy {
         }
     }
 
+    /// Parse an engine-policy name (`fused` | `per-hop`).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "fused" => EnginePolicy::Fused,
@@ -85,8 +92,14 @@ impl EnginePolicy {
 /// page so translation concurrency behaviour is preserved (DESIGN.md).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum RequestSizing {
+    /// Every remote store moves exactly this many bytes.
     Fixed(u64),
-    Auto { target_total_requests: u64 },
+    /// Pick a power-of-two request size aiming at this total request
+    /// count (clamped to [256 B, 32 KiB] and ≥64 requests per page).
+    Auto {
+        /// Target total request count for the whole run.
+        target_total_requests: u64,
+    },
 }
 
 impl Default for RequestSizing {
@@ -98,7 +111,9 @@ impl Default for RequestSizing {
 /// Link/station parameters (Table 1 "Inter-GPU UALink Configuration").
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkConfig {
+    /// UALink stations per GPU (16 in Table 1).
     pub stations_per_gpu: u32,
+    /// Lanes bundled per station (x4).
     pub lanes_per_station: u32,
     /// Effective bandwidth per lane, Gbps (200G per UALink 200G 1.0).
     pub gbps_per_lane: u64,
@@ -118,10 +133,12 @@ impl LinkConfig {
         self.gbps_per_lane * self.lanes_per_station as u64
     }
 
+    /// Die-to-die link latency as simulated `Time`.
     pub fn link_latency(&self) -> Time {
         units::ns(self.link_latency_ns)
     }
 
+    /// Switch pipeline latency as simulated `Time`.
     pub fn switch_latency(&self) -> Time {
         units::ns(self.switch_latency_ns)
     }
@@ -130,13 +147,16 @@ impl LinkConfig {
 /// One TLB level's geometry/timing.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TlbConfig {
+    /// Total entries.
     pub entries: u32,
     /// 0 = fully associative.
     pub assoc: u32,
+    /// Hit latency, ns.
     pub hit_latency_ns: u64,
 }
 
 impl TlbConfig {
+    /// Hit latency as simulated `Time`.
     pub fn hit_latency(&self) -> Time {
         units::ns(self.hit_latency_ns)
     }
@@ -157,7 +177,9 @@ pub struct TransConfig {
     pub l2: TlbConfig,
     /// Page-walk caches, one per non-leaf level, sized 16/32/64/128.
     pub pwc_entries: Vec<u32>,
+    /// PWC associativity (2-way in Table 1).
     pub pwc_assoc: u32,
+    /// PWC probe latency, ns (one parallel probe across levels).
     pub pwc_hit_latency_ns: u64,
     /// Page-table depth (5-level).
     pub levels: u32,
@@ -178,8 +200,10 @@ pub struct TransConfig {
     pub prefetch_policy: PrefetchPolicy,
 }
 
+/// Reactive next-page stride prefetcher settings (§6.2).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PrefetchConfig {
+    /// Enable the reactive next-page stride prefetcher (§6.2).
     pub enabled: bool,
     /// How many pages ahead of the current stream position to prefetch.
     pub depth: u32,
@@ -202,7 +226,9 @@ pub struct PrefetchConfig {
 ///   packets' network flight time (no pacing).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum PrefetchPolicy {
+    /// No schedule-driven translation hiding.
     Off,
+    /// Software-guided hint streams paced ahead of estimated arrivals.
     SwGuided {
         /// How far ahead of a page's estimated first-arrival time its
         /// hint walk is issued, ps.
@@ -211,10 +237,12 @@ pub enum PrefetchPolicy {
         /// the cap queue and reissue as earlier hints complete).
         rate: u32,
     },
+    /// Fused pre-translation: hint the whole receive window at op start.
     Fused,
 }
 
 impl PrefetchPolicy {
+    /// Stable name used in config JSON, sweeps and the CLI.
     pub fn name(&self) -> &'static str {
         match self {
             PrefetchPolicy::Off => "off",
@@ -223,6 +251,7 @@ impl PrefetchPolicy {
         }
     }
 
+    /// Is translation hiding disabled?
     pub fn is_off(&self) -> bool {
         matches!(self, PrefetchPolicy::Off)
     }
@@ -244,12 +273,252 @@ impl PrefetchPolicy {
     }
 }
 
+/// §6.1 fused pre-translation warmup settings (free fills before t=0).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct PretranslateConfig {
+    /// Enable free warm fills before t=0 (§6.1 upper-bound model).
     pub enabled: bool,
     /// Pages per (src,dst) stream pre-translated during the preceding
     /// compute phase (fused kernel). 0 = unlimited (whole buffer).
     pub pages_per_pair: u32,
+}
+
+/// How a multi-tenant workload's per-job start offsets are drawn
+/// ([`crate::collective::workload::arrival_offsets`]). Every process is a
+/// deterministic function of the workload seed — the offline registry has
+/// no `rand`, so the exponential draws come from a SplitMix64 stream.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum ArrivalSpec {
+    /// Closed-loop burst: every job arrives at t = 0 (worst-case
+    /// cross-job TLB interference).
+    Synchronized,
+    /// Closed-loop stagger: job `i` arrives at `i * gap_ps`.
+    Staggered {
+        /// Fixed inter-arrival gap, ps.
+        gap_ps: u64,
+    },
+    /// Open-loop serving traffic: Poisson-like arrivals with exponential
+    /// inter-arrival gaps of the given mean (job 0 arrives at t = 0).
+    Poisson {
+        /// Mean inter-arrival gap, ps.
+        mean_gap_ps: u64,
+    },
+}
+
+impl ArrivalSpec {
+    /// Stable mode name (CLI / JSON contract).
+    pub fn name(&self) -> &'static str {
+        match self {
+            ArrivalSpec::Synchronized => "synchronized",
+            ArrivalSpec::Staggered { .. } => "staggered",
+            ArrivalSpec::Poisson { .. } => "poisson",
+        }
+    }
+}
+
+/// Traffic pattern of one tenant job.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum JobKind {
+    /// One of the stock collective generators ([`CollectiveKind`]).
+    Collective(CollectiveKind),
+    /// MoE expert-parallel all-to-all with skewed expert routing
+    /// (`collective::generators::moe_alltoall_skewed`).
+    MoeAllToAll {
+        /// Zipf exponent of the expert-popularity skew (0 = uniform).
+        skew: f64,
+    },
+}
+
+impl JobKind {
+    /// Short label used in generated job names and tables.
+    pub fn label(&self) -> String {
+        match self {
+            JobKind::Collective(k) => k.name().to_string(),
+            JobKind::MoeAllToAll { skew } => format!("moe-a2a-skew{skew:.2}"),
+        }
+    }
+}
+
+/// Template for one or more identical tenant jobs in a [`WorkloadSpec`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct JobTemplate {
+    /// Job-name stem (copies get `-0`, `-1`, … suffixes).
+    pub name: String,
+    /// Traffic pattern.
+    pub kind: JobKind,
+    /// Collective size per §3 semantics (per-GPU buffer), per iteration.
+    pub size_bytes: u64,
+    /// How many identical copies of this template join the workload.
+    pub count: u32,
+    /// Closed-loop iterations chained back-to-back (`Schedule::repeat`);
+    /// 1 = a single iteration.
+    pub repeat: u32,
+}
+
+/// Declarative description of a multi-tenant workload: a set of job
+/// templates plus the arrival process that spreads them over time. A spec
+/// is pod-size-agnostic; `collective::workload::Workload::from_spec`
+/// instantiates it for a concrete GPU count and translation page size.
+#[derive(Debug, Clone, PartialEq)]
+pub struct WorkloadSpec {
+    /// Workload label (becomes the merged schedule's name).
+    pub name: String,
+    /// Seed for arrival offsets and skewed expert routing.
+    pub seed: u64,
+    /// Arrival process over the expanded job list.
+    pub arrival: ArrivalSpec,
+    /// Job templates, expanded in order (`count` copies each).
+    pub jobs: Vec<JobTemplate>,
+}
+
+impl WorkloadSpec {
+    /// Number of jobs after template expansion.
+    pub fn total_jobs(&self) -> u64 {
+        self.jobs.iter().map(|t| t.count as u64).sum()
+    }
+
+    /// Structural validation (non-empty, sane counts/sizes).
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs.is_empty() {
+            bail!("workload spec `{}` has no jobs", self.name);
+        }
+        let total = self.total_jobs();
+        if total == 0 {
+            bail!("workload spec `{}` expands to zero jobs", self.name);
+        }
+        if total > u16::MAX as u64 {
+            bail!("workload spec `{}` expands to {total} jobs (max {})", self.name, u16::MAX);
+        }
+        for t in &self.jobs {
+            if t.size_bytes == 0 {
+                bail!("job template `{}` has zero size", t.name);
+            }
+            if t.repeat == 0 {
+                bail!("job template `{}` has repeat = 0 (min 1 iteration)", t.name);
+            }
+            if let JobKind::MoeAllToAll { skew } = t.kind {
+                if !(0.0..=4.0).contains(&skew) || !skew.is_finite() {
+                    bail!("job template `{}` has skew {skew} outside [0, 4]", t.name);
+                }
+            }
+        }
+        Ok(())
+    }
+
+    /// Serialize to the workload-spec JSON schema (see WORKLOADS.md).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("seed", Json::from(self.seed)),
+            (
+                "arrival",
+                match self.arrival {
+                    ArrivalSpec::Synchronized => {
+                        Json::from_pairs(vec![("mode", Json::from("synchronized"))])
+                    }
+                    ArrivalSpec::Staggered { gap_ps } => Json::from_pairs(vec![
+                        ("mode", Json::from("staggered")),
+                        ("gap_ps", Json::from(gap_ps)),
+                    ]),
+                    ArrivalSpec::Poisson { mean_gap_ps } => Json::from_pairs(vec![
+                        ("mode", Json::from("poisson")),
+                        ("mean_gap_ps", Json::from(mean_gap_ps)),
+                    ]),
+                },
+            ),
+            (
+                "jobs",
+                Json::Arr(
+                    self.jobs
+                        .iter()
+                        .map(|t| {
+                            Json::from_pairs(vec![
+                                ("name", Json::from(t.name.as_str())),
+                                (
+                                    "kind",
+                                    match t.kind {
+                                        JobKind::Collective(k) => Json::from_pairs(vec![
+                                            ("mode", Json::from("collective")),
+                                            ("collective", Json::from(k.name())),
+                                        ]),
+                                        JobKind::MoeAllToAll { skew } => Json::from_pairs(vec![
+                                            ("mode", Json::from("moe-alltoall")),
+                                            ("skew", Json::from(skew)),
+                                        ]),
+                                    },
+                                ),
+                                ("size_bytes", Json::from(t.size_bytes)),
+                                ("count", Json::from(t.count as u64)),
+                                ("repeat", Json::from(t.repeat as u64)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    /// Parse a workload spec from its JSON schema (and validate it).
+    pub fn from_json(j: &Json) -> Result<WorkloadSpec> {
+        let arrival = j.get("arrival").context("missing `arrival` section")?;
+        let arrival = match arrival.req_str("mode")? {
+            "synchronized" | "sync" => ArrivalSpec::Synchronized,
+            "staggered" => ArrivalSpec::Staggered { gap_ps: arrival.req_u64("gap_ps")? },
+            "poisson" => ArrivalSpec::Poisson { mean_gap_ps: arrival.req_u64("mean_gap_ps")? },
+            other => bail!("unknown arrival mode `{other}`"),
+        };
+        let jobs = j
+            .get("jobs")
+            .and_then(Json::as_arr)
+            .context("missing `jobs` array")?
+            .iter()
+            .map(|t| {
+                let kind = t.get("kind").context("job missing `kind`")?;
+                let kind = match kind.req_str("mode")? {
+                    "collective" => {
+                        JobKind::Collective(CollectiveKind::parse(kind.req_str("collective")?)?)
+                    }
+                    "moe-alltoall" | "moe" => JobKind::MoeAllToAll { skew: kind.req_f64("skew")? },
+                    other => bail!("unknown job kind `{other}`"),
+                };
+                let name = t.req_str("name")?.to_string();
+                let count = t.opt_u64("count", 1);
+                let repeat = t.opt_u64("repeat", 1);
+                if count > u32::MAX as u64 || repeat > u32::MAX as u64 {
+                    bail!("job template `{name}` has count/repeat beyond u32 range");
+                }
+                Ok(JobTemplate {
+                    name,
+                    kind,
+                    size_bytes: t.req_u64("size_bytes")?,
+                    count: count as u32,
+                    repeat: repeat as u32,
+                })
+            })
+            .collect::<Result<Vec<_>>>()?;
+        let spec = WorkloadSpec {
+            name: j.req_str("name")?.to_string(),
+            seed: j.opt_u64("seed", 0),
+            arrival,
+            jobs,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Write the spec's JSON to `path`.
+    pub fn save(&self, path: &std::path::Path) -> Result<()> {
+        std::fs::write(path, self.to_json().to_string_pretty())
+            .with_context(|| format!("writing workload spec to {}", path.display()))
+    }
+
+    /// Load and validate a spec from a JSON file.
+    pub fn load(path: &std::path::Path) -> Result<WorkloadSpec> {
+        let text = std::fs::read_to_string(path)
+            .with_context(|| format!("reading workload spec from {}", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow::anyhow!("{e}"))?;
+        Self::from_json(&j)
+    }
 }
 
 /// GPU-local timing (Table 1 "System" / "Per GPU Config").
@@ -268,10 +537,12 @@ pub struct GpuConfig {
 }
 
 impl GpuConfig {
+    /// Local-data-fabric traversal as simulated `Time`.
     pub fn local_fabric(&self) -> Time {
         units::ns(self.local_fabric_ns)
     }
 
+    /// HBM access latency as simulated `Time`.
     pub fn hbm(&self) -> Time {
         units::ns(self.hbm_ns)
     }
@@ -280,9 +551,11 @@ impl GpuConfig {
 /// Workload description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct WorkloadConfig {
+    /// Which collective the run executes.
     pub collective: CollectiveKind,
     /// "Size" = the larger of a single GPU's input/output buffer (§3).
     pub size_bytes: u64,
+    /// How collective bytes split into remote-store requests.
     pub request_sizing: RequestSizing,
     /// Record a per-request RAT latency trace for requests originating
     /// from this GPU (Figs 9/10). None = no trace.
@@ -292,13 +565,21 @@ pub struct WorkloadConfig {
 /// Full simulation configuration.
 #[derive(Debug, Clone, PartialEq)]
 pub struct PodConfig {
+    /// Run label (flows into `RunStats::config_name`).
     pub name: String,
+    /// GPUs in the pod.
     pub gpus: u32,
+    /// GPUs per OS node (4 in Table 1; intra-node traffic skips RAT).
     pub gpus_per_node: u32,
+    /// Simulation seed (page-table scatter; workload seeds are separate).
     pub seed: u64,
+    /// GPU-local timing.
     pub gpu: GpuConfig,
+    /// UALink station/switch parameters.
     pub link: LinkConfig,
+    /// Reverse-translation hierarchy parameters.
     pub trans: TransConfig,
+    /// What the pod runs.
     pub workload: WorkloadConfig,
     /// Event-fusion policy; `Fused` is the default, `PerHop` exists for
     /// differential testing and timeline debugging.
@@ -306,6 +587,7 @@ pub struct PodConfig {
 }
 
 impl PodConfig {
+    /// Number of OS nodes in the pod.
     pub fn nodes(&self) -> u32 {
         self.gpus.div_ceil(self.gpus_per_node)
     }
@@ -333,6 +615,13 @@ impl PodConfig {
                 / self.gpus as u64
                 * self.gpus as u64,
         };
+        self.request_bytes_for(total_moved)
+    }
+
+    /// Resolve the request size for a workload moving `total_moved` fabric
+    /// bytes (the multi-tenant path, where the total comes from the merged
+    /// schedule rather than a collective-kind formula).
+    pub fn request_bytes_for(&self, total_moved: u64) -> u64 {
         match self.workload.request_sizing {
             RequestSizing::Fixed(b) => b,
             RequestSizing::Auto { target_total_requests } => {
@@ -344,6 +633,7 @@ impl PodConfig {
         }
     }
 
+    /// Reject structurally invalid configurations with labeled errors.
     pub fn validate(&self) -> Result<()> {
         if self.gpus < 2 {
             bail!("need at least 2 GPUs (got {})", self.gpus);
@@ -415,6 +705,7 @@ impl PodConfig {
 
     // ---- JSON round-trip ----
 
+    /// Serialize to the config JSON schema.
     pub fn to_json(&self) -> Json {
         Json::from_pairs(vec![
             ("name", Json::from(self.name.as_str())),
@@ -543,6 +834,8 @@ impl PodConfig {
         ])
     }
 
+    /// Parse a config from its JSON schema (fields absent in older
+    /// files get their documented defaults).
     pub fn from_json(j: &Json) -> Result<PodConfig> {
         let gpu = j.get("gpu").context("missing `gpu` section")?;
         let link = j.get("link").context("missing `link` section")?;
@@ -654,11 +947,13 @@ impl PodConfig {
         Ok(cfg)
     }
 
+    /// Write the config JSON to `path` (pretty-printed).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
         std::fs::write(path, self.to_json().to_string_pretty())
             .with_context(|| format!("writing config to {}", path.display()))
     }
 
+    /// Load and parse a config JSON from `path`.
     pub fn load(path: &std::path::Path) -> Result<PodConfig> {
         let text = std::fs::read_to_string(path)
             .with_context(|| format!("reading config from {}", path.display()))?;
@@ -733,6 +1028,65 @@ mod tests {
         let mut j = paper_baseline(16, MIB).to_json();
         j.set("engine", Json::from("bogus"));
         assert!(PodConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn workload_spec_json_roundtrip() {
+        let spec = WorkloadSpec {
+            name: "serving-mix".into(),
+            seed: 99,
+            arrival: ArrivalSpec::Poisson { mean_gap_ps: 1_000_000 },
+            jobs: vec![
+                JobTemplate {
+                    name: "decode".into(),
+                    kind: JobKind::Collective(CollectiveKind::AllToAll),
+                    size_bytes: MIB,
+                    count: 3,
+                    repeat: 4,
+                },
+                JobTemplate {
+                    name: "moe".into(),
+                    kind: JobKind::MoeAllToAll { skew: 1.25 },
+                    size_bytes: 16 * MIB,
+                    count: 1,
+                    repeat: 1,
+                },
+            ],
+        };
+        spec.validate().unwrap();
+        assert_eq!(spec.total_jobs(), 4);
+        let back = WorkloadSpec::from_json(&spec.to_json()).unwrap();
+        assert_eq!(back, spec);
+        // And through text.
+        let j = crate::util::json::Json::parse(&spec.to_json().to_string_pretty()).unwrap();
+        assert_eq!(WorkloadSpec::from_json(&j).unwrap(), spec);
+    }
+
+    #[test]
+    fn workload_spec_validation_catches_bad_templates() {
+        let mut spec = WorkloadSpec {
+            name: "x".into(),
+            seed: 0,
+            arrival: ArrivalSpec::Synchronized,
+            jobs: vec![],
+        };
+        assert!(spec.validate().is_err(), "empty job list rejected");
+        spec.jobs.push(JobTemplate {
+            name: "j".into(),
+            kind: JobKind::Collective(CollectiveKind::AllToAll),
+            size_bytes: 0,
+            count: 1,
+            repeat: 1,
+        });
+        assert!(spec.validate().is_err(), "zero size rejected");
+        spec.jobs[0].size_bytes = MIB;
+        spec.jobs[0].repeat = 0;
+        assert!(spec.validate().is_err(), "zero repeat rejected");
+        spec.jobs[0].repeat = 1;
+        spec.jobs[0].kind = JobKind::MoeAllToAll { skew: -1.0 };
+        assert!(spec.validate().is_err(), "negative skew rejected");
+        spec.jobs[0].kind = JobKind::MoeAllToAll { skew: 1.0 };
+        spec.validate().unwrap();
     }
 
     #[test]

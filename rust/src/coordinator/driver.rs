@@ -10,11 +10,14 @@ use std::sync::Mutex;
 /// One completed grid point.
 #[derive(Debug, Clone)]
 pub struct SweepResult {
+    /// The grid point that produced these stats.
     pub point: SweepPoint,
+    /// The completed run's statistics.
     pub stats: RunStats,
 }
 
 impl SweepResult {
+    /// The grid point's label.
     pub fn label(&self) -> String {
         self.point.label()
     }

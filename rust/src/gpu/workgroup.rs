@@ -8,6 +8,7 @@
 
 use crate::collective::SendOp;
 
+/// Lifecycle state of a workgroup.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum WgState {
     /// Waiting on a dependency (`after` op not yet complete).
@@ -18,21 +19,30 @@ pub enum WgState {
     Done,
 }
 
+/// The workgroup executing one [`SendOp`] as a stream of remote stores.
 #[derive(Debug, Clone)]
 pub struct WorkGroup {
+    /// The op this WG executes.
     pub op: SendOp,
+    /// Current lifecycle state.
     pub state: WgState,
     request_bytes: u64,
     window: u32,
     /// Next byte offset (relative to op start) to issue.
     next_offset: u64,
+    /// Requests in flight (≤ window).
     pub outstanding: u32,
+    /// Requests issued so far.
     pub issued: u64,
+    /// Requests acknowledged so far.
     pub acked: u64,
     total_requests: u64,
 }
 
 impl WorkGroup {
+    /// Build the WG for `op`, streaming `request_bytes`-sized stores
+    /// with at most `window` outstanding; `blocked` WGs wait on a
+    /// dependency before issuing.
     pub fn new(op: SendOp, request_bytes: u64, window: u32, blocked: bool) -> Self {
         assert!(request_bytes > 0 && window > 0);
         let total_requests = op.bytes.div_ceil(request_bytes);
@@ -49,6 +59,7 @@ impl WorkGroup {
         }
     }
 
+    /// Total requests this op decomposes into.
     pub fn total_requests(&self) -> u64 {
         self.total_requests
     }
@@ -98,7 +109,7 @@ mod tests {
     use crate::util::proptest::{check, PairOf, RangeU64};
 
     fn op(bytes: u64) -> SendOp {
-        SendOp { id: 0, src: 0, dst: 1, dst_offset: 4096, bytes, after: None }
+        SendOp { id: 0, src: 0, dst: 1, dst_offset: 4096, bytes, after: None, job: 0 }
     }
 
     #[test]

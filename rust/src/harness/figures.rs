@@ -17,6 +17,7 @@ use std::path::PathBuf;
 /// Harness options.
 #[derive(Debug, Clone)]
 pub struct FigOpts {
+    /// Directory CSVs are written under.
     pub out_dir: PathBuf,
     /// Quick mode: smaller request budgets + trimmed axes (for CI/bench).
     pub quick: bool,
@@ -567,6 +568,95 @@ pub fn pod_scale(opts: &FigOpts) -> Result<Table> {
     Ok(t)
 }
 
+/// Tenancy figure (beyond the paper; the ROADMAP serving axis): per-job
+/// latency percentiles and cross-job Link-TLB interference as the tenant
+/// count grows at **fixed total bytes**. Two mixes per job count:
+///
+/// * `uniform` — N identical All-to-All tenants splitting the byte
+///   budget evenly, synchronized arrivals (worst-case interference);
+/// * `decode-prefill` — half the tenants run small latency-sensitive
+///   All-to-Alls ("decode"), the rest split the remaining budget into
+///   large AllGathers ("prefill").
+///
+/// The signal: per-job p99 request latency degrades as jobs are added
+/// even though total traffic is constant — small per-job collectives are
+/// cold-miss dominated *and* the tenants now evict each other's Link-TLB
+/// entries (the cross-job counters make the mechanism visible).
+pub fn fig_tenancy(opts: &FigOpts) -> Result<Table> {
+    use crate::collective::workload::{Workload, WorkloadBuilder};
+    use crate::collective::{allgather_direct, alltoall_allpairs};
+    let gpus = if opts.quick { 16 } else { 64 };
+    let total = if opts.quick { 64 * MIB } else { 256 * MIB };
+    let job_counts: &[u32] = if opts.quick { &[1, 2, 4] } else { &[1, 2, 4, 8] };
+    let mut cfg = paper_baseline(gpus, MIB);
+    cfg.workload.request_sizing = RequestSizing::Auto {
+        target_total_requests: if opts.quick { 100_000 } else { 500_000 },
+    };
+    let mut t = Table::new(
+        &format!("Tenancy — per-job p99 vs job count at fixed {} total ({gpus} GPUs)", fmt_bytes(total)),
+        &[
+            "jobs",
+            "mix",
+            "per_job_bytes",
+            "makespan_ns",
+            "mean_p99_ns",
+            "worst_p99_ns",
+            "worst_job_latency_ns",
+            "xjob_l1_evict",
+            "xjob_l2_evict",
+        ],
+    );
+    for &njobs in job_counts {
+        for mix in ["uniform", "decode-prefill"] {
+            if mix == "decode-prefill" && njobs < 2 {
+                continue; // needs at least one decode + one prefill tenant
+            }
+            let per_job = total / njobs as u64;
+            let mut b = WorkloadBuilder::new(format!("tenancy-{njobs}x-{mix}"), gpus)
+                .align(cfg.trans.page_bytes);
+            if mix == "uniform" {
+                for j in 0..njobs {
+                    b = b.job(format!("tenant-{j}"), alltoall_allpairs(gpus, per_job)?, 0);
+                }
+            } else {
+                // Half decode (small, fixed 1/8 of a uniform share each),
+                // half prefill splitting the remaining budget.
+                let decode_n = njobs / 2;
+                let decode_size = (per_job / 8).max(gpus as u64 * 1024);
+                let prefill_n = njobs - decode_n;
+                let prefill_size =
+                    (total - decode_n as u64 * decode_size) / prefill_n as u64;
+                for j in 0..decode_n {
+                    b = b.job(format!("decode-{j}"), alltoall_allpairs(gpus, decode_size)?, 0);
+                }
+                for j in 0..prefill_n {
+                    b = b.job(format!("prefill-{j}"), allgather_direct(gpus, prefill_size)?, 0);
+                }
+            }
+            let w: Workload = b.build()?;
+            let stats = crate::pod::run_workload(&cfg, w)?;
+            let p99s: Vec<f64> = stats.jobs.iter().map(|j| j.rtt_p99_ns()).collect();
+            let mean_p99 = p99s.iter().sum::<f64>() / p99s.len().max(1) as f64;
+            let worst_p99 = p99s.iter().fold(0f64, |a, &b| a.max(b));
+            let worst_latency =
+                stats.jobs.iter().map(|j| to_ns(j.latency())).fold(0f64, f64::max);
+            t.push(vec![
+                njobs.to_string(),
+                mix.to_string(),
+                fmt_bytes(per_job),
+                format!("{:.0}", to_ns(stats.completion)),
+                format!("{mean_p99:.0}"),
+                format!("{worst_p99:.0}"),
+                format!("{worst_latency:.0}"),
+                stats.cross_job_l1_evictions.to_string(),
+                stats.cross_job_l2_evictions.to_string(),
+            ]);
+        }
+    }
+    t.save_csv(&opts.out_dir, "fig_tenancy")?;
+    Ok(t)
+}
+
 /// Table 1: echo the baseline configuration (sanity / documentation).
 pub fn table1(opts: &FigOpts) -> Result<Table> {
     let c = paper_baseline(16, MIB);
@@ -601,7 +691,7 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "ablation", "design", "warmup", "scale",
+    "ablation", "design", "warmup", "scale", "tenancy",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -653,6 +743,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     if want("scale") {
         pod_scale(opts)?.print();
     }
+    if want("tenancy") {
+        fig_tenancy(opts)?.print();
+    }
     Ok(())
 }
 
@@ -695,6 +788,37 @@ mod tests {
         let t = fig5(&opts, &sweep).unwrap();
         let lat: Vec<f64> = t.rows.iter().map(|r| r[2].parse().unwrap()).collect();
         assert!(lat[0] > lat[1], "mean RAT latency must shrink with size: {lat:?}");
+    }
+
+    #[test]
+    fn tenancy_p99_never_improves_with_more_tenants_at_fixed_bytes() {
+        // The fig_tenancy signal at unit-test scale: splitting a fixed
+        // byte budget across more synchronized tenants cannot improve the
+        // worst per-job p99 (cold misses + shared-hierarchy contention).
+        use crate::collective::alltoall_allpairs;
+        use crate::collective::workload::WorkloadBuilder;
+        let mut cfg = crate::config::presets::quick_test(8, MIB);
+        cfg.workload.request_sizing =
+            crate::config::RequestSizing::Auto { target_total_requests: 4_000 };
+        let total = 8 * MIB;
+        let worst_p99 = |njobs: u32| {
+            let mut b = WorkloadBuilder::new("t", 8).align(cfg.trans.page_bytes);
+            for j in 0..njobs {
+                b = b.job(
+                    format!("j{j}"),
+                    alltoall_allpairs(8, total / njobs as u64).unwrap(),
+                    0,
+                );
+            }
+            let s = crate::pod::run_workload(&cfg, b.build().unwrap()).unwrap();
+            s.jobs.iter().map(|j| j.rtt_p99_ns()).fold(0f64, f64::max)
+        };
+        let one = worst_p99(1);
+        let four = worst_p99(4);
+        assert!(
+            four >= one,
+            "per-job p99 should degrade (or hold) as tenants are added: 1 job {one:.0}ns vs 4 jobs {four:.0}ns"
+        );
     }
 
     #[test]

@@ -4,14 +4,19 @@ use crate::stats::run::write_csv;
 use anyhow::Result;
 use std::path::Path;
 
+/// An aligned text table that also saves itself as CSV.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Table caption.
     pub title: String,
+    /// Column names.
     pub header: Vec<String>,
+    /// Data rows (each the header's width).
     pub rows: Vec<Vec<String>>,
 }
 
 impl Table {
+    /// Create an empty table with the given title and columns.
     pub fn new(title: &str, header: &[&str]) -> Self {
         Self {
             title: title.to_string(),
@@ -20,6 +25,7 @@ impl Table {
         }
     }
 
+    /// Append one row (must match the header's width).
     pub fn push(&mut self, row: Vec<String>) {
         debug_assert_eq!(row.len(), self.header.len());
         self.rows.push(row);
@@ -54,6 +60,7 @@ impl Table {
         out
     }
 
+    /// Print the rendered table to stdout.
     pub fn print(&self) {
         print!("{}", self.render());
     }

@@ -10,7 +10,8 @@
 //! * [`sim`] — the discrete-event kernel (Omnet++ substitute);
 //! * [`net`] — UALink stations / links / single-level Clos switches;
 //! * [`trans`] + [`mem`] — the Link-MMU reverse-translation hierarchy;
-//! * [`collective`] — MSCCLang-style schedules (all-pairs All-to-All, …);
+//! * [`collective`] — MSCCLang-style schedules (all-pairs All-to-All, …)
+//!   and the multi-tenant workload composer (WORKLOADS.md);
 //! * [`pod`] — the full pod simulation tying the above together;
 //! * [`coordinator`] — parallel sweep driver (leader/worker);
 //! * [`harness`] — regenerates every figure in the paper's evaluation;
@@ -18,6 +19,8 @@
 //!   artifacts (the MoE workload of the end-to-end example). Gated behind
 //!   the off-by-default `pjrt` cargo feature: it needs the `xla` crate,
 //!   which is unavailable in offline registries.
+
+#![warn(missing_docs)]
 
 pub mod collective;
 pub mod config;

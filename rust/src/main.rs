@@ -2,6 +2,8 @@
 //!
 //! Subcommands:
 //! * `run`      — simulate one collective and print the stats report;
+//! * `workload` — simulate a multi-tenant workload (per-job latencies,
+//!   cross-job TLB interference; see WORKLOADS.md);
 //! * `sweep`    — baseline-vs-ideal grid over `--gpus`/`--sizes`;
 //! * `figures`  — regenerate the paper's figures (CSV + tables);
 //! * `schedule` — export a collective schedule as MSCCLang-style JSON;
@@ -9,9 +11,13 @@
 
 use anyhow::Result;
 use ratsim::collective;
-use ratsim::config::presets::{paper_baseline, paper_ideal};
+use ratsim::collective::workload::Workload;
+use ratsim::config::presets::{
+    inference_mix_spec, moe_serving_spec, paper_baseline, paper_ideal, uniform_tenancy_spec,
+};
 use ratsim::config::{
-    CollectiveKind, EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing, SweepGrid,
+    ArrivalSpec, CollectiveKind, EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing,
+    SweepGrid, WorkloadSpec,
 };
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
@@ -35,6 +41,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     let rest = &argv[1..];
     match cmd.as_str() {
         "run" => cmd_run(rest),
+        "workload" => cmd_workload(rest),
         "sweep" => cmd_sweep(rest),
         "figures" => cmd_figures(rest),
         "schedule" => cmd_schedule(rest),
@@ -57,6 +64,9 @@ fn print_help() {
          subcommands:\n\
          \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
          \x20           --prefetch-policy sw-guided|fused, --engine fused|per-hop, ...)\n\
+         \x20 workload  simulate a multi-tenant mix (--mix uniform|decode-prefill|moe,\n\
+         \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json);\n\
+         \x20           reports per-job p50/p95/p99 + cross-job TLB interference\n\
          \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB);\n\
          \x20           --opts for the §6 optimization ablation\n\
          \x20 figures   regenerate paper figures (--only fig4,fig12 --quick --out results)\n\
@@ -191,6 +201,136 @@ fn cmd_run(argv: &[String]) -> Result<()> {
             );
         }
     }
+    Ok(())
+}
+
+fn cmd_workload(argv: &[String]) -> Result<()> {
+    let spec_flags = vec![
+        ArgSpec { name: "gpus", help: "number of GPUs in the pod", is_flag: false, default: Some("64") },
+        ArgSpec { name: "spec", help: "load a WorkloadSpec JSON (overrides the mix flags)", is_flag: false, default: None },
+        ArgSpec { name: "mix", help: "uniform | decode-prefill | moe", is_flag: false, default: Some("decode-prefill") },
+        ArgSpec { name: "jobs", help: "tenant count for uniform/moe mixes", is_flag: false, default: Some("4") },
+        ArgSpec { name: "decode-jobs", help: "decode tenants (decode-prefill mix)", is_flag: false, default: Some("3") },
+        ArgSpec { name: "prefill-jobs", help: "prefill tenants (decode-prefill mix)", is_flag: false, default: Some("1") },
+        ArgSpec { name: "collective", help: "collective for the uniform mix", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "size", help: "per-job collective size (uniform/moe)", is_flag: false, default: Some("16MiB") },
+        ArgSpec { name: "skew", help: "MoE expert-routing skew (Zipf exponent, 0..4)", is_flag: false, default: Some("1.2") },
+        ArgSpec { name: "repeat", help: "closed-loop iterations per job (uniform/moe)", is_flag: false, default: Some("1") },
+        ArgSpec { name: "arrival", help: "override arrivals: sync | staggered | poisson", is_flag: false, default: None },
+        ArgSpec { name: "gap-us", help: "staggered gap / poisson mean inter-arrival, µs", is_flag: false, default: Some("2") },
+        ArgSpec { name: "seed", help: "workload seed (arrivals + MoE routing)", is_flag: false, default: None },
+        ArgSpec { name: "requests", help: "auto request-sizing target (total requests)", is_flag: false, default: None },
+        ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
+        ArgSpec { name: "save-spec", help: "also write the effective WorkloadSpec JSON here", is_flag: false, default: None },
+        ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
+    ];
+    let a = parse(argv, &spec_flags)?;
+    let gpus = a.get_u64("gpus")?.unwrap() as u32;
+    let mut spec: WorkloadSpec = if let Some(path) = a.get("spec") {
+        WorkloadSpec::load(std::path::Path::new(path))?
+    } else {
+        match a.get("mix").unwrap() {
+            "uniform" => {
+                let kind = CollectiveKind::parse(a.get("collective").unwrap())?;
+                let mut s = uniform_tenancy_spec(
+                    a.get_u64("jobs")?.unwrap() as u32,
+                    kind,
+                    a.get_bytes("size")?.unwrap(),
+                );
+                s.jobs[0].repeat = a.get_u64("repeat")?.unwrap() as u32;
+                s
+            }
+            "decode-prefill" | "mix" => inference_mix_spec(
+                a.get_u64("decode-jobs")?.unwrap() as u32,
+                a.get_u64("prefill-jobs")?.unwrap() as u32,
+            ),
+            "moe" => {
+                let skew: f64 = a
+                    .get("skew")
+                    .unwrap()
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("--skew expects a number"))?;
+                let mut s = moe_serving_spec(
+                    a.get_u64("jobs")?.unwrap() as u32,
+                    a.get_bytes("size")?.unwrap(),
+                    skew,
+                );
+                s.jobs[0].repeat = a.get_u64("repeat")?.unwrap() as u32;
+                s
+            }
+            other => anyhow::bail!("unknown mix `{other}` (uniform|decode-prefill|moe)"),
+        }
+    };
+    if let Some(seed) = a.get_u64("seed")? {
+        spec.seed = seed;
+    }
+    let gap = ratsim::util::units::us(a.get_u64("gap-us")?.unwrap());
+    if let Some(arrival) = a.get("arrival") {
+        spec.arrival = match arrival {
+            "sync" | "synchronized" => ArrivalSpec::Synchronized,
+            "staggered" => ArrivalSpec::Staggered { gap_ps: gap },
+            "poisson" => ArrivalSpec::Poisson { mean_gap_ps: gap },
+            other => anyhow::bail!("unknown arrival `{other}` (sync|staggered|poisson)"),
+        };
+    }
+    spec.validate()?;
+    if let Some(path) = a.get("save-spec") {
+        spec.save(std::path::Path::new(path))?;
+        log::info!("wrote workload spec to {path}");
+    }
+    // Pod hardware: Table-1 baseline (or ideal) sized for the largest job.
+    let rep_size = spec.jobs.iter().map(|t| t.size_bytes).max().unwrap();
+    let mut cfg =
+        if a.flag("ideal") { paper_ideal(gpus, rep_size) } else { paper_baseline(gpus, rep_size) };
+    cfg.name = format!("workload-{}-{gpus}gpu", spec.name);
+    if let Some(n) = a.get_u64("requests")? {
+        cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
+    }
+    let workload = Workload::from_spec(&spec, gpus, cfg.trans.page_bytes)?;
+    log::info!(
+        "running workload `{}`: {} jobs, {} total bytes",
+        workload.name,
+        workload.jobs.len(),
+        workload.total_bytes()
+    );
+    let stats = ratsim::pod::run_workload(&cfg, workload)?;
+    if a.flag("json") {
+        println!("{}", stats.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!("{}", stats.summary());
+    let mut table = ratsim::harness::Table::new(
+        &format!("workload `{}` — per-job results", spec.name),
+        &[
+            "job",
+            "arrival_us",
+            "completion_us",
+            "latency_us",
+            "requests",
+            "rtt_p50_ns",
+            "rtt_p95_ns",
+            "rtt_p99_ns",
+            "mean_rat_ns",
+        ],
+    );
+    for j in &stats.jobs {
+        table.push(vec![
+            j.name.clone(),
+            format!("{:.1}", ratsim::util::units::to_us(j.arrival)),
+            format!("{:.1}", ratsim::util::units::to_us(j.completion)),
+            format!("{:.1}", ratsim::util::units::to_us(j.latency())),
+            j.requests.to_string(),
+            format!("{:.0}", j.rtt_p50_ns()),
+            format!("{:.0}", j.rtt_p95_ns()),
+            format!("{:.0}", j.rtt_p99_ns()),
+            format!("{:.1}", ratsim::util::units::to_ns(j.rat_hist.mean() as u64)),
+        ]);
+    }
+    table.print();
+    println!(
+        "cross-job TLB interference: {} L1 evictions, {} L2 evictions",
+        stats.cross_job_l1_evictions, stats.cross_job_l2_evictions
+    );
     Ok(())
 }
 

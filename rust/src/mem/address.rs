@@ -9,6 +9,7 @@
 /// 48-bit per-GPU offset space, GPU id in the top bits — mirrors how
 /// NVLink-network / UALink carve a fabric address space per endpoint.
 pub const GPU_SHIFT: u32 = 48;
+/// Mask selecting the per-GPU offset bits of an NPA.
 pub const OFFSET_MASK: u64 = (1u64 << GPU_SHIFT) - 1;
 
 /// A network physical address.
@@ -25,17 +26,20 @@ pub struct Spa(pub u64);
 pub struct PageId(pub u64);
 
 impl Npa {
+    /// Compose an NPA from a target GPU id and a byte offset.
     #[inline]
     pub fn new(target_gpu: u32, offset: u64) -> Npa {
         debug_assert!(offset <= OFFSET_MASK, "offset {offset:#x} exceeds NPA window");
         Npa(((target_gpu as u64) << GPU_SHIFT) | offset)
     }
 
+    /// The GPU whose exported window this address targets.
     #[inline]
     pub fn target_gpu(&self) -> u32 {
         (self.0 >> GPU_SHIFT) as u32
     }
 
+    /// Byte offset within the target GPU's exported window.
     #[inline]
     pub fn offset(&self) -> u64 {
         self.0 & OFFSET_MASK

@@ -11,6 +11,8 @@ use super::address::{PageId, Spa};
 use crate::util::rng::SplitMix64;
 use std::collections::HashMap;
 
+/// Lazily-materialized, deterministically-scattered page table for one
+/// GPU's exported window.
 #[derive(Debug)]
 pub struct PageTable {
     gpu: u32,
@@ -23,16 +25,19 @@ pub struct PageTable {
 }
 
 impl PageTable {
+    /// Build the table for `gpu` with the given depth and page size.
     pub fn new(gpu: u32, seed: u64, levels: u32, page_bytes: u64) -> Self {
         assert!(levels >= 2, "page table needs at least 2 levels");
         assert!(page_bytes.is_power_of_two());
         Self { gpu, seed, levels, page_bytes, entries: HashMap::new() }
     }
 
+    /// Radix-tree depth.
     pub fn levels(&self) -> u32 {
         self.levels
     }
 
+    /// Translation page size, bytes.
     pub fn page_bytes(&self) -> u64 {
         self.page_bytes
     }

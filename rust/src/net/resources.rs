@@ -10,6 +10,8 @@ use crate::config::LinkConfig;
 use crate::sim::{BoundedServer, Server};
 use crate::util::units::{ser_time, Time};
 
+/// The pod's shared serializing resources (station uplinks + switch
+/// output ports), admitted analytically in decision order.
 #[derive(Debug)]
 pub struct NetResources {
     topo: Topology,
@@ -18,10 +20,13 @@ pub struct NetResources {
     station_tx: Vec<BoundedServer>,
     /// Switch output ports, one per (rail, dst gpu).
     switch_out: Vec<Server>,
+    /// Packets admitted at station uplinks (utilization accounting).
     pub packets_forwarded: u64,
 }
 
 impl NetResources {
+    /// Allocate one uplink server per (gpu, rail) and one output-port
+    /// server per (rail, dst).
     pub fn new(topo: Topology, cfg: &LinkConfig) -> Self {
         let station_tx = (0..topo.total_stations())
             .map(|_| BoundedServer::new(cfg.credits.max(1) as usize))
@@ -30,10 +35,12 @@ impl NetResources {
         Self { topo, cfg: cfg.clone(), station_tx, switch_out, packets_forwarded: 0 }
     }
 
+    /// The wiring this resource set was built for.
     pub fn topo(&self) -> &Topology {
         &self.topo
     }
 
+    /// Serialization time of `bytes` at the cumulative station rate.
     #[inline]
     pub fn ser(&self, bytes: u64) -> Time {
         ser_time(bytes, self.cfg.station_gbps())
@@ -100,6 +107,7 @@ impl NetResources {
         self.station_tx.iter().map(|s| s.busy_time()).sum()
     }
 
+    /// Aggregate busy time across all switch output ports.
     pub fn switch_busy_total(&self) -> Time {
         self.switch_out.iter().map(|s| s.busy_time()).sum()
     }

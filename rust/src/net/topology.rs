@@ -3,11 +3,14 @@
 /// Static description of the pod's UALink wiring.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Topology {
+    /// GPUs in the pod.
     pub gpus: u32,
+    /// UALink stations (= rails = switches) per GPU.
     pub stations_per_gpu: u32,
 }
 
 impl Topology {
+    /// Build the wiring description (≥2 GPUs, ≥1 station).
     pub fn new(gpus: u32, stations_per_gpu: u32) -> Self {
         assert!(gpus >= 2 && stations_per_gpu >= 1);
         Self { gpus, stations_per_gpu }
@@ -46,10 +49,12 @@ impl Topology {
         (rail * self.gpus + dst) as usize
     }
 
+    /// Total station-resource count across the pod.
     pub fn total_stations(&self) -> usize {
         (self.gpus * self.stations_per_gpu) as usize
     }
 
+    /// Total switch output ports across the pod.
     pub fn total_switch_ports(&self) -> usize {
         (self.switches() * self.gpus) as usize
     }

@@ -15,6 +15,8 @@ use std::collections::{HashMap, VecDeque};
 /// PwcHit/FullWalk; later attachers get L2HitUnderMiss).
 #[derive(Debug)]
 pub struct WalkRec {
+    /// Stations whose MSHR entries this walk completes, with the
+    /// primary outcome each is classified with.
     pub stations: Vec<(u32, PrimaryOutcome)>,
     /// Walk initiated by a prefetcher (stride or hint), not a demand miss.
     pub prefetch: bool,
@@ -24,8 +26,10 @@ pub struct WalkRec {
     pub hint_rail: Option<u32>,
 }
 
+/// One GPU's Link MMU state (Figure 3 composite).
 #[derive(Debug)]
 pub struct GpuMmu {
+    /// The GPU this MMU belongs to.
     pub gpu: u32,
     /// Private L1 Link TLB per UALink station.
     pub l1: Vec<Tlb>,
@@ -41,6 +45,7 @@ pub struct GpuMmu {
     pub walkers: WalkerPool,
     /// Page → in-flight walk.
     pub pending_walks: HashMap<PageId, WalkRec>,
+    /// The GPU's page table (what the walks resolve against).
     pub page_table: PageTable,
     /// Largest valid page index in this GPU's receive window (prefetch
     /// bound; set from the schedule).
@@ -48,6 +53,7 @@ pub struct GpuMmu {
 }
 
 impl GpuMmu {
+    /// Build the MMU for `gpu` from the translation config.
     pub fn new(gpu: u32, seed: u64, stations: u32, cfg: &TransConfig) -> Self {
         Self {
             gpu,
@@ -65,21 +71,25 @@ impl GpuMmu {
 
     /// Fill every level for `page` as if a walk completed (mostly-
     /// inclusive): PWCs, L2, and the given station's L1 (or all L1s when
-    /// `station` is None — used by pre-translation warmup).
-    pub fn warm_fill(&mut self, page: PageId, station: Option<u32>) {
+    /// `station` is None — used by pre-translation warmup). Returns the
+    /// LRU victims the fills displaced — `(L2 victim, L1 victims)` — so
+    /// multi-tenant runs can attribute warmup-induced evictions.
+    pub fn warm_fill(&mut self, page: PageId, station: Option<u32>) -> (Option<u64>, Vec<u64>) {
         self.page_table.resolve(page);
         self.pwc.fill_walk(page);
-        self.l2.fill(page.0);
+        let l2_evicted = self.l2.fill(page.0);
+        let mut l1_evicted = Vec::new();
         match station {
             Some(s) => {
-                self.l1[s as usize].fill(page.0);
+                l1_evicted.extend(self.l1[s as usize].fill(page.0));
             }
             None => {
                 for l1 in &mut self.l1 {
-                    l1.fill(page.0);
+                    l1_evicted.extend(l1.fill(page.0));
                 }
             }
         }
+        (l2_evicted, l1_evicted)
     }
 
     /// Aggregate MSHR occupancy (conservation checks).
@@ -87,10 +97,12 @@ impl GpuMmu {
         self.mshr.iter().map(|m| m.occupancy()).sum()
     }
 
+    /// Peak MSHR occupancy across this GPU's stations.
     pub fn mshr_peak(&self) -> usize {
         self.mshr.iter().map(|m| m.peak_occupancy).max().unwrap_or(0)
     }
 
+    /// Total MSHR-full stalls across this GPU's stations.
     pub fn mshr_full_stalls(&self) -> u64 {
         self.mshr.iter().map(|m| m.full_stalls).sum()
     }

@@ -1,12 +1,15 @@
 //! The pod simulation: ties GPUs, the UALink fabric, and the
 //! reverse-translation hierarchy into one event-driven model and runs a
-//! collective schedule to completion.
+//! collective schedule — or a multi-tenant workload of many concurrent
+//! schedules — to completion.
 //!
 //! See DESIGN.md "Request lifecycle" for the modeled path. Entry points:
-//! [`run`] (config → stats) and [`run_schedule`] (custom schedule).
+//! [`run`] (config → stats), [`run_schedule`] (custom schedule), and
+//! [`run_workload`] (merged multi-tenant workload with per-job stats and
+//! cross-job TLB-interference counters).
 
 pub mod mmu;
 pub mod sim;
 
 pub use mmu::GpuMmu;
-pub use sim::{run, run_schedule, PodSim};
+pub use sim::{run, run_schedule, run_workload, PodSim};

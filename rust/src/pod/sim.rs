@@ -14,12 +14,15 @@
 //! count excepted) — enforced by `rust/tests/engine_diff.rs`.
 
 use super::mmu::{GpuMmu, WalkRec};
+use crate::collective::workload::Workload;
 use crate::collective::{generators, Schedule};
 use crate::config::{EnginePolicy, PodConfig, PrefetchPolicy};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{NetResources, Topology};
 use crate::sim::Engine;
+use crate::stats::histogram::LogHistogram;
+use crate::stats::run::JobStats;
 use crate::stats::RunStats;
 use crate::trans::class::{PrimaryOutcome, TransClass};
 use crate::trans::mshr::MshrOutcome;
@@ -76,6 +79,22 @@ struct Request {
     internode: bool,
 }
 
+/// Per-job run accounting (the in-flight counterpart of
+/// [`crate::stats::run::JobStats`]). Job id = index into `PodSim::jobs`.
+#[derive(Debug)]
+struct JobRun {
+    name: String,
+    arrival: Time,
+    bytes: u64,
+    total_requests: u64,
+    acked: u64,
+    completion: Time,
+    rtt_hist: LogHistogram,
+    rat_hist: LogHistogram,
+}
+
+/// The full pod model: GPUs, fabric, translation hierarchy and the event
+/// engine, executing one (possibly multi-tenant) workload to completion.
 pub struct PodSim {
     cfg: PodConfig,
     schedule: Schedule,
@@ -86,6 +105,14 @@ pub struct PodSim {
     wgs: Vec<WorkGroup>,
     /// op id → ops that depend on it.
     children: Vec<Vec<u32>>,
+    /// Tenant jobs (index = the `job` tag on schedule ops). Single-
+    /// schedule runs hold one entry covering the whole schedule.
+    jobs: Vec<JobRun>,
+    /// Per-GPU page-ownership intervals `(first_page, last_page, job)`,
+    /// sorted by first page. Empty unless the run is multi-job with
+    /// translation enabled — the cross-job eviction counters need it,
+    /// single-job runs skip the lookup entirely.
+    page_jobs: Vec<Vec<(u64, u64, u16)>>,
     slab: Vec<Request>,
     free: Vec<u32>,
     /// Per-source-GPU issue counters (trace sequencing).
@@ -141,18 +168,50 @@ pub fn run_schedule(cfg: &PodConfig, schedule: Schedule) -> Result<RunStats> {
     Ok(sim.into_stats())
 }
 
+/// Run a multi-tenant [`Workload`] under `cfg`: every job's schedule runs
+/// concurrently through the shared pod, offset by its arrival time, and
+/// `RunStats` reports per-job completion/latency percentiles plus the
+/// cross-job Link-TLB eviction counters. A single-job workload is
+/// bit-identical to [`run_schedule`] on the same schedule (for matching
+/// request sizing; pinned by `rust/tests/workload.rs`).
+pub fn run_workload(cfg: &PodConfig, workload: Workload) -> Result<RunStats> {
+    workload.schedule.validate()?;
+    let mut sim = PodSim::new_workload(cfg.clone(), workload)?;
+    sim.run_to_completion();
+    Ok(sim.into_stats())
+}
+
 impl PodSim {
+    /// Build a pod for one plain schedule (wrapped as a single-job
+    /// workload; request sizing follows the configured collective's
+    /// volume formula, exactly as before the multi-tenant layer).
     pub fn new(cfg: PodConfig, schedule: Schedule) -> Result<PodSim> {
+        let request_bytes = cfg.request_bytes();
+        Self::new_inner(cfg, Workload::single(schedule), request_bytes)
+    }
+
+    /// Build a pod for a merged multi-tenant workload (request sizing
+    /// from the workload's actual fabric-byte total).
+    pub fn new_workload(cfg: PodConfig, workload: Workload) -> Result<PodSim> {
+        let request_bytes = cfg.request_bytes_for(workload.schedule.total_bytes());
+        Self::new_inner(cfg, workload, request_bytes)
+    }
+
+    fn new_inner(cfg: PodConfig, workload: Workload, request_bytes: u64) -> Result<PodSim> {
         cfg.validate()?;
+        let schedule = workload.schedule;
         anyhow::ensure!(
             schedule.gpus == cfg.gpus,
             "schedule is for {} GPUs, config says {}",
             schedule.gpus,
             cfg.gpus
         );
+        anyhow::ensure!(
+            schedule.ops.iter().all(|o| (o.job as usize) < workload.jobs.len()),
+            "schedule op carries a job tag outside the workload's job list"
+        );
         let topo = Topology::new(cfg.gpus, cfg.link.stations_per_gpu);
         let net = NetResources::new(topo, &cfg.link);
-        let request_bytes = cfg.request_bytes();
 
         let mut mmus: Vec<GpuMmu> = (0..cfg.gpus)
             .map(|g| GpuMmu::new(g, cfg.seed, cfg.link.stations_per_gpu, &cfg.trans))
@@ -175,6 +234,65 @@ impl PodSim {
             .map(|&op| WorkGroup::new(op, request_bytes, cfg.gpu.wg_window, op.after.is_some()))
             .collect();
         let total_requests = wgs.iter().map(|w| w.total_requests()).sum();
+
+        let mut jobs: Vec<JobRun> = workload
+            .jobs
+            .iter()
+            .map(|d| JobRun {
+                name: d.name.clone(),
+                arrival: d.arrival,
+                bytes: d.bytes,
+                total_requests: 0,
+                acked: 0,
+                completion: 0,
+                rtt_hist: LogHistogram::new(),
+                rat_hist: LogHistogram::new(),
+            })
+            .collect();
+        for w in &wgs {
+            jobs[w.op.job as usize].total_requests += w.total_requests();
+        }
+        // Page-ownership intervals for the cross-job eviction counters.
+        // Only multi-job runs with translation enabled pay for the map;
+        // everywhere else the lookup short-circuits on the empty vec.
+        let page_jobs: Vec<Vec<(u64, u64, u16)>> = if jobs.len() > 1 && cfg.trans.enabled {
+            let mut map: Vec<Vec<(u64, u64, u16)>> = vec![Vec::new(); cfg.gpus as usize];
+            for op in &schedule.ops {
+                let first = op.dst_offset / cfg.trans.page_bytes;
+                let last = (op.dst_offset + op.bytes - 1) / cfg.trans.page_bytes;
+                map[op.dst as usize].push((first, last, op.job));
+            }
+            for (g, table) in map.iter_mut().enumerate() {
+                table.sort_unstable();
+                // Coalesce same-job overlapping/adjacent ranges (jobs own
+                // disjoint page-aligned regions by construction, so the
+                // merged table has one interval per job region). A page
+                // shared across jobs would make eviction attribution
+                // ambiguous — reject it (the composer prevents this when
+                // its alignment >= the configured page size).
+                let mut merged: Vec<(u64, u64, u16)> = Vec::new();
+                for (f, l, j) in table.drain(..) {
+                    if let Some(prev) = merged.last_mut() {
+                        if prev.2 == j && f <= prev.1.saturating_add(1) {
+                            prev.1 = prev.1.max(l);
+                            continue;
+                        }
+                        anyhow::ensure!(
+                            f > prev.1,
+                            "jobs {} and {j} share translation page {f} at GPU {g}; \
+                             build the workload with alignment >= trans.page_bytes ({})",
+                            prev.2,
+                            cfg.trans.page_bytes
+                        );
+                    }
+                    merged.push((f, l, j));
+                }
+                *table = merged;
+            }
+            map
+        } else {
+            Vec::new()
+        };
 
         let stats = RunStats { config_name: cfg.name.clone(), ..RunStats::default() };
         // Hint walks only exist where reverse translation does.
@@ -209,6 +327,8 @@ impl PodSim {
             mmus,
             wgs,
             children,
+            jobs,
+            page_jobs,
             slab: Vec::with_capacity(peak_outstanding),
             free: Vec::with_capacity(peak_outstanding),
             issue_seq: vec![0; topo.gpus as usize],
@@ -231,7 +351,11 @@ impl PodSim {
     }
 
     /// §6.1: fused pre-translation kernels warmed the Link TLBs during the
-    /// preceding compute phase — model as free fills before t=0.
+    /// preceding compute phase — model as free fills before t=0. In
+    /// multi-tenant runs every job's window is warmed up front regardless
+    /// of its arrival (the model's "preceding compute phase" precedes the
+    /// whole run); warmup fills that evict another tenant's entries do
+    /// count toward the cross-job eviction counters.
     fn apply_pretranslation(&mut self) {
         if !self.cfg.trans.enabled || !self.cfg.trans.pretranslate.enabled {
             return;
@@ -251,8 +375,13 @@ impl PodSim {
                 if (i as u64) >= limit {
                     break;
                 }
-                self.mmus[op.dst as usize].warm_fill(PageId(p), Some(rail));
+                let (l2_evicted, l1_evicted) =
+                    self.mmus[op.dst as usize].warm_fill(PageId(p), Some(rail));
                 self.stats.pretranslated_pages += 1;
+                self.note_cross_job_eviction(op.dst, p, l2_evicted, false);
+                for victim in l1_evicted {
+                    self.note_cross_job_eviction(op.dst, p, Some(victim), true);
+                }
             }
         }
     }
@@ -260,11 +389,16 @@ impl PodSim {
     fn seed_root_ops(&mut self) {
         for i in 0..self.wgs.len() {
             if self.wgs[i].op.after.is_none() {
-                self.engine.schedule_at(0, Ev::WgStart { wg: i as u32 });
+                // Root ops become runnable when their job arrives (t=0
+                // for single-schedule runs — identical to the pre-multi-
+                // tenant behavior, op order preserved).
+                let at = self.jobs[self.wgs[i].op.job as usize].arrival;
+                self.engine.schedule_at(at, Ev::WgStart { wg: i as u32 });
             }
         }
     }
 
+    /// Drain the event loop and finalize the statistics.
     pub fn run_to_completion(&mut self) {
         let t0 = std::time::Instant::now();
         while let Some((now, ev)) = self.engine.next() {
@@ -308,8 +442,29 @@ impl PodSim {
         self.stats.max_touched_pages =
             self.mmus.iter().map(|m| m.page_table.touched_pages()).max().unwrap_or(0);
         self.stats.trace.sort_unstable();
+        // Per-job results: every job fully acknowledged, books balanced.
+        let jobs = std::mem::take(&mut self.jobs);
+        self.stats.jobs = jobs
+            .into_iter()
+            .enumerate()
+            .map(|(i, jr)| {
+                assert_eq!(jr.acked, jr.total_requests, "job {i} ({}) lost requests", jr.name);
+                JobStats {
+                    name: jr.name,
+                    arrival: jr.arrival,
+                    completion: jr.completion,
+                    requests: jr.acked,
+                    bytes: jr.bytes,
+                    rtt_hist: jr.rtt_hist,
+                    rat_hist: jr.rat_hist,
+                }
+            })
+            .collect();
+        let job_requests: u64 = self.stats.jobs.iter().map(|j| j.requests).sum();
+        assert_eq!(job_requests, self.total_requests, "per-job request accounting leaked");
     }
 
+    /// Consume the simulation and return its statistics.
     pub fn into_stats(self) -> RunStats {
         self.stats
     }
@@ -489,6 +644,39 @@ impl PodSim {
         }
     }
 
+    /// Owner job of a page at one GPU, from the sorted interval table.
+    fn job_of_page(table: &[(u64, u64, u16)], page: u64) -> Option<u16> {
+        let i = table.partition_point(|&(first, _, _)| first <= page);
+        if i == 0 {
+            return None;
+        }
+        let (first, last, job) = table[i - 1];
+        (first <= page && page <= last).then_some(job)
+    }
+
+    /// Account a Link-TLB fill whose LRU victim belonged to a *different*
+    /// tenant job — the TLB-interference signal multi-tenant runs report.
+    /// No-op (and no lookup cost) for single-job runs, where `page_jobs`
+    /// is left empty.
+    fn note_cross_job_eviction(&mut self, gpu: u32, filled: u64, evicted: Option<u64>, l1: bool) {
+        let Some(victim) = evicted else { return };
+        if self.page_jobs.is_empty() {
+            return;
+        }
+        let table = &self.page_jobs[gpu as usize];
+        if let (Some(filler), Some(owner)) =
+            (Self::job_of_page(table, filled), Self::job_of_page(table, victim))
+        {
+            if filler != owner {
+                if l1 {
+                    self.stats.cross_job_l1_evictions += 1;
+                } else {
+                    self.stats.cross_job_l2_evictions += 1;
+                }
+            }
+        }
+    }
+
     fn alloc(&mut self, r: Request) -> u32 {
         if let Some(i) = self.free.pop() {
             self.slab[i as usize] = r;
@@ -573,18 +761,22 @@ impl PodSim {
             .pending_walks
             .remove(&page)
             .expect("WalkDone for unknown walk");
-        {
+        let (l2_evicted, hint_l1_evicted) = {
             let mmu = &mut self.mmus[gpu as usize];
             // Mostly-inclusive fill: PWCs + L2 (station L1s below).
             mmu.page_table.resolve(page);
             mmu.pwc.fill_walk(page);
-            mmu.l2.fill(page.0);
+            let l2_evicted = mmu.l2.fill(page.0);
             // Schedule-driven hints know the arrival rail — warm its
             // private L1 so the stream's first packets hit there.
-            if let Some(rail) = rec.hint_rail {
-                mmu.l1[rail as usize].fill(page.0);
-            }
-        }
+            let hint_l1_evicted = match rec.hint_rail {
+                Some(rail) => mmu.l1[rail as usize].fill(page.0),
+                None => None,
+            };
+            (l2_evicted, hint_l1_evicted)
+        };
+        self.note_cross_job_eviction(gpu, page.0, l2_evicted, false);
+        self.note_cross_job_eviction(gpu, page.0, hint_l1_evicted, true);
         if rec.prefetch {
             self.stats.prefetch_walks += 1;
         }
@@ -633,9 +825,12 @@ impl PodSim {
         page: PageId,
         outcome: PrimaryOutcome,
     ) {
-        let mmu = &mut self.mmus[gpu as usize];
-        mmu.l1[station as usize].fill(page.0);
-        let reqs = mmu.mshr[station as usize].complete(page);
+        let (l1_evicted, reqs) = {
+            let mmu = &mut self.mmus[gpu as usize];
+            let evicted = mmu.l1[station as usize].fill(page.0);
+            (evicted, mmu.mshr[station as usize].complete(page))
+        };
+        self.note_cross_job_eviction(gpu, page.0, l1_evicted, true);
         for (i, rid) in reqs.into_iter().enumerate() {
             let class = if i == 0 {
                 TransClass::Primary(outcome)
@@ -663,9 +858,9 @@ impl PodSim {
     /// instead of at the ACK leaves `RunStats` bit-identical).
     fn finish_translation(&mut self, at: Time, req: u32, class: TransClass) {
         self.stats.classes.record(class);
-        let (src, dst, rail, issue, target_arrive, internode, seq) = {
+        let (src, dst, rail, issue, target_arrive, internode, seq, wg) = {
             let r = &self.slab[req as usize];
-            (r.src, r.dst as u32, r.rail as u32, r.issue, r.target_arrive, r.internode, r.seq)
+            (r.src, r.dst as u32, r.rail as u32, r.issue, r.target_arrive, r.internode, r.seq, r.wg)
         };
         let t_hbm_done = at + self.t_hbm;
         let ack = self.cfg.link.ack_bytes;
@@ -686,9 +881,14 @@ impl PodSim {
         self.stats.breakdown.memory += self.t_hbm as u128;
         self.stats.breakdown.net_ack += ((t_ack - self.t_fabric) - t_hbm_done) as u128;
         self.stats.rtt_hist.record(t_ack - issue);
+        // Per-job latency books (job id is static per op, so this is as
+        // order-insensitive as the global histograms).
+        let job = self.wgs[wg as usize].op.job as usize;
+        self.jobs[job].rtt_hist.record(t_ack - issue);
         if internode {
             self.stats.internode_requests += 1;
             self.stats.rat_hist.record(rat);
+            self.jobs[job].rat_hist.record(rat);
             if self.trace_src == Some(src) {
                 self.stats.trace.push((seq as u64, rat));
             }
@@ -701,6 +901,11 @@ impl PodSim {
         let wg = self.slab[req as usize].wg;
         self.free.push(req);
         self.acked += 1;
+        let job = self.wgs[wg as usize].op.job as usize;
+        self.jobs[job].acked += 1;
+        if self.jobs[job].acked == self.jobs[job].total_requests {
+            self.jobs[job].completion = now;
+        }
 
         let op_done = self.wgs[wg as usize].on_ack();
         if op_done {
@@ -982,6 +1187,103 @@ mod tests {
         let small_pages = run(&c).unwrap();
         assert!(small_pages.walks_started > 4 * base.walks_started);
         assert!(small_pages.completion >= base.completion);
+    }
+
+    #[test]
+    fn multi_tenant_reports_per_job_stats() {
+        use crate::collective::workload::WorkloadBuilder;
+        use crate::util::units::us;
+        let cfg = small(8, MIB);
+        let sched = generators::alltoall_allpairs(8, MIB).unwrap();
+        let w = WorkloadBuilder::new("pair", 8)
+            .align(cfg.trans.page_bytes)
+            .job("a", sched.clone(), 0)
+            .job("b", sched, us(1))
+            .build()
+            .unwrap();
+        let s = run_workload(&cfg, w).unwrap();
+        assert_eq!(s.jobs.len(), 2);
+        assert_eq!(s.jobs.iter().map(|j| j.requests).sum::<u64>(), s.requests);
+        assert_eq!(s.jobs[1].arrival, us(1));
+        for j in &s.jobs {
+            assert!(j.completion > j.arrival, "job {} never completed", j.name);
+            assert_eq!(j.rtt_hist.count(), j.requests);
+            assert!(j.rtt_p50_ns() <= j.rtt_p95_ns() && j.rtt_p95_ns() <= j.rtt_p99_ns());
+        }
+        // The pod finishes when the last job does.
+        assert_eq!(s.completion, s.jobs.iter().map(|j| j.completion).max().unwrap());
+    }
+
+    #[test]
+    fn single_job_workload_matches_run_schedule_bit_for_bit() {
+        let cfg = small(8, MIB);
+        let sched = generators::alltoall_allpairs(8, MIB).unwrap();
+        let a = run_schedule(&cfg, sched.clone()).unwrap();
+        let b = run_workload(&cfg, crate::collective::workload::Workload::single(sched)).unwrap();
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.classes, b.classes);
+        assert_eq!(a.breakdown, b.breakdown);
+        assert_eq!(a.events, b.events);
+        assert_eq!(b.jobs.len(), 1);
+        assert_eq!(b.cross_job_l1_evictions, 0);
+        assert_eq!(b.cross_job_l2_evictions, 0);
+    }
+
+    #[test]
+    fn cross_job_evictions_counted_under_shared_l2_pressure() {
+        use crate::collective::workload::WorkloadBuilder;
+        let mut cfg = small(8, 16 * MIB);
+        cfg.trans.l2.entries = 4; // 2-way ⇒ 2 sets: two tenants must thrash
+        let sched = generators::alltoall_allpairs(8, 16 * MIB).unwrap();
+        let w = WorkloadBuilder::new("thrash", 8)
+            .align(cfg.trans.page_bytes)
+            .job("a", sched.clone(), 0)
+            .job("b", sched.clone(), 0)
+            .build()
+            .unwrap();
+        let s = run_workload(&cfg, w).unwrap();
+        assert!(
+            s.cross_job_l2_evictions > 0,
+            "two tenants over a 4-entry shared L2 must evict each other"
+        );
+        // The same pressure from a single tenant records no cross-job
+        // interference by definition.
+        let single = run_schedule(&cfg, sched).unwrap();
+        assert_eq!(single.cross_job_l2_evictions, 0);
+        assert_eq!(single.cross_job_l1_evictions, 0);
+    }
+
+    #[test]
+    fn multi_tenant_same_seed_is_bit_deterministic() {
+        use crate::collective::workload::Workload;
+        use crate::config::{ArrivalSpec, JobKind, JobTemplate, WorkloadSpec};
+        let spec = WorkloadSpec {
+            name: "det".into(),
+            seed: 77,
+            arrival: ArrivalSpec::Poisson { mean_gap_ps: crate::util::units::us(2) },
+            jobs: vec![JobTemplate {
+                name: "tenant".into(),
+                kind: JobKind::Collective(CollectiveKind::AllToAll),
+                size_bytes: MIB,
+                count: 4,
+                repeat: 1,
+            }],
+        };
+        let cfg = small(8, MIB);
+        let w1 = Workload::from_spec(&spec, 8, cfg.trans.page_bytes).unwrap();
+        let w2 = Workload::from_spec(&spec, 8, cfg.trans.page_bytes).unwrap();
+        assert_eq!(w1, w2, "same seed must rebuild the identical workload");
+        let a = run_workload(&cfg, w1).unwrap();
+        let b = run_workload(&cfg, w2).unwrap();
+        assert_eq!(a.completion, b.completion);
+        assert_eq!(a.events, b.events);
+        assert_eq!(a.cross_job_l1_evictions, b.cross_job_l1_evictions);
+        assert_eq!(a.cross_job_l2_evictions, b.cross_job_l2_evictions);
+        for (x, y) in a.jobs.iter().zip(&b.jobs) {
+            assert_eq!(x.arrival, y.arrival);
+            assert_eq!(x.completion, y.completion);
+            assert_eq!(x.rtt_hist, y.rtt_hist);
+        }
     }
 
     #[test]

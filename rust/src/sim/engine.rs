@@ -13,6 +13,7 @@
 use super::wheel::TimingWheel;
 use crate::util::units::Time;
 
+/// The event-loop driver: clock + `(time, seq)`-ordered pending set.
 #[derive(Debug)]
 pub struct Engine<E> {
     now: Time,
@@ -30,6 +31,7 @@ impl<E> Default for Engine<E> {
 }
 
 impl<E> Engine<E> {
+    /// Engine with a default-sized pending set.
     pub fn new() -> Self {
         Self::with_capacity(1024)
     }
@@ -46,15 +48,18 @@ impl<E> Engine<E> {
         }
     }
 
+    /// Current simulated time.
     #[inline]
     pub fn now(&self) -> Time {
         self.now
     }
 
+    /// Events processed so far.
     pub fn processed(&self) -> u64 {
         self.processed
     }
 
+    /// Events currently pending.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

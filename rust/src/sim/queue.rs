@@ -16,6 +16,7 @@ struct Entry<E> {
     ev: E,
 }
 
+/// 4-ary implicit heap keyed by `(time, seq)` with inline payloads.
 #[derive(Debug)]
 pub struct EventQueue<E> {
     heap: Vec<Entry<E>>,
@@ -30,18 +31,22 @@ impl<E> Default for EventQueue<E> {
 const D: usize = 4;
 
 impl<E> EventQueue<E> {
+    /// Empty queue.
     pub fn new() -> Self {
         Self { heap: Vec::new() }
     }
 
+    /// Empty queue with pre-allocated storage for `cap` events.
     pub fn with_capacity(cap: usize) -> Self {
         Self { heap: Vec::with_capacity(cap) }
     }
 
+    /// Pending event count.
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Is the queue empty?
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()
     }
@@ -51,6 +56,7 @@ impl<E> EventQueue<E> {
         self.heap.first().map(|e| (e.time, e.seq))
     }
 
+    /// Insert an event keyed by `(time, seq)`.
     #[inline]
     pub fn push(&mut self, time: Time, seq: u64, ev: E) {
         self.heap.push(Entry { time, seq, ev });

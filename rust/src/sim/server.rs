@@ -23,6 +23,7 @@ pub struct Server {
 }
 
 impl Server {
+    /// Idle server at t=0.
     pub fn new() -> Self {
         Self::default()
     }
@@ -61,6 +62,7 @@ pub struct BoundedServer {
 }
 
 impl BoundedServer {
+    /// Idle server with `credits` link-level credits (> 0).
     pub fn new(credits: usize) -> Self {
         assert!(credits > 0);
         Self { server: Server::new(), credits, inflight: VecDeque::new() }
@@ -98,10 +100,12 @@ impl BoundedServer {
         (start, done)
     }
 
+    /// Total busy time of the underlying server.
     pub fn busy_time(&self) -> Time {
         self.server.busy_time()
     }
 
+    /// Packets currently holding a credit.
     pub fn in_flight(&self) -> usize {
         self.inflight.len()
     }

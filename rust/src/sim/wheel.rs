@@ -44,6 +44,8 @@ impl<E> Entry<E> {
     }
 }
 
+/// Timing-wheel pending-event set: O(1) near-future ring + exact-order
+/// heap overflow (drop-in for [`EventQueue`]).
 #[derive(Debug)]
 pub struct TimingWheel<E> {
     /// `slots[g & SLOT_MASK]` holds the events of granule `g` for
@@ -73,6 +75,7 @@ impl<E> Default for TimingWheel<E> {
 }
 
 impl<E> TimingWheel<E> {
+    /// Empty wheel.
     pub fn new() -> Self {
         Self::with_capacity(0)
     }
@@ -91,10 +94,12 @@ impl<E> TimingWheel<E> {
         }
     }
 
+    /// Pending event count (ring + overflow).
     pub fn len(&self) -> usize {
         self.in_wheel + self.overflow.len()
     }
 
+    /// Is the pending set empty?
     pub fn is_empty(&self) -> bool {
         self.len() == 0
     }
@@ -144,6 +149,7 @@ impl<E> TimingWheel<E> {
         self.hand = self.hand.max(g);
     }
 
+    /// Insert an event keyed by `(time, seq)`.
     #[inline]
     pub fn push(&mut self, time: Time, seq: u64, ev: E) {
         let g = time >> GRAN_SHIFT;

@@ -2,6 +2,7 @@
 
 use crate::util::units::Time;
 
+/// Log₂-bucketed latency histogram with exact count/sum/min/max.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct LogHistogram {
     /// bucket i counts samples in [2^i, 2^(i+1)).
@@ -19,10 +20,12 @@ impl Default for LogHistogram {
 }
 
 impl LogHistogram {
+    /// Empty histogram.
     pub fn new() -> Self {
         Self { buckets: vec![0; 64], count: 0, sum: 0, min: Time::MAX, max: 0 }
     }
 
+    /// Record one sample.
     #[inline]
     pub fn record(&mut self, v: Time) {
         let b = (64 - v.max(1).leading_zeros() - 1) as usize;
@@ -33,10 +36,12 @@ impl LogHistogram {
         self.max = self.max.max(v);
     }
 
+    /// Samples recorded.
     pub fn count(&self) -> u64 {
         self.count
     }
 
+    /// Exact mean of the recorded samples (0 when empty).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -45,6 +50,7 @@ impl LogHistogram {
         }
     }
 
+    /// Smallest recorded sample (0 when empty).
     pub fn min(&self) -> Time {
         if self.count == 0 {
             0
@@ -53,6 +59,7 @@ impl LogHistogram {
         }
     }
 
+    /// Largest recorded sample.
     pub fn max(&self) -> Time {
         self.max
     }
@@ -74,6 +81,7 @@ impl LogHistogram {
         self.max
     }
 
+    /// Fold another histogram's samples into this one.
     pub fn merge(&mut self, other: &LogHistogram) {
         for (a, b) in self.buckets.iter_mut().zip(&other.buckets) {
             *a += b;

@@ -9,14 +9,20 @@ use crate::util::units::{to_ns, Time};
 /// divide by `requests` for per-request means.
 #[derive(Debug, Clone, Default, PartialEq, Eq)]
 pub struct LatencyBreakdown {
+    /// Local-data-fabric traversals (source + destination).
     pub fabric: u128,
+    /// Forward network path (uplink, switch, links).
     pub net_fwd: u128,
+    /// Reverse address translation at the target.
     pub translation: u128,
+    /// HBM write at the target.
     pub memory: u128,
+    /// ACK return path.
     pub net_ack: u128,
 }
 
 impl LatencyBreakdown {
+    /// Sum of all components, ps.
     pub fn total(&self) -> u128 {
         self.fabric + self.net_fwd + self.translation + self.memory + self.net_ack
     }
@@ -34,38 +40,116 @@ impl LatencyBreakdown {
     }
 }
 
+/// Per-tenant-job results of a run (`pod::run_workload`). Single-schedule
+/// runs carry one entry covering the whole schedule, so the per-job view
+/// is always present.
+#[derive(Debug, Clone, Default)]
+pub struct JobStats {
+    /// Job name (from the workload descriptor / schedule name).
+    pub name: String,
+    /// Simulated time at which the job's root ops became runnable.
+    pub arrival: Time,
+    /// Simulated time of the job's last ACK.
+    pub completion: Time,
+    /// Requests the job issued (all acknowledged at completion).
+    pub requests: u64,
+    /// Fabric bytes the job moved.
+    pub bytes: u64,
+    /// Round-trip latency histogram over the job's requests.
+    pub rtt_hist: LogHistogram,
+    /// Reverse-translation latency histogram over the job's inter-node
+    /// requests (empty if the job never crossed a node boundary).
+    pub rat_hist: LogHistogram,
+}
+
+impl JobStats {
+    /// Job latency — completion minus arrival (the serving-level metric).
+    pub fn latency(&self) -> Time {
+        self.completion.saturating_sub(self.arrival)
+    }
+
+    /// p50 request round-trip latency, ns (log₂-bucket upper bound).
+    pub fn rtt_p50_ns(&self) -> f64 {
+        to_ns(self.rtt_hist.quantile(0.50))
+    }
+
+    /// p95 request round-trip latency, ns (log₂-bucket upper bound).
+    pub fn rtt_p95_ns(&self) -> f64 {
+        to_ns(self.rtt_hist.quantile(0.95))
+    }
+
+    /// p99 request round-trip latency, ns (log₂-bucket upper bound).
+    pub fn rtt_p99_ns(&self) -> f64 {
+        to_ns(self.rtt_hist.quantile(0.99))
+    }
+
+    /// Machine-readable form (one object of the run report's `jobs` array).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("arrival_ns", Json::from(to_ns(self.arrival))),
+            ("completion_ns", Json::from(to_ns(self.completion))),
+            ("latency_ns", Json::from(to_ns(self.latency()))),
+            ("requests", Json::from(self.requests)),
+            ("bytes", Json::from(self.bytes)),
+            ("internode_requests", Json::from(self.rat_hist.count())),
+            ("rtt_p50_ns", Json::from(self.rtt_p50_ns())),
+            ("rtt_p95_ns", Json::from(self.rtt_p95_ns())),
+            ("rtt_p99_ns", Json::from(self.rtt_p99_ns())),
+            ("mean_rat_ns", Json::from(to_ns(self.rat_hist.mean() as u64))),
+        ])
+    }
+}
+
 /// Full result set of one simulated collective.
 #[derive(Debug, Clone, Default)]
 pub struct RunStats {
+    /// The config's `name` (run label).
     pub config_name: String,
     /// Collective completion time (last ACK).
     pub completion: Time,
+    /// Total remote-store requests simulated.
     pub requests: u64,
+    /// Requests that crossed a node boundary (and hence translated).
     pub internode_requests: u64,
+    /// Additive RTT decomposition (Fig 6).
     pub breakdown: LatencyBreakdown,
+    /// Translation-outcome taxonomy counters (Figs 7/8).
     pub classes: ClassCounts,
+    /// Reverse-translation latency histogram (inter-node requests).
     pub rat_hist: LogHistogram,
+    /// Round-trip latency histogram (all requests).
     pub rtt_hist: LogHistogram,
     /// (per-source-GPU issue sequence, RAT latency) for the traced GPU
     /// (Figs 9/10).
     pub trace: Vec<(u64, Time)>,
-    /// Walker/queue pressure.
+    /// Page walks started (walker pressure).
     pub walks_started: u64,
+    /// Walks that queued for a walker slot.
     pub walks_queued: u64,
+    /// Peak concurrent walks at any one GPU.
     pub peak_active_walks: u32,
+    /// Walks initiated by a prefetcher (stride or hint).
     pub prefetch_walks: u64,
+    /// Pages warmed for free by §6.1 pre-translation.
     pub pretranslated_pages: u64,
     /// §6 schedule-driven hint-stream accounting (`trans::prefetch`).
     /// Invariant: `prefetch_issued == prefetch_useful + prefetch_late`.
     pub prefetch_issued: u64,
+    /// Hint walks that completed before any demand request needed them.
     pub prefetch_useful: u64,
+    /// Hint walks demand requests caught in flight.
     pub prefetch_late: u64,
+    /// Hints dropped on arrival (page already covered).
     pub prefetch_useless: u64,
+    /// Hints parked by the per-GPU rate cap (reissued later).
     pub prefetch_deferred: u64,
     /// Total L2 Link-TLB fills across GPUs — every completed walk fills
     /// the L2 exactly once, so this reconciles hint + demand walk counts.
     pub l2_fills: u64,
+    /// Peak MSHR occupancy at any station.
     pub mshr_peak: usize,
+    /// Requests that stalled on a full MSHR file.
     pub mshr_full_stalls: u64,
     /// Destination translation working set (max distinct pages resolved
     /// at any one GPU).
@@ -74,6 +158,14 @@ pub struct RunStats {
     pub events: u64,
     /// Host wall time for the run, seconds.
     pub wall_seconds: f64,
+    /// Per-tenant-job results (one entry per job; single-schedule runs
+    /// carry one entry covering the whole schedule).
+    pub jobs: Vec<JobStats>,
+    /// Cross-tenant interference: L1 Link-TLB fills whose LRU victim
+    /// belonged to a different job (0 for single-job runs).
+    pub cross_job_l1_evictions: u64,
+    /// Cross-tenant interference at the shared L2 Link TLB.
+    pub cross_job_l2_evictions: u64,
 }
 
 impl RunStats {
@@ -98,6 +190,7 @@ impl RunStats {
         self.breakdown.fractions()[2]
     }
 
+    /// Simulator throughput: events processed per host second.
     pub fn events_per_second(&self) -> f64 {
         if self.wall_seconds <= 0.0 {
             0.0
@@ -106,6 +199,7 @@ impl RunStats {
         }
     }
 
+    /// Machine-readable run report (the CLI's `--json` output).
     pub fn to_json(&self) -> Json {
         let f = self.breakdown.fractions();
         Json::from_pairs(vec![
@@ -146,6 +240,9 @@ impl RunStats {
             ("max_touched_pages", Json::from(self.max_touched_pages)),
             ("events", Json::from(self.events)),
             ("wall_seconds", Json::from(self.wall_seconds)),
+            ("jobs", Json::Arr(self.jobs.iter().map(JobStats::to_json).collect())),
+            ("cross_job_l1_evictions", Json::from(self.cross_job_l1_evictions)),
+            ("cross_job_l2_evictions", Json::from(self.cross_job_l2_evictions)),
         ])
     }
 
@@ -228,6 +325,36 @@ mod tests {
         assert_eq!(j.req_str("config").unwrap(), "x");
         assert_eq!(j.req_u64("requests").unwrap(), 3);
         assert!(j.get("rtt_fractions").is_some());
+    }
+
+    #[test]
+    fn job_stats_latency_and_percentiles() {
+        let mut j = JobStats { name: "decode-0".into(), arrival: ns(500), ..Default::default() };
+        j.completion = ns(10_500);
+        assert_eq!(j.latency(), ns(10_000));
+        for v in [ns(100), ns(200), ns(400), ns(800)] {
+            j.rtt_hist.record(v);
+        }
+        j.requests = 4;
+        assert!(j.rtt_p50_ns() <= j.rtt_p95_ns());
+        assert!(j.rtt_p95_ns() <= j.rtt_p99_ns());
+        let json = j.to_json();
+        assert_eq!(json.req_str("name").unwrap(), "decode-0");
+        assert_eq!(json.req_u64("requests").unwrap(), 4);
+        assert!(json.get("rtt_p99_ns").is_some());
+        // Completion before arrival (impossible, but don't underflow).
+        let early = JobStats { arrival: 10, completion: 5, ..Default::default() };
+        assert_eq!(early.latency(), 0);
+    }
+
+    #[test]
+    fn run_json_carries_job_and_interference_fields() {
+        let mut s = RunStats::default();
+        s.jobs.push(JobStats { name: "j".into(), ..Default::default() });
+        s.cross_job_l2_evictions = 7;
+        let j = s.to_json();
+        assert_eq!(j.get("jobs").and_then(|a| a.as_arr()).unwrap().len(), 1);
+        assert_eq!(j.req_u64("cross_job_l2_evictions").unwrap(), 7);
     }
 
     #[test]

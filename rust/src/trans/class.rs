@@ -13,27 +13,36 @@
 //! `L2Hit`, `L2HitUnderMiss` (another station's walk already pending at
 //! L2), `PwcHit(level)` (partial walk), `FullWalk`.
 
+/// Where a primary L1 miss was ultimately served.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum PrimaryOutcome {
+    /// Served by the shared L2 Link TLB.
     L2Hit,
+    /// Another station's walk for the page was already pending at L2.
     L2HitUnderMiss,
     /// Deepest page-walk-cache hit level (1..=levels-1); walk was partial.
     PwcHit(u32),
+    /// No cached level: the walker traversed the full table.
     FullWalk,
 }
 
+/// Top-level classification of one request's translation outcome.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum TransClass {
     /// Translation disabled (the paper's ideal configuration).
     Ideal,
     /// Intra-node access — SPA addressing, no reverse translation (§2.3).
     IntraNode,
+    /// Hit in the station's private L1 Link TLB.
     L1Hit,
+    /// L1 miss coalesced behind a pending miss (hit-under-miss).
     MshrHit(PrimaryOutcome),
+    /// L1 miss that itself went down the hierarchy.
     Primary(PrimaryOutcome),
 }
 
 impl PrimaryOutcome {
+    /// Stable label (CSV/report contract).
     pub fn name(&self) -> String {
         match self {
             PrimaryOutcome::L2Hit => "l2-hit".into(),
@@ -45,6 +54,7 @@ impl PrimaryOutcome {
 }
 
 impl TransClass {
+    /// Stable label (CSV/report contract).
     pub fn name(&self) -> String {
         match self {
             TransClass::Ideal => "ideal".into(),
@@ -60,6 +70,7 @@ impl TransClass {
         matches!(self, TransClass::MshrHit(_))
     }
 
+    /// The underlying primary outcome, when one exists.
     pub fn primary(&self) -> Option<PrimaryOutcome> {
         match self {
             TransClass::MshrHit(p) | TransClass::Primary(p) => Some(*p),
@@ -72,20 +83,32 @@ impl TransClass {
 /// (up to 8 levels is plenty).
 #[derive(Debug, Clone, Default, PartialEq)]
 pub struct ClassCounts {
+    /// Requests under the zero-RAT ideal configuration.
     pub ideal: u64,
+    /// Intra-node (SPA) requests — never translated.
     pub intra_node: u64,
+    /// L1 Link-TLB hits.
     pub l1_hit: u64,
+    /// MSHR hits whose primary resolved at L2.
     pub mshr_l2_hit: u64,
+    /// MSHR hits whose primary attached to a pending walk at L2.
     pub mshr_l2_hum: u64,
+    /// MSHR hits whose primary hit a PWC, folded per level.
     pub mshr_pwc_hit: [u64; 8],
+    /// MSHR hits whose primary took a full walk.
     pub mshr_full_walk: u64,
+    /// Primary misses served at L2.
     pub prim_l2_hit: u64,
+    /// Primary misses that attached to a pending walk at L2.
     pub prim_l2_hum: u64,
+    /// Primary misses that hit a PWC, folded per level.
     pub prim_pwc_hit: [u64; 8],
+    /// Primary misses that took a full walk.
     pub prim_full_walk: u64,
 }
 
 impl ClassCounts {
+    /// Count one classified request.
     pub fn record(&mut self, c: TransClass) {
         match c {
             TransClass::Ideal => self.ideal += 1,
@@ -106,6 +129,7 @@ impl ClassCounts {
         }
     }
 
+    /// Total requests recorded.
     pub fn total(&self) -> u64 {
         self.ideal
             + self.intra_node
@@ -114,6 +138,7 @@ impl ClassCounts {
             + self.primary_total()
     }
 
+    /// Total L1-MSHR hits (the Fig-7 bar).
     pub fn mshr_total(&self) -> u64 {
         self.mshr_l2_hit
             + self.mshr_l2_hum
@@ -121,6 +146,7 @@ impl ClassCounts {
             + self.mshr_full_walk
     }
 
+    /// Total primary misses.
     pub fn primary_total(&self) -> u64 {
         self.prim_l2_hit
             + self.prim_l2_hum
@@ -128,6 +154,7 @@ impl ClassCounts {
             + self.prim_full_walk
     }
 
+    /// Fold another counter set into this one.
     pub fn merge(&mut self, other: &ClassCounts) {
         self.ideal += other.ideal;
         self.intra_node += other.intra_node;

@@ -15,16 +15,23 @@ struct Entry {
     waiters: Vec<u32>,
 }
 
+/// One station's MSHR file: pending page translations + coalesced
+/// waiters, with a bounded entry count.
 #[derive(Debug)]
 pub struct MshrFile {
     capacity: usize,
     entries: Vec<Entry>,
+    /// Highest simultaneous occupancy observed.
     pub peak_occupancy: usize,
+    /// Entries ever allocated (primary misses).
     pub allocations: u64,
+    /// Requests coalesced behind an existing entry.
     pub coalesced: u64,
+    /// Requests rejected because the file was full.
     pub full_stalls: u64,
 }
 
+/// Result of [`MshrFile::lookup_or_alloc`].
 pub enum MshrOutcome {
     /// Allocated a new entry — caller must start the L2 lookup (primary).
     Allocated,
@@ -35,6 +42,7 @@ pub enum MshrOutcome {
 }
 
 impl MshrFile {
+    /// Empty file with `capacity` entries (> 0).
     pub fn new(capacity: u32) -> Self {
         assert!(capacity > 0);
         Self {
@@ -47,10 +55,12 @@ impl MshrFile {
         }
     }
 
+    /// Entries currently allocated.
     pub fn occupancy(&self) -> usize {
         self.entries.len()
     }
 
+    /// Is a translation for `page` already outstanding here?
     pub fn is_pending(&self, page: PageId) -> bool {
         self.entries.iter().any(|e| e.page == page)
     }
@@ -86,6 +96,7 @@ impl MshrFile {
         self.entries.swap_remove(idx).waiters
     }
 
+    /// Is there room for another entry?
     pub fn has_free(&self) -> bool {
         self.entries.len() < self.capacity
     }

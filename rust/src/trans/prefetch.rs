@@ -33,7 +33,9 @@ use std::collections::VecDeque;
 /// the stream will arrive over.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Hint {
+    /// Destination page to warm.
     pub page: PageId,
+    /// Rail (station index) the hinted stream arrives on.
     pub rail: u32,
 }
 
@@ -69,10 +71,12 @@ pub struct Prefetcher {
     backlog: Vec<VecDeque<Hint>>,
     /// Per-GPU hint walks currently in flight.
     in_flight: Vec<u32>,
+    /// Run-wide hint accounting (reported through `RunStats`).
     pub counters: PrefetchCounters,
 }
 
 impl Prefetcher {
+    /// Build the pacing state for `gpus` GPUs under `policy`.
     pub fn new(policy: PrefetchPolicy, gpus: u32) -> Self {
         Self {
             policy,
@@ -82,10 +86,12 @@ impl Prefetcher {
         }
     }
 
+    /// The active policy.
     pub fn policy(&self) -> PrefetchPolicy {
         self.policy
     }
 
+    /// Is any translation-hiding policy active?
     pub fn enabled(&self) -> bool {
         !self.policy.is_off()
     }
@@ -183,7 +189,7 @@ mod tests {
     use crate::util::units::{us, MIB};
 
     fn op(dst_offset: u64, bytes: u64) -> SendOp {
-        SendOp { id: 0, src: 4, dst: 0, dst_offset, bytes, after: None }
+        SendOp { id: 0, src: 4, dst: 0, dst_offset, bytes, after: None, job: 0 }
     }
 
     #[test]

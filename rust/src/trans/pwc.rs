@@ -11,11 +11,14 @@
 use crate::mem::PageId;
 use crate::trans::tlb::Tlb;
 
+/// The split page-walk caches of one GPU (one per non-leaf level).
 #[derive(Debug)]
 pub struct PwcStack {
     /// index 0 => level 1 (leaf's parent) … index n-1 => level n (root-1).
     caches: Vec<Tlb>,
+    /// Total probes issued.
     pub probes: u64,
+    /// Histogram of deepest hit level per probe (index 0 = full miss).
     pub deepest_hits: Vec<u64>,
 }
 
@@ -38,6 +41,7 @@ impl PwcStack {
         Self::new(&rev, assoc)
     }
 
+    /// Number of cached (non-leaf) levels.
     pub fn levels(&self) -> u32 {
         self.caches.len() as u32
     }
@@ -67,6 +71,7 @@ impl PwcStack {
         }
     }
 
+    /// Drop every cached entry (cold start).
     pub fn flush(&mut self) {
         for c in &mut self.caches {
             c.flush();

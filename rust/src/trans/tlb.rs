@@ -15,14 +15,21 @@ struct Line {
 
 const INVALID: Line = Line { tag: 0, valid: false, last_use: 0 };
 
+/// Hit/miss/fill/eviction counters for one TLB instance.
 #[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
 pub struct TlbStats {
+    /// Lookups that found their tag.
     pub hits: u64,
+    /// Lookups that missed.
     pub misses: u64,
+    /// New-line insertions.
     pub fills: u64,
+    /// Fills that displaced a valid line.
     pub evictions: u64,
 }
 
+/// Set-associative (or fully-associative) TLB with true-LRU
+/// replacement and an MRU fast-path filter.
 #[derive(Debug)]
 pub struct Tlb {
     sets: usize,
@@ -33,6 +40,7 @@ pub struct Tlb {
     /// hundreds of consecutive requests, so the common lookup is a repeat
     /// of the previous hit. One compare short-circuits the way scan.
     mru: Option<(u64, u32)>, // (tag, line index)
+    /// Lifetime hit/miss/fill/eviction counters.
     pub stats: TlbStats,
 }
 
@@ -57,6 +65,7 @@ impl Tlb {
         }
     }
 
+    /// Total line count.
     pub fn entries(&self) -> usize {
         self.lines.len()
     }
@@ -149,6 +158,7 @@ impl Tlb {
         self.mru = None;
     }
 
+    /// Currently-valid line count.
     pub fn valid_count(&self) -> usize {
         self.lines.iter().filter(|l| l.valid).count()
     }

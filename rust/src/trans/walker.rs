@@ -9,9 +9,12 @@
 use crate::mem::PageId;
 use std::collections::VecDeque;
 
+/// One walk waiting for (or holding) a walker slot.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct QueuedWalk {
+    /// Page being resolved.
     pub page: PageId,
+    /// GPU whose table is walked.
     pub gpu: u32,
     /// Memory accesses this walk needs (from the PWC probe).
     pub accesses: u32,
@@ -19,18 +22,24 @@ pub struct QueuedWalk {
     pub prefetch: bool,
 }
 
+/// Bounded-concurrency shared walker block (one per GPU).
 #[derive(Debug)]
 pub struct WalkerPool {
     capacity: u32,
     active: u32,
     queue: VecDeque<QueuedWalk>,
+    /// Walks that took a slot (incl. dequeued ones).
     pub started: u64,
+    /// Walks that had to queue first.
     pub queued_total: u64,
+    /// Peak concurrent walks.
     pub peak_active: u32,
+    /// Peak queue depth.
     pub peak_queue: usize,
 }
 
 impl WalkerPool {
+    /// Pool with `capacity` concurrent walk slots (> 0).
     pub fn new(capacity: u32) -> Self {
         assert!(capacity > 0);
         Self {
@@ -44,10 +53,12 @@ impl WalkerPool {
         }
     }
 
+    /// Walks currently holding a slot.
     pub fn active(&self) -> u32 {
         self.active
     }
 
+    /// Walks waiting for a slot.
     pub fn queued(&self) -> usize {
         self.queue.len()
     }

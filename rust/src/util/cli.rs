@@ -6,31 +6,42 @@
 
 use std::collections::BTreeMap;
 
+/// Declaration of one command-line option.
 #[derive(Debug, Clone)]
 pub struct ArgSpec {
+    /// Option name (without the leading `--`).
     pub name: &'static str,
+    /// One-line help text.
     pub help: &'static str,
     /// true => boolean flag, false => takes a value.
     pub is_flag: bool,
+    /// Default value seeded when the option is absent.
     pub default: Option<&'static str>,
 }
 
+/// Parsed command-line arguments.
 #[derive(Debug, Default)]
 pub struct Args {
+    /// Valued options (after defaults).
     pub values: BTreeMap<String, String>,
+    /// Boolean flags that were set.
     pub flags: BTreeMap<String, bool>,
+    /// Positional (non-`--`) arguments, in order.
     pub positional: Vec<String>,
 }
 
 impl Args {
+    /// A valued option, if present.
     pub fn get(&self, name: &str) -> Option<&str> {
         self.values.get(name).map(String::as_str)
     }
 
+    /// Was a boolean flag set?
     pub fn flag(&self, name: &str) -> bool {
         self.flags.get(name).copied().unwrap_or(false)
     }
 
+    /// A valued option parsed as an integer.
     pub fn get_u64(&self, name: &str) -> anyhow::Result<Option<u64>> {
         match self.get(name) {
             None => Ok(None),
@@ -41,6 +52,7 @@ impl Args {
         }
     }
 
+    /// A valued option parsed as a byte size (`1MiB`, `4GB`, …).
     pub fn get_bytes(&self, name: &str) -> anyhow::Result<Option<u64>> {
         match self.get(name) {
             None => Ok(None),

@@ -13,22 +13,33 @@ use std::fmt;
 /// is deterministic — important for golden-file tests.
 #[derive(Debug, Clone, PartialEq)]
 pub enum Json {
+    /// `null`.
     Null,
+    /// `true` / `false`.
     Bool(bool),
+    /// Any JSON number (stored as f64).
     Num(f64),
+    /// A string.
     Str(String),
+    /// An array.
     Arr(Vec<Json>),
+    /// An object (ordered keys).
     Obj(BTreeMap<String, Json>),
 }
 
+/// Parse failure with its byte position.
 #[derive(Debug, thiserror::Error)]
 #[error("json error at byte {pos}: {msg}")]
 pub struct JsonError {
+    /// Byte offset of the failure in the input.
     pub pos: usize,
+    /// What went wrong.
     pub msg: String,
 }
 
 impl Json {
+    /// Parse a complete JSON document (with `//` comments and trailing
+    /// commas allowed).
     pub fn parse(text: &str) -> Result<Json, JsonError> {
         let mut p = Parser { b: text.as_bytes(), pos: 0 };
         p.skip_ws();
@@ -41,15 +52,18 @@ impl Json {
     }
 
     // ---- constructors ----
+    /// Empty object.
     pub fn obj() -> Json {
         Json::Obj(BTreeMap::new())
     }
 
+    /// Object from `(key, value)` pairs.
     pub fn from_pairs(pairs: Vec<(&str, Json)>) -> Json {
         Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect())
     }
 
     // ---- accessors ----
+    /// Number as f64, if this is a number.
     pub fn as_f64(&self) -> Option<f64> {
         match self {
             Json::Num(n) => Some(*n),
@@ -57,6 +71,7 @@ impl Json {
         }
     }
 
+    /// Non-negative integer value, if this is one.
     pub fn as_u64(&self) -> Option<u64> {
         match self {
             Json::Num(n) if *n >= 0.0 && n.fract() == 0.0 && *n <= u64::MAX as f64 => {
@@ -66,6 +81,7 @@ impl Json {
         }
     }
 
+    /// Integer value, if this is one.
     pub fn as_i64(&self) -> Option<i64> {
         match self {
             Json::Num(n) if n.fract() == 0.0 => Some(*n as i64),
@@ -73,6 +89,7 @@ impl Json {
         }
     }
 
+    /// Boolean value, if this is one.
     pub fn as_bool(&self) -> Option<bool> {
         match self {
             Json::Bool(b) => Some(*b),
@@ -80,6 +97,7 @@ impl Json {
         }
     }
 
+    /// String slice, if this is a string.
     pub fn as_str(&self) -> Option<&str> {
         match self {
             Json::Str(s) => Some(s),
@@ -87,6 +105,7 @@ impl Json {
         }
     }
 
+    /// Array slice, if this is an array.
     pub fn as_arr(&self) -> Option<&[Json]> {
         match self {
             Json::Arr(a) => Some(a),
@@ -94,6 +113,7 @@ impl Json {
         }
     }
 
+    /// Object map, if this is an object.
     pub fn as_obj(&self) -> Option<&BTreeMap<String, Json>> {
         match self {
             Json::Obj(o) => Some(o),
@@ -113,26 +133,31 @@ impl Json {
             .ok_or_else(|| anyhow::anyhow!("missing or non-u64 field `{key}`"))
     }
 
+    /// Required numeric field.
     pub fn req_f64(&self, key: &str) -> anyhow::Result<f64> {
         self.get(key)
             .and_then(Json::as_f64)
             .ok_or_else(|| anyhow::anyhow!("missing or non-number field `{key}`"))
     }
 
+    /// Required string field.
     pub fn req_str(&self, key: &str) -> anyhow::Result<&str> {
         self.get(key)
             .and_then(Json::as_str)
             .ok_or_else(|| anyhow::anyhow!("missing or non-string field `{key}`"))
     }
 
+    /// Optional integer field with a default.
     pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
         self.get(key).and_then(Json::as_u64).unwrap_or(default)
     }
 
+    /// Optional boolean field with a default.
     pub fn opt_bool(&self, key: &str, default: bool) -> bool {
         self.get(key).and_then(Json::as_bool).unwrap_or(default)
     }
 
+    /// Insert/replace an object field (panics on non-objects).
     pub fn set(&mut self, key: &str, v: Json) {
         if let Json::Obj(o) = self {
             o.insert(key.to_string(), v);

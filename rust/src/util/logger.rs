@@ -59,6 +59,7 @@ pub fn init() {
     init_with_level(level);
 }
 
+/// Install the logger at an explicit level (idempotent).
 pub fn init_with_level(level: LevelFilter) {
     let logger = LOGGER.get_or_init(|| StderrLogger { start: Instant::now() });
     // set_logger fails if already installed — that's fine (idempotent).

@@ -9,10 +9,14 @@
 use crate::util::json::Json;
 use std::time::{Duration, Instant};
 
+/// Iteration policy for one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchConfig {
+    /// Untimed warmup iterations.
     pub warmup_iters: u32,
+    /// Minimum timed iterations.
     pub min_iters: u32,
+    /// Maximum timed iterations.
     pub max_iters: u32,
     /// Stop once this much wall time has been spent measuring.
     pub max_time: Duration,
@@ -29,25 +33,36 @@ impl Default for BenchConfig {
     }
 }
 
+/// Summary statistics of one benchmark.
 #[derive(Debug, Clone)]
 pub struct BenchResult {
+    /// Benchmark name.
     pub name: String,
+    /// Timed iterations run.
     pub iters: u32,
+    /// Mean iteration time.
     pub mean: Duration,
+    /// Standard deviation of iteration times.
     pub stddev: Duration,
+    /// Fastest iteration.
     pub min: Duration,
+    /// Median iteration.
     pub p50: Duration,
+    /// 95th-percentile iteration.
     pub p95: Duration,
+    /// Slowest iteration.
     pub max: Duration,
     /// Optional items-per-iteration for throughput reporting.
     pub items: Option<u64>,
 }
 
 impl BenchResult {
+    /// Items per second, when an item count was supplied.
     pub fn throughput(&self) -> Option<f64> {
         self.items.map(|n| n as f64 / self.mean.as_secs_f64())
     }
 
+    /// The BENCHJSON record for this result.
     pub fn to_json(&self) -> Json {
         let mut j = Json::from_pairs(vec![
             ("name", Json::from(self.name.as_str())),
@@ -65,6 +80,7 @@ impl BenchResult {
         j
     }
 
+    /// One-line human-readable summary.
     pub fn report(&self) -> String {
         let tp = self
             .throughput()

@@ -11,7 +11,9 @@ use std::fmt::Debug;
 
 /// A strategy produces random values and can propose smaller variants.
 pub trait Strategy {
+    /// The generated value type.
     type Value: Clone + Debug;
+    /// Draw one random value.
     fn generate(&self, rng: &mut Rng) -> Self::Value;
     /// Candidate shrinks, ordered most-aggressive first. Default: none.
     fn shrink(&self, _v: &Self::Value) -> Vec<Self::Value> {
@@ -68,7 +70,9 @@ fn shrink_failure<S: Strategy>(
 
 /// Uniform u64 in [lo, hi].
 pub struct RangeU64 {
+    /// Inclusive lower bound.
     pub lo: u64,
+    /// Inclusive upper bound.
     pub hi: u64,
 }
 
@@ -91,7 +95,9 @@ impl Strategy for RangeU64 {
 
 /// Vec of values from an element strategy, length in [0, max_len].
 pub struct VecOf<S> {
+    /// Element strategy.
     pub elem: S,
+    /// Maximum generated length.
     pub max_len: usize,
 }
 

@@ -9,10 +9,15 @@
 /// Simulated time in picoseconds.
 pub type Time = u64;
 
+/// One picosecond.
 pub const PS: Time = 1;
+/// One nanosecond in `Time` units.
 pub const NS: Time = 1_000;
+/// One microsecond in `Time` units.
 pub const US: Time = 1_000_000;
+/// One millisecond in `Time` units.
 pub const MS: Time = 1_000_000_000;
+/// One second in `Time` units.
 pub const SEC: Time = 1_000_000_000_000;
 
 /// Convert nanoseconds (as in Table 1) to `Time`.
@@ -39,8 +44,11 @@ pub fn to_us(t: Time) -> f64 {
     t as f64 / US as f64
 }
 
+/// One kibibyte.
 pub const KIB: u64 = 1 << 10;
+/// One mebibyte.
 pub const MIB: u64 = 1 << 20;
+/// One gibibyte.
 pub const GIB: u64 = 1 << 30;
 
 /// Serialization delay of `bytes` at `gbps` (decimal gigabits/second),

@@ -62,6 +62,21 @@ fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
         fused.max_touched_pages, per_hop.max_touched_pages,
         "{label}: max_touched_pages"
     );
+    // Multi-tenant accounting rides the same model mutations.
+    assert_eq!(fused.jobs.len(), per_hop.jobs.len(), "{label}: job count");
+    for (f, p) in fused.jobs.iter().zip(&per_hop.jobs) {
+        assert_eq!(f.completion, p.completion, "{label}: job `{}` completion", f.name);
+        assert_eq!(f.rtt_hist, p.rtt_hist, "{label}: job `{}` RTT histogram", f.name);
+        assert_eq!(f.rat_hist, p.rat_hist, "{label}: job `{}` RAT histogram", f.name);
+    }
+    assert_eq!(
+        fused.cross_job_l1_evictions, per_hop.cross_job_l1_evictions,
+        "{label}: cross-job L1 evictions"
+    );
+    assert_eq!(
+        fused.cross_job_l2_evictions, per_hop.cross_job_l2_evictions,
+        "{label}: cross-job L2 evictions"
+    );
     // The engines must actually differ in event volume, or the knob is
     // wired to nothing.
     assert!(
@@ -150,4 +165,32 @@ fn traced_runs_are_bit_identical() {
     let mut c = base(16, MIB);
     c.workload.trace_source_gpu = Some(0);
     run_both(c, "traced");
+}
+
+#[test]
+fn multi_tenant_workloads_are_bit_identical() {
+    // Concurrent tenants + Poisson arrivals + cross-job eviction
+    // accounting, through both engines.
+    use ratsim::collective::workload::Workload;
+    use ratsim::config::{ArrivalSpec, JobKind, JobTemplate, WorkloadSpec};
+    let spec = WorkloadSpec {
+        name: "diff-tenants".into(),
+        seed: 13,
+        arrival: ArrivalSpec::Poisson { mean_gap_ps: ratsim::util::units::us(1) },
+        jobs: vec![JobTemplate {
+            name: "tenant".into(),
+            kind: JobKind::Collective(ratsim::config::CollectiveKind::AllToAll),
+            size_bytes: 8 * MIB,
+            count: 3,
+            repeat: 1,
+        }],
+    };
+    let mut cfg = base(8, 8 * MIB);
+    cfg.trans.l2.entries = 4; // force cross-job L2 traffic through the diff
+    let w = Workload::from_spec(&spec, 8, cfg.trans.page_bytes).unwrap();
+    cfg.engine = EnginePolicy::Fused;
+    let fused = pod::run_workload(&cfg, w.clone()).unwrap();
+    cfg.engine = EnginePolicy::PerHop;
+    let per_hop = pod::run_workload(&cfg, w).unwrap();
+    assert_bit_identical(&fused, &per_hop, "multi-tenant");
 }
