@@ -4,9 +4,10 @@
 //! and reports wall time + simulator throughput via `util::minibench`,
 //! so `cargo bench | tee bench_output.txt` reproduces every figure's data
 //! alongside its cost. `sim_core` additionally aggregates its BENCHJSON
-//! records into a snapshot file (`write_benchjson_file`) and compares
-//! against the checked-in `BENCH_baseline.json` (`load_baseline`), which
-//! tracks the perf trajectory PR over PR.
+//! records into a snapshot file (`write_benchjson_file`) and diffs its
+//! throughput against the checked-in `BENCH_baseline.json`
+//! (`load_baseline_records` + `bench_diff`/`print_diff`), which tracks
+//! the perf trajectory PR over PR.
 
 // Each bench binary compiles this module independently and uses a subset
 // of it; unused-item warnings here would be false positives.
@@ -56,10 +57,10 @@ pub fn write_benchjson_file(path: &Path, records: Vec<Json>) -> std::io::Result<
     std::fs::write(path, top.to_string_pretty())
 }
 
-/// Load a BENCHJSON snapshot, returning `name → (mean_ns, events_per_sec)`
-/// for every record that actually carries numbers (placeholder snapshots
-/// with `null` fields contribute nothing).
-pub fn load_baseline(path: &Path) -> BTreeMap<String, (f64, f64)> {
+/// Load a BENCHJSON snapshot as raw records by name (every record kept,
+/// including `null` placeholders — the diff reports those as
+/// `no-baseline`). Missing or unparsable files yield an empty map.
+pub fn load_baseline_records(path: &Path) -> BTreeMap<String, Json> {
     let mut map = BTreeMap::new();
     let Ok(text) = std::fs::read_to_string(path) else {
         return map;
@@ -71,17 +72,109 @@ pub fn load_baseline(path: &Path) -> BTreeMap<String, (f64, f64)> {
         return map;
     };
     for r in results {
-        let name = r.get("name").and_then(Json::as_str);
-        let mean = r.get("mean_ns").and_then(Json::as_f64);
-        // Pod workloads record events/s explicitly; the pending-set
-        // microbenches carry it as minibench's items_per_sec.
-        let evps = r
-            .get("events_per_sec")
-            .or_else(|| r.get("items_per_sec"))
-            .and_then(Json::as_f64);
-        if let (Some(name), Some(mean), Some(evps)) = (name, mean, evps) {
-            map.insert(name.to_string(), (mean, evps));
+        if let Some(name) = r.get("name").and_then(Json::as_str) {
+            map.insert(name.to_string(), r.clone());
         }
     }
     map
+}
+
+/// The throughput metric a record carries, by preference: requests/s for
+/// pod workloads, events/s for whole-pod runs, items/s for the pending-set
+/// microbenches.
+const THROUGHPUT_KEYS: &[&str] = &["requests_per_sec", "events_per_sec", "items_per_sec"];
+
+fn throughput_of(record: &Json) -> Option<(&'static str, f64)> {
+    THROUGHPUT_KEYS
+        .iter()
+        .find_map(|&k| record.get(k).and_then(Json::as_f64).map(|v| (k, v)))
+}
+
+/// First throughput metric carried by *both* records (so a baseline
+/// recorded in an older, events/s-only format still gets compared
+/// instead of reported `no-baseline`).
+fn shared_throughput(current: &Json, base: &Json) -> Option<(&'static str, f64, f64)> {
+    THROUGHPUT_KEYS.iter().find_map(|&k| {
+        match (current.get(k).and_then(Json::as_f64), base.get(k).and_then(Json::as_f64)) {
+            (Some(c), Some(b)) => Some((k, c, b)),
+            _ => None,
+        }
+    })
+}
+
+/// Compare current records against a recorded baseline: for every record
+/// sharing a throughput metric with its baseline entry, report the ratio
+/// and whether it left the ±`tolerance` band. Returns a JSON document —
+/// the `bench_diff.json` artifact the CI bench-smoke job uploads.
+pub fn bench_diff(
+    records: &[Json],
+    baseline: &BTreeMap<String, Json>,
+    tolerance: f64,
+) -> Json {
+    let mut rows = Vec::new();
+    for r in records {
+        let name = r.get("name").and_then(Json::as_str).unwrap_or("?");
+        let mut row = Json::obj();
+        row.set("name", Json::from(name));
+        let shared = baseline.get(name).and_then(|b| shared_throughput(r, b));
+        match shared {
+            Some((key, cur, b)) if b > 0.0 => {
+                let ratio = cur / b;
+                row.set("metric", Json::from(key));
+                row.set("current", Json::from(cur));
+                row.set("baseline", Json::from(b));
+                row.set("ratio", Json::from(ratio));
+                let status = if ratio < 1.0 - tolerance {
+                    "regressed"
+                } else if ratio > 1.0 + tolerance {
+                    "improved"
+                } else {
+                    "ok"
+                };
+                row.set("status", Json::from(status));
+            }
+            _ => match throughput_of(r) {
+                Some((key, cur)) => {
+                    row.set("metric", Json::from(key));
+                    row.set("current", Json::from(cur));
+                    row.set("status", Json::from("no-baseline"));
+                }
+                None => {
+                    row.set("status", Json::from("no-metric"));
+                }
+            },
+        }
+        rows.push(row);
+    }
+    let mut top = Json::obj();
+    top.set("format", Json::from("ratsim-benchdiff-v1"));
+    top.set("tolerance", Json::from(tolerance));
+    top.set("results", Json::Arr(rows));
+    top
+}
+
+/// Print a [`bench_diff`] document to stdout; returns the number of
+/// entries whose status is `regressed`.
+pub fn print_diff(diff: &Json) -> usize {
+    let Some(rows) = diff.get("results").and_then(Json::as_arr) else {
+        return 0;
+    };
+    let tol = diff.get("tolerance").and_then(Json::as_f64).unwrap_or(0.0);
+    println!("\n== vs BENCH_baseline.json (tolerance ±{:.0}%) ==", 100.0 * tol);
+    let mut regressed = 0;
+    for row in rows {
+        let name = row.get("name").and_then(Json::as_str).unwrap_or("?");
+        let status = row.get("status").and_then(Json::as_str).unwrap_or("?");
+        match row.get("ratio").and_then(Json::as_f64) {
+            Some(ratio) => {
+                let metric = row.get("metric").and_then(Json::as_str).unwrap_or("?");
+                println!("  {name}: {ratio:.2}x {metric} vs recorded baseline [{status}]");
+            }
+            None => println!("  {name}: [{status}]"),
+        }
+        if status == "regressed" {
+            regressed += 1;
+        }
+    }
+    regressed
 }

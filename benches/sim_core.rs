@@ -7,16 +7,23 @@
 //! * `RATSIM_BENCH_QUICK=1` — trimmed iterations/request budgets (CI smoke).
 //! * `RATSIM_BENCH_OUT=path` — write the aggregate BENCHJSON snapshot
 //!   (the format of `BENCH_baseline.json`) to `path`.
+//! * `RATSIM_BENCH_DIFF=path` — write the baseline-comparison diff JSON
+//!   (per-benchmark throughput ratio + ok/regressed/improved status).
+//! * `RATSIM_BENCH_TOLERANCE=0.25` — relative band for that status.
+//! * `RATSIM_BENCH_ENFORCE=1` — exit nonzero on a regressed benchmark
+//!   (advisory by default; shared CI runners are noisy).
 //!
-//! If `BENCH_baseline.json` carries recorded numbers, a final section
-//! prints the current-vs-baseline events/s ratio per workload.
+//! A final section always prints the current-vs-baseline throughput
+//! ratio per workload (reqs/s where recorded, else events/s or items/s);
+//! entries whose baseline is a `null` placeholder report `no-baseline`.
 
 mod bench_common;
 
 use ratsim::config::presets::paper_baseline;
-use ratsim::config::{EnginePolicy, RequestSizing};
-use ratsim::pod;
+use ratsim::config::{EnginePolicy, PodConfig, RequestSizing};
+use ratsim::pod::SessionBuilder;
 use ratsim::sim::{EventQueue, TimingWheel};
+use ratsim::stats::RunStats;
 use ratsim::util::json::Json;
 use ratsim::util::minibench::{bench_items, print_header, print_result, BenchConfig};
 use ratsim::util::rng::Rng;
@@ -24,6 +31,11 @@ use std::time::Duration;
 
 fn quick() -> bool {
     std::env::var("RATSIM_BENCH_QUICK").is_ok()
+}
+
+/// One session-backed run of a config's collective.
+fn run_pod(cfg: &PodConfig) -> RunStats {
+    SessionBuilder::new(cfg).build().expect("pod session").run_to_completion()
 }
 
 fn main() {
@@ -131,10 +143,10 @@ fn main() {
             pc.workload.request_sizing = RequestSizing::Auto { target_total_requests: t };
         }
         // One counted run up front: event/request volumes for throughput.
-        let s0 = pod::run(&pc).expect("pod run");
+        let s0 = run_pod(&pc);
         let (events, requests) = (s0.events, s0.requests);
         let r = bench_items(name, &cfg, events, || {
-            pod::run(&pc).expect("pod run");
+            run_pod(&pc);
         });
         print_result(&r);
         let evps = events as f64 / r.mean.as_secs_f64();
@@ -147,7 +159,7 @@ fn main() {
         let mut ph = pc.clone();
         ph.engine = EnginePolicy::PerHop;
         let t0 = std::time::Instant::now();
-        let sp = pod::run(&ph).expect("per-hop run");
+        let sp = run_pod(&ph);
         let ph_wall = t0.elapsed().as_secs_f64();
         println!(
             "  -> per-hop reference: {} events in {:.2}s ({:.2}x fused wall, {:.2}x events)",
@@ -168,7 +180,7 @@ fn main() {
 
     // Multi-tenant serving workload (the tenancy axis): a 64-GPU pod
     // shared by a 3-decode + 1-prefill inference mix, run through
-    // `pod::run_workload` (per-job accounting + cross-job eviction
+    // a workload session (per-job accounting + cross-job eviction
     // tracking on the hot path).
     print_header("multi-tenant workload throughput (events/second)");
     {
@@ -182,10 +194,17 @@ fn main() {
         let spec = inference_mix_spec(3, 1);
         let workload =
             Workload::from_spec(&spec, 64, pc.trans.page_bytes).expect("workload build");
-        let s0 = pod::run_workload(&pc, workload.clone()).expect("workload run");
+        let run_workload = |w: Workload| -> RunStats {
+            SessionBuilder::new(&pc)
+                .workload(w)
+                .build()
+                .expect("workload session")
+                .run_to_completion()
+        };
+        let s0 = run_workload(workload.clone());
         let (events, requests) = (s0.events, s0.requests);
         let r = bench_items(name, &cfg, events, || {
-            pod::run_workload(&pc, workload.clone()).expect("workload run");
+            run_workload(workload.clone());
         });
         print_result(&r);
         let evps = events as f64 / r.mean.as_secs_f64();
@@ -206,35 +225,40 @@ fn main() {
         records.push(j);
     }
 
-    // Perf-trajectory tracking: compare against the recorded snapshot.
-    let baseline = bench_common::load_baseline(std::path::Path::new("BENCH_baseline.json"));
+    // Perf-trajectory tracking: compare throughput (reqs/s where the
+    // workload reports it, else events/s or items/s) against the recorded
+    // snapshot with a relative tolerance, and emit the diff both to
+    // stdout and — via RATSIM_BENCH_DIFF — as a JSON artifact CI uploads.
+    let baseline_path = std::path::Path::new("BENCH_baseline.json");
+    let baseline = bench_common::load_baseline_records(baseline_path);
+    let tolerance: f64 = std::env::var("RATSIM_BENCH_TOLERANCE")
+        .ok()
+        .and_then(|v| v.parse().ok())
+        .unwrap_or(0.25);
+    let diff = bench_common::bench_diff(&records, &baseline, tolerance);
+    let regressions = bench_common::print_diff(&diff);
     if baseline.is_empty() {
         println!(
             "\nBENCH_baseline.json carries no recorded numbers on this checkout — \
-             record one with RATSIM_BENCH_OUT=BENCH_baseline.json cargo bench --bench sim_core"
+             record one with RATSIM_BENCH_OUT=BENCH_baseline.json cargo bench --bench sim_core \
+             (the CI bench-smoke job regenerates and uploads a fresh snapshot + diff per run)"
         );
-    } else {
-        print_header("vs BENCH_baseline.json");
-        for j in &records {
-            let name = j.get("name").and_then(Json::as_str).unwrap_or("?");
-            let Some(evps) = j
-                .get("events_per_sec")
-                .or_else(|| j.get("items_per_sec"))
-                .and_then(Json::as_f64)
-            else {
-                continue;
-            };
-            if let Some(&(_, base_evps)) = baseline.get(name) {
-                if base_evps > 0.0 {
-                    println!("  {name}: {:.2}x events/s vs recorded baseline", evps / base_evps);
-                }
-            }
-        }
+    }
+    if let Ok(out) = std::env::var("RATSIM_BENCH_DIFF") {
+        std::fs::write(&out, diff.to_string_pretty()).expect("write bench diff");
+        println!("\nwrote baseline diff to {out}");
     }
 
     if let Ok(out) = std::env::var("RATSIM_BENCH_OUT") {
         let path = std::path::PathBuf::from(&out);
         bench_common::write_benchjson_file(&path, records).expect("write BENCHJSON snapshot");
         println!("\nwrote BENCHJSON snapshot to {out}");
+    }
+
+    // Advisory by default (shared CI runners are noisy); export
+    // RATSIM_BENCH_ENFORCE=1 to turn tolerance violations into a failure.
+    if regressions > 0 && std::env::var("RATSIM_BENCH_ENFORCE").is_ok() {
+        eprintln!("{regressions} benchmark(s) regressed beyond the ±{tolerance:.2} tolerance");
+        std::process::exit(1);
     }
 }

@@ -19,7 +19,7 @@
 use anyhow::{Context, Result};
 use ratsim::config::presets::{paper_baseline, paper_ideal};
 use ratsim::config::{PodConfig, RequestSizing};
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::runtime::{ArtifactManifest, PjrtRuntime};
 use ratsim::util::units::{fmt_time, to_us, MIB};
 use std::path::Path;
@@ -104,10 +104,16 @@ fn main() -> Result<()> {
         anyhow::ensure!(checksum.is_finite(), "NaN/Inf escaped the MoE layer");
 
         // L3 communication: dispatch + combine All-to-Alls (2 per layer).
+        let a2a = |ideal, pret| -> Result<u64> {
+            Ok(SessionBuilder::new(&a2a_config(ideal, pret))
+                .build()?
+                .run_to_completion()
+                .completion)
+        };
         for _ in 0..2 {
-            a2a_base += pod::run(&a2a_config(false, false))?.completion;
-            a2a_ideal += pod::run(&a2a_config(true, false))?.completion;
-            a2a_pret += pod::run(&a2a_config(false, true))?.completion;
+            a2a_base += a2a(false, false)?;
+            a2a_ideal += a2a(true, false)?;
+            a2a_pret += a2a(false, true)?;
         }
         println!("  layer {layer}: compute OK, A2A×2 simulated");
     }

@@ -4,11 +4,12 @@
 //! collectives hitting the same destination translation hierarchy).
 //!
 //! Run with: `cargo run --release --example multi_tenant`
+//! (`RATSIM_QUICK=1` trims the request budget for CI smoke runs.)
 
 use ratsim::collective::workload::Workload;
 use ratsim::config::presets::{inference_mix_spec, paper_baseline};
 use ratsim::config::RequestSizing;
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::util::units::{fmt_bytes, to_us};
 
 fn main() -> anyhow::Result<()> {
@@ -19,7 +20,9 @@ fn main() -> anyhow::Result<()> {
     let mut cfg = paper_baseline(gpus, 64 << 20);
     cfg.name = format!("multi-tenant-{gpus}gpu");
     // Keep the example snappy; drop this override for full fidelity.
-    cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: 300_000 };
+    let budget: u64 =
+        if std::env::var("RATSIM_QUICK").is_ok() { 30_000 } else { 300_000 };
+    cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: budget };
 
     let workload = Workload::from_spec(&spec, gpus, cfg.trans.page_bytes)?;
     println!(
@@ -29,7 +32,7 @@ fn main() -> anyhow::Result<()> {
         fmt_bytes(workload.total_bytes())
     );
 
-    let stats = pod::run_workload(&cfg, workload)?;
+    let stats = SessionBuilder::new(&cfg).workload(workload).build()?.run_to_completion();
     println!("\n{}\n", stats.summary());
     println!(
         "{:<12} {:>10} {:>12} {:>11} {:>11} {:>11}",
@@ -54,10 +57,10 @@ fn main() -> anyhow::Result<()> {
     // The tenancy contrast: the same decode traffic alone vs sharing the
     // pod. Per-job p99 degrades purely from co-located tenants.
     let solo_spec = inference_mix_spec(3, 0);
-    let solo = pod::run_workload(
-        &cfg,
-        Workload::from_spec(&solo_spec, gpus, cfg.trans.page_bytes)?,
-    )?;
+    let solo = SessionBuilder::new(&cfg)
+        .workload(Workload::from_spec(&solo_spec, gpus, cfg.trans.page_bytes)?)
+        .build()?
+        .run_to_completion();
     let shared_p99 = stats
         .jobs
         .iter()

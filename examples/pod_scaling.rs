@@ -4,25 +4,32 @@
 //! read vertically + the §4.4 working-set insight).
 //!
 //! Run with: `cargo run --release --example pod_scaling`
+//! (`RATSIM_QUICK=1` trims the request budget for CI smoke runs.)
 
 use ratsim::config::presets::{paper_baseline, paper_ideal};
 use ratsim::config::RequestSizing;
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::stats::plot::bar_chart;
 use ratsim::util::units::{to_ns, MIB};
 
 fn main() -> anyhow::Result<()> {
     ratsim::util::logger::init();
     let size = MIB;
+    let budget: u64 =
+        if std::env::var("RATSIM_QUICK").is_ok() { 20_000 } else { 300_000 };
     let mut rows = Vec::new();
     println!("{:>5}  {:>10}  {:>12}  {:>14}  {:>13}", "gpus", "overhead_x", "mean_rat_ns", "internode_frac", "touched_pages");
     for gpus in [8u32, 16, 32, 64] {
         let tune = |mut c: ratsim::config::PodConfig| {
-            c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 300_000 };
+            c.workload.request_sizing = RequestSizing::Auto { target_total_requests: budget };
             c
         };
-        let b = pod::run(&tune(paper_baseline(gpus, size)))?;
-        let i = pod::run(&tune(paper_ideal(gpus, size)))?;
+        let b = SessionBuilder::new(&tune(paper_baseline(gpus, size)))
+            .build()?
+            .run_to_completion();
+        let i = SessionBuilder::new(&tune(paper_ideal(gpus, size)))
+            .build()?
+            .run_to_completion();
         let overhead = to_ns(b.completion) / to_ns(i.completion);
         println!(
             "{gpus:>5}  {overhead:>10.3}  {:>12.1}  {:>14.3}  {:>13}",

@@ -4,14 +4,17 @@
 //! highlights for inference workloads.
 //!
 //! Run with: `cargo run --release --example prefetch_opt`
+//! (`RATSIM_QUICK=1` trims the request budget for CI smoke runs.)
 
 use ratsim::config::presets::{paper_baseline, paper_ideal};
 use ratsim::config::{PodConfig, PrefetchPolicy, RequestSizing};
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::util::units::{fmt_bytes, to_ns, MIB};
 
 fn tune(mut cfg: PodConfig) -> PodConfig {
-    cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: 300_000 };
+    let budget: u64 =
+        if std::env::var("RATSIM_QUICK").is_ok() { 20_000 } else { 300_000 };
+    cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: budget };
     cfg
 }
 
@@ -24,7 +27,12 @@ fn main() -> anyhow::Result<()> {
         "size", "variant", "overhead_x", "mean_rat_ns", "data_walks", "pf_useful", "pf_late"
     );
     for size in [MIB, 4 * MIB, 16 * MIB] {
-        let ideal_ns = to_ns(pod::run(&tune(paper_ideal(gpus, size)))?.completion);
+        let ideal_ns = to_ns(
+            SessionBuilder::new(&tune(paper_ideal(gpus, size)))
+                .build()?
+                .run_to_completion()
+                .completion,
+        );
         for variant in
             ["baseline", "pretranslate", "stride-prefetch", "sw-guided", "fused", "sw+stride"]
         {
@@ -44,7 +52,7 @@ fn main() -> anyhow::Result<()> {
                 cfg.trans.prefetch_policy = PrefetchPolicy::Fused;
             }
             cfg.name = format!("{variant}-{}", fmt_bytes(size));
-            let s = pod::run(&cfg)?;
+            let s = SessionBuilder::new(&cfg).build()?.run_to_completion();
             let walks =
                 s.classes.prim_full_walk + s.classes.prim_pwc_hit.iter().sum::<u64>();
             println!(

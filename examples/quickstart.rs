@@ -1,26 +1,69 @@
-//! Quickstart: simulate one All-to-All on a 16-GPU UALink pod and print
-//! the reverse-translation report.
+//! Quickstart: simulate one All-to-All on a 16-GPU UALink pod through a
+//! `SimSession` and print the reverse-translation report — including a
+//! tiny custom `Observer` that watches the cold page walks live.
 //!
 //! Run with: `cargo run --release --example quickstart`
+//! (`RATSIM_QUICK=1` trims the request budget for CI smoke runs.)
 
 use ratsim::config::presets::{paper_baseline, paper_ideal};
-use ratsim::pod;
-use ratsim::util::units::{fmt_time, MIB};
+use ratsim::config::{PodConfig, RequestSizing};
+use ratsim::pod::{Observer, SessionBuilder, SessionEvent};
+use ratsim::util::units::{fmt_time, Time, MIB};
+use std::cell::Cell;
+use std::rc::Rc;
+
+/// A third-party probe: count completed demand walks and remember when
+/// the first one landed — no engine changes, just an [`Observer`]
+/// attached to the session. Results flow out through shared `Rc<Cell>`
+/// handles.
+struct WalkProbe {
+    walks: Rc<Cell<u64>>,
+    first_at: Rc<Cell<Option<Time>>>,
+}
+
+impl Observer for WalkProbe {
+    fn on_event(&mut self, now: Time, ev: &SessionEvent) {
+        if let SessionEvent::WalkCompleted { prefetch: false, .. } = ev {
+            self.walks.set(self.walks.get() + 1);
+            if self.first_at.get().is_none() {
+                self.first_at.set(Some(now));
+            }
+        }
+    }
+}
+
+fn tune(mut cfg: PodConfig) -> PodConfig {
+    if std::env::var("RATSIM_QUICK").is_ok() {
+        cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: 20_000 };
+    }
+    cfg
+}
 
 fn main() -> anyhow::Result<()> {
     ratsim::util::logger::init();
 
     // Table-1 baseline: 16 GPUs (4 per node), 1 MiB all-pairs All-to-All.
-    let cfg = paper_baseline(16, MIB);
+    let cfg = tune(paper_baseline(16, MIB));
     println!("pod: {} GPUs, {} stations/GPU, {} request bytes", cfg.gpus,
         cfg.link.stations_per_gpu, cfg.request_bytes());
 
-    let stats = pod::run(&cfg)?;
+    let walks = Rc::new(Cell::new(0u64));
+    let first_at = Rc::new(Cell::new(None));
+    let stats = SessionBuilder::new(&cfg)
+        .observe(WalkProbe { walks: Rc::clone(&walks), first_at: Rc::clone(&first_at) })
+        .build()?
+        .run_to_completion();
     println!("\nbaseline:  {}", stats.summary());
+    println!(
+        "probe:     {} demand walks, first completed at {}",
+        walks.get(),
+        first_at.get().map(fmt_time).unwrap_or_else(|| "-".into())
+    );
 
     // The paper's headline comparison: normalize against the zero-RAT
     // ideal configuration.
-    let ideal = pod::run(&paper_ideal(16, MIB))?;
+    let ideal =
+        SessionBuilder::new(&tune(paper_ideal(16, MIB))).build()?.run_to_completion();
     println!("ideal:     completion {}", fmt_time(ideal.completion));
     println!(
         "\nreverse-translation overhead: {:.2}x (paper §4.1: up to 1.4x at 1 MB)",

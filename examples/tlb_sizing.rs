@@ -4,21 +4,28 @@
 //! over-provisioning buys nothing.
 //!
 //! Run with: `cargo run --release --example tlb_sizing`
+//! (`RATSIM_QUICK=1` trims the request budget for CI smoke runs.)
 
 use ratsim::config::presets::{paper_baseline, paper_ideal};
 use ratsim::config::RequestSizing;
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::util::units::{to_ns, MIB};
 
 fn main() -> anyhow::Result<()> {
     ratsim::util::logger::init();
     let gpus = 32;
     let size = 16 * MIB;
-    let budget = RequestSizing::Auto { target_total_requests: 400_000 };
+    let budget = RequestSizing::Auto {
+        target_total_requests: if std::env::var("RATSIM_QUICK").is_ok() {
+            20_000
+        } else {
+            400_000
+        },
+    };
 
     let mut ideal = paper_ideal(gpus, size);
     ideal.workload.request_sizing = budget;
-    let ideal_ns = to_ns(pod::run(&ideal)?.completion);
+    let ideal_ns = to_ns(SessionBuilder::new(&ideal).build()?.run_to_completion().completion);
 
     println!("32 GPUs, 16 MiB All-to-All — L2 Link-TLB size sweep\n");
     println!("{:>10}  {:>10}  {:>12}  {:>13}", "l2_entries", "overhead_x", "mean_rat_ns", "touched_pages");
@@ -27,7 +34,7 @@ fn main() -> anyhow::Result<()> {
         cfg.workload.request_sizing = budget;
         cfg.trans.l2.entries = l2;
         cfg.name = format!("l2-{l2}");
-        let s = pod::run(&cfg)?;
+        let s = SessionBuilder::new(&cfg).build()?.run_to_completion();
         println!(
             "{:>10}  {:>10.3}  {:>12.1}  {:>13}",
             l2,

@@ -10,10 +10,11 @@
 //! tenants), plus per-job arrival offsets drawn from a deterministic
 //! arrival process ([`arrival_offsets`]).
 //!
-//! The pod runs a workload through `pod::run_workload`, which reports
+//! The pod runs a workload through a session
+//! (`pod::SessionBuilder::workload`), whose stock observers report
 //! per-job completion/latency percentiles and the cross-job L1/L2
 //! Link-TLB eviction counters that quantify tenant interference. A
-//! single-job workload is bit-identical to the plain `pod::run_schedule`
+//! single-job workload is bit-identical to the plain schedule session
 //! path (pinned by `rust/tests/workload.rs`).
 
 use super::generators;
@@ -56,8 +57,9 @@ pub struct Workload {
 impl Workload {
     /// Wrap one schedule as a workload. Jobs are inferred from the ops'
     /// existing `job` tags (plain generated schedules ⇒ one job, id 0),
-    /// all arriving at t = 0 — this is what `pod::run_schedule` uses, so
-    /// single-schedule runs keep their exact pre-multi-tenant behavior.
+    /// all arriving at t = 0 — this is what schedule sessions
+    /// (`pod::SessionBuilder::schedule`) use, so single-schedule runs
+    /// keep their exact pre-multi-tenant behavior.
     pub fn single(schedule: Schedule) -> Workload {
         let njobs = schedule.ops.iter().map(|o| o.job as usize).max().map_or(1, |m| m + 1);
         let mut jobs: Vec<JobDesc> = (0..njobs)

@@ -41,7 +41,7 @@ impl CollectiveKind {
 }
 
 /// Event-engine execution policy for the deterministic portions of the
-/// request lifecycle (`pod::sim`).
+/// request lifecycle (the pod simulation; set via `pod::SessionBuilder::engine`).
 ///
 /// Both policies compute every hop timestamp of the forward
 /// (`StationTx → SwitchOut → TargetArrive`) and response

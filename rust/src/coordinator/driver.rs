@@ -1,7 +1,7 @@
 //! Parallel sweep execution.
 
 use crate::config::{PodConfig, SweepGrid, SweepPoint};
-use crate::pod;
+use crate::pod::SessionBuilder;
 use crate::stats::RunStats;
 use anyhow::Result;
 use std::sync::atomic::{AtomicUsize, Ordering};
@@ -64,7 +64,9 @@ pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
                 }
                 let point = &points[i];
                 log::debug!("worker {w}: job {i} {}", point.label());
-                let res = pod::run(&point.config);
+                let res = SessionBuilder::new(&point.config)
+                    .build()
+                    .map(|session| session.run_to_completion());
                 if let Ok(s) = &res {
                     log::info!("  [{}/{}] {}", i + 1, n, s.summary());
                 }
@@ -100,9 +102,10 @@ pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
     Ok(out)
 }
 
-/// Convenience: run one config (used by the CLI `run` subcommand).
+/// Convenience: run one config through a default-observer session (used
+/// by the CLI `run` subcommand).
 pub fn run_single(cfg: &PodConfig) -> Result<RunStats> {
-    pod::run(cfg)
+    Ok(SessionBuilder::new(cfg).build()?.run_to_completion())
 }
 
 #[cfg(test)]
@@ -144,7 +147,7 @@ mod tests {
     fn parallel_results_match_serial() {
         let points = vec![tiny_point(4, MIB, "baseline", false); 3];
         let parallel = run_points(&points).unwrap();
-        let serial = pod::run(&points[0].config).unwrap();
+        let serial = run_single(&points[0].config).unwrap();
         for r in parallel {
             assert_eq!(r.stats.completion, serial.completion, "determinism across threads");
             assert_eq!(r.stats.events, serial.events);

@@ -8,6 +8,7 @@ use crate::config::presets::{paper_baseline, paper_ideal};
 use crate::config::sweep::{breakdown_sizes, paper_gpu_counts, paper_sizes, scaled_gpu_counts};
 use crate::config::{PodConfig, RequestSizing, SweepGrid, SweepPoint};
 use crate::coordinator::{run_grid, run_points, SweepResult};
+use crate::pod::SessionBuilder;
 use crate::stats::run::write_csv;
 use crate::util::units::{fmt_bytes, to_ns, MIB};
 use anyhow::Result;
@@ -254,7 +255,7 @@ pub fn fig9_10(opts: &FigOpts) -> Result<Table> {
         let mut cfg = paper_baseline(16, size);
         opts.tune(&mut cfg);
         cfg.workload.trace_source_gpu = Some(0);
-        let stats = crate::pod::run(&cfg)?;
+        let stats = SessionBuilder::new(&cfg).build()?.run_to_completion();
         let rows: Vec<Vec<String>> = stats
             .trace
             .iter()
@@ -514,11 +515,13 @@ pub fn warmup(opts: &FigOpts) -> Result<Table> {
         let mut cfg = paper_baseline(gpus, size);
         opts.tune(&mut cfg);
         let sched = crate::collective::generators::alltoall_allpairs(gpus, size)?;
-        let once = crate::pod::run_schedule(&cfg, sched.repeat(1))?;
-        let twice = crate::pod::run_schedule(&cfg, sched.repeat(2))?;
+        let once =
+            SessionBuilder::new(&cfg).schedule(sched.repeat(1)).build()?.run_to_completion();
+        let twice =
+            SessionBuilder::new(&cfg).schedule(sched.repeat(2)).build()?.run_to_completion();
         let mut ideal = paper_ideal(gpus, size);
         opts.tune(&mut ideal);
-        let ideal_ns = to_ns(crate::pod::run(&ideal)?.completion);
+        let ideal_ns = to_ns(SessionBuilder::new(&ideal).build()?.run_to_completion().completion);
         let cold = to_ns(once.completion);
         let warm = to_ns(twice.completion) - cold;
         t.push(vec![
@@ -531,6 +534,62 @@ pub fn warmup(opts: &FigOpts) -> Result<Table> {
         ]);
     }
     t.save_csv(&opts.out_dir, "warmup_iterations")?;
+    Ok(t)
+}
+
+/// Warm-up *decay* (the paper's cold-miss story as a time series, built
+/// on the session API): run a small 1 MiB All-to-All and snapshot the
+/// run in fixed epochs via [`SimSession::run_until`](crate::pod::SimSession::run_until),
+/// reporting the per-epoch L1 Link-TLB miss rate, walk rate, and mean
+/// RAT latency. Early epochs are cold-walk dominated; as the hierarchy
+/// warms, the miss rate decays toward the steady state — the §4
+/// "performance is most impacted during system warm-up" claim made
+/// visible inside a *single* collective instead of across iterations.
+pub fn fig_warmup(opts: &FigOpts) -> Result<Table> {
+    let gpus = 16;
+    let mut cfg = paper_baseline(gpus, MIB);
+    opts.tune(&mut cfg);
+    cfg.name = format!("warmup-decay-{gpus}gpu-1MiB");
+    let epochs: u64 = if opts.quick { 12 } else { 24 };
+    // A reference run fixes the epoch width; determinism guarantees the
+    // snapshotted run below replays it bit-for-bit.
+    let total = SessionBuilder::new(&cfg).build()?.run_to_completion().completion;
+    let width = (total / epochs).max(1);
+    let mut session = SessionBuilder::new(&cfg).build()?;
+    let mut t = Table::new(
+        "Warm-up decay — per-epoch Link-TLB behaviour (16 GPUs, 1 MiB AllToAll)",
+        &["epoch", "t_end_ns", "translated", "l1_miss_rate", "walk_rate", "mean_rat_ns"],
+    );
+    let translated =
+        |s: &crate::stats::RunStats| s.classes.total() - s.classes.ideal - s.classes.intra_node;
+    let mut prev = session.snapshot();
+    for e in 1..=epochs {
+        session.run_until(width * e);
+        let snap = session.snapshot();
+        let d_trans = translated(&snap) - translated(&prev);
+        let d_miss =
+            (translated(&snap) - snap.classes.l1_hit) - (translated(&prev) - prev.classes.l1_hit);
+        let d_walks = snap.walks_started - prev.walks_started;
+        let d_rat = snap.breakdown.translation - prev.breakdown.translation;
+        let d_internode = snap.internode_requests - prev.internode_requests;
+        t.push(vec![
+            e.to_string(),
+            format!("{:.0}", to_ns(width * e)),
+            d_trans.to_string(),
+            format!("{:.4}", d_miss as f64 / d_trans.max(1) as f64),
+            format!("{:.4}", d_walks as f64 / d_trans.max(1) as f64),
+            format!("{:.1}", to_ns((d_rat / d_internode.max(1) as u128) as u64)),
+        ]);
+        prev = snap;
+    }
+    // Drain the tail past the last epoch boundary; determinism check.
+    let fin = session.run_to_completion();
+    anyhow::ensure!(
+        fin.completion == total,
+        "epoch-stepped run diverged from the reference ({} vs {total})",
+        fin.completion
+    );
+    t.save_csv(&opts.out_dir, "fig_warmup_decay")?;
     Ok(t)
 }
 
@@ -634,7 +693,7 @@ pub fn fig_tenancy(opts: &FigOpts) -> Result<Table> {
                 }
             }
             let w: Workload = b.build()?;
-            let stats = crate::pod::run_workload(&cfg, w)?;
+            let stats = SessionBuilder::new(&cfg).workload(w).build()?.run_to_completion();
             let p99s: Vec<f64> = stats.jobs.iter().map(|j| j.rtt_p99_ns()).collect();
             let mean_p99 = p99s.iter().sum::<f64>() / p99s.len().max(1) as f64;
             let worst_p99 = p99s.iter().fold(0f64, |a, &b| a.max(b));
@@ -691,7 +750,7 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "ablation", "design", "warmup", "scale", "tenancy",
+    "ablation", "design", "warmup", "warmup_decay", "scale", "tenancy",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -739,6 +798,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     }
     if want("warmup") {
         warmup(opts)?.print();
+    }
+    if want("warmup_decay") {
+        fig_warmup(opts)?.print();
     }
     if want("scale") {
         pod_scale(opts)?.print();
@@ -810,7 +872,11 @@ mod tests {
                     0,
                 );
             }
-            let s = crate::pod::run_workload(&cfg, b.build().unwrap()).unwrap();
+            let s = SessionBuilder::new(&cfg)
+                .workload(b.build().unwrap())
+                .build()
+                .unwrap()
+                .run_to_completion();
             s.jobs.iter().map(|j| j.rtt_p99_ns()).fold(0f64, f64::max)
         };
         let one = worst_p99(1);
@@ -818,6 +884,26 @@ mod tests {
         assert!(
             four >= one,
             "per-job p99 should degrade (or hold) as tenants are added: 1 job {one:.0}ns vs 4 jobs {four:.0}ns"
+        );
+    }
+
+    #[test]
+    fn fig_warmup_decay_shows_cold_to_warm_transition() {
+        let t = fig_warmup(&quick_opts()).unwrap();
+        // (translated, l1_miss_rate) per epoch, traffic-bearing only.
+        let rows: Vec<(u64, f64)> = t
+            .rows
+            .iter()
+            .map(|r| (r[2].parse().unwrap(), r[3].parse().unwrap()))
+            .filter(|&(n, _)| n > 0)
+            .collect();
+        assert!(rows.len() >= 2, "expected multiple traffic-bearing epochs");
+        let first = rows.first().unwrap().1;
+        let last = rows.last().unwrap().1;
+        assert!(first > 0.5, "cold first epoch must be L1-miss dominated, got {first}");
+        assert!(
+            first >= last,
+            "miss rate must decay (or hold) cold→warm: first {first} vs last {last}"
         );
     }
 

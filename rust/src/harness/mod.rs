@@ -1,7 +1,11 @@
 //! Figure/table regeneration harness: one entry point per figure of the
 //! paper's evaluation (Figs 4–11, Table 1) plus the §6 optimization
-//! ablation. Every function prints an aligned text table and writes a CSV
-//! under `results/`.
+//! ablation and the beyond-the-paper studies (pod scale, tenancy, and
+//! the session-API warm-up-decay epoch curve, `fig_warmup`). Every
+//! function prints an aligned text table and writes a CSV under
+//! `results/`. Runs go through `pod::SessionBuilder` sessions — the
+//! sweeps via the [`crate::coordinator`], the epoch-resolved figures via
+//! `run_until` + `snapshot`.
 
 pub mod figures;
 pub mod table;

@@ -12,7 +12,9 @@
 //! * [`trans`] + [`mem`] — the Link-MMU reverse-translation hierarchy;
 //! * [`collective`] — MSCCLang-style schedules (all-pairs All-to-All, …)
 //!   and the multi-tenant workload composer (WORKLOADS.md);
-//! * [`pod`] — the full pod simulation tying the above together;
+//! * [`pod`] — the full pod simulation tying the above together, driven
+//!   through [`pod::SessionBuilder`] sessions with incremental stepping
+//!   and pluggable [`pod::Observer`]s;
 //! * [`coordinator`] — parallel sweep driver (leader/worker);
 //! * [`harness`] — regenerates every figure in the paper's evaluation;
 //! * `runtime` — PJRT executor for the AOT-compiled JAX/Pallas

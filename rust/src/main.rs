@@ -293,7 +293,8 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         workload.jobs.len(),
         workload.total_bytes()
     );
-    let stats = ratsim::pod::run_workload(&cfg, workload)?;
+    let stats =
+        ratsim::pod::SessionBuilder::new(&cfg).workload(workload).build()?.run_to_completion();
     if a.flag("json") {
         println!("{}", stats.to_json().to_string_pretty());
         return Ok(());

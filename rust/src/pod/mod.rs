@@ -3,13 +3,30 @@
 //! collective schedule — or a multi-tenant workload of many concurrent
 //! schedules — to completion.
 //!
-//! See DESIGN.md "Request lifecycle" for the modeled path. Entry points:
-//! [`run`] (config → stats), [`run_schedule`] (custom schedule), and
-//! [`run_workload`] (merged multi-tenant workload with per-job stats and
-//! cross-job TLB-interference counters).
+//! See DESIGN.md "Request lifecycle" for the modeled path and "Session
+//! lifecycle & observer hooks" for the driver API. The entry point is
+//! [`SessionBuilder`]: pick a traffic source (config-declared collective,
+//! explicit schedule, or merged workload), an engine policy, and the
+//! attached [`Observer`]s, then drive the resulting [`SimSession`]
+//! incrementally ([`SimSession::step`] / [`SimSession::run_until`] with
+//! mid-run [`SimSession::snapshot`]s) or straight through
+//! ([`SimSession::run_to_completion`]).
+//!
+//! The old free functions [`run`], [`run_schedule`] and [`run_workload`]
+//! remain as deprecated shims that delegate to a default-observer
+//! session and stay bit-identical to the pre-session accounting (pinned
+//! by `rust/tests/session.rs`).
 
 pub mod mmu;
-pub mod sim;
+pub mod observer;
+mod session;
+mod sim;
 
 pub use mmu::GpuMmu;
-pub use sim::{run, run_schedule, run_workload, PodSim};
+pub use observer::{
+    CrossJobObserver, JobObserver, JobSeed, LatencyObserver, NoopObserver, Observer,
+    RequestView, SessionEvent, TraceObserver, TranslationEvent,
+};
+pub use session::{SessionBuilder, SimSession};
+#[allow(deprecated)]
+pub use sim::{run, run_schedule, run_workload};

@@ -1,0 +1,595 @@
+//! Session observers: the pluggable measurement layer of the pod
+//! simulation.
+//!
+//! A [`SimSession`](super::SimSession) owns a list of boxed [`Observer`]s
+//! and notifies them as the run executes. Everything the old monolithic
+//! accounting in `pod/sim.rs` produced — the translation-class taxonomy,
+//! the additive latency breakdown, the RTT/RAT histograms, the
+//! per-request trace, per-job books, and the cross-job Link-TLB eviction
+//! counters — is now implemented as the *stock* observers in this module
+//! ([`LatencyObserver`], [`TraceObserver`], [`JobObserver`],
+//! [`CrossJobObserver`]), which the default session composes back into
+//! [`RunStats`]. A third-party probe is just another `Observer`
+//! implementation attached via
+//! [`SessionBuilder::observe`](super::SessionBuilder::observe) — no
+//! engine changes required.
+//!
+//! ## Hook timing contract
+//!
+//! * [`Observer::on_event`] is stamped with the **engine dispatch clock**
+//!   and its timestamps are monotonically non-decreasing over a run.
+//! * [`Observer::on_request_done`] fires from the ACK-arrival handler, so
+//!   its timestamps are also non-decreasing.
+//! * [`Observer::on_translation`] carries the *logical* resolution time of
+//!   the request's translation. The fused engine computes deterministic
+//!   hop chains eagerly (see `pod/sim.rs` §Perf), so these timestamps may
+//!   run **ahead** of the dispatch clock and are not globally sorted.
+//! * [`Observer::publish`] must be non-destructive: mid-run
+//!   [`SimSession::snapshot`](super::SimSession::snapshot) calls it on a
+//!   live observer whose run continues afterwards.
+//! * [`Observer::on_finish`] runs exactly once, after the event set
+//!   drains; the default implementation delegates to `publish`.
+//!
+//! These contracts are pinned by `rust/tests/session.rs`.
+
+use crate::collective::Schedule;
+use crate::stats::histogram::LogHistogram;
+use crate::stats::run::{JobStats, LatencyBreakdown, RunStats};
+use crate::trans::class::{ClassCounts, TransClass};
+use crate::util::units::Time;
+use anyhow::Result;
+
+/// Immutable view of one in-flight request, handed to observer hooks.
+#[derive(Debug, Clone, Copy)]
+pub struct RequestView {
+    /// Source GPU issuing the remote store.
+    pub src: u32,
+    /// Destination GPU (whose Link MMU translates the stream).
+    pub dst: u32,
+    /// UALink rail (station index) the stream rides.
+    pub rail: u32,
+    /// Workgroup (schedule-op index) the request belongs to.
+    pub wg: u32,
+    /// Tenant job of the request's op (0 for single-job runs).
+    pub job: u16,
+    /// Per-source-GPU issue sequence number (the trace key).
+    pub seq: u64,
+    /// Destination receive-window page the request stores into.
+    pub page: u64,
+    /// Issue time at the source WG.
+    pub issue: Time,
+    /// Arrival time of the data packet at the target station.
+    pub target_arrive: Time,
+    /// Whether the request crossed a node boundary (and hence translated).
+    pub internode: bool,
+}
+
+/// Everything known about a request at its translation-resolution point:
+/// the outcome class plus the full fused latency decomposition (the
+/// response chain is deterministic, so the ACK time is already fixed
+/// here — see `PodSim::finish_translation`).
+#[derive(Debug, Clone, Copy)]
+pub struct TranslationEvent {
+    /// Translation-outcome classification (Figs 7/8 taxonomy).
+    pub class: TransClass,
+    /// Reverse-translation latency at the target (0 for bypass classes).
+    pub rat: Time,
+    /// Absolute time the ACK reaches the source WG.
+    pub ack_at: Time,
+    /// One-way local-data-fabric latency (counted twice per round trip).
+    pub fabric: Time,
+    /// Forward network path time (uplink, switch, links).
+    pub net_fwd: Time,
+    /// HBM write time at the target.
+    pub memory: Time,
+    /// ACK return-path network time.
+    pub net_ack: Time,
+}
+
+impl TranslationEvent {
+    /// Round-trip latency of the request (ACK arrival minus issue).
+    pub fn rtt(&self, req: &RequestView) -> Time {
+        self.ack_at - req.issue
+    }
+}
+
+/// Model-level happenings streamed to [`Observer::on_event`], stamped
+/// with the engine dispatch clock (monotonically non-decreasing).
+#[derive(Debug, Clone, Copy)]
+pub enum SessionEvent {
+    /// A workgroup became runnable (root-op arrival or dependency
+    /// satisfied).
+    WgStarted {
+        /// Workgroup (schedule-op index).
+        wg: u32,
+        /// Tenant job of the op.
+        job: u16,
+    },
+    /// A Link-TLB fill installed `page` at one of `gpu`'s TLBs,
+    /// displacing `victim` (if the set was full). `l1` distinguishes the
+    /// per-station L1s from the shared L2. Includes §6.1 pre-translation
+    /// warmup fills (stamped at t = 0).
+    TlbFill {
+        /// Destination GPU whose TLB filled.
+        gpu: u32,
+        /// Page installed by the fill.
+        page: u64,
+        /// LRU victim the fill displaced, if any.
+        victim: Option<u64>,
+        /// True for a station L1 fill, false for the shared L2.
+        l1: bool,
+    },
+    /// A page walk completed at `gpu` (demand or prefetch-initiated).
+    WalkCompleted {
+        /// GPU whose walker finished.
+        gpu: u32,
+        /// Page the walk resolved.
+        page: u64,
+        /// Walk initiated by a prefetcher (stride or hint), not a demand
+        /// miss.
+        prefetch: bool,
+    },
+}
+
+/// A pluggable probe over one simulation run. All hooks have no-op
+/// defaults — implement only what the probe needs. Observers are owned by
+/// a single-threaded [`SimSession`](super::SimSession); no `Send` bound
+/// is required.
+pub trait Observer {
+    /// Model-level event stream (see [`SessionEvent`]); `now` is the
+    /// engine dispatch clock and never decreases.
+    fn on_event(&mut self, _now: Time, _ev: &SessionEvent) {}
+
+    /// A request's reverse translation resolved (or was bypassed) at
+    /// logical time `at`. May run ahead of the dispatch clock (fused
+    /// chains) — do not assume global ordering.
+    fn on_translation(&mut self, _at: Time, _req: &RequestView, _tr: &TranslationEvent) {}
+
+    /// A request's ACK returned to its source at `now` (non-decreasing).
+    fn on_request_done(&mut self, _now: Time, _req: &RequestView) {}
+
+    /// Merge this observer's accumulated results into `stats`. Called by
+    /// mid-run [`SimSession::snapshot`](super::SimSession::snapshot) —
+    /// must be non-destructive and leave the observer running.
+    fn publish(&self, _stats: &mut RunStats) {}
+
+    /// The run drained: verify invariants and merge final results. The
+    /// default delegates to [`Observer::publish`].
+    fn on_finish(&mut self, stats: &mut RunStats) {
+        self.publish(stats);
+    }
+}
+
+/// An observer that observes nothing — attach it to prove (as
+/// `rust/tests/session.rs` does) that the hook plumbing adds zero stat
+/// drift.
+#[derive(Debug, Default, Clone, Copy)]
+pub struct NoopObserver;
+
+impl Observer for NoopObserver {}
+
+/// Stock observer: the translation-class taxonomy (Figs 7/8), the
+/// additive RTT breakdown (Fig 6), and the global RTT/RAT histograms.
+#[derive(Debug, Default)]
+pub struct LatencyObserver {
+    classes: ClassCounts,
+    breakdown: LatencyBreakdown,
+    rtt_hist: LogHistogram,
+    rat_hist: LogHistogram,
+    internode_requests: u64,
+}
+
+impl LatencyObserver {
+    /// Fresh, empty books.
+    pub fn new() -> Self {
+        Self::default()
+    }
+}
+
+impl Observer for LatencyObserver {
+    fn on_translation(&mut self, _at: Time, req: &RequestView, tr: &TranslationEvent) {
+        self.classes.record(tr.class);
+        self.breakdown.fabric += 2 * tr.fabric as u128;
+        self.breakdown.net_fwd += tr.net_fwd as u128;
+        self.breakdown.translation += tr.rat as u128;
+        self.breakdown.memory += tr.memory as u128;
+        self.breakdown.net_ack += tr.net_ack as u128;
+        self.rtt_hist.record(tr.rtt(req));
+        if req.internode {
+            self.internode_requests += 1;
+            self.rat_hist.record(tr.rat);
+        }
+    }
+
+    fn publish(&self, stats: &mut RunStats) {
+        stats.classes = self.classes.clone();
+        stats.breakdown = self.breakdown.clone();
+        stats.rtt_hist = self.rtt_hist.clone();
+        stats.rat_hist = self.rat_hist.clone();
+        stats.internode_requests = self.internode_requests;
+    }
+}
+
+/// Stock observer: the per-request RAT-latency trace for one source GPU
+/// (Figs 9/10). Attached by the default session when
+/// `workload.trace_source_gpu` is set.
+#[derive(Debug)]
+pub struct TraceObserver {
+    src: u32,
+    trace: Vec<(u64, Time)>,
+}
+
+impl TraceObserver {
+    /// Trace inter-node requests issued by `src_gpu`.
+    pub fn new(src_gpu: u32) -> Self {
+        Self { src: src_gpu, trace: Vec::new() }
+    }
+}
+
+impl Observer for TraceObserver {
+    fn on_translation(&mut self, _at: Time, req: &RequestView, tr: &TranslationEvent) {
+        if req.internode && req.src == self.src {
+            self.trace.push((req.seq, tr.rat));
+        }
+    }
+
+    fn publish(&self, stats: &mut RunStats) {
+        let mut trace = self.trace.clone();
+        trace.sort_unstable();
+        stats.trace = trace;
+    }
+}
+
+/// Construction-time description of one tenant job for [`JobObserver`]
+/// (name and schedule-derived totals; the per-run books start empty).
+#[derive(Debug, Clone)]
+pub struct JobSeed {
+    /// Job name (from the workload descriptor / schedule name).
+    pub name: String,
+    /// Simulated time the job's root ops become runnable.
+    pub arrival: Time,
+    /// Fabric bytes the job moves.
+    pub bytes: u64,
+    /// Requests the job's ops decompose into.
+    pub total_requests: u64,
+}
+
+/// One job's in-flight books.
+#[derive(Debug)]
+struct JobBook {
+    seed: JobSeed,
+    acked: u64,
+    completion: Time,
+    rtt_hist: LogHistogram,
+    rat_hist: LogHistogram,
+}
+
+/// Stock observer: per-tenant-job accounting — request/latency books per
+/// job, completion times, and the final [`JobStats`] array. The default
+/// session always attaches one (single-schedule runs carry one job
+/// covering the whole schedule).
+#[derive(Debug)]
+pub struct JobObserver {
+    jobs: Vec<JobBook>,
+}
+
+impl JobObserver {
+    /// Books for the given jobs (index = the `job` tag on schedule ops).
+    pub fn new(jobs: Vec<JobSeed>) -> Self {
+        Self {
+            jobs: jobs
+                .into_iter()
+                .map(|seed| JobBook {
+                    seed,
+                    acked: 0,
+                    completion: 0,
+                    rtt_hist: LogHistogram::new(),
+                    rat_hist: LogHistogram::new(),
+                })
+                .collect(),
+        }
+    }
+}
+
+impl Observer for JobObserver {
+    fn on_translation(&mut self, _at: Time, req: &RequestView, tr: &TranslationEvent) {
+        let book = &mut self.jobs[req.job as usize];
+        book.rtt_hist.record(tr.rtt(req));
+        if req.internode {
+            book.rat_hist.record(tr.rat);
+        }
+    }
+
+    fn on_request_done(&mut self, now: Time, req: &RequestView) {
+        let book = &mut self.jobs[req.job as usize];
+        book.acked += 1;
+        if book.acked == book.seed.total_requests {
+            book.completion = now;
+        }
+    }
+
+    fn publish(&self, stats: &mut RunStats) {
+        stats.jobs = self
+            .jobs
+            .iter()
+            .map(|b| JobStats {
+                name: b.seed.name.clone(),
+                arrival: b.seed.arrival,
+                completion: b.completion,
+                requests: b.acked,
+                bytes: b.seed.bytes,
+                rtt_hist: b.rtt_hist.clone(),
+                rat_hist: b.rat_hist.clone(),
+            })
+            .collect();
+    }
+
+    fn on_finish(&mut self, stats: &mut RunStats) {
+        // Per-job conservation: every job fully acknowledged, and the
+        // per-job books reconcile with the run total (scraped into
+        // `stats.requests` before observers run).
+        for (i, b) in self.jobs.iter().enumerate() {
+            assert_eq!(
+                b.acked, b.seed.total_requests,
+                "job {i} ({}) lost requests",
+                b.seed.name
+            );
+        }
+        self.publish(stats);
+        let job_requests: u64 = stats.jobs.iter().map(|j| j.requests).sum();
+        assert_eq!(job_requests, stats.requests, "per-job request accounting leaked");
+    }
+}
+
+/// Stock observer: cross-tenant Link-TLB interference — fills whose LRU
+/// victim belonged to a *different* job, counted per level from the
+/// [`SessionEvent::TlbFill`] stream against per-GPU page-ownership
+/// interval tables. The default session attaches one only for multi-job
+/// runs with translation enabled (single-job runs can't interfere).
+#[derive(Debug)]
+pub struct CrossJobObserver {
+    /// Per-GPU page-ownership intervals `(first_page, last_page, job)`,
+    /// sorted by first page.
+    page_jobs: Vec<Vec<(u64, u64, u16)>>,
+    l1_evictions: u64,
+    l2_evictions: u64,
+}
+
+impl CrossJobObserver {
+    /// Build the ownership tables from a merged job-tagged schedule.
+    /// Errors if two jobs share a translation page at any GPU — eviction
+    /// attribution would be ambiguous (the workload composer prevents
+    /// this when its alignment >= the configured page size). Zero-byte
+    /// ops (rejected by `Schedule::validate`, which session construction
+    /// always runs first) are skipped so an unvalidated schedule cannot
+    /// register phantom ownership intervals here.
+    pub fn from_schedule(schedule: &Schedule, gpus: u32, page_bytes: u64) -> Result<Self> {
+        let mut map: Vec<Vec<(u64, u64, u16)>> = vec![Vec::new(); gpus as usize];
+        for op in schedule.ops.iter().filter(|o| o.bytes > 0) {
+            let first = op.dst_offset / page_bytes;
+            let last = (op.dst_offset + op.bytes - 1) / page_bytes;
+            map[op.dst as usize].push((first, last, op.job));
+        }
+        for (g, table) in map.iter_mut().enumerate() {
+            table.sort_unstable();
+            // Coalesce same-job overlapping/adjacent ranges (jobs own
+            // disjoint page-aligned regions by construction, so the
+            // merged table has one interval per job region).
+            let mut merged: Vec<(u64, u64, u16)> = Vec::new();
+            for (f, l, j) in table.drain(..) {
+                if let Some(prev) = merged.last_mut() {
+                    if prev.2 == j && f <= prev.1.saturating_add(1) {
+                        prev.1 = prev.1.max(l);
+                        continue;
+                    }
+                    anyhow::ensure!(
+                        f > prev.1,
+                        "jobs {} and {j} share translation page {f} at GPU {g}; \
+                         build the workload with alignment >= trans.page_bytes ({page_bytes})",
+                        prev.2,
+                    );
+                }
+                merged.push((f, l, j));
+            }
+            *table = merged;
+        }
+        Ok(Self { page_jobs: map, l1_evictions: 0, l2_evictions: 0 })
+    }
+
+    /// Owner job of a page at one GPU, from the sorted interval table.
+    fn job_of_page(table: &[(u64, u64, u16)], page: u64) -> Option<u16> {
+        let i = table.partition_point(|&(first, _, _)| first <= page);
+        if i == 0 {
+            return None;
+        }
+        let (first, last, job) = table[i - 1];
+        (first <= page && page <= last).then_some(job)
+    }
+}
+
+impl Observer for CrossJobObserver {
+    fn on_event(&mut self, _now: Time, ev: &SessionEvent) {
+        let SessionEvent::TlbFill { gpu, page, victim: Some(victim), l1 } = *ev else {
+            return;
+        };
+        let table = &self.page_jobs[gpu as usize];
+        if let (Some(filler), Some(owner)) =
+            (Self::job_of_page(table, page), Self::job_of_page(table, victim))
+        {
+            if filler != owner {
+                if l1 {
+                    self.l1_evictions += 1;
+                } else {
+                    self.l2_evictions += 1;
+                }
+            }
+        }
+    }
+
+    fn publish(&self, stats: &mut RunStats) {
+        stats.cross_job_l1_evictions = self.l1_evictions;
+        stats.cross_job_l2_evictions = self.l2_evictions;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(job: u16, internode: bool) -> RequestView {
+        RequestView {
+            src: 4,
+            dst: 0,
+            rail: 0,
+            wg: 0,
+            job,
+            seq: 0,
+            page: 0,
+            issue: 100,
+            target_arrive: 500,
+            internode,
+        }
+    }
+
+    fn tr(rat: Time) -> TranslationEvent {
+        TranslationEvent {
+            class: TransClass::L1Hit,
+            rat,
+            ack_at: 1_000,
+            fabric: 10,
+            net_fwd: 390,
+            memory: 50,
+            net_ack: 300,
+        }
+    }
+
+    #[test]
+    fn latency_observer_reproduces_breakdown_math() {
+        let mut o = LatencyObserver::new();
+        o.on_translation(500, &req(0, true), &tr(40));
+        let mut s = RunStats::default();
+        o.publish(&mut s);
+        assert_eq!(s.breakdown.fabric, 20);
+        assert_eq!(s.breakdown.translation, 40);
+        assert_eq!(s.internode_requests, 1);
+        assert_eq!(s.rtt_hist.count(), 1);
+        assert_eq!(s.rat_hist.count(), 1);
+        assert_eq!(s.classes.l1_hit, 1);
+        // Intra-node requests record no RAT sample.
+        o.on_translation(500, &req(0, false), &tr(0));
+        let mut s2 = RunStats::default();
+        o.publish(&mut s2);
+        assert_eq!(s2.rat_hist.count(), 1);
+        assert_eq!(s2.rtt_hist.count(), 2);
+    }
+
+    #[test]
+    fn trace_observer_filters_by_source_and_sorts() {
+        let mut o = TraceObserver::new(4);
+        let mut a = req(0, true);
+        a.seq = 9;
+        let mut b = req(0, true);
+        b.seq = 2;
+        let mut other = req(0, true);
+        other.src = 5;
+        o.on_translation(0, &a, &tr(11));
+        o.on_translation(0, &other, &tr(12));
+        o.on_translation(0, &b, &tr(13));
+        let mut s = RunStats::default();
+        o.publish(&mut s);
+        assert_eq!(s.trace, vec![(2, 13), (9, 11)]);
+    }
+
+    #[test]
+    fn job_observer_tracks_completion_per_job() {
+        let mut o = JobObserver::new(vec![
+            JobSeed { name: "a".into(), arrival: 0, bytes: 10, total_requests: 2 },
+            JobSeed { name: "b".into(), arrival: 7, bytes: 20, total_requests: 1 },
+        ]);
+        o.on_translation(500, &req(0, true), &tr(40));
+        o.on_request_done(1_000, &req(0, true));
+        o.on_request_done(1_500, &req(1, false));
+        let mut s = RunStats::default();
+        o.publish(&mut s);
+        assert_eq!(s.jobs.len(), 2);
+        assert_eq!(s.jobs[0].requests, 1);
+        assert_eq!(s.jobs[0].completion, 0, "job a not yet complete");
+        assert_eq!(s.jobs[1].completion, 1_500);
+        assert_eq!(s.jobs[1].arrival, 7);
+        o.on_request_done(2_000, &req(0, true));
+        let mut s2 = RunStats { requests: 3, ..RunStats::default() };
+        o.on_finish(&mut s2);
+        assert_eq!(s2.jobs[0].completion, 2_000);
+    }
+
+    #[test]
+    #[should_panic(expected = "lost requests")]
+    fn job_observer_finish_asserts_conservation() {
+        let mut o = JobObserver::new(vec![JobSeed {
+            name: "a".into(),
+            arrival: 0,
+            bytes: 10,
+            total_requests: 2,
+        }]);
+        let mut s = RunStats::default();
+        o.on_finish(&mut s);
+    }
+
+    #[test]
+    fn cross_job_observer_counts_only_cross_tenant_victims() {
+        use crate::collective::{Schedule, SendOp};
+        // GPU 0 owns pages 0..=1 (job 0) and 2..=3 (job 1).
+        let sched = Schedule {
+            name: "x".into(),
+            gpus: 2,
+            size_bytes: 4096 * 4,
+            ops: vec![
+                SendOp { id: 0, src: 1, dst: 0, dst_offset: 0, bytes: 8192, after: None, job: 0 },
+                SendOp {
+                    id: 1,
+                    src: 1,
+                    dst: 0,
+                    dst_offset: 8192,
+                    bytes: 8192,
+                    after: None,
+                    job: 1,
+                },
+            ],
+        };
+        let mut o = CrossJobObserver::from_schedule(&sched, 2, 4096).unwrap();
+        // Same-job victim: no count.
+        o.on_event(0, &SessionEvent::TlbFill { gpu: 0, page: 0, victim: Some(1), l1: false });
+        // Cross-job victims at both levels.
+        o.on_event(0, &SessionEvent::TlbFill { gpu: 0, page: 0, victim: Some(2), l1: false });
+        o.on_event(0, &SessionEvent::TlbFill { gpu: 0, page: 3, victim: Some(1), l1: true });
+        // Victim outside any window: no count.
+        o.on_event(0, &SessionEvent::TlbFill { gpu: 0, page: 0, victim: Some(99), l1: true });
+        let mut s = RunStats::default();
+        o.publish(&mut s);
+        assert_eq!(s.cross_job_l2_evictions, 1);
+        assert_eq!(s.cross_job_l1_evictions, 1);
+    }
+
+    #[test]
+    fn cross_job_observer_rejects_shared_pages() {
+        use crate::collective::{Schedule, SendOp};
+        let sched = Schedule {
+            name: "bad".into(),
+            gpus: 2,
+            size_bytes: 4096,
+            ops: vec![
+                SendOp { id: 0, src: 1, dst: 0, dst_offset: 0, bytes: 4096, after: None, job: 0 },
+                SendOp {
+                    id: 1,
+                    src: 1,
+                    dst: 0,
+                    dst_offset: 2048,
+                    bytes: 2048,
+                    after: None,
+                    job: 1,
+                },
+            ],
+        };
+        assert!(CrossJobObserver::from_schedule(&sched, 2, 4096).is_err());
+    }
+}

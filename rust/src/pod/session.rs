@@ -1,0 +1,268 @@
+//! `SessionBuilder` + `SimSession`: the public driver API of the pod
+//! simulation.
+//!
+//! One uniform surface replaces the old `run`/`run_schedule`/
+//! `run_workload` free functions (kept as deprecated shims): a builder
+//! selects the traffic source (config-declared collective, explicit
+//! [`Schedule`], or multi-tenant [`Workload`]), the engine policy, and
+//! the attached [`Observer`]s, then yields a [`SimSession`] with
+//! incremental control — [`SimSession::step`], [`SimSession::run_until`],
+//! [`SimSession::run_to_completion`] — and mid-run
+//! [`SimSession::snapshot`]s for time-windowed analysis (warmup discard,
+//! cold-vs-warm epoch curves) and early-exit sweeps.
+//!
+//! The default session composes the stock observers of
+//! [`super::observer`] so its [`RunStats`] are bit-identical to the old
+//! monolithic accounting (pinned by `rust/tests/session.rs` and
+//! `rust/tests/engine_diff.rs` across the preset grid).
+//!
+//! ```no_run
+//! use ratsim::config::presets::paper_baseline;
+//! use ratsim::pod::SessionBuilder;
+//! use ratsim::util::units::MIB;
+//!
+//! let cfg = paper_baseline(16, MIB);
+//! let stats = SessionBuilder::new(&cfg).build()?.run_to_completion();
+//! println!("{}", stats.summary());
+//! # Ok::<(), anyhow::Error>(())
+//! ```
+
+use super::observer::Observer;
+use super::sim::PodSim;
+use crate::collective::workload::Workload;
+use crate::collective::{generators, Schedule};
+use crate::config::{EnginePolicy, PodConfig};
+use crate::stats::RunStats;
+use crate::util::units::Time;
+use anyhow::Result;
+use std::time::{Duration, Instant};
+
+/// What the session simulates.
+enum Source {
+    /// Generate the collective declared by `cfg.workload`.
+    Config,
+    /// An explicit (single-job) schedule.
+    Schedule(Schedule),
+    /// A merged multi-tenant workload.
+    Workload(Workload),
+}
+
+/// Builder for a [`SimSession`]: config → traffic source → engine policy
+/// → observers. See the [module docs](self) for the full lifecycle.
+pub struct SessionBuilder {
+    cfg: PodConfig,
+    source: Source,
+    extra: Vec<Box<dyn Observer>>,
+    stock: bool,
+}
+
+impl SessionBuilder {
+    /// Start from a pod configuration; by default the session runs the
+    /// collective declared by `cfg.workload` with the stock observers
+    /// attached.
+    pub fn new(cfg: &PodConfig) -> Self {
+        Self { cfg: cfg.clone(), source: Source::Config, extra: Vec::new(), stock: true }
+    }
+
+    /// Simulate an explicit schedule instead of the config's collective
+    /// (request sizing follows the configured collective's volume
+    /// formula, exactly like the old `run_schedule`).
+    pub fn schedule(mut self, schedule: Schedule) -> Self {
+        self.source = Source::Schedule(schedule);
+        self
+    }
+
+    /// Simulate a merged multi-tenant workload (request sizing from the
+    /// workload's actual fabric-byte total; per-job stats and cross-job
+    /// eviction counters reported by the stock observers).
+    pub fn workload(mut self, workload: Workload) -> Self {
+        self.source = Source::Workload(workload);
+        self
+    }
+
+    /// Override the event-engine policy (`Fused` fast path vs `PerHop`
+    /// marker events); equivalent to setting `cfg.engine` up front.
+    pub fn engine(mut self, policy: EnginePolicy) -> Self {
+        self.cfg.engine = policy;
+        self
+    }
+
+    /// Attach an additional observer. User observers run after the stock
+    /// ones, in attachment order.
+    pub fn observe(mut self, observer: impl Observer + 'static) -> Self {
+        self.extra.push(Box::new(observer));
+        self
+    }
+
+    /// Skip the stock observers: the session still runs the full model
+    /// (and scrapes the model-level counters into [`RunStats`]) but
+    /// produces no classes/breakdown/histograms/trace/job books — only
+    /// explicitly attached observers report.
+    pub fn without_default_observers(mut self) -> Self {
+        self.stock = false;
+        self
+    }
+
+    /// Validate the configuration and source, construct the pod model,
+    /// and return the ready-to-run session (clock at t = 0, §6.1 warmup
+    /// already applied, root ops seeded).
+    pub fn build(self) -> Result<SimSession> {
+        let Self { cfg, source, extra, stock } = self;
+        let sim = match source {
+            Source::Config => {
+                // Validate before generating: a bad config must error
+                // here, not inside the generator. (`PodSim` re-validates
+                // internally as a cheap invariant for the other sources.)
+                cfg.validate()?;
+                let schedule =
+                    generators::build(cfg.workload.collective, cfg.gpus, cfg.workload.size_bytes)?;
+                schedule.validate()?;
+                PodSim::new(cfg, schedule, extra, stock)?
+            }
+            Source::Schedule(schedule) => {
+                schedule.validate()?;
+                PodSim::new(cfg, schedule, extra, stock)?
+            }
+            Source::Workload(workload) => {
+                workload.schedule.validate()?;
+                PodSim::new_workload(cfg, workload, extra, stock)?
+            }
+        };
+        Ok(SimSession { sim, wall: Duration::ZERO })
+    }
+}
+
+/// A running pod simulation with incremental control. Create one via
+/// [`SessionBuilder`]; drive it with [`step`](Self::step) /
+/// [`run_until`](Self::run_until) / [`run_to_completion`](Self::run_to_completion);
+/// read mid-run state with [`snapshot`](Self::snapshot).
+pub struct SimSession {
+    sim: PodSim,
+    /// Accumulated host wall time spent driving the event loop (flows
+    /// into `RunStats::wall_seconds`).
+    wall: Duration,
+}
+
+impl SimSession {
+    /// Current simulated time (the engine dispatch clock, ps).
+    pub fn now(&self) -> Time {
+        self.sim.now()
+    }
+
+    /// True once the event set has drained (the run is complete).
+    pub fn done(&self) -> bool {
+        self.sim.idle()
+    }
+
+    /// Timestamp of the next pending event, if any.
+    pub fn next_event_time(&mut self) -> Option<Time> {
+        self.sim.peek_time()
+    }
+
+    /// Process one event; returns its timestamp, or `None` if the run is
+    /// complete.
+    pub fn step(&mut self) -> Option<Time> {
+        let t0 = Instant::now();
+        let r = self.sim.step();
+        self.wall += t0.elapsed();
+        r
+    }
+
+    /// Process every event with timestamp ≤ `until` (simulated ps).
+    /// Returns `true` while events remain afterwards (i.e. the run is not
+    /// yet complete). Stepping a run in epochs and then finishing it is
+    /// bit-identical to an uninterrupted run.
+    pub fn run_until(&mut self, until: Time) -> bool {
+        let t0 = Instant::now();
+        while let Some(next) = self.sim.peek_time() {
+            if next > until || self.sim.step().is_none() {
+                break;
+            }
+        }
+        self.wall += t0.elapsed();
+        !self.sim.idle()
+    }
+
+    /// Mid-run view of the statistics: model-level counters scraped as of
+    /// now plus every observer's [`Observer::publish`] contribution. No
+    /// conservation asserts run — requests may still be in flight.
+    /// `completion` holds the current clock until the run actually
+    /// completes; `requests` always reports the run's total request count
+    /// (use `classes.total()` for progress so far).
+    pub fn snapshot(&self) -> RunStats {
+        self.sim.snapshot(self.wall)
+    }
+
+    /// Drain the remaining events, verify the conservation invariants,
+    /// and return the final statistics (the observers'
+    /// [`Observer::on_finish`] contributions included).
+    pub fn run_to_completion(mut self) -> RunStats {
+        let t0 = Instant::now();
+        self.sim.drain();
+        self.wall += t0.elapsed();
+        self.sim.finalize(self.wall)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::quick_test;
+    use crate::config::RequestSizing;
+    use crate::util::units::MIB;
+
+    fn tiny(gpus: u32, size: u64) -> PodConfig {
+        let mut c = quick_test(gpus, size);
+        c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 3_000 };
+        c
+    }
+
+    #[test]
+    fn builder_runs_config_source_to_completion() {
+        let stats = SessionBuilder::new(&tiny(8, MIB)).build().unwrap().run_to_completion();
+        assert!(stats.completion > 0);
+        assert_eq!(stats.requests, stats.classes.total());
+        assert_eq!(stats.jobs.len(), 1);
+    }
+
+    #[test]
+    fn stepping_advances_the_clock() {
+        let mut s = SessionBuilder::new(&tiny(8, MIB)).build().unwrap();
+        assert!(!s.done());
+        assert_eq!(s.now(), 0);
+        let first = s.next_event_time().unwrap();
+        assert_eq!(s.step(), Some(first));
+        assert!(s.now() >= first);
+        let snap = s.snapshot();
+        assert!(snap.classes.total() < snap.requests, "run barely started");
+        let stats = s.run_to_completion();
+        assert!(stats.completion > 0);
+    }
+
+    #[test]
+    fn bare_session_scrapes_model_but_reports_no_books() {
+        let cfg = tiny(8, MIB);
+        let full = SessionBuilder::new(&cfg).build().unwrap().run_to_completion();
+        let bare = SessionBuilder::new(&cfg)
+            .without_default_observers()
+            .build()
+            .unwrap()
+            .run_to_completion();
+        assert_eq!(bare.completion, full.completion, "model untouched by observers");
+        assert_eq!(bare.events, full.events);
+        assert_eq!(bare.requests, full.requests);
+        assert_eq!(bare.classes.total(), 0, "no stock books without default observers");
+        assert_eq!(bare.rtt_hist.count(), 0);
+        assert!(bare.jobs.is_empty());
+    }
+
+    #[test]
+    fn run_until_zero_processes_only_t0_events() {
+        let mut s = SessionBuilder::new(&tiny(8, MIB)).build().unwrap();
+        assert!(s.run_until(0), "events must remain after t=0");
+        assert_eq!(s.now(), 0);
+        assert!(s.next_event_time().unwrap() > 0);
+        let stats = s.run_to_completion();
+        assert!(stats.completion > 0);
+    }
+}

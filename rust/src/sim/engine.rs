@@ -84,6 +84,14 @@ impl<E> Engine<E> {
     pub fn idle(&self) -> bool {
         self.queue.is_empty()
     }
+
+    /// Timestamp of the earliest pending event without removing it
+    /// (`&mut` because the wheel may sort its hand slot to find the
+    /// frontier — the drain order is unaffected). Powers the session's
+    /// `run_until` bounded stepping.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        self.queue.peek_key().map(|(t, _)| t)
+    }
 }
 
 impl<E: Clone> Engine<E> {
@@ -189,6 +197,19 @@ mod tests {
         e.schedule_at(1_000, 2); // while the far event is pending
         assert_eq!(e.next(), Some((1_000, 2)));
         assert_eq!(e.next(), Some((100_000_000, 1)));
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn peek_does_not_disturb_drain_order() {
+        let mut e: Engine<u32> = Engine::new();
+        e.schedule_at(100, 1);
+        e.schedule_at(50, 0);
+        assert_eq!(e.peek_time(), Some(50));
+        assert_eq!(e.next(), Some((50, 0)));
+        assert_eq!(e.peek_time(), Some(100));
+        assert_eq!(e.next(), Some((100, 1)));
+        assert_eq!(e.peek_time(), None);
         assert!(e.idle());
     }
 

@@ -40,7 +40,7 @@ impl LatencyBreakdown {
     }
 }
 
-/// Per-tenant-job results of a run (`pod::run_workload`). Single-schedule
+/// Per-tenant-job results of a run (workload sessions). Single-schedule
 /// runs carry one entry covering the whole schedule, so the per-job view
 /// is always present.
 #[derive(Debug, Clone, Default)]

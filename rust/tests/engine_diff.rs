@@ -7,10 +7,14 @@
 //! including prefetch-enabled and stall-heavy configurations. Only the
 //! raw processed-event count may (and must) differ: the per-hop engine
 //! materializes its marker events, the fused engine doesn't.
+//!
+//! Runs go through the session API (`SessionBuilder::engine`), so this
+//! grid simultaneously pins the default session's stock-observer
+//! accounting across every preset × engine-policy combination.
 
 use ratsim::config::presets::quick_test;
 use ratsim::config::{EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing};
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::stats::RunStats;
 use ratsim::util::units::MIB;
 
@@ -87,12 +91,17 @@ fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
     );
 }
 
-fn run_both(mut cfg: PodConfig, label: &str) {
-    cfg.engine = EnginePolicy::Fused;
-    let fused = pod::run(&cfg).unwrap_or_else(|e| panic!("{label}: fused run failed: {e:#}"));
-    cfg.engine = EnginePolicy::PerHop;
-    let per_hop =
-        pod::run(&cfg).unwrap_or_else(|e| panic!("{label}: per-hop run failed: {e:#}"));
+fn run_engine(cfg: &PodConfig, policy: EnginePolicy, label: &str) -> RunStats {
+    SessionBuilder::new(cfg)
+        .engine(policy)
+        .build()
+        .unwrap_or_else(|e| panic!("{label}: {policy:?} build failed: {e:#}"))
+        .run_to_completion()
+}
+
+fn run_both(cfg: PodConfig, label: &str) {
+    let fused = run_engine(&cfg, EnginePolicy::Fused, label);
+    let per_hop = run_engine(&cfg, EnginePolicy::PerHop, label);
     assert_bit_identical(&fused, &per_hop, label);
 }
 
@@ -188,9 +197,17 @@ fn multi_tenant_workloads_are_bit_identical() {
     let mut cfg = base(8, 8 * MIB);
     cfg.trans.l2.entries = 4; // force cross-job L2 traffic through the diff
     let w = Workload::from_spec(&spec, 8, cfg.trans.page_bytes).unwrap();
-    cfg.engine = EnginePolicy::Fused;
-    let fused = pod::run_workload(&cfg, w.clone()).unwrap();
-    cfg.engine = EnginePolicy::PerHop;
-    let per_hop = pod::run_workload(&cfg, w).unwrap();
+    let fused = SessionBuilder::new(&cfg)
+        .workload(w.clone())
+        .engine(EnginePolicy::Fused)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    let per_hop = SessionBuilder::new(&cfg)
+        .workload(w)
+        .engine(EnginePolicy::PerHop)
+        .build()
+        .unwrap()
+        .run_to_completion();
     assert_bit_identical(&fused, &per_hop, "multi-tenant");
 }

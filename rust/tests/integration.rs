@@ -2,10 +2,11 @@
 //! config system, collective generators, network, translation hierarchy
 //! and stats together. Heavier invariants than the per-module unit tests.
 
-use ratsim::collective::{generators, mscclang};
+use ratsim::collective::{generators, mscclang, Schedule};
 use ratsim::config::presets::{paper_baseline, paper_ideal, quick_test};
 use ratsim::config::{CollectiveKind, PodConfig, RequestSizing};
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
+use ratsim::stats::RunStats;
 use ratsim::util::units::{GIB, MIB};
 
 fn tiny(gpus: u32, size: u64) -> PodConfig {
@@ -14,15 +15,25 @@ fn tiny(gpus: u32, size: u64) -> PodConfig {
     c
 }
 
+/// Session-backed run of the config-declared collective.
+fn run(cfg: &PodConfig) -> anyhow::Result<RunStats> {
+    Ok(SessionBuilder::new(cfg).build()?.run_to_completion())
+}
+
+/// Session-backed run of an explicit schedule.
+fn run_schedule(cfg: &PodConfig, schedule: Schedule) -> anyhow::Result<RunStats> {
+    Ok(SessionBuilder::new(cfg).schedule(schedule).build()?.run_to_completion())
+}
+
 #[test]
 fn overhead_monotonically_amortizes_with_size() {
     // §4.1: the RAT overhead ratio decays as collective size grows.
     let mut ratios = Vec::new();
     for size in [MIB, 8 * MIB, 64 * MIB] {
-        let b = pod::run(&tiny(8, size)).unwrap();
+        let b = run(&tiny(8, size)).unwrap();
         let mut ic = tiny(8, size);
         ic.trans.enabled = false;
-        let i = pod::run(&ic).unwrap();
+        let i = run(&ic).unwrap();
         ratios.push(b.completion as f64 / i.completion as f64);
     }
     assert!(ratios[0] > ratios[1] && ratios[1] >= ratios[2], "ratios not decaying: {ratios:?}");
@@ -34,8 +45,8 @@ fn overhead_monotonically_amortizes_with_size() {
 #[test]
 fn mean_rat_latency_decays_with_size() {
     // §4.2 / Fig 5.
-    let small = pod::run(&tiny(16, MIB)).unwrap();
-    let large = pod::run(&tiny(16, 64 * MIB)).unwrap();
+    let small = run(&tiny(16, MIB)).unwrap();
+    let large = run(&tiny(16, 64 * MIB)).unwrap();
     assert!(
         small.mean_rat_ns() > 4.0 * large.mean_rat_ns(),
         "cold-dominated small collectives must have much higher per-request RAT: {} vs {}",
@@ -51,7 +62,7 @@ fn translation_working_set_tracks_gpu_count() {
     // and never walks (§2.3). With 4 GPUs/node, gpus-4 sources are
     // inter-node, each contributing chunk/page pages.
     for gpus in [8u32, 16] {
-        let s = pod::run(&tiny(gpus, 64 * MIB)).unwrap();
+        let s = run(&tiny(gpus, 64 * MIB)).unwrap();
         let chunk_pages = (64 * MIB / gpus as u64 / (2 * MIB)) as usize;
         let expected = chunk_pages * (gpus as usize - 4);
         assert_eq!(
@@ -69,7 +80,7 @@ fn l2_sizing_insight_fig11() {
     let run_with_l2 = |entries: u32| {
         let mut c = tiny(16, 16 * MIB);
         c.trans.l2.entries = entries;
-        pod::run(&c).unwrap().completion
+        run(&c).unwrap().completion
     };
     let small = run_with_l2(16);
     let fits = run_with_l2(32);
@@ -91,10 +102,10 @@ fn custom_schedule_roundtrips_through_json_and_runs() {
     let path = dir.join("a2a.json");
     mscclang::save(&sched, &path).unwrap();
     let loaded = mscclang::load(&path).unwrap();
-    let stats = pod::run_schedule(&tiny(8, MIB), loaded).unwrap();
+    let stats = run_schedule(&tiny(8, MIB), loaded).unwrap();
     assert!(stats.completion > 0);
     // Identical to generating directly.
-    let direct = pod::run_schedule(&tiny(8, MIB), sched).unwrap();
+    let direct = run_schedule(&tiny(8, MIB), sched).unwrap();
     assert_eq!(stats.completion, direct.completion);
     std::fs::remove_file(path).ok();
 }
@@ -103,11 +114,11 @@ fn custom_schedule_roundtrips_through_json_and_runs() {
 fn collectives_have_expected_relative_cost() {
     let mut cfg = tiny(8, 4 * MIB);
     cfg.workload.collective = CollectiveKind::AllToAll;
-    let a2a = pod::run(&cfg).unwrap();
+    let a2a = run(&cfg).unwrap();
     cfg.workload.collective = CollectiveKind::AllGather;
-    let ag = pod::run(&cfg).unwrap();
+    let ag = run(&cfg).unwrap();
     cfg.workload.collective = CollectiveKind::AllReduceRing;
-    let ar = pod::run(&cfg).unwrap();
+    let ar = run(&cfg).unwrap();
     // Direct AG and A2A move the same volume concurrently — within 25%.
     let rel = (a2a.completion as f64 - ag.completion as f64).abs() / ag.completion as f64;
     assert!(rel < 0.25, "A2A vs AG mismatch: {} vs {}", a2a.completion, ag.completion);
@@ -124,8 +135,8 @@ fn config_json_roundtrip_preserves_simulation() {
     cfg.save(&path).unwrap();
     let loaded = PodConfig::load(&path).unwrap();
     assert_eq!(
-        pod::run(&cfg).unwrap().completion,
-        pod::run(&loaded).unwrap().completion
+        run(&cfg).unwrap().completion,
+        run(&loaded).unwrap().completion
     );
     std::fs::remove_file(path).ok();
 }
@@ -136,8 +147,8 @@ fn seeds_change_page_tables_not_results_shape() {
     a.seed = 1;
     let mut b = tiny(8, MIB);
     b.seed = 2;
-    let ra = pod::run(&a).unwrap();
-    let rb = pod::run(&b).unwrap();
+    let ra = run(&a).unwrap();
+    let rb = run(&b).unwrap();
     // The schedule is deterministic, so timing is identical; only the SPA
     // scatter differs (not visible in timing for this model).
     assert_eq!(ra.requests, rb.requests);
@@ -147,7 +158,7 @@ fn seeds_change_page_tables_not_results_shape() {
 #[test]
 fn intra_node_only_pod_has_zero_rat() {
     // 4 GPUs on one node: all SPA traffic.
-    let s = pod::run(&tiny(4, MIB)).unwrap();
+    let s = run(&tiny(4, MIB)).unwrap();
     assert_eq!(s.internode_requests, 0);
     assert_eq!(s.breakdown.translation, 0);
     assert_eq!(s.classes.intra_node, s.requests);
@@ -158,15 +169,15 @@ fn pretranslate_capped_pages_partial_benefit() {
     // §6.1 with a budget: warming only the first page per pair helps less
     // than warming everything but more than nothing.
     let size = 32 * MIB;
-    let cold = pod::run(&tiny(8, size)).unwrap();
+    let cold = run(&tiny(8, size)).unwrap();
     let mut one = tiny(8, size);
     one.trans.pretranslate.enabled = true;
     one.trans.pretranslate.pages_per_pair = 1;
-    let one_page = pod::run(&one).unwrap();
+    let one_page = run(&one).unwrap();
     let mut all = tiny(8, size);
     all.trans.pretranslate.enabled = true;
     all.trans.pretranslate.pages_per_pair = 0;
-    let all_pages = pod::run(&all).unwrap();
+    let all_pages = run(&all).unwrap();
     assert!(one_page.completion <= cold.completion);
     assert!(all_pages.completion <= one_page.completion);
     assert!(all_pages.pretranslated_pages > one_page.pretranslated_pages);
@@ -177,7 +188,7 @@ fn fixed_request_sizing_respected() {
     let mut c = tiny(8, MIB);
     c.workload.request_sizing = RequestSizing::Fixed(1024);
     assert_eq!(c.request_bytes(), 1024);
-    let s = pod::run(&c).unwrap();
+    let s = run(&c).unwrap();
     // 8 GPUs × 7 dsts × (1MiB/8 / 1KiB) requests
     assert_eq!(s.requests, 8 * 7 * (MIB / 8) / 1024);
 }
@@ -187,7 +198,7 @@ fn four_gib_collective_is_simulable() {
     // The paper's largest size: auto-coarsening keeps this tractable.
     let mut c = quick_test(8, 4 * GIB);
     c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 50_000 };
-    let s = pod::run(&c).unwrap();
+    let s = run(&c).unwrap();
     assert!(s.completion > 0);
     // Auto-coarsening caps at 32 KiB requests (>= 64 per 2 MiB page), so
     // 28 GiB of traffic becomes ~917k requests — tractable, not millions.
@@ -202,11 +213,11 @@ fn second_iteration_runs_warm() {
     // must cost nearly the ideal iteration, unlike the cold first.
     let cfg = tiny(16, MIB);
     let sched = generators::alltoall_allpairs(16, MIB).unwrap();
-    let once = pod::run_schedule(&cfg, sched.repeat(1)).unwrap();
-    let twice = pod::run_schedule(&cfg, sched.repeat(2)).unwrap();
+    let once = run_schedule(&cfg, sched.repeat(1)).unwrap();
+    let twice = run_schedule(&cfg, sched.repeat(2)).unwrap();
     let mut icfg = cfg.clone();
     icfg.trans.enabled = false;
-    let ideal = pod::run(&icfg).unwrap();
+    let ideal = run(&icfg).unwrap();
     let cold = once.completion as f64;
     let warm = twice.completion as f64 - cold;
     let ideal_t = ideal.completion as f64;
@@ -222,8 +233,8 @@ fn second_iteration_runs_warm() {
 #[test]
 fn paper_presets_run_at_full_fidelity_1mib() {
     // Full Table-1 fidelity for the headline cell (256 B requests).
-    let b = pod::run(&paper_baseline(16, MIB)).unwrap();
-    let i = pod::run(&paper_ideal(16, MIB)).unwrap();
+    let b = run(&paper_baseline(16, MIB)).unwrap();
+    let i = run(&paper_ideal(16, MIB)).unwrap();
     let ratio = b.completion as f64 / i.completion as f64;
     assert!((1.15..=1.6).contains(&ratio), "headline overhead {ratio:.3} out of band");
     // Fig 6: ~30% of RTT in translation at 1 MiB.

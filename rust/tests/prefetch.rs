@@ -5,9 +5,14 @@
 
 use ratsim::config::presets::quick_test;
 use ratsim::config::{PodConfig, PrefetchPolicy, RequestSizing};
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::stats::RunStats;
 use ratsim::util::units::{us, MIB};
+
+/// Session-backed run of the config-declared collective.
+fn run(cfg: &PodConfig) -> anyhow::Result<RunStats> {
+    Ok(SessionBuilder::new(cfg).build()?.run_to_completion())
+}
 
 fn tiny(gpus: u32, size: u64) -> PodConfig {
     let mut c = quick_test(gpus, size);
@@ -40,9 +45,9 @@ fn warmed(gpus: u32, size: u64) -> PodConfig {
 #[test]
 fn sw_guided_cold_run_matches_warmed_run() {
     for gpus in [8u32, 16] {
-        let cold = pod::run(&tiny(gpus, MIB)).unwrap();
-        let warm = pod::run(&warmed(gpus, MIB)).unwrap();
-        let sw = pod::run(&with_policy(gpus, MIB, generous())).unwrap();
+        let cold = run(&tiny(gpus, MIB)).unwrap();
+        let warm = run(&warmed(gpus, MIB)).unwrap();
+        let sw = run(&with_policy(gpus, MIB, generous())).unwrap();
         assert!(
             sw.completion < cold.completion,
             "{gpus} GPUs: hints must beat the cold run ({} vs {})",
@@ -92,7 +97,7 @@ fn prefetch_counters_reconcile_with_tlb_fills() {
     // stream is non-trivial; check both pod sizes of the paper's small end.
     for gpus in [8u32, 16] {
         for size in [MIB, 8 * MIB] {
-            let s = pod::run(&with_policy(gpus, size, generous())).unwrap();
+            let s = run(&with_policy(gpus, size, generous())).unwrap();
             assert!(s.prefetch_issued > 0, "{gpus} GPUs / {size}B: no hints issued");
             assert_counters_reconcile(&s);
             assert_eq!(s.requests, s.classes.total(), "request conservation");
@@ -104,8 +109,8 @@ fn prefetch_counters_reconcile_with_tlb_fills() {
 fn rate_cap_paces_but_preserves_results() {
     // A tight rate cap defers hints yet every page is still covered and
     // the run conserves; pacing must only affect timing.
-    let free = pod::run(&with_policy(16, 8 * MIB, generous())).unwrap();
-    let paced = pod::run(&with_policy(
+    let free = run(&with_policy(16, 8 * MIB, generous())).unwrap();
+    let paced = run(&with_policy(
         16,
         8 * MIB,
         PrefetchPolicy::SwGuided { lead_ps: us(50), rate: 1 },
@@ -121,9 +126,9 @@ fn rate_cap_paces_but_preserves_results() {
 fn fused_policy_tracks_sw_guided_at_small_sizes() {
     // At op start the fused prologue and a generous-lead hint stream are
     // the same schedule; both must land near each other and beat cold.
-    let cold = pod::run(&tiny(16, MIB)).unwrap();
-    let sw = pod::run(&with_policy(16, MIB, generous())).unwrap();
-    let fused = pod::run(&with_policy(16, MIB, PrefetchPolicy::Fused)).unwrap();
+    let cold = run(&tiny(16, MIB)).unwrap();
+    let sw = run(&with_policy(16, MIB, generous())).unwrap();
+    let fused = run(&with_policy(16, MIB, PrefetchPolicy::Fused)).unwrap();
     assert!(fused.completion < cold.completion);
     assert_counters_reconcile(&fused);
     let rel = (fused.completion as f64 - sw.completion as f64).abs() / sw.completion as f64;
@@ -140,10 +145,10 @@ fn diminishing_returns_at_large_sizes() {
         if let Some(p) = policy {
             c.trans.prefetch_policy = p;
         }
-        let b = pod::run(&c).unwrap();
+        let b = run(&c).unwrap();
         let mut ic = tiny(16, size);
         ic.trans.enabled = false;
-        let i = pod::run(&ic).unwrap();
+        let i = run(&ic).unwrap();
         b.completion as f64 / i.completion as f64
     };
     let small_base = overhead(MIB, None);

@@ -1,0 +1,227 @@
+//! `SimSession` semantics — the contracts the API redesign promises:
+//!
+//! * stepping (`step` / `run_until`) then finishing is **bit-identical**
+//!   to an uninterrupted run, across engine policies;
+//! * the default session reproduces the deprecated `run_*` shims
+//!   bit-for-bit (the shims delegate to it, and the preset grid pins the
+//!   numbers against the pre-redesign expectations in `integration.rs` /
+//!   `engine_diff.rs`);
+//! * observers see monotonically non-decreasing timestamps on `on_event`
+//!   and `on_request_done` (and the dispatch clock never outruns them);
+//! * attaching a no-op observer causes zero stat drift;
+//! * mid-run snapshots don't perturb the run.
+
+use ratsim::collective::alltoall_allpairs;
+use ratsim::config::presets::quick_test;
+use ratsim::config::{EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing};
+use ratsim::pod::{
+    NoopObserver, Observer, RequestView, SessionBuilder, SessionEvent, TranslationEvent,
+};
+use ratsim::stats::RunStats;
+use ratsim::util::units::{Time, MIB};
+use std::sync::{Arc, Mutex};
+
+fn tiny(gpus: u32, size: u64) -> PodConfig {
+    let mut c = quick_test(gpus, size);
+    c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 5_000 };
+    c
+}
+
+/// Full-field equality, `wall_seconds` excepted (host timing).
+fn assert_identical(a: &RunStats, b: &RunStats, label: &str) {
+    assert_eq!(a.completion, b.completion, "{label}: completion");
+    assert_eq!(a.requests, b.requests, "{label}: requests");
+    assert_eq!(a.internode_requests, b.internode_requests, "{label}: internode");
+    assert_eq!(a.breakdown, b.breakdown, "{label}: breakdown");
+    assert_eq!(a.classes, b.classes, "{label}: classes");
+    assert_eq!(a.rat_hist, b.rat_hist, "{label}: rat histogram");
+    assert_eq!(a.rtt_hist, b.rtt_hist, "{label}: rtt histogram");
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+    assert_eq!(a.events, b.events, "{label}: events");
+    assert_eq!(a.walks_started, b.walks_started, "{label}: walks");
+    assert_eq!(a.mshr_full_stalls, b.mshr_full_stalls, "{label}: stalls");
+    assert_eq!(a.prefetch_issued, b.prefetch_issued, "{label}: prefetch issued");
+    assert_eq!(a.l2_fills, b.l2_fills, "{label}: l2 fills");
+    assert_eq!(a.cross_job_l1_evictions, b.cross_job_l1_evictions, "{label}: xjob l1");
+    assert_eq!(a.cross_job_l2_evictions, b.cross_job_l2_evictions, "{label}: xjob l2");
+    assert_eq!(a.jobs.len(), b.jobs.len(), "{label}: job count");
+    for (x, y) in a.jobs.iter().zip(&b.jobs) {
+        assert_eq!(x.name, y.name, "{label}: job name");
+        assert_eq!(x.arrival, y.arrival, "{label}: job arrival");
+        assert_eq!(x.completion, y.completion, "{label}: job completion");
+        assert_eq!(x.requests, y.requests, "{label}: job requests");
+        assert_eq!(x.rtt_hist, y.rtt_hist, "{label}: job rtt histogram");
+        assert_eq!(x.rat_hist, y.rat_hist, "{label}: job rat histogram");
+    }
+}
+
+fn straight_run(cfg: &PodConfig) -> RunStats {
+    SessionBuilder::new(cfg).build().unwrap().run_to_completion()
+}
+
+#[test]
+fn run_until_then_completion_is_bit_identical_to_straight_run() {
+    for (label, mut cfg) in [
+        ("baseline", tiny(8, 4 * MIB)),
+        ("traced", tiny(16, MIB)),
+        ("sw-guided", tiny(16, 8 * MIB)),
+    ] {
+        if label == "traced" {
+            cfg.workload.trace_source_gpu = Some(0);
+        }
+        if label == "sw-guided" {
+            cfg.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+        }
+        let straight = straight_run(&cfg);
+        // Epoch-stepped replay: several run_until cuts, snapshots taken
+        // at each cut (they must not perturb), then run to completion.
+        let mut session = SessionBuilder::new(&cfg).build().unwrap();
+        let quarter = (straight.completion / 4).max(1);
+        for k in 1..=3u64 {
+            session.run_until(quarter * k);
+            let snap = session.snapshot();
+            assert_eq!(snap.requests, straight.requests, "{label}: snapshot totals");
+        }
+        let stepped = session.run_to_completion();
+        assert_identical(&straight, &stepped, label);
+    }
+}
+
+#[test]
+fn single_stepping_is_bit_identical_too() {
+    let cfg = tiny(8, MIB);
+    let straight = straight_run(&cfg);
+    let mut session = SessionBuilder::new(&cfg).build().unwrap();
+    for _ in 0..500 {
+        assert!(session.step().is_some(), "run too short for the stepping test");
+    }
+    let stepped = session.run_to_completion();
+    assert_identical(&straight, &stepped, "single-step");
+}
+
+#[test]
+fn stepping_matches_across_engine_policies() {
+    // The engine-policy × stepping matrix: per-hop stepped == per-hop
+    // straight, and (events aside) == fused straight.
+    let mut cfg = tiny(8, 4 * MIB);
+    cfg.engine = EnginePolicy::PerHop;
+    let straight = straight_run(&cfg);
+    let mut session = SessionBuilder::new(&cfg).build().unwrap();
+    session.run_until(straight.completion / 2);
+    let stepped = session.run_to_completion();
+    assert_identical(&straight, &stepped, "per-hop stepped");
+    let fused = SessionBuilder::new(&cfg).engine(EnginePolicy::Fused).build().unwrap().run_to_completion();
+    assert_eq!(fused.completion, stepped.completion, "cross-engine completion");
+    assert_eq!(fused.classes, stepped.classes, "cross-engine classes");
+    assert!(stepped.events > fused.events, "per-hop must cost more events");
+}
+
+#[test]
+fn deprecated_shims_delegate_to_the_default_session() {
+    // The acceptance pin: shim output == default-session output, for the
+    // plain, schedule, and workload entry points.
+    let cfg = tiny(8, MIB);
+    #[allow(deprecated)]
+    let shim = ratsim::pod::run(&cfg).unwrap();
+    assert_identical(&shim, &straight_run(&cfg), "run shim");
+
+    let sched = alltoall_allpairs(8, MIB).unwrap();
+    #[allow(deprecated)]
+    let shim = ratsim::pod::run_schedule(&cfg, sched.clone()).unwrap();
+    let session = SessionBuilder::new(&cfg)
+        .schedule(sched.clone())
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_identical(&shim, &session, "run_schedule shim");
+
+    let w = ratsim::collective::workload::Workload::single(sched);
+    #[allow(deprecated)]
+    let shim = ratsim::pod::run_workload(&cfg, w.clone()).unwrap();
+    let session =
+        SessionBuilder::new(&cfg).workload(w).build().unwrap().run_to_completion();
+    assert_identical(&shim, &session, "run_workload shim");
+}
+
+/// Records every hook's timestamps into shared vectors.
+#[derive(Clone)]
+struct TimestampProbe {
+    events: Arc<Mutex<Vec<Time>>>,
+    done: Arc<Mutex<Vec<Time>>>,
+    translations: Arc<Mutex<Vec<Time>>>,
+}
+
+impl TimestampProbe {
+    fn new() -> Self {
+        Self {
+            events: Arc::new(Mutex::new(Vec::new())),
+            done: Arc::new(Mutex::new(Vec::new())),
+            translations: Arc::new(Mutex::new(Vec::new())),
+        }
+    }
+}
+
+impl Observer for TimestampProbe {
+    fn on_event(&mut self, now: Time, _ev: &SessionEvent) {
+        self.events.lock().unwrap().push(now);
+    }
+    fn on_translation(&mut self, at: Time, _req: &RequestView, _tr: &TranslationEvent) {
+        self.translations.lock().unwrap().push(at);
+    }
+    fn on_request_done(&mut self, now: Time, _req: &RequestView) {
+        self.done.lock().unwrap().push(now);
+    }
+}
+
+#[test]
+fn observer_timestamps_are_monotonically_non_decreasing() {
+    let mut cfg = tiny(8, 4 * MIB);
+    // Warmup fills + hint streams give on_event a rich mix of sources.
+    cfg.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+    let probe = TimestampProbe::new();
+    let stats =
+        SessionBuilder::new(&cfg).observe(probe.clone()).build().unwrap().run_to_completion();
+    let assert_sorted = |name: &str, v: &[Time]| {
+        assert!(!v.is_empty(), "{name}: hook never fired");
+        assert!(v.windows(2).all(|w| w[0] <= w[1]), "{name}: timestamps went backwards");
+    };
+    assert_sorted("on_event", &probe.events.lock().unwrap()[..]);
+    assert_sorted("on_request_done", &probe.done.lock().unwrap()[..]);
+    // Every request produces exactly one translation and one completion.
+    assert_eq!(probe.done.lock().unwrap().len() as u64, stats.requests);
+    assert_eq!(probe.translations.lock().unwrap().len() as u64, stats.requests);
+    // The last ACK is the run's completion time.
+    assert_eq!(*probe.done.lock().unwrap().last().unwrap(), stats.completion);
+}
+
+#[test]
+fn noop_observer_adds_zero_stat_drift() {
+    let cfg = tiny(8, 4 * MIB);
+    let plain = straight_run(&cfg);
+    let observed = SessionBuilder::new(&cfg)
+        .observe(NoopObserver)
+        .observe(NoopObserver)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_identical(&plain, &observed, "noop drift");
+}
+
+#[test]
+fn early_exit_snapshot_reports_partial_progress() {
+    let cfg = tiny(8, 4 * MIB);
+    let total = straight_run(&cfg);
+    let mut session = SessionBuilder::new(&cfg).build().unwrap();
+    session.run_until(total.completion / 3);
+    assert!(!session.done());
+    let snap = session.snapshot();
+    assert!(snap.classes.total() > 0, "some requests resolved by t/3");
+    assert!(
+        snap.classes.total() < total.requests,
+        "an early-exit snapshot must be partial"
+    );
+    assert_eq!(snap.requests, total.requests, "planned totals are always reported");
+    assert!(snap.completion <= total.completion);
+    // Dropping the session here is the early-exit path: no asserts fire.
+    drop(session);
+}

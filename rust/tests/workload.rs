@@ -5,12 +5,12 @@
 //! percentiles and cross-job TLB-interference counters.
 
 use ratsim::collective::workload::{arrival_offsets, Workload, WorkloadBuilder};
-use ratsim::collective::{alltoall_allpairs, moe_alltoall_skewed};
+use ratsim::collective::{alltoall_allpairs, moe_alltoall_skewed, Schedule};
 use ratsim::config::presets::quick_test;
 use ratsim::config::{
     ArrivalSpec, CollectiveKind, JobKind, JobTemplate, PodConfig, RequestSizing, WorkloadSpec,
 };
-use ratsim::pod;
+use ratsim::pod::SessionBuilder;
 use ratsim::stats::RunStats;
 use ratsim::util::units::{us, MIB};
 
@@ -18,6 +18,16 @@ fn tiny(gpus: u32, size: u64) -> PodConfig {
     let mut c = quick_test(gpus, size);
     c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 8_000 };
     c
+}
+
+/// Session-backed run of an explicit schedule.
+fn run_schedule(cfg: &PodConfig, schedule: Schedule) -> anyhow::Result<RunStats> {
+    Ok(SessionBuilder::new(cfg).schedule(schedule).build()?.run_to_completion())
+}
+
+/// Session-backed run of a merged multi-tenant workload.
+fn run_workload(cfg: &PodConfig, workload: Workload) -> anyhow::Result<RunStats> {
+    Ok(SessionBuilder::new(cfg).workload(workload).build()?.run_to_completion())
 }
 
 /// The acceptance workload: 2 small closed-loop decode tenants + 2 large
@@ -54,9 +64,9 @@ fn n1_multi_tenant_run_is_bit_identical_to_single_schedule_path() {
     // coincide for a generated All-to-All), same event order.
     let cfg = tiny(16, MIB);
     let sched = alltoall_allpairs(16, MIB).unwrap();
-    let single = pod::run_schedule(&cfg, sched.clone()).unwrap();
-    let wrapped = pod::run_workload(&cfg, Workload::single(sched.clone())).unwrap();
-    let built = pod::run_workload(
+    let single = run_schedule(&cfg, sched.clone()).unwrap();
+    let wrapped = run_workload(&cfg, Workload::single(sched.clone())).unwrap();
+    let built = run_workload(
         &cfg,
         WorkloadBuilder::new("solo", 16)
             .align(cfg.trans.page_bytes)
@@ -116,7 +126,7 @@ fn identical_seeds_give_bit_identical_arrivals_different_seeds_do_not() {
 
 fn run_acceptance(cfg: &PodConfig) -> RunStats {
     let w = Workload::from_spec(&decode_prefill_4job(), 64, cfg.trans.page_bytes).unwrap();
-    pod::run_workload(cfg, w).unwrap()
+    run_workload(cfg, w).unwrap()
 }
 
 #[test]
@@ -180,7 +190,7 @@ fn moe_skew_routes_interference_to_hot_experts() {
     let hot = *windows.iter().max().unwrap();
     let cold = *windows.iter().min().unwrap();
     assert!(hot > 2 * cold.max(1), "skew lost in the merge: {windows:?}");
-    let s = pod::run_workload(&cfg, w).unwrap();
+    let s = run_workload(&cfg, w).unwrap();
     assert_eq!(s.jobs.len(), 2);
     assert!(s.completion > 0);
     assert_eq!(s.jobs.iter().map(|j| j.requests).sum::<u64>(), s.requests);
@@ -201,14 +211,14 @@ fn tenants_interfere_where_a_lone_tenant_does_not() {
         .job("b", sched.clone(), 0)
         .build()
         .unwrap();
-    let s = pod::run_workload(&cfg, overlapped).unwrap();
+    let s = run_workload(&cfg, overlapped).unwrap();
     assert!(
         s.cross_job_l2_evictions > 0,
         "synchronized tenants over a 4-entry L2 must cross-evict"
     );
     // The MoE generator reaches the same counters through from_spec.
     assert_eq!(s.jobs.len(), 2);
-    let lone = pod::run_schedule(&cfg, sched).unwrap();
+    let lone = run_schedule(&cfg, sched).unwrap();
     assert_eq!(lone.cross_job_l2_evictions, 0);
     assert!(
         s.jobs.iter().map(|j| j.latency()).max().unwrap() >= lone.completion,
@@ -223,7 +233,7 @@ fn moe_generator_survives_the_full_loop() {
     for seed in [1u64, 2] {
         let sched = moe_alltoall_skewed(8, 4 * MIB, 1.5, seed).unwrap();
         let cfg = tiny(8, 4 * MIB);
-        let stats = pod::run_schedule(&cfg, sched).unwrap();
+        let stats = run_schedule(&cfg, sched).unwrap();
         assert!(stats.completion > 0);
         assert_eq!(stats.jobs.len(), 1);
     }
