@@ -20,7 +20,7 @@
 mod bench_common;
 
 use ratsim::config::presets::paper_baseline;
-use ratsim::config::{EnginePolicy, PodConfig, RequestSizing};
+use ratsim::config::{EnginePolicy, PodConfig, RequestSizing, TopologySpec};
 use ratsim::pod::SessionBuilder;
 use ratsim::sim::{EventQueue, TimingWheel};
 use ratsim::stats::RunStats;
@@ -125,13 +125,25 @@ fn main() {
     // engine — the default), plus a single per-hop reference run each so
     // the fusion speedup is visible in-place.
     print_header("pod simulation throughput (events/second, fused engine)");
-    for (name, gpus, size_mib, reqs) in [
-        ("pod_16gpu_1MiB_full_fidelity", 16u32, 1u64, 0u64),
-        ("pod_16gpu_64MiB_500k_reqs", 16, 64, 500_000),
-        ("pod_64gpu_16MiB_500k_reqs", 64, 16, 500_000),
-        ("pod_256gpu_16MiB_500k_reqs", 256, 16, 500_000),
+    for (name, gpus, size_mib, reqs, topology) in [
+        ("pod_16gpu_1MiB_full_fidelity", 16u32, 1u64, 0u64, TopologySpec::RailClos),
+        ("pod_16gpu_64MiB_500k_reqs", 16, 64, 500_000, TopologySpec::RailClos),
+        ("pod_64gpu_16MiB_500k_reqs", 64, 16, 500_000, TopologySpec::RailClos),
+        ("pod_256gpu_16MiB_500k_reqs", 256, 16, 500_000, TopologySpec::RailClos),
+        // The fabric-layer workloads: the same 64-GPU cell on the
+        // multi-tier topologies (4-serializing-hop cross-pod chains /
+        // the shared spine tier).
+        ("pod_64gpu_2pod_16MiB_500k_reqs", 64, 16, 500_000, TopologySpec::multi_pod_default()),
+        (
+            "pod_64gpu_leafspine_16MiB_500k_reqs",
+            64,
+            16,
+            500_000,
+            TopologySpec::leaf_spine_default(),
+        ),
     ] {
         let mut pc = paper_baseline(gpus, size_mib * (1 << 20));
+        pc.topology = topology;
         let target = if quick() {
             Some(30_000)
         } else if reqs > 0 {

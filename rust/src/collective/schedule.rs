@@ -85,9 +85,9 @@ impl Schedule {
     /// the destination working set), deps acyclic and in-range,
     /// destination regions non-overlapping per (dst).
     pub fn validate(&self) -> Result<()> {
-        if self.gpus < 2 {
-            bail!("schedule needs >= 2 GPUs");
-        }
+        // Unified with `PodConfig::validate` / `net::Topology::new`: ≥ 2
+        // GPUs, ids pack into u16.
+        crate::config::validate_gpu_count(self.gpus)?;
         for (i, op) in self.ops.iter().enumerate() {
             if op.id != i as u32 {
                 bail!("op ids must be dense and ordered (op {i} has id {})", op.id);
@@ -218,6 +218,18 @@ mod tests {
     #[test]
     fn validate_accepts_good_schedule() {
         sched(vec![op(0, 0, 1, 0, 10, None), op(1, 1, 0, 0, 10, None)]).validate().unwrap();
+    }
+
+    #[test]
+    fn validate_rejects_out_of_range_gpu_counts() {
+        // Unified guard: < 2 GPUs and > 65535 GPUs (ids pack into u16)
+        // are rejected with the same errors as `PodConfig::validate`.
+        let mut s = sched(vec![op(0, 0, 1, 0, 10, None)]);
+        s.gpus = 1;
+        assert!(s.validate().is_err(), "single-GPU schedule rejected");
+        s.gpus = 70_000;
+        let err = s.validate().unwrap_err();
+        assert!(err.to_string().contains("u16"), "unlabeled error: {err}");
     }
 
     #[test]

@@ -38,6 +38,7 @@ pub fn paper_baseline(gpus: u32, size_bytes: u64) -> PodConfig {
             credits: 512,
             ack_bytes: 32,
         },
+        topology: TopologySpec::RailClos,
         trans: TransConfig {
             enabled: true,
             page_bytes: 2 * MIB,

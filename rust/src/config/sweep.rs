@@ -5,7 +5,7 @@
 //! coordinator fans grid points out to worker threads.
 
 use super::presets::{paper_baseline, paper_ideal};
-use super::types::{PodConfig, PrefetchPolicy};
+use super::types::{PodConfig, PrefetchPolicy, TopologySpec};
 use crate::util::units::{fmt_bytes, GIB, MIB};
 
 /// A labelled config transformer (e.g. "l2=64" or "prefetch").
@@ -128,6 +128,42 @@ impl SweepGrid {
         Self::with_variants(gpu_counts, sizes, &variants, true)
     }
 
+    /// Re-target every grid point at `topology` (the CLI `--topology`
+    /// flag): configs get the topology plus a label suffix on non-default
+    /// fabrics so run names stay unique across topology sweeps. Variant
+    /// names are untouched — the figure pair-up logic keys on
+    /// `baseline`/`ideal` within one topology's grid.
+    pub fn on_topology(mut self, topology: TopologySpec) -> SweepGrid {
+        for p in &mut self.points {
+            p.config.topology = topology;
+            if topology != TopologySpec::default() {
+                p.config.name = format!("{}-{}", p.config.name, topology.label());
+            }
+        }
+        self
+    }
+
+    /// The topology axis: baseline + ideal pairs over
+    /// (topologies × gpus × sizes), with variants labelled
+    /// `<topology-label>/baseline` and `<topology-label>/ideal`. This is
+    /// the grid behind the extended `scale` figure — every pod size runs
+    /// on every fabric.
+    pub fn topology_baseline_vs_ideal(
+        topologies: &[TopologySpec],
+        gpu_counts: &[u32],
+        sizes: &[u64],
+    ) -> SweepGrid {
+        let mut points = Vec::new();
+        for &topo in topologies {
+            let mut grid = Self::baseline_vs_ideal(gpu_counts, sizes).on_topology(topo);
+            for p in &mut grid.points {
+                p.variant = format!("{}/{}", topo.label(), p.variant);
+            }
+            points.extend(grid.points);
+        }
+        SweepGrid { points }
+    }
+
     /// Number of grid points.
     pub fn len(&self) -> usize {
         self.points.len()
@@ -216,6 +252,45 @@ mod tests {
                 "ideal" => assert!(!p.config.trans.enabled),
                 other => panic!("unexpected variant {other}"),
             }
+        }
+    }
+
+    #[test]
+    fn topology_axis_grid_shape_and_labels() {
+        let topos = TopologySpec::catalog();
+        let g = SweepGrid::topology_baseline_vs_ideal(&topos, &[8, 16], &[MIB]);
+        assert_eq!(g.len(), 3 * 2 * 1 * 2);
+        for p in &g.points {
+            p.config.validate().unwrap();
+            let (topo_label, variant) = p.variant.split_once('/').unwrap();
+            assert_eq!(topo_label, p.config.topology.label());
+            assert_eq!(p.config.trans.enabled, variant == "baseline");
+        }
+        // Labels stay unique across the topology axis.
+        let mut labels: Vec<String> = g.points.iter().map(|p| p.label()).collect();
+        labels.sort();
+        let before = labels.len();
+        labels.dedup();
+        assert_eq!(before, labels.len());
+        // Config names are distinct per topology (non-default fabrics get
+        // the label suffix).
+        let names: std::collections::HashSet<&str> =
+            g.points.iter().map(|p| p.config.name.as_str()).collect();
+        assert_eq!(names.len(), g.len());
+    }
+
+    #[test]
+    fn on_topology_retargets_every_point() {
+        let g = SweepGrid::baseline_vs_ideal(&[8], &[MIB])
+            .on_topology(TopologySpec::leaf_spine_default());
+        for p in &g.points {
+            assert_eq!(p.config.topology, TopologySpec::leaf_spine_default());
+            assert!(p.config.name.ends_with("leaf-spine-o4"), "name: {}", p.config.name);
+        }
+        // The default topology leaves names untouched.
+        let g = SweepGrid::baseline_vs_ideal(&[8], &[MIB]).on_topology(TopologySpec::RailClos);
+        for p in &g.points {
+            assert!(!p.config.name.contains("rail-clos"), "name: {}", p.config.name);
         }
     }
 

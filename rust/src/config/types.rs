@@ -87,6 +87,220 @@ impl EnginePolicy {
     }
 }
 
+/// Fabric topology selection (see `net::fabric`): which multi-tier wiring
+/// the pod's serializing network resources are arranged into. Every
+/// topology routes a (src,dst) flow onto destination rail
+/// `(src+dst) % stations` — the station whose private L1 Link TLB
+/// translates the stream — so the reverse-translation hierarchy sees the
+/// same per-rail stream structure regardless of how many switch tiers the
+/// packets crossed to get there.
+///
+/// * `RailClos` — the paper's single-level rail Clos (§2.2): one switch
+///   per station index, a dedicated output port per (rail, dst). The
+///   default; bit-identical to the pre-fabric-layer flat network path.
+/// * `LeafSpine` — two switch tiers: per-rail leaves feed a spine tier
+///   whose uplinks and egress ports are thinned by `oversubscription`
+///   (o:1 ⇒ `gpus/o` uplinks per leaf, `stations/o` spines), so flows
+///   that would ride private rails in the Clos contend at the spine.
+/// * `MultiPod` — `pods` rail-Clos pods stitched together scale-out
+///   style: intra-pod flows take the Clos path; cross-pod flows exit via
+///   a per-rail pod-egress port onto a single serialized inter-pod uplink
+///   per ordered pod pair (`inter_pod_gbps`, `inter_pod_latency_ns`),
+///   then re-enter the destination pod's rail switch — a five-stage
+///   chain with four serializing hops (vs the pod-local two), whose
+///   destination Link TLBs see sources from every pod.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum TopologySpec {
+    /// Single-level rail Clos (the paper's Table-1 fabric; default).
+    #[default]
+    RailClos,
+    /// Oversubscribed two-tier leaf–spine.
+    LeafSpine {
+        /// Oversubscription ratio o (≥ 1): leaf uplinks and spine count
+        /// are thinned by this factor relative to the non-blocking Clos.
+        oversubscription: u32,
+    },
+    /// Multiple rail-Clos pods joined by serialized inter-pod uplinks.
+    MultiPod {
+        /// Number of equal-size pods (must divide the GPU count; ≥ 2).
+        pods: u32,
+        /// One-way inter-pod uplink latency, ns (NIC + scale-out fabric).
+        inter_pod_latency_ns: u64,
+        /// Inter-pod uplink bandwidth per ordered pod pair, Gbps.
+        inter_pod_gbps: u64,
+    },
+}
+
+impl TopologySpec {
+    /// Stable mode name used in config JSON and the CLI `--topology` flag.
+    pub fn name(&self) -> &'static str {
+        match self {
+            TopologySpec::RailClos => "rail-clos",
+            TopologySpec::LeafSpine { .. } => "leaf-spine",
+            TopologySpec::MultiPod { .. } => "multi-pod",
+        }
+    }
+
+    /// Parameter-bearing label for run names / sweep variants / tables
+    /// (`rail-clos`, `leaf-spine-o4`, `multi-pod-2x`).
+    pub fn label(&self) -> String {
+        match self {
+            TopologySpec::RailClos => "rail-clos".to_string(),
+            TopologySpec::LeafSpine { oversubscription } => {
+                format!("leaf-spine-o{oversubscription}")
+            }
+            TopologySpec::MultiPod { pods, .. } => format!("multi-pod-{pods}x"),
+        }
+    }
+
+    /// The default leaf–spine configuration used by sweeps/CLI: 4:1
+    /// oversubscription (a common deployed leaf–spine ratio).
+    pub fn leaf_spine_default() -> TopologySpec {
+        TopologySpec::LeafSpine { oversubscription: 4 }
+    }
+
+    /// The default multi-pod configuration used by sweeps/CLI: 2 pods
+    /// joined by 400 Gbps uplinks at 1 µs one-way latency (scale-out
+    /// NIC + Ethernet class, vs the pod's 300 ns UALink hops).
+    pub fn multi_pod_default() -> TopologySpec {
+        TopologySpec::MultiPod { pods: 2, inter_pod_latency_ns: 1000, inter_pod_gbps: 400 }
+    }
+
+    /// The topology axis sweeps/figures iterate: rail Clos, the default
+    /// leaf–spine, and the default multi-pod.
+    pub fn catalog() -> [TopologySpec; 3] {
+        [TopologySpec::RailClos, Self::leaf_spine_default(), Self::multi_pod_default()]
+    }
+
+    /// Parse a CLI topology name. Accepts an optional `:N` parameter —
+    /// the oversubscription ratio for `leaf-spine:N`, the pod count for
+    /// `multi-pod:N`; without it the documented defaults apply.
+    pub fn parse(s: &str) -> Result<Self> {
+        let (name, param) = match s.split_once(':') {
+            Some((n, p)) => {
+                let v: u32 = p
+                    .parse()
+                    .map_err(|_| anyhow::anyhow!("bad topology parameter `{p}` in `{s}`"))?;
+                (n, Some(v))
+            }
+            None => (s, None),
+        };
+        Ok(match name {
+            "rail-clos" | "railclos" | "clos" => {
+                if param.is_some() {
+                    bail!("rail-clos takes no parameter (got `{s}`)");
+                }
+                TopologySpec::RailClos
+            }
+            "leaf-spine" | "leafspine" => match param {
+                None => Self::leaf_spine_default(),
+                Some(o) => TopologySpec::LeafSpine { oversubscription: o },
+            },
+            "multi-pod" | "multipod" => match param {
+                None => Self::multi_pod_default(),
+                Some(p) => {
+                    let TopologySpec::MultiPod { inter_pod_latency_ns, inter_pod_gbps, .. } =
+                        Self::multi_pod_default()
+                    else {
+                        unreachable!()
+                    };
+                    TopologySpec::MultiPod { pods: p, inter_pod_latency_ns, inter_pod_gbps }
+                }
+            },
+            other => bail!("unknown topology `{other}` (rail-clos|leaf-spine[:o]|multi-pod[:pods])"),
+        })
+    }
+
+    /// Structural validation against a concrete pod size.
+    pub fn validate_for(&self, gpus: u32) -> Result<()> {
+        match *self {
+            TopologySpec::RailClos => Ok(()),
+            TopologySpec::LeafSpine { oversubscription } => {
+                if oversubscription == 0 {
+                    bail!("leaf-spine oversubscription must be >= 1");
+                }
+                Ok(())
+            }
+            TopologySpec::MultiPod { pods, inter_pod_gbps, .. } => {
+                if pods < 2 {
+                    bail!("multi-pod needs >= 2 pods (got {pods}); use rail-clos for one pod");
+                }
+                if gpus % pods != 0 {
+                    bail!("{pods} pods must divide the GPU count evenly (got {gpus} GPUs)");
+                }
+                if gpus / pods < 2 {
+                    bail!("each pod needs >= 2 GPUs (got {gpus} GPUs over {pods} pods)");
+                }
+                if inter_pod_gbps == 0 {
+                    bail!("inter-pod uplink bandwidth must be > 0");
+                }
+                Ok(())
+            }
+        }
+    }
+
+    /// Serialize to the config JSON schema (the `topology` section).
+    pub fn to_json(&self) -> Json {
+        match *self {
+            TopologySpec::RailClos => Json::from_pairs(vec![("mode", Json::from("rail-clos"))]),
+            TopologySpec::LeafSpine { oversubscription } => Json::from_pairs(vec![
+                ("mode", Json::from("leaf-spine")),
+                ("oversubscription", Json::from(oversubscription as u64)),
+            ]),
+            TopologySpec::MultiPod { pods, inter_pod_latency_ns, inter_pod_gbps } => {
+                Json::from_pairs(vec![
+                    ("mode", Json::from("multi-pod")),
+                    ("pods", Json::from(pods as u64)),
+                    ("inter_pod_latency_ns", Json::from(inter_pod_latency_ns)),
+                    ("inter_pod_gbps", Json::from(inter_pod_gbps)),
+                ])
+            }
+        }
+    }
+
+    /// Parse the `topology` config section (absent fields get the
+    /// documented defaults). Values beyond u32 range are rejected with a
+    /// labeled error, not truncated.
+    pub fn from_json(j: &Json) -> Result<TopologySpec> {
+        let ranged = |key: &str, default: u64| -> Result<u32> {
+            let v = j.opt_u64(key, default);
+            if v > u32::MAX as u64 {
+                bail!("topology `{key}` {v} is beyond u32 range");
+            }
+            Ok(v as u32)
+        };
+        Ok(match j.req_str("mode")? {
+            "rail-clos" => TopologySpec::RailClos,
+            "leaf-spine" => TopologySpec::LeafSpine {
+                oversubscription: ranged("oversubscription", 4)?,
+            },
+            "multi-pod" => TopologySpec::MultiPod {
+                pods: ranged("pods", 2)?,
+                inter_pod_latency_ns: j.opt_u64("inter_pod_latency_ns", 1000),
+                inter_pod_gbps: j.opt_u64("inter_pod_gbps", 400),
+            },
+            other => bail!("unknown topology mode `{other}`"),
+        })
+    }
+}
+
+/// Unified GPU-count guard shared by [`PodConfig::validate`],
+/// `Schedule::validate` and `net::Topology::new`: a pod needs at least
+/// two endpoints, and GPU/rail ids pack into `u16` throughout the event
+/// payloads and the request slab (§Perf), capping pods at 65535 GPUs.
+pub fn validate_gpu_count(gpus: u32) -> Result<()> {
+    if gpus < 2 {
+        bail!("need at least 2 GPUs (got {gpus})");
+    }
+    if gpus > u16::MAX as u32 {
+        bail!(
+            "pods larger than {} GPUs are not supported (got {gpus}): GPU/rail ids pack into u16",
+            u16::MAX
+        );
+    }
+    Ok(())
+}
+
 /// Remote-store request sizing. The paper does not state store granularity;
 /// `Auto` targets a bounded event count while keeping ≥64 requests per 2MB
 /// page so translation concurrency behaviour is preserved (DESIGN.md).
@@ -577,6 +791,9 @@ pub struct PodConfig {
     pub gpu: GpuConfig,
     /// UALink station/switch parameters.
     pub link: LinkConfig,
+    /// Fabric topology the network resources are arranged into (rail
+    /// Clos by default; see `net::fabric`).
+    pub topology: TopologySpec,
     /// Reverse-translation hierarchy parameters.
     pub trans: TransConfig,
     /// What the pod runs.
@@ -635,23 +852,25 @@ impl PodConfig {
 
     /// Reject structurally invalid configurations with labeled errors.
     pub fn validate(&self) -> Result<()> {
-        if self.gpus < 2 {
-            bail!("need at least 2 GPUs (got {})", self.gpus);
-        }
-        if self.gpus > u16::MAX as u32 {
-            // Event payloads and the request slab pack GPU/rail ids into
-            // u16 for queue cache density (§Perf).
-            bail!("pods larger than {} GPUs are not supported (got {})", u16::MAX, self.gpus);
-        }
+        validate_gpu_count(self.gpus)?;
         if self.gpus_per_node == 0 {
             bail!("gpus_per_node must be > 0");
         }
         if self.link.stations_per_gpu == 0 || self.link.lanes_per_station == 0 {
             bail!("station/lane counts must be > 0");
         }
+        if self.link.stations_per_gpu > u16::MAX as u32 {
+            // Rail ids pack into u16 alongside GPU ids (§Perf).
+            bail!(
+                "more than {} stations per GPU is not supported (got {})",
+                u16::MAX,
+                self.link.stations_per_gpu
+            );
+        }
         if self.link.gbps_per_lane == 0 {
             bail!("lane bandwidth must be > 0");
         }
+        self.topology.validate_for(self.gpus)?;
         if !self.trans.page_bytes.is_power_of_two() {
             bail!("page size must be a power of two (got {})", self.trans.page_bytes);
         }
@@ -734,6 +953,7 @@ impl PodConfig {
                     ("ack_bytes", Json::from(self.link.ack_bytes)),
                 ]),
             ),
+            ("topology", self.topology.to_json()),
             (
                 "trans",
                 Json::from_pairs(vec![
@@ -934,6 +1154,12 @@ impl PodConfig {
                 None => EnginePolicy::default(),
                 Some(s) => EnginePolicy::parse(s)?,
             },
+            // Optional for configs written before the fabric layer:
+            // absent ⇒ the single-level rail Clos.
+            topology: match j.get("topology") {
+                None => TopologySpec::default(),
+                Some(t) => TopologySpec::from_json(t)?,
+            },
             workload: WorkloadConfig {
                 collective: CollectiveKind::parse(wl.req_str("collective")?)?,
                 size_bytes: wl.req_u64("size_bytes")?,
@@ -1028,6 +1254,109 @@ mod tests {
         let mut j = paper_baseline(16, MIB).to_json();
         j.set("engine", Json::from("bogus"));
         assert!(PodConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_topology() {
+        for topo in [
+            TopologySpec::RailClos,
+            TopologySpec::LeafSpine { oversubscription: 8 },
+            TopologySpec::MultiPod { pods: 4, inter_pod_latency_ns: 750, inter_pod_gbps: 800 },
+        ] {
+            let mut cfg = paper_baseline(16, MIB);
+            cfg.topology = topo;
+            let back = PodConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.topology, topo);
+            assert_eq!(back, cfg);
+        }
+        // Configs written before the fabric layer still load (⇒ rail Clos).
+        let mut j = paper_baseline(16, MIB).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("topology");
+        }
+        let back = PodConfig::from_json(&j).unwrap();
+        assert_eq!(back.topology, TopologySpec::RailClos);
+        // Unknown modes are rejected, not silently defaulted.
+        let mut j = paper_baseline(16, MIB).to_json();
+        j.set("topology", Json::from_pairs(vec![("mode", Json::from("torus"))]));
+        assert!(PodConfig::from_json(&j).is_err());
+        // Out-of-u32-range parameters are rejected, not truncated.
+        let mut j = paper_baseline(16, MIB).to_json();
+        j.set(
+            "topology",
+            Json::from_pairs(vec![
+                ("mode", Json::from("multi-pod")),
+                ("pods", Json::from(u32::MAX as u64 + 3)),
+            ]),
+        );
+        assert!(PodConfig::from_json(&j).is_err(), "huge pod count must not truncate");
+    }
+
+    #[test]
+    fn topology_parse_and_labels() {
+        assert_eq!(TopologySpec::parse("rail-clos").unwrap(), TopologySpec::RailClos);
+        assert_eq!(
+            TopologySpec::parse("leaf-spine").unwrap(),
+            TopologySpec::leaf_spine_default()
+        );
+        assert_eq!(
+            TopologySpec::parse("leaf-spine:8").unwrap(),
+            TopologySpec::LeafSpine { oversubscription: 8 }
+        );
+        let TopologySpec::MultiPod { pods, .. } = TopologySpec::parse("multi-pod:4").unwrap()
+        else {
+            panic!("expected multi-pod");
+        };
+        assert_eq!(pods, 4);
+        assert!(TopologySpec::parse("torus").is_err());
+        assert!(TopologySpec::parse("rail-clos:2").is_err());
+        assert!(TopologySpec::parse("multi-pod:x").is_err());
+        assert_eq!(TopologySpec::leaf_spine_default().label(), "leaf-spine-o4");
+        assert_eq!(TopologySpec::multi_pod_default().label(), "multi-pod-2x");
+        assert_eq!(TopologySpec::RailClos.label(), "rail-clos");
+        assert_eq!(TopologySpec::catalog().len(), 3);
+    }
+
+    #[test]
+    fn topology_validation_catches_bad_shapes() {
+        let mut c = paper_baseline(16, MIB);
+        c.topology = TopologySpec::LeafSpine { oversubscription: 0 };
+        assert!(c.validate().is_err(), "zero oversubscription rejected");
+
+        let mut c = paper_baseline(16, MIB);
+        c.topology = TopologySpec::MultiPod {
+            pods: 3,
+            inter_pod_latency_ns: 1000,
+            inter_pod_gbps: 400,
+        };
+        assert!(c.validate().is_err(), "3 pods cannot split 16 GPUs evenly");
+
+        let mut c = paper_baseline(16, MIB);
+        c.topology =
+            TopologySpec::MultiPod { pods: 1, inter_pod_latency_ns: 1000, inter_pod_gbps: 400 };
+        assert!(c.validate().is_err(), "single-pod multi-pod rejected");
+
+        let mut c = paper_baseline(16, MIB);
+        c.topology =
+            TopologySpec::MultiPod { pods: 8, inter_pod_latency_ns: 1000, inter_pod_gbps: 0 };
+        assert!(c.validate().is_err(), "zero uplink bandwidth rejected");
+
+        // Every catalog topology validates on the paper's pod sizes.
+        for topo in TopologySpec::catalog() {
+            for gpus in [8, 16, 32, 64] {
+                let mut c = paper_baseline(gpus, MIB);
+                c.topology = topo;
+                c.validate().unwrap();
+            }
+        }
+    }
+
+    #[test]
+    fn gpu_count_guard_is_unified() {
+        assert!(validate_gpu_count(1).is_err());
+        assert!(validate_gpu_count(2).is_ok());
+        assert!(validate_gpu_count(65535).is_ok());
+        assert!(validate_gpu_count(65536).is_err());
     }
 
     #[test]

@@ -160,6 +160,32 @@ mod tests {
     }
 
     #[test]
+    fn topology_axis_grid_fans_out_across_fabrics() {
+        use crate::config::{SweepGrid, TopologySpec};
+        // Every fabric of the catalog runs through the worker pool; the
+        // multi-tier fabrics must cost more than the rail Clos on the
+        // same (gpus, size) cell, and per-tier books must be populated.
+        let mut grid =
+            SweepGrid::topology_baseline_vs_ideal(&TopologySpec::catalog(), &[8], &[MIB]);
+        for p in &mut grid.points {
+            p.config.workload.request_sizing =
+                RequestSizing::Auto { target_total_requests: 2_000 };
+        }
+        let results = run_grid(&grid).unwrap();
+        assert_eq!(results.len(), 3 * 2);
+        let completion = |variant: &str| -> u64 {
+            results.iter().find(|r| r.point.variant == variant).unwrap().stats.completion
+        };
+        let clos = completion("rail-clos/baseline");
+        assert!(completion("leaf-spine-o4/baseline") > clos);
+        assert!(completion("multi-pod-2x/baseline") > clos);
+        for r in &results {
+            assert!(r.stats.completion > 0);
+            assert!(!r.stats.tiers.is_empty(), "{}: tier books missing", r.point.label());
+        }
+    }
+
+    #[test]
     fn mid_grid_failure_propagates_with_point_label() {
         // A config that fails validation in the middle of the grid must
         // surface as an error naming the point — not a worker panic.

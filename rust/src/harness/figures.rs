@@ -6,7 +6,7 @@
 use super::table::Table;
 use crate::config::presets::{paper_baseline, paper_ideal};
 use crate::config::sweep::{breakdown_sizes, paper_gpu_counts, paper_sizes, scaled_gpu_counts};
-use crate::config::{PodConfig, RequestSizing, SweepGrid, SweepPoint};
+use crate::config::{PodConfig, RequestSizing, SweepGrid, SweepPoint, TopologySpec};
 use crate::coordinator::{run_grid, run_points, SweepResult};
 use crate::pod::SessionBuilder;
 use crate::stats::run::write_csv;
@@ -594,29 +594,53 @@ pub fn fig_warmup(opts: &FigOpts) -> Result<Table> {
 }
 
 /// Pod-scale sweep (beyond the paper's 64-GPU axis): baseline-vs-ideal
-/// overhead at 32–256 GPUs. Past 16 GPUs the destination rails are
-/// oversubscribed (multiple source streams share each L1 Link TLB), so
-/// this is where capacity pressure on the translation hierarchy actually
-/// grows with pod size. Request counts are capped per cell so the
-/// 256-GPU points stay CI-tolerable on the fused engine.
+/// overhead at 32–256 GPUs, on **every fabric topology** (rail Clos,
+/// oversubscribed leaf–spine, multi-pod scale-out). Past 16 GPUs the
+/// destination rails are oversubscribed (multiple source streams share
+/// each L1 Link TLB), so this is where capacity pressure on the
+/// translation hierarchy actually grows with pod size — and the
+/// topology axis shows how the same RAT pressure composes with spine
+/// contention and serialized inter-pod uplinks. Request counts are
+/// capped per cell so the 256-GPU points stay CI-tolerable on the fused
+/// engine.
 pub fn pod_scale(opts: &FigOpts) -> Result<Table> {
     let gpus = if opts.quick { vec![32, 64] } else { scaled_gpu_counts() };
     let sizes = if opts.quick { vec![MIB, 16 * MIB] } else { vec![MIB, 16 * MIB, 256 * MIB] };
-    let mut grid = SweepGrid::baseline_vs_ideal(&gpus, &sizes);
+    let mut grid =
+        SweepGrid::topology_baseline_vs_ideal(&TopologySpec::catalog(), &gpus, &sizes);
     let cap = if opts.quick { 100_000 } else { 500_000 };
     for p in &mut grid.points {
         p.config.workload.request_sizing = RequestSizing::Auto { target_total_requests: cap };
     }
     let results = run_grid(&grid)?;
+    // (topology, gpus, size) -> baseline / ideal completion.
+    let mut base: BTreeMap<(String, u32, u64), &SweepResult> = BTreeMap::new();
+    let mut ideal: BTreeMap<(String, u32, u64), f64> = BTreeMap::new();
+    for r in &results {
+        let (topo, variant) =
+            r.point.variant.split_once('/').expect("topology grid variants are <topo>/<v>");
+        let key = (topo.to_string(), r.point.gpus, r.point.size_bytes);
+        match variant {
+            "baseline" => {
+                base.insert(key, r);
+            }
+            "ideal" => {
+                ideal.insert(key, to_ns(r.stats.completion));
+            }
+            _ => {}
+        }
+    }
     let mut t = Table::new(
-        "Pod scale — RAT overhead at 32–256 GPUs (oversubscribed rails)",
-        &["gpus", "size", "overhead_x", "mean_rat_ns", "touched_pages", "events", "Mev_per_s"],
+        "Pod scale — RAT overhead at 32–256 GPUs across fabric topologies",
+        &["topology", "gpus", "size", "overhead_x", "mean_rat_ns", "touched_pages", "events", "Mev_per_s"],
     );
-    for ((gpus, size), (b, i, r)) in pair_up(&results) {
+    for ((topo, gpus, size), r) in base {
+        let i = ideal[&(topo.clone(), gpus, size)];
         t.push(vec![
+            topo,
             gpus.to_string(),
             fmt_bytes(size),
-            format!("{:.3}", b / i),
+            format!("{:.3}", to_ns(r.stats.completion) / i),
             format!("{:.1}", r.stats.mean_rat_ns()),
             r.stats.max_touched_pages.to_string(),
             r.stats.events.to_string(),
@@ -624,6 +648,74 @@ pub fn pod_scale(opts: &FigOpts) -> Result<Table> {
         ]);
     }
     t.save_csv(&opts.out_dir, "pod_scale")?;
+    Ok(t)
+}
+
+/// Fabric-tiers figure (the fabric layer's headline): the same All-to-All
+/// byte volume on all three topologies, cold (demand misses on the
+/// critical path) vs warm (§6.1 pre-translation), with the per-tier
+/// latency decomposition — mean traversal time (queueing + serialization
+/// + hop latency) and aggregate busy time per serializing tier. What it
+/// shows: the reverse-translation hierarchy sees identical per-rail
+/// streams everywhere, but on the multi-pod fabric the cold-miss penalty
+/// rides on top of serialized inter-pod uplinks, so cold-vs-warm
+/// degradation compounds with the inter-pod hop latency; the
+/// oversubscribed leaf–spine sits in between with spine-tier queueing.
+/// One cell is run twice and checked bit-identical, pinning the figure's
+/// determinism.
+pub fn fabric_tiers(opts: &FigOpts) -> Result<Table> {
+    let gpus = if opts.quick { 16 } else { 64 };
+    let size = if opts.quick { 4 * MIB } else { 16 * MIB };
+    let cap = if opts.quick { 30_000 } else { 500_000 };
+    let mut t = Table::new(
+        &format!("Fabric tiers — per-tier latency decomposition ({gpus} GPUs, {} A2A, cold vs warm)", fmt_bytes(size)),
+        &[
+            "topology",
+            "mode",
+            "tier",
+            "packets",
+            "mean_traversal_ns",
+            "busy_us",
+            "completion_ns",
+            "mean_rat_ns",
+        ],
+    );
+    for topo in TopologySpec::catalog() {
+        for (mode, warm) in [("cold", false), ("warm", true)] {
+            let mut cfg = paper_baseline(gpus, size);
+            cfg.topology = topo;
+            cfg.name = format!("fabric-tiers-{}-{mode}", topo.label());
+            cfg.workload.request_sizing =
+                RequestSizing::Auto { target_total_requests: cap };
+            if warm {
+                cfg.trans.pretranslate.enabled = true;
+                cfg.trans.pretranslate.pages_per_pair = 0;
+            }
+            let stats = SessionBuilder::new(&cfg).build()?.run_to_completion();
+            if topo == TopologySpec::RailClos && !warm {
+                // Determinism pin: the per-tier breakdown must replay
+                // bit-for-bit.
+                let again = SessionBuilder::new(&cfg).build()?.run_to_completion();
+                anyhow::ensure!(
+                    again.completion == stats.completion && again.tiers == stats.tiers,
+                    "fabric_tiers must render deterministic per-tier breakdowns"
+                );
+            }
+            for tier in &stats.tiers {
+                t.push(vec![
+                    topo.label(),
+                    mode.to_string(),
+                    tier.tier.clone(),
+                    tier.packets.to_string(),
+                    format!("{:.1}", tier.mean_traversal_ns()),
+                    format!("{:.1}", crate::util::units::to_us(tier.busy)),
+                    format!("{:.0}", to_ns(stats.completion)),
+                    format!("{:.1}", stats.mean_rat_ns()),
+                ]);
+            }
+        }
+    }
+    t.save_csv(&opts.out_dir, "fabric_tiers")?;
     Ok(t)
 }
 
@@ -750,7 +842,7 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "ablation", "design", "warmup", "warmup_decay", "scale", "tenancy",
+    "ablation", "design", "warmup", "warmup_decay", "scale", "tenancy", "fabric_tiers",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -807,6 +899,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     }
     if want("tenancy") {
         fig_tenancy(opts)?.print();
+    }
+    if want("fabric_tiers") {
+        fabric_tiers(opts)?.print();
     }
     Ok(())
 }
@@ -905,6 +1000,36 @@ mod tests {
             first >= last,
             "miss rate must decay (or hold) cold→warm: first {first} vs last {last}"
         );
+    }
+
+    #[test]
+    fn fabric_tiers_reports_every_topology() {
+        let t = fabric_tiers(&quick_opts()).unwrap();
+        // (2 rail-clos + 3 leaf-spine + 4 multi-pod tiers) × cold/warm.
+        assert_eq!(t.rows.len(), 2 * (2 + 3 + 4));
+        assert!(
+            t.rows.iter().any(|r| r[0].starts_with("multi-pod")
+                && r[2] == "inter-pod"
+                && r[3].parse::<u64>().unwrap() > 0),
+            "cross-pod traffic must show up on the inter-pod tier"
+        );
+        // §6.1 warmup can only help: warm completion <= cold, per topology.
+        for topo in ["rail-clos", "leaf-spine-o4", "multi-pod-2x"] {
+            let comp = |mode: &str| -> f64 {
+                t.rows
+                    .iter()
+                    .find(|r| r[0] == topo && r[1] == mode)
+                    .unwrap()[6]
+                    .parse()
+                    .unwrap()
+            };
+            assert!(
+                comp("warm") <= comp("cold"),
+                "{topo}: warm {} must not exceed cold {}",
+                comp("warm"),
+                comp("cold")
+            );
+        }
     }
 
     #[test]

@@ -1,6 +1,7 @@
 //! Figure/table regeneration harness: one entry point per figure of the
 //! paper's evaluation (Figs 4–11, Table 1) plus the §6 optimization
-//! ablation and the beyond-the-paper studies (pod scale, tenancy, and
+//! ablation and the beyond-the-paper studies (pod scale across fabric
+//! topologies, the per-tier `fabric_tiers` decomposition, tenancy, and
 //! the session-API warm-up-decay epoch curve, `fig_warmup`). Every
 //! function prints an aligned text table and writes a CSV under
 //! `results/`. Runs go through `pod::SessionBuilder` sessions — the

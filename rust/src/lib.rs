@@ -8,7 +8,9 @@
 //!
 //! Layers:
 //! * [`sim`] — the discrete-event kernel (Omnet++ substitute);
-//! * [`net`] — UALink stations / links / single-level Clos switches;
+//! * [`net`] — UALink stations / links and the pluggable multi-tier
+//!   fabric layer (rail Clos, oversubscribed leaf–spine, multi-pod
+//!   scale-out) behind one routing abstraction ([`net::Fabric`]);
 //! * [`trans`] + [`mem`] — the Link-MMU reverse-translation hierarchy;
 //! * [`collective`] — MSCCLang-style schedules (all-pairs All-to-All, …)
 //!   and the multi-tenant workload composer (WORKLOADS.md);

@@ -17,7 +17,7 @@ use ratsim::config::presets::{
 };
 use ratsim::config::{
     ArrivalSpec, CollectiveKind, EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing,
-    SweepGrid, WorkloadSpec,
+    SweepGrid, TopologySpec, WorkloadSpec,
 };
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
@@ -63,12 +63,15 @@ fn print_help() {
         "ratsim {} — Reverse Address Translation simulator for UALink scale-up pods\n\n\
          subcommands:\n\
          \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
+         \x20           --topology rail-clos|leaf-spine|multi-pod,\n\
          \x20           --prefetch-policy sw-guided|fused, --engine fused|per-hop, ...)\n\
          \x20 workload  simulate a multi-tenant mix (--mix uniform|decode-prefill|moe,\n\
-         \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json);\n\
-         \x20           reports per-job p50/p95/p99 + cross-job TLB interference\n\
+         \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json,\n\
+         \x20           --topology ...); reports per-job p50/p95/p99 + cross-job TLB\n\
+         \x20           interference\n\
          \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB);\n\
-         \x20           --opts for the §6 optimization ablation\n\
+         \x20           --topology retargets the grid's fabric; --opts for the §6\n\
+         \x20           optimization ablation\n\
          \x20 figures   regenerate paper figures (--only fig4,fig12 --quick --out results)\n\
          \x20 schedule  export a schedule JSON (--collective a2a --gpus 8 --size 1MiB --out s.json)\n\
          \x20 config    dump/validate configs (--dump base.json | --check cfg.json)\n",
@@ -82,6 +85,7 @@ fn common_run_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "size", help: "collective size (e.g. 1MiB, 4GB)", is_flag: false, default: Some("1MiB") },
         ArgSpec { name: "collective", help: "alltoall | allgather | allreduce-ring", is_flag: false, default: Some("alltoall") },
         ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
+        ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "config", help: "load full config from JSON (overrides other flags)", is_flag: false, default: None },
         ArgSpec { name: "requests", help: "auto request-sizing target (total requests)", is_flag: false, default: None },
         ArgSpec { name: "request-bytes", help: "fixed request size in bytes", is_flag: false, default: None },
@@ -114,6 +118,9 @@ fn build_config(a: &Args) -> Result<PodConfig> {
 }
 
 fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
+    if let Some(t) = a.get("topology") {
+        cfg.topology = TopologySpec::parse(t)?;
+    }
     if let Some(n) = a.get_u64("requests")? {
         cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
     }
@@ -221,6 +228,7 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         ArgSpec { name: "seed", help: "workload seed (arrivals + MoE routing)", is_flag: false, default: None },
         ArgSpec { name: "requests", help: "auto request-sizing target (total requests)", is_flag: false, default: None },
         ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
+        ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "save-spec", help: "also write the effective WorkloadSpec JSON here", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
     ];
@@ -283,9 +291,14 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
     let mut cfg =
         if a.flag("ideal") { paper_ideal(gpus, rep_size) } else { paper_baseline(gpus, rep_size) };
     cfg.name = format!("workload-{}-{gpus}gpu", spec.name);
+    if let Some(t) = a.get("topology") {
+        cfg.topology = TopologySpec::parse(t)?;
+        cfg.name = format!("{}-{}", cfg.name, cfg.topology.label());
+    }
     if let Some(n) = a.get_u64("requests")? {
         cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
     }
+    cfg.validate()?;
     let workload = Workload::from_spec(&spec, gpus, cfg.trans.page_bytes)?;
     log::info!(
         "running workload `{}`: {} jobs, {} total bytes",
@@ -340,6 +353,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         ArgSpec { name: "gpus", help: "comma-separated pod sizes", is_flag: false, default: Some("8,16,32,64") },
         ArgSpec { name: "sizes", help: "comma-separated collective sizes", is_flag: false, default: Some("1MiB,4MiB,16MiB,64MiB") },
         ArgSpec { name: "requests", help: "auto request-sizing target", is_flag: false, default: None },
+        ArgSpec { name: "topology", help: "retarget the grid: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "opts", help: "§6 optimization ablation grid (baseline/pretranslate/prefetch/fused/ideal)", is_flag: true, default: None },
         ArgSpec { name: "csv", help: "write results CSV here", is_flag: false, default: None },
         ArgSpec { name: "help", help: "show help", is_flag: true, default: None },
@@ -366,6 +380,13 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     } else {
         SweepGrid::baseline_vs_ideal(&gpus, &sizes)
     };
+    if let Some(t) = a.get("topology") {
+        let topo = TopologySpec::parse(t)?;
+        for p in &grid.points {
+            topo.validate_for(p.config.gpus)?;
+        }
+        grid = grid.on_topology(topo);
+    }
     if let Some(n) = a.get_u64("requests")? {
         for p in &mut grid.points {
             p.config.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };

@@ -1,0 +1,722 @@
+//! The pluggable fabric layer: multi-tier pod topologies behind one
+//! routing abstraction.
+//!
+//! A [`Fabric`] answers the two questions the event engine asks the
+//! network: *which destination rail does a (src,dst) flow ride* (the
+//! station whose private L1 Link TLB translates the stream), and *when
+//! does a packet admitted at time `t` reach each tier and finally the
+//! destination station*. The answer to the second question is a
+//! [`FabricPath`] — the deterministic multi-hop chain through tiered
+//! serializing resources ([`TierPool`]s) that the fused engine consumes
+//! in one pass: intermediate boundary times become `PerHop` marker
+//! events, the last one is the terminal arrival, and the per-segment
+//! spans feed the per-tier latency breakdown in `RunStats`.
+//!
+//! Three topologies implement the trait (hop chains per flow class):
+//!
+//! | fabric | flow | chain (serializing tiers **bold**) |
+//! |---|---|---|
+//! | [`RailClos`] | any | **station** → switch pipeline → **switch port** → dst |
+//! | [`LeafSpine`] | any | **station** → leaf pipeline → **leaf uplink** → spine pipeline → **spine port** → dst |
+//! | [`MultiPod`] | intra-pod | **station** → switch pipeline → **switch port** → dst |
+//! | [`MultiPod`] | cross-pod | **station** → switch pipeline → **pod egress** → **inter-pod uplink** → switch pipeline → **switch port** → dst |
+//!
+//! All three route onto destination rail `(src+dst) % stations`
+//! ([`Topology::rail`]), so the reverse-translation hierarchy sees the
+//! same per-rail stream structure on every fabric — what changes is how
+//! much latency, serialization and cross-flow contention the packets
+//! absorb on the way, and (for [`MultiPod`]) how many distinct source
+//! GPUs each destination Link TLB must track.
+//!
+//! `RailClos` wraps the pre-fabric-layer [`NetResources`] flat path
+//! unchanged, so the default topology stays bit-identical to the
+//! pre-refactor engine (pinned by `rust/tests/fabric.rs` and the
+//! `engine_diff`/`session` suites).
+
+use super::resources::{BoundedTierPool, NetResources, TierPool};
+use super::topology::Topology;
+use crate::config::{LinkConfig, TopologySpec};
+use crate::util::units::{ns, Time};
+use anyhow::Result;
+use std::cell::OnceCell;
+
+/// Maximum serializing segments a single flow traverses (the multi-pod
+/// cross-pod chain: station → pod egress → inter-pod uplink → switch).
+pub const MAX_PATH_SEGS: usize = 4;
+
+/// The admitted hop chain of one flow: up to [`MAX_PATH_SEGS`] segments,
+/// each `(tier id, boundary time)` where the tier id indexes
+/// [`Fabric::tiers`] and the boundary time is when the packet crosses
+/// into the next stage (the last boundary is the arrival at the
+/// destination station). Fixed-size and `Copy` — building one allocates
+/// nothing on the hot path.
+#[derive(Debug, Clone, Copy, Default)]
+pub struct FabricPath {
+    tiers: [u8; MAX_PATH_SEGS],
+    ends: [Time; MAX_PATH_SEGS],
+    len: u8,
+}
+
+impl FabricPath {
+    /// Build from `(tier id, boundary time)` segments in traversal order
+    /// (1 to [`MAX_PATH_SEGS`] of them).
+    pub fn from_segments(segs: &[(u8, Time)]) -> Self {
+        debug_assert!(!segs.is_empty() && segs.len() <= MAX_PATH_SEGS);
+        let mut p = FabricPath::default();
+        for &(tier, end) in segs {
+            p.tiers[p.len as usize] = tier;
+            p.ends[p.len as usize] = end;
+            p.len += 1;
+        }
+        p
+    }
+
+    /// Arrival time at the destination station (the final boundary).
+    #[inline]
+    pub fn arrive(&self) -> Time {
+        debug_assert!(self.len > 0);
+        self.ends[self.len as usize - 1]
+    }
+
+    /// Intermediate boundary times (everything before the arrival) — the
+    /// timestamps the `PerHop` engine materializes as marker events.
+    #[inline]
+    pub fn intermediate(&self) -> &[Time] {
+        &self.ends[..self.len as usize - 1]
+    }
+
+    /// `(tier id, boundary time)` pairs in traversal order.
+    pub fn segments(&self) -> impl Iterator<Item = (u8, Time)> + '_ {
+        (0..self.len as usize).map(move |i| (self.tiers[i], self.ends[i]))
+    }
+}
+
+/// A pod fabric: deterministic rail routing plus admission of flows
+/// through tiered serializing resources. Implementations are built by
+/// [`build_fabric`] from a validated [`TopologySpec`].
+pub trait Fabric {
+    /// Stable fabric name (matches `TopologySpec::name`).
+    fn name(&self) -> &'static str;
+
+    /// GPUs wired into the fabric.
+    fn gpus(&self) -> u32;
+
+    /// Stations (rails) per GPU.
+    fn stations_per_gpu(&self) -> u32;
+
+    /// Destination-station (= L1 Link-TLB) index of the (src,dst) flow.
+    /// Symmetric, so a request and its ACK share the rail.
+    fn rail(&self, src: u32, dst: u32) -> u32;
+
+    /// Serializing tier names in traversal order; [`FabricPath`] tier ids
+    /// index this slice.
+    fn tiers(&self) -> &'static [&'static str];
+
+    /// Number of serializing network hops a (src,dst) flow traverses
+    /// (2 for the rail Clos, 3 for leaf–spine, 2 intra-pod / 4 cross-pod
+    /// for multi-pod).
+    fn hop_count(&self, src: u32, dst: u32) -> u32;
+
+    /// Admit a flow of `bytes` entering the fabric at `t` from `from`
+    /// toward `to`, reserving every serializing resource of its chain in
+    /// one pass (decision-order admission — see [`NetResources::path`]).
+    /// Returns the per-hop boundary/arrival times the fused engine needs.
+    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath;
+
+    /// Aggregate serialization busy time per tier, aligned with
+    /// [`Fabric::tiers`] (utilization accounting for `RunStats`).
+    fn tier_busy(&self) -> Vec<Time>;
+
+    /// Sources whose flows to `dst` land on `(dst, rail)` — the stream
+    /// set one L1 Link TLB observes. Backed by per-destination tables
+    /// built once (lazily, on first access): O(1) and allocation-free
+    /// thereafter.
+    fn sources_on_rail(&self, dst: u32, rail: u32) -> &[u32];
+}
+
+/// The shared core of every fabric implementation: the validated wiring
+/// description plus the per-destination source tables
+/// ([`Fabric::sources_on_rail`]), built **once on first access** — the
+/// tables are O(gpus²) and only diagnostic consumers (figures, tests)
+/// read them, so constructing a fabric stays O(resources) and the hot
+/// path that does use them gets O(1) allocation-free slice access.
+#[derive(Debug)]
+struct FabricCore {
+    topo: Topology,
+    sources: OnceCell<Vec<Vec<u32>>>,
+}
+
+impl FabricCore {
+    fn new(gpus: u32, link: &LinkConfig) -> Result<Self> {
+        Ok(Self { topo: Topology::new(gpus, link.stations_per_gpu)?, sources: OnceCell::new() })
+    }
+
+    /// Entry `dst * stations + rail` lists the sources whose flows to
+    /// `dst` ride `rail` (lazily built from the shared rail function).
+    fn sources_on_rail(&self, dst: u32, rail: u32) -> &[u32] {
+        let tables = self.sources.get_or_init(|| {
+            let stations = self.topo.stations_per_gpu;
+            let mut tables = vec![Vec::new(); (self.topo.gpus * stations) as usize];
+            for dst in 0..self.topo.gpus {
+                for rail in 0..stations {
+                    tables[(dst * stations + rail) as usize] =
+                        self.topo.sources_on_rail(dst, rail).collect();
+                }
+            }
+            tables
+        });
+        &tables[self.topo.station_idx(dst, rail)]
+    }
+}
+
+/// Build the configured fabric for a pod of `gpus` GPUs. The spec must
+/// already be validated against the pod size (`TopologySpec::validate_for`
+/// runs inside `PodConfig::validate`); this re-checks as a cheap
+/// invariant.
+pub fn build_fabric(
+    spec: &TopologySpec,
+    gpus: u32,
+    link: &LinkConfig,
+) -> Result<Box<dyn Fabric>> {
+    spec.validate_for(gpus)?;
+    Ok(match *spec {
+        TopologySpec::RailClos => Box::new(RailClos::new(gpus, link)?),
+        TopologySpec::LeafSpine { oversubscription } => {
+            Box::new(LeafSpine::new(gpus, link, oversubscription)?)
+        }
+        TopologySpec::MultiPod { pods, inter_pod_latency_ns, inter_pod_gbps } => {
+            Box::new(MultiPod::new(gpus, link, pods, inter_pod_latency_ns, inter_pod_gbps)?)
+        }
+    })
+}
+
+// ---------- RailClos ----------
+
+/// Tier ids of the rail-Clos chain.
+const RC_STATION: u8 = 0;
+const RC_SWITCH: u8 = 1;
+
+/// The paper's single-level rail Clos (§2.2): one switch per station
+/// index, a dedicated output port per (rail, dst). Wraps the flat
+/// [`Topology`] + [`NetResources`] pair unchanged — the default fabric is
+/// bit-identical to the pre-fabric-layer network path.
+#[derive(Debug)]
+pub struct RailClos {
+    core: FabricCore,
+    net: NetResources,
+}
+
+impl RailClos {
+    /// Wire `gpus` GPUs into the single-level Clos described by `link`.
+    pub fn new(gpus: u32, link: &LinkConfig) -> Result<Self> {
+        let core = FabricCore::new(gpus, link)?;
+        let net = NetResources::new(core.topo, link);
+        Ok(Self { core, net })
+    }
+}
+
+impl Fabric for RailClos {
+    fn name(&self) -> &'static str {
+        "rail-clos"
+    }
+
+    fn gpus(&self) -> u32 {
+        self.core.topo.gpus
+    }
+
+    fn stations_per_gpu(&self) -> u32 {
+        self.core.topo.stations_per_gpu
+    }
+
+    #[inline]
+    fn rail(&self, src: u32, dst: u32) -> u32 {
+        self.core.topo.rail(src, dst)
+    }
+
+    fn tiers(&self) -> &'static [&'static str] {
+        &["station", "switch"]
+    }
+
+    fn hop_count(&self, _src: u32, _dst: u32) -> u32 {
+        2
+    }
+
+    #[inline]
+    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
+        let rail = self.core.topo.rail(from, to);
+        let (eligible, arrive) = self.net.path(from, to, rail, t, bytes);
+        FabricPath::from_segments(&[(RC_STATION, eligible), (RC_SWITCH, arrive)])
+    }
+
+    fn tier_busy(&self) -> Vec<Time> {
+        vec![self.net.station_busy_total(), self.net.switch_busy_total()]
+    }
+
+    fn sources_on_rail(&self, dst: u32, rail: u32) -> &[u32] {
+        self.core.sources_on_rail(dst, rail)
+    }
+}
+
+// ---------- LeafSpine ----------
+
+/// Tier ids of the leaf–spine chain.
+const LS_STATION: u8 = 0;
+const LS_LEAF: u8 = 1;
+const LS_SPINE: u8 = 2;
+
+/// Oversubscribed two-tier leaf–spine: per-rail leaves (leaf *k*
+/// connects station *k* of every GPU, like the Clos switches) feed a
+/// spine tier thinned by the oversubscription ratio `o` — each leaf keeps
+/// `gpus/o` uplinks (picked by `dst % uplinks`) and `stations/o` spines
+/// serve the pod (leaf *k* homes to spine `k % spines`, whose egress port
+/// toward each dst is shared by the `o` leaves homed there). At `o = 1`
+/// the wiring is non-blocking and the chain only adds the extra tier's
+/// pipeline + link latency over the rail Clos; `o > 1` creates
+/// deterministic contention at both shared tiers.
+#[derive(Debug)]
+pub struct LeafSpine {
+    core: FabricCore,
+    oversubscription: u32,
+    uplinks_per_leaf: u32,
+    spines: u32,
+    switch_latency: Time,
+    station_tx: BoundedTierPool,
+    leaf_up: TierPool,
+    spine_out: TierPool,
+}
+
+impl LeafSpine {
+    /// Wire `gpus` GPUs into a leaf–spine with the given oversubscription
+    /// ratio (≥ 1).
+    pub fn new(gpus: u32, link: &LinkConfig, oversubscription: u32) -> Result<Self> {
+        anyhow::ensure!(oversubscription >= 1, "leaf-spine oversubscription must be >= 1");
+        let core = FabricCore::new(gpus, link)?;
+        let uplinks_per_leaf = (gpus / oversubscription).max(1);
+        let spines = (link.stations_per_gpu / oversubscription).max(1);
+        let station_tx = BoundedTierPool::station_tier(&core.topo, link);
+        let leaf_up = TierPool::new(
+            (link.stations_per_gpu * uplinks_per_leaf) as usize,
+            link.station_gbps(),
+            link.link_latency(),
+        );
+        let spine_out =
+            TierPool::new((spines * gpus) as usize, link.station_gbps(), link.link_latency());
+        Ok(Self {
+            core,
+            oversubscription,
+            uplinks_per_leaf,
+            spines,
+            switch_latency: link.switch_latency(),
+            station_tx,
+            leaf_up,
+            spine_out,
+        })
+    }
+
+    /// The configured oversubscription ratio.
+    pub fn oversubscription(&self) -> u32 {
+        self.oversubscription
+    }
+
+    /// Spine uplinks per leaf (`gpus / o`, min 1).
+    pub fn uplinks_per_leaf(&self) -> u32 {
+        self.uplinks_per_leaf
+    }
+
+    /// Number of spine switches (`stations / o`, min 1).
+    pub fn spine_count(&self) -> u32 {
+        self.spines
+    }
+}
+
+impl Fabric for LeafSpine {
+    fn name(&self) -> &'static str {
+        "leaf-spine"
+    }
+
+    fn gpus(&self) -> u32 {
+        self.core.topo.gpus
+    }
+
+    fn stations_per_gpu(&self) -> u32 {
+        self.core.topo.stations_per_gpu
+    }
+
+    #[inline]
+    fn rail(&self, src: u32, dst: u32) -> u32 {
+        self.core.topo.rail(src, dst)
+    }
+
+    fn tiers(&self) -> &'static [&'static str] {
+        &["station", "leaf", "spine"]
+    }
+
+    fn hop_count(&self, _src: u32, _dst: u32) -> u32 {
+        3
+    }
+
+    #[inline]
+    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
+        let topo = &self.core.topo;
+        let rail = topo.rail(from, to);
+        // Station uplink → leaf switch (credit-bounded, + link latency).
+        let leaf_arr = self.station_tx.admit(topo.station_idx(from, rail), t, bytes);
+        let leaf_elig = leaf_arr + self.switch_latency;
+        // Leaf uplink toward its spine (+ link latency).
+        let up = (rail * self.uplinks_per_leaf + to % self.uplinks_per_leaf) as usize;
+        let spine_arr = self.leaf_up.admit(up, leaf_elig, bytes);
+        let spine_elig = spine_arr + self.switch_latency;
+        // Spine egress toward dst, shared by the leaves homed to this
+        // spine (+ link latency to the destination station).
+        let port = ((rail % self.spines) * topo.gpus + to) as usize;
+        let arrive = self.spine_out.admit(port, spine_elig, bytes);
+        FabricPath::from_segments(&[
+            (LS_STATION, leaf_elig),
+            (LS_LEAF, spine_elig),
+            (LS_SPINE, arrive),
+        ])
+    }
+
+    fn tier_busy(&self) -> Vec<Time> {
+        vec![self.station_tx.busy_total(), self.leaf_up.busy_total(), self.spine_out.busy_total()]
+    }
+
+    fn sources_on_rail(&self, dst: u32, rail: u32) -> &[u32] {
+        self.core.sources_on_rail(dst, rail)
+    }
+}
+
+// ---------- MultiPod ----------
+
+/// Tier ids of the multi-pod chains.
+const MP_STATION: u8 = 0;
+const MP_POD_EGRESS: u8 = 1;
+const MP_INTER_POD: u8 = 2;
+const MP_SWITCH: u8 = 3;
+
+/// Multiple rail-Clos pods stitched into a scale-out cluster: GPUs are
+/// split evenly into `pods`, intra-pod flows take the plain Clos chain,
+/// and cross-pod flows exit their rail switch through a per-(pod, rail,
+/// dst-pod) egress port onto a single serialized inter-pod uplink per
+/// ordered pod pair (`inter_pod_gbps`, typically far below the aggregate
+/// rail bandwidth; `inter_pod_latency` one-way), then re-enter the
+/// destination pod's rail switch — a five-stage chain (station → rail
+/// switch → pod egress → inter-pod uplink → destination rail switch →
+/// station) of which **four stages serialize**, versus the pod-local
+/// two ([`Fabric::hop_count`] counts the serializing hops). Destination
+/// Link TLBs now see source streams from every pod, so the translation
+/// working set grows with the cluster, not the pod.
+#[derive(Debug)]
+pub struct MultiPod {
+    core: FabricCore,
+    pods: u32,
+    gpus_per_pod: u32,
+    switch_latency: Time,
+    net: NetResources,
+    pod_egress: TierPool,
+    uplinks: TierPool,
+}
+
+impl MultiPod {
+    /// Wire `gpus` GPUs into `pods` equal rail-Clos pods joined by
+    /// serialized uplinks (`inter_pod_gbps`, one-way
+    /// `inter_pod_latency_ns` per traversal).
+    pub fn new(
+        gpus: u32,
+        link: &LinkConfig,
+        pods: u32,
+        inter_pod_latency_ns: u64,
+        inter_pod_gbps: u64,
+    ) -> Result<Self> {
+        anyhow::ensure!(pods >= 2, "multi-pod needs >= 2 pods");
+        anyhow::ensure!(gpus % pods == 0, "{pods} pods must divide {gpus} GPUs evenly");
+        anyhow::ensure!(gpus / pods >= 2, "each pod needs >= 2 GPUs");
+        anyhow::ensure!(inter_pod_gbps > 0, "inter-pod bandwidth must be > 0");
+        let core = FabricCore::new(gpus, link)?;
+        let stations = link.stations_per_gpu;
+        let pod_egress = TierPool::new(
+            (pods * stations * pods) as usize,
+            link.station_gbps(),
+            link.link_latency(),
+        );
+        let uplinks =
+            TierPool::new((pods * pods) as usize, inter_pod_gbps, ns(inter_pod_latency_ns));
+        let net = NetResources::new(core.topo, link);
+        Ok(Self {
+            core,
+            pods,
+            gpus_per_pod: gpus / pods,
+            switch_latency: link.switch_latency(),
+            net,
+            pod_egress,
+            uplinks,
+        })
+    }
+
+    /// Pod a GPU belongs to.
+    #[inline]
+    pub fn pod_of(&self, gpu: u32) -> u32 {
+        gpu / self.gpus_per_pod
+    }
+
+    /// Number of pods.
+    pub fn pods(&self) -> u32 {
+        self.pods
+    }
+
+    /// Does the (src,dst) flow cross a pod boundary?
+    #[inline]
+    pub fn is_cross_pod(&self, src: u32, dst: u32) -> bool {
+        self.pod_of(src) != self.pod_of(dst)
+    }
+}
+
+impl Fabric for MultiPod {
+    fn name(&self) -> &'static str {
+        "multi-pod"
+    }
+
+    fn gpus(&self) -> u32 {
+        self.core.topo.gpus
+    }
+
+    fn stations_per_gpu(&self) -> u32 {
+        self.core.topo.stations_per_gpu
+    }
+
+    #[inline]
+    fn rail(&self, src: u32, dst: u32) -> u32 {
+        self.core.topo.rail(src, dst)
+    }
+
+    fn tiers(&self) -> &'static [&'static str] {
+        &["station", "pod-egress", "inter-pod", "switch"]
+    }
+
+    fn hop_count(&self, src: u32, dst: u32) -> u32 {
+        if self.is_cross_pod(src, dst) {
+            4
+        } else {
+            2
+        }
+    }
+
+    #[inline]
+    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
+        let rail = self.core.topo.rail(from, to);
+        let (spod, dpod) = (self.pod_of(from), self.pod_of(to));
+        if spod == dpod {
+            // Intra-pod: the plain rail-Clos chain of the local pod.
+            let (eligible, arrive) = self.net.path(from, to, rail, t, bytes);
+            return FabricPath::from_segments(&[(MP_STATION, eligible), (MP_SWITCH, arrive)]);
+        }
+        // Cross-pod: station → source-pod rail switch → pod egress port →
+        // inter-pod uplink → destination-pod rail switch → dst station.
+        let sw_arr = self.net.station_to_switch(from, rail, t, bytes);
+        let egress_elig = sw_arr + self.switch_latency;
+        let egress =
+            ((spod * self.core.topo.stations_per_gpu + rail) * self.pods + dpod) as usize;
+        let up_arr = self.pod_egress.admit(egress, egress_elig, bytes);
+        let ul_arr = self.uplinks.admit((spod * self.pods + dpod) as usize, up_arr, bytes);
+        let sw2_elig = ul_arr + self.switch_latency;
+        let arrive = self.net.switch_to_station(rail, to, sw2_elig, bytes);
+        FabricPath::from_segments(&[
+            (MP_STATION, egress_elig),
+            (MP_POD_EGRESS, up_arr),
+            (MP_INTER_POD, sw2_elig),
+            (MP_SWITCH, arrive),
+        ])
+    }
+
+    fn tier_busy(&self) -> Vec<Time> {
+        vec![
+            self.net.station_busy_total(),
+            self.pod_egress.busy_total(),
+            self.uplinks.busy_total(),
+            self.net.switch_busy_total(),
+        ]
+    }
+
+    fn sources_on_rail(&self, dst: u32, rail: u32) -> &[u32] {
+        self.core.sources_on_rail(dst, rail)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::units::ser_time;
+
+    fn link() -> LinkConfig {
+        LinkConfig {
+            stations_per_gpu: 16,
+            lanes_per_station: 4,
+            gbps_per_lane: 200,
+            link_latency_ns: 300,
+            switch_latency_ns: 300,
+            credits: 64,
+            ack_bytes: 32,
+        }
+    }
+
+    const LINK: Time = 300_000; // 300 ns in ps
+    const SWITCH: Time = 300_000;
+    const SER256: Time = 2_560; // 256 B at 800 Gbps
+
+    #[test]
+    fn fabric_path_segments_roundtrip() {
+        let p = FabricPath::from_segments(&[(0, 100), (2, 250), (3, 400)]);
+        assert_eq!(p.arrive(), 400);
+        assert_eq!(p.intermediate(), &[100, 250]);
+        let segs: Vec<(u8, Time)> = p.segments().collect();
+        assert_eq!(segs, vec![(0, 100), (2, 250), (3, 400)]);
+    }
+
+    #[test]
+    fn build_fabric_dispatches_and_validates() {
+        let l = link();
+        assert_eq!(build_fabric(&TopologySpec::RailClos, 8, &l).unwrap().name(), "rail-clos");
+        assert_eq!(
+            build_fabric(&TopologySpec::leaf_spine_default(), 8, &l).unwrap().name(),
+            "leaf-spine"
+        );
+        assert_eq!(
+            build_fabric(&TopologySpec::multi_pod_default(), 8, &l).unwrap().name(),
+            "multi-pod"
+        );
+        // Invalid shapes surface as config errors.
+        assert!(build_fabric(&TopologySpec::multi_pod_default(), 9, &l).is_err());
+    }
+
+    #[test]
+    fn railclos_uncontended_chain_and_tiers() {
+        let mut f = RailClos::new(8, &link()).unwrap();
+        let p = f.path(0, 5, 0, 256);
+        // station ser + link + switch pipeline, then egress ser + link.
+        assert_eq!(p.intermediate(), &[SER256 + LINK + SWITCH]);
+        assert_eq!(p.arrive(), 2 * SER256 + 2 * LINK + SWITCH);
+        assert_eq!(f.tiers().len(), 2);
+        assert_eq!(f.tier_busy(), vec![SER256, SER256]);
+        assert_eq!(f.hop_count(0, 5), 2);
+    }
+
+    #[test]
+    fn leafspine_chain_adds_one_tier_of_latency_when_nonblocking() {
+        // o = 1: no shared resources beyond the Clos — the chain is the
+        // Clos chain plus one extra (serialization + link + pipeline).
+        let mut ls = LeafSpine::new(8, &link(), 1).unwrap();
+        assert_eq!(ls.uplinks_per_leaf(), 8);
+        assert_eq!(ls.spine_count(), 16);
+        let p = ls.path(0, 5, 0, 256);
+        assert_eq!(p.arrive(), 3 * SER256 + 3 * LINK + 2 * SWITCH);
+        assert_eq!(p.intermediate().len(), 2);
+        assert_eq!(ls.hop_count(0, 5), 3);
+
+        let mut rc = RailClos::new(8, &link()).unwrap();
+        let base = rc.path(0, 5, 0, 256);
+        assert_eq!(p.arrive() - base.arrive(), SER256 + LINK + SWITCH);
+    }
+
+    #[test]
+    fn leafspine_oversubscription_pool_math() {
+        // 16 GPUs, 16 stations, o = 4: 4 uplinks per leaf, 4 spines.
+        let ls = LeafSpine::new(16, &link(), 4).unwrap();
+        assert_eq!(ls.uplinks_per_leaf(), 4);
+        assert_eq!(ls.spine_count(), 4);
+        // Extreme oversubscription clamps to one uplink / one spine.
+        let ls = LeafSpine::new(8, &link(), 64).unwrap();
+        assert_eq!(ls.uplinks_per_leaf(), 1);
+        assert_eq!(ls.spine_count(), 1);
+    }
+
+    #[test]
+    fn leafspine_oversubscription_creates_spine_contention() {
+        // o = 16 on 16 stations ⇒ one spine: flows on different rails
+        // toward the same dst share the spine egress port and serialize.
+        let mut ls = LeafSpine::new(16, &link(), 16).unwrap();
+        // (0→7) rides rail 7, (14→7) rides rail 5 — distinct stations and
+        // leaves, same spine port toward dst 7.
+        let a = ls.path(0, 7, 0, 256);
+        let b = ls.path(14, 7, 0, 256);
+        assert_eq!(b.arrive() - a.arrive(), SER256, "spine port must serialize the pair");
+
+        // o = 1 keeps those flows on distinct spines: no contention.
+        let mut ls1 = LeafSpine::new(16, &link(), 1).unwrap();
+        let a1 = ls1.path(0, 7, 0, 256);
+        let b1 = ls1.path(14, 7, 0, 256);
+        assert_eq!(a1.arrive(), b1.arrive());
+    }
+
+    #[test]
+    fn multipod_intra_pod_is_the_clos_chain() {
+        let mut mp = MultiPod::new(8, &link(), 2, 1000, 400).unwrap();
+        let mut rc = RailClos::new(8, &link()).unwrap();
+        // GPUs 0 and 3 share pod 0.
+        assert!(!mp.is_cross_pod(0, 3));
+        let p = mp.path(0, 3, 0, 256);
+        let base = rc.path(0, 3, 0, 256);
+        assert_eq!(p.arrive(), base.arrive());
+        assert_eq!(p.intermediate(), base.intermediate());
+        assert_eq!(mp.hop_count(0, 3), 2);
+    }
+
+    #[test]
+    fn multipod_cross_pod_chain_and_hop_count() {
+        let mut mp = MultiPod::new(8, &link(), 2, 1000, 400).unwrap();
+        assert!(mp.is_cross_pod(0, 5));
+        assert_eq!(mp.hop_count(0, 5), 4);
+        let p = mp.path(0, 5, 0, 256);
+        // station ser+link+switch, egress ser+link, uplink ser (256 B at
+        // 400 Gbps = 5.12 ns) + 1 µs flight + switch, egress ser+link.
+        let uplink_ser = ser_time(256, 400);
+        assert_eq!(
+            p.arrive(),
+            3 * SER256 + uplink_ser + 3 * LINK + 2 * SWITCH + 1_000_000
+        );
+        assert_eq!(p.intermediate().len(), 3, "cross-pod flows carry 3 intermediate hops");
+        // Per-tier accounting saw all four tiers.
+        let busy = mp.tier_busy();
+        assert_eq!(busy.len(), 4);
+        assert!(busy.iter().all(|&b| b > 0));
+    }
+
+    #[test]
+    fn multipod_uplink_serializes_cross_pod_flows() {
+        // Two same-direction cross-pod flows on different rails share the
+        // (pod 0 → pod 1) uplink and serialize at its low rate; the
+        // reverse direction rides an independent uplink.
+        let mut mp = MultiPod::new(8, &link(), 2, 1000, 400).unwrap();
+        let a = mp.path(0, 5, 0, 4096);
+        let b = mp.path(1, 6, 0, 4096);
+        assert_eq!(b.arrive() - a.arrive(), ser_time(4096, 400));
+        let c = mp.path(5, 0, 0, 4096);
+        assert_eq!(c.arrive(), a.arrive(), "reverse uplink is independent");
+    }
+
+    #[test]
+    fn all_fabrics_share_the_rail_function_and_source_tables() {
+        let l = link();
+        let fabrics: Vec<Box<dyn Fabric>> = vec![
+            Box::new(RailClos::new(12, &l).unwrap()),
+            Box::new(LeafSpine::new(12, &l, 4).unwrap()),
+            Box::new(MultiPod::new(12, &l, 2, 1000, 400).unwrap()),
+        ];
+        let topo = Topology::new(12, l.stations_per_gpu).unwrap();
+        for f in &fabrics {
+            for dst in 0..12 {
+                for rail in 0..l.stations_per_gpu {
+                    let expect: Vec<u32> = topo.sources_on_rail(dst, rail).collect();
+                    assert_eq!(f.sources_on_rail(dst, rail), expect.as_slice());
+                }
+                for src in 0..12 {
+                    if src != dst {
+                        assert_eq!(f.rail(src, dst), topo.rail(src, dst));
+                        assert_eq!(f.rail(src, dst), f.rail(dst, src), "ack shares the rail");
+                    }
+                }
+            }
+            assert_eq!(f.gpus(), 12);
+            assert_eq!(f.stations_per_gpu(), 16);
+        }
+    }
+}

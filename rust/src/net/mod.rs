@@ -1,18 +1,28 @@
-//! UALink fabric model (§2.2): stations, links, single-level Clos.
+//! The pod's network layer: rail routing, tiered serializing resources,
+//! and the pluggable fabric topologies built from them.
 //!
-//! Topology: each GPU exposes `stations_per_gpu` x4 stations; switch *k*
-//! of the Clos connects station *k* of every GPU (one dedicated port per
-//! accelerator, §2.2 / Figure 1). A (src,dst) flow uses rail
-//! `(src+dst) % stations`, giving every pair a private rail at both
-//! endpoints for pods up to `stations` GPUs and an even spread beyond.
+//! Routing: each GPU exposes `stations_per_gpu` x4 stations and a
+//! (src,dst) flow rides destination rail `(src+dst) % stations`
+//! ([`Topology::rail`]), giving every pair a private rail at both
+//! endpoints for pods up to `stations` GPUs and an even spread beyond —
+//! on *every* fabric, so the reverse-translation hierarchy sees the same
+//! per-rail stream structure regardless of the wiring between the rails.
 //!
-//! Resources are analytic FIFO servers (`sim::server`): a station uplink
-//! serializes at the station's cumulative bandwidth with link-level
-//! credits; each switch output port serializes independently after the
-//! switch's pipeline latency.
+//! Resources are analytic FIFO servers (`sim::server`) grouped into
+//! per-tier pools ([`resources::TierPool`] / credit-bounded
+//! [`resources::BoundedTierPool`]): each tier serializes at a fixed rate
+//! and adds a fixed post-departure latency. The [`Fabric`] trait
+//! ([`fabric`]) admits a flow through its tier chain in one deterministic
+//! pass and hands the engine the per-hop boundary times; three
+//! implementations exist — the paper's single-level [`RailClos`] (§2.2,
+//! the default, backed by the flat [`NetResources`] path), an
+//! oversubscribed [`LeafSpine`], and a [`MultiPod`] scale-out cluster of
+//! rail-Clos pods joined by serialized inter-pod uplinks.
 
+pub mod fabric;
 pub mod resources;
 pub mod topology;
 
-pub use resources::NetResources;
+pub use fabric::{build_fabric, Fabric, FabricPath, LeafSpine, MultiPod, RailClos};
+pub use resources::{BoundedTierPool, NetResources, TierPool};
 pub use topology::Topology;

@@ -1,4 +1,15 @@
-//! The pod's shared network resources: station uplinks and switch ports.
+//! The pod's shared network resources, organized as per-tier pools of
+//! serializing FIFO servers.
+//!
+//! A [`TierPool`] is one fabric tier: `n` parallel analytic servers
+//! (`sim::server`) that serialize packets at a fixed rate and add a fixed
+//! post-departure latency (link traversal, inter-pod flight). A
+//! [`BoundedTierPool`] adds UALink-style link-level credits. Every
+//! [`super::Fabric`] implementation composes its hop chain out of these
+//! pools; [`NetResources`] is the single-tier-Clos composition (station
+//! uplinks + switch output ports) that backs [`super::RailClos`] and
+//! predates the fabric layer — it remains the flat-path reference the
+//! fabric differential tests pin against.
 //!
 //! Both directions of a flow share physical resources the way the real
 //! fabric does: a GPU's station-`k` uplink carries its outbound data *and*
@@ -10,16 +21,140 @@ use crate::config::LinkConfig;
 use crate::sim::{BoundedServer, Server};
 use crate::util::units::{ser_time, Time};
 
-/// The pod's shared serializing resources (station uplinks + switch
-/// output ports), admitted analytically in decision order.
+/// One fabric tier: a pool of parallel serializing FIFO servers sharing a
+/// rate (`gbps`) and a fixed post-departure latency (`after` — the link or
+/// uplink flight time added once the serializer releases the packet).
+#[derive(Debug)]
+pub struct TierPool {
+    gbps: u64,
+    after: Time,
+    servers: Vec<Server>,
+    admitted: u64,
+}
+
+impl TierPool {
+    /// A tier of `servers` parallel serializers at `gbps`, each adding
+    /// `after` once a packet departs.
+    pub fn new(servers: usize, gbps: u64, after: Time) -> Self {
+        Self { gbps, after, servers: (0..servers).map(|_| Server::new()).collect(), admitted: 0 }
+    }
+
+    /// Admit `bytes` at server `idx` at time `t`; returns the time the
+    /// packet **arrives at the next tier** (departure + `after`).
+    #[inline]
+    pub fn admit(&mut self, idx: usize, t: Time, bytes: u64) -> Time {
+        let (_, done) = self.servers[idx].admit(t, ser_time(bytes, self.gbps));
+        self.admitted += 1;
+        done + self.after
+    }
+
+    /// Aggregate serialization busy time across the tier's servers.
+    pub fn busy_total(&self) -> Time {
+        self.servers.iter().map(|s| s.busy_time()).sum()
+    }
+
+    /// Packets admitted at this tier so far.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Number of parallel servers in the tier.
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Is the tier empty (no servers)?
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+}
+
+/// A [`TierPool`] with credit-based flow control per server: at most
+/// `credits` packets in flight past each serializer, each holding its
+/// credit until `retire_after` past departure (the downstream drain time).
+#[derive(Debug)]
+pub struct BoundedTierPool {
+    gbps: u64,
+    after: Time,
+    retire_after: Time,
+    servers: Vec<BoundedServer>,
+    admitted: u64,
+}
+
+impl BoundedTierPool {
+    /// A credit-bounded tier: `servers` serializers at `gbps` with
+    /// `credits` link-level credits each, `after` post-departure latency,
+    /// and credits retiring `retire_after` past departure.
+    pub fn new(servers: usize, credits: usize, gbps: u64, after: Time, retire_after: Time) -> Self {
+        Self {
+            gbps,
+            after,
+            retire_after,
+            servers: (0..servers).map(|_| BoundedServer::new(credits)).collect(),
+            admitted: 0,
+        }
+    }
+
+    /// The UALink station-uplink tier: one credit-bounded serializer per
+    /// (gpu, rail) at the cumulative station rate, link latency after
+    /// departure, credits retiring when the switch drains the packet
+    /// (link + switch latency past departure). The single source of the
+    /// station-tier constants — [`NetResources`] and every multi-tier
+    /// fabric build their first hop from this, so the station behaves
+    /// identically on every topology.
+    pub fn station_tier(topo: &Topology, cfg: &LinkConfig) -> BoundedTierPool {
+        BoundedTierPool::new(
+            topo.total_stations(),
+            cfg.credits.max(1) as usize,
+            cfg.station_gbps(),
+            cfg.link_latency(),
+            cfg.link_latency() + cfg.switch_latency(),
+        )
+    }
+
+    /// Admit `bytes` at server `idx` at time `t` (stalling on exhausted
+    /// credits); returns the arrival time at the next tier.
+    #[inline]
+    pub fn admit(&mut self, idx: usize, t: Time, bytes: u64) -> Time {
+        let (_, done) = self.servers[idx].admit(t, ser_time(bytes, self.gbps), self.retire_after);
+        self.admitted += 1;
+        done + self.after
+    }
+
+    /// Aggregate serialization busy time across the tier's servers.
+    pub fn busy_total(&self) -> Time {
+        self.servers.iter().map(|s| s.busy_time()).sum()
+    }
+
+    /// Packets admitted at this tier so far.
+    pub fn admitted(&self) -> u64 {
+        self.admitted
+    }
+
+    /// Number of parallel servers in the tier.
+    pub fn len(&self) -> usize {
+        self.servers.len()
+    }
+
+    /// Is the tier empty (no servers)?
+    pub fn is_empty(&self) -> bool {
+        self.servers.is_empty()
+    }
+}
+
+/// The single-level rail Clos's shared serializing resources (station
+/// uplinks + switch output ports), admitted analytically in decision
+/// order. This is the pre-fabric-layer flat network path, kept as the
+/// engine room of [`super::RailClos`] and as the reference implementation
+/// the fabric differential tests compare against.
 #[derive(Debug)]
 pub struct NetResources {
     topo: Topology,
     cfg: LinkConfig,
     /// Station uplink serializers (credit-bounded), one per (gpu, rail).
-    station_tx: Vec<BoundedServer>,
+    station_tx: BoundedTierPool,
     /// Switch output ports, one per (rail, dst gpu).
-    switch_out: Vec<Server>,
+    switch_out: TierPool,
     /// Packets admitted at station uplinks (utilization accounting).
     pub packets_forwarded: u64,
 }
@@ -28,10 +163,9 @@ impl NetResources {
     /// Allocate one uplink server per (gpu, rail) and one output-port
     /// server per (rail, dst).
     pub fn new(topo: Topology, cfg: &LinkConfig) -> Self {
-        let station_tx = (0..topo.total_stations())
-            .map(|_| BoundedServer::new(cfg.credits.max(1) as usize))
-            .collect();
-        let switch_out = (0..topo.total_switch_ports()).map(|_| Server::new()).collect();
+        let station_tx = BoundedTierPool::station_tier(&topo, cfg);
+        let switch_out =
+            TierPool::new(topo.total_switch_ports(), cfg.station_gbps(), cfg.link_latency());
         Self { topo, cfg: cfg.clone(), station_tx, switch_out, packets_forwarded: 0 }
     }
 
@@ -53,11 +187,8 @@ impl NetResources {
     #[inline]
     pub fn station_to_switch(&mut self, gpu: u32, rail: u32, t: Time, bytes: u64) -> Time {
         let idx = self.topo.station_idx(gpu, rail);
-        let ser = self.ser(bytes);
-        let retire = self.cfg.link_latency() + self.cfg.switch_latency();
-        let (_, done) = self.station_tx[idx].admit(t, ser, retire);
         self.packets_forwarded += 1;
-        done + self.cfg.link_latency()
+        self.station_tx.admit(idx, t, bytes)
     }
 
     /// Admit a packet at switch `rail`'s output port toward `dst` at time
@@ -66,9 +197,7 @@ impl NetResources {
     #[inline]
     pub fn switch_to_station(&mut self, rail: u32, dst: u32, t: Time, bytes: u64) -> Time {
         let idx = self.topo.switch_port_idx(rail, dst);
-        let ser = self.ser(bytes);
-        let (_, done) = self.switch_out[idx].admit(t, ser);
-        done + self.cfg.link_latency()
+        self.switch_out.admit(idx, t, bytes)
     }
 
     /// Switch pipeline latency (arrival → eligible at output port).
@@ -104,12 +233,12 @@ impl NetResources {
 
     /// Aggregate busy time across all station uplinks (utilization).
     pub fn station_busy_total(&self) -> Time {
-        self.station_tx.iter().map(|s| s.busy_time()).sum()
+        self.station_tx.busy_total()
     }
 
     /// Aggregate busy time across all switch output ports.
     pub fn switch_busy_total(&self) -> Time {
-        self.switch_out.iter().map(|s| s.busy_time()).sum()
+        self.switch_out.busy_total()
     }
 }
 
@@ -131,7 +260,7 @@ mod tests {
 
     #[test]
     fn uncontended_path_is_latency_plus_serialization() {
-        let topo = Topology::new(8, 16);
+        let topo = Topology::new(8, 16).unwrap();
         let mut net = NetResources::new(topo, &cfg());
         // 256B at 800 Gbps = 2.56 ns = 2560 ps.
         let sw_arr = net.station_to_switch(0, 3, 0, 256);
@@ -142,7 +271,7 @@ mod tests {
 
     #[test]
     fn station_contention_serializes() {
-        let topo = Topology::new(8, 16);
+        let topo = Topology::new(8, 16).unwrap();
         let mut net = NetResources::new(topo, &cfg());
         let a = net.station_to_switch(0, 0, 0, 256);
         let b = net.station_to_switch(0, 0, 0, 256);
@@ -157,7 +286,7 @@ mod tests {
 
     #[test]
     fn switch_port_contention_from_multiple_sources() {
-        let topo = Topology::new(8, 16);
+        let topo = Topology::new(8, 16).unwrap();
         let mut net = NetResources::new(topo, &cfg());
         // Two packets from different sources arrive at rail 2 toward dst 7
         // at the same time — the port serializes them.
@@ -171,7 +300,7 @@ mod tests {
 
     #[test]
     fn fused_path_equals_manual_hop_chain() {
-        let topo = Topology::new(8, 16);
+        let topo = Topology::new(8, 16).unwrap();
         let mut a = NetResources::new(topo, &cfg());
         let mut b = NetResources::new(topo, &cfg());
         // Contended traffic: several packets through the same station and
@@ -189,7 +318,7 @@ mod tests {
 
     #[test]
     fn bandwidth_conservation() {
-        let topo = Topology::new(4, 16);
+        let topo = Topology::new(4, 16).unwrap();
         let mut net = NetResources::new(topo, &cfg());
         let n = 1000u64;
         for i in 0..n {
@@ -203,7 +332,7 @@ mod tests {
     fn credits_backpressure_station() {
         let mut c = cfg();
         c.credits = 2;
-        let topo = Topology::new(4, 16);
+        let topo = Topology::new(4, 16).unwrap();
         let mut net = NetResources::new(topo, &c);
         // Credits retire link+switch = 600ns after departure. With only 2
         // credits, the 3rd packet at t=0 stalls until the 1st retires.
@@ -212,5 +341,38 @@ mod tests {
         let c3 = net.station_to_switch(0, 0, 0, 256);
         let first_retire = (a - 300_000) + 300_000 + 300_000; // done + link + switch
         assert!(c3 - 300_000 >= first_retire, "third departure {c3} must wait for retire {first_retire}");
+    }
+
+    #[test]
+    fn tier_pool_serializes_per_server_and_counts() {
+        let mut pool = TierPool::new(4, 800, 300_000);
+        // Same server: FIFO serialization. 256B @ 800 Gbps = 2560 ps.
+        let a = pool.admit(0, 0, 256);
+        let b = pool.admit(0, 0, 256);
+        assert_eq!(a, 2_560 + 300_000);
+        assert_eq!(b - a, 2_560);
+        // Different server: independent.
+        let c = pool.admit(1, 0, 256);
+        assert_eq!(c, a);
+        assert_eq!(pool.admitted(), 3);
+        assert_eq!(pool.busy_total(), 3 * 2_560);
+        assert_eq!(pool.len(), 4);
+        assert!(!pool.is_empty());
+    }
+
+    #[test]
+    fn bounded_tier_pool_enforces_credits() {
+        // 1 credit, retire 10_000 past departure: back-to-back packets on
+        // one server are spaced by the full retire loop.
+        let mut pool = BoundedTierPool::new(2, 1, 800, 0, 10_000);
+        let a = pool.admit(0, 0, 256);
+        let b = pool.admit(0, 0, 256);
+        assert!(b >= a + 10_000, "second packet must wait for the credit ({a} -> {b})");
+        // The other server's credits are independent.
+        let c = pool.admit(1, 0, 256);
+        assert_eq!(c, a);
+        assert_eq!(pool.admitted(), 3);
+        assert_eq!(pool.len(), 2);
+        assert!(!pool.is_empty());
     }
 }

@@ -1,5 +1,7 @@
 //! Pod topology and rail routing.
 
+use anyhow::{bail, Result};
+
 /// Static description of the pod's UALink wiring.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Topology {
@@ -10,10 +12,24 @@ pub struct Topology {
 }
 
 impl Topology {
-    /// Build the wiring description (≥2 GPUs, ≥1 station).
-    pub fn new(gpus: u32, stations_per_gpu: u32) -> Self {
-        assert!(gpus >= 2 && stations_per_gpu >= 1);
-        Self { gpus, stations_per_gpu }
+    /// Build the wiring description. Rejects structurally invalid shapes
+    /// with labeled config errors instead of panicking: the GPU count
+    /// goes through the guard shared with `PodConfig::validate` and
+    /// `Schedule::validate` (≥ 2 GPUs, ids pack into u16), and the
+    /// station count must be in `1..=65535` (rail ids pack into u16 too).
+    pub fn new(gpus: u32, stations_per_gpu: u32) -> Result<Self> {
+        crate::config::validate_gpu_count(gpus)?;
+        if stations_per_gpu == 0 {
+            bail!("need at least one station per GPU");
+        }
+        if stations_per_gpu > u16::MAX as u32 {
+            bail!(
+                "more than {} stations per GPU is not supported (got {stations_per_gpu}): \
+                 rail ids pack into u16",
+                u16::MAX
+            );
+        }
+        Ok(Self { gpus, stations_per_gpu })
     }
 
     /// Number of Clos switches = number of stations per GPU (switch *k*
@@ -60,9 +76,13 @@ impl Topology {
     }
 
     /// Sources whose flows to `dst` land on `(dst, rail)` — the set of
-    /// streams a given L1 Link TLB observes.
-    pub fn sources_on_rail(&self, dst: u32, rail: u32) -> Vec<u32> {
-        (0..self.gpus).filter(|&s| s != dst && self.rail(s, dst) == rail).collect()
+    /// streams a given L1 Link TLB observes. Allocation-free: yields the
+    /// sources lazily. For O(1) repeated access, the fabric layer
+    /// precomputes per-destination tables from this iterator once at
+    /// construction ([`super::Fabric::sources_on_rail`]).
+    pub fn sources_on_rail(&self, dst: u32, rail: u32) -> impl Iterator<Item = u32> + '_ {
+        let stations = self.stations_per_gpu;
+        (0..self.gpus).filter(move |&s| s != dst && (s + dst) % stations == rail)
     }
 }
 
@@ -73,7 +93,7 @@ mod tests {
 
     #[test]
     fn rail_is_symmetric_and_in_range() {
-        let t = Topology::new(16, 16);
+        let t = Topology::new(16, 16).unwrap();
         for s in 0..16 {
             for d in 0..16 {
                 if s == d {
@@ -87,10 +107,22 @@ mod tests {
     }
 
     #[test]
+    fn invalid_shapes_are_config_errors_not_panics() {
+        // Unified with the PodConfig/Schedule guards.
+        assert!(Topology::new(1, 16).is_err(), "single GPU rejected");
+        let err = Topology::new(70_000, 16).unwrap_err();
+        assert!(err.to_string().contains("u16"), "unlabeled error: {err}");
+        assert!(Topology::new(8, 0).is_err(), "zero stations rejected");
+        assert!(Topology::new(8, 70_000).is_err(), "u16 rail-id overflow rejected");
+        Topology::new(2, 1).unwrap();
+        Topology::new(65_535, 16).unwrap();
+    }
+
+    #[test]
     fn pods_up_to_station_count_get_private_rails() {
         // With gpus <= stations, each destination receives every source on
         // a distinct station.
-        let t = Topology::new(16, 16);
+        let t = Topology::new(16, 16).unwrap();
         for d in 0..16 {
             let mut rails: Vec<u32> =
                 (0..16).filter(|&s| s != d).map(|s| t.rail(s, d)).collect();
@@ -103,18 +135,33 @@ mod tests {
     #[test]
     fn oversubscribed_pods_spread_evenly() {
         // 64 GPUs on 16 stations: 4 sources per destination rail.
-        let t = Topology::new(64, 16);
+        let t = Topology::new(64, 16).unwrap();
         for d in 0..64 {
             for r in 0..16 {
-                let n = t.sources_on_rail(d, r).len();
+                let n = t.sources_on_rail(d, r).count();
                 assert!((3..=4).contains(&n), "rail {r} at dst {d} has {n} sources");
             }
         }
     }
 
     #[test]
+    fn sources_on_rail_matches_rail_function() {
+        let t = Topology::new(24, 16).unwrap();
+        for d in 0..24 {
+            for r in 0..16 {
+                for s in t.sources_on_rail(d, r) {
+                    assert_ne!(s, d);
+                    assert_eq!(t.rail(s, d), r);
+                }
+            }
+            let total: usize = (0..16).map(|r| t.sources_on_rail(d, r).count()).sum();
+            assert_eq!(total, 23, "every source lands on exactly one rail");
+        }
+    }
+
+    #[test]
     fn source_spreads_flows_across_own_stations() {
-        let t = Topology::new(16, 16);
+        let t = Topology::new(16, 16).unwrap();
         for s in 0..16 {
             let mut rails: Vec<u32> =
                 (0..16).filter(|&d| d != s).map(|d| t.rail(s, d)).collect();
@@ -126,7 +173,7 @@ mod tests {
 
     #[test]
     fn flat_indices_are_dense_and_unique() {
-        let t = Topology::new(8, 16);
+        let t = Topology::new(8, 16).unwrap();
         let mut seen = std::collections::HashSet::new();
         for g in 0..8 {
             for r in 0..16 {
@@ -147,7 +194,7 @@ mod tests {
     fn prop_rail_in_range_any_shape() {
         let strat = PairOf(RangeU64 { lo: 2, hi: 128 }, RangeU64 { lo: 1, hi: 64 });
         check("rail-range", &strat, 200, |&(gpus, stations)| {
-            let t = Topology::new(gpus as u32, stations as u32);
+            let t = Topology::new(gpus as u32, stations as u32).unwrap();
             (0..gpus as u32).all(|s| {
                 (0..gpus as u32)
                     .filter(|&d| d != s)

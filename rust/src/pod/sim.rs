@@ -1,17 +1,20 @@
 //! The event-driven pod simulation (request lifecycle of DESIGN.md).
 //!
 //! §Perf — the fused fast path: every hop of a request's forward chain
-//! (`StationTx → SwitchOut → TargetArrive`) and response chain
-//! (`HbmDone → AckSwitchOut → AckArrive`) is a fixed latency plus
-//! analytic-server serialization, so the whole chain is computed eagerly
-//! in one pass at its decision point (issue / translation-complete) and
-//! only the terminal event is scheduled. Translation itself stays fully
-//! event-driven — L1/MSHR/L2/walker state genuinely depends on event
-//! interleaving. [`EnginePolicy::PerHop`] additionally materializes one
-//! marker event per intermediate hop at the precomputed timestamps;
-//! because both policies perform the identical model mutations in the
-//! identical order, they produce bit-identical `RunStats` (raw event
-//! count excepted) — enforced by `rust/tests/engine_diff.rs`.
+//! and response chain is a fixed latency plus analytic-server
+//! serialization, so the whole chain is computed eagerly in one pass at
+//! its decision point (issue / translation-complete) and only the
+//! terminal event is scheduled. The chain itself comes from the
+//! configured [`Fabric`] (`net::fabric`) — 2 serializing hops on the
+//! rail Clos, 3 on leaf–spine, up to 4 on cross-pod multi-pod flows —
+//! and the engine consumes whatever `Fabric::path` returns without
+//! knowing the wiring. Translation itself stays fully event-driven —
+//! L1/MSHR/L2/walker state genuinely depends on event interleaving.
+//! [`EnginePolicy::PerHop`] additionally materializes one marker event
+//! per intermediate hop at the precomputed timestamps; because both
+//! policies perform the identical model mutations in the identical
+//! order, they produce bit-identical `RunStats` (raw event count
+//! excepted) — enforced by `rust/tests/engine_diff.rs`.
 //!
 //! §API — `PodSim` is the *model*: GPUs, fabric, translation hierarchy
 //! and the event engine. All measurement lives in the [`Observer`]s a
@@ -33,8 +36,9 @@ use crate::collective::Schedule;
 use crate::config::{EnginePolicy, PodConfig, PrefetchPolicy};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
-use crate::net::{NetResources, Topology};
+use crate::net::{build_fabric, Fabric, FabricPath};
 use crate::sim::Engine;
+use crate::stats::run::TierStats;
 use crate::stats::RunStats;
 use crate::trans::class::{PrimaryOutcome, TransClass};
 use crate::trans::mshr::MshrOutcome;
@@ -100,8 +104,9 @@ pub struct PodSim {
     cfg: PodConfig,
     schedule: Schedule,
     engine: Engine<Ev>,
-    topo: Topology,
-    net: NetResources,
+    /// The configured fabric topology (`net::fabric`): rail routing plus
+    /// admission of every flow's deterministic multi-hop chain.
+    fabric: Box<dyn Fabric>,
     mmus: Vec<GpuMmu>,
     wgs: Vec<WorkGroup>,
     /// op id → ops that depend on it.
@@ -129,6 +134,10 @@ pub struct PodSim {
     pretranslated_pages: u64,
     /// Walks initiated by a prefetcher (stride or hint).
     prefetch_walks: u64,
+    /// Per-fabric-tier summed traversal time, ps (indexed by tier id).
+    tier_time: Vec<u128>,
+    /// Per-fabric-tier admitted packet counts (indexed by tier id).
+    tier_packets: Vec<u64>,
     /// Materialize per-hop marker events (EnginePolicy::PerHop)?
     per_hop: bool,
     // cached timing constants (ps)
@@ -229,8 +238,8 @@ impl PodSim {
             schedule.ops.iter().all(|o| (o.job as usize) < workload.jobs.len()),
             "schedule op carries a job tag outside the workload's job list"
         );
-        let topo = Topology::new(cfg.gpus, cfg.link.stations_per_gpu);
-        let net = NetResources::new(topo, &cfg.link);
+        let fabric = build_fabric(&cfg.topology, cfg.gpus, &cfg.link)?;
+        let tier_count = fabric.tiers().len();
 
         let mut mmus: Vec<GpuMmu> = (0..cfg.gpus)
             .map(|g| GpuMmu::new(g, cfg.seed, cfg.link.stations_per_gpu, &cfg.trans))
@@ -313,19 +322,19 @@ impl PodSim {
             .min(total_requests) as usize;
         let per_hop = cfg.engine == EnginePolicy::PerHop;
         let config_name = cfg.name.clone();
+        let gpus = cfg.gpus;
         let mut sim = PodSim {
             cfg,
             schedule,
             engine: Engine::with_capacity(peak_outstanding.max(1024)),
-            topo,
-            net,
+            fabric,
             mmus,
             wgs,
             children,
             job_arrivals,
             slab: Vec::with_capacity(peak_outstanding),
             free: Vec::with_capacity(peak_outstanding),
-            issue_seq: vec![0; topo.gpus as usize],
+            issue_seq: vec![0; gpus as usize],
             total_requests,
             acked: 0,
             completion: 0,
@@ -334,6 +343,8 @@ impl PodSim {
             config_name,
             pretranslated_pages: 0,
             prefetch_walks: 0,
+            tier_time: vec![0; tier_count],
+            tier_packets: vec![0; tier_count],
             per_hop,
             t_fabric,
             t_hbm,
@@ -375,7 +386,7 @@ impl PodSim {
             if !self.cfg.is_internode(op.src, op.dst) {
                 continue;
             }
-            let rail = self.topo.rail(op.src, op.dst);
+            let rail = self.fabric.rail(op.src, op.dst);
             let first = op.dst_offset / page_bytes;
             let last = (op.dst_offset + op.bytes - 1) / page_bytes;
             let limit = if k == 0 { u64::MAX } else { k as u64 };
@@ -448,6 +459,19 @@ impl PodSim {
         while self.step().is_some() {}
     }
 
+    /// Attribute one admitted hop chain to the per-tier books: each
+    /// segment's span (queueing + serialization + hop latency) lands on
+    /// its tier, from the fabric entry time to the final arrival.
+    #[inline]
+    fn record_traversal(&mut self, enter: Time, path: &FabricPath) {
+        let mut prev = enter;
+        for (tier, end) in path.segments() {
+            self.tier_time[tier as usize] += (end - prev) as u128;
+            self.tier_packets[tier as usize] += 1;
+            prev = end;
+        }
+    }
+
     /// Model-owned counters → `stats` (no observer contributions, no
     /// asserts — shared by mid-run snapshots and the final scrape).
     fn scrape_into(&self, stats: &mut RunStats) {
@@ -476,6 +500,19 @@ impl PodSim {
         stats.mshr_full_stalls = self.mmus.iter().map(|m| m.mshr_full_stalls()).sum();
         stats.max_touched_pages =
             self.mmus.iter().map(|m| m.page_table.touched_pages()).max().unwrap_or(0);
+        let busy = self.fabric.tier_busy();
+        stats.tiers = self
+            .fabric
+            .tiers()
+            .iter()
+            .enumerate()
+            .map(|(i, name)| TierStats {
+                tier: (*name).to_string(),
+                packets: self.tier_packets[i],
+                time: self.tier_time[i],
+                busy: busy[i],
+            })
+            .collect();
     }
 
     /// Mid-run statistics view: model scrape + every observer's
@@ -558,12 +595,13 @@ impl PodSim {
     }
 
     /// Issue one remote store at `now`, fusing its forward hop chain:
-    /// local fabric, station uplink serialization, switch pipeline and
-    /// egress serialization are all computed here in one pass, and only
-    /// the terminal `TargetArrive` is scheduled (plus `Hop` markers under
-    /// the per-hop policy). Requests that never translate — intra-node
-    /// SPA traffic (§2.3) or disabled-RAT ideal runs — fuse all the way
-    /// through the response path and cost a single `AckArrive` event.
+    /// local fabric plus every serializing tier of the configured
+    /// fabric's chain (`Fabric::path`) are computed here in one pass, and
+    /// only the terminal `TargetArrive` is scheduled (plus one `Hop`
+    /// marker per intermediate boundary under the per-hop policy).
+    /// Requests that never translate — intra-node SPA traffic (§2.3) or
+    /// disabled-RAT ideal runs — fuse all the way through the response
+    /// path and cost a single `AckArrive` event.
     fn issue_one(&mut self, now: Time, wg: u32) {
         let page_bytes = self.cfg.trans.page_bytes;
         let w = &mut self.wgs[wg as usize];
@@ -572,10 +610,12 @@ impl PodSim {
         let seq = self.issue_seq[op.src as usize];
         self.issue_seq[op.src as usize] += 1;
         debug_assert!(seq <= u32::MAX as u64, "per-source issue sequence overflows u32");
-        let rail = self.topo.rail(op.src, op.dst);
+        let rail = self.fabric.rail(op.src, op.dst);
         let internode = self.cfg.is_internode(op.src, op.dst);
         let t_tx = now + self.t_fabric;
-        let (t_switch_out, t_arrive) = self.net.path(op.src, op.dst, rail, t_tx, len);
+        let path = self.fabric.path(op.src, op.dst, t_tx, len);
+        self.record_traversal(t_tx, &path);
+        let t_arrive = path.arrive();
         let req = Request {
             page: dst_offset / page_bytes,
             issue: now,
@@ -590,7 +630,9 @@ impl PodSim {
         let rid = self.alloc(req);
         if self.per_hop {
             self.engine.schedule_at(t_tx, Ev::Hop);
-            self.engine.schedule_at(t_switch_out, Ev::Hop);
+            for &h in path.intermediate() {
+                self.engine.schedule_at(h, Ev::Hop);
+            }
         }
         if self.cfg.trans.enabled && internode {
             self.engine.schedule_at(t_arrive, Ev::TargetArrive { req: rid });
@@ -620,7 +662,7 @@ impl PodSim {
         if !self.cfg.is_internode(op.src, op.dst) {
             return;
         }
-        let rail = self.topo.rail(op.src, op.dst);
+        let rail = self.fabric.rail(op.src, op.dst);
         for (delay, h) in self.prefetcher.plan_op(&self.cfg, rail, &op) {
             self.engine.schedule_at(
                 now + delay,
@@ -904,12 +946,16 @@ impl PodSim {
         let view = self.view(req);
         let t_hbm_done = at + self.t_hbm;
         let ack = self.cfg.link.ack_bytes;
-        let (t_ack_switch_out, ack_arr) =
-            self.net.path(view.dst, view.src, view.rail, t_hbm_done, ack);
-        let t_ack = ack_arr + self.t_fabric;
+        // The ACK retraces the flow's chain in reverse (the rail function
+        // is symmetric, so both directions share the destination rail).
+        let path = self.fabric.path(view.dst, view.src, t_hbm_done, ack);
+        self.record_traversal(t_hbm_done, &path);
+        let t_ack = path.arrive() + self.t_fabric;
         if self.per_hop {
             self.engine.schedule_at(t_hbm_done, Ev::Hop);
-            self.engine.schedule_at(t_ack_switch_out, Ev::Hop);
+            for &h in path.intermediate() {
+                self.engine.schedule_at(h, Ev::Hop);
+            }
         }
         self.engine.schedule_at(t_ack, Ev::AckArrive { req });
         let tr = TranslationEvent {
@@ -1231,6 +1277,31 @@ mod tests {
         let small_pages = run(&c).unwrap();
         assert!(small_pages.walks_started > 4 * base.walks_started);
         assert!(small_pages.completion >= base.completion);
+    }
+
+    #[test]
+    fn multi_tier_topologies_complete_and_report_tiers() {
+        use crate::config::TopologySpec;
+        let base = run(&small(8, MIB)).unwrap();
+        assert_eq!(base.tiers.len(), 2, "rail Clos reports station+switch tiers");
+        assert_eq!(base.tiers[0].tier, "station");
+        assert!(base.tiers.iter().all(|t| t.packets > 0 && t.time > 0));
+
+        let mut ls = small(8, MIB);
+        ls.topology = TopologySpec::leaf_spine_default();
+        let s = run(&ls).unwrap();
+        assert_eq!(s.requests, s.classes.total());
+        assert_eq!(s.tiers.len(), 3, "leaf-spine reports station+leaf+spine tiers");
+        assert!(s.completion > base.completion, "the extra spine tier must cost time");
+
+        let mut mp = small(8, MIB);
+        mp.topology = TopologySpec::multi_pod_default();
+        let m = run(&mp).unwrap();
+        assert_eq!(m.requests, m.classes.total());
+        assert_eq!(m.tiers.len(), 4, "multi-pod reports all four tiers");
+        let inter = m.tiers.iter().find(|t| t.tier == "inter-pod").unwrap();
+        assert!(inter.packets > 0, "cross-pod traffic must ride the uplinks");
+        assert!(m.completion > base.completion, "serialized uplinks must cost time");
     }
 
     #[test]

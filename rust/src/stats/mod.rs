@@ -6,4 +6,4 @@ pub mod plot;
 pub mod run;
 
 pub use histogram::LogHistogram;
-pub use run::{LatencyBreakdown, RunStats};
+pub use run::{LatencyBreakdown, RunStats, TierStats};

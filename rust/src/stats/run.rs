@@ -40,6 +40,35 @@ impl LatencyBreakdown {
     }
 }
 
+/// One fabric tier's aggregate accounting for a run (`net::fabric`): how
+/// many packets the tier admitted (forward data + ACKs), their summed
+/// traversal time through the tier's segment of the hop chain (queueing +
+/// serialization + the tier's fixed hop latency), and the tier's
+/// aggregate serialization busy time (utilization). Model-owned — scraped
+/// from the fabric, present in snapshots and final stats alike.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TierStats {
+    /// Tier name (e.g. `station`, `switch`, `leaf`, `spine`, `pod-egress`,
+    /// `inter-pod`).
+    pub tier: String,
+    /// Packets admitted at this tier (forward data packets + ACKs).
+    pub packets: u64,
+    /// Summed per-packet traversal time through the tier's segment, ps.
+    pub time: u128,
+    /// Aggregate serialization busy time across the tier's servers, ps.
+    pub busy: Time,
+}
+
+impl TierStats {
+    /// Mean per-packet traversal time through this tier, ns.
+    pub fn mean_traversal_ns(&self) -> f64 {
+        if self.packets == 0 {
+            return 0.0;
+        }
+        to_ns((self.time / self.packets as u128) as u64)
+    }
+}
+
 /// Per-tenant-job results of a run (workload sessions). Single-schedule
 /// runs carry one entry covering the whole schedule, so the per-job view
 /// is always present.
@@ -166,6 +195,10 @@ pub struct RunStats {
     pub cross_job_l1_evictions: u64,
     /// Cross-tenant interference at the shared L2 Link TLB.
     pub cross_job_l2_evictions: u64,
+    /// Per-fabric-tier breakdown (packets, traversal time, busy time) in
+    /// tier traversal order — 2 tiers for the rail Clos, 3 for
+    /// leaf–spine, 4 for multi-pod (see `net::fabric`).
+    pub tiers: Vec<TierStats>,
 }
 
 impl RunStats {
@@ -243,6 +276,22 @@ impl RunStats {
             ("jobs", Json::Arr(self.jobs.iter().map(JobStats::to_json).collect())),
             ("cross_job_l1_evictions", Json::from(self.cross_job_l1_evictions)),
             ("cross_job_l2_evictions", Json::from(self.cross_job_l2_evictions)),
+            (
+                "tiers",
+                Json::Arr(
+                    self.tiers
+                        .iter()
+                        .map(|t| {
+                            Json::from_pairs(vec![
+                                ("tier", Json::from(t.tier.as_str())),
+                                ("packets", Json::from(t.packets)),
+                                ("mean_traversal_ns", Json::from(t.mean_traversal_ns())),
+                                ("busy_ns", Json::from(to_ns(t.busy))),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
         ])
     }
 
@@ -345,6 +394,25 @@ mod tests {
         // Completion before arrival (impossible, but don't underflow).
         let early = JobStats { arrival: 10, completion: 5, ..Default::default() };
         assert_eq!(early.latency(), 0);
+    }
+
+    #[test]
+    fn tier_stats_mean_and_json() {
+        let mut s = RunStats::default();
+        s.tiers.push(TierStats {
+            tier: "station".into(),
+            packets: 4,
+            time: ns(400) as u128,
+            busy: ns(40),
+        });
+        s.tiers.push(TierStats { tier: "inter-pod".into(), ..Default::default() });
+        assert_eq!(s.tiers[0].mean_traversal_ns(), 100.0);
+        assert_eq!(s.tiers[1].mean_traversal_ns(), 0.0, "zero-packet tier is finite");
+        let j = s.to_json();
+        let tiers = j.get("tiers").and_then(|a| a.as_arr()).unwrap();
+        assert_eq!(tiers.len(), 2);
+        assert_eq!(tiers[0].req_str("tier").unwrap(), "station");
+        assert_eq!(tiers[0].req_u64("packets").unwrap(), 4);
     }
 
     #[test]

@@ -66,6 +66,9 @@ fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
         fused.max_touched_pages, per_hop.max_touched_pages,
         "{label}: max_touched_pages"
     );
+    // Per-tier fabric accounting rides the same admissions in the same
+    // order on both engines.
+    assert_eq!(fused.tiers, per_hop.tiers, "{label}: per-tier fabric books");
     // Multi-tenant accounting rides the same model mutations.
     assert_eq!(fused.jobs.len(), per_hop.jobs.len(), "{label}: job count");
     for (f, p) in fused.jobs.iter().zip(&per_hop.jobs) {
@@ -174,6 +177,29 @@ fn traced_runs_are_bit_identical() {
     let mut c = base(16, MIB);
     c.workload.trace_source_gpu = Some(0);
     run_both(c, "traced");
+}
+
+#[test]
+fn multi_tier_topologies_are_bit_identical() {
+    // The fabric layer's chains (3 serializing hops on leaf–spine, up to
+    // 4 on multi-pod cross-pod flows) must fuse exactly like the Clos
+    // chain: per-hop markers at the precomputed boundaries, identical
+    // model mutations, identical stats.
+    use ratsim::config::TopologySpec;
+    let mut ls = base(16, 4 * MIB);
+    ls.topology = TopologySpec::leaf_spine_default();
+    run_both(ls, "leaf-spine");
+
+    let mut mp = base(16, 4 * MIB);
+    mp.topology = TopologySpec::multi_pod_default();
+    run_both(mp, "multi-pod");
+
+    // Deep multi-pod with hint streams: the richest chain × prefetch mix.
+    let mut mp4 = base(16, MIB);
+    mp4.topology =
+        TopologySpec::MultiPod { pods: 4, inter_pod_latency_ns: 500, inter_pod_gbps: 200 };
+    mp4.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+    run_both(mp4, "multi-pod-4x-sw-guided");
 }
 
 #[test]

@@ -1,0 +1,303 @@
+//! Fabric-layer correctness: the differential pinning `RailClos` (the
+//! default topology) bit-identical to the pre-refactor flat network path,
+//! plus the structural/timing tests for the multi-tier fabrics.
+//!
+//! The pre-refactor engine computed hop chains directly on
+//! `NetResources::path`. The fabric layer keeps `NetResources` as the
+//! flat reference implementation, so the pin has two layers:
+//!
+//! 1. resource level — `RailClos::path` replayed against a manually
+//!    driven `NetResources` over contended traffic must agree on every
+//!    boundary time, arrival, and busy counter;
+//! 2. session level — the full `engine_diff`-style preset ×
+//!    engine-policy grid run with `TopologySpec::RailClos` spelled out
+//!    must match the default-config run field by field (and the
+//!    pre-existing `engine_diff.rs` / `session.rs` suites continue to
+//!    pass unchanged on the refactored engine).
+
+use ratsim::collective::workload::Workload;
+use ratsim::config::presets::quick_test;
+use ratsim::config::{
+    ArrivalSpec, CollectiveKind, EnginePolicy, JobKind, JobTemplate, LinkConfig, PodConfig,
+    RequestSizing, TopologySpec, WorkloadSpec,
+};
+use ratsim::net::{build_fabric, Fabric, LeafSpine, MultiPod, NetResources, RailClos, Topology};
+use ratsim::pod::SessionBuilder;
+use ratsim::stats::RunStats;
+use ratsim::util::units::{ser_time, us, MIB};
+
+fn link() -> LinkConfig {
+    LinkConfig {
+        stations_per_gpu: 16,
+        lanes_per_station: 4,
+        gbps_per_lane: 200,
+        link_latency_ns: 300,
+        switch_latency_ns: 300,
+        credits: 64,
+        ack_bytes: 32,
+    }
+}
+
+fn base(gpus: u32, size: u64) -> PodConfig {
+    let mut c = quick_test(gpus, size);
+    c.workload.request_sizing = RequestSizing::Auto { target_total_requests: 5_000 };
+    c
+}
+
+/// Deterministic contended traffic: many flows, repeated pairs, bursts at
+/// identical timestamps, mixed sizes — every admission-order corner the
+/// engine exercises.
+fn traffic(gpus: u32) -> Vec<(u32, u32, u64, u64)> {
+    let mut flows = Vec::new();
+    let mut t = 0u64;
+    for round in 0..40u64 {
+        for src in 0..gpus {
+            let dst = (src + 1 + (round as u32 % (gpus - 1))) % gpus;
+            let bytes = [256u64, 1024, 4096][(round % 3) as usize];
+            flows.push((src, dst, t, bytes));
+            // A same-time burst onto one destination every few rounds.
+            if round % 5 == 0 {
+                flows.push(((src + 2) % gpus, dst, t, bytes));
+            }
+        }
+        t += if round % 4 == 0 { 0 } else { 700 * round };
+    }
+    flows.retain(|&(s, d, _, _)| s != d);
+    flows
+}
+
+#[test]
+fn railclos_path_matches_pre_refactor_flat_path() {
+    let l = link();
+    let mut fabric = RailClos::new(8, &l).unwrap();
+    let topo = Topology::new(8, l.stations_per_gpu).unwrap();
+    let mut flat = NetResources::new(topo, &l);
+    for (i, &(src, dst, t, bytes)) in traffic(8).iter().enumerate() {
+        let p = fabric.path(src, dst, t, bytes);
+        // The pre-refactor chain: rail → station_to_switch → pipeline →
+        // switch_to_station, admitted in the same order.
+        let rail = topo.rail(src, dst);
+        let (eligible, arrive) = flat.path(src, dst, rail, t, bytes);
+        assert_eq!(p.intermediate(), &[eligible], "flow {i}: boundary time diverged");
+        assert_eq!(p.arrive(), arrive, "flow {i}: arrival diverged");
+        assert_eq!(fabric.rail(src, dst), rail, "flow {i}: rail diverged");
+    }
+    // Utilization books agree too.
+    assert_eq!(fabric.tier_busy(), vec![flat.station_busy_total(), flat.switch_busy_total()]);
+}
+
+/// Field-by-field `RunStats` equality (wall time excepted).
+fn assert_stats_identical(a: &RunStats, b: &RunStats, label: &str) {
+    assert_eq!(a.completion, b.completion, "{label}: completion");
+    assert_eq!(a.requests, b.requests, "{label}: requests");
+    assert_eq!(a.internode_requests, b.internode_requests, "{label}: internode");
+    assert_eq!(a.breakdown, b.breakdown, "{label}: breakdown");
+    assert_eq!(a.classes, b.classes, "{label}: classes");
+    assert_eq!(a.rat_hist, b.rat_hist, "{label}: rat_hist");
+    assert_eq!(a.rtt_hist, b.rtt_hist, "{label}: rtt_hist");
+    assert_eq!(a.trace, b.trace, "{label}: trace");
+    assert_eq!(a.walks_started, b.walks_started, "{label}: walks");
+    assert_eq!(a.mshr_full_stalls, b.mshr_full_stalls, "{label}: stalls");
+    assert_eq!(a.events, b.events, "{label}: events");
+    assert_eq!(a.tiers, b.tiers, "{label}: tiers");
+}
+
+#[test]
+fn explicit_railclos_matches_default_config_across_engine_grid() {
+    // The engine_diff-style grid with the topology spelled out: the
+    // default config (pre-refactor behavior) and TopologySpec::RailClos
+    // must be the same fabric, across engine policies and the stall-heavy
+    // presets.
+    let mut grid: Vec<(PodConfig, &str)> = vec![
+        (base(8, MIB), "8gpu-1MiB"),
+        (base(16, 4 * MIB), "16gpu-4MiB"),
+    ];
+    let mut stall = base(8, 4 * MIB);
+    stall.trans.page_bytes = 64 * 1024;
+    stall.trans.l1_mshrs = 1;
+    stall.trans.l1.entries = 2;
+    grid.push((stall, "mshr-stalls"));
+    let mut traced = base(8, MIB);
+    traced.workload.trace_source_gpu = Some(0);
+    grid.push((traced, "traced"));
+
+    for (cfg, label) in grid {
+        for policy in [EnginePolicy::Fused, EnginePolicy::PerHop] {
+            let default_run = SessionBuilder::new(&cfg)
+                .engine(policy)
+                .build()
+                .unwrap()
+                .run_to_completion();
+            let mut explicit = cfg.clone();
+            explicit.topology = TopologySpec::RailClos;
+            let explicit_run = SessionBuilder::new(&explicit)
+                .engine(policy)
+                .build()
+                .unwrap()
+                .run_to_completion();
+            assert_stats_identical(
+                &default_run,
+                &explicit_run,
+                &format!("{label}/{}", policy.name()),
+            );
+        }
+    }
+}
+
+#[test]
+fn leafspine_oversubscription_math() {
+    let l = link();
+    // 16 GPUs, 16 stations: o=1 → 16 uplinks/leaf, 16 spines; o=4 → 4/4;
+    // o beyond the pool clamps to 1.
+    for (o, up, spines) in [(1u32, 16u32, 16u32), (2, 8, 8), (4, 4, 4), (64, 1, 1)] {
+        let ls = LeafSpine::new(16, &l, o).unwrap();
+        assert_eq!(ls.uplinks_per_leaf(), up, "o={o}");
+        assert_eq!(ls.spine_count(), spines, "o={o}");
+    }
+    assert!(LeafSpine::new(16, &l, 0).is_err(), "o=0 rejected");
+
+    // Two flows that share nothing at o=1 serialize behind one spine at
+    // full oversubscription (16 stations → a single spine).
+    let mut contended = LeafSpine::new(16, &l, 16).unwrap();
+    let a = contended.path(0, 7, 0, 256);
+    let b = contended.path(14, 7, 0, 256);
+    assert_eq!(b.arrive() - a.arrive(), ser_time(256, l.station_gbps()));
+    let mut clean = LeafSpine::new(16, &l, 1).unwrap();
+    let a1 = clean.path(0, 7, 0, 256);
+    let b1 = clean.path(14, 7, 0, 256);
+    assert_eq!(a1.arrive(), b1.arrive(), "non-blocking wiring must not contend");
+}
+
+#[test]
+fn multipod_hop_counts_and_uplink_serialization() {
+    let l = link();
+    let mut mp = MultiPod::new(8, &l, 2, 1000, 400).unwrap();
+    // Intra-pod: 2 serializing hops, 1 intermediate boundary — the Clos
+    // chain. Cross-pod: 4 serializing hops, 3 intermediate boundaries.
+    assert_eq!(mp.hop_count(0, 3), 2);
+    assert_eq!(mp.hop_count(0, 4), 4);
+    let intra = mp.path(0, 3, 0, 256);
+    assert_eq!(intra.intermediate().len(), 1);
+    let cross = mp.path(0, 4, 0, 256);
+    assert_eq!(cross.intermediate().len(), 3);
+    // The cross-pod flow pays the inter-pod flight (1 µs) on top of the
+    // pod-local constants; same-time flows share the ordered uplink.
+    assert!(cross.arrive() > intra.arrive() + us(1));
+    let cross2 = mp.path(1, 5, 0, 256);
+    assert_eq!(cross2.arrive() - cross.arrive(), ser_time(256, 400));
+    // ACK direction rides the independent reverse uplink on the same rail.
+    assert_eq!(mp.rail(4, 0), mp.rail(0, 4));
+    let back = mp.path(4, 0, 0, 256);
+    assert_eq!(back.arrive(), cross.arrive(), "reverse uplink starts uncontended");
+
+    // Pod shapes that don't divide are rejected.
+    assert!(MultiPod::new(9, &l, 2, 1000, 400).is_err());
+    assert!(MultiPod::new(8, &l, 1, 1000, 400).is_err());
+    assert!(build_fabric(&TopologySpec::multi_pod_default(), 10, &l).is_err());
+}
+
+#[test]
+fn multi_tier_sessions_complete_conserve_and_cost_more() {
+    let clos = SessionBuilder::new(&base(8, MIB)).build().unwrap().run_to_completion();
+
+    let mut ls_cfg = base(8, MIB);
+    ls_cfg.topology = TopologySpec::leaf_spine_default();
+    let ls = SessionBuilder::new(&ls_cfg).build().unwrap().run_to_completion();
+    assert_eq!(ls.requests, ls.classes.total(), "leaf-spine conserves requests");
+    assert!(ls.completion > clos.completion, "spine tier must cost time");
+    assert_eq!(ls.tiers.len(), 3);
+
+    let mut mp_cfg = base(8, MIB);
+    mp_cfg.topology = TopologySpec::multi_pod_default();
+    let mp = SessionBuilder::new(&mp_cfg).build().unwrap().run_to_completion();
+    assert_eq!(mp.requests, mp.classes.total(), "multi-pod conserves requests");
+    assert!(mp.completion > clos.completion, "serialized uplinks must cost time");
+    assert_eq!(mp.tiers.len(), 4);
+    let inter = mp.tiers.iter().find(|t| t.tier == "inter-pod").unwrap();
+    assert!(inter.packets > 0 && inter.busy > 0, "uplinks must carry traffic");
+
+    // Translation behavior is fabric-independent at the stream level: the
+    // same schedule touches the same pages on every topology.
+    assert_eq!(clos.max_touched_pages, ls.max_touched_pages);
+    assert_eq!(clos.max_touched_pages, mp.max_touched_pages);
+}
+
+#[test]
+fn deeper_oversubscription_is_never_faster() {
+    let mut completions = Vec::new();
+    for o in [1u32, 4, 16] {
+        let mut cfg = base(16, 4 * MIB);
+        cfg.topology = TopologySpec::LeafSpine { oversubscription: o };
+        let s = SessionBuilder::new(&cfg).build().unwrap().run_to_completion();
+        completions.push((o, s.completion));
+    }
+    let (_, nonblocking) = completions[0];
+    for &(o, completion) in &completions[1..] {
+        assert!(
+            completion >= nonblocking,
+            "thinning the spine cannot beat the non-blocking wiring: o={o} {completion} vs o=1 {nonblocking}"
+        );
+    }
+}
+
+#[test]
+fn multi_tier_runs_are_deterministic() {
+    for topo in [TopologySpec::leaf_spine_default(), TopologySpec::multi_pod_default()] {
+        let mut cfg = base(8, MIB);
+        cfg.topology = topo;
+        let a = SessionBuilder::new(&cfg).build().unwrap().run_to_completion();
+        let b = SessionBuilder::new(&cfg).build().unwrap().run_to_completion();
+        assert_stats_identical(&a, &b, topo.name());
+    }
+}
+
+#[test]
+fn pretranslation_still_hides_cold_walks_on_multi_pod() {
+    // The fabric_tiers story at test scale: warming the Link TLBs helps
+    // on the multi-pod fabric too — cold walks and uplink latency stack.
+    let mut cold_cfg = base(8, MIB);
+    cold_cfg.topology = TopologySpec::multi_pod_default();
+    let cold = SessionBuilder::new(&cold_cfg).build().unwrap().run_to_completion();
+    let mut warm_cfg = cold_cfg.clone();
+    warm_cfg.trans.pretranslate.enabled = true;
+    warm_cfg.trans.pretranslate.pages_per_pair = 0;
+    let warm = SessionBuilder::new(&warm_cfg).build().unwrap().run_to_completion();
+    assert!(warm.pretranslated_pages > 0);
+    assert!(
+        warm.completion < cold.completion,
+        "§6.1 warmup must help on multi-pod: warm {} vs cold {}",
+        warm.completion,
+        cold.completion
+    );
+    assert_eq!(warm.classes.prim_full_walk, 0, "warmed windows walk nothing");
+}
+
+#[test]
+fn multi_tenant_workloads_run_on_every_fabric() {
+    let spec = WorkloadSpec {
+        name: "fabric-tenants".into(),
+        seed: 11,
+        arrival: ArrivalSpec::Poisson { mean_gap_ps: us(1) },
+        jobs: vec![JobTemplate {
+            name: "tenant".into(),
+            kind: JobKind::Collective(CollectiveKind::AllToAll),
+            size_bytes: MIB,
+            count: 2,
+            repeat: 1,
+        }],
+    };
+    for topo in TopologySpec::catalog() {
+        let mut cfg = base(8, MIB);
+        cfg.topology = topo;
+        let w = Workload::from_spec(&spec, 8, cfg.trans.page_bytes).unwrap();
+        let s = SessionBuilder::new(&cfg).workload(w).build().unwrap().run_to_completion();
+        assert_eq!(s.jobs.len(), 2, "{}: per-job books survive the fabric", topo.name());
+        assert_eq!(
+            s.jobs.iter().map(|j| j.requests).sum::<u64>(),
+            s.requests,
+            "{}: job conservation",
+            topo.name()
+        );
+        assert!(!s.tiers.is_empty());
+    }
+}
