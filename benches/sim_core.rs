@@ -1,7 +1,9 @@
 //! Simulator-core performance microbenches (the §Perf hot paths):
 //! pending-set ops (4-ary heap vs timing wheel), end-to-end pod
-//! events/second on the standard perf workloads, and the fused-vs-per-hop
-//! engine comparison used for the optimization log in EXPERIMENTS.md §Perf.
+//! events/second on the standard perf workloads, the fused-vs-per-hop
+//! engine comparison used for the optimization log in EXPERIMENTS.md
+//! §Perf, and the sharded-vs-fused wall-clock comparison at 1024 GPUs
+//! (the parallel in-run engine's speedup curve).
 //!
 //! Env knobs:
 //! * `RATSIM_BENCH_QUICK=1` — trimmed iterations/request budgets (CI smoke).
@@ -235,6 +237,60 @@ fn main() {
         j.set("requests_per_sec", Json::from(rps));
         j.set("jobs", Json::from(s0.jobs.len() as u64));
         records.push(j);
+    }
+
+    // Sharded-vs-fused wall clock at pod scale: the parallel in-run
+    // engine's reason to exist. All-pairs A2A at 1024 GPUs floors at one
+    // request per pair op (~1.05M requests) — a pending set far past any
+    // paper cell — and the sharded engine must reproduce the fused run
+    // bit-for-bit while draining it across cores.
+    print_header("sharded engine at pod scale (1024 GPUs, wall-clock vs fused)");
+    {
+        let mut pc = paper_baseline(1024, 1 << 20);
+        pc.name = "pod_1024gpu_1MiB".into();
+        pc.workload.request_sizing =
+            RequestSizing::Auto { target_total_requests: 1_000_000 };
+        let s0 = run_pod(&pc);
+        let (events, requests) = (s0.events, s0.requests);
+        let fused = bench_items("pod_1024gpu_1MiB_fused", &cfg, events, || {
+            run_pod(&pc);
+        });
+        print_result(&fused);
+        println!(
+            "  -> {events} events/run ({requests} requests), {:.2}M events/s",
+            events as f64 / fused.mean.as_secs_f64() / 1e6
+        );
+        let mut j = fused.to_json();
+        j.set("events", Json::from(events));
+        j.set("requests", Json::from(requests));
+        j.set("events_per_sec", Json::from(events as f64 / fused.mean.as_secs_f64()));
+        j.set("requests_per_sec", Json::from(requests as f64 / fused.mean.as_secs_f64()));
+        records.push(j);
+        let thread_axis: &[u32] = if quick() { &[4] } else { &[2, 4, 8] };
+        for &threads in thread_axis {
+            let mut sc = pc.clone();
+            sc.engine = EnginePolicy::Sharded { threads };
+            // Cheap in-bench sanity (the full grid is pinned in
+            // rust/tests/engine_diff.rs): same completion, same stream.
+            let s1 = run_pod(&sc);
+            assert_eq!(s1.completion, s0.completion, "sharded diverged from fused");
+            assert_eq!(s1.events, events, "sharded event count diverged");
+            let name = format!("pod_1024gpu_1MiB_sharded{threads}");
+            let r = bench_items(&name, &cfg, events, || {
+                run_pod(&sc);
+            });
+            print_result(&r);
+            let speedup = fused.mean.as_secs_f64() / r.mean.as_secs_f64();
+            println!("  -> {speedup:.2}x fused wall at {threads} threads");
+            let mut j = r.to_json();
+            j.set("events", Json::from(events));
+            j.set("requests", Json::from(requests));
+            j.set("events_per_sec", Json::from(events as f64 / r.mean.as_secs_f64()));
+            j.set("requests_per_sec", Json::from(requests as f64 / r.mean.as_secs_f64()));
+            j.set("threads", Json::from(threads as u64));
+            j.set("speedup_vs_fused", Json::from(speedup));
+            records.push(j);
+        }
     }
 
     // Perf-trajectory tracking: compare throughput (reqs/s where the

@@ -200,6 +200,15 @@ pub fn scaled_gpu_counts() -> Vec<u32> {
     vec![32, 64, 128, 256]
 }
 
+/// The sharded-engine scale axis: 1024–4096-GPU pods, the regime where a
+/// single run's event volume (all-pairs floors at `gpus·(gpus-1)`
+/// requests) justifies intra-run parallelism. Points here run under
+/// `EnginePolicy::Sharded` — bit-identical to `Fused` (see DESIGN.md
+/// §Sharded engine) but draining per-shard wheels across cores.
+pub fn sharded_gpu_counts() -> Vec<u32> {
+    vec![1024, 2048, 4096]
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -300,10 +309,17 @@ mod tests {
         assert_eq!(paper_sizes().last(), Some(&(4 * GIB)));
         assert_eq!(paper_gpu_counts(), vec![8, 16, 32, 64]);
         assert_eq!(scaled_gpu_counts(), vec![32, 64, 128, 256]);
+        assert_eq!(sharded_gpu_counts(), vec![1024, 2048, 4096]);
         // Every scale-axis pod size builds a valid baseline/ideal pair.
         for &g in &scaled_gpu_counts() {
             paper_baseline(g, MIB).validate().unwrap();
             paper_ideal(g, MIB).validate().unwrap();
+        }
+        // The sharded axis validates too, including the Sharded engine.
+        for &g in &sharded_gpu_counts() {
+            let mut c = paper_baseline(g, MIB);
+            c.engine = crate::config::EnginePolicy::Sharded { threads: 4 };
+            c.validate().unwrap();
         }
     }
 

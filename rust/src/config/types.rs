@@ -58,6 +58,12 @@ impl CollectiveKind {
 ///   intermediate hop, recreating the classic one-event-per-hop timeline
 ///   (for debugging cadence and for the fused-vs-per-hop differential
 ///   tests, which require bit-identical `RunStats` from both).
+/// * `Sharded` — fused scheduling over a pending set sharded across
+///   `threads` timing wheels, drained in parallel conservative windows
+///   and merged back into exact global `(time, seq)` dispatch order
+///   (`sim::sharded`). Bit-identical `RunStats` to `Fused` — including
+///   the processed-event count — at a fraction of the wall-clock on
+///   1024-GPU-class pods.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub enum EnginePolicy {
     /// Schedule only each chain's terminal event (the default).
@@ -66,24 +72,63 @@ pub enum EnginePolicy {
     /// Materialize a marker event per intermediate hop (differential
     /// testing / timeline debugging).
     PerHop,
+    /// Fused scheduling with the pending set sharded across `threads`
+    /// parallel-drained timing wheels (`--engine sharded --threads N`).
+    Sharded {
+        /// Engine shards = drain worker threads (≥ 1).
+        threads: u32,
+    },
 }
 
 impl EnginePolicy {
-    /// Stable name used in config JSON and the CLI `--engine` flag.
+    /// Stable family name used in CLI help and progress labels (the
+    /// thread count is carried by [`EnginePolicy::spec`]).
     pub fn name(&self) -> &'static str {
         match self {
             EnginePolicy::Fused => "fused",
             EnginePolicy::PerHop => "per-hop",
+            EnginePolicy::Sharded { .. } => "sharded",
         }
     }
 
-    /// Parse an engine-policy name (`fused` | `per-hop`).
+    /// Full spec string round-tripped through config JSON and accepted by
+    /// the CLI `--engine` flag ([`EnginePolicy::parse`] is its inverse):
+    /// `fused` | `per-hop` | `sharded:N`.
+    pub fn spec(&self) -> String {
+        match self {
+            EnginePolicy::Sharded { threads } => format!("sharded:{threads}"),
+            other => other.name().to_string(),
+        }
+    }
+
+    /// Parse an engine-policy spec (`fused` | `per-hop` | `sharded[:N]`;
+    /// a bare `sharded` takes [`EnginePolicy::default_threads`]).
     pub fn parse(s: &str) -> Result<Self> {
+        if let Some(n) = s.strip_prefix("sharded:") {
+            let threads: u32 =
+                n.parse().map_err(|_| anyhow::anyhow!("bad thread count in `{s}`"))?;
+            if threads == 0 {
+                bail!("sharded engine needs >= 1 thread (got `{s}`)");
+            }
+            return Ok(EnginePolicy::Sharded { threads });
+        }
         Ok(match s {
             "fused" => EnginePolicy::Fused,
             "per-hop" | "perhop" => EnginePolicy::PerHop,
-            other => bail!("unknown engine policy `{other}` (fused|per-hop)"),
+            "sharded" => EnginePolicy::Sharded { threads: Self::default_threads() },
+            other => bail!("unknown engine policy `{other}` (fused|per-hop|sharded[:N])"),
         })
+    }
+
+    /// Thread count a bare `sharded` spec resolves to: the
+    /// `RATSIM_THREADS` env var when set to a positive integer
+    /// (the CI matrix leg's knob), else 4.
+    pub fn default_threads() -> u32 {
+        std::env::var("RATSIM_THREADS")
+            .ok()
+            .and_then(|s| s.parse().ok())
+            .filter(|&t| t > 0)
+            .unwrap_or(4)
     }
 }
 
@@ -919,6 +964,11 @@ impl PodConfig {
                 bail!("trace_source_gpu {g} out of range (gpus={})", self.gpus);
             }
         }
+        if let EnginePolicy::Sharded { threads } = self.engine {
+            if threads == 0 {
+                bail!("sharded engine needs >= 1 thread");
+            }
+        }
         Ok(())
     }
 
@@ -1023,7 +1073,7 @@ impl PodConfig {
                     ),
                 ]),
             ),
-            ("engine", Json::from(self.engine.name())),
+            ("engine", Json::from(self.engine.spec())),
             (
                 "workload",
                 Json::from_pairs(vec![
@@ -1236,7 +1286,12 @@ mod tests {
 
     #[test]
     fn json_roundtrip_preserves_engine_policy() {
-        for policy in [EnginePolicy::Fused, EnginePolicy::PerHop] {
+        for policy in [
+            EnginePolicy::Fused,
+            EnginePolicy::PerHop,
+            EnginePolicy::Sharded { threads: 1 },
+            EnginePolicy::Sharded { threads: 4 },
+        ] {
             let mut cfg = paper_baseline(16, MIB);
             cfg.engine = policy;
             let back = PodConfig::from_json(&cfg.to_json()).unwrap();
@@ -1254,6 +1309,23 @@ mod tests {
         let mut j = paper_baseline(16, MIB).to_json();
         j.set("engine", Json::from("bogus"));
         assert!(PodConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn engine_policy_spec_parsing() {
+        assert_eq!(
+            EnginePolicy::parse("sharded:3").unwrap(),
+            EnginePolicy::Sharded { threads: 3 }
+        );
+        assert_eq!(EnginePolicy::Sharded { threads: 3 }.spec(), "sharded:3");
+        assert_eq!(EnginePolicy::Sharded { threads: 3 }.name(), "sharded");
+        assert!(EnginePolicy::parse("sharded:0").is_err());
+        assert!(EnginePolicy::parse("sharded:x").is_err());
+        // A zero thread count is structurally invalid even when built
+        // programmatically, not just via parse.
+        let mut cfg = paper_baseline(16, MIB);
+        cfg.engine = EnginePolicy::Sharded { threads: 0 };
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

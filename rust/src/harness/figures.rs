@@ -651,6 +651,56 @@ pub fn pod_scale(opts: &FigOpts) -> Result<Table> {
     Ok(t)
 }
 
+/// Sharded-engine scale figure (the parallel in-run engine's headline):
+/// one big run per pod size at 1024–4096 GPUs, fused vs
+/// `EnginePolicy::Sharded` wall clock side by side. All-pairs All-to-All
+/// floors at `gpus·(gpus-1)` requests, so a single 1024-GPU point
+/// carries ~1M requests — the regime the sharded engine exists for.
+/// Every sharded run is checked bit-identical to its fused twin
+/// (completion, event count, request classes) before its wall clock is
+/// reported, so the speedup column never trades determinism for speed.
+/// Quick mode keeps the 1024-GPU point only (the CI-budget acceptance
+/// point); full mode walks `sharded_gpu_counts()`. Thread count comes
+/// from `EnginePolicy::default_threads()` (the `RATSIM_THREADS` env, 4
+/// if unset).
+pub fn pod_scale_sharded(opts: &FigOpts) -> Result<Table> {
+    use crate::config::sweep::sharded_gpu_counts;
+    use crate::config::EnginePolicy;
+    let gpus = if opts.quick { vec![1024] } else { sharded_gpu_counts() };
+    let threads = EnginePolicy::default_threads();
+    let mut t = Table::new(
+        &format!("Pod scale, sharded engine — fused vs sharded:{threads} wall clock"),
+        &["gpus", "requests", "events", "completion_ns", "fused_s", "sharded_s", "speedup"],
+    );
+    for &g in &gpus {
+        let mut cfg = paper_baseline(g, MIB);
+        cfg.name = format!("pod-scale-sharded-{g}");
+        cfg.workload.request_sizing =
+            RequestSizing::Auto { target_total_requests: 1_000_000 };
+        let fused = SessionBuilder::new(&cfg).build()?.run_to_completion();
+        let mut scfg = cfg.clone();
+        scfg.engine = EnginePolicy::Sharded { threads };
+        let sharded = SessionBuilder::new(&scfg).build()?.run_to_completion();
+        anyhow::ensure!(
+            sharded.completion == fused.completion
+                && sharded.events == fused.events
+                && sharded.classes == fused.classes,
+            "sharded run diverged from fused at {g} GPUs"
+        );
+        t.push(vec![
+            g.to_string(),
+            fused.requests.to_string(),
+            fused.events.to_string(),
+            format!("{:.0}", to_ns(fused.completion)),
+            format!("{:.2}", fused.wall_seconds),
+            format!("{:.2}", sharded.wall_seconds),
+            format!("{:.2}", fused.wall_seconds / sharded.wall_seconds.max(1e-9)),
+        ]);
+    }
+    t.save_csv(&opts.out_dir, "pod_scale_sharded")?;
+    Ok(t)
+}
+
 /// Fabric-tiers figure (the fabric layer's headline): the same All-to-All
 /// byte volume on all three topologies, cold (demand misses on the
 /// critical path) vs warm (§6.1 pre-translation), with the per-tier
@@ -842,7 +892,8 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "ablation", "design", "warmup", "warmup_decay", "scale", "tenancy", "fabric_tiers",
+    "ablation", "design", "warmup", "warmup_decay", "scale", "scale_sharded", "tenancy",
+    "fabric_tiers",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -896,6 +947,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     }
     if want("scale") {
         pod_scale(opts)?.print();
+    }
+    if want("scale_sharded") {
+        pod_scale_sharded(opts)?.print();
     }
     if want("tenancy") {
         fig_tenancy(opts)?.print();

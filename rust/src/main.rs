@@ -64,7 +64,8 @@ fn print_help() {
          subcommands:\n\
          \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
          \x20           --topology rail-clos|leaf-spine|multi-pod,\n\
-         \x20           --prefetch-policy sw-guided|fused, --engine fused|per-hop, ...)\n\
+         \x20           --prefetch-policy sw-guided|fused,\n\
+         \x20           --engine fused|per-hop|sharded[:N], --threads N, ...)\n\
          \x20 workload  simulate a multi-tenant mix (--mix uniform|decode-prefill|moe,\n\
          \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json,\n\
          \x20           --topology ...); reports per-job p50/p95/p99 + cross-job TLB\n\
@@ -95,7 +96,8 @@ fn common_run_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "prefetch-policy", help: "translation hiding: off | sw-guided | fused", is_flag: false, default: None },
         ArgSpec { name: "prefetch-lead-ns", help: "sw-guided hint lead time, ns (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
         ArgSpec { name: "prefetch-rate", help: "sw-guided hint walks in flight per GPU (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
-        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop (marker event per hop; differential testing)", is_flag: false, default: None },
+        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop (marker event per hop; differential testing) | sharded[:threads] (parallel in-run engine, bit-identical to fused)", is_flag: false, default: None },
+        ArgSpec { name: "threads", help: "worker threads for the sharded engine (shorthand for --engine sharded:N)", is_flag: false, default: None },
         ArgSpec { name: "trace-gpu", help: "record per-request RAT trace for this source GPU", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
         ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
@@ -167,6 +169,13 @@ fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
     }
     if let Some(e) = a.get("engine") {
         cfg.engine = EnginePolicy::parse(e)?;
+    }
+    if let Some(t) = a.get_u64("threads")? {
+        anyhow::ensure!(
+            (1..=65_536).contains(&t),
+            "--threads must be between 1 and 65536, got {t}"
+        );
+        cfg.engine = EnginePolicy::Sharded { threads: t as u32 };
     }
     if let Some(g) = a.get_u64("trace-gpu")? {
         cfg.workload.trace_source_gpu = Some(g as u32);

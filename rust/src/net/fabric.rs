@@ -117,6 +117,17 @@ pub trait Fabric {
     /// for multi-pod).
     fn hop_count(&self, src: u32, dst: u32) -> u32;
 
+    /// Lower bound on any flow's traversal time — fabric entry to
+    /// destination-station arrival — over all `(from, to, t, bytes)`:
+    /// the pure latency terms of the shortest chain (serialization and
+    /// queueing only add to it). This is the sharded engine's
+    /// conservative-window lookahead: an event can only cause another
+    /// event on a different GPU at least this far in the future.
+    /// Correctness never depends on the value (the window merge is exact
+    /// either way) — an over-tight bound only shrinks the batches the
+    /// parallel drain amortizes over.
+    fn min_path_latency(&self) -> Time;
+
     /// Admit a flow of `bytes` entering the fabric at `t` from `from`
     /// toward `to`, reserving every serializing resource of its chain in
     /// one pass (decision-order admission — see [`NetResources::path`]).
@@ -204,6 +215,9 @@ const RC_SWITCH: u8 = 1;
 pub struct RailClos {
     core: FabricCore,
     net: NetResources,
+    /// Pure latency of the 2-hop chain (station link + switch pipeline +
+    /// egress link) — the [`Fabric::min_path_latency`] bound.
+    min_latency: Time,
 }
 
 impl RailClos {
@@ -211,7 +225,8 @@ impl RailClos {
     pub fn new(gpus: u32, link: &LinkConfig) -> Result<Self> {
         let core = FabricCore::new(gpus, link)?;
         let net = NetResources::new(core.topo, link);
-        Ok(Self { core, net })
+        let min_latency = 2 * link.link_latency() + link.switch_latency();
+        Ok(Self { core, net, min_latency })
     }
 }
 
@@ -239,6 +254,10 @@ impl Fabric for RailClos {
 
     fn hop_count(&self, _src: u32, _dst: u32) -> u32 {
         2
+    }
+
+    fn min_path_latency(&self) -> Time {
+        self.min_latency
     }
 
     #[inline]
@@ -283,6 +302,9 @@ pub struct LeafSpine {
     station_tx: BoundedTierPool,
     leaf_up: TierPool,
     spine_out: TierPool,
+    /// Pure latency of the 3-hop chain — the
+    /// [`Fabric::min_path_latency`] bound.
+    min_latency: Time,
 }
 
 impl LeafSpine {
@@ -310,6 +332,7 @@ impl LeafSpine {
             station_tx,
             leaf_up,
             spine_out,
+            min_latency: 3 * link.link_latency() + 2 * link.switch_latency(),
         })
     }
 
@@ -353,6 +376,10 @@ impl Fabric for LeafSpine {
 
     fn hop_count(&self, _src: u32, _dst: u32) -> u32 {
         3
+    }
+
+    fn min_path_latency(&self) -> Time {
+        self.min_latency
     }
 
     #[inline]
@@ -415,6 +442,9 @@ pub struct MultiPod {
     net: NetResources,
     pod_egress: TierPool,
     uplinks: TierPool,
+    /// Pure latency of the *intra-pod* Clos chain — cross-pod flows only
+    /// add tiers, so this is the [`Fabric::min_path_latency`] bound.
+    min_latency: Time,
 }
 
 impl MultiPod {
@@ -450,6 +480,7 @@ impl MultiPod {
             net,
             pod_egress,
             uplinks,
+            min_latency: 2 * link.link_latency() + link.switch_latency(),
         })
     }
 
@@ -499,6 +530,10 @@ impl Fabric for MultiPod {
         } else {
             2
         }
+    }
+
+    fn min_path_latency(&self) -> Time {
+        self.min_latency
     }
 
     #[inline]
@@ -586,6 +621,44 @@ mod tests {
         );
         // Invalid shapes surface as config errors.
         assert!(build_fabric(&TopologySpec::multi_pod_default(), 9, &l).is_err());
+    }
+
+    #[test]
+    fn min_path_latency_bounds_every_uncontended_path() {
+        // The sharded engine's lookahead must never exceed a real
+        // traversal: check the bound against every (src, dst) pair's
+        // uncontended chain on all three topologies, and pin the
+        // closed-form values.
+        let l = link();
+        let mut fabrics: Vec<Box<dyn Fabric>> = vec![
+            Box::new(RailClos::new(8, &l).unwrap()),
+            Box::new(LeafSpine::new(8, &l, 2).unwrap()),
+            Box::new(MultiPod::new(8, &l, 2, 1000, 400).unwrap()),
+        ];
+        for f in &mut fabrics {
+            let bound = f.min_path_latency();
+            assert!(bound > 0, "{}: lookahead must be positive", f.name());
+            // Space admissions 1 ms apart so no two flows contend.
+            let mut t = 0;
+            for src in 0..8 {
+                for dst in 0..8 {
+                    if src == dst {
+                        continue;
+                    }
+                    t += 1_000_000_000;
+                    let p = f.path(src, dst, t, 256);
+                    assert!(
+                        p.arrive() - t >= bound,
+                        "{}: path {src}->{dst} took {} < bound {bound}",
+                        f.name(),
+                        p.arrive() - t
+                    );
+                }
+            }
+        }
+        assert_eq!(fabrics[0].min_path_latency(), 2 * LINK + SWITCH);
+        assert_eq!(fabrics[1].min_path_latency(), 3 * LINK + 2 * SWITCH);
+        assert_eq!(fabrics[2].min_path_latency(), 2 * LINK + SWITCH);
     }
 
     #[test]

@@ -12,14 +12,16 @@
 //! mid-run [`SimSession::snapshot`]s) or straight through
 //! ([`SimSession::run_to_completion`]).
 //!
-//! The old free functions [`run`], [`run_schedule`] and [`run_workload`]
-//! remain as deprecated shims that delegate to a default-observer
-//! session and stay bit-identical to the pre-session accounting (pinned
-//! by `rust/tests/session.rs`).
+//! Model state is split between the shard-local [`shard::GpuShardState`]
+//! and the read-only shared [`shard::PodCore`] so one big run can scale
+//! across cores under `EnginePolicy::Sharded` — bit-identical to the
+//! single-threaded engines (see `sim::sharded` and DESIGN.md "Sharded
+//! engine").
 
 pub mod mmu;
 pub mod observer;
 mod session;
+pub mod shard;
 mod sim;
 
 pub use mmu::GpuMmu;
@@ -28,5 +30,3 @@ pub use observer::{
     RequestView, SessionEvent, TraceObserver, TranslationEvent,
 };
 pub use session::{SessionBuilder, SimSession};
-#[allow(deprecated)]
-pub use sim::{run, run_schedule, run_workload};

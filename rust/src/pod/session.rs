@@ -2,9 +2,9 @@
 //! simulation.
 //!
 //! One uniform surface replaces the old `run`/`run_schedule`/
-//! `run_workload` free functions (kept as deprecated shims): a builder
-//! selects the traffic source (config-declared collective, explicit
-//! [`Schedule`], or multi-tenant [`Workload`]), the engine policy, and
+//! `run_workload` free functions: a builder selects the traffic source
+//! (config-declared collective, explicit [`Schedule`], or multi-tenant
+//! [`Workload`]), the engine policy, and
 //! the attached [`Observer`]s, then yields a [`SimSession`] with
 //! incremental control — [`SimSession::step`], [`SimSession::run_until`],
 //! [`SimSession::run_to_completion`] — and mid-run
@@ -80,8 +80,9 @@ impl SessionBuilder {
         self
     }
 
-    /// Override the event-engine policy (`Fused` fast path vs `PerHop`
-    /// marker events); equivalent to setting `cfg.engine` up front.
+    /// Override the event-engine policy (`Fused` fast path, `PerHop`
+    /// marker events, or `Sharded { threads }` parallel in-run engine);
+    /// equivalent to setting `cfg.engine` up front.
     pub fn engine(mut self, policy: EnginePolicy) -> Self {
         self.cfg.engine = policy;
         self

@@ -1,0 +1,172 @@
+//! Shard-local vs shared pod model state.
+//!
+//! The sharded engine (`sim::sharded`) drains per-shard pending wheels on
+//! worker threads; this module makes the matching *model* ownership split
+//! explicit in the types instead of leaving it implicit in a flat
+//! `PodSim`. [`GpuShardState`] holds everything one shard's GPUs own
+//! exclusively — reverse-translation MMU state and per-GPU issue counters
+//! — striped `gpu % shards` to match the event routing (the `Ev`
+//! [`ShardRoute`](crate::sim::ShardRoute) impl in `pod::sim`).
+//! [`PodCore`] groups the run description that is read-only once the
+//! model is built (config, schedule, dependency graph, tenant arrivals,
+//! cached timing constants), so handlers borrow a shard's mutable state
+//! and the shared core independently. Event *dispatch* stays serial in
+//! exact `(time, seq)` order — only the pending-set maintenance runs in
+//! parallel — so the split needs no locks or atomics anywhere.
+
+use super::mmu::GpuMmu;
+use crate::collective::Schedule;
+use crate::config::PodConfig;
+use crate::util::units::Time;
+
+/// The mutable model state owned exclusively by one shard: the MMUs
+/// (Link TLBs, MSHRs, walkers, page tables) and per-GPU issue counters of
+/// the GPUs striped onto it (`gpu % shards`, local index `gpu / shards`).
+pub struct GpuShardState {
+    /// Reverse-translation state for this shard's GPUs, local-index order.
+    pub mmus: Vec<GpuMmu>,
+    /// Per-source-GPU issue counters (trace sequencing), parallel to
+    /// `mmus`.
+    pub issue_seq: Vec<u64>,
+}
+
+/// All shards of the pod plus the striping arithmetic. `PodSim` goes
+/// through these accessors so shard-state borrows stay a single-field
+/// borrow, disjoint from the shared [`PodCore`].
+pub struct ShardSet {
+    shards: Vec<GpuShardState>,
+    gpus: u32,
+}
+
+impl ShardSet {
+    /// Stripe `mmus` (indexed by GPU id) across `shards` shard-local
+    /// states (`gpu % shards`). `shards` should match the engine's shard
+    /// count (1 for the single-wheel engines).
+    pub fn new(shards: usize, mmus: Vec<GpuMmu>) -> Self {
+        let n = shards.max(1);
+        let gpus = mmus.len() as u32;
+        let mut sets: Vec<GpuShardState> = (0..n)
+            .map(|_| GpuShardState { mmus: Vec::new(), issue_seq: Vec::new() })
+            .collect();
+        for (g, mmu) in mmus.into_iter().enumerate() {
+            let s = &mut sets[g % n];
+            s.mmus.push(mmu);
+            s.issue_seq.push(0);
+        }
+        Self { shards: sets, gpus }
+    }
+
+    /// Number of shards (matches the engine's shard count).
+    pub fn shard_count(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// (shard, local index) of `gpu` under the striping.
+    #[inline]
+    fn slot(&self, gpu: u32) -> (usize, usize) {
+        let n = self.shards.len();
+        (gpu as usize % n, gpu as usize / n)
+    }
+
+    /// The MMU of `gpu`.
+    #[inline]
+    pub fn mmu(&self, gpu: u32) -> &GpuMmu {
+        let (s, i) = self.slot(gpu);
+        &self.shards[s].mmus[i]
+    }
+
+    /// The MMU of `gpu`, mutably.
+    #[inline]
+    pub fn mmu_mut(&mut self, gpu: u32) -> &mut GpuMmu {
+        let (s, i) = self.slot(gpu);
+        &mut self.shards[s].mmus[i]
+    }
+
+    /// Post-increment `gpu`'s issue counter (per-source trace sequencing).
+    #[inline]
+    pub fn next_issue_seq(&mut self, gpu: u32) -> u64 {
+        let (s, i) = self.slot(gpu);
+        let seq = self.shards[s].issue_seq[i];
+        self.shards[s].issue_seq[i] = seq + 1;
+        seq
+    }
+
+    /// Every MMU in GPU-id order (the scrape / finalize iteration).
+    pub fn mmus(&self) -> impl Iterator<Item = &GpuMmu> + '_ {
+        (0..self.gpus).map(move |g| self.mmu(g))
+    }
+}
+
+/// The run description shared read-only by every shard once the model is
+/// built: configuration, merged schedule, op dependency graph, tenant
+/// arrivals and the cached per-stage timing constants.
+pub struct PodCore {
+    /// The validated pod configuration.
+    pub cfg: PodConfig,
+    /// The merged (possibly multi-tenant) schedule being executed.
+    pub schedule: Schedule,
+    /// op id → ops that depend on it.
+    pub children: Vec<Vec<u32>>,
+    /// Arrival time per tenant job (index = the `job` tag on schedule
+    /// ops); root ops become runnable at their job's arrival.
+    pub job_arrivals: Vec<Time>,
+    /// Run label (flows into `RunStats::config_name`).
+    pub config_name: String,
+    /// Local-fabric hop latency, ps.
+    pub t_fabric: Time,
+    /// HBM write latency, ps.
+    pub t_hbm: Time,
+    /// Station L1 Link-TLB hit latency, ps.
+    pub t_l1: Time,
+    /// Shared L2 Link-TLB hit latency, ps.
+    pub t_l2: Time,
+    /// PWC probe latency, ps.
+    pub t_pwc: Time,
+    /// Per-level walk memory access (HBM + walk fabric), ps.
+    pub t_walk_mem: Time,
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::presets::quick_test;
+    use crate::util::units::MIB;
+
+    fn mmus(gpus: u32) -> Vec<GpuMmu> {
+        let cfg = quick_test(gpus, MIB);
+        (0..gpus)
+            .map(|g| GpuMmu::new(g, cfg.seed, cfg.link.stations_per_gpu, &cfg.trans))
+            .collect()
+    }
+
+    #[test]
+    fn striping_covers_every_gpu_exactly_once() {
+        for shards in [1usize, 2, 3, 4, 7, 16] {
+            let set = ShardSet::new(shards, mmus(8));
+            assert_eq!(set.shard_count(), shards);
+            // Every GPU resolves to its own MMU, and GPU-order iteration
+            // visits each exactly once.
+            for g in 0..8u32 {
+                assert_eq!(set.mmu(g).gpu, g, "{shards} shards");
+            }
+            let order: Vec<u32> = set.mmus().map(|m| m.gpu).collect();
+            assert_eq!(order, (0..8).collect::<Vec<_>>(), "{shards} shards");
+        }
+    }
+
+    #[test]
+    fn zero_shards_clamps_to_one() {
+        let set = ShardSet::new(0, mmus(4));
+        assert_eq!(set.shard_count(), 1);
+        assert_eq!(set.mmu(3).gpu, 3);
+    }
+
+    #[test]
+    fn issue_counters_are_per_gpu() {
+        let mut set = ShardSet::new(3, mmus(8));
+        assert_eq!(set.next_issue_seq(5), 0);
+        assert_eq!(set.next_issue_seq(5), 1);
+        assert_eq!(set.next_issue_seq(2), 0, "counters are independent");
+        assert_eq!(set.next_issue_seq(5), 2);
+    }
+}

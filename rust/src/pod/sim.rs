@@ -21,23 +21,35 @@
 //! session attaches (`pod/observer.rs`): the model emits notifications at
 //! its decision points and scrapes only model-owned counters (walker /
 //! MSHR / prefetch conservation state) into [`RunStats`] itself. Drive it
-//! through [`super::SessionBuilder`]; the old `run`/`run_schedule`/
-//! `run_workload` free functions remain as deprecated shims over a
-//! default-observer session.
+//! through [`super::SessionBuilder`].
+//!
+//! §Sharding — GPU-local mutable state (Link TLBs, MSHRs, walkers,
+//! per-GPU issue counters) lives in `pod::shard`'s `GpuShardState`s,
+//! striped `gpu % shards` to match [`Ev`]'s `ShardRoute` impl, and the
+//! read-only run description (config, schedule, dependency graph, timing
+//! constants) in the shared `PodCore` — the ownership split the sharded
+//! engine exploits, visible in the types. Under
+//! [`EnginePolicy::Sharded`] the engine drains per-shard pending wheels
+//! in parallel conservative windows (lookahead =
+//! `Fabric::min_path_latency`) and dispatches the merged stream serially
+//! in exact `(time, seq)` order — handlers, fabric admission order and
+//! observer callbacks are untouched, so `RunStats` is bit-identical to
+//! `Fused`, raw event count included (pinned by
+//! `rust/tests/engine_diff.rs`).
 
 use super::mmu::{GpuMmu, WalkRec};
 use super::observer::{
     CrossJobObserver, JobObserver, JobSeed, LatencyObserver, Observer, RequestView, SessionEvent,
     TraceObserver, TranslationEvent,
 };
-use super::session::SessionBuilder;
+use super::shard::{PodCore, ShardSet};
 use crate::collective::workload::Workload;
 use crate::collective::Schedule;
 use crate::config::{EnginePolicy, PodConfig, PrefetchPolicy};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{build_fabric, Fabric, FabricPath};
-use crate::sim::Engine;
+use crate::sim::{AnyEngine, ShardRoute};
 use crate::stats::run::TierStats;
 use crate::stats::RunStats;
 use crate::trans::class::{PrimaryOutcome, TransClass};
@@ -77,6 +89,29 @@ enum Ev {
     PrefetchDone { gpu: u16, page: u64 },
 }
 
+/// Pending-set placement for the sharded engine, mirroring the model's
+/// state striping (`pod::shard`): MMU-stage events go to their GPU's
+/// shard, request-stage events spread by request id, WG starts by op id.
+/// Placement only balances the parallel *drain* — dispatch is serial and
+/// globally ordered — so any total function works; matching the state
+/// striping keeps a shard's events over its own state.
+impl ShardRoute for Ev {
+    #[inline]
+    fn route(&self, shards: usize) -> usize {
+        match *self {
+            Ev::WgStart { wg } => wg as usize % shards,
+            Ev::Hop => 0,
+            Ev::TargetArrive { req } | Ev::Retry { req } | Ev::AckArrive { req } => {
+                req as usize % shards
+            }
+            Ev::L2Decision { gpu, .. }
+            | Ev::WalkDone { gpu, .. }
+            | Ev::PrefetchIssue { gpu, .. }
+            | Ev::PrefetchDone { gpu, .. } => gpu as usize % shards,
+        }
+    }
+}
+
 /// In-flight request state (slab-allocated, recycled on completion).
 /// Deliberately lean — 40 bytes — since the slab is hot: per-hop
 /// timestamps are consumed at the decision points that compute them, and
@@ -101,23 +136,18 @@ struct Request {
 /// Measurement is delegated to the attached [`Observer`]s — construct and
 /// drive through [`super::SessionBuilder`] / [`super::SimSession`].
 pub struct PodSim {
-    cfg: PodConfig,
-    schedule: Schedule,
-    engine: Engine<Ev>,
+    /// Read-only run description shared by every shard (`pod::shard`).
+    core: PodCore,
+    engine: AnyEngine<Ev>,
     /// The configured fabric topology (`net::fabric`): rail routing plus
     /// admission of every flow's deterministic multi-hop chain.
     fabric: Box<dyn Fabric>,
-    mmus: Vec<GpuMmu>,
+    /// Shard-local mutable GPU state (MMUs, issue counters), striped to
+    /// match the engine's event routing.
+    shards: ShardSet,
     wgs: Vec<WorkGroup>,
-    /// op id → ops that depend on it.
-    children: Vec<Vec<u32>>,
-    /// Arrival time per tenant job (index = the `job` tag on schedule
-    /// ops); root ops become runnable at their job's arrival.
-    job_arrivals: Vec<Time>,
     slab: Vec<Request>,
     free: Vec<u32>,
-    /// Per-source-GPU issue counters (trace sequencing).
-    issue_seq: Vec<u64>,
     total_requests: u64,
     acked: u64,
     /// Simulated time of the last ACK (set when `acked` reaches
@@ -128,8 +158,6 @@ pub struct PodSim {
     /// Attached observers (stock + user), notified at model decision
     /// points.
     observers: Vec<Box<dyn Observer>>,
-    /// Run label (flows into `RunStats::config_name`).
-    config_name: String,
     /// Pages warmed for free by §6.1 pre-translation.
     pretranslated_pages: u64,
     /// Walks initiated by a prefetcher (stride or hint).
@@ -140,13 +168,6 @@ pub struct PodSim {
     tier_packets: Vec<u64>,
     /// Materialize per-hop marker events (EnginePolicy::PerHop)?
     per_hop: bool,
-    // cached timing constants (ps)
-    t_fabric: Time,
-    t_hbm: Time,
-    t_l1: Time,
-    t_l2: Time,
-    t_pwc: Time,
-    t_walk_mem: Time,
 }
 
 /// The completion event for a walk: prefetch-initiated walks (hint or
@@ -164,33 +185,6 @@ fn completion_ev(prefetch: bool, gpu: u32, page: PageId) -> Ev {
 /// prefetch admission paths.)
 fn page_covered(mmu: &GpuMmu, page: PageId) -> bool {
     page.0 > mmu.max_page || mmu.l2.contains(page.0) || mmu.pending_walks.contains_key(&page)
-}
-
-/// Run the configured collective and return its stats.
-#[deprecated(note = "use pod::SessionBuilder::new(cfg).build()?.run_to_completion()")]
-pub fn run(cfg: &PodConfig) -> Result<RunStats> {
-    Ok(SessionBuilder::new(cfg).build()?.run_to_completion())
-}
-
-/// Run an arbitrary (validated) schedule under `cfg`.
-#[deprecated(
-    note = "use pod::SessionBuilder::new(cfg).schedule(s).build()?.run_to_completion()"
-)]
-pub fn run_schedule(cfg: &PodConfig, schedule: Schedule) -> Result<RunStats> {
-    Ok(SessionBuilder::new(cfg).schedule(schedule).build()?.run_to_completion())
-}
-
-/// Run a multi-tenant [`Workload`] under `cfg`: every job's schedule runs
-/// concurrently through the shared pod, offset by its arrival time, and
-/// `RunStats` reports per-job completion/latency percentiles plus the
-/// cross-job Link-TLB eviction counters. A single-job workload is
-/// bit-identical to [`run_schedule`] on the same schedule (for matching
-/// request sizing; pinned by `rust/tests/workload.rs`).
-#[deprecated(
-    note = "use pod::SessionBuilder::new(cfg).workload(w).build()?.run_to_completion()"
-)]
-pub fn run_workload(cfg: &PodConfig, workload: Workload) -> Result<RunStats> {
-    Ok(SessionBuilder::new(cfg).workload(workload).build()?.run_to_completion())
 }
 
 impl PodSim {
@@ -320,38 +314,52 @@ impl PodSim {
             .map(|w| (cfg.gpu.wg_window as u64).min(w.total_requests()))
             .sum::<u64>()
             .min(total_requests) as usize;
+        let cap = peak_outstanding.max(1024);
+        // Sharded runs stripe the pending set across `threads` wheels and
+        // drain them in conservative windows bounded by the fabric's
+        // minimum uncontended path latency; everything else uses the
+        // single-wheel engine. Dispatch order — and therefore the model —
+        // is identical either way.
+        let (engine, model_shards) = match cfg.engine {
+            EnginePolicy::Sharded { threads } => {
+                let threads = threads.max(1) as usize;
+                (AnyEngine::sharded(threads, fabric.min_path_latency(), cap), threads)
+            }
+            _ => (AnyEngine::single(cap), 1),
+        };
         let per_hop = cfg.engine == EnginePolicy::PerHop;
         let config_name = cfg.name.clone();
-        let gpus = cfg.gpus;
-        let mut sim = PodSim {
+        let core = PodCore {
             cfg,
             schedule,
-            engine: Engine::with_capacity(peak_outstanding.max(1024)),
-            fabric,
-            mmus,
-            wgs,
             children,
             job_arrivals,
-            slab: Vec::with_capacity(peak_outstanding),
-            free: Vec::with_capacity(peak_outstanding),
-            issue_seq: vec![0; gpus as usize],
-            total_requests,
-            acked: 0,
-            completion: 0,
-            prefetcher,
-            observers,
             config_name,
-            pretranslated_pages: 0,
-            prefetch_walks: 0,
-            tier_time: vec![0; tier_count],
-            tier_packets: vec![0; tier_count],
-            per_hop,
             t_fabric,
             t_hbm,
             t_l1,
             t_l2,
             t_pwc,
             t_walk_mem,
+        };
+        let mut sim = PodSim {
+            core,
+            engine,
+            fabric,
+            shards: ShardSet::new(model_shards, mmus),
+            wgs,
+            slab: Vec::with_capacity(peak_outstanding),
+            free: Vec::with_capacity(peak_outstanding),
+            total_requests,
+            acked: 0,
+            completion: 0,
+            prefetcher,
+            observers,
+            pretranslated_pages: 0,
+            prefetch_walks: 0,
+            tier_time: vec![0; tier_count],
+            tier_packets: vec![0; tier_count],
+            per_hop,
         };
         sim.apply_pretranslation();
         sim.seed_root_ops();
@@ -376,14 +384,14 @@ impl PodSim {
     /// whole run); warmup fills that evict another tenant's entries do
     /// count toward the cross-job eviction counters.
     fn apply_pretranslation(&mut self) {
-        if !self.cfg.trans.enabled || !self.cfg.trans.pretranslate.enabled {
+        if !self.core.cfg.trans.enabled || !self.core.cfg.trans.pretranslate.enabled {
             return;
         }
-        let page_bytes = self.cfg.trans.page_bytes;
-        let k = self.cfg.trans.pretranslate.pages_per_pair;
-        let ops: Vec<_> = self.schedule.ops.clone();
+        let page_bytes = self.core.cfg.trans.page_bytes;
+        let k = self.core.cfg.trans.pretranslate.pages_per_pair;
+        let ops: Vec<_> = self.core.schedule.ops.clone();
         for op in ops {
-            if !self.cfg.is_internode(op.src, op.dst) {
+            if !self.core.cfg.is_internode(op.src, op.dst) {
                 continue;
             }
             let rail = self.fabric.rail(op.src, op.dst);
@@ -395,7 +403,7 @@ impl PodSim {
                     break;
                 }
                 let (l2_evicted, l1_evicted) =
-                    self.mmus[op.dst as usize].warm_fill(PageId(p), Some(rail));
+                    self.shards.mmu_mut(op.dst).warm_fill(PageId(p), Some(rail));
                 self.pretranslated_pages += 1;
                 self.emit(SessionEvent::TlbFill {
                     gpu: op.dst,
@@ -423,7 +431,7 @@ impl PodSim {
                 // Root ops become runnable when their job arrives (t=0
                 // for single-schedule runs — identical to the pre-multi-
                 // tenant behavior, op order preserved).
-                let at = self.job_arrivals[self.wgs[i].op.job as usize];
+                let at = self.core.job_arrivals[self.wgs[i].op.job as usize];
                 self.engine.schedule_at(at, Ev::WgStart { wg: i as u32 });
             }
         }
@@ -475,7 +483,7 @@ impl PodSim {
     /// Model-owned counters → `stats` (no observer contributions, no
     /// asserts — shared by mid-run snapshots and the final scrape).
     fn scrape_into(&self, stats: &mut RunStats) {
-        stats.config_name = self.config_name.clone();
+        stats.config_name = self.core.config_name.clone();
         stats.completion = if self.acked == self.total_requests {
             self.completion
         } else {
@@ -491,15 +499,15 @@ impl PodSim {
         stats.prefetch_late = pf.late;
         stats.prefetch_useless = pf.useless;
         stats.prefetch_deferred = pf.deferred;
-        stats.l2_fills = self.mmus.iter().map(|m| m.l2.stats.fills).sum();
-        stats.walks_started = self.mmus.iter().map(|m| m.walkers.started).sum();
-        stats.walks_queued = self.mmus.iter().map(|m| m.walkers.queued_total).sum();
+        stats.l2_fills = self.shards.mmus().map(|m| m.l2.stats.fills).sum();
+        stats.walks_started = self.shards.mmus().map(|m| m.walkers.started).sum();
+        stats.walks_queued = self.shards.mmus().map(|m| m.walkers.queued_total).sum();
         stats.peak_active_walks =
-            self.mmus.iter().map(|m| m.walkers.peak_active).max().unwrap_or(0);
-        stats.mshr_peak = self.mmus.iter().map(|m| m.mshr_peak()).max().unwrap_or(0);
-        stats.mshr_full_stalls = self.mmus.iter().map(|m| m.mshr_full_stalls()).sum();
+            self.shards.mmus().map(|m| m.walkers.peak_active).max().unwrap_or(0);
+        stats.mshr_peak = self.shards.mmus().map(|m| m.mshr_peak()).max().unwrap_or(0);
+        stats.mshr_full_stalls = self.shards.mmus().map(|m| m.mshr_full_stalls()).sum();
         stats.max_touched_pages =
-            self.mmus.iter().map(|m| m.page_table.touched_pages()).max().unwrap_or(0);
+            self.shards.mmus().map(|m| m.page_table.touched_pages()).max().unwrap_or(0);
         let busy = self.fabric.tier_busy();
         stats.tiers = self
             .fabric
@@ -534,7 +542,7 @@ impl PodSim {
         // left in flight. A violation is a model bug, not a config issue.
         assert_eq!(self.acked, self.total_requests, "requests lost in flight");
         assert!(self.engine.idle(), "events left after completion");
-        for m in &self.mmus {
+        for m in self.shards.mmus() {
             assert_eq!(m.mshr_occupancy(), 0, "MSHR entries leaked at gpu {}", m.gpu);
             assert!(m.pending_walks.is_empty(), "walks leaked at gpu {}", m.gpu);
             assert_eq!(m.walkers.active(), 0, "walkers leaked at gpu {}", m.gpu);
@@ -586,7 +594,7 @@ impl PodSim {
         self.plan_hints(now, wg);
         // A WG issues one store per CU cycle — pace the initial window so
         // a 256-deep burst doesn't materialize in a single picosecond.
-        let cycle = 1_000_000 / self.cfg.gpu.cu_clock_mhz as u64; // ps
+        let cycle = 1_000_000 / self.core.cfg.gpu.cu_clock_mhz as u64; // ps
         let mut i = 0u64;
         while self.wgs[wg as usize].can_issue() {
             self.issue_one(now + i * cycle, wg);
@@ -603,16 +611,15 @@ impl PodSim {
     /// disabled-RAT ideal runs — fuse all the way through the response
     /// path and cost a single `AckArrive` event.
     fn issue_one(&mut self, now: Time, wg: u32) {
-        let page_bytes = self.cfg.trans.page_bytes;
+        let page_bytes = self.core.cfg.trans.page_bytes;
         let w = &mut self.wgs[wg as usize];
         let (dst_offset, len) = w.next_request();
         let op = w.op;
-        let seq = self.issue_seq[op.src as usize];
-        self.issue_seq[op.src as usize] += 1;
+        let seq = self.shards.next_issue_seq(op.src);
         debug_assert!(seq <= u32::MAX as u64, "per-source issue sequence overflows u32");
         let rail = self.fabric.rail(op.src, op.dst);
-        let internode = self.cfg.is_internode(op.src, op.dst);
-        let t_tx = now + self.t_fabric;
+        let internode = self.core.cfg.is_internode(op.src, op.dst);
+        let t_tx = now + self.core.t_fabric;
         let path = self.fabric.path(op.src, op.dst, t_tx, len);
         self.record_traversal(t_tx, &path);
         let t_arrive = path.arrive();
@@ -634,13 +641,13 @@ impl PodSim {
                 self.engine.schedule_at(h, Ev::Hop);
             }
         }
-        if self.cfg.trans.enabled && internode {
+        if self.core.cfg.trans.enabled && internode {
             self.engine.schedule_at(t_arrive, Ev::TargetArrive { req: rid });
         } else {
             // No reverse translation at the target: the response chain is
             // deterministic too — fuse it now (class matches the old
             // per-event engine: disabled RAT ⇒ Ideal, else SPA intra-node).
-            let class = if self.cfg.trans.enabled {
+            let class = if self.core.cfg.trans.enabled {
                 TransClass::IntraNode
             } else {
                 TransClass::Ideal
@@ -659,11 +666,11 @@ impl PodSim {
             return;
         }
         let op = self.wgs[wg as usize].op;
-        if !self.cfg.is_internode(op.src, op.dst) {
+        if !self.core.cfg.is_internode(op.src, op.dst) {
             return;
         }
         let rail = self.fabric.rail(op.src, op.dst);
-        for (delay, h) in self.prefetcher.plan_op(&self.cfg, rail, &op) {
+        for (delay, h) in self.prefetcher.plan_op(&self.core.cfg, rail, &op) {
             self.engine.schedule_at(
                 now + delay,
                 Ev::PrefetchIssue {
@@ -679,7 +686,7 @@ impl PodSim {
     /// past the rate cap, else start its walk on the real walker pool.
     fn admit_hint(&mut self, now: Time, gpu: u32, hint: Hint) {
         let page = hint.page;
-        if page_covered(&self.mmus[gpu as usize], page) {
+        if page_covered(self.shards.mmu(gpu), page) {
             self.prefetcher.counters.useless += 1;
             // Keep the deferred queue draining even when reissued hints
             // die here: a free slot means no completion event will come
@@ -719,7 +726,7 @@ impl PodSim {
     /// later `finish` with the same rule.
     fn start_walk(&mut self, at: Time, gpu: u32, page: PageId, rec: impl FnOnce(u32) -> WalkRec) {
         let (prefetch, started) = {
-            let mmu = &mut self.mmus[gpu as usize];
+            let mmu = self.shards.mmu_mut(gpu);
             let deepest = mmu.pwc.probe(page);
             let accesses = mmu.page_table.accesses_for_walk(deepest);
             let rec = rec(deepest);
@@ -779,8 +786,8 @@ impl PodSim {
             let r = &self.slab[req as usize];
             (r.dst as usize, r.rail as usize, PageId(r.page))
         };
-        let decision = now + self.t_l1;
-        let mmu = &mut self.mmus[dst];
+        let decision = now + self.core.t_l1;
+        let mmu = self.shards.mmu_mut(dst as u32);
         if mmu.l1[rail].lookup(page.0) {
             self.finish_translation(decision, req, TransClass::L1Hit);
             return;
@@ -803,9 +810,9 @@ impl PodSim {
 
     /// Shared-L2 stage for a station's primary miss.
     fn on_l2(&mut self, now: Time, gpu: u32, station: u32, page: u64) {
-        let decision = now + self.t_l2;
+        let decision = now + self.core.t_l2;
         let page = PageId(page);
-        let mmu = &mut self.mmus[gpu as usize];
+        let mmu = self.shards.mmu_mut(gpu);
         if mmu.l2.lookup(page.0) {
             self.complete_station(decision, gpu, station, page, PrimaryOutcome::L2Hit);
             return;
@@ -828,18 +835,20 @@ impl PodSim {
 
     #[inline]
     fn walk_latency(&self, accesses: u32) -> Time {
-        self.t_pwc + accesses as u64 * self.t_walk_mem
+        self.core.t_pwc + accesses as u64 * self.core.t_walk_mem
     }
 
     /// Shared walk-completion path (`WalkDone` and `PrefetchDone`).
     fn on_walk_done(&mut self, now: Time, gpu: u32, page: u64) {
         let page = PageId(page);
-        let rec = self.mmus[gpu as usize]
+        let rec = self
+            .shards
+            .mmu_mut(gpu)
             .pending_walks
             .remove(&page)
             .expect("WalkDone for unknown walk");
         let (l2_evicted, hint_l1_evicted) = {
-            let mmu = &mut self.mmus[gpu as usize];
+            let mmu = self.shards.mmu_mut(gpu);
             // Mostly-inclusive fill: PWCs + L2 (station L1s below).
             mmu.page_table.resolve(page);
             mmu.pwc.fill_walk(page);
@@ -875,14 +884,14 @@ impl PodSim {
             self.complete_station(now, gpu, station, page, outcome);
         }
         // Free the walker slot; start one queued walk if present.
-        if let Some(next) = self.mmus[gpu as usize].walkers.finish() {
+        if let Some(next) = self.shards.mmu_mut(gpu).walkers.finish() {
             let latency = self.walk_latency(next.accesses);
             self.engine
                 .schedule_at(now + latency, completion_ev(next.prefetch, next.gpu, next.page));
         }
         // §6.2 software-guided next-page prefetch.
-        if self.cfg.trans.prefetch.enabled && !rec.prefetch {
-            let depth = self.cfg.trans.prefetch.depth.max(1) as u64;
+        if self.core.cfg.trans.prefetch.enabled && !rec.prefetch {
+            let depth = self.core.cfg.trans.prefetch.depth.max(1) as u64;
             for d in 1..=depth {
                 self.maybe_prefetch(now, gpu, PageId(page.0 + d));
             }
@@ -890,7 +899,7 @@ impl PodSim {
     }
 
     fn maybe_prefetch(&mut self, now: Time, gpu: u32, page: PageId) {
-        if page_covered(&self.mmus[gpu as usize], page) {
+        if page_covered(self.shards.mmu(gpu), page) {
             return;
         }
         self.start_walk(now, gpu, page, |_| WalkRec {
@@ -911,7 +920,7 @@ impl PodSim {
         outcome: PrimaryOutcome,
     ) {
         let (l1_evicted, reqs) = {
-            let mmu = &mut self.mmus[gpu as usize];
+            let mmu = self.shards.mmu_mut(gpu);
             let evicted = mmu.l1[station as usize].fill(page.0);
             (evicted, mmu.mshr[station as usize].complete(page))
         };
@@ -926,8 +935,8 @@ impl PodSim {
         }
         // MSHR slots freed: retry stalled requests (they re-run the L1
         // stage; the page may now hit).
-        while self.mmus[gpu as usize].mshr[station as usize].has_free() {
-            match self.mmus[gpu as usize].stalled[station as usize].pop_front() {
+        while self.shards.mmu(gpu).mshr[station as usize].has_free() {
+            match self.shards.mmu_mut(gpu).stalled[station as usize].pop_front() {
                 Some(rid) => self.engine.schedule_at(now, Ev::Retry { req: rid }),
                 None => break,
             }
@@ -944,13 +953,13 @@ impl PodSim {
     /// bit-identical).
     fn finish_translation(&mut self, at: Time, req: u32, class: TransClass) {
         let view = self.view(req);
-        let t_hbm_done = at + self.t_hbm;
-        let ack = self.cfg.link.ack_bytes;
+        let t_hbm_done = at + self.core.t_hbm;
+        let ack = self.core.cfg.link.ack_bytes;
         // The ACK retraces the flow's chain in reverse (the rail function
         // is symmetric, so both directions share the destination rail).
         let path = self.fabric.path(view.dst, view.src, t_hbm_done, ack);
         self.record_traversal(t_hbm_done, &path);
-        let t_ack = path.arrive() + self.t_fabric;
+        let t_ack = path.arrive() + self.core.t_fabric;
         if self.per_hop {
             self.engine.schedule_at(t_hbm_done, Ev::Hop);
             for &h in path.intermediate() {
@@ -962,10 +971,10 @@ impl PodSim {
             class,
             rat: at - view.target_arrive,
             ack_at: t_ack,
-            fabric: self.t_fabric,
-            net_fwd: view.target_arrive - (view.issue + self.t_fabric),
-            memory: self.t_hbm,
-            net_ack: (t_ack - self.t_fabric) - t_hbm_done,
+            fabric: self.core.t_fabric,
+            net_fwd: view.target_arrive - (view.issue + self.core.t_fabric),
+            memory: self.core.t_hbm,
+            net_ack: (t_ack - self.core.t_fabric) - t_hbm_done,
         };
         for obs in &mut self.observers {
             obs.on_translation(at, &view, &tr);
@@ -985,7 +994,7 @@ impl PodSim {
         let op_done = self.wgs[wg as usize].on_ack();
         if op_done {
             let op_id = self.wgs[wg as usize].op.id as usize;
-            for &child in &self.children[op_id] {
+            for &child in &self.core.children[op_id] {
                 self.engine.schedule_at(now, Ev::WgStart { wg: child });
             }
         } else {
@@ -1006,10 +1015,10 @@ mod tests {
     use crate::config::presets::{paper_baseline, paper_ideal, quick_test};
     use crate::config::{CollectiveKind, RequestSizing};
     use crate::util::units::{ns, MIB};
+    use super::super::session::SessionBuilder;
 
-    // Local session-backed equivalents of the deprecated shims (the tests
-    // below predate the session API; these shadow the glob-imported
-    // shims so the module exercises the supported surface).
+    // Local session-backed run helpers (the tests below predate the
+    // session API and read naturally as one-shot runs).
     fn run(cfg: &PodConfig) -> Result<RunStats> {
         Ok(SessionBuilder::new(cfg).build()?.run_to_completion())
     }
@@ -1090,6 +1099,24 @@ mod tests {
             fused.events,
             per_hop.events
         );
+    }
+
+    #[test]
+    fn sharded_engine_matches_fused_bit_for_bit() {
+        // The cheap in-module differential (the full grid lives in
+        // rust/tests/engine_diff.rs): the sharded engine dispatches the
+        // identical event stream, so results — raw event count included —
+        // are bit-identical at any thread count.
+        let fused = run(&small(8, 4 * MIB)).unwrap();
+        for threads in [1u32, 3] {
+            let mut c = small(8, 4 * MIB);
+            c.engine = EnginePolicy::Sharded { threads };
+            let sharded = run(&c).unwrap();
+            assert_eq!(fused.completion, sharded.completion, "{threads} threads");
+            assert_eq!(fused.classes, sharded.classes, "{threads} threads");
+            assert_eq!(fused.breakdown, sharded.breakdown, "{threads} threads");
+            assert_eq!(fused.events, sharded.events, "{threads} threads: no extra events");
+        }
     }
 
     #[test]

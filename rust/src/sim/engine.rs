@@ -10,6 +10,7 @@
 //! (`sim::wheel`): near-future events take the O(1) ring path, far-future
 //! ones the heap, with exact `(time, seq)` FIFO ordering across both.
 
+use super::sharded::{ShardRoute, ShardedEngine};
 use super::wheel::TimingWheel;
 use crate::util::units::Time;
 
@@ -106,6 +107,105 @@ impl<E: Clone> Engine<E> {
         self.now = t;
         self.processed += 1;
         Some((t, ev))
+    }
+}
+
+/// The engine an `EnginePolicy` resolves to: the classic single-wheel
+/// [`Engine`] (`Fused` / `PerHop`) or the conservative-window
+/// [`ShardedEngine`] (`Sharded { threads }`). One uniform driver API so
+/// the model is engine-agnostic; both dispatch in exact `(time, seq)`
+/// order and therefore produce bit-identical runs.
+#[derive(Debug)]
+pub enum AnyEngine<E> {
+    /// Single pending wheel, dispatch and drain on one thread.
+    Single(Engine<E>),
+    /// Per-shard wheels drained in parallel conservative windows,
+    /// merged and dispatched serially (`sim::sharded`).
+    Sharded(ShardedEngine<E>),
+}
+
+impl<E> AnyEngine<E> {
+    /// Single-wheel engine pre-sized for `cap` pending events.
+    pub fn single(cap: usize) -> Self {
+        AnyEngine::Single(Engine::with_capacity(cap))
+    }
+
+    /// Sharded engine with `threads` shards and the given conservative
+    /// lookahead, pre-sized for `cap` pending events.
+    pub fn sharded(threads: usize, lookahead: Time, cap: usize) -> Self {
+        AnyEngine::Sharded(ShardedEngine::with_capacity(threads, lookahead, cap))
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> Time {
+        match self {
+            AnyEngine::Single(e) => e.now(),
+            AnyEngine::Sharded(e) => e.now(),
+        }
+    }
+
+    /// Events processed so far.
+    pub fn processed(&self) -> u64 {
+        match self {
+            AnyEngine::Single(e) => e.processed(),
+            AnyEngine::Sharded(e) => e.processed(),
+        }
+    }
+
+    /// Events currently pending.
+    pub fn pending(&self) -> usize {
+        match self {
+            AnyEngine::Single(e) => e.pending(),
+            AnyEngine::Sharded(e) => e.pending(),
+        }
+    }
+
+    /// True if the event set is exhausted.
+    pub fn idle(&self) -> bool {
+        match self {
+            AnyEngine::Single(e) => e.idle(),
+            AnyEngine::Sharded(e) => e.idle(),
+        }
+    }
+
+    /// Timestamp of the earliest pending event without removing it.
+    pub fn peek_time(&mut self) -> Option<Time> {
+        match self {
+            AnyEngine::Single(e) => e.peek_time(),
+            AnyEngine::Sharded(e) => e.peek_time(),
+        }
+    }
+}
+
+impl<E: ShardRoute> AnyEngine<E> {
+    /// Schedule `ev` at absolute time `at` (>= now).
+    #[inline]
+    pub fn schedule_at(&mut self, at: Time, ev: E) {
+        match self {
+            AnyEngine::Single(e) => e.schedule_at(at, ev),
+            AnyEngine::Sharded(e) => e.schedule_at(at, ev),
+        }
+    }
+
+    /// Schedule `ev` after `delay`.
+    #[inline]
+    pub fn schedule_in(&mut self, delay: Time, ev: E) {
+        match self {
+            AnyEngine::Single(e) => e.schedule_in(delay, ev),
+            AnyEngine::Sharded(e) => e.schedule_in(delay, ev),
+        }
+    }
+}
+
+impl<E: ShardRoute + Clone + Send> AnyEngine<E> {
+    /// Pop the next event, advancing the clock to its timestamp.
+    #[inline]
+    pub fn next(&mut self) -> Option<(Time, E)> {
+        match self {
+            AnyEngine::Single(e) => e.next(),
+            AnyEngine::Sharded(e) => e.next(),
+        }
     }
 }
 

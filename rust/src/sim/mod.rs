@@ -8,15 +8,23 @@
 //! overflow); ordering stays exact across both. The model (the pod) owns
 //! the engine and drives the loop itself, so handlers can mutate the
 //! whole model without borrow gymnastics.
+//!
+//! For big pods the pending set itself shards across cores: `sharded`
+//! drains per-shard wheels in parallel conservative windows and merges
+//! them back into the same exact `(time, seq)` dispatch order, so the
+//! parallel engine stays a drop-in, bit-identical replacement
+//! ([`AnyEngine`] selects between the two).
 
 pub mod engine;
 pub mod queue;
 pub mod server;
+pub mod sharded;
 pub mod wheel;
 
-pub use engine::Engine;
+pub use engine::{AnyEngine, Engine};
 pub use queue::EventQueue;
 pub use server::{BoundedServer, Server};
+pub use sharded::{ShardRoute, ShardedEngine};
 pub use wheel::TimingWheel;
 
 pub use crate::util::units::Time;

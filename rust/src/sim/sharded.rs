@@ -1,0 +1,505 @@
+//! Sharded pending-set engine: parallel conservative-window drain,
+//! serial exact-order dispatch.
+//!
+//! One big run is a single event stream, and most of that stream's
+//! *model* work (TLB lookups, MSHR bookkeeping, walker scheduling) must
+//! stay serial to remain bit-deterministic: fabric admission is
+//! decision-ordered (`NetResources::path`), engine sequence numbers are
+//! allocated in dispatch order, and MSHR coalescing depends on arrival
+//! interleaving. What *can* parallelize safely is the pending set itself
+//! — the per-event cost of keeping millions of future events sorted.
+//!
+//! [`ShardedEngine`] therefore splits the pending set across `threads`
+//! [`TimingWheel`] shards (events routed by [`ShardRoute`], e.g.
+//! `gpu % shards`) and advances in conservative windows:
+//!
+//! 1. **Open** — the window starts at the earliest pending timestamp
+//!    `t_min` across all shards and spans `[t_min, t_min + lookahead)`,
+//!    where `lookahead` is a lower bound on cross-shard event causation
+//!    delay (the minimum fabric path latency — see
+//!    `Fabric::min_path_latency`).
+//! 2. **Drain** — every shard pops its events below the window end into
+//!    a sorted per-shard batch; shards are disjoint `&mut`, so this runs
+//!    across OS threads (`std::thread::scope`) when the pending set is
+//!    large enough to pay for the spawns.
+//! 3. **Merge + dispatch** — the per-shard batches k-way-merge into one
+//!    stream in exact global `(time, seq)` order and dispatch serially.
+//!    Events a handler schedules *inside* the open window land in a
+//!    spill wheel that every [`ShardedEngine::next`] compares against
+//!    the merged batch head; events at or beyond the window end route to
+//!    their owner shard's wheel (the cross-shard mailbox).
+//!
+//! Determinism is structural, not a tuning outcome: dispatch order is
+//! exact `(time, seq)` order regardless of the lookahead value or the
+//! thread count, so a sharded run is **bit-identical** to the
+//! single-wheel [`super::Engine`] (pinned by the in-module differential
+//! proptest and by `rust/tests/engine_diff.rs`). The lookahead only
+//! decides how many events each window amortizes its synchronization
+//! over — a wrong bound costs speed, never correctness.
+
+use super::wheel::TimingWheel;
+use crate::util::units::Time;
+
+/// One pending event: `(time, seq, payload)`.
+type Item<E> = (Time, u64, E);
+
+/// Don't spawn drain threads below this many total pending events — the
+/// per-window `thread::scope` spawn/join cost (~10 µs) needs a few
+/// thousand events of sorting work to amortize. Below it the drain runs
+/// serially on the dispatch thread, with identical results.
+const PARALLEL_DRAIN_MIN: usize = 8192;
+
+/// Deterministic event → shard assignment for [`ShardedEngine`].
+///
+/// The mapping must be a pure function of the event payload (so any
+/// thread count yields the same per-shard streams for the same run) but
+/// is otherwise free — shards only partition the *pending set*, never
+/// the model, so load balance is the only thing at stake.
+pub trait ShardRoute {
+    /// Owning shard index for this event, in `0..shards` (`shards ≥ 1`).
+    fn route(&self, shards: usize) -> usize;
+}
+
+/// The sharded event-loop driver: per-shard timing wheels drained in
+/// conservative windows, merged and dispatched in exact `(time, seq)`
+/// order. API mirrors [`super::Engine`]; results are bit-identical.
+#[derive(Debug)]
+pub struct ShardedEngine<E> {
+    now: Time,
+    seq: u64,
+    /// Per-shard pending wheels — the cross-shard mailboxes. Disjoint by
+    /// construction, hence drainable in parallel.
+    shards: Vec<TimingWheel<E>>,
+    /// Events scheduled by handlers *into* the open window (time below
+    /// `window_end`); merged against the batch head on every pop.
+    spill: TimingWheel<E>,
+    /// The open window's merged event stream, in `(time, seq)` order.
+    batch: Vec<Item<E>>,
+    /// Dispatch position in `batch`.
+    cursor: usize,
+    /// Per-shard drain scratch, reused across windows.
+    scratch: Vec<Vec<Item<E>>>,
+    /// Half-open end of the current window; schedules below it spill.
+    window_end: Time,
+    /// Conservative window span (min cross-shard causation delay).
+    lookahead: Time,
+    processed: u64,
+    /// Optional event-count limit — a runaway-model backstop.
+    pub max_events: u64,
+}
+
+impl<E> ShardedEngine<E> {
+    /// Engine with `threads` shards (≥ 1) and the given lookahead,
+    /// pre-sized for `cap` pending events.
+    pub fn with_capacity(threads: usize, lookahead: Time, cap: usize) -> Self {
+        let threads = threads.max(1);
+        Self {
+            now: 0,
+            seq: 0,
+            shards: (0..threads)
+                .map(|_| TimingWheel::with_capacity(cap / threads + 1))
+                .collect(),
+            spill: TimingWheel::new(),
+            batch: Vec::new(),
+            cursor: 0,
+            scratch: (0..threads).map(|_| Vec::new()).collect(),
+            window_end: 0,
+            lookahead,
+            processed: 0,
+            max_events: u64::MAX,
+        }
+    }
+
+    /// Number of shards (= drain threads at full parallelism).
+    pub fn shards(&self) -> usize {
+        self.shards.len()
+    }
+
+    /// Current simulated time.
+    #[inline]
+    pub fn now(&self) -> Time {
+        self.now
+    }
+
+    /// Events processed so far.
+    pub fn processed(&self) -> u64 {
+        self.processed
+    }
+
+    /// Events currently pending (batch remainder + spill + all shards).
+    pub fn pending(&self) -> usize {
+        self.batch.len() - self.cursor
+            + self.spill.len()
+            + self.shards.iter().map(TimingWheel::len).sum::<usize>()
+    }
+
+    /// True if the event set is exhausted.
+    pub fn idle(&self) -> bool {
+        self.pending() == 0
+    }
+
+    /// Timestamp of the earliest pending event without removing it.
+    /// Mid-window the batch/spill frontier is the global frontier (shard
+    /// wheels only hold events at or beyond the window end).
+    pub fn peek_time(&mut self) -> Option<Time> {
+        let mut best: Option<(Time, u64)> =
+            self.batch.get(self.cursor).map(|&(t, s, _)| (t, s));
+        for key in std::iter::once(&mut self.spill)
+            .chain(self.shards.iter_mut())
+            .filter_map(TimingWheel::peek_key)
+        {
+            best = Some(match best {
+                Some(b) => b.min(key),
+                None => key,
+            });
+        }
+        best.map(|(t, _)| t)
+    }
+}
+
+impl<E: ShardRoute> ShardedEngine<E> {
+    /// Schedule `ev` at absolute time `at` (>= now). Inside the open
+    /// window the event spills (it must dispatch *this* window to keep
+    /// exact order); otherwise it routes to its owner shard's wheel.
+    #[inline]
+    pub fn schedule_at(&mut self, at: Time, ev: E) {
+        debug_assert!(at >= self.now, "scheduling into the past: at={at} now={}", self.now);
+        let at = at.max(self.now);
+        if at < self.window_end {
+            self.spill.push(at, self.seq, ev);
+        } else {
+            let shard = ev.route(self.shards.len());
+            self.shards[shard].push(at, self.seq, ev);
+        }
+        self.seq += 1;
+    }
+
+    /// Schedule `ev` after `delay`.
+    #[inline]
+    pub fn schedule_in(&mut self, delay: Time, ev: E) {
+        self.schedule_at(self.now + delay, ev);
+    }
+}
+
+impl<E: ShardRoute + Clone + Send> ShardedEngine<E> {
+    /// Pop the next event in exact global `(time, seq)` order, advancing
+    /// the clock to its timestamp.
+    #[inline]
+    pub fn next(&mut self) -> Option<(Time, E)> {
+        if self.processed >= self.max_events {
+            return None;
+        }
+        loop {
+            let batch_key = self.batch.get(self.cursor).map(|&(t, s, _)| (t, s));
+            let spill_key = self.spill.peek_key();
+            let (t, ev) = match (batch_key, spill_key) {
+                (None, None) => {
+                    if !self.open_window() {
+                        return None;
+                    }
+                    continue;
+                }
+                // Spill events always predate every shard-resident event
+                // (they were scheduled below the window end); take one
+                // whenever it predates the batch head too.
+                (b, Some(s)) if b.is_none() || s < b.unwrap() => {
+                    let (t, _, ev) = self.spill.pop().expect("peeked spill must pop");
+                    (t, ev)
+                }
+                _ => {
+                    let (t, _, ref ev) = self.batch[self.cursor];
+                    self.cursor += 1;
+                    (t, ev.clone())
+                }
+            };
+            debug_assert!(t >= self.now);
+            self.now = t;
+            self.processed += 1;
+            return Some((t, ev));
+        }
+    }
+
+    /// Open the next conservative window: find the global frontier
+    /// `t_min`, drain every shard's events below `t_min + lookahead`
+    /// (in parallel when the pending set is large enough), and merge the
+    /// sorted per-shard batches into the dispatch stream. Returns false
+    /// when every shard is empty (the run is drained).
+    fn open_window(&mut self) -> bool {
+        debug_assert!(self.cursor >= self.batch.len() && self.spill.is_empty());
+        let t_min = match self.shards.iter_mut().filter_map(TimingWheel::peek_key).min() {
+            Some((t, _)) => t,
+            None => return false,
+        };
+        // `max(1)` keeps the window non-empty even at zero lookahead —
+        // every event at exactly `t_min` still drains, so progress is
+        // unconditional.
+        let end = t_min.saturating_add(self.lookahead.max(1));
+        self.window_end = end;
+        self.batch.clear();
+        self.cursor = 0;
+        let total: usize = self.shards.iter().map(TimingWheel::len).sum();
+        if self.shards.len() > 1 && total >= PARALLEL_DRAIN_MIN {
+            // Shards are disjoint `&mut`s: each thread owns one wheel and
+            // one scratch vec for the duration of the scope.
+            std::thread::scope(|s| {
+                for (wheel, out) in self.shards.iter_mut().zip(self.scratch.iter_mut()) {
+                    s.spawn(move || drain_below(wheel, end, out));
+                }
+            });
+        } else {
+            for (wheel, out) in self.shards.iter_mut().zip(self.scratch.iter_mut()) {
+                drain_below(wheel, end, out);
+            }
+        }
+        // K-way merge of the sorted per-shard batches. Linear head scan:
+        // shard counts are small (≈ core counts), so the scan beats a
+        // heap's constant factor.
+        let mut heads = vec![0usize; self.scratch.len()];
+        loop {
+            let mut best: Option<(usize, (Time, u64))> = None;
+            for (i, b) in self.scratch.iter().enumerate() {
+                if let Some(&(t, s, _)) = b.get(heads[i]) {
+                    if best.is_none_or(|(_, k)| (t, s) < k) {
+                        best = Some((i, (t, s)));
+                    }
+                }
+            }
+            let Some((i, _)) = best else { break };
+            self.batch.push(self.scratch[i][heads[i]].clone());
+            heads[i] += 1;
+        }
+        for b in &mut self.scratch {
+            b.clear();
+        }
+        debug_assert!(!self.batch.is_empty(), "window opened on a non-empty frontier");
+        true
+    }
+}
+
+/// Pop every event strictly below `end` from `wheel` into `out` (already
+/// in `(time, seq)` order — `TimingWheel::pop` is exact).
+fn drain_below<E: Clone>(wheel: &mut TimingWheel<E>, end: Time, out: &mut Vec<Item<E>>) {
+    debug_assert!(out.is_empty());
+    while let Some((t, _)) = wheel.peek_key() {
+        if t >= end {
+            break;
+        }
+        let item = wheel.pop().expect("peeked event must pop");
+        out.push(item);
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::Engine;
+    use crate::util::proptest::{check, PairOf, RangeU64, VecOf};
+
+    /// Payload routed by value — lets tests steer shard assignment.
+    #[derive(Debug, Clone, Copy, PartialEq)]
+    struct Ev(u64);
+
+    impl ShardRoute for Ev {
+        fn route(&self, shards: usize) -> usize {
+            (self.0 as usize) % shards
+        }
+    }
+
+    /// Drive an engine with a deterministic self-scheduling model: each
+    /// popped event `v ≥ 4` spawns a child `v / 4` after a payload-derived
+    /// delay that exercises the spill (below lookahead), mailbox (above
+    /// it) and overflow-heap (far future) paths. Returns the full
+    /// `(time, payload)` dispatch sequence.
+    fn drive_single(seeds: &[(Time, u64)]) -> Vec<(Time, u64)> {
+        let mut e: Engine<Ev> = Engine::new();
+        for &(t, v) in seeds {
+            e.schedule_at(t, Ev(v));
+        }
+        let mut log = Vec::new();
+        while let Some((t, Ev(v))) = e.next() {
+            log.push((t, v));
+            if v >= 4 {
+                e.schedule_at(t + child_delay(v), Ev(v / 4));
+            }
+        }
+        log
+    }
+
+    fn drive_sharded(threads: usize, lookahead: Time, seeds: &[(Time, u64)]) -> Vec<(Time, u64)> {
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(threads, lookahead, 64);
+        for &(t, v) in seeds {
+            e.schedule_at(t, Ev(v));
+        }
+        let mut log = Vec::new();
+        while let Some((t, Ev(v))) = e.next() {
+            log.push((t, v));
+            if v >= 4 {
+                e.schedule_at(t + child_delay(v), Ev(v / 4));
+            }
+        }
+        assert!(e.idle());
+        log
+    }
+
+    /// Delays straddle every boundary the merge has to get right: 0 and
+    /// 1 (same-window ties), a few hundred (intra-window), thousands
+    /// (next-window mailbox) and tens of millions (overflow heap).
+    fn child_delay(v: u64) -> Time {
+        match v % 5 {
+            0 => 0,
+            1 => 1,
+            2 => 317,
+            3 => 4_096,
+            _ => 40_000_000,
+        }
+    }
+
+    #[test]
+    fn matches_single_engine_exactly() {
+        let seeds: Vec<(Time, u64)> =
+            (0..200).map(|i| ((i * 7919) % 30_000, (i * 104_729) % 4096)).collect();
+        let reference = drive_single(&seeds);
+        for threads in [1, 2, 4, 7] {
+            for lookahead in [1, 500, 4_096, 1_000_000] {
+                assert_eq!(
+                    drive_sharded(threads, lookahead, &seeds),
+                    reference,
+                    "threads={threads} lookahead={lookahead}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn fifo_among_simultaneous_events_across_shards() {
+        // Ten same-timestamp events striped over 3 shards must still pop
+        // in scheduling (seq) order after the merge.
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(3, 1_000, 16);
+        for i in 0..10 {
+            e.schedule_at(42, Ev(i));
+        }
+        let order: Vec<u64> = std::iter::from_fn(|| e.next().map(|(_, Ev(v))| v)).collect();
+        assert_eq!(order, (0..10).collect::<Vec<_>>());
+        assert_eq!(e.processed(), 10);
+    }
+
+    #[test]
+    fn spill_events_interleave_with_batch_in_key_order() {
+        // lookahead 100 opens a [0, 100) window holding both seeds; the
+        // handler for the first schedules into the open window (spill)
+        // and the spill event must dispatch between the two batch events.
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(2, 100, 16);
+        e.schedule_at(10, Ev(1));
+        e.schedule_at(50, Ev(2));
+        assert_eq!(e.next(), Some((10, Ev(1))));
+        e.schedule_at(20, Ev(3)); // into the open window → spill
+        e.schedule_at(200, Ev(4)); // beyond it → shard mailbox
+        assert_eq!(e.next(), Some((20, Ev(3))));
+        assert_eq!(e.next(), Some((50, Ev(2))));
+        assert_eq!(e.next(), Some((200, Ev(4))));
+        assert_eq!(e.next(), None);
+        assert!(e.idle());
+    }
+
+    #[test]
+    fn window_boundary_is_half_open() {
+        // An event exactly at `t_min + lookahead` belongs to the *next*
+        // window; one at `t_min + lookahead - 1` drains with the first.
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(2, 100, 16);
+        e.schedule_at(0, Ev(0));
+        e.schedule_at(99, Ev(1));
+        e.schedule_at(100, Ev(2));
+        assert_eq!(e.next(), Some((0, Ev(0))));
+        assert_eq!(e.pending(), 2);
+        // Window [0, 100) drained events 0 and 1; event 2 is still in its
+        // shard wheel.
+        assert_eq!(e.batch.len(), 2);
+        assert_eq!(e.next(), Some((99, Ev(1))));
+        assert_eq!(e.next(), Some((100, Ev(2))));
+        assert_eq!(e.next(), None);
+    }
+
+    #[test]
+    fn peek_tracks_the_global_frontier() {
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(2, 50, 16);
+        e.schedule_at(100, Ev(1));
+        e.schedule_at(30, Ev(0));
+        assert_eq!(e.peek_time(), Some(30));
+        assert_eq!(e.next(), Some((30, Ev(0))));
+        assert_eq!(e.peek_time(), Some(100));
+        e.schedule_at(40, Ev(2)); // spills into the open [30, 80) window
+        assert_eq!(e.peek_time(), Some(40));
+        assert_eq!(e.next(), Some((40, Ev(2))));
+        assert_eq!(e.next(), Some((100, Ev(1))));
+        assert_eq!(e.peek_time(), None);
+    }
+
+    #[test]
+    fn max_events_backstop() {
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(2, 1_000, 16);
+        e.max_events = 5;
+        e.schedule_at(0, Ev(4));
+        let mut n = 0;
+        while let Some((_, Ev(v))) = e.next() {
+            n += 1;
+            e.schedule_in(1, Ev(v.max(4)));
+        }
+        assert_eq!(n, 5);
+    }
+
+    #[test]
+    fn zero_lookahead_still_makes_progress() {
+        // Degenerate lookahead: every window holds exactly one timestamp.
+        let seeds: Vec<(Time, u64)> = (0..50).map(|i| (i * 13, i)).collect();
+        assert_eq!(drive_sharded(4, 0, &seeds), drive_single(&seeds));
+    }
+
+    #[test]
+    fn prop_sharded_matches_single_across_window_boundaries() {
+        // The mailbox-merge differential: random seed sets driven through
+        // the self-scheduling model must dispatch identically on the
+        // single-wheel engine and on every (threads, lookahead) combo —
+        // including lookaheads straddling the wheel-slot granularity and
+        // the seed times' full span, which put window boundaries at every
+        // alignment relative to event clusters.
+        let strat = VecOf {
+            elem: PairOf(
+                RangeU64 { lo: 0, hi: 60_000 },
+                RangeU64 { lo: 0, hi: 1 << 20 },
+            ),
+            max_len: 120,
+        };
+        check("sharded-matches-single", &strat, 60, |seeds| {
+            let reference = drive_single(seeds);
+            [(1usize, 1u64), (2, 317), (3, 4_096), (4, 65_536), (2, u64::MAX / 2)]
+                .iter()
+                .all(|&(threads, lookahead)| {
+                    drive_sharded(threads, lookahead, seeds) == reference
+                })
+        });
+    }
+
+    #[test]
+    fn prop_processed_and_pending_account_exactly() {
+        // Conservation: after draining, processed == seeds + children and
+        // pending == 0, for any interleaving of windows.
+        let strat = VecOf {
+            elem: PairOf(RangeU64 { lo: 0, hi: 20_000 }, RangeU64 { lo: 0, hi: 255 }),
+            max_len: 80,
+        };
+        check("sharded-conservation", &strat, 60, |seeds| {
+            let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(3, 1_000, 16);
+            for &(t, v) in seeds {
+                e.schedule_at(t, Ev(v));
+            }
+            let mut expected = seeds.len() as u64;
+            while let Some((t, Ev(v))) = e.next() {
+                if v >= 4 {
+                    e.schedule_at(t + child_delay(v), Ev(v / 4));
+                    expected += 1;
+                }
+            }
+            e.idle() && e.processed() == expected && e.pending() == 0
+        });
+    }
+}

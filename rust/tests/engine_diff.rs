@@ -1,12 +1,15 @@
-//! Fused-vs-per-hop engine differential: the correctness bar for the
-//! event-fusion fast path (`pod::sim`, `EnginePolicy`).
+//! Engine differential: the correctness bar for the event-fusion fast
+//! path and the sharded parallel engine (`pod::sim`, `EnginePolicy`).
 //!
-//! Both policies must produce **bit-identical** `RunStats` — every
+//! All policies must produce **bit-identical** `RunStats` — every
 //! completion time, latency sum, histogram, translation-class counter,
 //! trace entry and conservation counter — across the preset grid,
-//! including prefetch-enabled and stall-heavy configurations. Only the
-//! raw processed-event count may (and must) differ: the per-hop engine
-//! materializes its marker events, the fused engine doesn't.
+//! including prefetch-enabled and stall-heavy configurations. The raw
+//! processed-event count may (and must) differ for `PerHop` — it
+//! materializes marker events the fused engine doesn't — and must be
+//! **equal** for `Sharded { threads }` at every thread count: the
+//! sharded engine dispatches the identical event stream, only the
+//! pending-set maintenance is parallel.
 //!
 //! Runs go through the session API (`SessionBuilder::engine`), so this
 //! grid simultaneously pins the default session's stock-observer
@@ -24,8 +27,9 @@ fn base(gpus: u32, size: u64) -> PodConfig {
     c
 }
 
-/// Field-by-field equality, `events` and `wall_seconds` excepted.
-fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
+/// Field-by-field equality, `events` and `wall_seconds` excepted
+/// (`events` policy differs by engine: see the callers below).
+fn assert_stats_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
     assert_eq!(fused.completion, per_hop.completion, "{label}: completion");
     assert_eq!(fused.requests, per_hop.requests, "{label}: requests");
     assert_eq!(
@@ -84,13 +88,29 @@ fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
         fused.cross_job_l2_evictions, per_hop.cross_job_l2_evictions,
         "{label}: cross-job L2 evictions"
     );
-    // The engines must actually differ in event volume, or the knob is
-    // wired to nothing.
+}
+
+/// Fused vs per-hop: identical stats, but per-hop must cost extra events
+/// — the engines must actually differ in event volume, or the knob is
+/// wired to nothing.
+fn assert_bit_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
+    assert_stats_identical(fused, per_hop, label);
     assert!(
         per_hop.events > fused.events,
         "{label}: per-hop must process more events (fused {}, per-hop {})",
         fused.events,
         per_hop.events
+    );
+}
+
+/// Fused vs sharded: identical stats *including* the raw event count —
+/// the sharded engine dispatches the same stream, just drained in
+/// parallel windows.
+fn assert_bit_identical_with_events(fused: &RunStats, sharded: &RunStats, label: &str) {
+    assert_stats_identical(fused, sharded, label);
+    assert_eq!(
+        fused.events, sharded.events,
+        "{label}: sharded must process exactly the fused event stream"
     );
 }
 
@@ -102,10 +122,17 @@ fn run_engine(cfg: &PodConfig, policy: EnginePolicy, label: &str) -> RunStats {
         .run_to_completion()
 }
 
+/// Every grid point runs all engine policies: fused vs per-hop (marker
+/// events extra), and fused vs sharded at 1, 2 and 4 threads (bit-equal,
+/// events included).
 fn run_both(cfg: PodConfig, label: &str) {
     let fused = run_engine(&cfg, EnginePolicy::Fused, label);
     let per_hop = run_engine(&cfg, EnginePolicy::PerHop, label);
     assert_bit_identical(&fused, &per_hop, label);
+    for threads in [1u32, 2, 4] {
+        let sharded = run_engine(&cfg, EnginePolicy::Sharded { threads }, label);
+        assert_bit_identical_with_events(&fused, &sharded, &format!("{label} sharded:{threads}"));
+    }
 }
 
 #[test]
@@ -230,10 +257,34 @@ fn multi_tenant_workloads_are_bit_identical() {
         .unwrap()
         .run_to_completion();
     let per_hop = SessionBuilder::new(&cfg)
-        .workload(w)
+        .workload(w.clone())
         .engine(EnginePolicy::PerHop)
         .build()
         .unwrap()
         .run_to_completion();
     assert_bit_identical(&fused, &per_hop, "multi-tenant");
+    let sharded = SessionBuilder::new(&cfg)
+        .workload(w)
+        .engine(EnginePolicy::Sharded { threads: 4 })
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_bit_identical_with_events(&fused, &sharded, "multi-tenant sharded:4");
+}
+
+#[test]
+fn sharded_repeat_runs_are_deterministic_across_thread_counts() {
+    // Same seed → same bits, run-to-run and thread-count-to-thread-count:
+    // the parallel drain must leave no scheduling nondeterminism behind.
+    // (The window/lookahead boundary cases are proptested in
+    // `sim::sharded`.)
+    let mut cfg = base(16, 8 * MIB);
+    cfg.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
+    cfg.workload.trace_source_gpu = Some(0);
+    let reference = run_engine(&cfg, EnginePolicy::Sharded { threads: 2 }, "repeat-ref");
+    for (threads, label) in [(2u32, "repeat-2a"), (2, "repeat-2b"), (4, "repeat-4"), (7, "repeat-7")]
+    {
+        let again = run_engine(&cfg, EnginePolicy::Sharded { threads }, label);
+        assert_bit_identical_with_events(&reference, &again, label);
+    }
 }

@@ -2,10 +2,9 @@
 //!
 //! * stepping (`step` / `run_until`) then finishing is **bit-identical**
 //!   to an uninterrupted run, across engine policies;
-//! * the default session reproduces the deprecated `run_*` shims
-//!   bit-for-bit (the shims delegate to it, and the preset grid pins the
-//!   numbers against the pre-redesign expectations in `integration.rs` /
-//!   `engine_diff.rs`);
+//! * the sharded engine is a drop-in: `Sharded { threads }` sessions
+//!   reproduce `Fused` bit-for-bit at every entry point (the full preset
+//!   grid lives in `engine_diff.rs`);
 //! * observers see monotonically non-decreasing timestamps on `on_event`
 //!   and `on_request_done` (and the dispatch clock never outruns them);
 //! * attaching a no-op observer causes zero stat drift;
@@ -114,33 +113,60 @@ fn stepping_matches_across_engine_policies() {
     assert_eq!(fused.completion, stepped.completion, "cross-engine completion");
     assert_eq!(fused.classes, stepped.classes, "cross-engine classes");
     assert!(stepped.events > fused.events, "per-hop must cost more events");
+    // The sharded engine stepped through run_until cuts stays
+    // bit-identical to the fused straight run — events included.
+    let mut sharded = SessionBuilder::new(&cfg)
+        .engine(EnginePolicy::Sharded { threads: 4 })
+        .build()
+        .unwrap();
+    sharded.run_until(fused.completion / 2);
+    let sharded = sharded.run_to_completion();
+    assert_identical(&fused, &sharded, "sharded stepped vs fused straight");
 }
 
 #[test]
-fn deprecated_shims_delegate_to_the_default_session() {
-    // The acceptance pin: shim output == default-session output, for the
-    // plain, schedule, and workload entry points.
+fn sharded_sessions_are_bit_identical_to_fused_at_every_entry_point() {
+    // The engine-refactor acceptance pin at the session level: a
+    // `Sharded { threads }` session is a drop-in replacement for `Fused`
+    // — plain, schedule, and workload entry points.
     let cfg = tiny(8, MIB);
-    #[allow(deprecated)]
-    let shim = ratsim::pod::run(&cfg).unwrap();
-    assert_identical(&shim, &straight_run(&cfg), "run shim");
+    let fused = straight_run(&cfg);
+    for threads in [1u32, 2, 4] {
+        let sharded = SessionBuilder::new(&cfg)
+            .engine(EnginePolicy::Sharded { threads })
+            .build()
+            .unwrap()
+            .run_to_completion();
+        assert_identical(&fused, &sharded, &format!("sharded:{threads} config source"));
+    }
 
     let sched = alltoall_allpairs(8, MIB).unwrap();
-    #[allow(deprecated)]
-    let shim = ratsim::pod::run_schedule(&cfg, sched.clone()).unwrap();
-    let session = SessionBuilder::new(&cfg)
+    let fused = SessionBuilder::new(&cfg)
         .schedule(sched.clone())
         .build()
         .unwrap()
         .run_to_completion();
-    assert_identical(&shim, &session, "run_schedule shim");
+    let sharded = SessionBuilder::new(&cfg)
+        .schedule(sched.clone())
+        .engine(EnginePolicy::Sharded { threads: 2 })
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_identical(&fused, &sharded, "sharded schedule source");
 
     let w = ratsim::collective::workload::Workload::single(sched);
-    #[allow(deprecated)]
-    let shim = ratsim::pod::run_workload(&cfg, w.clone()).unwrap();
-    let session =
-        SessionBuilder::new(&cfg).workload(w).build().unwrap().run_to_completion();
-    assert_identical(&shim, &session, "run_workload shim");
+    let fused = SessionBuilder::new(&cfg)
+        .workload(w.clone())
+        .build()
+        .unwrap()
+        .run_to_completion();
+    let sharded = SessionBuilder::new(&cfg)
+        .workload(w)
+        .engine(EnginePolicy::Sharded { threads: 4 })
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_identical(&fused, &sharded, "sharded workload source");
 }
 
 /// Records every hook's timestamps into shared vectors.
