@@ -54,7 +54,9 @@ pub fn write_benchjson_file(path: &Path, records: Vec<Json>) -> std::io::Result<
     let mut top = Json::obj();
     top.set("format", Json::from("ratsim-benchjson-v1"));
     top.set("results", Json::Arr(records));
-    std::fs::write(path, top.to_string_pretty())
+    // Atomic: a crash (or a concurrent reader) never sees a half-written
+    // snapshot.
+    ratsim::util::fs::write_atomic(path, top.to_string_pretty())
 }
 
 /// Load a BENCHJSON snapshot as raw records by name (every record kept,

@@ -313,7 +313,8 @@ fn main() {
         );
     }
     if let Ok(out) = std::env::var("RATSIM_BENCH_DIFF") {
-        std::fs::write(&out, diff.to_string_pretty()).expect("write bench diff");
+        ratsim::util::fs::write_atomic(std::path::Path::new(&out), diff.to_string_pretty())
+            .expect("write bench diff");
         println!("\nwrote baseline diff to {out}");
     }
 

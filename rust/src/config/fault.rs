@@ -1,0 +1,646 @@
+//! Fault-injection specification and the compiled fault plan.
+//!
+//! A [`FaultSpec`] is declarative run configuration (JSON round-trip,
+//! CLI `--faults` presets); [`FaultPlan`] compiles it against a concrete
+//! fabric (rail count + tier names) into pure, seeded predicates the
+//! engine consults at transmit/walk time. Every draw is a function of
+//! the *logical* coordinates of the question being asked — `(link, t)`,
+//! `(flow, t)`, `(gpu, t)` — never of host dispatch order, so fault
+//! behaviour is bit-identical across `Fused`/`PerHop`/`Sharded{N}`
+//! engine policies by construction (pinned by `rust/tests/engine_diff.rs`
+//! and `rust/tests/faults.rs`).
+//!
+//! Three fault kinds:
+//!
+//! * **`flap`** — per-(destination GPU, rail) links alternate up/down:
+//!   in each `mttf + mttr` period the link is down for one `mttr`-long
+//!   window at a seeded jitter offset. A transmit that finds its link
+//!   down either **reroutes** onto the first up rail (new sources hit
+//!   that station's cold L1 Link TLB — the paper's cold-miss story
+//!   re-triggered in steady state) or parks in the source's replay
+//!   buffer and runs the timeout → capped-exponential-backoff retry
+//!   loop, aborting to a forced transmit at link recovery after
+//!   `max_retries` (so delivery — and the simulator's conservation
+//!   invariants — always hold).
+//! * **`degrade`** — a seeded fraction of packets crossing one named
+//!   fabric tier take `slow` extra latency (FEC retraining / replay at
+//!   the link level). Latency is only ever *added*, so
+//!   `Fabric::min_path_latency` stays a valid sharded-lookahead bound.
+//! * **`walker-stall`** — per-GPU page-table walkers stall: walks
+//!   *starting* inside a seeded down-window take `stall` extra latency.
+
+use crate::util::json::Json;
+use crate::util::rng::SplitMix64;
+use crate::util::units::{Time, MS, NS, US};
+use anyhow::{bail, Context, Result};
+
+/// Default seed for fault draws (CLI `seed=` / JSON `seed` override).
+pub const DEFAULT_FAULT_SEED: u64 = 0xFA17_5EED;
+
+/// Which fault process is injected.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum FaultKind {
+    /// Per-(dst GPU, rail) link up/down flapping.
+    Flap {
+        /// Mean time to failure: the up span of each period, and the
+        /// range the seeded down-window jitter is drawn from (ps).
+        mttf_ps: Time,
+        /// Mean time to repair: the down-window length (ps).
+        mttr_ps: Time,
+    },
+    /// Probabilistic slow-down of packets crossing one fabric tier.
+    Degrade {
+        /// Tier name as reported by `Fabric::tiers()` (e.g. `switch`,
+        /// `spine`, `inter-pod`).
+        tier: String,
+        /// Fraction of packets degraded, in parts per million (integer
+        /// so the spec stays `Eq` and draws stay float-free).
+        frac_ppm: u32,
+        /// Extra latency a degraded packet takes (ps).
+        slow_ps: Time,
+    },
+    /// Per-GPU walker-pool stalls for walks starting in a down-window.
+    WalkerStall {
+        /// Up span / jitter range of each stall period (ps).
+        mttf_ps: Time,
+        /// Stall-window length per period (ps).
+        mttr_ps: Time,
+        /// Extra walk latency inside the window (ps).
+        stall_ps: Time,
+    },
+}
+
+impl FaultKind {
+    /// Stable kind name used in JSON and the CLI preset syntax.
+    pub fn name(&self) -> &'static str {
+        match self {
+            FaultKind::Flap { .. } => "flap",
+            FaultKind::Degrade { .. } => "degrade",
+            FaultKind::WalkerStall { .. } => "walker-stall",
+        }
+    }
+}
+
+/// Declarative fault-injection configuration (`PodConfig::faults`).
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FaultSpec {
+    /// Seed for every fault draw (independent of the simulation seed).
+    pub seed: u64,
+    /// The injected fault process.
+    pub kind: FaultKind,
+    /// Faults are inert before this instant (ps) — lets scenarios warm
+    /// up fault-free and inject a failover mid-run.
+    pub start_ps: Time,
+    /// Loss-detection delay: a transmit onto a down link times out this
+    /// long after the attempt (ps).
+    pub timeout_ps: Time,
+    /// Base retry backoff; attempt `a` waits `min(backoff << a, cap)` (ps).
+    pub backoff_ps: Time,
+    /// Backoff ceiling (ps).
+    pub backoff_cap_ps: Time,
+    /// Retries before the reliable-transport layer gives up and forces
+    /// delivery at link recovery (counted as an abort).
+    pub max_retries: u32,
+    /// Reroute onto an alternate up rail instead of parking for retry.
+    pub reroute: bool,
+    /// Replay-buffer slots per source GPU (occupancy is tracked; a park
+    /// beyond capacity counts an overflow and skips straight to abort).
+    pub replay_slots: u32,
+}
+
+/// Parse `50us` / `300ns` / `2ms` / bare integer (= ns) into ps.
+fn parse_time_ps(s: &str) -> Result<Time> {
+    let t = s.trim();
+    let (num, mult) = if let Some(p) = t.strip_suffix("us") {
+        (p, US)
+    } else if let Some(p) = t.strip_suffix("ns") {
+        (p, NS)
+    } else if let Some(p) = t.strip_suffix("ms") {
+        (p, MS)
+    } else if let Some(p) = t.strip_suffix("ps") {
+        (p, 1)
+    } else {
+        (t, NS)
+    };
+    let v: u64 = num.trim().parse().map_err(|_| {
+        anyhow::anyhow!("bad duration `{s}` (want integer with ns/us/ms/ps suffix; bare = ns)")
+    })?;
+    Ok(v * mult)
+}
+
+fn fmt_compact(t: Time) -> String {
+    if t >= US && t % US == 0 {
+        format!("{}us", t / US)
+    } else if t >= NS && t % NS == 0 {
+        format!("{}ns", t / NS)
+    } else {
+        format!("{t}ps")
+    }
+}
+
+impl FaultSpec {
+    /// The spec with every shared knob at its documented default and a
+    /// placeholder kind (callers overwrite `kind`).
+    fn defaults(kind: FaultKind) -> FaultSpec {
+        FaultSpec {
+            seed: DEFAULT_FAULT_SEED,
+            kind,
+            start_ps: 0,
+            timeout_ps: 5 * US,
+            backoff_ps: US,
+            backoff_cap_ps: 64 * US,
+            max_retries: 3,
+            reroute: false,
+            replay_slots: 64,
+        }
+    }
+
+    /// Parse the CLI `--faults` preset syntax:
+    /// `flap[:mttf=50us,mttr=10us,...]`,
+    /// `degrade[:tier=switch,frac=0.2,slow=500ns,...]`,
+    /// `walker-stall[:mttf=20us,mttr=5us,stall=2us,...]`.
+    /// Shared knobs accepted by every kind: `seed=`, `start=`,
+    /// `timeout=`, `backoff=`, `cap=`, `retries=`, `slots=`, and the
+    /// bare flag `reroute`. Durations take ns/us/ms suffixes (bare
+    /// integers are ns).
+    pub fn parse(s: &str) -> Result<FaultSpec> {
+        let (name, params) = match s.split_once(':') {
+            Some((n, p)) => (n.trim(), p),
+            None => (s.trim(), ""),
+        };
+        let mut kv: Vec<(String, Option<String>)> = Vec::new();
+        for tok in params.split(',').map(str::trim).filter(|t| !t.is_empty()) {
+            match tok.split_once('=') {
+                Some((k, v)) => kv.push((k.trim().to_string(), Some(v.trim().to_string()))),
+                None => kv.push((tok.to_string(), None)),
+            }
+        }
+        let mut take = |key: &str| -> Option<String> {
+            let i = kv.iter().position(|(k, _)| k == key)?;
+            kv.remove(i).1
+        };
+        let kind = match name {
+            "flap" => FaultKind::Flap {
+                mttf_ps: take("mttf").map(|v| parse_time_ps(&v)).transpose()?.unwrap_or(50 * US),
+                mttr_ps: take("mttr").map(|v| parse_time_ps(&v)).transpose()?.unwrap_or(10 * US),
+            },
+            "degrade" => FaultKind::Degrade {
+                tier: take("tier").unwrap_or_else(|| "switch".to_string()),
+                frac_ppm: match take("frac") {
+                    None => 100_000,
+                    Some(v) => {
+                        let f: f64 = v
+                            .parse()
+                            .map_err(|_| anyhow::anyhow!("bad degrade fraction `{v}`"))?;
+                        if !(0.0..=1.0).contains(&f) {
+                            bail!("degrade fraction must be in [0, 1] (got {v})");
+                        }
+                        (f * 1_000_000.0).round() as u32
+                    }
+                },
+                slow_ps: take("slow").map(|v| parse_time_ps(&v)).transpose()?.unwrap_or(500 * NS),
+            },
+            "walker-stall" | "walkerstall" => FaultKind::WalkerStall {
+                mttf_ps: take("mttf").map(|v| parse_time_ps(&v)).transpose()?.unwrap_or(20 * US),
+                mttr_ps: take("mttr").map(|v| parse_time_ps(&v)).transpose()?.unwrap_or(5 * US),
+                stall_ps: take("stall").map(|v| parse_time_ps(&v)).transpose()?.unwrap_or(2 * US),
+            },
+            other => bail!("unknown fault kind `{other}` (flap|degrade|walker-stall)"),
+        };
+        let mut spec = FaultSpec::defaults(kind);
+        if let Some(v) = take("seed") {
+            spec.seed = v.parse().map_err(|_| anyhow::anyhow!("bad fault seed `{v}`"))?;
+        }
+        if let Some(v) = take("start") {
+            spec.start_ps = parse_time_ps(&v)?;
+        }
+        if let Some(v) = take("timeout") {
+            spec.timeout_ps = parse_time_ps(&v)?;
+        }
+        if let Some(v) = take("backoff") {
+            spec.backoff_ps = parse_time_ps(&v)?;
+        }
+        if let Some(v) = take("cap") {
+            spec.backoff_cap_ps = parse_time_ps(&v)?;
+        }
+        if let Some(v) = take("retries") {
+            spec.max_retries =
+                v.parse().map_err(|_| anyhow::anyhow!("bad retry count `{v}`"))?;
+        }
+        if let Some(v) = take("slots") {
+            spec.replay_slots =
+                v.parse().map_err(|_| anyhow::anyhow!("bad replay slot count `{v}`"))?;
+        }
+        if kv.iter().any(|(k, _)| k == "reroute") {
+            kv.retain(|(k, _)| k != "reroute");
+            spec.reroute = true;
+        }
+        if let Some((k, _)) = kv.first() {
+            bail!("unknown `--faults` parameter `{k}` in `{s}`");
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Reject structurally invalid specs with labeled errors.
+    pub fn validate(&self) -> Result<()> {
+        match &self.kind {
+            FaultKind::Flap { mttf_ps, mttr_ps } => {
+                if *mttf_ps == 0 || *mttr_ps == 0 {
+                    bail!("flap mttf/mttr must be > 0");
+                }
+            }
+            FaultKind::Degrade { tier, frac_ppm, slow_ps } => {
+                if tier.is_empty() {
+                    bail!("degrade tier name must be non-empty");
+                }
+                if *frac_ppm > 1_000_000 {
+                    bail!("degrade fraction beyond 1.0 ({frac_ppm} ppm)");
+                }
+                if *slow_ps == 0 {
+                    bail!("degrade slow-down must be > 0");
+                }
+            }
+            FaultKind::WalkerStall { mttf_ps, mttr_ps, stall_ps } => {
+                if *mttf_ps == 0 || *mttr_ps == 0 {
+                    bail!("walker-stall mttf/mttr must be > 0");
+                }
+                if *stall_ps == 0 {
+                    bail!("walker-stall stall must be > 0");
+                }
+            }
+        }
+        if self.timeout_ps == 0 {
+            bail!("fault timeout must be > 0");
+        }
+        if self.backoff_ps == 0 {
+            bail!("fault backoff must be > 0");
+        }
+        if self.replay_slots == 0 {
+            bail!("need at least one replay slot");
+        }
+        Ok(())
+    }
+
+    /// Compact parameter-bearing label for run names / tables.
+    pub fn label(&self) -> String {
+        match &self.kind {
+            FaultKind::Flap { mttf_ps, mttr_ps } => {
+                format!("flap-{}-{}", fmt_compact(*mttf_ps), fmt_compact(*mttr_ps))
+            }
+            FaultKind::Degrade { tier, frac_ppm, .. } => {
+                format!("degrade-{tier}-{}ppm", frac_ppm)
+            }
+            FaultKind::WalkerStall { .. } => "walker-stall".to_string(),
+        }
+    }
+
+    /// Serialize to the config JSON schema (the `faults` section).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![("kind", Json::from(self.kind.name()))];
+        match &self.kind {
+            FaultKind::Flap { mttf_ps, mttr_ps } => {
+                pairs.push(("mttf_ps", Json::from(*mttf_ps)));
+                pairs.push(("mttr_ps", Json::from(*mttr_ps)));
+            }
+            FaultKind::Degrade { tier, frac_ppm, slow_ps } => {
+                pairs.push(("tier", Json::from(tier.as_str())));
+                pairs.push(("frac_ppm", Json::from(*frac_ppm as u64)));
+                pairs.push(("slow_ps", Json::from(*slow_ps)));
+            }
+            FaultKind::WalkerStall { mttf_ps, mttr_ps, stall_ps } => {
+                pairs.push(("mttf_ps", Json::from(*mttf_ps)));
+                pairs.push(("mttr_ps", Json::from(*mttr_ps)));
+                pairs.push(("stall_ps", Json::from(*stall_ps)));
+            }
+        }
+        pairs.push(("seed", Json::from(self.seed)));
+        pairs.push(("start_ps", Json::from(self.start_ps)));
+        pairs.push(("timeout_ps", Json::from(self.timeout_ps)));
+        pairs.push(("backoff_ps", Json::from(self.backoff_ps)));
+        pairs.push(("backoff_cap_ps", Json::from(self.backoff_cap_ps)));
+        pairs.push(("max_retries", Json::from(self.max_retries as u64)));
+        pairs.push(("reroute", Json::from(self.reroute)));
+        pairs.push(("replay_slots", Json::from(self.replay_slots as u64)));
+        Json::from_pairs(pairs)
+    }
+
+    /// Parse the `faults` config section (absent shared fields get the
+    /// documented defaults).
+    pub fn from_json(j: &Json) -> Result<FaultSpec> {
+        let kind = match j.req_str("kind")? {
+            "flap" => FaultKind::Flap {
+                mttf_ps: j.req_u64("mttf_ps")?,
+                mttr_ps: j.req_u64("mttr_ps")?,
+            },
+            "degrade" => FaultKind::Degrade {
+                tier: j.req_str("tier")?.to_string(),
+                frac_ppm: j.req_u64("frac_ppm")? as u32,
+                slow_ps: j.req_u64("slow_ps")?,
+            },
+            "walker-stall" => FaultKind::WalkerStall {
+                mttf_ps: j.req_u64("mttf_ps")?,
+                mttr_ps: j.req_u64("mttr_ps")?,
+                stall_ps: j.req_u64("stall_ps")?,
+            },
+            other => bail!("unknown fault kind `{other}`"),
+        };
+        let mut spec = FaultSpec::defaults(kind);
+        spec.seed = j.opt_u64("seed", DEFAULT_FAULT_SEED);
+        spec.start_ps = j.opt_u64("start_ps", 0);
+        spec.timeout_ps = j.opt_u64("timeout_ps", spec.timeout_ps);
+        spec.backoff_ps = j.opt_u64("backoff_ps", spec.backoff_ps);
+        spec.backoff_cap_ps = j.opt_u64("backoff_cap_ps", spec.backoff_cap_ps);
+        spec.max_retries = j.opt_u64("max_retries", spec.max_retries as u64) as u32;
+        spec.reroute = j.opt_bool("reroute", false);
+        spec.replay_slots = j.opt_u64("replay_slots", spec.replay_slots as u64) as u32;
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+// ---------------------------------------------------------------------
+// Compiled plan
+// ---------------------------------------------------------------------
+
+/// One SplitMix64 absorption step; chained absorption is order-sensitive,
+/// so `(a, b)` and `(b, a)` key different streams.
+fn mix(h: u64, v: u64) -> u64 {
+    SplitMix64::new(h ^ v.wrapping_mul(0x9E37_79B9_7F4A_7C15)).next_u64()
+}
+
+/// The down-window of period `k` for a flapping process in shifted time:
+/// `[k·(mttf+mttr) + jitter, … + mttr)` with `jitter = h(key, k) % mttf`,
+/// so windows never span a period boundary and membership is O(1).
+fn down_window(seed: u64, key: u64, tp: Time, mttf: Time, mttr: Time) -> (Time, Time) {
+    let period = mttf + mttr;
+    let k = tp / period;
+    let jitter = mix(mix(seed, key), k) % mttf;
+    let s = k * period + jitter;
+    (s, s + mttr)
+}
+
+/// A [`FaultSpec`] compiled against a concrete fabric: rail count and
+/// the resolved degrade-tier index. All queries are pure functions of
+/// their arguments plus the spec seed.
+#[derive(Debug, Clone)]
+pub struct FaultPlan {
+    spec: FaultSpec,
+    rails: u32,
+    /// Resolved index into `Fabric::tiers()` for `Degrade`, else None.
+    degrade_tier: Option<usize>,
+    /// Inclusive u64 draw threshold corresponding to `frac_ppm`.
+    degrade_threshold: u64,
+}
+
+/// Domain-separation salts so the flap, degrade and stall processes draw
+/// from independent streams of the one spec seed.
+const SALT_FLAP: u64 = 0x1;
+const SALT_DEGRADE: u64 = 0x2;
+const SALT_STALL: u64 = 0x3;
+
+impl FaultPlan {
+    /// Compile `spec` for a fabric with `rails` station planes and the
+    /// given tier names; rejects a degrade tier the fabric doesn't have.
+    pub fn new(spec: &FaultSpec, rails: u32, tiers: &[&'static str]) -> Result<FaultPlan> {
+        spec.validate()?;
+        let (degrade_tier, degrade_threshold) = match &spec.kind {
+            FaultKind::Degrade { tier, frac_ppm, .. } => {
+                let idx = tiers
+                    .iter()
+                    .position(|t| *t == tier.as_str())
+                    .with_context(|| {
+                        format!("degrade tier `{tier}` not in this fabric's tiers {tiers:?}")
+                    })?;
+                let thr = ((*frac_ppm as u128 * u64::MAX as u128) / 1_000_000) as u64;
+                (Some(idx), thr)
+            }
+            _ => (None, 0),
+        };
+        Ok(FaultPlan { spec: spec.clone(), rails, degrade_tier, degrade_threshold })
+    }
+
+    /// The spec this plan was compiled from.
+    pub fn spec(&self) -> &FaultSpec {
+        &self.spec
+    }
+
+    /// Rail count the plan was compiled for.
+    pub fn rails(&self) -> u32 {
+        self.rails
+    }
+
+    /// Whether link flapping is active (the reroute/retry machinery only
+    /// engages for `flap` plans).
+    pub fn has_flap(&self) -> bool {
+        matches!(self.spec.kind, FaultKind::Flap { .. })
+    }
+
+    fn link_key(dst: u32, rail: u32) -> u64 {
+        ((dst as u64) << 32) | rail as u64
+    }
+
+    /// Is the (dst GPU, rail) link up at `t`?
+    pub fn link_up(&self, dst: u32, rail: u32, t: Time) -> bool {
+        let FaultKind::Flap { mttf_ps, mttr_ps } = self.spec.kind else { return true };
+        if t < self.spec.start_ps {
+            return true;
+        }
+        let tp = t - self.spec.start_ps;
+        let (s, e) = down_window(
+            self.spec.seed ^ SALT_FLAP,
+            Self::link_key(dst, rail),
+            tp,
+            mttf_ps,
+            mttr_ps,
+        );
+        !(tp >= s && tp < e)
+    }
+
+    /// Earliest instant `>= t` at which the (dst, rail) link is up.
+    pub fn link_up_at(&self, dst: u32, rail: u32, t: Time) -> Time {
+        let FaultKind::Flap { mttf_ps, mttr_ps } = self.spec.kind else { return t };
+        if t < self.spec.start_ps {
+            return t;
+        }
+        let tp = t - self.spec.start_ps;
+        let (s, e) = down_window(
+            self.spec.seed ^ SALT_FLAP,
+            Self::link_key(dst, rail),
+            tp,
+            mttf_ps,
+            mttr_ps,
+        );
+        if tp >= s && tp < e {
+            self.spec.start_ps + e
+        } else {
+            t
+        }
+    }
+
+    /// Degrade draw for a packet of flow (from → to) admitted at `t`:
+    /// `Some((tier index, extra latency))` if this packet is degraded.
+    pub fn degrade(&self, from: u32, to: u32, t: Time) -> Option<(usize, Time)> {
+        let FaultKind::Degrade { slow_ps, .. } = self.spec.kind else { return None };
+        if t < self.spec.start_ps {
+            return None;
+        }
+        let tier = self.degrade_tier?;
+        let flow = ((from as u64) << 32) | to as u64;
+        let h = mix(mix(self.spec.seed ^ SALT_DEGRADE, flow), t);
+        (h <= self.degrade_threshold).then_some((tier, slow_ps))
+    }
+
+    /// Extra latency for a page-table walk starting at `at` on `gpu`
+    /// (0 outside stall windows).
+    pub fn walker_stall(&self, gpu: u32, at: Time) -> Time {
+        let FaultKind::WalkerStall { mttf_ps, mttr_ps, stall_ps } = self.spec.kind else {
+            return 0;
+        };
+        if at < self.spec.start_ps {
+            return 0;
+        }
+        let tp = at - self.spec.start_ps;
+        let (s, e) =
+            down_window(self.spec.seed ^ SALT_STALL, gpu as u64, tp, mttf_ps, mttr_ps);
+        if tp >= s && tp < e {
+            stall_ps
+        } else {
+            0
+        }
+    }
+
+    /// Backoff before retry attempt `attempt` (0-based):
+    /// `min(backoff << attempt, cap)`.
+    pub fn backoff(&self, attempt: u32) -> Time {
+        let shifted = self.spec.backoff_ps.checked_shl(attempt).unwrap_or(Time::MAX);
+        shifted.min(self.spec.backoff_cap_ps)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_presets_and_defaults() {
+        let f = FaultSpec::parse("flap:mttf=40us,mttr=10us,reroute").unwrap();
+        assert_eq!(f.kind, FaultKind::Flap { mttf_ps: 40 * US, mttr_ps: 10 * US });
+        assert!(f.reroute);
+        assert_eq!(f.seed, DEFAULT_FAULT_SEED);
+
+        let d = FaultSpec::parse("degrade:tier=switch,frac=0.25,slow=500ns").unwrap();
+        assert_eq!(
+            d.kind,
+            FaultKind::Degrade { tier: "switch".into(), frac_ppm: 250_000, slow_ps: 500 * NS }
+        );
+
+        let w = FaultSpec::parse("walker-stall").unwrap();
+        assert!(matches!(w.kind, FaultKind::WalkerStall { .. }));
+
+        // Bare numbers are ns; shared knobs apply to every kind.
+        let f2 = FaultSpec::parse("flap:mttf=50000,timeout=2us,retries=5,seed=7").unwrap();
+        assert_eq!(f2.kind, FaultKind::Flap { mttf_ps: 50 * US, mttr_ps: 10 * US });
+        assert_eq!((f2.timeout_ps, f2.max_retries, f2.seed), (2 * US, 5, 7));
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        assert!(FaultSpec::parse("meteor").is_err());
+        assert!(FaultSpec::parse("flap:mttf=0us").is_err());
+        assert!(FaultSpec::parse("flap:bogus=1").is_err());
+        assert!(FaultSpec::parse("degrade:frac=1.5").is_err());
+        assert!(FaultSpec::parse("flap:mttf=fast").is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        for s in [
+            "flap:mttf=40us,mttr=10us,reroute,slots=8",
+            "degrade:tier=spine,frac=0.1,slow=1us",
+            "walker-stall:mttf=30us,mttr=3us,stall=1us,start=5us",
+        ] {
+            let spec = FaultSpec::parse(s).unwrap();
+            assert_eq!(FaultSpec::from_json(&spec.to_json()).unwrap(), spec, "{s}");
+        }
+    }
+
+    fn flap_plan(mttf: Time, mttr: Time, start: Time) -> FaultPlan {
+        let mut spec =
+            FaultSpec::parse(&format!("flap:mttf={}ps,mttr={}ps", mttf, mttr)).unwrap();
+        spec.start_ps = start;
+        FaultPlan::new(&spec, 16, &["station", "switch"]).unwrap()
+    }
+
+    #[test]
+    fn flap_windows_are_deterministic_and_bounded() {
+        let p = flap_plan(40 * US, 10 * US, 0);
+        let q = flap_plan(40 * US, 10 * US, 0);
+        let period = 50 * US;
+        for link in 0..8u32 {
+            let mut down = 0u64;
+            for t in (0..4 * period).step_by(1000) {
+                assert_eq!(p.link_up(3, link, t), q.link_up(3, link, t), "pure draws");
+                if !p.link_up(3, link, t) {
+                    down += 1000;
+                    let up = p.link_up_at(3, link, t);
+                    assert!(up > t && p.link_up(3, link, up), "recovery must be up");
+                }
+            }
+            // ~mttr down per period over 4 periods (sampling granularity slack).
+            assert!(down >= 3 * 10 * US && down <= 5 * 10 * US, "down {down} for link {link}");
+        }
+    }
+
+    #[test]
+    fn faults_inert_before_start() {
+        let p = flap_plan(10 * US, 10 * US, 100 * US);
+        for t in (0..100 * US).step_by(7919) {
+            assert!(p.link_up(0, 0, t));
+        }
+        // After start the process must actually go down somewhere.
+        assert!((100 * US..140 * US).step_by(997).any(|t| !p.link_up(0, 0, t)));
+    }
+
+    #[test]
+    fn degrade_rate_tracks_fraction() {
+        let spec = FaultSpec::parse("degrade:tier=switch,frac=0.2,slow=500ns").unwrap();
+        let plan = FaultPlan::new(&spec, 16, &["station", "switch"]).unwrap();
+        let hits = (0..20_000u64).filter(|&t| plan.degrade(1, 2, t * 997).is_some()).count();
+        let rate = hits as f64 / 20_000.0;
+        assert!((rate - 0.2).abs() < 0.02, "degrade rate {rate} far from 0.2");
+        // A degraded packet names the resolved tier and the configured cost.
+        let hit = (0..u64::MAX).step_by(31).find_map(|t| plan.degrade(1, 2, t)).unwrap();
+        assert_eq!(hit, (1, 500 * NS));
+    }
+
+    #[test]
+    fn degrade_unknown_tier_is_rejected() {
+        let spec = FaultSpec::parse("degrade:tier=warp-core").unwrap();
+        assert!(FaultPlan::new(&spec, 16, &["station", "switch"]).is_err());
+    }
+
+    #[test]
+    fn walker_stall_windows() {
+        let spec = FaultSpec::parse("walker-stall:mttf=20us,mttr=5us,stall=2us").unwrap();
+        let plan = FaultPlan::new(&spec, 16, &["station", "switch"]).unwrap();
+        let stalled = (0..100 * US).step_by(499).filter(|&t| plan.walker_stall(2, t) > 0).count();
+        assert!(stalled > 0, "stall windows must occur");
+        for t in (0..50 * US).step_by(997) {
+            let a = plan.walker_stall(2, t);
+            assert!(a == 0 || a == 2 * US);
+        }
+    }
+
+    #[test]
+    fn backoff_is_capped_exponential() {
+        let spec = FaultSpec::parse("flap:backoff=1us,cap=6us").unwrap();
+        let plan = FaultPlan::new(&spec, 16, &["station", "switch"]).unwrap();
+        assert_eq!(plan.backoff(0), US);
+        assert_eq!(plan.backoff(1), 2 * US);
+        assert_eq!(plan.backoff(2), 4 * US);
+        assert_eq!(plan.backoff(3), 6 * US);
+        assert_eq!(plan.backoff(63), 6 * US);
+        assert_eq!(plan.backoff(64), 6 * US);
+    }
+}

@@ -6,10 +6,12 @@
 //! through JSON (`to_json`/`from_json`), validate before use, and expand
 //! into sweep grids / merged workloads for the figure harness.
 
+pub mod fault;
 pub mod presets;
 pub mod sweep;
 pub mod types;
 
+pub use fault::{FaultKind, FaultPlan, FaultSpec};
 pub use presets::{paper_baseline, paper_ideal, quick_test};
 pub use sweep::{SweepGrid, SweepPoint};
 pub use types::*;

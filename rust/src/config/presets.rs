@@ -63,6 +63,7 @@ pub fn paper_baseline(gpus: u32, size_bytes: u64) -> PodConfig {
             trace_source_gpu: None,
         },
         engine: EnginePolicy::default(),
+        faults: None,
     }
 }
 

@@ -1,5 +1,6 @@
 //! Configuration structs (Table 1 of the paper) and JSON round-trip.
 
+use super::fault::FaultSpec;
 use crate::util::json::Json;
 use crate::util::units::{self, Time};
 use anyhow::{bail, Context, Result};
@@ -765,9 +766,10 @@ impl WorkloadSpec {
         Ok(spec)
     }
 
-    /// Write the spec's JSON to `path`.
+    /// Write the spec's JSON to `path` (atomically: temp file + rename,
+    /// so an interrupted run never leaves truncated JSON).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string_pretty())
+        crate::util::fs::write_atomic(path, self.to_json().to_string_pretty())
             .with_context(|| format!("writing workload spec to {}", path.display()))
     }
 
@@ -846,6 +848,9 @@ pub struct PodConfig {
     /// Event-fusion policy; `Fused` is the default, `PerHop` exists for
     /// differential testing and timeline debugging.
     pub engine: EnginePolicy,
+    /// Fault-injection plan (None = the perfect fabric every paper
+    /// figure assumes; see `config::fault`).
+    pub faults: Option<FaultSpec>,
 }
 
 impl PodConfig {
@@ -969,6 +974,9 @@ impl PodConfig {
                 bail!("sharded engine needs >= 1 thread");
             }
         }
+        if let Some(f) = &self.faults {
+            f.validate()?;
+        }
         Ok(())
     }
 
@@ -976,7 +984,7 @@ impl PodConfig {
 
     /// Serialize to the config JSON schema.
     pub fn to_json(&self) -> Json {
-        Json::from_pairs(vec![
+        let mut j = Json::from_pairs(vec![
             ("name", Json::from(self.name.as_str())),
             ("gpus", Json::from(self.gpus as u64)),
             ("gpus_per_node", Json::from(self.gpus_per_node as u64)),
@@ -1101,7 +1109,13 @@ impl PodConfig {
                     ),
                 ]),
             ),
-        ])
+        ]);
+        // Optional section: absent = perfect fabric, matching files from
+        // before the fault layer existed.
+        if let Some(f) = &self.faults {
+            j.set("faults", f.to_json());
+        }
+        j
     }
 
     /// Parse a config from its JSON schema (fields absent in older
@@ -1210,6 +1224,12 @@ impl PodConfig {
                 None => TopologySpec::default(),
                 Some(t) => TopologySpec::from_json(t)?,
             },
+            // Optional for configs written before the fault layer:
+            // absent ⇒ the perfect fabric.
+            faults: match j.get("faults") {
+                None => None,
+                Some(f) => Some(FaultSpec::from_json(f)?),
+            },
             workload: WorkloadConfig {
                 collective: CollectiveKind::parse(wl.req_str("collective")?)?,
                 size_bytes: wl.req_u64("size_bytes")?,
@@ -1223,9 +1243,10 @@ impl PodConfig {
         Ok(cfg)
     }
 
-    /// Write the config JSON to `path` (pretty-printed).
+    /// Write the config JSON to `path` (pretty-printed; atomic temp-file
+    /// + rename so interruption never leaves truncated JSON).
     pub fn save(&self, path: &std::path::Path) -> Result<()> {
-        std::fs::write(path, self.to_json().to_string_pretty())
+        crate::util::fs::write_atomic(path, self.to_json().to_string_pretty())
             .with_context(|| format!("writing config to {}", path.display()))
     }
 
@@ -1309,6 +1330,33 @@ mod tests {
         let mut j = paper_baseline(16, MIB).to_json();
         j.set("engine", Json::from("bogus"));
         assert!(PodConfig::from_json(&j).is_err());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_faults() {
+        use crate::config::fault::FaultSpec;
+        for spec in [
+            "flap:mttf=40us,mttr=10us,reroute",
+            "degrade:tier=switch,frac=0.2,slow=500ns",
+            "walker-stall:start=10us",
+        ] {
+            let mut cfg = paper_baseline(16, MIB);
+            cfg.faults = Some(FaultSpec::parse(spec).unwrap());
+            let back = PodConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.faults, cfg.faults, "{spec}");
+            assert_eq!(back, cfg);
+        }
+        // Configs written before the fault layer still load (⇒ None).
+        let mut j = paper_baseline(16, MIB).to_json();
+        if let Json::Obj(o) = &mut j {
+            o.remove("faults");
+        }
+        assert_eq!(PodConfig::from_json(&j).unwrap().faults, None);
+        // A structurally invalid spec fails validate() through the config.
+        let mut cfg = paper_baseline(16, MIB);
+        cfg.faults = Some(FaultSpec::parse("flap").unwrap());
+        cfg.faults.as_mut().unwrap().replay_slots = 0;
+        assert!(cfg.validate().is_err());
     }
 
     #[test]

@@ -43,6 +43,19 @@ pub fn run_grid(grid: &SweepGrid) -> Result<Vec<SweepResult>> {
 
 /// Run a list of sweep points on a worker pool.
 pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
+    run_points_with(points, |point| {
+        SessionBuilder::new(&point.config).build().map(|session| session.run_to_completion())
+    })
+}
+
+/// [`run_points`] with a caller-supplied per-point runner — the seam the
+/// tests use to drive the pool with a deliberately panicking probe. A
+/// panic inside the runner is caught per point and surfaces as a
+/// point-labeled error; the remaining points still run.
+fn run_points_with(
+    points: &[SweepPoint],
+    runner: impl Fn(&SweepPoint) -> Result<RunStats> + Sync,
+) -> Result<Vec<SweepResult>> {
     let n = points.len();
     if n == 0 {
         return Ok(Vec::new());
@@ -57,6 +70,7 @@ pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
         for w in 0..workers {
             let next = &next;
             let results = &results;
+            let runner = &runner;
             scope.spawn(move || loop {
                 let i = next.fetch_add(1, Ordering::Relaxed);
                 if i >= n {
@@ -64,9 +78,14 @@ pub fn run_points(points: &[SweepPoint]) -> Result<Vec<SweepResult>> {
                 }
                 let point = &points[i];
                 log::debug!("worker {w}: job {i} {}", point.label());
-                let res = SessionBuilder::new(&point.config)
-                    .build()
-                    .map(|session| session.run_to_completion());
+                let res =
+                    std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| runner(point)))
+                        .unwrap_or_else(|payload| {
+                            Err(anyhow::anyhow!(
+                                "worker panicked: {}",
+                                crate::util::panics::message(payload.as_ref())
+                            ))
+                        });
                 if let Ok(s) = &res {
                     log::info!("  [{}/{}] {}", i + 1, n, s.summary());
                 }
@@ -183,6 +202,29 @@ mod tests {
             assert!(r.stats.completion > 0);
             assert!(!r.stats.tiers.is_empty(), "{}: tier books missing", r.point.label());
         }
+    }
+
+    #[test]
+    fn panicking_worker_becomes_a_labeled_error() {
+        // A panic inside one point's run must be contained by the pool
+        // and surface as an error naming the point and the panic message
+        // — and the surviving points must still have been run.
+        let points = vec![
+            tiny_point(4, MIB, "ok-a", false),
+            tiny_point(4, MIB, "exploding-probe", false),
+            tiny_point(4, MIB, "ok-b", false),
+        ];
+        let err = run_points_with(&points, |p| {
+            if p.variant == "exploding-probe" {
+                panic!("probe detonated");
+            }
+            SessionBuilder::new(&p.config).build().map(|s| s.run_to_completion())
+        })
+        .expect_err("a panicking point must fail the sweep, not the process");
+        let msg = format!("{err:#}");
+        assert!(msg.contains("exploding-probe"), "error names the point: {msg}");
+        assert!(msg.contains("probe detonated"), "panic message preserved: {msg}");
+        assert!(msg.contains("2/3"), "error locates the point in the grid: {msg}");
     }
 
     #[test]

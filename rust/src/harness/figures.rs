@@ -593,6 +593,155 @@ pub fn fig_warmup(opts: &FigOpts) -> Result<Table> {
     Ok(t)
 }
 
+/// TLB re-warm-up under failover: the [`fig_warmup`] epoch machinery run
+/// twice — fault-free baseline vs a link-flap plan with reroute enabled
+/// that starts 40% into the run. When a home rail goes down, flows fail
+/// over to an alternate rail whose per-station L1 Link TLB is cold, so
+/// the per-epoch L1 miss rate re-spikes mid-run and decays again as the
+/// alternate warms — the paper's warm-up story replayed by a fault
+/// instead of a cold start. Emits the side-by-side epoch curves plus a
+/// degradation-factor summary (completion ratio, reroutes, timeouts).
+pub fn fig_fault_recold(opts: &FigOpts) -> Result<Table> {
+    use crate::config::{FaultKind, FaultSpec};
+    let gpus = 16;
+    let mut cfg = paper_baseline(gpus, MIB);
+    opts.tune(&mut cfg);
+    cfg.name = format!("fault-recold-{gpus}gpu-1MiB");
+    let epochs: u64 = if opts.quick { 12 } else { 24 };
+    // The fault-free run fixes the total span and the epoch grid; both
+    // epoch-stepped runs below share it so rows align.
+    let base_total = SessionBuilder::new(&cfg).build()?.run_to_completion().completion;
+    let width = (base_total / epochs).max(1);
+    // Flap plan: inert until 40% of the fault-free span (the hierarchy is
+    // warm by then), then mean-time-to-failure a quarter and repair half
+    // of the remaining span — every link fails at least once, and reroute
+    // sends its flows onto cold alternate rails.
+    let start = base_total * 2 / 5;
+    let remaining = base_total - start;
+    let mut fspec = FaultSpec::parse("flap:reroute")?;
+    fspec.start_ps = start;
+    fspec.kind = FaultKind::Flap {
+        mttf_ps: (remaining / 4).max(1),
+        mttr_ps: (remaining / 2).max(1),
+    };
+    let mut faulty_cfg = cfg.clone();
+    faulty_cfg.faults = Some(fspec);
+    let mut base = SessionBuilder::new(&cfg).build()?;
+    let mut faulty = SessionBuilder::new(&faulty_cfg).build()?;
+    let mut t = Table::new(
+        "Fault re-cold — per-epoch L1 miss rate, fault-free vs flap+reroute (16 GPUs, 1 MiB)",
+        &[
+            "epoch",
+            "t_end_ns",
+            "base_l1_miss_rate",
+            "fault_l1_miss_rate",
+            "base_walk_rate",
+            "fault_walk_rate",
+            "base_mean_rat_ns",
+            "fault_mean_rat_ns",
+        ],
+    );
+    let translated =
+        |s: &crate::stats::RunStats| s.classes.total() - s.classes.ideal - s.classes.intra_node;
+    let l1_misses = |s: &crate::stats::RunStats| translated(s) - s.classes.l1_hit;
+    let epoch_cols = |snap: &crate::stats::RunStats, prev: &crate::stats::RunStats| {
+        let d_trans = translated(snap) - translated(prev);
+        let d_miss = l1_misses(snap) - l1_misses(prev);
+        let d_walks = snap.walks_started - prev.walks_started;
+        let d_rat = snap.breakdown.translation - prev.breakdown.translation;
+        let d_internode = snap.internode_requests - prev.internode_requests;
+        (
+            format!("{:.4}", d_miss as f64 / d_trans.max(1) as f64),
+            format!("{:.4}", d_walks as f64 / d_trans.max(1) as f64),
+            format!("{:.1}", to_ns((d_rat / d_internode.max(1) as u128) as u64)),
+        )
+    };
+    let mut prev_base = base.snapshot();
+    let mut prev_fault = faulty.snapshot();
+    for e in 1..=epochs {
+        base.run_until(width * e);
+        faulty.run_until(width * e);
+        let snap_base = base.snapshot();
+        let snap_fault = faulty.snapshot();
+        let (b_miss, b_walk, b_rat) = epoch_cols(&snap_base, &prev_base);
+        let (f_miss, f_walk, f_rat) = epoch_cols(&snap_fault, &prev_fault);
+        if width * e <= start {
+            anyhow::ensure!(
+                b_miss == f_miss && b_walk == f_walk,
+                "runs diverged before the fault plan started (epoch {e})"
+            );
+        }
+        t.push(vec![
+            e.to_string(),
+            format!("{:.0}", to_ns(width * e)),
+            b_miss,
+            f_miss,
+            b_walk,
+            f_walk,
+            b_rat,
+            f_rat,
+        ]);
+        prev_base = snap_base;
+        prev_fault = snap_fault;
+    }
+    let base_fin = base.run_to_completion();
+    let fault_fin = faulty.run_to_completion();
+    anyhow::ensure!(
+        base_fin.completion == base_total,
+        "epoch-stepped baseline diverged from the reference"
+    );
+    anyhow::ensure!(fault_fin.faults.reroutes > 0, "the flap plan must force failovers");
+    anyhow::ensure!(
+        l1_misses(&fault_fin) > l1_misses(&base_fin),
+        "failover onto cold rails must re-spike L1 misses ({} vs {})",
+        l1_misses(&fault_fin),
+        l1_misses(&base_fin)
+    );
+    t.save_csv(&opts.out_dir, "fig_fault_recold")?;
+    let mut d = Table::new(
+        "Fault re-cold — degradation factors (flap+reroute vs fault-free)",
+        &["metric", "fault-free", "faulty", "factor"],
+    );
+    let base_ns = to_ns(base_fin.completion);
+    let fault_ns = to_ns(fault_fin.completion);
+    d.push(vec![
+        "completion_ns".into(),
+        format!("{base_ns:.0}"),
+        format!("{fault_ns:.0}"),
+        format!("{:.3}", fault_ns / base_ns),
+    ]);
+    d.push(vec![
+        "l1_misses".into(),
+        l1_misses(&base_fin).to_string(),
+        l1_misses(&fault_fin).to_string(),
+        format!("{:.3}", l1_misses(&fault_fin) as f64 / l1_misses(&base_fin).max(1) as f64),
+    ]);
+    d.push(vec![
+        "walks_started".into(),
+        base_fin.walks_started.to_string(),
+        fault_fin.walks_started.to_string(),
+        format!(
+            "{:.3}",
+            fault_fin.walks_started as f64 / base_fin.walks_started.max(1) as f64
+        ),
+    ]);
+    d.push(vec![
+        "reroutes".into(),
+        "0".into(),
+        fault_fin.faults.reroutes.to_string(),
+        "-".into(),
+    ]);
+    d.push(vec![
+        "timeouts".into(),
+        "0".into(),
+        fault_fin.faults.timeouts.to_string(),
+        "-".into(),
+    ]);
+    d.save_csv(&opts.out_dir, "fig_fault_recold_degradation")?;
+    d.print();
+    Ok(t)
+}
+
 /// Pod-scale sweep (beyond the paper's 64-GPU axis): baseline-vs-ideal
 /// overhead at 32–256 GPUs, on **every fabric topology** (rail Clos,
 /// oversubscribed leaf–spine, multi-pod scale-out). Past 16 GPUs the
@@ -892,8 +1041,8 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 /// Which figures exist (CLI `--only` values).
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
-    "ablation", "design", "warmup", "warmup_decay", "scale", "scale_sharded", "tenancy",
-    "fabric_tiers",
+    "ablation", "design", "warmup", "warmup_decay", "fault_recold", "scale", "scale_sharded",
+    "tenancy", "fabric_tiers",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -945,6 +1094,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     if want("warmup_decay") {
         fig_warmup(opts)?.print();
     }
+    if want("fault_recold") {
+        fig_fault_recold(opts)?.print();
+    }
     if want("scale") {
         pod_scale(opts)?.print();
     }
@@ -979,6 +1131,26 @@ mod tests {
                 crate::config::RequestSizing::Auto { target_total_requests: 3_000 };
         }
         run_grid(&grid).unwrap()
+    }
+
+    #[test]
+    fn fault_recold_shows_a_post_failover_miss_respike() {
+        // The figure's own ensure!s carry the signal: pre-start epochs
+        // bit-identical, reroutes > 0, and more L1 misses than the
+        // fault-free baseline. Here we additionally check the re-spike is
+        // *localized* — some post-start epoch's faulty miss rate exceeds
+        // the baseline's in the same epoch.
+        let opts = quick_opts();
+        let t = fig_fault_recold(&opts).unwrap();
+        assert_eq!(t.rows.len(), 12, "quick mode emits 12 epochs");
+        let respike = t.rows.iter().any(|r| {
+            let base: f64 = r[2].parse().unwrap();
+            let fault: f64 = r[3].parse().unwrap();
+            fault > base
+        });
+        assert!(respike, "no epoch shows the faulty miss rate above baseline: {:?}", t.rows);
+        assert!(opts.out_dir.join("fig_fault_recold.csv").exists());
+        assert!(opts.out_dir.join("fig_fault_recold_degradation.csv").exists());
     }
 
     #[test]

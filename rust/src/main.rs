@@ -16,8 +16,8 @@ use ratsim::config::presets::{
     inference_mix_spec, moe_serving_spec, paper_baseline, paper_ideal, uniform_tenancy_spec,
 };
 use ratsim::config::{
-    ArrivalSpec, CollectiveKind, EnginePolicy, PodConfig, PrefetchPolicy, RequestSizing,
-    SweepGrid, TopologySpec, WorkloadSpec,
+    ArrivalSpec, CollectiveKind, EnginePolicy, FaultSpec, PodConfig, PrefetchPolicy,
+    RequestSizing, SweepGrid, TopologySpec, WorkloadSpec,
 };
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
@@ -65,7 +65,8 @@ fn print_help() {
          \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
          \x20           --topology rail-clos|leaf-spine|multi-pod,\n\
          \x20           --prefetch-policy sw-guided|fused,\n\
-         \x20           --engine fused|per-hop|sharded[:N], --threads N, ...)\n\
+         \x20           --engine fused|per-hop|sharded[:N], --threads N,\n\
+         \x20           --faults flap:...|degrade:...|walker-stall[:...], ...)\n\
          \x20 workload  simulate a multi-tenant mix (--mix uniform|decode-prefill|moe,\n\
          \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json,\n\
          \x20           --topology ...); reports per-job p50/p95/p99 + cross-job TLB\n\
@@ -99,6 +100,7 @@ fn common_run_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop (marker event per hop; differential testing) | sharded[:threads] (parallel in-run engine, bit-identical to fused)", is_flag: false, default: None },
         ArgSpec { name: "threads", help: "worker threads for the sharded engine (shorthand for --engine sharded:N)", is_flag: false, default: None },
         ArgSpec { name: "trace-gpu", help: "record per-request RAT trace for this source GPU", is_flag: false, default: None },
+        ArgSpec { name: "faults", help: "inject faults: flap:mttf=50us,mttr=10us[,reroute] | degrade:tier=switch,frac=0.1,slow=500ns | walker-stall:mttf=20us,mttr=5us,stall=2us (see DESIGN.md)", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
         ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
     ]
@@ -183,6 +185,9 @@ fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
     if let Some(s) = a.get_u64("seed")? {
         cfg.seed = s;
     }
+    if let Some(f) = a.get("faults") {
+        cfg.faults = Some(FaultSpec::parse(f)?);
+    }
     Ok(())
 }
 
@@ -239,40 +244,40 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
         ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "save-spec", help: "also write the effective WorkloadSpec JSON here", is_flag: false, default: None },
+        ArgSpec { name: "faults", help: "inject faults (same grammar as `run --faults`)", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
     ];
     let a = parse(argv, &spec_flags)?;
-    let gpus = a.get_u64("gpus")?.unwrap() as u32;
+    let gpus = a.req_u64("gpus")? as u32;
     let mut spec: WorkloadSpec = if let Some(path) = a.get("spec") {
         WorkloadSpec::load(std::path::Path::new(path))?
     } else {
-        match a.get("mix").unwrap() {
+        match a.req_str("mix")? {
             "uniform" => {
-                let kind = CollectiveKind::parse(a.get("collective").unwrap())?;
+                let kind = CollectiveKind::parse(a.req_str("collective")?)?;
                 let mut s = uniform_tenancy_spec(
-                    a.get_u64("jobs")?.unwrap() as u32,
+                    a.req_u64("jobs")? as u32,
                     kind,
-                    a.get_bytes("size")?.unwrap(),
+                    a.req_bytes("size")?,
                 );
-                s.jobs[0].repeat = a.get_u64("repeat")?.unwrap() as u32;
+                s.jobs[0].repeat = a.req_u64("repeat")? as u32;
                 s
             }
             "decode-prefill" | "mix" => inference_mix_spec(
-                a.get_u64("decode-jobs")?.unwrap() as u32,
-                a.get_u64("prefill-jobs")?.unwrap() as u32,
+                a.req_u64("decode-jobs")? as u32,
+                a.req_u64("prefill-jobs")? as u32,
             ),
             "moe" => {
                 let skew: f64 = a
-                    .get("skew")
-                    .unwrap()
+                    .req_str("skew")?
                     .parse()
                     .map_err(|_| anyhow::anyhow!("--skew expects a number"))?;
                 let mut s = moe_serving_spec(
-                    a.get_u64("jobs")?.unwrap() as u32,
-                    a.get_bytes("size")?.unwrap(),
+                    a.req_u64("jobs")? as u32,
+                    a.req_bytes("size")?,
                     skew,
                 );
-                s.jobs[0].repeat = a.get_u64("repeat")?.unwrap() as u32;
+                s.jobs[0].repeat = a.req_u64("repeat")? as u32;
                 s
             }
             other => anyhow::bail!("unknown mix `{other}` (uniform|decode-prefill|moe)"),
@@ -281,7 +286,7 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
     if let Some(seed) = a.get_u64("seed")? {
         spec.seed = seed;
     }
-    let gap = ratsim::util::units::us(a.get_u64("gap-us")?.unwrap());
+    let gap = ratsim::util::units::us(a.req_u64("gap-us")?);
     if let Some(arrival) = a.get("arrival") {
         spec.arrival = match arrival {
             "sync" | "synchronized" => ArrivalSpec::Synchronized,
@@ -296,7 +301,12 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         log::info!("wrote workload spec to {path}");
     }
     // Pod hardware: Table-1 baseline (or ideal) sized for the largest job.
-    let rep_size = spec.jobs.iter().map(|t| t.size_bytes).max().unwrap();
+    let rep_size = spec
+        .jobs
+        .iter()
+        .map(|t| t.size_bytes)
+        .max()
+        .ok_or_else(|| anyhow::anyhow!("workload spec `{}` declares no jobs", spec.name))?;
     let mut cfg =
         if a.flag("ideal") { paper_ideal(gpus, rep_size) } else { paper_baseline(gpus, rep_size) };
     cfg.name = format!("workload-{}-{gpus}gpu", spec.name);
@@ -306,6 +316,9 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
     }
     if let Some(n) = a.get_u64("requests")? {
         cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
+    }
+    if let Some(f) = a.get("faults") {
+        cfg.faults = Some(FaultSpec::parse(f)?);
     }
     cfg.validate()?;
     let workload = Workload::from_spec(&spec, gpus, cfg.trans.page_bytes)?;
@@ -364,6 +377,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         ArgSpec { name: "requests", help: "auto request-sizing target", is_flag: false, default: None },
         ArgSpec { name: "topology", help: "retarget the grid: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "opts", help: "§6 optimization ablation grid (baseline/pretranslate/prefetch/fused/ideal)", is_flag: true, default: None },
+        ArgSpec { name: "faults", help: "inject faults into every grid point (same grammar as `run --faults`)", is_flag: false, default: None },
         ArgSpec { name: "csv", help: "write results CSV here", is_flag: false, default: None },
         ArgSpec { name: "help", help: "show help", is_flag: true, default: None },
     ];
@@ -399,6 +413,12 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     if let Some(n) = a.get_u64("requests")? {
         for p in &mut grid.points {
             p.config.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
+        }
+    }
+    if let Some(f) = a.get("faults") {
+        let fault_spec = FaultSpec::parse(f)?;
+        for p in &mut grid.points {
+            p.config.faults = Some(fault_spec.clone());
         }
     }
     let results = coordinator::run_grid(&grid)?;
@@ -471,11 +491,11 @@ fn cmd_schedule(argv: &[String]) -> Result<()> {
         ArgSpec { name: "out", help: "output JSON path", is_flag: false, default: Some("schedule.json") },
     ];
     let a = parse(argv, &spec)?;
-    let kind = CollectiveKind::parse(a.get("collective").unwrap())?;
-    let gpus = a.get_u64("gpus")?.unwrap() as u32;
-    let size = a.get_bytes("size")?.unwrap();
+    let kind = CollectiveKind::parse(a.req_str("collective")?)?;
+    let gpus = a.req_u64("gpus")? as u32;
+    let size = a.req_bytes("size")?;
     let sched = collective::generators::build(kind, gpus, size)?;
-    let out = a.get("out").unwrap();
+    let out = a.req_str("out")?;
     collective::mscclang::save(&sched, std::path::Path::new(out))?;
     println!("wrote {} ({} ops, {} total bytes)", out, sched.ops.len(), sched.total_bytes());
     Ok(())
@@ -490,10 +510,7 @@ fn cmd_config(argv: &[String]) -> Result<()> {
     ];
     let a = parse(argv, &spec)?;
     if let Some(path) = a.get("dump") {
-        let cfg = paper_baseline(
-            a.get_u64("gpus")?.unwrap() as u32,
-            a.get_bytes("size")?.unwrap(),
-        );
+        let cfg = paper_baseline(a.req_u64("gpus")? as u32, a.req_bytes("size")?);
         cfg.save(std::path::Path::new(path))?;
         println!("wrote {path}");
         return Ok(());
@@ -505,4 +522,75 @@ fn cmd_config(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     anyhow::bail!("config: pass --dump <path> or --check <path>");
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn argv(s: &[&str]) -> Vec<String> {
+        s.iter().map(|x| x.to_string()).collect()
+    }
+
+    // Every argv below must error *before* any simulation runs — these
+    // pin the hardened arg handling: bad input is an `Err` naming the
+    // offending flag, never a panic.
+
+    #[test]
+    fn unknown_subcommand_is_an_error() {
+        let err = dispatch(&argv(&["frobnicate"])).unwrap_err();
+        assert!(err.to_string().contains("frobnicate"));
+    }
+
+    #[test]
+    fn every_subcommand_rejects_unknown_flags() {
+        for cmd in ["run", "workload", "sweep", "figures", "schedule", "config"] {
+            let err = dispatch(&argv(&[cmd, "--bogus-flag"])).unwrap_err();
+            assert!(err.to_string().contains("bogus-flag"), "{cmd}: {err}");
+        }
+    }
+
+    #[test]
+    fn every_subcommand_rejects_a_dangling_value_flag() {
+        // A valued flag with no value must be an error naming the flag.
+        for (cmd, flag) in [
+            ("run", "--gpus"),
+            ("workload", "--gpus"),
+            ("sweep", "--gpus"),
+            ("figures", "--only"),
+            ("schedule", "--gpus"),
+            ("config", "--dump"),
+        ] {
+            let err = dispatch(&argv(&[cmd, flag])).unwrap_err();
+            assert!(err.to_string().contains(flag.trim_start_matches('-')), "{cmd}: {err}");
+        }
+    }
+
+    #[test]
+    fn malformed_values_are_errors_not_panics() {
+        assert!(dispatch(&argv(&["run", "--gpus", "abc"])).is_err());
+        assert!(dispatch(&argv(&["run", "--size", "nonsense"])).is_err());
+        assert!(dispatch(&argv(&["sweep", "--sizes", "1MiB,bogus"])).is_err());
+        assert!(dispatch(&argv(&["workload", "--mix", "bogus"])).is_err());
+        assert!(dispatch(&argv(&["workload", "--mix", "moe", "--skew", "x"])).is_err());
+        assert!(dispatch(&argv(&["figures", "--only", "not-a-figure"])).is_err());
+        assert!(dispatch(&argv(&["schedule", "--collective", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn bad_fault_specs_are_rejected_on_every_subcommand() {
+        for cmd in ["run", "workload", "sweep"] {
+            let err = dispatch(&argv(&[cmd, "--faults", "bogus:xyz"])).unwrap_err();
+            assert!(format!("{err:#}").contains("bogus"), "{cmd}: {err:#}");
+        }
+        // degrade with an unknown tier parses but must fail validation
+        // before the run starts.
+        assert!(dispatch(&argv(&["run", "--faults", "degrade:tier=nonexistent"])).is_err());
+    }
+
+    #[test]
+    fn config_without_action_is_an_error() {
+        let err = dispatch(&argv(&["config"])).unwrap_err();
+        assert!(err.to_string().contains("--dump"), "{err}");
+    }
 }

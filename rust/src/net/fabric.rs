@@ -89,6 +89,20 @@ impl FabricPath {
     pub fn segments(&self) -> impl Iterator<Item = (u8, Time)> + '_ {
         (0..self.len as usize).map(move |i| (self.tiers[i], self.ends[i]))
     }
+
+    /// A copy with `extra` added to every boundary from the first
+    /// segment riding tier `tier` onward — the fault layer's *degrade*
+    /// primitive (latency-only slowdown: admission state is untouched,
+    /// so `min_path_latency` stays a valid lower bound). `None` if the
+    /// chain does not traverse the tier.
+    pub fn delayed_from_tier(&self, tier: u8, extra: Time) -> Option<FabricPath> {
+        let start = (0..self.len as usize).find(|&i| self.tiers[i] == tier)?;
+        let mut p = *self;
+        for e in p.ends[start..self.len as usize].iter_mut() {
+            *e += extra;
+        }
+        Some(p)
+    }
 }
 
 /// A pod fabric: deterministic rail routing plus admission of flows
@@ -132,7 +146,20 @@ pub trait Fabric {
     /// toward `to`, reserving every serializing resource of its chain in
     /// one pass (decision-order admission — see [`NetResources::path`]).
     /// Returns the per-hop boundary/arrival times the fused engine needs.
-    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath;
+    /// Rides the flow's home rail ([`Fabric::rail`]); the fault layer
+    /// calls [`Fabric::path_on_rail`] directly when failover reroutes a
+    /// flow onto an alternate rail.
+    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
+        let rail = self.rail(from, to);
+        self.path_on_rail(from, to, rail, t, bytes)
+    }
+
+    /// [`Fabric::path`] with an explicit destination rail instead of the
+    /// `(src,dst)` home rail — the reroute primitive of the fault layer:
+    /// when the home rail's link is down, the transport re-admits the
+    /// flow on an alternate up rail, landing it on that rail's (cold)
+    /// destination L1 Link TLB. `rail` must be `< stations_per_gpu()`.
+    fn path_on_rail(&mut self, from: u32, to: u32, rail: u32, t: Time, bytes: u64) -> FabricPath;
 
     /// Aggregate serialization busy time per tier, aligned with
     /// [`Fabric::tiers`] (utilization accounting for `RunStats`).
@@ -261,8 +288,7 @@ impl Fabric for RailClos {
     }
 
     #[inline]
-    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
-        let rail = self.core.topo.rail(from, to);
+    fn path_on_rail(&mut self, from: u32, to: u32, rail: u32, t: Time, bytes: u64) -> FabricPath {
         let (eligible, arrive) = self.net.path(from, to, rail, t, bytes);
         FabricPath::from_segments(&[(RC_STATION, eligible), (RC_SWITCH, arrive)])
     }
@@ -383,9 +409,8 @@ impl Fabric for LeafSpine {
     }
 
     #[inline]
-    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
+    fn path_on_rail(&mut self, from: u32, to: u32, rail: u32, t: Time, bytes: u64) -> FabricPath {
         let topo = &self.core.topo;
-        let rail = topo.rail(from, to);
         // Station uplink → leaf switch (credit-bounded, + link latency).
         let leaf_arr = self.station_tx.admit(topo.station_idx(from, rail), t, bytes);
         let leaf_elig = leaf_arr + self.switch_latency;
@@ -537,8 +562,7 @@ impl Fabric for MultiPod {
     }
 
     #[inline]
-    fn path(&mut self, from: u32, to: u32, t: Time, bytes: u64) -> FabricPath {
-        let rail = self.core.topo.rail(from, to);
+    fn path_on_rail(&mut self, from: u32, to: u32, rail: u32, t: Time, bytes: u64) -> FabricPath {
         let (spod, dpod) = (self.pod_of(from), self.pod_of(to));
         if spod == dpod {
             // Intra-pod: the plain rail-Clos chain of the local pod.
@@ -605,6 +629,20 @@ mod tests {
         assert_eq!(p.intermediate(), &[100, 250]);
         let segs: Vec<(u8, Time)> = p.segments().collect();
         assert_eq!(segs, vec![(0, 100), (2, 250), (3, 400)]);
+    }
+
+    #[test]
+    fn delayed_from_tier_shifts_the_chain_tail() {
+        let p = FabricPath::from_segments(&[(0, 100), (2, 250), (3, 400)]);
+        let d = p.delayed_from_tier(2, 50).unwrap();
+        let segs: Vec<(u8, Time)> = d.segments().collect();
+        assert_eq!(segs, vec![(0, 100), (2, 300), (3, 450)]);
+        assert_eq!(d.arrive(), 450);
+        // Chains that never traverse the tier are untouched.
+        assert!(p.delayed_from_tier(1, 50).is_none());
+        // Degrading the first tier shifts everything.
+        let all = p.delayed_from_tier(0, 10).unwrap();
+        assert_eq!(all.intermediate(), &[110, 260]);
     }
 
     #[test]
@@ -764,6 +802,37 @@ mod tests {
         assert_eq!(b.arrive() - a.arrive(), ser_time(4096, 400));
         let c = mp.path(5, 0, 0, 4096);
         assert_eq!(c.arrive(), a.arrive(), "reverse uplink is independent");
+    }
+
+    #[test]
+    fn path_on_rail_is_the_reroute_primitive() {
+        // `path` is exactly `path_on_rail` on the home rail, and an
+        // alternate-rail admission rides that rail's uncontended chain
+        // (same shape, independent resources) on every topology.
+        let l = link();
+        let mut fabrics: Vec<Box<dyn Fabric>> = vec![
+            Box::new(RailClos::new(8, &l).unwrap()),
+            Box::new(LeafSpine::new(8, &l, 2).unwrap()),
+            Box::new(MultiPod::new(8, &l, 2, 1000, 400).unwrap()),
+        ];
+        for f in &mut fabrics {
+            let home = f.rail(0, 5);
+            let alt = (home + 1) % f.stations_per_gpu();
+            let p = f.path(0, 5, 0, 256);
+            // Far in the future so the first admission can't contend.
+            let t = 1_000_000_000;
+            let q = f.path_on_rail(0, 5, home, t, 256);
+            assert_eq!(q.arrive() - t, p.arrive(), "{}: path == path_on_rail(home)", f.name());
+            let t2 = 2_000_000_000;
+            let r = f.path_on_rail(0, 5, alt, t2, 256);
+            assert_eq!(r.arrive() - t2, p.arrive(), "{}: alternate rail chain", f.name());
+            assert_eq!(
+                r.segments().count(),
+                p.segments().count(),
+                "{}: same chain shape on the alternate rail",
+                f.name()
+            );
+        }
     }
 
     #[test]

@@ -26,7 +26,7 @@ mod sim;
 
 pub use mmu::GpuMmu;
 pub use observer::{
-    CrossJobObserver, JobObserver, JobSeed, LatencyObserver, NoopObserver, Observer,
-    RequestView, SessionEvent, TraceObserver, TranslationEvent,
+    CrossJobObserver, FaultObserver, JobObserver, JobSeed, LatencyObserver, NoopObserver,
+    Observer, RequestView, SessionEvent, TraceObserver, TranslationEvent,
 };
-pub use session::{SessionBuilder, SimSession};
+pub use session::{SessionBuilder, SimSession, StallError};

@@ -34,7 +34,7 @@
 
 use crate::collective::Schedule;
 use crate::stats::histogram::LogHistogram;
-use crate::stats::run::{JobStats, LatencyBreakdown, RunStats};
+use crate::stats::run::{JobFaultStats, JobStats, LatencyBreakdown, RunStats};
 use crate::trans::class::{ClassCounts, TransClass};
 use crate::util::units::Time;
 use anyhow::Result;
@@ -128,6 +128,42 @@ pub enum SessionEvent {
         /// Walk initiated by a prefetcher (stride or hint), not a demand
         /// miss.
         prefetch: bool,
+    },
+    /// A transmit found its link down and hit the loss-detection timeout
+    /// (fault-injection runs only; see `config::fault`).
+    FaultTimeout {
+        /// Tenant job of the parked request.
+        job: u16,
+        /// Destination rail whose link was down.
+        rail: u16,
+    },
+    /// A timed-out transmit was rescheduled with exponential backoff.
+    FaultRetried {
+        /// Tenant job of the retried request.
+        job: u16,
+        /// Destination rail being retried.
+        rail: u16,
+        /// Retry attempt number (1-based).
+        attempt: u32,
+    },
+    /// A timed-out transmit exhausted its retry budget; delivery is
+    /// forced at link recovery (runs always complete).
+    FaultAborted {
+        /// Tenant job of the aborted request.
+        job: u16,
+        /// Destination rail whose link stayed down.
+        rail: u16,
+    },
+    /// A transmit failed over from a down rail onto an alternate up rail
+    /// — the destination's L1 Link TLB on the new rail is cold for this
+    /// source, so a miss re-spike follows (the `fault_recold` figure).
+    FaultRerouted {
+        /// Tenant job of the rerouted request.
+        job: u16,
+        /// The down home rail.
+        from_rail: u16,
+        /// The up rail the flow failed over to.
+        to_rail: u16,
     },
 }
 
@@ -341,6 +377,58 @@ impl Observer for JobObserver {
     }
 }
 
+/// Stock observer: per-tenant-job fault impact, folded from the fault
+/// `SessionEvent` stream into [`JobFaultStats`] (one entry per job,
+/// aligned with `RunStats::jobs`). The default session attaches one only
+/// when `PodConfig::faults` is set — fault-free runs keep an empty
+/// `faults.per_job`.
+#[derive(Debug)]
+pub struct FaultObserver {
+    jobs: Vec<JobFaultStats>,
+}
+
+impl FaultObserver {
+    /// Empty books for the named jobs (index = the `job` tag on ops).
+    pub fn new(job_names: Vec<String>) -> Self {
+        Self {
+            jobs: job_names
+                .into_iter()
+                .map(|name| JobFaultStats { name, ..Default::default() })
+                .collect(),
+        }
+    }
+}
+
+impl Observer for FaultObserver {
+    fn on_event(&mut self, _now: Time, ev: &SessionEvent) {
+        match *ev {
+            SessionEvent::FaultTimeout { job, .. } => self.jobs[job as usize].timeouts += 1,
+            SessionEvent::FaultRetried { job, .. } => self.jobs[job as usize].retries += 1,
+            SessionEvent::FaultAborted { job, .. } => self.jobs[job as usize].aborts += 1,
+            SessionEvent::FaultRerouted { job, .. } => self.jobs[job as usize].reroutes += 1,
+            _ => {}
+        }
+    }
+
+    fn publish(&self, stats: &mut RunStats) {
+        // Only the per-job view is observer-owned; the global fault
+        // counters are model-owned (scraped from the transport books).
+        stats.faults.per_job = self.jobs.clone();
+    }
+
+    fn on_finish(&mut self, stats: &mut RunStats) {
+        self.publish(stats);
+        // Per-job conservation: the job-attributed events reconcile with
+        // the model-owned global counters.
+        let t: u64 = stats.faults.per_job.iter().map(|j| j.timeouts).sum();
+        let r: u64 = stats.faults.per_job.iter().map(|j| j.retries).sum();
+        let a: u64 = stats.faults.per_job.iter().map(|j| j.aborts).sum();
+        assert_eq!(t, stats.faults.timeouts, "per-job timeout accounting leaked");
+        assert_eq!(r, stats.faults.retries, "per-job retry accounting leaked");
+        assert_eq!(a, stats.faults.aborts, "per-job abort accounting leaked");
+    }
+}
+
 /// Stock observer: cross-tenant Link-TLB interference — fills whose LRU
 /// victim belonged to a *different* job, counted per level from the
 /// [`SessionEvent::TlbFill`] stream against per-GPU page-ownership
@@ -531,6 +619,39 @@ mod tests {
             bytes: 10,
             total_requests: 2,
         }]);
+        let mut s = RunStats::default();
+        o.on_finish(&mut s);
+    }
+
+    #[test]
+    fn fault_observer_folds_events_per_job() {
+        let mut o = FaultObserver::new(vec!["a".into(), "b".into()]);
+        o.on_event(0, &SessionEvent::FaultTimeout { job: 0, rail: 3 });
+        o.on_event(0, &SessionEvent::FaultRetried { job: 0, rail: 3, attempt: 1 });
+        o.on_event(0, &SessionEvent::FaultTimeout { job: 1, rail: 5 });
+        o.on_event(0, &SessionEvent::FaultAborted { job: 1, rail: 5 });
+        o.on_event(0, &SessionEvent::FaultRerouted { job: 1, from_rail: 5, to_rail: 6 });
+        // Non-fault events are ignored.
+        o.on_event(0, &SessionEvent::WgStarted { wg: 0, job: 0 });
+        let mut s = RunStats::default();
+        o.publish(&mut s);
+        assert_eq!(s.faults.per_job.len(), 2);
+        assert_eq!((s.faults.per_job[0].timeouts, s.faults.per_job[0].retries), (1, 1));
+        assert_eq!((s.faults.per_job[1].aborts, s.faults.per_job[1].reroutes), (1, 1));
+        // on_finish reconciles against the model-owned globals.
+        let mut s2 = RunStats::default();
+        s2.faults.timeouts = 2;
+        s2.faults.retries = 1;
+        s2.faults.aborts = 1;
+        o.on_finish(&mut s2);
+        assert_eq!(s2.faults.per_job[0].name, "a");
+    }
+
+    #[test]
+    #[should_panic(expected = "per-job timeout accounting leaked")]
+    fn fault_observer_finish_asserts_reconciliation() {
+        let mut o = FaultObserver::new(vec!["a".into()]);
+        o.on_event(0, &SessionEvent::FaultTimeout { job: 0, rail: 0 });
         let mut s = RunStats::default();
         o.on_finish(&mut s);
     }

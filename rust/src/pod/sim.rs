@@ -39,18 +39,18 @@
 
 use super::mmu::{GpuMmu, WalkRec};
 use super::observer::{
-    CrossJobObserver, JobObserver, JobSeed, LatencyObserver, Observer, RequestView, SessionEvent,
-    TraceObserver, TranslationEvent,
+    CrossJobObserver, FaultObserver, JobObserver, JobSeed, LatencyObserver, Observer,
+    RequestView, SessionEvent, TraceObserver, TranslationEvent,
 };
 use super::shard::{PodCore, ShardSet};
 use crate::collective::workload::Workload;
 use crate::collective::Schedule;
-use crate::config::{EnginePolicy, PodConfig, PrefetchPolicy};
+use crate::config::{EnginePolicy, FaultPlan, PodConfig, PrefetchPolicy};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{build_fabric, Fabric, FabricPath};
 use crate::sim::{AnyEngine, ShardRoute};
-use crate::stats::run::TierStats;
+use crate::stats::run::{FaultStats, TierFaultStats, TierStats};
 use crate::stats::RunStats;
 use crate::trans::class::{PrimaryOutcome, TransClass};
 use crate::trans::mshr::MshrOutcome;
@@ -87,6 +87,12 @@ enum Ev {
     /// (gpu, page). Shares the walk-completion path with `WalkDone`; the
     /// distinct event keeps the prefetch pipeline visible in traces.
     PrefetchDone { gpu: u16, page: u64 },
+    /// A parked transmit's loss-detection timeout fired (fault-injection
+    /// runs only — see `config::fault`).
+    Timeout { req: u32 },
+    /// Re-transmit a parked request: a backoff retry, or the forced
+    /// delivery at link recovery after the retry budget is exhausted.
+    FaultRetry { req: u32 },
 }
 
 /// Pending-set placement for the sharded engine, mirroring the model's
@@ -101,9 +107,11 @@ impl ShardRoute for Ev {
         match *self {
             Ev::WgStart { wg } => wg as usize % shards,
             Ev::Hop => 0,
-            Ev::TargetArrive { req } | Ev::Retry { req } | Ev::AckArrive { req } => {
-                req as usize % shards
-            }
+            Ev::TargetArrive { req }
+            | Ev::Retry { req }
+            | Ev::AckArrive { req }
+            | Ev::Timeout { req }
+            | Ev::FaultRetry { req } => req as usize % shards,
             Ev::L2Decision { gpu, .. }
             | Ev::WalkDone { gpu, .. }
             | Ev::PrefetchIssue { gpu, .. }
@@ -113,10 +121,11 @@ impl ShardRoute for Ev {
 }
 
 /// In-flight request state (slab-allocated, recycled on completion).
-/// Deliberately lean — 40 bytes — since the slab is hot: per-hop
+/// Deliberately lean — 48 bytes — since the slab is hot: per-hop
 /// timestamps are consumed at the decision points that compute them, and
 /// per-request accounting happens at translation-complete, so only the
-/// fields the translation stage and the final ACK need persist here.
+/// fields the translation stage, the final ACK, and fault retransmission
+/// need persist here.
 #[derive(Debug, Clone)]
 struct Request {
     page: u64,
@@ -125,10 +134,62 @@ struct Request {
     wg: u32,
     /// Per-source-GPU issue sequence (trace key).
     seq: u32,
+    /// Payload length (fault retransmissions re-admit the same bytes).
+    bytes: u32,
     src: u16,
     dst: u16,
     rail: u16,
     internode: bool,
+}
+
+/// Reliable-transport books of a fault-injection run
+/// (`PodConfig::faults`): the compiled [`FaultPlan`] plus per-request
+/// attempt/parked state, per-source replay-buffer occupancy, and the
+/// model-owned global counters scraped into `RunStats::faults`. Absent
+/// (`None` on [`PodSim`]) for fault-free runs — every hot-path hook is
+/// gated on it, keeping the default path bit-identical to the
+/// pre-fault-layer engine.
+struct FaultBooks {
+    plan: FaultPlan,
+    /// Per-slab-slot retry attempt count (reset when the slot is
+    /// reissued for a fresh request).
+    attempt: Vec<u32>,
+    /// Per-slab-slot "holds a replay-buffer slot at its source" flag.
+    parked: Vec<bool>,
+    /// Per-source-GPU replay-buffer occupancy.
+    replay: Vec<u32>,
+    /// Global transport counters (`per_job` stays empty here — the stock
+    /// [`FaultObserver`] owns the per-job view).
+    stats: FaultStats,
+}
+
+impl FaultBooks {
+    fn new(plan: FaultPlan, gpus: u32, tiers: &[&'static str]) -> Self {
+        Self {
+            plan,
+            attempt: Vec::new(),
+            parked: Vec::new(),
+            replay: vec![0; gpus as usize],
+            stats: FaultStats {
+                by_tier: tiers
+                    .iter()
+                    .map(|t| TierFaultStats { tier: (*t).to_string(), ..Default::default() })
+                    .collect(),
+                ..Default::default()
+            },
+        }
+    }
+
+    /// Fresh transport state for a (re)allocated slab slot.
+    fn reset_slot(&mut self, rid: u32) {
+        let i = rid as usize;
+        if i >= self.attempt.len() {
+            self.attempt.resize(i + 1, 0);
+            self.parked.resize(i + 1, false);
+        }
+        self.attempt[i] = 0;
+        self.parked[i] = false;
+    }
 }
 
 /// The full pod model: GPUs, fabric, translation hierarchy and the event
@@ -155,6 +216,8 @@ pub struct PodSim {
     completion: Time,
     /// §6 schedule-driven translation-hiding state (hint pacing/stats).
     prefetcher: Prefetcher,
+    /// Reliable-transport books (`None` = fault-free run, zero hooks).
+    faults: Option<FaultBooks>,
     /// Attached observers (stock + user), notified at model decision
     /// points.
     observers: Vec<Box<dyn Observer>>,
@@ -234,6 +297,17 @@ impl PodSim {
         );
         let fabric = build_fabric(&cfg.topology, cfg.gpus, &cfg.link)?;
         let tier_count = fabric.tiers().len();
+        // Compile the fault plan against the wired fabric (rail count,
+        // tier names). `None` keeps every hot-path hook inert — the
+        // default grid stays bit-identical to the pre-fault-layer engine.
+        let faults = match &cfg.faults {
+            Some(spec) => Some(FaultBooks::new(
+                FaultPlan::new(spec, cfg.link.stations_per_gpu, fabric.tiers())?,
+                cfg.gpus,
+                fabric.tiers(),
+            )),
+            None => None,
+        };
 
         let mut mmus: Vec<GpuMmu> = (0..cfg.gpus)
             .map(|g| GpuMmu::new(g, cfg.seed, cfg.link.stations_per_gpu, &cfg.trans))
@@ -289,6 +363,12 @@ impl PodSim {
                     cfg.gpus,
                     cfg.trans.page_bytes,
                 )?));
+            }
+            // Fault-injection runs get the per-job fault-impact books.
+            if cfg.faults.is_some() {
+                observers.push(Box::new(FaultObserver::new(
+                    workload.jobs.iter().map(|d| d.name.clone()).collect(),
+                )));
             }
         }
         observers.extend(extra);
@@ -354,6 +434,7 @@ impl PodSim {
             acked: 0,
             completion: 0,
             prefetcher,
+            faults,
             observers,
             pretranslated_pages: 0,
             prefetch_walks: 0,
@@ -449,6 +530,17 @@ impl PodSim {
         self.engine.idle()
     }
 
+    /// Requests acknowledged so far — the session's cheap progress gauge
+    /// (used by the livelock deadline in `SimSession`).
+    pub(crate) fn acked(&self) -> u64 {
+        self.acked
+    }
+
+    /// Total requests in the run.
+    pub(crate) fn total_requests(&self) -> u64 {
+        self.total_requests
+    }
+
     /// Timestamp of the earliest pending event, if any.
     pub(crate) fn peek_time(&mut self) -> Option<Time> {
         self.engine.peek_time()
@@ -508,6 +600,9 @@ impl PodSim {
         stats.mshr_full_stalls = self.shards.mmus().map(|m| m.mshr_full_stalls()).sum();
         stats.max_touched_pages =
             self.shards.mmus().map(|m| m.page_table.touched_pages()).max().unwrap_or(0);
+        if let Some(fb) = &self.faults {
+            stats.faults = fb.stats.clone();
+        }
         let busy = self.fabric.tier_busy();
         stats.tiers = self
             .fabric
@@ -554,6 +649,15 @@ impl PodSim {
         assert_eq!(self.prefetcher.backlog_total(), 0, "deferred hints never reissued");
         let pf = self.prefetcher.counters;
         assert_eq!(pf.issued, pf.useful + pf.late, "hint walk accounting out of balance");
+        if let Some(fb) = &self.faults {
+            // Transport conservation: every attempt delivered or timed
+            // out, every timeout retried or aborted, every replay-buffer
+            // slot released at delivery.
+            let s = &fb.stats;
+            assert_eq!(s.attempts, s.delivered + s.timeouts, "transport attempts out of balance");
+            assert_eq!(s.timeouts, s.retries + s.aborts, "timeout resolution out of balance");
+            assert!(fb.replay.iter().all(|&r| r == 0), "replay buffers not drained");
+        }
         let mut stats = RunStats::default();
         self.scrape_into(&mut stats);
         stats.wall_seconds = wall.as_secs_f64();
@@ -580,6 +684,10 @@ impl PodSim {
                 self.admit_hint(now, gpu as u32, Hint { page: PageId(page), rail: rail as u32 })
             }
             Ev::PrefetchDone { gpu, page } => self.on_walk_done(now, gpu as u32, page),
+            Ev::Timeout { req } => self.on_timeout(now, req),
+            // The packet is already staged at the source station's
+            // replay buffer — re-enter the fabric directly at `now`.
+            Ev::FaultRetry { req } => self.transmit(now, req),
         }
     }
 
@@ -617,24 +725,97 @@ impl PodSim {
         let op = w.op;
         let seq = self.shards.next_issue_seq(op.src);
         debug_assert!(seq <= u32::MAX as u64, "per-source issue sequence overflows u32");
+        debug_assert!(len <= u32::MAX as u64, "request length overflows u32");
         let rail = self.fabric.rail(op.src, op.dst);
         let internode = self.core.cfg.is_internode(op.src, op.dst);
         let t_tx = now + self.core.t_fabric;
-        let path = self.fabric.path(op.src, op.dst, t_tx, len);
-        self.record_traversal(t_tx, &path);
-        let t_arrive = path.arrive();
         let req = Request {
             page: dst_offset / page_bytes,
             issue: now,
-            target_arrive: t_arrive,
+            target_arrive: 0, // set at fabric admission (`transmit`)
             wg,
             seq: seq as u32,
+            bytes: len as u32,
             src: op.src as u16,
             dst: op.dst as u16,
             rail: rail as u16,
             internode,
         };
         let rid = self.alloc(req);
+        if let Some(fb) = self.faults.as_mut() {
+            fb.reset_slot(rid);
+        }
+        self.transmit(t_tx, rid);
+    }
+
+    /// Put one request on the wire at `t_tx` (fabric-entry time): the
+    /// reliable-transport entry point shared by first transmission
+    /// ([`Self::issue_one`]) and fault retransmissions (`Ev::FaultRetry`).
+    /// Fault-free runs take the straight admission path — every transport
+    /// hook below is gated on the compiled plan. With a `flap` plan, a
+    /// down home-rail link either fails the flow over onto the first up
+    /// alternate rail (cold destination L1 on that rail — the re-warm-up
+    /// `fault_recold` instruments) or parks the packet in the source's
+    /// replay buffer behind a loss-detection timeout.
+    fn transmit(&mut self, t_tx: Time, rid: u32) {
+        let (src, dst, mut rail, bytes, internode) = {
+            let r = &self.slab[rid as usize];
+            (r.src as u32, r.dst as u32, r.rail as u32, r.bytes as u64, r.internode)
+        };
+        let job = self.wgs[self.slab[rid as usize].wg as usize].op.job;
+        let mut rerouted = None;
+        if let Some(fb) = self.faults.as_mut() {
+            fb.stats.attempts += 1;
+            let mut down = fb.plan.has_flap() && !fb.plan.link_up(dst, rail, t_tx);
+            if down && fb.plan.spec().reroute {
+                let rails = fb.plan.rails();
+                let alt = (1..rails)
+                    .map(|k| (rail + k) % rails)
+                    .find(|&c| fb.plan.link_up(dst, c, t_tx));
+                match alt {
+                    Some(new_rail) => {
+                        fb.stats.reroutes += 1;
+                        rerouted = Some((rail as u16, new_rail as u16));
+                        rail = new_rail;
+                        down = false;
+                    }
+                    None => fb.stats.reroute_failures += 1,
+                }
+            }
+            if down {
+                // Park in the source's replay buffer (once per request;
+                // a full buffer burns the retry budget so the forced
+                // recovery path frees pressure fastest) and arm the
+                // loss-detection timeout.
+                if !fb.parked[rid as usize] {
+                    if fb.replay[src as usize] < fb.plan.spec().replay_slots {
+                        fb.replay[src as usize] += 1;
+                        fb.stats.replay_peak = fb.stats.replay_peak.max(fb.replay[src as usize]);
+                        fb.parked[rid as usize] = true;
+                    } else {
+                        fb.stats.replay_overflows += 1;
+                        fb.attempt[rid as usize] = fb.plan.spec().max_retries;
+                    }
+                }
+                let timeout = fb.plan.spec().timeout_ps;
+                self.engine.schedule_at(t_tx + timeout, Ev::Timeout { req: rid });
+                return;
+            }
+            fb.stats.delivered += 1;
+            if fb.parked[rid as usize] {
+                fb.parked[rid as usize] = false;
+                fb.replay[src as usize] -= 1;
+            }
+        }
+        if let Some((from_rail, to_rail)) = rerouted {
+            self.slab[rid as usize].rail = to_rail;
+            self.emit(SessionEvent::FaultRerouted { job, from_rail, to_rail });
+        }
+        let path = self.fabric.path_on_rail(src, dst, rail, t_tx, bytes);
+        let path = self.apply_degrade(src, dst, t_tx, path);
+        self.record_traversal(t_tx, &path);
+        let t_arrive = path.arrive();
+        self.slab[rid as usize].target_arrive = t_arrive;
         if self.per_hop {
             self.engine.schedule_at(t_tx, Ev::Hop);
             for &h in path.intermediate() {
@@ -657,6 +838,65 @@ impl PodSim {
             }
             self.finish_translation(t_arrive, rid, class);
         }
+    }
+
+    /// A parked request's loss-detection timeout fired: retry with capped
+    /// exponential backoff while budget remains, else "abort" — force the
+    /// retransmission to the link's recovery instant, guaranteeing
+    /// delivery (runs always complete; see the conservation asserts in
+    /// [`Self::finalize`]).
+    fn on_timeout(&mut self, now: Time, req: u32) {
+        let (dst, rail, job) = {
+            let r = &self.slab[req as usize];
+            (r.dst as u32, r.rail, self.wgs[r.wg as usize].op.job)
+        };
+        let (attempt, max_retries) = {
+            let fb = self.faults.as_mut().expect("Timeout event without a fault plan");
+            fb.stats.timeouts += 1;
+            // Flap loss is detected at the segment arriving at the
+            // destination — attribute it to the chain's last tier.
+            let last = fb.stats.by_tier.len() - 1;
+            fb.stats.by_tier[last].timeouts += 1;
+            (fb.attempt[req as usize], fb.plan.spec().max_retries)
+        };
+        self.emit(SessionEvent::FaultTimeout { job, rail });
+        if attempt < max_retries {
+            let backoff = {
+                let fb = self.faults.as_mut().expect("fault plan vanished mid-run");
+                fb.attempt[req as usize] = attempt + 1;
+                fb.stats.retries += 1;
+                let last = fb.stats.by_tier.len() - 1;
+                fb.stats.by_tier[last].retries += 1;
+                fb.plan.backoff(attempt)
+            };
+            self.emit(SessionEvent::FaultRetried { job, rail, attempt: attempt + 1 });
+            self.engine.schedule_at(now + backoff, Ev::FaultRetry { req });
+        } else {
+            let recover = {
+                let fb = self.faults.as_mut().expect("fault plan vanished mid-run");
+                fb.stats.aborts += 1;
+                let last = fb.stats.by_tier.len() - 1;
+                fb.stats.by_tier[last].aborts += 1;
+                fb.plan.link_up_at(dst, rail as u32, now)
+            };
+            self.emit(SessionEvent::FaultAborted { job, rail });
+            self.engine.schedule_at(recover, Ev::FaultRetry { req });
+        }
+    }
+
+    /// Apply any degrade-plan slowdown to an admitted chain: a latency-
+    /// only shift of every boundary from the degraded tier onward
+    /// (admission state is untouched, so the sharded engine's lookahead
+    /// bound stays valid). Chains that never traverse the degraded tier
+    /// pass through unchanged.
+    fn apply_degrade(&mut self, from: u32, to: u32, t: Time, path: FabricPath) -> FabricPath {
+        let Some(fb) = self.faults.as_mut() else { return path };
+        let Some((tier, slow)) = fb.plan.degrade(from, to, t) else { return path };
+        let Some(p) = path.delayed_from_tier(tier as u8, slow) else { return path };
+        fb.stats.degraded += 1;
+        fb.stats.by_tier[tier].degraded += 1;
+        fb.stats.injected_delay += slow as u128;
+        p
     }
 
     /// Schedule `PrefetchIssue` events for one op's upcoming pages
@@ -739,7 +979,7 @@ impl PodSim {
             }
         };
         if let Some(accesses) = started {
-            let latency = self.walk_latency(accesses);
+            let latency = self.walk_latency_at(at, gpu, accesses);
             self.engine.schedule_at(at + latency, completion_ev(prefetch, gpu, page));
         }
     }
@@ -838,6 +1078,22 @@ impl PodSim {
         self.core.t_pwc + accesses as u64 * self.core.t_walk_mem
     }
 
+    /// [`Self::walk_latency`] plus any `walker-stall` fault injection: a
+    /// walk starting inside one of `gpu`'s stall windows pays the plan's
+    /// extra latency (modeling a stalled table walker / slow HBM bank).
+    fn walk_latency_at(&mut self, at: Time, gpu: u32, accesses: u32) -> Time {
+        let mut latency = self.walk_latency(accesses);
+        if let Some(fb) = self.faults.as_mut() {
+            let stall = fb.plan.walker_stall(gpu, at);
+            if stall > 0 {
+                fb.stats.walker_stalls += 1;
+                fb.stats.injected_delay += stall as u128;
+                latency += stall;
+            }
+        }
+        latency
+    }
+
     /// Shared walk-completion path (`WalkDone` and `PrefetchDone`).
     fn on_walk_done(&mut self, now: Time, gpu: u32, page: u64) {
         let page = PageId(page);
@@ -885,7 +1141,7 @@ impl PodSim {
         }
         // Free the walker slot; start one queued walk if present.
         if let Some(next) = self.shards.mmu_mut(gpu).walkers.finish() {
-            let latency = self.walk_latency(next.accesses);
+            let latency = self.walk_latency_at(now, next.gpu, next.accesses);
             self.engine
                 .schedule_at(now + latency, completion_ev(next.prefetch, next.gpu, next.page));
         }
@@ -956,8 +1212,10 @@ impl PodSim {
         let t_hbm_done = at + self.core.t_hbm;
         let ack = self.core.cfg.link.ack_bytes;
         // The ACK retraces the flow's chain in reverse (the rail function
-        // is symmetric, so both directions share the destination rail).
-        let path = self.fabric.path(view.dst, view.src, t_hbm_done, ack);
+        // is symmetric, so both directions share the destination rail —
+        // including a fault-failover rail the forward path rerouted onto).
+        let path = self.fabric.path_on_rail(view.dst, view.src, view.rail, t_hbm_done, ack);
+        let path = self.apply_degrade(view.dst, view.src, t_hbm_done, path);
         self.record_traversal(t_hbm_done, &path);
         let t_ack = path.arrive() + self.core.t_fabric;
         if self.per_hop {
@@ -1427,6 +1685,102 @@ mod tests {
             assert_eq!(x.arrival, y.arrival);
             assert_eq!(x.completion, y.completion);
             assert_eq!(x.rtt_hist, y.rtt_hist);
+        }
+    }
+
+    #[test]
+    fn flap_faults_retry_and_complete() {
+        use crate::config::FaultSpec;
+        let base = run(&small(8, MIB)).unwrap();
+        let mut c = small(8, MIB);
+        c.faults = Some(FaultSpec::parse("flap:mttf=40us,mttr=10us").unwrap());
+        let s = run(&c).unwrap();
+        assert_eq!(s.requests, s.classes.total(), "faulty runs conserve requests");
+        let f = &s.faults;
+        assert!(f.attempts > 0 && f.delivered > 0);
+        assert!(f.timeouts > 0, "a 20%-down fabric must time out some packets");
+        assert_eq!(f.attempts, f.delivered + f.timeouts);
+        assert_eq!(f.timeouts, f.retries + f.aborts);
+        assert!(f.replay_peak >= 1);
+        assert_eq!(f.reroutes, 0, "reroute is off by default");
+        // The stock FaultObserver's per-job view reconciles with the
+        // model-owned globals (also asserted inside on_finish).
+        assert_eq!(f.per_job.len(), 1);
+        assert_eq!(f.per_job[0].timeouts, f.timeouts);
+        assert!(s.completion > base.completion, "parked packets must cost time");
+        // Fault-free runs keep the books empty.
+        assert!(!base.faults.any());
+        assert_eq!(base.faults.attempts, 0);
+    }
+
+    #[test]
+    fn reroute_fails_over_onto_alternate_rails() {
+        use crate::config::FaultSpec;
+        let mut c = small(8, MIB);
+        c.faults = Some(FaultSpec::parse("flap:mttf=40us,mttr=10us,reroute").unwrap());
+        let s = run(&c).unwrap();
+        assert_eq!(s.requests, s.classes.total());
+        let f = &s.faults;
+        assert!(f.reroutes > 0, "down home rails must fail over");
+        assert_eq!(f.attempts, f.delivered + f.timeouts);
+        // With 16 rails and ~20% downtime an up alternate almost always
+        // exists: failover dominates parking.
+        assert!(f.reroutes > f.timeouts, "reroutes {} vs timeouts {}", f.reroutes, f.timeouts);
+    }
+
+    #[test]
+    fn degrade_adds_latency_without_loss() {
+        use crate::config::FaultSpec;
+        let base = run(&small(8, MIB)).unwrap();
+        let mut c = small(8, MIB);
+        c.faults = Some(FaultSpec::parse("degrade:tier=switch,frac=0.5,slow=2us").unwrap());
+        let s = run(&c).unwrap();
+        let f = &s.faults;
+        assert!(f.degraded > 0, "half the packets should be degraded");
+        assert_eq!(f.attempts, f.delivered, "degrade never parks packets");
+        assert_eq!(f.timeouts, 0);
+        assert!(f.injected_delay > 0);
+        let switch = f.by_tier.iter().find(|t| t.tier == "switch").unwrap();
+        assert_eq!(switch.degraded, f.degraded);
+        assert!(s.completion > base.completion, "a degraded switch tier must cost time");
+    }
+
+    #[test]
+    fn walker_stall_slows_walks() {
+        use crate::config::FaultSpec;
+        let base = run(&small(8, 64 * MIB)).unwrap();
+        let mut c = small(8, 64 * MIB);
+        c.faults = Some(FaultSpec::parse("walker-stall:mttf=20us,mttr=20us,stall=5us").unwrap());
+        let s = run(&c).unwrap();
+        let f = &s.faults;
+        assert!(f.walker_stalls > 0, "walks inside stall windows must pay the stall");
+        assert!(f.injected_delay > 0);
+        assert_eq!(f.attempts, f.delivered, "walker stalls never park packets");
+        assert_eq!(s.walks_started, base.walks_started, "same pages walked either way");
+        assert!(s.completion > base.completion);
+    }
+
+    #[test]
+    fn faulty_runs_are_bit_deterministic_across_engines() {
+        use crate::config::FaultSpec;
+        let mk = || {
+            let mut c = small(8, MIB);
+            c.faults = Some(FaultSpec::parse("flap:mttf=40us,mttr=10us,reroute").unwrap());
+            c
+        };
+        let fused = run(&mk()).unwrap();
+        let mut ph = mk();
+        ph.engine = EnginePolicy::PerHop;
+        let per_hop = run(&ph).unwrap();
+        assert_eq!(fused.completion, per_hop.completion);
+        assert_eq!(fused.faults, per_hop.faults, "fault books must match across engines");
+        for threads in [1u32, 3] {
+            let mut c = mk();
+            c.engine = EnginePolicy::Sharded { threads };
+            let sharded = run(&c).unwrap();
+            assert_eq!(fused.completion, sharded.completion, "{threads} threads");
+            assert_eq!(fused.faults, sharded.faults, "{threads} threads: fault books");
+            assert_eq!(fused.events, sharded.events, "{threads} threads: event stream");
         }
     }
 

@@ -240,10 +240,21 @@ impl<E: ShardRoute + Clone + Send> ShardedEngine<E> {
         let total: usize = self.shards.iter().map(TimingWheel::len).sum();
         if self.shards.len() > 1 && total >= PARALLEL_DRAIN_MIN {
             // Shards are disjoint `&mut`s: each thread owns one wheel and
-            // one scratch vec for the duration of the scope.
+            // one scratch vec for the duration of the scope. Handles are
+            // joined explicitly so a panicking drain re-raises labeled
+            // with its shard index instead of the bare payload.
             std::thread::scope(|s| {
-                for (wheel, out) in self.shards.iter_mut().zip(self.scratch.iter_mut()) {
-                    s.spawn(move || drain_below(wheel, end, out));
+                let handles: Vec<_> = self
+                    .shards
+                    .iter_mut()
+                    .zip(self.scratch.iter_mut())
+                    .map(|(wheel, out)| s.spawn(move || drain_below(wheel, end, out)))
+                    .collect();
+                for (i, h) in handles.into_iter().enumerate() {
+                    crate::util::panics::join_labeled(
+                        &format!("engine shard {i} drain panicked"),
+                        h,
+                    );
                 }
             });
         } else {

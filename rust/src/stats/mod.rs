@@ -6,4 +6,4 @@ pub mod plot;
 pub mod run;
 
 pub use histogram::LogHistogram;
-pub use run::{LatencyBreakdown, RunStats, TierStats};
+pub use run::{FaultStats, JobFaultStats, LatencyBreakdown, RunStats, TierFaultStats, TierStats};

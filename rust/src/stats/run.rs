@@ -69,6 +69,141 @@ impl TierStats {
     }
 }
 
+/// One fabric tier's fault/recovery counters (`FaultStats::by_tier`).
+/// Flap faults land on the tier whose segment arrives at the destination
+/// (the failed link); degrade faults land on the degraded tier.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct TierFaultStats {
+    /// Tier name (matches `TierStats::tier`).
+    pub tier: String,
+    /// Loss-detection timeouts attributed to this tier.
+    pub timeouts: u64,
+    /// Backoff retries attributed to this tier.
+    pub retries: u64,
+    /// Retry-budget exhaustions (forced delivery at recovery).
+    pub aborts: u64,
+    /// Packets degraded (slowed) at this tier.
+    pub degraded: u64,
+}
+
+/// Per-job fault impact (`FaultStats::per_job`), filled by the stock
+/// `FaultObserver` from the fault `SessionEvent` stream. One entry per
+/// job, aligned with `RunStats::jobs`.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct JobFaultStats {
+    /// Job name (from the workload descriptor / schedule name).
+    pub name: String,
+    /// Loss-detection timeouts the job's packets hit.
+    pub timeouts: u64,
+    /// Backoff retries of the job's packets.
+    pub retries: u64,
+    /// Retry-budget exhaustions among the job's packets.
+    pub aborts: u64,
+    /// The job's packets rerouted onto an alternate rail (each lands on
+    /// a destination L1 Link TLB that is cold for that source).
+    pub reroutes: u64,
+}
+
+impl JobFaultStats {
+    /// Machine-readable form (one object of `faults.per_job`).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("name", Json::from(self.name.as_str())),
+            ("timeouts", Json::from(self.timeouts)),
+            ("retries", Json::from(self.retries)),
+            ("aborts", Json::from(self.aborts)),
+            ("reroutes", Json::from(self.reroutes)),
+        ])
+    }
+}
+
+/// Fault-injection and reliable-transport accounting for one run
+/// (all-zero when `PodConfig::faults` is `None`). Conservation
+/// invariants, asserted by `rust/tests/faults.rs`:
+/// `attempts == delivered + timeouts` and `timeouts == retries + aborts`
+/// — every transmit attempt either lands on an up link or times out,
+/// and every timeout either retries or exhausts the budget (after which
+/// delivery is forced at link recovery, so runs always complete).
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct FaultStats {
+    /// Forward transmit attempts (first tries + retries + forced
+    /// recovery transmits). Zero when faults are disabled.
+    pub attempts: u64,
+    /// Attempts that found their link up and put the packet on the wire.
+    pub delivered: u64,
+    /// Attempts that found their link down and timed out.
+    pub timeouts: u64,
+    /// Timeouts answered with a backoff retry.
+    pub retries: u64,
+    /// Timeouts that exhausted the retry budget (delivery then forced at
+    /// link recovery).
+    pub aborts: u64,
+    /// Transmits rerouted onto an alternate up rail (cold destination
+    /// L1 — the re-warm-up the `fault_recold` figure instruments).
+    pub reroutes: u64,
+    /// Reroute attempts that found no up rail and fell back to parking.
+    pub reroute_failures: u64,
+    /// Packets degraded (slowed) by a `degrade` plan.
+    pub degraded: u64,
+    /// Walks stalled by a `walker-stall` plan.
+    pub walker_stalls: u64,
+    /// Total extra latency injected by degrade/stall faults, ps.
+    pub injected_delay: u128,
+    /// Peak replay-buffer occupancy at any source GPU.
+    pub replay_peak: u32,
+    /// Parks that found the source's replay buffer full (skip straight
+    /// to the abort path).
+    pub replay_overflows: u64,
+    /// Per-fabric-tier fault counters, tier traversal order.
+    pub by_tier: Vec<TierFaultStats>,
+    /// Per-job fault impact, aligned with `RunStats::jobs`.
+    pub per_job: Vec<JobFaultStats>,
+}
+
+impl FaultStats {
+    /// Whether any fault machinery fired (cheap emptiness check for
+    /// reports).
+    pub fn any(&self) -> bool {
+        self.attempts != 0 || self.degraded != 0 || self.walker_stalls != 0
+    }
+
+    /// Machine-readable form (the run report's `faults` object).
+    pub fn to_json(&self) -> Json {
+        Json::from_pairs(vec![
+            ("attempts", Json::from(self.attempts)),
+            ("delivered", Json::from(self.delivered)),
+            ("timeouts", Json::from(self.timeouts)),
+            ("retries", Json::from(self.retries)),
+            ("aborts", Json::from(self.aborts)),
+            ("reroutes", Json::from(self.reroutes)),
+            ("reroute_failures", Json::from(self.reroute_failures)),
+            ("degraded", Json::from(self.degraded)),
+            ("walker_stalls", Json::from(self.walker_stalls)),
+            ("injected_delay_ns", Json::from(to_ns(self.injected_delay.min(u64::MAX as u128) as u64))),
+            ("replay_peak", Json::from(self.replay_peak as u64)),
+            ("replay_overflows", Json::from(self.replay_overflows)),
+            (
+                "by_tier",
+                Json::Arr(
+                    self.by_tier
+                        .iter()
+                        .map(|t| {
+                            Json::from_pairs(vec![
+                                ("tier", Json::from(t.tier.as_str())),
+                                ("timeouts", Json::from(t.timeouts)),
+                                ("retries", Json::from(t.retries)),
+                                ("aborts", Json::from(t.aborts)),
+                                ("degraded", Json::from(t.degraded)),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+            ("per_job", Json::Arr(self.per_job.iter().map(JobFaultStats::to_json).collect())),
+        ])
+    }
+}
+
 /// Per-tenant-job results of a run (workload sessions). Single-schedule
 /// runs carry one entry covering the whole schedule, so the per-job view
 /// is always present.
@@ -199,6 +334,9 @@ pub struct RunStats {
     /// tier traversal order — 2 tiers for the rail Clos, 3 for
     /// leaf–spine, 4 for multi-pod (see `net::fabric`).
     pub tiers: Vec<TierStats>,
+    /// Fault-injection / reliable-transport accounting (all-zero when
+    /// `PodConfig::faults` is `None`).
+    pub faults: FaultStats,
 }
 
 impl RunStats {
@@ -292,6 +430,7 @@ impl RunStats {
                         .collect(),
                 ),
             ),
+            ("faults", self.faults.to_json()),
         ])
     }
 
@@ -311,21 +450,25 @@ impl RunStats {
     }
 }
 
-/// Write a CSV file from header + rows (figure harness output).
+/// Write a CSV file from header + rows (figure harness output). The file
+/// is written atomically (temp + rename), so a crashed or concurrent
+/// harness never leaves a half-written figure behind.
 pub fn write_csv(
     path: &std::path::Path,
     header: &[&str],
     rows: &[Vec<String>],
 ) -> anyhow::Result<()> {
-    use std::io::Write;
     if let Some(parent) = path.parent() {
         std::fs::create_dir_all(parent)?;
     }
-    let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-    writeln!(f, "{}", header.join(","))?;
+    let mut text = String::new();
+    text.push_str(&header.join(","));
+    text.push('\n');
     for row in rows {
-        writeln!(f, "{}", row.join(","))?;
+        text.push_str(&row.join(","));
+        text.push('\n');
     }
+    crate::util::fs::write_atomic(path, text)?;
     Ok(())
 }
 
@@ -423,6 +566,31 @@ mod tests {
         let j = s.to_json();
         assert_eq!(j.get("jobs").and_then(|a| a.as_arr()).unwrap().len(), 1);
         assert_eq!(j.req_u64("cross_job_l2_evictions").unwrap(), 7);
+    }
+
+    #[test]
+    fn fault_stats_json_and_emptiness() {
+        let mut s = RunStats::default();
+        assert!(!s.faults.any());
+        s.faults.attempts = 10;
+        s.faults.delivered = 8;
+        s.faults.timeouts = 2;
+        s.faults.retries = 1;
+        s.faults.aborts = 1;
+        s.faults.reroutes = 3;
+        s.faults.injected_delay = ns(500) as u128;
+        s.faults.by_tier.push(TierFaultStats { tier: "switch".into(), timeouts: 2, ..Default::default() });
+        s.faults.per_job.push(JobFaultStats { name: "decode".into(), reroutes: 3, ..Default::default() });
+        assert!(s.faults.any());
+        let j = s.to_json();
+        let f = j.get("faults").unwrap();
+        assert_eq!(f.req_u64("attempts").unwrap(), 10);
+        assert_eq!(f.req_u64("timeouts").unwrap(), 2);
+        assert_eq!(f.get("by_tier").and_then(|a| a.as_arr()).unwrap()[0].req_str("tier").unwrap(), "switch");
+        assert_eq!(f.get("per_job").and_then(|a| a.as_arr()).unwrap()[0].req_u64("reroutes").unwrap(), 3);
+        // Conservation identities hold for the example.
+        assert_eq!(s.faults.attempts, s.faults.delivered + s.faults.timeouts);
+        assert_eq!(s.faults.timeouts, s.faults.retries + s.faults.aborts);
     }
 
     #[test]

@@ -67,6 +67,23 @@ impl Args {
         self.get(name)
             .map(|v| v.split(',').map(|s| s.trim().to_string()).filter(|s| !s.is_empty()).collect())
     }
+
+    /// A required valued option; errors naming the flag when absent.
+    pub fn req_str(&self, name: &str) -> anyhow::Result<&str> {
+        self.get(name).ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    /// A required integer option; errors naming the flag when absent or
+    /// malformed.
+    pub fn req_u64(&self, name: &str) -> anyhow::Result<u64> {
+        self.get_u64(name)?.ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
+
+    /// A required byte-size option (`1MiB`, `4GB`, …); errors naming the
+    /// flag when absent or malformed.
+    pub fn req_bytes(&self, name: &str) -> anyhow::Result<u64> {
+        self.get_bytes(name)?.ok_or_else(|| anyhow::anyhow!("missing required --{name}"))
+    }
 }
 
 /// Parse `argv` (without the program name) against a spec.
@@ -173,6 +190,25 @@ mod tests {
     #[test]
     fn flag_with_value_is_error() {
         assert!(parse(&argv(&["--ideal=yes"]), &spec()).is_err());
+    }
+
+    #[test]
+    fn required_accessors_name_the_missing_flag() {
+        let sp = vec![
+            ArgSpec { name: "out", help: "", is_flag: false, default: None },
+            ArgSpec { name: "gpus", help: "", is_flag: false, default: None },
+            ArgSpec { name: "size", help: "", is_flag: false, default: None },
+        ];
+        let a = parse(&argv(&["--gpus", "8", "--size", "1MiB"]), &sp).unwrap();
+        assert_eq!(a.req_u64("gpus").unwrap(), 8);
+        assert_eq!(a.req_bytes("size").unwrap(), 1 << 20);
+        let err = a.req_str("out").unwrap_err().to_string();
+        assert!(err.contains("--out"), "error names the flag: {err}");
+        assert!(a.req_u64("out").unwrap_err().to_string().contains("--out"));
+        assert!(a.req_bytes("out").unwrap_err().to_string().contains("--out"));
+        // Malformed values still report the parse error, not "missing".
+        let a = parse(&argv(&["--gpus", "abc"]), &sp).unwrap();
+        assert!(a.req_u64("gpus").unwrap_err().to_string().contains("integer"));
     }
 
     #[test]

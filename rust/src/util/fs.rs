@@ -1,0 +1,112 @@
+//! Atomic file writes for run artifacts.
+//!
+//! Every artifact the simulator emits (figure CSVs, config/spec JSON,
+//! bench snapshots) goes through [`write_atomic`]: the bytes land in a
+//! temporary file in the destination directory first and are renamed
+//! over the target only once fully written, so an interrupted run can
+//! never leave a truncated artifact behind under the final name.
+
+use std::io;
+use std::path::Path;
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Process-wide counter so concurrent writers (coordinator workers,
+/// parallel tests) never collide on a temp name.
+static TEMP_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Write `contents` to `path` atomically: write a sibling temp file,
+/// then rename it over `path`. On any error the temp file is removed
+/// and `path` is left untouched (either the old contents or absent).
+pub fn write_atomic(path: &Path, contents: impl AsRef<[u8]>) -> io::Result<()> {
+    let dir = path.parent().filter(|p| !p.as_os_str().is_empty());
+    let file_name = path
+        .file_name()
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidInput, "path has no file name"))?;
+    let tmp_name = format!(
+        ".{}.tmp-{}-{}",
+        file_name.to_string_lossy(),
+        std::process::id(),
+        TEMP_SEQ.fetch_add(1, Ordering::Relaxed)
+    );
+    let tmp = match dir {
+        Some(d) => d.join(&tmp_name),
+        None => std::path::PathBuf::from(&tmp_name),
+    };
+    let res = std::fs::write(&tmp, contents.as_ref()).and_then(|()| std::fs::rename(&tmp, path));
+    if res.is_err() {
+        let _ = std::fs::remove_file(&tmp);
+    }
+    res
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn temp_dir() -> std::path::PathBuf {
+        let d = std::env::temp_dir().join(format!("ratsim-fs-test-{}", std::process::id()));
+        std::fs::create_dir_all(&d).unwrap();
+        d
+    }
+
+    #[test]
+    fn writes_and_replaces() {
+        let p = temp_dir().join("artifact.json");
+        write_atomic(&p, "first").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "first");
+        write_atomic(&p, "second, longer contents").unwrap();
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "second, longer contents");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn leaves_no_temp_files_behind() {
+        let d = temp_dir();
+        let p = d.join("clean.csv");
+        write_atomic(&p, "a,b\n1,2\n").unwrap();
+        let leftovers: Vec<_> = std::fs::read_dir(&d)
+            .unwrap()
+            .filter_map(|e| e.ok())
+            .filter(|e| e.file_name().to_string_lossy().contains("clean.csv.tmp"))
+            .collect();
+        assert!(leftovers.is_empty(), "temp files left behind: {leftovers:?}");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn failed_write_keeps_old_contents() {
+        let d = temp_dir();
+        let p = d.join("keep.txt");
+        write_atomic(&p, "good").unwrap();
+        // Writing *through* a missing parent directory must fail without
+        // touching the existing artifact.
+        let bad = d.join("no-such-dir").join("keep.txt");
+        assert!(write_atomic(&bad, "bad").is_err());
+        assert_eq!(std::fs::read_to_string(&p).unwrap(), "good");
+        std::fs::remove_file(&p).ok();
+    }
+
+    #[test]
+    fn rejects_pathless_target() {
+        assert!(write_atomic(Path::new(""), "x").is_err());
+    }
+
+    #[test]
+    fn concurrent_writers_each_land_complete() {
+        let p = temp_dir().join("race.txt");
+        let path = p.clone();
+        std::thread::scope(|s| {
+            for i in 0..8 {
+                let path = path.clone();
+                s.spawn(move || {
+                    let body = format!("writer-{i}-").repeat(64);
+                    write_atomic(&path, &body).unwrap();
+                });
+            }
+        });
+        // Whatever writer won, the file is one writer's complete output.
+        let got = std::fs::read_to_string(&p).unwrap();
+        assert!((0..8).any(|i| got == format!("writer-{i}-").repeat(64)));
+        std::fs::remove_file(&p).ok();
+    }
+}

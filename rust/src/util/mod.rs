@@ -4,9 +4,11 @@
 //! property-testing mini-framework.
 
 pub mod cli;
+pub mod fs;
 pub mod json;
 pub mod logger;
 pub mod minibench;
+pub mod panics;
 pub mod proptest;
 pub mod rng;
 pub mod units;

@@ -1,0 +1,67 @@
+//! Panic containment helpers: turn opaque `Box<dyn Any>` panic payloads
+//! into readable strings and re-raise worker panics with a stable label
+//! naming the thread that died (sweep point, engine shard, …) instead of
+//! letting `std::thread::scope` abort the caller with whatever the
+//! payload happened to be.
+
+use std::any::Any;
+use std::thread::ScopedJoinHandle;
+
+/// Best-effort readable form of a panic payload: the `&str`/`String`
+/// message when there is one, a placeholder otherwise.
+pub fn message(payload: &(dyn Any + Send)) -> String {
+    if let Some(s) = payload.downcast_ref::<&str>() {
+        (*s).to_string()
+    } else if let Some(s) = payload.downcast_ref::<String>() {
+        s.clone()
+    } else {
+        "non-string panic payload".to_string()
+    }
+}
+
+/// Join a scoped worker; if it panicked, re-raise with `label` prefixed
+/// so the crash names its origin (`thread::scope` would otherwise
+/// propagate the bare payload with no indication of which worker died).
+pub fn join_labeled<T>(label: &str, handle: ScopedJoinHandle<'_, T>) -> T {
+    match handle.join() {
+        Ok(v) => v,
+        Err(payload) => {
+            std::panic::panic_any(format!("{label}: {}", message(payload.as_ref())))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn message_reads_str_string_and_other_payloads() {
+        let p: Box<dyn Any + Send> = Box::new("static boom");
+        assert_eq!(message(p.as_ref()), "static boom");
+        let p: Box<dyn Any + Send> = Box::new(String::from("owned boom"));
+        assert_eq!(message(p.as_ref()), "owned boom");
+        let p: Box<dyn Any + Send> = Box::new(42u32);
+        assert_eq!(message(p.as_ref()), "non-string panic payload");
+    }
+
+    #[test]
+    fn join_labeled_passes_values_through() {
+        let v = std::thread::scope(|s| join_labeled("worker", s.spawn(|| 7u64)));
+        assert_eq!(v, 7);
+    }
+
+    #[test]
+    fn join_labeled_relabels_worker_panics() {
+        let caught = std::panic::catch_unwind(|| {
+            std::thread::scope(|s| {
+                let h = s.spawn(|| -> u64 { panic!("boom {}", 7) });
+                join_labeled("engine shard 3", h)
+            })
+        });
+        let payload = caught.expect_err("the labeled panic must propagate");
+        let msg = payload.downcast_ref::<String>().expect("label is a String payload");
+        assert!(msg.contains("engine shard 3"), "label present: {msg}");
+        assert!(msg.contains("boom 7"), "original message preserved: {msg}");
+    }
+}

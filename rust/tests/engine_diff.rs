@@ -88,6 +88,10 @@ fn assert_stats_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
         fused.cross_job_l2_evictions, per_hop.cross_job_l2_evictions,
         "{label}: cross-job L2 evictions"
     );
+    // Fault-transport books: retries, reroutes, replay occupancy and the
+    // per-tier/per-job fault splits must ride the identical event stream
+    // (all-zero on fault-free runs).
+    assert_eq!(fused.faults, per_hop.faults, "{label}: fault books");
 }
 
 /// Fused vs per-hop: identical stats, but per-hop must cost extra events
@@ -227,6 +231,32 @@ fn multi_tier_topologies_are_bit_identical() {
         TopologySpec::MultiPod { pods: 4, inter_pod_latency_ns: 500, inter_pod_gbps: 200 };
     mp4.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
     run_both(mp4, "multi-pod-4x-sw-guided");
+}
+
+#[test]
+fn fault_injected_grids_are_bit_identical() {
+    // The reliable-transport layer (timeouts, capped-backoff retries,
+    // rail failover, degraded tiers, walker stalls) must stay on the
+    // deterministic event stream: every fault draw is keyed on flow /
+    // attempt / logical time, never on dispatch wall-order, so all
+    // engines — sharded at any thread count included — agree bit for bit
+    // on faulty grids too.
+    use ratsim::config::FaultSpec;
+    let mut flap = base(8, MIB);
+    flap.faults = Some(FaultSpec::parse("flap:mttf=40us,mttr=10us").unwrap());
+    run_both(flap, "faults-flap");
+
+    let mut failover = base(16, 4 * MIB);
+    failover.faults = Some(FaultSpec::parse("flap:mttf=30us,mttr=15us,reroute").unwrap());
+    run_both(failover, "faults-flap-reroute");
+
+    let mut degrade = base(8, 4 * MIB);
+    degrade.faults = Some(FaultSpec::parse("degrade:tier=switch,frac=0.3,slow=1us").unwrap());
+    run_both(degrade, "faults-degrade");
+
+    let mut stall = base(8, 8 * MIB);
+    stall.faults = Some(FaultSpec::parse("walker-stall:mttf=20us,mttr=10us,stall=3us").unwrap());
+    run_both(stall, "faults-walker-stall");
 }
 
 #[test]
