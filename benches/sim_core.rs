@@ -131,6 +131,10 @@ fn main() {
         ("pod_16gpu_1MiB_full_fidelity", 16u32, 1u64, 0u64, TopologySpec::RailClos),
         ("pod_16gpu_64MiB_500k_reqs", 16, 64, 500_000, TopologySpec::RailClos),
         ("pod_64gpu_16MiB_500k_reqs", 64, 16, 500_000, TopologySpec::RailClos),
+        // The collective-algorithm layer's hot shape: a 2(N-1)-phase ring
+        // AllReduce pipeline (long `after` chains instead of the flat
+        // all-pairs burst).
+        ("pod_64gpu_allreduce_ring_16MiB", 64, 16, 500_000, TopologySpec::RailClos),
         ("pod_256gpu_16MiB_500k_reqs", 256, 16, 500_000, TopologySpec::RailClos),
         // The fabric-layer workloads: the same 64-GPU cell on the
         // multi-tier topologies (4-serializing-hop cross-pod chains /
@@ -146,6 +150,10 @@ fn main() {
     ] {
         let mut pc = paper_baseline(gpus, size_mib * (1 << 20));
         pc.topology = topology;
+        if name.contains("allreduce_ring") {
+            pc.workload.collective = ratsim::config::CollectiveKind::AllReduce;
+            pc.workload.algo = Some(ratsim::config::CollectiveAlgo::Ring);
+        }
         let target = if quick() {
             Some(30_000)
         } else if reqs > 0 {

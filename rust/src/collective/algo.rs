@@ -1,0 +1,959 @@
+//! Collective **algorithm layer**: lower a logical collective
+//! ([`CollectiveKind`]) into a multi-phase, dependency-chained wire
+//! [`Schedule`] under a [`CollectiveAlgo`] selector.
+//!
+//! The paper measures cold Link-TLB misses only on one-shot direct-send
+//! schedules, yet each algorithm stresses the destination-side TLB
+//! completely differently:
+//!
+//! * [`CollectiveAlgo::Direct`] — today's generators, bit-identical
+//!   (wide concurrent working set, one cold walk per touched page).
+//! * [`CollectiveAlgo::Ring`] — N−1 (AG/RS) or 2(N−1) (AR) serialized
+//!   phases; every destination sees a **2-neighbor** working set that the
+//!   first phase warms and later phases reuse.
+//! * [`CollectiveAlgo::RecursiveDoubling`] / [`RecursiveHalving`] —
+//!   log₂ N rounds of pairwise exchanges at doubling/halving strides
+//!   (power-of-two pods); the partner set *strides* the TLB, so each
+//!   round re-colds a different slice of the hierarchy. For AllReduce,
+//!   `RecursiveHalving` is the Rabenseifner halving/doubling lowering.
+//! * [`CollectiveAlgo::Hierarchical`] — the TACCL-style sketch reduced to
+//!   a two-tier lowering: per-group phases stay inside one fabric tier
+//!   (a `MultiPod` pod), a leader phase crosses tiers, and a small
+//!   [`CostModel`] over the [`Fabric`] trait picks the per-phase
+//!   algorithm (direct vs ring) from α/β/cold-walk estimates.
+//!
+//! [`RecursiveHalving`]: CollectiveAlgo::RecursiveHalving
+//!
+//! # Dependency discipline
+//!
+//! The schedule IR's `after` edge is a *single* parent, so lowerings pick
+//! parents primarily to satisfy the IR's overlapping-write ordering rule
+//! (`Schedule::validate`): every destination's receives into overlapping
+//! regions form one per-destination chain. Semantic correctness is then
+//! defined — and machine-checked by [`super::verify`] — under the
+//! synchronous-rounds model the chains induce: an op at dependency depth
+//! `d` reads its source's state after all ops of depth `< d` have landed.
+//! Every lowering here keeps each op's data dependencies at strictly
+//! smaller depth than the op itself (the pre-existing `allreduce_ring`
+//! generator relies on exactly the same discipline).
+//!
+//! # Support matrix
+//!
+//! | kind            | direct | ring | rec-doubling | rec-halving | hierarchical |
+//! |-----------------|--------|------|--------------|-------------|--------------|
+//! | `AllToAll`      |   ✓    |  —   |      —       |      —      |      —       |
+//! | `AllGather`     |   ✓    |  ✓   |   ✓ (2^k)    |      —      |      ✓       |
+//! | `ReduceScatter` |   ✓    |  ✓   |      —       |   ✓ (2^k)   |      ✓       |
+//! | `AllReduce`     |   ✓    |  ✓   |   ✓ (2^k)    |   ✓ (2^k)   |      ✓       |
+//! | `Broadcast`     |   ✓    |  ✓   | ✓ (binomial) |      —      |      ✓       |
+//!
+//! Undefined combinations fail with a labeled error; `(2^k)` entries
+//! require a power-of-two GPU count.
+
+use super::generators;
+use super::schedule::{Schedule, SendOp};
+use crate::config::{CollectiveAlgo, CollectiveKind, PodConfig};
+use crate::net::Fabric;
+use crate::util::units::{fmt_bytes, ns, Time, MIB};
+use anyhow::{bail, Result};
+
+/// Lower `kind` through `algo` for a flat pod (no topology information;
+/// [`CollectiveAlgo::Hierarchical`] falls back to the cost model's flat
+/// pick unless the [`CostModel`] carries real groups — use
+/// [`lower_with`] or [`lower_for`] for topology-aware lowering).
+pub fn lower(
+    kind: CollectiveKind,
+    algo: CollectiveAlgo,
+    gpus: u32,
+    size_bytes: u64,
+) -> Result<Schedule> {
+    lower_with(kind, algo, gpus, size_bytes, &CostModel::flat(gpus))
+}
+
+/// [`lower`] with an explicit [`CostModel`] (group structure + per-phase
+/// direct-vs-ring picks for the hierarchical lowering).
+pub fn lower_with(
+    kind: CollectiveKind,
+    algo: CollectiveAlgo,
+    gpus: u32,
+    size_bytes: u64,
+    cost: &CostModel,
+) -> Result<Schedule> {
+    use crate::config::{CollectiveAlgo as A, CollectiveKind as K};
+    match (kind, algo) {
+        (K::AllToAll, A::Direct) => generators::alltoall_allpairs(gpus, size_bytes),
+        (K::AllGather, A::Direct) => generators::allgather_direct(gpus, size_bytes),
+        (K::AllGather, A::Ring) => allgather_ring(gpus, size_bytes),
+        (K::AllGather, A::RecursiveDoubling) => allgather_rd(gpus, size_bytes),
+        (K::ReduceScatter, A::Direct) => generators::reducescatter_direct(gpus, size_bytes),
+        (K::ReduceScatter, A::Ring) => reducescatter_ring(gpus, size_bytes),
+        (K::ReduceScatter, A::RecursiveHalving) => reducescatter_rh(gpus, size_bytes),
+        (K::AllReduce, A::Direct) => allreduce_direct(gpus, size_bytes),
+        (K::AllReduce, A::Ring) => generators::allreduce_ring(gpus, size_bytes),
+        (K::AllReduce, A::RecursiveDoubling) => allreduce_rd(gpus, size_bytes),
+        (K::AllReduce, A::RecursiveHalving) => allreduce_rh(gpus, size_bytes),
+        (K::Broadcast, A::Direct) => broadcast_direct(gpus, size_bytes),
+        (K::Broadcast, A::Ring) => broadcast_ring(gpus, size_bytes),
+        (K::Broadcast, A::RecursiveDoubling) => broadcast_binomial(gpus, size_bytes),
+        (_, A::Hierarchical) => hierarchical(kind, gpus, size_bytes, cost),
+        (k, a) => bail!(
+            "collective `{}` has no `{}` lowering (see the support matrix in collective::algo)",
+            k.name(),
+            a.name()
+        ),
+    }
+}
+
+/// Lower a pod config's workload: kind and algorithm from
+/// `cfg.workload` ([`crate::config::WorkloadConfig::effective_algo`]),
+/// with the fabric-derived [`CostModel`] when — and only when — the
+/// hierarchical lowering needs it (building a fabric is O(resources),
+/// so plain runs skip it).
+pub fn lower_for(cfg: &PodConfig) -> Result<Schedule> {
+    let kind = cfg.workload.collective;
+    let algo = cfg.workload.effective_algo();
+    if algo == CollectiveAlgo::Hierarchical {
+        let fabric = crate::net::build_fabric(&cfg.topology, cfg.gpus, &cfg.link)?;
+        let cost = CostModel::from_config(fabric.as_ref(), cfg);
+        lower_with(kind, algo, cfg.gpus, cfg.workload.size_bytes, &cost)
+    } else {
+        lower(kind, algo, cfg.gpus, cfg.workload.size_bytes)
+    }
+}
+
+// ---------- cost model ----------
+
+/// A deliberately crude α/β + cold-walk phase-cost estimator over the
+/// fabric: enough to make the hierarchical lowering's direct-vs-ring
+/// pick *topology- and size-sensitive* without simulating anything.
+///
+/// For a phase where each of `ranks` endpoints contributes `b` bytes
+/// (total `W = ranks·b`):
+///
+/// * direct ≈ `α + β·W + walk·pages(W)` — one latency, every page of
+///   the whole working set takes a cold walk;
+/// * ring   ≈ `(ranks−1)·α + β·W + walk·(pages(b)+1)` — serialized
+///   latencies, but the destination working set stays ~one peer's slice,
+///   so only its pages go cold.
+///
+/// Small phases are latency/cold-walk bound (ring wins once the direct
+/// working set spans more pages than the ring's); large phases are
+/// β-bound and the estimates converge. Deterministic by construction.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Latency lower bound of an intra-group hop (ps).
+    pub alpha_intra: Time,
+    /// Latency lower bound of a cross-group hop (ps).
+    pub alpha_cross: Time,
+    /// Serialization cost per byte (ps; 10 ps/byte at 800 Gbps).
+    pub beta_ps_per_byte: f64,
+    /// Cost of one cold page-table walk (ps).
+    pub cold_walk: Time,
+    /// Translation page size (working-set granularity).
+    pub page_bytes: u64,
+    /// Rank groups the hierarchical lowering splits phases over
+    /// (contiguous, equal-sized; a single group ⇒ flat fallback).
+    pub groups: Vec<Vec<u32>>,
+}
+
+impl CostModel {
+    /// Topology-blind model: paper-ish constants, one flat group.
+    pub fn flat(gpus: u32) -> Self {
+        CostModel {
+            alpha_intra: ns(340), // 2 link hops + 1 switch hop
+            alpha_cross: ns(1340),
+            beta_ps_per_byte: 10.0, // 800 Gbps station
+            cold_walk: ns(5 * 270), // levels × (walk mem + walk fabric)
+            page_bytes: 2 * MIB,
+            groups: vec![(0..gpus).collect()],
+        }
+    }
+
+    /// [`CostModel::flat`] with `m` contiguous equal groups — the
+    /// test-friendly way to exercise the hierarchical lowering without
+    /// building a fabric. Fails if `m` does not divide the GPU count.
+    pub fn grouped(gpus: u32, m: u32) -> Result<Self> {
+        if m == 0 || gpus % m != 0 {
+            bail!("{m} groups cannot split {gpus} GPUs evenly");
+        }
+        let g_sz = gpus / m;
+        let mut c = Self::flat(gpus);
+        c.groups = (0..m).map(|i| (i * g_sz..(i + 1) * g_sz).collect()).collect();
+        Ok(c)
+    }
+
+    /// Derive the model from a built fabric + pod config: α from
+    /// [`Fabric::min_path_latency`] scaled by hop counts, β from the
+    /// station bandwidth, cold-walk cost from the translation config,
+    /// and groups from hop-count equivalence (pods of a `MultiPod`;
+    /// single-tier fabrics collapse to one flat group).
+    pub fn from_config(fabric: &dyn Fabric, cfg: &PodConfig) -> Self {
+        let gpus = fabric.gpus();
+        let min_hop = (1..gpus).map(|g| fabric.hop_count(0, g)).min().unwrap_or(1).max(1);
+        let max_hop = (1..gpus).map(|g| fabric.hop_count(0, g)).max().unwrap_or(min_hop);
+        let alpha = fabric.min_path_latency().max(1);
+        // Greedy hop-count partition: ranks whose mutual hop count stays
+        // at the intra minimum share a group. O(gpus × groups).
+        let mut groups: Vec<Vec<u32>> = Vec::new();
+        for g in 0..gpus {
+            match groups.iter_mut().find(|grp| fabric.hop_count(grp[0], g) == min_hop) {
+                Some(grp) => grp.push(g),
+                None => groups.push(vec![g]),
+            }
+        }
+        CostModel {
+            alpha_intra: alpha,
+            alpha_cross: alpha * max_hop as u64 / min_hop as u64,
+            beta_ps_per_byte: 8_000.0 / cfg.link.station_gbps().max(1) as f64,
+            cold_walk: ns(cfg.trans.levels as u64
+                * (cfg.trans.walk_mem_ns + cfg.trans.walk_fabric_ns)),
+            page_bytes: cfg.trans.page_bytes,
+            groups,
+        }
+    }
+
+    fn pages(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.page_bytes.max(1)).max(1)
+    }
+
+    /// Pick direct vs ring for a phase of `ranks` endpoints each
+    /// contributing `per_rank_bytes`, on intra- or cross-group hops.
+    pub fn pick_phase(&self, ranks: u32, per_rank_bytes: u64, cross: bool) -> CollectiveAlgo {
+        if ranks < 3 {
+            return CollectiveAlgo::Direct; // a 2-ring *is* direct
+        }
+        let alpha = if cross { self.alpha_cross } else { self.alpha_intra } as f64;
+        let w = ranks as u64 * per_rank_bytes;
+        let beta = self.beta_ps_per_byte * w as f64;
+        let direct = alpha + beta + self.cold_walk as f64 * self.pages(w) as f64;
+        let ring = (ranks - 1) as f64 * alpha
+            + beta
+            + self.cold_walk as f64 * (self.pages(per_rank_bytes) + 1) as f64;
+        if ring < direct {
+            CollectiveAlgo::Ring
+        } else {
+            CollectiveAlgo::Direct
+        }
+    }
+}
+
+// ---------- op builder ----------
+
+/// Dense-id op accumulator shared by every lowering.
+struct Ops(Vec<SendOp>);
+
+impl Ops {
+    fn new() -> Self {
+        Ops(Vec::new())
+    }
+
+    fn push(&mut self, src: u32, dst: u32, dst_offset: u64, bytes: u64, after: Option<u32>) -> u32 {
+        let id = self.0.len() as u32;
+        self.0.push(SendOp { id, src, dst, dst_offset, bytes, after, job: 0 });
+        id
+    }
+
+    fn finish(self, name: String, gpus: u32, size_bytes: u64) -> Result<Schedule> {
+        let s = Schedule { name, gpus, size_bytes, ops: self.0 };
+        s.validate()?;
+        Ok(s)
+    }
+}
+
+fn sched_name(kind: CollectiveKind, algo: &str, gpus: u32, size_bytes: u64) -> String {
+    format!("{}-{algo}-{gpus}gpu-{}", kind.name(), fmt_bytes(size_bytes))
+}
+
+/// log₂(gpus) for the power-of-two-only lowerings.
+fn pow2_rounds(gpus: u32, algo: &str) -> Result<u32> {
+    if !gpus.is_power_of_two() {
+        bail!("{algo} lowering requires a power-of-two GPU count (got {gpus})");
+    }
+    Ok(gpus.trailing_zeros())
+}
+
+// ---------- ring lowerings ----------
+
+/// Ring AllGather: N−1 rounds; in round `p` rank `r` forwards shard
+/// `(r−p) mod N` to `(r+1) mod N`. Exact-dataflow deps (each forward
+/// waits on the receive that delivered the shard); disjoint regions per
+/// destination, so no overlap chains are needed.
+fn allgather_ring(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    for p in 0..n - 1 {
+        for r in 0..n {
+            let idx = (r + n - p % n) % n;
+            let after = if p == 0 { None } else { Some((p - 1) * n + (r + n - 1) % n) };
+            ops.push(r, (r + 1) % n, idx as u64 * shard, shard, after);
+        }
+    }
+    ops.finish(sched_name(CollectiveKind::AllGather, "ring", gpus, size_bytes), gpus, size_bytes)
+}
+
+/// Ring ReduceScatter: N−1 rounds; in round `p` rank `r` forwards the
+/// partial sum of shard `(r−1−p) mod N` to `(r+1) mod N`; after the last
+/// round rank `q` owns the fully-reduced shard `q`.
+fn reducescatter_ring(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    for p in 0..n - 1 {
+        for r in 0..n {
+            let idx = (r + 2 * n - 1 - p % n) % n;
+            let after = if p == 0 { None } else { Some((p - 1) * n + (r + n - 1) % n) };
+            ops.push(r, (r + 1) % n, idx as u64 * shard, shard, after);
+        }
+    }
+    ops.finish(
+        sched_name(CollectiveKind::ReduceScatter, "ring", gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+// ---------- direct lowerings beyond the generators ----------
+
+/// Direct AllReduce: a direct reduce-scatter phase (per-destination
+/// chained reduction into shard `d`) followed by a direct all-gather
+/// phase; each rank's gather sends wait on its last reduce receive.
+fn allreduce_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    // Phase A — reduce-scatter: all ranks reduce into shard `dst` at
+    // `dst`; overlapping writes chain per destination.
+    let mut last_at: Vec<Option<u32>> = vec![None; n as usize];
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            let id = ops.push(src, dst, dst as u64 * shard, shard, last_at[dst as usize]);
+            last_at[dst as usize] = Some(id);
+        }
+    }
+    // Phase B — all-gather: rank `s` broadcasts its (now reduced) shard
+    // once its own reduction chain is complete.
+    for src in 0..n {
+        for dst in 0..n {
+            if src == dst {
+                continue;
+            }
+            ops.push(src, dst, src as u64 * shard, shard, last_at[src as usize]);
+        }
+    }
+    ops.finish(sched_name(CollectiveKind::AllReduce, "direct", gpus, size_bytes), gpus, size_bytes)
+}
+
+/// Direct Broadcast: root (rank 0) streams the full buffer to every
+/// other rank concurrently.
+fn broadcast_direct(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    generators::chunk_size(gpus, size_bytes)?;
+    let mut ops = Ops::new();
+    for dst in 1..gpus {
+        ops.push(0, dst, 0, size_bytes, None);
+    }
+    ops.finish(sched_name(CollectiveKind::Broadcast, "direct", gpus, size_bytes), gpus, size_bytes)
+}
+
+/// Pipelined ring Broadcast: the buffer splits into N chunks (the last
+/// absorbs the remainder) flowing down the line `0 → 1 → … → N−1`; rank
+/// `r` forwards chunk `c` as soon as it arrives.
+fn broadcast_ring(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let chunk = generators::chunk_size(gpus, size_bytes)?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    for c in 0..n as u64 {
+        let bytes = if c == n as u64 - 1 { size_bytes - c * chunk } else { chunk };
+        for r in 0..n - 1 {
+            let after = if r == 0 { None } else { Some(c as u32 * (n - 1) + r - 1) };
+            ops.push(r, r + 1, c * chunk, bytes, after);
+        }
+    }
+    ops.finish(sched_name(CollectiveKind::Broadcast, "ring", gpus, size_bytes), gpus, size_bytes)
+}
+
+/// Binomial-tree Broadcast (the recursive-doubling lowering; any rank
+/// count): in round `k` every rank holding the buffer forwards it to
+/// `rank + 2^k`, doubling the holder set each round.
+fn broadcast_binomial(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    generators::chunk_size(gpus, size_bytes)?;
+    let mut ops = Ops::new();
+    let mut received: Vec<Option<u32>> = vec![None; gpus as usize];
+    let mut stride = 1u32;
+    while stride < gpus {
+        for src in 0..stride.min(gpus) {
+            let dst = src + stride;
+            if dst >= gpus {
+                continue;
+            }
+            let id = ops.push(src, dst, 0, size_bytes, received[src as usize]);
+            received[dst as usize] = Some(id);
+        }
+        stride *= 2;
+    }
+    ops.finish(
+        sched_name(CollectiveKind::Broadcast, "recursive-doubling", gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+// ---------- recursive doubling / halving (power-of-two pods) ----------
+
+/// Recursive-doubling AllGather: log₂ N rounds; in round `k` rank `r`
+/// exchanges its accumulated aligned 2^k-shard block with partner
+/// `r XOR 2^k`. Each op waits on the receive that completed its block;
+/// destination regions are disjoint across rounds.
+fn allgather_rd(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let rounds = pow2_rounds(gpus, "recursive-doubling")?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    for k in 0..rounds {
+        for r in 0..n {
+            let partner = r ^ (1 << k);
+            let start = (r >> k) << k;
+            let after = if k == 0 { None } else { Some((k - 1) * n + (r ^ (1 << (k - 1)))) };
+            ops.push(r, partner, start as u64 * shard, (1u64 << k) * shard, after);
+        }
+    }
+    ops.finish(
+        sched_name(CollectiveKind::AllGather, "recursive-doubling", gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+/// One recursive-halving reduce-scatter phase (shared by the standalone
+/// RS lowering and Rabenseifner's AllReduce): in round `k` rank `r`
+/// sends the half of its active segment *not* containing itself to
+/// partner `r XOR (seg/2)`. The received halves nest, so each
+/// destination's receives chain round-to-round.
+fn push_rh_reduce_phase(ops: &mut Ops, n: u32, shard: u64, rounds: u32) {
+    for k in 0..rounds {
+        let seg = n >> k;
+        let half = seg >> 1;
+        for r in 0..n {
+            let partner = r ^ half;
+            let seg_start = r & !(seg - 1);
+            let sent_start = if r & half == 0 { seg_start + half } else { seg_start };
+            // The destination's previous receive: in round k−1 its
+            // partner was `partner XOR (n >> k)`.
+            let after =
+                if k == 0 { None } else { Some((k - 1) * n + (partner ^ (n >> k))) };
+            ops.push(r, partner, sent_start as u64 * shard, half as u64 * shard, after);
+        }
+    }
+}
+
+/// Recursive-halving ReduceScatter: log₂ N halving rounds; rank `r`
+/// ends owning the fully-reduced shard `r`.
+fn reducescatter_rh(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let rounds = pow2_rounds(gpus, "recursive-halving")?;
+    let mut ops = Ops::new();
+    push_rh_reduce_phase(&mut ops, gpus, shard, rounds);
+    ops.finish(
+        sched_name(CollectiveKind::ReduceScatter, "recursive-halving", gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+/// Recursive-doubling AllReduce: log₂ N rounds of full-vector pairwise
+/// exchange (`r XOR 2^k`); every destination's receives chain, since the
+/// full window overlaps round-to-round.
+fn allreduce_rd(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    generators::chunk_size(gpus, size_bytes)?;
+    let rounds = pow2_rounds(gpus, "recursive-doubling")?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    for k in 0..rounds {
+        for r in 0..n {
+            let partner = r ^ (1 << k);
+            let after =
+                if k == 0 { None } else { Some((k - 1) * n + (partner ^ (1 << (k - 1)))) };
+            ops.push(r, partner, 0, size_bytes, after);
+        }
+    }
+    ops.finish(
+        sched_name(CollectiveKind::AllReduce, "recursive-doubling", gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+/// Rabenseifner AllReduce (the recursive-halving lowering): a
+/// recursive-halving reduce-scatter phase followed by a
+/// recursive-doubling all-gather phase; each destination's receives —
+/// across *both* phases — form one nested-region chain.
+fn allreduce_rh(gpus: u32, size_bytes: u64) -> Result<Schedule> {
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let rounds = pow2_rounds(gpus, "recursive-halving")?;
+    let n = gpus;
+    let mut ops = Ops::new();
+    push_rh_reduce_phase(&mut ops, n, shard, rounds);
+    // All-gather back out by recursive doubling; ids continue
+    // round-major after the reduce phase's `rounds * n` ops.
+    for k in 0..rounds {
+        for r in 0..n {
+            let partner = r ^ (1 << k);
+            let after = if k == 0 {
+                // The partner's last halving-phase receive (round
+                // `rounds−1`, where its partner was `partner XOR 1`).
+                Some((rounds - 1) * n + (partner ^ 1))
+            } else {
+                Some((rounds + k - 1) * n + (partner ^ (1 << (k - 1))))
+            };
+            let start = (r >> k) << k;
+            ops.push(r, partner, start as u64 * shard, (1u64 << k) * shard, after);
+        }
+    }
+    ops.finish(
+        sched_name(CollectiveKind::AllReduce, "recursive-halving", gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+// ---------- hierarchical ----------
+
+/// Contiguous equal-size groups covering `0..gpus` in rank order (so
+/// group blocks are contiguous shard ranges and the leader of group 0
+/// is rank 0, the broadcast root), or an error explaining why the
+/// hierarchical lowering can't use the model's partition.
+fn checked_groups(cost: &CostModel, gpus: u32) -> Result<Vec<Vec<u32>>> {
+    let groups = &cost.groups;
+    let flat: Vec<u32> = groups.iter().flatten().copied().collect();
+    if flat != (0..gpus).collect::<Vec<_>>() {
+        bail!("cost-model groups must partition ranks 0..{gpus} contiguously in order");
+    }
+    let g_sz = groups[0].len();
+    if groups.iter().any(|grp| grp.len() != g_sz) {
+        bail!(
+            "hierarchical lowering needs equal-size groups (got {:?})",
+            groups.iter().map(Vec::len).collect::<Vec<_>>()
+        );
+    }
+    Ok(groups.clone())
+}
+
+/// Topology-aware two-tier lowering. Phase structure per kind (leader =
+/// first rank of each group; groups from the cost model):
+///
+/// * AllGather — P1 intra-group direct AG; P2 leaders exchange group
+///   blocks (direct or ring, cost-model pick); P3 leaders fan foreign
+///   blocks out to members.
+/// * ReduceScatter — P1 members star-reduce full windows into leaders;
+///   P2 leaders exchange reduced blocks; P3 leaders deliver each
+///   member's shard.
+/// * AllReduce — P1 star-reduce into leaders; P2 leader AllReduce
+///   (direct exchange or ring, cost-model pick); P3 leaders rebroadcast
+///   the full reduced window.
+/// * Broadcast — P1 root to each leader; P2 leaders to their members.
+///
+/// A single-group partition (flat fabrics) degrades to the cost model's
+/// direct-vs-ring flat pick for the kind.
+fn hierarchical(
+    kind: CollectiveKind,
+    gpus: u32,
+    size_bytes: u64,
+    cost: &CostModel,
+) -> Result<Schedule> {
+    if kind == CollectiveKind::AllToAll {
+        bail!("collective `alltoall` has no `hierarchical` lowering");
+    }
+    let shard = generators::chunk_size(gpus, size_bytes)?;
+    let groups = checked_groups(cost, gpus)?;
+    let m = groups.len() as u32;
+    if m == 1 {
+        // Flat fabric: no tier to exploit; pick the flat algorithm.
+        let algo = cost.pick_phase(gpus, size_bytes / gpus as u64, false);
+        let flat = lower_with(kind, algo, gpus, size_bytes, cost)?;
+        return Ok(Schedule {
+            name: sched_name(kind, &format!("hierarchical-flat-{}", algo.name()), gpus, size_bytes),
+            ..flat
+        });
+    }
+    let g_sz = groups[0].len() as u32;
+    let leader = |i: u32| groups[i as usize][0];
+    let block_bytes = g_sz as u64 * shard;
+    let block_off = |i: u32| leader(i) as u64 * shard; // contiguous groups
+    let mut ops = Ops::new();
+    match kind {
+        CollectiveKind::AllGather => {
+            // P1: direct AG inside each group (disjoint shard regions —
+            // no chains needed; concurrency mirrors the flat direct AG).
+            let mut p1_last: Vec<Option<u32>> = vec![None; gpus as usize];
+            for grp in &groups {
+                for &src in grp {
+                    for &dst in grp {
+                        if src == dst {
+                            continue;
+                        }
+                        let id = ops.push(src, dst, src as u64 * shard, shard, None);
+                        p1_last[dst as usize] = Some(id);
+                    }
+                }
+            }
+            // P2: leaders exchange whole group blocks.
+            let p2 = cost.pick_phase(m, block_bytes, true);
+            // recv[i][j] = the op that delivered block j to leader i.
+            let mut recv = vec![vec![None::<u32>; m as usize]; m as usize];
+            if p2 == CollectiveAlgo::Ring && m > 2 {
+                for p in 0..m - 1 {
+                    for r in 0..m {
+                        let bi = (r + m - p % m) % m; // block forwarded this round
+                        let dst = (r + 1) % m;
+                        let after = if p == 0 {
+                            p1_last[leader(r) as usize]
+                        } else {
+                            recv[r as usize][bi as usize]
+                        };
+                        let id =
+                            ops.push(leader(r), leader(dst), block_off(bi), block_bytes, after);
+                        recv[dst as usize][bi as usize] = Some(id);
+                    }
+                }
+            } else {
+                for i in 0..m {
+                    for j in 0..m {
+                        if i == j {
+                            continue;
+                        }
+                        let id = ops.push(
+                            leader(i),
+                            leader(j),
+                            block_off(i),
+                            block_bytes,
+                            p1_last[leader(i) as usize],
+                        );
+                        recv[j as usize][i as usize] = Some(id);
+                    }
+                }
+            }
+            // P3: leaders fan each foreign block out to their members,
+            // as soon as that block arrived.
+            for i in 0..m {
+                for j in 0..m {
+                    if i == j {
+                        continue;
+                    }
+                    for &dst in &groups[i as usize] {
+                        if dst == leader(i) {
+                            continue;
+                        }
+                        ops.push(
+                            leader(i),
+                            dst,
+                            block_off(j),
+                            block_bytes,
+                            recv[i as usize][j as usize],
+                        );
+                    }
+                }
+            }
+        }
+        CollectiveKind::ReduceScatter | CollectiveKind::AllReduce => {
+            // P1: members star-reduce their full windows into the
+            // leader; overlapping full-window writes chain per leader.
+            let mut p1_last: Vec<Option<u32>> = vec![None; m as usize];
+            for (i, grp) in groups.iter().enumerate() {
+                for &src in grp {
+                    if src == leader(i as u32) {
+                        continue;
+                    }
+                    let id = ops.push(src, leader(i as u32), 0, size_bytes, p1_last[i]);
+                    p1_last[i] = Some(id);
+                }
+            }
+            if kind == CollectiveKind::ReduceScatter {
+                // P2: leader i sends group-reduced block j to leader j;
+                // same-region writes chain per destination leader, after
+                // its (overlapping) P1 chain.
+                let mut p2_last: Vec<Option<u32>> = p1_last.clone();
+                for i in 0..m {
+                    for j in 0..m {
+                        if i == j {
+                            continue;
+                        }
+                        let id = ops.push(
+                            leader(i),
+                            leader(j),
+                            block_off(j),
+                            block_bytes,
+                            p2_last[j as usize],
+                        );
+                        p2_last[j as usize] = Some(id);
+                    }
+                }
+                // P3: leader j delivers each member's reduced shard.
+                for j in 0..m {
+                    for &dst in &groups[j as usize] {
+                        if dst == leader(j) {
+                            continue;
+                        }
+                        ops.push(leader(j), dst, dst as u64 * shard, shard, p2_last[j as usize]);
+                    }
+                }
+            } else {
+                // AllReduce. P2: leader all-reduce over full windows —
+                // direct exchange or a leader ring, by cost.
+                let ring_ok = m > 2 && size_bytes % m as u64 == 0 && size_bytes / m as u64 > 0;
+                let p2 = if ring_ok {
+                    cost.pick_phase(m, size_bytes, true)
+                } else {
+                    CollectiveAlgo::Direct
+                };
+                let mut p2_last: Vec<Option<u32>> = p1_last.clone();
+                if p2 == CollectiveAlgo::Ring {
+                    // Ring AR among leaders, chunk = size/m; leader-rank
+                    // r's lane writes into leader r+1, chained after that
+                    // leader's P1 chain (full-window overlap).
+                    let chunk_m = size_bytes / m as u64;
+                    for r in 0..m {
+                        let dst = (r + 1) % m;
+                        let mut prev = p1_last[dst as usize];
+                        for phase in 0..2 * (m - 1) {
+                            let ci = (r + m - phase % m) % m;
+                            let id = ops.push(
+                                leader(r),
+                                leader(dst),
+                                ci as u64 * chunk_m,
+                                chunk_m,
+                                prev,
+                            );
+                            prev = Some(id);
+                        }
+                        p2_last[dst as usize] = prev;
+                    }
+                } else {
+                    for i in 0..m {
+                        for j in 0..m {
+                            if i == j {
+                                continue;
+                            }
+                            let id = ops.push(leader(i), leader(j), 0, size_bytes, p2_last[j as usize]);
+                            p2_last[j as usize] = Some(id);
+                        }
+                    }
+                }
+                // P3: leaders rebroadcast the fully-reduced window.
+                for j in 0..m {
+                    for &dst in &groups[j as usize] {
+                        if dst == leader(j) {
+                            continue;
+                        }
+                        ops.push(leader(j), dst, 0, size_bytes, p2_last[j as usize]);
+                    }
+                }
+            }
+        }
+        CollectiveKind::Broadcast => {
+            // P1: root (= leader 0) to each other leader; P2: each
+            // leader to its members.
+            let mut p1: Vec<Option<u32>> = vec![None; m as usize];
+            for i in 1..m {
+                p1[i as usize] = Some(ops.push(leader(0), leader(i), 0, size_bytes, None));
+            }
+            for i in 0..m {
+                for &dst in &groups[i as usize] {
+                    if dst == leader(i) {
+                        continue;
+                    }
+                    ops.push(leader(i), dst, 0, size_bytes, p1[i as usize]);
+                }
+            }
+        }
+        CollectiveKind::AllToAll => unreachable!("rejected above"),
+    }
+    ops.finish(
+        sched_name(kind, &format!("hierarchical-{m}x{g_sz}"), gpus, size_bytes),
+        gpus,
+        size_bytes,
+    )
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{CollectiveAlgo as A, CollectiveKind as K};
+    use crate::util::units::MIB;
+
+    /// Every defined (kind, algo) combination for a pod size.
+    pub(crate) fn defined_combos(gpus: u32) -> Vec<(K, A)> {
+        let pow2 = gpus.is_power_of_two();
+        let mut v = vec![
+            (K::AllToAll, A::Direct),
+            (K::AllGather, A::Direct),
+            (K::AllGather, A::Ring),
+            (K::AllGather, A::Hierarchical),
+            (K::ReduceScatter, A::Direct),
+            (K::ReduceScatter, A::Ring),
+            (K::ReduceScatter, A::Hierarchical),
+            (K::AllReduce, A::Direct),
+            (K::AllReduce, A::Ring),
+            (K::AllReduce, A::Hierarchical),
+            (K::Broadcast, A::Direct),
+            (K::Broadcast, A::Ring),
+            (K::Broadcast, A::RecursiveDoubling),
+            (K::Broadcast, A::Hierarchical),
+        ];
+        if pow2 {
+            v.extend([
+                (K::AllGather, A::RecursiveDoubling),
+                (K::ReduceScatter, A::RecursiveHalving),
+                (K::AllReduce, A::RecursiveDoubling),
+                (K::AllReduce, A::RecursiveHalving),
+            ]);
+        }
+        v
+    }
+
+    #[test]
+    fn direct_reproduces_generators_bit_identically() {
+        for (gpus, size) in [(4u32, MIB), (8, MIB), (16, 4 * MIB)] {
+            assert_eq!(
+                lower(K::AllToAll, A::Direct, gpus, size).unwrap(),
+                generators::alltoall_allpairs(gpus, size).unwrap()
+            );
+            assert_eq!(
+                lower(K::AllGather, A::Direct, gpus, size).unwrap(),
+                generators::allgather_direct(gpus, size).unwrap()
+            );
+            assert_eq!(
+                lower(K::ReduceScatter, A::Direct, gpus, size).unwrap(),
+                generators::reducescatter_direct(gpus, size).unwrap()
+            );
+            assert_eq!(
+                lower(K::AllReduce, A::Ring, gpus, size).unwrap(),
+                generators::allreduce_ring(gpus, size).unwrap()
+            );
+        }
+    }
+
+    #[test]
+    fn every_defined_combo_validates() {
+        for gpus in [2u32, 3, 4, 5, 8, 16] {
+            for (k, a) in defined_combos(gpus) {
+                let s = lower(k, a, gpus, MIB)
+                    .unwrap_or_else(|e| panic!("{}-{} at {gpus}: {e:#}", k.name(), a.name()));
+                s.validate().unwrap();
+                assert!(!s.ops.is_empty());
+            }
+        }
+    }
+
+    #[test]
+    fn undefined_combos_fail_with_labeled_errors() {
+        for (k, a) in [
+            (K::AllToAll, A::Ring),
+            (K::AllToAll, A::RecursiveDoubling),
+            (K::AllToAll, A::Hierarchical),
+            (K::AllGather, A::RecursiveHalving),
+            (K::ReduceScatter, A::RecursiveDoubling),
+        ] {
+            let err = lower(k, a, 8, MIB).unwrap_err().to_string();
+            assert!(err.contains(k.name()), "{err}");
+        }
+        // Power-of-two-only lowerings reject other pod sizes.
+        assert!(lower(K::AllReduce, A::RecursiveDoubling, 6, MIB).is_err());
+        assert!(lower(K::AllReduce, A::RecursiveHalving, 12, MIB).is_err());
+        assert!(lower(K::AllGather, A::RecursiveDoubling, 10, MIB).is_err());
+    }
+
+    #[test]
+    fn ring_allgather_shape() {
+        let n = 8u32;
+        let s = allgather_ring(n, MIB).unwrap();
+        assert_eq!(s.ops.len(), (n * (n - 1)) as usize);
+        // Every op forwards one shard to the right neighbor.
+        let shard = MIB / n as u64;
+        assert!(s.ops.iter().all(|o| o.bytes == shard && o.dst == (o.src + 1) % n));
+        // Destination working set: the full buffer minus its own shard.
+        assert_eq!(s.recv_window_bytes(3), MIB);
+        // Round 0 ops are roots; every later op chains.
+        assert!(s.ops.iter().take(n as usize).all(|o| o.after.is_none()));
+        assert!(s.ops.iter().skip(n as usize).all(|o| o.after.is_some()));
+    }
+
+    #[test]
+    fn rabenseifner_moves_fewer_bytes_than_ring() {
+        // The point of halving/doubling: 2·size·(N−1)/N logical bytes vs
+        // the same for ring — but in log N rounds; and strictly fewer
+        // bytes than direct (2·size·(N−1)).
+        let n = 16u32;
+        let rh = allreduce_rh(n, 16 * MIB).unwrap();
+        let direct = allreduce_direct(n, 16 * MIB).unwrap();
+        let ring = generators::allreduce_ring(n, 16 * MIB).unwrap();
+        assert_eq!(rh.total_bytes(), ring.total_bytes());
+        assert!(rh.total_bytes() < direct.total_bytes());
+        // Dependency depth: ring = 2(N−1) phases, RH = 2 log₂ N rounds.
+        assert_eq!(rh.ops.len() as u32, 2 * 4 * n);
+    }
+
+    #[test]
+    fn hierarchical_uses_groups_and_leaders() {
+        let cost = CostModel::grouped(16, 2).unwrap();
+        let s = lower_with(K::AllReduce, A::Hierarchical, 16, MIB, &cost).unwrap();
+        assert!(s.name.contains("hierarchical-2x8"), "{}", s.name);
+        // Cross-group traffic only flows between the leaders (0 and 8).
+        for o in &s.ops {
+            let cross = (o.src < 8) != (o.dst < 8);
+            if cross {
+                assert!(
+                    (o.src == 0 || o.src == 8) && (o.dst == 0 || o.dst == 8),
+                    "non-leader cross-group op: {o:?}"
+                );
+            }
+        }
+        // Single group ⇒ flat fallback, labeled as such.
+        let flat = lower_with(K::AllReduce, A::Hierarchical, 16, MIB, &CostModel::flat(16)).unwrap();
+        assert!(flat.name.contains("hierarchical-flat"), "{}", flat.name);
+    }
+
+    #[test]
+    fn hierarchical_rejects_broken_group_partitions() {
+        let mut cost = CostModel::flat(8);
+        cost.groups = vec![vec![0, 1, 2], vec![3, 4, 5, 6, 7]];
+        assert!(lower_with(K::AllGather, A::Hierarchical, 8, MIB, &cost).is_err());
+        cost.groups = vec![vec![0, 2, 4, 6], vec![1, 3, 5, 7]];
+        assert!(lower_with(K::AllGather, A::Hierarchical, 8, MIB, &cost).is_err());
+        assert!(CostModel::grouped(8, 3).is_err());
+    }
+
+    #[test]
+    fn cost_model_prefers_ring_for_small_cold_phases() {
+        let cost = CostModel::flat(16);
+        // Tiny phase: latency+cold-walk dominated — pages(W) == pages(b),
+        // so direct's single α wins.
+        assert_eq!(cost.pick_phase(16, 64 * 1024, false), A::Direct);
+        // Medium phase: the direct working set spans many cold pages the
+        // ring avoids, and β dwarfs the serialized αs — ring wins.
+        assert_eq!(cost.pick_phase(16, 32 * MIB, false), A::Ring);
+        // Two ranks: a ring degenerates to direct.
+        assert_eq!(cost.pick_phase(2, 32 * MIB, true), A::Direct);
+    }
+
+    #[test]
+    fn lower_for_threads_config_algo() {
+        use crate::config::presets::paper_baseline;
+        let mut cfg = paper_baseline(16, MIB);
+        cfg.workload.collective = K::AllReduce;
+        // Default: the legacy ring schedule, bit-identical.
+        assert_eq!(
+            lower_for(&cfg).unwrap(),
+            generators::allreduce_ring(16, MIB).unwrap()
+        );
+        // Explicit algorithm override.
+        cfg.workload.algo = Some(A::RecursiveDoubling);
+        assert!(lower_for(&cfg).unwrap().name.contains("recursive-doubling"));
+        // Hierarchical on a multi-pod fabric derives pod groups.
+        cfg.topology = crate::config::TopologySpec::multi_pod_default();
+        cfg.workload.algo = Some(A::Hierarchical);
+        assert!(lower_for(&cfg).unwrap().name.contains("hierarchical-2x8"));
+    }
+}

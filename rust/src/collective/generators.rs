@@ -5,14 +5,17 @@ use crate::config::CollectiveKind;
 use crate::util::units::fmt_bytes;
 use anyhow::{bail, Result};
 
-/// Build the schedule for a configured collective.
+/// Build the schedule for a collective on its *default* algorithm
+/// (ring for AllReduce, direct sends otherwise). Kept as the stable
+/// pre-algorithm-layer entry point; algorithm selection lives in
+/// [`super::algo::lower`], which this delegates to.
 pub fn build(kind: CollectiveKind, gpus: u32, size_bytes: u64) -> Result<Schedule> {
-    match kind {
-        CollectiveKind::AllToAll => alltoall_allpairs(gpus, size_bytes),
-        CollectiveKind::AllGather => allgather_direct(gpus, size_bytes),
-        CollectiveKind::AllReduceRing => allreduce_ring(gpus, size_bytes),
-        CollectiveKind::ReduceScatter => reducescatter_direct(gpus, size_bytes),
-    }
+    super::algo::lower(
+        kind,
+        crate::config::CollectiveAlgo::default_for(kind),
+        gpus,
+        size_bytes,
+    )
 }
 
 /// The paper's workload: all-pairs/direct All-to-All (§3). Each GPU's
@@ -251,7 +254,9 @@ pub fn moe_alltoall_skewed(gpus: u32, size_bytes: u64, skew: f64, seed: u64) -> 
     Ok(s)
 }
 
-fn chunk_size(gpus: u32, size_bytes: u64) -> Result<u64> {
+/// Per-rank shard/chunk width (`size / gpus`), with the shared guards
+/// every lowering needs (≥ 2 GPUs, non-zero chunk).
+pub(super) fn chunk_size(gpus: u32, size_bytes: u64) -> Result<u64> {
     if gpus < 2 {
         bail!("collectives need >= 2 GPUs");
     }
@@ -348,7 +353,8 @@ mod tests {
         use crate::config::CollectiveKind::*;
         assert!(build(AllToAll, 8, MIB).unwrap().name.contains("alltoall"));
         assert!(build(AllGather, 8, MIB).unwrap().name.contains("allgather"));
-        assert!(build(AllReduceRing, 8, MIB).unwrap().name.contains("allreduce"));
+        assert!(build(AllReduce, 8, MIB).unwrap().name.contains("allreduce"));
+        assert!(build(Broadcast, 8, MIB).unwrap().name.contains("broadcast"));
     }
 
     #[test]

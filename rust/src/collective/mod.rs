@@ -2,22 +2,31 @@
 //!
 //! A [`Schedule`] is a set of [`SendOp`]s: `(src, dst, offset, bytes,
 //! after, job)` remote-store streams, the same two-sided representation
-//! the MSCCLang example scripts synthesize (§3). Generators cover the
-//! paper's all-pairs/direct All-to-All plus direct AllGather, ring
-//! AllReduce and direct ReduceScatter baselines and a skewed MoE
-//! expert-parallel All-to-All for serving traffic; `mscclang` round-trips
-//! schedules through a JSON IR, and [`workload`] composes many per-job
-//! schedules into one multi-tenant run (see WORKLOADS.md for the full
-//! scenario catalog).
+//! the MSCCLang example scripts synthesize (§3). The [`algo`] layer
+//! lowers logical collectives (All-to-All, AllGather, AllReduce,
+//! ReduceScatter, Broadcast) into schedules under a
+//! [`crate::config::CollectiveAlgo`] selector — direct sends (the
+//! paper's baseline shapes, kept in [`generators`]), rings,
+//! recursive doubling/halving, and a topology-aware hierarchical
+//! lowering — plus a skewed MoE expert-parallel All-to-All for serving
+//! traffic. [`verify`] replays any schedule through a chunk-tracking
+//! data-flow interpreter and checks the collective's semantic
+//! postcondition; `mscclang` round-trips schedules through a JSON IR,
+//! and [`workload`] composes many per-job schedules into one
+//! multi-tenant run (see WORKLOADS.md for the full scenario catalog).
 
+pub mod algo;
 pub mod generators;
 pub mod mscclang;
 pub mod schedule;
+pub mod verify;
 pub mod workload;
 
+pub use algo::{lower, lower_for, lower_with, CostModel};
 pub use generators::{
     allgather_direct, allreduce_ring, alltoall_allpairs, build, moe_alltoall_skewed,
     reducescatter_direct,
 };
 pub use schedule::{JobId, OpId, Schedule, SendOp};
+pub use verify::verify_semantics;
 pub use workload::{arrival_offsets, JobDesc, Workload, WorkloadBuilder};

@@ -1,0 +1,439 @@
+//! Semantic **schedule verifier**: a chunk-tracking data-flow
+//! interpreter that "executes" any [`Schedule`] respecting its `after`
+//! dependencies and asserts the collective's postcondition.
+//!
+//! [`Schedule::validate`] is purely structural (dense ids, acyclic deps,
+//! ordered overlaps); it will happily accept a ring that rotates shards
+//! the wrong way. This module checks *meaning*: it models each GPU's
+//! receive window as a byte-interval map of **contributor sets** (which
+//! ranks' input data has been folded into each region) and replays the
+//! schedule under the synchronous-rounds execution model the single
+//! `after` parent induces:
+//!
+//! * an op's **depth** is the length of its `after` chain;
+//! * all ops of depth `d` execute in round `d`, reading their source
+//!   GPU's state as of the end of round `d − 1` and union-writing it
+//!   into `[dst_offset, dst_offset + bytes)` of the destination at the
+//!   *same* offsets (the in-place convention every lowering follows —
+//!   a send carries the source's current content for that region).
+//!
+//! Union semantics make the interpreter agnostic to whether an op is a
+//! raw copy or a reduction: for gather-style collectives a region is
+//! correct when its contributor set is exactly the expected singleton's
+//! — or, for reductions, exactly the full rank set. Over-contribution
+//! (double-reduce) cannot be expressed; the checked property is the
+//! paper-relevant one — *whose bytes ended up where*.
+//!
+//! Postconditions (`n` = GPUs, `shard = size / n`):
+//!
+//! | kind            | postcondition                                               |
+//! |-----------------|-------------------------------------------------------------|
+//! | `AllGather`     | every GPU holds shard `s` with set `{s}`, for all `s`       |
+//! | `AllReduce`     | every GPU holds `{0..n}` over the whole window              |
+//! | `ReduceScatter` | GPU `d` holds `{0..n}` over its own shard `d`               |
+//! | `Broadcast`     | every non-root GPU holds `{root}` over the whole window     |
+//! | `AllToAll`      | structural: exactly one `(src → dst)` op per ordered pair, `chunk` bytes at offset `src · chunk` |
+//!
+//! All-to-all is personalized exchange — every `(src, dst)` payload is
+//! distinct by definition, so there is no data *flow* to track and the
+//! checker pins the direct-send shape instead.
+
+use super::schedule::Schedule;
+use crate::config::CollectiveKind;
+use anyhow::{ensure, Result};
+use std::collections::BTreeSet;
+
+/// Contributor set for one byte region: which ranks' input data has
+/// been folded in.
+type Contribs = BTreeSet<u32>;
+
+/// One GPU's receive window as an interval map: sorted, disjoint,
+/// half-open `[start, end)` regions, each with a contributor set.
+/// Adjacent regions may share a set (no normalization needed — queries
+/// work region-by-region).
+#[derive(Debug, Clone)]
+struct Window {
+    regions: Vec<(u64, u64, Contribs)>,
+}
+
+impl Window {
+    fn new() -> Self {
+        Window { regions: Vec::new() }
+    }
+
+    /// Split regions so that `at` falls on a boundary.
+    fn split_at(&mut self, at: u64) {
+        for i in 0..self.regions.len() {
+            let (s, e, _) = &self.regions[i];
+            if *s < at && at < *e {
+                let (s, e, set) = self.regions[i].clone();
+                self.regions[i] = (s, at, set.clone());
+                self.regions.insert(i + 1, (at, e, set));
+                return;
+            }
+        }
+    }
+
+    /// Union `set` into `[start, end)`, creating regions where the
+    /// window had none.
+    fn union_write(&mut self, start: u64, end: u64, set: &Contribs) {
+        if start >= end {
+            return;
+        }
+        self.split_at(start);
+        self.split_at(end);
+        // Union into every existing region inside [start, end), then
+        // fill the uncovered gaps with fresh regions.
+        let mut covered: Vec<(u64, u64)> = Vec::new();
+        for (s, e, c) in self.regions.iter_mut() {
+            if *s >= start && *e <= end {
+                c.extend(set.iter().copied());
+                covered.push((*s, *e));
+            }
+        }
+        let mut gaps: Vec<(u64, u64, Contribs)> = Vec::new();
+        let mut cursor = start;
+        for (s, e) in covered {
+            if s > cursor {
+                gaps.push((cursor, s, set.clone()));
+            }
+            cursor = e.max(cursor);
+        }
+        if cursor < end {
+            gaps.push((cursor, end, set.clone()));
+        }
+        self.regions.extend(gaps);
+        self.regions.sort_by_key(|r| r.0);
+    }
+
+    /// The contributor sets present in `[start, end)`; an uncovered gap
+    /// reports as an empty set.
+    fn query(&self, start: u64, end: u64) -> Vec<Contribs> {
+        let mut out = Vec::new();
+        let mut cursor = start;
+        for (s, e, c) in &self.regions {
+            if *e <= start || *s >= end {
+                continue;
+            }
+            if *s > cursor {
+                out.push(Contribs::new()); // gap
+            }
+            out.push(c.clone());
+            cursor = (*e).min(end);
+        }
+        if cursor < end || out.is_empty() {
+            out.push(Contribs::new());
+        }
+        out
+    }
+
+    /// Does every byte of `[start, end)` carry exactly `want`?
+    fn holds_exactly(&self, start: u64, end: u64, want: &Contribs) -> bool {
+        self.query(start, end).iter().all(|c| c == want)
+    }
+}
+
+/// Dependency depth of every op (length of its `after` chain), computed
+/// iteratively with memoization. The schedule must already be
+/// [`Schedule::validate`]d (acyclic).
+fn depths(s: &Schedule) -> Vec<u32> {
+    let mut depth = vec![u32::MAX; s.ops.len()];
+    for op in &s.ops {
+        // Walk the chain down to a known depth, then unwind.
+        let mut stack = Vec::new();
+        let mut cur = op.id;
+        loop {
+            if depth[cur as usize] != u32::MAX {
+                break;
+            }
+            stack.push(cur);
+            match s.ops[cur as usize].after {
+                Some(d) => cur = d,
+                None => {
+                    depth[cur as usize] = 0;
+                    stack.pop();
+                    break;
+                }
+            }
+        }
+        while let Some(id) = stack.pop() {
+            let parent = s.ops[id as usize].after.expect("non-root on stack has a parent");
+            depth[id as usize] = depth[parent as usize] + 1;
+        }
+    }
+    depth
+}
+
+/// Union-write each source region onto the *matching* destination bytes
+/// (region-by-region, so shard boundaries in the source survive into
+/// the destination instead of smearing across the whole send range;
+/// source gaps contribute nothing).
+fn copy_regions(src: &Window, dst: &mut Window, start: u64, end: u64) {
+    for (s, e, c) in &src.regions {
+        if *e <= start || *s >= end {
+            continue;
+        }
+        dst.union_write((*s).max(start), (*e).min(end), c);
+    }
+}
+
+/// The full contributor set `{0..n}`.
+fn full_set(n: u32) -> Contribs {
+    (0..n).collect()
+}
+
+/// Replay `s` as collective `kind` and check the postcondition in the
+/// module table. The schedule must pass [`Schedule::validate`] first
+/// (the verifier calls it and fails fast otherwise).
+pub fn verify_semantics(kind: CollectiveKind, s: &Schedule) -> Result<()> {
+    s.validate()?;
+    let n = s.gpus;
+    let size = s.size_bytes;
+    let shard = size / n as u64;
+    ensure!(shard > 0, "schedule size {size} too small for {n} GPUs");
+
+    if kind == CollectiveKind::AllToAll {
+        return verify_alltoall_shape(s, shard);
+    }
+
+    // Initial windows per kind.
+    let mut init: Vec<Window> = (0..n).map(|_| Window::new()).collect();
+    match kind {
+        CollectiveKind::AllGather => {
+            // Rank g starts holding only its own shard.
+            for g in 0..n {
+                init[g as usize].union_write(
+                    g as u64 * shard,
+                    (g as u64 + 1) * shard,
+                    &BTreeSet::from([g]),
+                );
+            }
+        }
+        CollectiveKind::AllReduce | CollectiveKind::ReduceScatter => {
+            // Rank g starts with its own full input vector.
+            for g in 0..n {
+                init[g as usize].union_write(0, size, &BTreeSet::from([g]));
+            }
+        }
+        CollectiveKind::Broadcast => {
+            // Only the root (rank 0) holds data.
+            init[0].union_write(0, size, &BTreeSet::from([0]));
+        }
+        CollectiveKind::AllToAll => unreachable!("handled above"),
+    }
+
+    let fin = execute_precise(s, init);
+
+    match kind {
+        CollectiveKind::AllGather => {
+            for g in 0..n {
+                for sh in 0..n {
+                    let want = BTreeSet::from([sh]);
+                    let (a, b) = (sh as u64 * shard, (sh as u64 + 1) * shard);
+                    ensure!(
+                        fin[g as usize].holds_exactly(a, b, &want),
+                        "allgather: GPU {g} does not hold shard {sh} (schedule `{}`)",
+                        s.name
+                    );
+                }
+            }
+        }
+        CollectiveKind::AllReduce => {
+            let want = full_set(n);
+            // Check the shard-aligned window; a remainder tail past
+            // n*shard (indivisible sizes) follows the same sends.
+            for g in 0..n {
+                ensure!(
+                    fin[g as usize].holds_exactly(0, n as u64 * shard, &want),
+                    "allreduce: GPU {g} is not fully reduced (schedule `{}`)",
+                    s.name
+                );
+            }
+        }
+        CollectiveKind::ReduceScatter => {
+            let want = full_set(n);
+            for d in 0..n {
+                let (a, b) = (d as u64 * shard, (d as u64 + 1) * shard);
+                ensure!(
+                    fin[d as usize].holds_exactly(a, b, &want),
+                    "reducescatter: GPU {d} does not own its reduced shard (schedule `{}`)",
+                    s.name
+                );
+            }
+        }
+        CollectiveKind::Broadcast => {
+            let want = BTreeSet::from([0]);
+            for g in 0..n {
+                ensure!(
+                    fin[g as usize].holds_exactly(0, size, &want),
+                    "broadcast: GPU {g} does not hold the root's data (schedule `{}`)",
+                    s.name
+                );
+            }
+        }
+        CollectiveKind::AllToAll => unreachable!("handled above"),
+    }
+    Ok(())
+}
+
+/// [`execute`] with region-preserving copies (shard boundaries in the
+/// source survive into the destination instead of smearing).
+fn execute_precise(s: &Schedule, init: Vec<Window>) -> Vec<Window> {
+    let depth = depths(s);
+    let rounds = depth.iter().copied().max().map(|d| d + 1).unwrap_or(0);
+    let mut by_round: Vec<Vec<usize>> = vec![Vec::new(); rounds as usize];
+    for (i, &d) in depth.iter().enumerate() {
+        by_round[d as usize].push(i);
+    }
+    let mut state = init;
+    for round in &by_round {
+        let snapshot = state.clone();
+        for &i in round {
+            let op = &s.ops[i];
+            copy_regions(
+                &snapshot[op.src as usize],
+                &mut state[op.dst as usize],
+                op.dst_offset,
+                op.dst_offset + op.bytes,
+            );
+        }
+    }
+    state
+}
+
+/// Structural check for personalized all-to-all: exactly one op per
+/// ordered `(src, dst)` pair, each `chunk` bytes at `dst_offset =
+/// src · chunk` — the direct-send shape the paper measures.
+fn verify_alltoall_shape(s: &Schedule, chunk: u64) -> Result<()> {
+    let n = s.gpus;
+    let mut seen = vec![false; (n as usize) * (n as usize)];
+    for op in &s.ops {
+        let slot = op.src as usize * n as usize + op.dst as usize;
+        ensure!(!seen[slot], "alltoall: duplicate op for pair ({}, {})", op.src, op.dst);
+        seen[slot] = true;
+        ensure!(
+            op.bytes == chunk && op.dst_offset == op.src as u64 * chunk,
+            "alltoall: op {} is not a direct {}-byte send at src-indexed offset",
+            op.id,
+            chunk
+        );
+    }
+    for src in 0..n {
+        for dst in 0..n {
+            if src != dst {
+                ensure!(
+                    seen[src as usize * n as usize + dst as usize],
+                    "alltoall: missing op for pair ({src}, {dst})"
+                );
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::super::generators;
+    use super::*;
+    use crate::config::CollectiveKind as K;
+    use crate::util::units::MIB;
+
+    #[test]
+    fn window_union_and_query() {
+        let mut w = Window::new();
+        w.union_write(0, 100, &BTreeSet::from([1]));
+        w.union_write(50, 150, &BTreeSet::from([2]));
+        assert!(w.holds_exactly(0, 50, &BTreeSet::from([1])));
+        assert!(w.holds_exactly(50, 100, &BTreeSet::from([1, 2])));
+        assert!(w.holds_exactly(100, 150, &BTreeSet::from([2])));
+        assert!(!w.holds_exactly(0, 150, &BTreeSet::from([1])));
+        // Gaps report empty.
+        assert!(w.holds_exactly(200, 300, &Contribs::new()));
+    }
+
+    #[test]
+    fn depths_follow_after_chains() {
+        let s = generators::allreduce_ring(4, MIB).unwrap();
+        let d = depths(&s);
+        // Each rank's lane chains 2(n−1) phases: depths 0..=5.
+        assert_eq!(*d.iter().max().unwrap(), 5);
+        assert_eq!(d.iter().filter(|&&x| x == 0).count(), 4);
+    }
+
+    #[test]
+    fn preexisting_generators_are_semantically_correct() {
+        for (gpus, size) in [(4u32, MIB), (8, MIB), (16, 2 * MIB)] {
+            verify_semantics(K::AllToAll, &generators::alltoall_allpairs(gpus, size).unwrap())
+                .unwrap();
+            verify_semantics(K::AllGather, &generators::allgather_direct(gpus, size).unwrap())
+                .unwrap();
+            verify_semantics(K::AllReduce, &generators::allreduce_ring(gpus, size).unwrap())
+                .unwrap();
+            verify_semantics(
+                K::ReduceScatter,
+                &generators::reducescatter_direct(gpus, size).unwrap(),
+            )
+            .unwrap();
+        }
+    }
+
+    #[test]
+    fn corrupted_schedules_fail() {
+        // A ring rotated the wrong way: flip every dst_offset to the
+        // shard *right* of the intended one. Structure stays valid-ish
+        // but the dataflow no longer gathers everything everywhere.
+        let mut s = generators::allreduce_ring(4, MIB).unwrap();
+        let shard = MIB / 4;
+        for o in &mut s.ops {
+            o.dst_offset = (o.dst_offset + shard) % MIB;
+        }
+        assert!(verify_semantics(K::AllReduce, &s).is_err());
+        // Dropping the last ring phase leaves every GPU one shard short.
+        let mut s = generators::allreduce_ring(4, MIB).unwrap();
+        let n_ops = s.ops.len();
+        s.ops.truncate(n_ops - 4);
+        assert!(verify_semantics(K::AllReduce, &s).is_err());
+        // An allgather missing one delivery.
+        let mut s = generators::allgather_direct(4, MIB).unwrap();
+        s.ops.pop();
+        assert!(verify_semantics(K::AllGather, &s).is_err());
+        // A broadcast that skips a GPU.
+        let s = Schedule {
+            name: "bad-bcast".into(),
+            gpus: 4,
+            size_bytes: MIB,
+            ops: vec![
+                crate::collective::SendOp {
+                    id: 0,
+                    src: 0,
+                    dst: 1,
+                    dst_offset: 0,
+                    bytes: MIB,
+                    after: None,
+                    job: 0,
+                },
+                crate::collective::SendOp {
+                    id: 1,
+                    src: 0,
+                    dst: 2,
+                    dst_offset: 0,
+                    bytes: MIB,
+                    after: None,
+                    job: 0,
+                },
+            ],
+        };
+        assert!(verify_semantics(K::Broadcast, &s).is_err());
+    }
+
+    #[test]
+    fn alltoall_shape_check_rejects_wrong_offsets() {
+        let mut s = generators::alltoall_allpairs(4, MIB).unwrap();
+        s.ops[0].dst_offset += 1;
+        assert!(verify_semantics(K::AllToAll, &s).is_err());
+        // The skewed MoE variant is *not* a uniform all-to-all and must
+        // be rejected rather than silently passed.
+        let moe = generators::moe_alltoall_skewed(4, MIB, 0.5, 7).unwrap();
+        assert!(verify_semantics(K::AllToAll, &moe).is_err());
+    }
+}

@@ -84,8 +84,8 @@ impl Workload {
     }
 
     /// Instantiate a declarative [`WorkloadSpec`] for a concrete pod:
-    /// expand job templates, generate each job's schedule (collective
-    /// generators / skewed MoE routing), draw arrival offsets from the
+    /// expand job templates, lower each job's schedule (per-template
+    /// collective algorithm / skewed MoE routing), draw arrival offsets from the
     /// spec's seed, and merge. `page_bytes` sets the per-job receive-window
     /// alignment so tenants never share a translation page.
     pub fn from_spec(spec: &WorkloadSpec, gpus: u32, page_bytes: u64) -> Result<Workload> {
@@ -102,7 +102,14 @@ impl Workload {
                 let name =
                     if t.count == 1 { t.name.clone() } else { format!("{}-{c}", t.name) };
                 let sched = match t.kind {
-                    JobKind::Collective(k) => generators::build(k, gpus, t.size_bytes)?,
+                    JobKind::Collective { kind, algo } => super::algo::lower(
+                        kind,
+                        algo.unwrap_or_else(|| {
+                            crate::config::CollectiveAlgo::default_for(kind)
+                        }),
+                        gpus,
+                        t.size_bytes,
+                    )?,
                     JobKind::MoeAllToAll { skew } => generators::moe_alltoall_skewed(
                         gpus,
                         t.size_bytes,
@@ -364,14 +371,14 @@ mod tests {
             jobs: vec![
                 JobTemplate {
                     name: "decode".into(),
-                    kind: JobKind::Collective(CollectiveKind::AllToAll),
+                    kind: JobKind::collective(CollectiveKind::AllToAll),
                     size_bytes: MIB,
                     count: 3,
                     repeat: 2,
                 },
                 JobTemplate {
                     name: "prefill".into(),
-                    kind: JobKind::Collective(CollectiveKind::AllGather),
+                    kind: JobKind::collective(CollectiveKind::AllGather),
                     size_bytes: 8 * MIB,
                     count: 1,
                     repeat: 1,

@@ -58,6 +58,7 @@ pub fn paper_baseline(gpus: u32, size_bytes: u64) -> PodConfig {
         },
         workload: WorkloadConfig {
             collective: CollectiveKind::AllToAll,
+            algo: None,
             size_bytes,
             request_sizing: RequestSizing::default(),
             trace_source_gpu: None,
@@ -101,7 +102,7 @@ pub fn uniform_tenancy_spec(jobs: u32, kind: CollectiveKind, size_bytes: u64) ->
         arrival: ArrivalSpec::Synchronized,
         jobs: vec![JobTemplate {
             name: "tenant".into(),
-            kind: JobKind::Collective(kind),
+            kind: JobKind::collective(kind),
             size_bytes,
             count: jobs,
             repeat: 1,
@@ -122,14 +123,14 @@ pub fn inference_mix_spec(decode_jobs: u32, prefill_jobs: u32) -> WorkloadSpec {
         jobs: vec![
             JobTemplate {
                 name: "decode".into(),
-                kind: JobKind::Collective(CollectiveKind::AllToAll),
+                kind: JobKind::collective(CollectiveKind::AllToAll),
                 size_bytes: crate::util::units::MIB,
                 count: decode_jobs,
                 repeat: 4,
             },
             JobTemplate {
                 name: "prefill".into(),
-                kind: JobKind::Collective(CollectiveKind::AllGather),
+                kind: JobKind::collective(CollectiveKind::AllGather),
                 size_bytes: 64 * crate::util::units::MIB,
                 count: prefill_jobs,
                 repeat: 1,

@@ -128,6 +128,57 @@ impl SweepGrid {
         Self::with_variants(gpu_counts, sizes, &variants, true)
     }
 
+    /// The collective-algorithm ablation grid (the `algos` figure /
+    /// `sweep --algos`): AllReduce lowered through each algorithm over
+    /// (gpus × sizes), plus the paired ideal. Hierarchical points run on
+    /// the default multi-pod fabric so the lowering has a tier to
+    /// exploit; recursive doubling requires power-of-two pods and is
+    /// skipped otherwise by the grid builder (not at run time).
+    ///
+    /// Variant names are stable (CSV/figure contracts): `direct`,
+    /// `ring`, `recursive-doubling`, `hierarchical`, `ideal`.
+    pub fn algorithm_ablation(gpu_counts: &[u32], sizes: &[u64]) -> SweepGrid {
+        use super::types::CollectiveAlgo;
+        let mut points = Vec::new();
+        for &g in gpu_counts {
+            for &s in sizes {
+                let mut algos = vec![
+                    CollectiveAlgo::Direct,
+                    CollectiveAlgo::Ring,
+                    CollectiveAlgo::RecursiveDoubling,
+                    CollectiveAlgo::Hierarchical,
+                ];
+                if !g.is_power_of_two() {
+                    algos.retain(|a| *a != CollectiveAlgo::RecursiveDoubling);
+                }
+                for algo in algos {
+                    let mut cfg = paper_baseline(g, s);
+                    cfg.workload.collective = super::types::CollectiveKind::AllReduce;
+                    cfg.workload.algo = Some(algo);
+                    if algo == CollectiveAlgo::Hierarchical {
+                        cfg.topology = TopologySpec::multi_pod_default();
+                    }
+                    cfg.name = format!("ar-{}-{g}gpu-{}", algo.name(), fmt_bytes(s));
+                    points.push(SweepPoint {
+                        gpus: g,
+                        size_bytes: s,
+                        variant: algo.name().to_string(),
+                        config: cfg,
+                    });
+                }
+                let mut ideal = paper_ideal(g, s);
+                ideal.workload.collective = super::types::CollectiveKind::AllReduce;
+                points.push(SweepPoint {
+                    gpus: g,
+                    size_bytes: s,
+                    variant: "ideal".into(),
+                    config: ideal,
+                });
+            }
+        }
+        SweepGrid { points }
+    }
+
     /// Re-target every grid point at `topology` (the CLI `--topology`
     /// flag): configs get the topology plus a label suffix on non-default
     /// fabrics so run names stay unique across topology sweeps. Variant
@@ -262,6 +313,43 @@ mod tests {
                 other => panic!("unexpected variant {other}"),
             }
         }
+    }
+
+    #[test]
+    fn algorithm_ablation_grid_shape() {
+        use crate::config::{CollectiveAlgo, CollectiveKind};
+        let g = SweepGrid::algorithm_ablation(&[16], &[MIB, 16 * MIB]);
+        // 4 algorithm variants + 1 ideal, per size.
+        assert_eq!(g.len(), 2 * 5);
+        for p in &g.points {
+            p.config.validate().unwrap();
+            assert_eq!(p.config.workload.collective, CollectiveKind::AllReduce);
+            match p.variant.as_str() {
+                "direct" => assert_eq!(p.config.workload.algo, Some(CollectiveAlgo::Direct)),
+                "ring" => assert_eq!(p.config.workload.algo, Some(CollectiveAlgo::Ring)),
+                "recursive-doubling" => {
+                    assert_eq!(p.config.workload.algo, Some(CollectiveAlgo::RecursiveDoubling))
+                }
+                "hierarchical" => {
+                    assert_eq!(p.config.workload.algo, Some(CollectiveAlgo::Hierarchical));
+                    assert_eq!(p.config.topology, TopologySpec::multi_pod_default());
+                }
+                "ideal" => assert!(!p.config.trans.enabled),
+                other => panic!("unexpected variant {other}"),
+            }
+        }
+        // Non-power-of-two pods drop the recursive-doubling variant
+        // instead of failing at lowering time.
+        let g = SweepGrid::algorithm_ablation(&[12], &[MIB]);
+        assert_eq!(g.len(), 4);
+        assert!(g.points.iter().all(|p| p.variant != "recursive-doubling"));
+        // Labels stay unique.
+        let g = SweepGrid::algorithm_ablation(&[8, 16], &[MIB, 16 * MIB]);
+        let mut labels: Vec<String> = g.points.iter().map(|p| p.label()).collect();
+        labels.sort();
+        let before = labels.len();
+        labels.dedup();
+        assert_eq!(before, labels.len());
     }
 
     #[test]

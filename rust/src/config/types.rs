@@ -5,17 +5,22 @@ use crate::util::json::Json;
 use crate::util::units::{self, Time};
 use anyhow::{bail, Context, Result};
 
-/// Which collective to run (§2.5; the paper evaluates All-to-All).
+/// Which *logical* collective to run (§2.5; the paper evaluates
+/// All-to-All). The algorithm that lowers the logical collective into a
+/// wire schedule is a separate axis — see [`CollectiveAlgo`] and
+/// `collective::algo`.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum CollectiveKind {
-    /// all-pairs/direct algorithm from the MSCCLang example scripts.
+    /// All-to-all personalized exchange (every pair trades a chunk).
     AllToAll,
-    /// direct all-gather (every rank broadcasts its shard).
+    /// All-gather (every rank ends holding every rank's shard).
     AllGather,
-    /// ring all-reduce (reduce-scatter + all-gather phases).
-    AllReduceRing,
-    /// direct reduce-scatter (per-destination serialized reduction).
+    /// All-reduce (every rank ends holding the fully-reduced vector).
+    AllReduce,
+    /// Reduce-scatter (each rank ends owning its reduced shard).
     ReduceScatter,
+    /// Broadcast from rank 0 (root's buffer everywhere).
+    Broadcast,
 }
 
 impl CollectiveKind {
@@ -24,20 +29,89 @@ impl CollectiveKind {
         match self {
             CollectiveKind::AllToAll => "alltoall",
             CollectiveKind::AllGather => "allgather",
-            CollectiveKind::AllReduceRing => "allreduce-ring",
+            CollectiveKind::AllReduce => "allreduce",
             CollectiveKind::ReduceScatter => "reducescatter",
+            CollectiveKind::Broadcast => "broadcast",
         }
     }
 
-    /// Parse a collective name (accepts the short aliases the CLI uses).
+    /// Parse a collective name (accepts the short aliases the CLI uses;
+    /// `allreduce-ring` is kept as a legacy alias for `allreduce` — the
+    /// ring lowering stays its default algorithm, see
+    /// [`CollectiveAlgo::default_for`]).
     pub fn parse(s: &str) -> Result<Self> {
         Ok(match s {
             "alltoall" | "a2a" => CollectiveKind::AllToAll,
             "allgather" | "ag" => CollectiveKind::AllGather,
-            "allreduce-ring" | "ar" | "allreduce" => CollectiveKind::AllReduceRing,
+            "allreduce" | "ar" | "allreduce-ring" => CollectiveKind::AllReduce,
             "reducescatter" | "rs" => CollectiveKind::ReduceScatter,
+            "broadcast" | "bcast" => CollectiveKind::Broadcast,
             other => bail!("unknown collective `{other}`"),
         })
+    }
+}
+
+/// Which algorithm lowers the logical collective into a wire
+/// [`Schedule`](crate::collective::Schedule) (`collective::algo`); the
+/// TACCL-style "which tier does each phase stay inside" sketch reduced
+/// to a selector. Not every (kind, algo) pair is defined — see the
+/// support matrix in `collective::algo::lower`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveAlgo {
+    /// One-shot direct sends (today's generators, bit-identical).
+    Direct,
+    /// Neighbor ring: N−1 (AG/RS) or 2(N−1) (AR) serialized phases over
+    /// a 2-neighbor working set.
+    Ring,
+    /// Recursive doubling: log2(N) rounds of pairwise exchange at
+    /// doubling strides (power-of-two pods).
+    RecursiveDoubling,
+    /// Recursive halving: log2(N) rounds of halving exchanges; for
+    /// AllReduce this is the Rabenseifner halving/doubling lowering
+    /// (power-of-two pods).
+    RecursiveHalving,
+    /// Topology-aware two-tier lowering: per-group phases stay inside a
+    /// fabric tier, a leader phase crosses tiers; the per-phase algorithm
+    /// is picked by a cost model over the `Fabric` trait.
+    Hierarchical,
+}
+
+impl CollectiveAlgo {
+    /// Stable name used in config JSON, CSVs and run labels.
+    pub fn name(&self) -> &'static str {
+        match self {
+            CollectiveAlgo::Direct => "direct",
+            CollectiveAlgo::Ring => "ring",
+            CollectiveAlgo::RecursiveDoubling => "recursive-doubling",
+            CollectiveAlgo::RecursiveHalving => "recursive-halving",
+            CollectiveAlgo::Hierarchical => "hierarchical",
+        }
+    }
+
+    /// Parse an algorithm name (accepts the short aliases the CLI uses).
+    pub fn parse(s: &str) -> Result<Self> {
+        Ok(match s {
+            "direct" => CollectiveAlgo::Direct,
+            "ring" => CollectiveAlgo::Ring,
+            "recursive-doubling" | "rd" => CollectiveAlgo::RecursiveDoubling,
+            "recursive-halving" | "rh" => CollectiveAlgo::RecursiveHalving,
+            "hierarchical" | "hier" => CollectiveAlgo::Hierarchical,
+            other => bail!(
+                "unknown collective algorithm `{other}` \
+                 (direct|ring|recursive-doubling|recursive-halving|hierarchical)"
+            ),
+        })
+    }
+
+    /// The algorithm a kind lowers through when none is configured.
+    /// AllReduce defaults to `Ring` — the pre-algorithm-layer
+    /// `allreduce-ring` schedule — so legacy configs reproduce their old
+    /// schedules bit-identically; everything else defaults to `Direct`.
+    pub fn default_for(kind: CollectiveKind) -> Self {
+        match kind {
+            CollectiveKind::AllReduce => CollectiveAlgo::Ring,
+            _ => CollectiveAlgo::Direct,
+        }
     }
 }
 
@@ -579,8 +653,13 @@ impl ArrivalSpec {
 /// Traffic pattern of one tenant job.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum JobKind {
-    /// One of the stock collective generators ([`CollectiveKind`]).
-    Collective(CollectiveKind),
+    /// A logical collective lowered through `collective::algo`.
+    Collective {
+        /// Which collective the job runs.
+        kind: CollectiveKind,
+        /// Lowering algorithm; `None` = [`CollectiveAlgo::default_for`].
+        algo: Option<CollectiveAlgo>,
+    },
     /// MoE expert-parallel all-to-all with skewed expert routing
     /// (`collective::generators::moe_alltoall_skewed`).
     MoeAllToAll {
@@ -590,10 +669,18 @@ pub enum JobKind {
 }
 
 impl JobKind {
+    /// A collective job on its default lowering algorithm.
+    pub fn collective(kind: CollectiveKind) -> Self {
+        JobKind::Collective { kind, algo: None }
+    }
+
     /// Short label used in generated job names and tables.
     pub fn label(&self) -> String {
         match self {
-            JobKind::Collective(k) => k.name().to_string(),
+            JobKind::Collective { kind, algo: None } => kind.name().to_string(),
+            JobKind::Collective { kind, algo: Some(a) } => {
+                format!("{}-{}", kind.name(), a.name())
+            }
             JobKind::MoeAllToAll { skew } => format!("moe-a2a-skew{skew:.2}"),
         }
     }
@@ -697,10 +784,19 @@ impl WorkloadSpec {
                                 (
                                     "kind",
                                     match t.kind {
-                                        JobKind::Collective(k) => Json::from_pairs(vec![
-                                            ("mode", Json::from("collective")),
-                                            ("collective", Json::from(k.name())),
-                                        ]),
+                                        JobKind::Collective { kind, algo } => {
+                                            let mut pairs = vec![
+                                                ("mode", Json::from("collective")),
+                                                ("collective", Json::from(kind.name())),
+                                            ];
+                                            // Written only when explicitly
+                                            // chosen, so legacy specs
+                                            // round-trip byte-identically.
+                                            if let Some(a) = algo {
+                                                pairs.push(("algo", Json::from(a.name())));
+                                            }
+                                            Json::from_pairs(pairs)
+                                        }
                                         JobKind::MoeAllToAll { skew } => Json::from_pairs(vec![
                                             ("mode", Json::from("moe-alltoall")),
                                             ("skew", Json::from(skew)),
@@ -735,9 +831,13 @@ impl WorkloadSpec {
             .map(|t| {
                 let kind = t.get("kind").context("job missing `kind`")?;
                 let kind = match kind.req_str("mode")? {
-                    "collective" => {
-                        JobKind::Collective(CollectiveKind::parse(kind.req_str("collective")?)?)
-                    }
+                    "collective" => JobKind::Collective {
+                        kind: CollectiveKind::parse(kind.req_str("collective")?)?,
+                        algo: match kind.get("algo").and_then(Json::as_str) {
+                            Some(a) => Some(CollectiveAlgo::parse(a)?),
+                            None => None,
+                        },
+                    },
                     "moe-alltoall" | "moe" => JobKind::MoeAllToAll { skew: kind.req_f64("skew")? },
                     other => bail!("unknown job kind `{other}`"),
                 };
@@ -814,6 +914,11 @@ impl GpuConfig {
 pub struct WorkloadConfig {
     /// Which collective the run executes.
     pub collective: CollectiveKind,
+    /// Algorithm the collective lowers through (`collective::algo`).
+    /// `None` = the kind's default ([`CollectiveAlgo::default_for`]):
+    /// ring for AllReduce, direct sends for everything else — exactly
+    /// the pre-algorithm-layer generator schedules.
+    pub algo: Option<CollectiveAlgo>,
     /// "Size" = the larger of a single GPU's input/output buffer (§3).
     pub size_bytes: u64,
     /// How collective bytes split into remote-store requests.
@@ -821,6 +926,13 @@ pub struct WorkloadConfig {
     /// Record a per-request RAT latency trace for requests originating
     /// from this GPU (Figs 9/10). None = no trace.
     pub trace_source_gpu: Option<u32>,
+}
+
+impl WorkloadConfig {
+    /// The lowering algorithm this workload resolves to.
+    pub fn effective_algo(&self) -> CollectiveAlgo {
+        self.algo.unwrap_or(CollectiveAlgo::default_for(self.collective))
+    }
 }
 
 /// Full simulation configuration.
@@ -872,15 +984,26 @@ impl PodConfig {
 
     /// Resolve the concrete request size for the configured workload.
     pub fn request_bytes(&self) -> u64 {
+        // Per-kind fabric-byte totals; approximations feeding Auto
+        // sizing only (exact totals come from the lowered schedule).
+        let g = self.gpus as u64;
+        let size = self.workload.size_bytes;
         let total_moved: u64 = match self.workload.collective {
             CollectiveKind::AllToAll
             | CollectiveKind::AllGather
-            | CollectiveKind::ReduceScatter => {
-                self.workload.size_bytes * (self.gpus as u64 - 1)
-            }
-            CollectiveKind::AllReduceRing => 2 * self.workload.size_bytes * (self.gpus as u64 - 1)
-                / self.gpus as u64
-                * self.gpus as u64,
+            | CollectiveKind::ReduceScatter
+            | CollectiveKind::Broadcast => size * (g - 1),
+            CollectiveKind::AllReduce => match self.workload.effective_algo() {
+                // 2(N−1) phases of one chunk per rank.
+                CollectiveAlgo::Ring => 2 * size * (g - 1) / g * g,
+                // log2(N) rounds of full-vector pairwise exchange.
+                CollectiveAlgo::RecursiveDoubling => {
+                    g * size * (64 - g.leading_zeros() as u64 - 1).max(1)
+                }
+                // Direct / halving-doubling / hierarchical all move on
+                // the order of a reduce phase plus a gather phase.
+                _ => 2 * size * (g - 1),
+            },
         };
         self.request_bytes_for(total_moved)
     }
@@ -1086,6 +1209,16 @@ impl PodConfig {
                 "workload",
                 Json::from_pairs(vec![
                     ("collective", Json::from(self.workload.collective.name())),
+                    // Written as a name when explicitly chosen, null when
+                    // the kind's default applies — old files (no key) and
+                    // default-algo files both parse back to `None`.
+                    (
+                        "algo",
+                        match self.workload.algo {
+                            Some(a) => Json::from(a.name()),
+                            None => Json::Null,
+                        },
+                    ),
                     ("size_bytes", Json::from(self.workload.size_bytes)),
                     (
                         "request_sizing",
@@ -1232,6 +1365,12 @@ impl PodConfig {
             },
             workload: WorkloadConfig {
                 collective: CollectiveKind::parse(wl.req_str("collective")?)?,
+                // Optional for configs written before the algorithm
+                // layer: absent/null ⇒ the kind's default lowering.
+                algo: match wl.get("algo").and_then(Json::as_str) {
+                    Some(a) => Some(CollectiveAlgo::parse(a)?),
+                    None => None,
+                },
                 size_bytes: wl.req_u64("size_bytes")?,
                 request_sizing,
                 trace_source_gpu: wl
@@ -1488,10 +1627,20 @@ mod tests {
             jobs: vec![
                 JobTemplate {
                     name: "decode".into(),
-                    kind: JobKind::Collective(CollectiveKind::AllToAll),
+                    kind: JobKind::collective(CollectiveKind::AllToAll),
                     size_bytes: MIB,
                     count: 3,
                     repeat: 4,
+                },
+                JobTemplate {
+                    name: "train".into(),
+                    kind: JobKind::Collective {
+                        kind: CollectiveKind::AllReduce,
+                        algo: Some(CollectiveAlgo::RecursiveDoubling),
+                    },
+                    size_bytes: 4 * MIB,
+                    count: 1,
+                    repeat: 2,
                 },
                 JobTemplate {
                     name: "moe".into(),
@@ -1503,7 +1652,7 @@ mod tests {
             ],
         };
         spec.validate().unwrap();
-        assert_eq!(spec.total_jobs(), 4);
+        assert_eq!(spec.total_jobs(), 5);
         let back = WorkloadSpec::from_json(&spec.to_json()).unwrap();
         assert_eq!(back, spec);
         // And through text.
@@ -1522,7 +1671,7 @@ mod tests {
         assert!(spec.validate().is_err(), "empty job list rejected");
         spec.jobs.push(JobTemplate {
             name: "j".into(),
-            kind: JobKind::Collective(CollectiveKind::AllToAll),
+            kind: JobKind::collective(CollectiveKind::AllToAll),
             size_bytes: 0,
             count: 1,
             repeat: 1,
@@ -1597,6 +1746,59 @@ mod tests {
     fn collective_kind_parse() {
         assert_eq!(CollectiveKind::parse("a2a").unwrap(), CollectiveKind::AllToAll);
         assert_eq!(CollectiveKind::parse("allgather").unwrap(), CollectiveKind::AllGather);
+        assert_eq!(CollectiveKind::parse("broadcast").unwrap(), CollectiveKind::Broadcast);
+        // Legacy alias from before the algorithm layer split kind × algo.
+        assert_eq!(CollectiveKind::parse("allreduce-ring").unwrap(), CollectiveKind::AllReduce);
+        assert_eq!(CollectiveKind::parse("ar").unwrap(), CollectiveKind::AllReduce);
         assert!(CollectiveKind::parse("bogus").is_err());
+    }
+
+    #[test]
+    fn collective_algo_parse_and_defaults() {
+        assert_eq!(CollectiveAlgo::parse("rd").unwrap(), CollectiveAlgo::RecursiveDoubling);
+        assert_eq!(CollectiveAlgo::parse("hier").unwrap(), CollectiveAlgo::Hierarchical);
+        assert_eq!(
+            CollectiveAlgo::parse("recursive-halving").unwrap(),
+            CollectiveAlgo::RecursiveHalving
+        );
+        assert!(CollectiveAlgo::parse("bogus").is_err());
+        // Legacy behaviour pinned: `allreduce` still means the ring
+        // schedule unless an algorithm is configured.
+        assert_eq!(CollectiveAlgo::default_for(CollectiveKind::AllReduce), CollectiveAlgo::Ring);
+        assert_eq!(CollectiveAlgo::default_for(CollectiveKind::AllToAll), CollectiveAlgo::Direct);
+        assert_eq!(
+            CollectiveAlgo::default_for(CollectiveKind::Broadcast),
+            CollectiveAlgo::Direct
+        );
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_algo() {
+        for algo in [
+            None,
+            Some(CollectiveAlgo::Direct),
+            Some(CollectiveAlgo::Ring),
+            Some(CollectiveAlgo::RecursiveDoubling),
+            Some(CollectiveAlgo::RecursiveHalving),
+            Some(CollectiveAlgo::Hierarchical),
+        ] {
+            let mut cfg = paper_baseline(16, MIB);
+            cfg.workload.collective = CollectiveKind::AllReduce;
+            cfg.workload.algo = algo;
+            let back = PodConfig::from_json(&cfg.to_json()).unwrap();
+            assert_eq!(back.workload.algo, algo);
+            assert_eq!(back, cfg);
+        }
+        // Configs written before the algorithm layer still load (⇒ None,
+        // which resolves to the kind's default lowering).
+        let mut j = paper_baseline(16, MIB).to_json();
+        if let Json::Obj(o) = &mut j {
+            if let Some(Json::Obj(w)) = o.get_mut("workload") {
+                w.remove("algo");
+            }
+        }
+        let back = PodConfig::from_json(&j).unwrap();
+        assert_eq!(back.workload.algo, None);
+        assert_eq!(back.workload.effective_algo(), CollectiveAlgo::Direct);
     }
 }

@@ -918,6 +918,98 @@ pub fn fabric_tiers(opts: &FigOpts) -> Result<Table> {
     Ok(t)
 }
 
+/// Collective-algorithm figure (the algorithm layer's headline): the
+/// same AllReduce byte volume lowered by every defined algorithm —
+/// direct, ring, recursive-doubling, recursive-halving (Rabenseifner)
+/// and the topology-aware hierarchical lowering — on the two-pod fabric,
+/// run cold (first iteration, demand misses on the critical path) and
+/// warm (second back-to-back iteration, TLBs stay warm). What it shows:
+/// algorithms trade phase count against per-phase receive-window size,
+/// so their *cold-miss degradation* (cold / warm iteration ratio, L1
+/// Link-TLB miss rate, demand walk count) differs even where their warm
+/// throughput is similar — ring touches one shard-sized window per
+/// round and re-uses it, direct floods every pairwise window at once,
+/// and hierarchical confines cross-pod traffic to one leader per pod.
+/// The first cell is lowered and run twice and checked bit-identical,
+/// pinning the figure's determinism.
+pub fn fig_algos(opts: &FigOpts) -> Result<Table> {
+    use crate::config::{CollectiveAlgo, CollectiveKind};
+    let gpus = 16;
+    let sizes =
+        if opts.quick { vec![MIB, 16 * MIB] } else { vec![MIB, 4 * MIB, 16 * MIB, 64 * MIB] };
+    let algos = [
+        CollectiveAlgo::Direct,
+        CollectiveAlgo::Ring,
+        CollectiveAlgo::RecursiveDoubling,
+        CollectiveAlgo::RecursiveHalving,
+        CollectiveAlgo::Hierarchical,
+    ];
+    let mut t = Table::new(
+        "Algorithms — cold vs warm AllReduce per lowering (16 GPUs, multi-pod)",
+        &[
+            "algo",
+            "size",
+            "sched_bytes",
+            "cold_iter_ns",
+            "warm_iter_ns",
+            "cold_x",
+            "l1_miss_rate",
+            "data_walks",
+        ],
+    );
+    let translated =
+        |s: &crate::stats::RunStats| s.classes.total() - s.classes.ideal - s.classes.intra_node;
+    let mut pinned = false;
+    for &size in &sizes {
+        for algo in algos {
+            let mut cfg = paper_baseline(gpus, size);
+            cfg.topology = TopologySpec::multi_pod_default();
+            cfg.workload.collective = CollectiveKind::AllReduce;
+            cfg.workload.algo = Some(algo);
+            cfg.name = format!("algos-{}-{}", algo.name(), fmt_bytes(size));
+            opts.tune(&mut cfg);
+            let sched = crate::collective::algo::lower_for(&cfg)?;
+            let once =
+                SessionBuilder::new(&cfg).schedule(sched.repeat(1)).build()?.run_to_completion();
+            let twice =
+                SessionBuilder::new(&cfg).schedule(sched.repeat(2)).build()?.run_to_completion();
+            if !pinned {
+                // Determinism pin: re-lower and re-run the first cell.
+                let again_sched = crate::collective::algo::lower_for(&cfg)?;
+                anyhow::ensure!(
+                    again_sched == sched,
+                    "algorithm lowering must be deterministic"
+                );
+                let again = SessionBuilder::new(&cfg)
+                    .schedule(sched.repeat(1))
+                    .build()?
+                    .run_to_completion();
+                anyhow::ensure!(
+                    again.completion == once.completion && again.classes == once.classes,
+                    "fig_algos must render deterministic cells"
+                );
+                pinned = true;
+            }
+            let cold = to_ns(once.completion);
+            let warm = to_ns(twice.completion) - cold;
+            let trans = translated(&once);
+            let miss = trans - once.classes.l1_hit;
+            t.push(vec![
+                algo.name().to_string(),
+                fmt_bytes(size),
+                sched.total_bytes().to_string(),
+                format!("{cold:.0}"),
+                format!("{warm:.0}"),
+                format!("{:.3}", cold / warm.max(1.0)),
+                format!("{:.4}", miss as f64 / trans.max(1) as f64),
+                data_walks(&once.classes).to_string(),
+            ]);
+        }
+    }
+    t.save_csv(&opts.out_dir, "fig_algos")?;
+    Ok(t)
+}
+
 /// Tenancy figure (beyond the paper; the ROADMAP serving axis): per-job
 /// latency percentiles and cross-job Link-TLB interference as the tenant
 /// count grows at **fixed total bytes**. Two mixes per job count:
@@ -1042,7 +1134,7 @@ pub fn table1(opts: &FigOpts) -> Result<Table> {
 pub const FIGURES: &[&str] = &[
     "table1", "fig4", "fig5", "fig6", "fig7", "fig8", "fig9", "fig10", "fig11", "fig12",
     "ablation", "design", "warmup", "warmup_decay", "fault_recold", "scale", "scale_sharded",
-    "tenancy", "fabric_tiers",
+    "tenancy", "fabric_tiers", "algos",
 ];
 
 /// Run the selected figures (None = all), printing tables and writing CSVs.
@@ -1108,6 +1200,9 @@ pub fn run_figures(opts: &FigOpts, only: Option<&[String]>) -> Result<()> {
     }
     if want("fabric_tiers") {
         fabric_tiers(opts)?.print();
+    }
+    if want("algos") {
+        fig_algos(opts)?.print();
     }
     Ok(())
 }
@@ -1256,6 +1351,34 @@ mod tests {
                 comp("cold")
             );
         }
+    }
+
+    #[test]
+    fn fig_algos_compares_every_lowering_cold_vs_warm() {
+        let opts = quick_opts();
+        let t = fig_algos(&opts).unwrap();
+        // 5 algorithms × 2 quick sizes, every algorithm in every size.
+        assert_eq!(t.rows.len(), 10);
+        for algo in ["direct", "ring", "recursive-doubling", "recursive-halving", "hierarchical"]
+        {
+            assert_eq!(
+                t.rows.iter().filter(|r| r[0] == algo).count(),
+                2,
+                "{algo} missing from the grid"
+            );
+        }
+        // The warm iteration re-uses warm TLBs: cold can't beat it.
+        for r in &t.rows {
+            let cold_x: f64 = r[5].parse().unwrap();
+            assert!(cold_x >= 1.0, "{}/{}: cold beat warm ({cold_x})", r[0], r[1]);
+        }
+        // Rabenseifner moves fewer schedule bytes than the dense direct
+        // exchange at the same collective size.
+        let bytes = |algo: &str, size: &str| -> u64 {
+            t.rows.iter().find(|r| r[0] == algo && r[1] == size).unwrap()[2].parse().unwrap()
+        };
+        assert!(bytes("recursive-halving", "1MiB") < bytes("direct", "1MiB"));
+        assert!(opts.out_dir.join("fig_algos.csv").exists());
     }
 
     #[test]

@@ -12,7 +12,9 @@
 //!   fabric layer (rail Clos, oversubscribed leaf–spine, multi-pod
 //!   scale-out) behind one routing abstraction ([`net::Fabric`]);
 //! * [`trans`] + [`mem`] — the Link-MMU reverse-translation hierarchy;
-//! * [`collective`] — MSCCLang-style schedules (all-pairs All-to-All, …)
+//! * [`collective`] — MSCCLang-style schedules, the algorithm layer
+//!   lowering logical collectives (direct / ring / recursive
+//!   doubling–halving / hierarchical), a semantic schedule verifier,
 //!   and the multi-tenant workload composer (WORKLOADS.md);
 //! * [`pod`] — the full pod simulation tying the above together, driven
 //!   through [`pod::SessionBuilder`] sessions with incremental stepping

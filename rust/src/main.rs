@@ -16,8 +16,8 @@ use ratsim::config::presets::{
     inference_mix_spec, moe_serving_spec, paper_baseline, paper_ideal, uniform_tenancy_spec,
 };
 use ratsim::config::{
-    ArrivalSpec, CollectiveKind, EnginePolicy, FaultSpec, PodConfig, PrefetchPolicy,
-    RequestSizing, SweepGrid, TopologySpec, WorkloadSpec,
+    ArrivalSpec, CollectiveAlgo, CollectiveKind, EnginePolicy, FaultSpec, PodConfig,
+    PrefetchPolicy, RequestSizing, SweepGrid, TopologySpec, WorkloadSpec,
 };
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
@@ -62,7 +62,7 @@ fn print_help() {
     println!(
         "ratsim {} — Reverse Address Translation simulator for UALink scale-up pods\n\n\
          subcommands:\n\
-         \x20 run       simulate one collective (--gpus, --size, --collective, --ideal,\n\
+         \x20 run       simulate one collective (--gpus, --size, --collective, --algo, --ideal,\n\
          \x20           --topology rail-clos|leaf-spine|multi-pod,\n\
          \x20           --prefetch-policy sw-guided|fused,\n\
          \x20           --engine fused|per-hop|sharded[:N], --threads N,\n\
@@ -73,7 +73,8 @@ fn print_help() {
          \x20           interference\n\
          \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB);\n\
          \x20           --topology retargets the grid's fabric; --opts for the §6\n\
-         \x20           optimization ablation\n\
+         \x20           optimization ablation; --algos for the collective-algorithm\n\
+         \x20           ablation\n\
          \x20 figures   regenerate paper figures (--only fig4,fig12 --quick --out results)\n\
          \x20 schedule  export a schedule JSON (--collective a2a --gpus 8 --size 1MiB --out s.json)\n\
          \x20 config    dump/validate configs (--dump base.json | --check cfg.json)\n",
@@ -85,7 +86,8 @@ fn common_run_spec() -> Vec<ArgSpec> {
     vec![
         ArgSpec { name: "gpus", help: "number of GPUs in the pod", is_flag: false, default: Some("16") },
         ArgSpec { name: "size", help: "collective size (e.g. 1MiB, 4GB)", is_flag: false, default: Some("1MiB") },
-        ArgSpec { name: "collective", help: "alltoall | allgather | allreduce-ring", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "collective", help: "alltoall | allgather | allreduce | reducescatter | broadcast", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "algo", help: "lowering: direct | ring | recursive-doubling | recursive-halving | hierarchical (default: per-collective)", is_flag: false, default: None },
         ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
         ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "config", help: "load full config from JSON (overrides other flags)", is_flag: false, default: None },
@@ -124,6 +126,9 @@ fn build_config(a: &Args) -> Result<PodConfig> {
 fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
     if let Some(t) = a.get("topology") {
         cfg.topology = TopologySpec::parse(t)?;
+    }
+    if let Some(s) = a.get("algo") {
+        cfg.workload.algo = Some(CollectiveAlgo::parse(s)?);
     }
     if let Some(n) = a.get_u64("requests")? {
         cfg.workload.request_sizing = RequestSizing::Auto { target_total_requests: n };
@@ -234,6 +239,7 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         ArgSpec { name: "decode-jobs", help: "decode tenants (decode-prefill mix)", is_flag: false, default: Some("3") },
         ArgSpec { name: "prefill-jobs", help: "prefill tenants (decode-prefill mix)", is_flag: false, default: Some("1") },
         ArgSpec { name: "collective", help: "collective for the uniform mix", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "algo", help: "lowering for the uniform mix: direct | ring | recursive-doubling | recursive-halving (default: per-collective)", is_flag: false, default: None },
         ArgSpec { name: "size", help: "per-job collective size (uniform/moe)", is_flag: false, default: Some("16MiB") },
         ArgSpec { name: "skew", help: "MoE expert-routing skew (Zipf exponent, 0..4)", is_flag: false, default: Some("1.2") },
         ArgSpec { name: "repeat", help: "closed-loop iterations per job (uniform/moe)", is_flag: false, default: Some("1") },
@@ -261,6 +267,12 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
                     a.req_bytes("size")?,
                 );
                 s.jobs[0].repeat = a.req_u64("repeat")? as u32;
+                if let Some(algo) = a.get("algo") {
+                    s.jobs[0].kind = ratsim::config::JobKind::Collective {
+                        kind,
+                        algo: Some(CollectiveAlgo::parse(algo)?),
+                    };
+                }
                 s
             }
             "decode-prefill" | "mix" => inference_mix_spec(
@@ -377,6 +389,7 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         ArgSpec { name: "requests", help: "auto request-sizing target", is_flag: false, default: None },
         ArgSpec { name: "topology", help: "retarget the grid: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "opts", help: "§6 optimization ablation grid (baseline/pretranslate/prefetch/fused/ideal)", is_flag: true, default: None },
+        ArgSpec { name: "algos", help: "collective-algorithm ablation grid (AllReduce direct/ring/recursive-doubling/hierarchical + ideal)", is_flag: true, default: None },
         ArgSpec { name: "faults", help: "inject faults into every grid point (same grammar as `run --faults`)", is_flag: false, default: None },
         ArgSpec { name: "csv", help: "write results CSV here", is_flag: false, default: None },
         ArgSpec { name: "help", help: "show help", is_flag: true, default: None },
@@ -400,6 +413,8 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
         .collect::<Result<_>>()?;
     let mut grid = if a.flag("opts") {
         SweepGrid::optimization_ablation(&gpus, &sizes)
+    } else if a.flag("algos") {
+        SweepGrid::algorithm_ablation(&gpus, &sizes)
     } else {
         SweepGrid::baseline_vs_ideal(&gpus, &sizes)
     };
@@ -424,6 +439,8 @@ fn cmd_sweep(argv: &[String]) -> Result<()> {
     let results = coordinator::run_grid(&grid)?;
     let title = if a.flag("opts") {
         "sweep — §6 optimization ablation"
+    } else if a.flag("algos") {
+        "sweep — collective algorithm ablation"
     } else {
         "sweep — baseline vs ideal"
     };
@@ -485,16 +502,21 @@ fn cmd_figures(argv: &[String]) -> Result<()> {
 
 fn cmd_schedule(argv: &[String]) -> Result<()> {
     let spec = vec![
-        ArgSpec { name: "collective", help: "alltoall | allgather | allreduce-ring", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "collective", help: "alltoall | allgather | allreduce | reducescatter | broadcast", is_flag: false, default: Some("alltoall") },
+        ArgSpec { name: "algo", help: "lowering: direct | ring | recursive-doubling | recursive-halving (default: per-collective)", is_flag: false, default: None },
         ArgSpec { name: "gpus", help: "pod size", is_flag: false, default: Some("8") },
         ArgSpec { name: "size", help: "collective size", is_flag: false, default: Some("1MiB") },
         ArgSpec { name: "out", help: "output JSON path", is_flag: false, default: Some("schedule.json") },
     ];
     let a = parse(argv, &spec)?;
     let kind = CollectiveKind::parse(a.req_str("collective")?)?;
+    let algo = match a.get("algo") {
+        Some(s) => CollectiveAlgo::parse(s)?,
+        None => CollectiveAlgo::default_for(kind),
+    };
     let gpus = a.req_u64("gpus")? as u32;
     let size = a.req_bytes("size")?;
-    let sched = collective::generators::build(kind, gpus, size)?;
+    let sched = collective::algo::lower(kind, algo, gpus, size)?;
     let out = a.req_str("out")?;
     collective::mscclang::save(&sched, std::path::Path::new(out))?;
     println!("wrote {} ({} ops, {} total bytes)", out, sched.ops.len(), sched.total_bytes());
@@ -575,6 +597,26 @@ mod tests {
         assert!(dispatch(&argv(&["workload", "--mix", "moe", "--skew", "x"])).is_err());
         assert!(dispatch(&argv(&["figures", "--only", "not-a-figure"])).is_err());
         assert!(dispatch(&argv(&["schedule", "--collective", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn bad_algorithms_are_rejected_before_any_run() {
+        for cmd in ["run", "schedule"] {
+            let err = dispatch(&argv(&[cmd, "--algo", "bogus"])).unwrap_err();
+            assert!(format!("{err:#}").contains("bogus"), "{cmd}: {err:#}");
+        }
+        let err = dispatch(&argv(&[
+            "workload", "--mix", "uniform", "--algo", "bogus",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("bogus"), "{err:#}");
+        // An undefined (kind, algo) combination errors out of the
+        // lowering with a labeled message, not a panic.
+        let err = dispatch(&argv(&[
+            "schedule", "--collective", "alltoall", "--algo", "ring",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("alltoall"), "{err:#}");
     }
 
     #[test]

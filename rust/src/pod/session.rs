@@ -30,7 +30,7 @@
 use super::observer::Observer;
 use super::sim::PodSim;
 use crate::collective::workload::Workload;
-use crate::collective::{generators, Schedule};
+use crate::collective::Schedule;
 use crate::config::{EnginePolicy, PodConfig};
 use crate::stats::RunStats;
 use crate::util::units::Time;
@@ -150,8 +150,7 @@ impl SessionBuilder {
                 // here, not inside the generator. (`PodSim` re-validates
                 // internally as a cheap invariant for the other sources.)
                 cfg.validate()?;
-                let schedule =
-                    generators::build(cfg.workload.collective, cfg.gpus, cfg.workload.size_bytes)?;
+                let schedule = crate::collective::algo::lower_for(&cfg)?;
                 schedule.validate()?;
                 PodSim::new(cfg, schedule, extra, stock)?
             }

@@ -1510,7 +1510,7 @@ mod tests {
         c.workload.collective = CollectiveKind::AllGather;
         let g = run(&c).unwrap();
         assert!(g.completion > 0);
-        c.workload.collective = CollectiveKind::AllReduceRing;
+        c.workload.collective = CollectiveKind::AllReduce;
         let r = run(&c).unwrap();
         assert!(r.completion > 0);
         // Ring is phase-serialized: it must take longer than direct
@@ -1665,7 +1665,7 @@ mod tests {
             arrival: ArrivalSpec::Poisson { mean_gap_ps: crate::util::units::us(2) },
             jobs: vec![JobTemplate {
                 name: "tenant".into(),
-                kind: JobKind::Collective(CollectiveKind::AllToAll),
+                kind: JobKind::collective(CollectiveKind::AllToAll),
                 size_bytes: MIB,
                 count: 4,
                 repeat: 1,

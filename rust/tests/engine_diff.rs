@@ -234,6 +234,41 @@ fn multi_tier_topologies_are_bit_identical() {
 }
 
 #[test]
+fn collective_algorithm_grids_are_bit_identical() {
+    // The algorithm layer emits dependency-chained multi-phase schedules
+    // (ring pipelines, recursive-doubling rounds, hierarchical leader
+    // phases) — the richest `after`-graph shapes the engines see. Every
+    // lowering must ride the identical event stream on all policies.
+    use ratsim::config::{CollectiveAlgo, CollectiveKind, TopologySpec};
+    for (algo, gpus, size) in [
+        (CollectiveAlgo::Ring, 8u32, 4 * MIB),
+        (CollectiveAlgo::RecursiveDoubling, 16, MIB),
+        (CollectiveAlgo::RecursiveHalving, 8, 8 * MIB),
+    ] {
+        let mut c = base(gpus, size);
+        c.workload.collective = CollectiveKind::AllReduce;
+        c.workload.algo = Some(algo);
+        run_both(c, &format!("algo-{}-{gpus}gpu", algo.name()));
+    }
+
+    // Hierarchical on its motivating fabric: leader phases crossing the
+    // serialized inter-pod uplinks.
+    let mut hier = base(16, 4 * MIB);
+    hier.topology = TopologySpec::multi_pod_default();
+    hier.workload.collective = CollectiveKind::AllReduce;
+    hier.workload.algo = Some(CollectiveAlgo::Hierarchical);
+    run_both(hier, "algo-hierarchical-multi-pod");
+
+    // One faulted algorithm point: retries/backoff over a ring pipeline.
+    use ratsim::config::FaultSpec;
+    let mut flap = base(8, MIB);
+    flap.workload.collective = CollectiveKind::AllReduce;
+    flap.workload.algo = Some(CollectiveAlgo::Ring);
+    flap.faults = Some(FaultSpec::parse("flap:mttf=40us,mttr=10us").unwrap());
+    run_both(flap, "algo-ring-faults-flap");
+}
+
+#[test]
 fn fault_injected_grids_are_bit_identical() {
     // The reliable-transport layer (timeouts, capped-backoff retries,
     // rail failover, degraded tiers, walker stalls) must stay on the
@@ -271,7 +306,7 @@ fn multi_tenant_workloads_are_bit_identical() {
         arrival: ArrivalSpec::Poisson { mean_gap_ps: ratsim::util::units::us(1) },
         jobs: vec![JobTemplate {
             name: "tenant".into(),
-            kind: JobKind::Collective(ratsim::config::CollectiveKind::AllToAll),
+            kind: JobKind::collective(ratsim::config::CollectiveKind::AllToAll),
             size_bytes: 8 * MIB,
             count: 3,
             repeat: 1,

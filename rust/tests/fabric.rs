@@ -280,7 +280,7 @@ fn multi_tenant_workloads_run_on_every_fabric() {
         arrival: ArrivalSpec::Poisson { mean_gap_ps: us(1) },
         jobs: vec![JobTemplate {
             name: "tenant".into(),
-            kind: JobKind::Collective(CollectiveKind::AllToAll),
+            kind: JobKind::collective(CollectiveKind::AllToAll),
             size_bytes: MIB,
             count: 2,
             repeat: 1,

@@ -117,7 +117,7 @@ fn collectives_have_expected_relative_cost() {
     let a2a = run(&cfg).unwrap();
     cfg.workload.collective = CollectiveKind::AllGather;
     let ag = run(&cfg).unwrap();
-    cfg.workload.collective = CollectiveKind::AllReduceRing;
+    cfg.workload.collective = CollectiveKind::AllReduce;
     let ar = run(&cfg).unwrap();
     // Direct AG and A2A move the same volume concurrently — within 25%.
     let rel = (a2a.completion as f64 - ag.completion as f64).abs() / ag.completion as f64;

@@ -40,14 +40,14 @@ fn decode_prefill_4job() -> WorkloadSpec {
         jobs: vec![
             JobTemplate {
                 name: "decode".into(),
-                kind: JobKind::Collective(CollectiveKind::AllToAll),
+                kind: JobKind::collective(CollectiveKind::AllToAll),
                 size_bytes: MIB,
                 count: 2,
                 repeat: 2,
             },
             JobTemplate {
                 name: "prefill".into(),
-                kind: JobKind::Collective(CollectiveKind::AllGather),
+                kind: JobKind::collective(CollectiveKind::AllGather),
                 size_bytes: 16 * MIB,
                 count: 2,
                 repeat: 1,
