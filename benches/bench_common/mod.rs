@@ -164,6 +164,7 @@ pub fn print_diff(diff: &Json) -> usize {
     let tol = diff.get("tolerance").and_then(Json::as_f64).unwrap_or(0.0);
     println!("\n== vs BENCH_baseline.json (tolerance ±{:.0}%) ==", 100.0 * tol);
     let mut regressed = 0;
+    let mut missing: Vec<&str> = Vec::new();
     for row in rows {
         let name = row.get("name").and_then(Json::as_str).unwrap_or("?");
         let status = row.get("status").and_then(Json::as_str).unwrap_or("?");
@@ -177,6 +178,17 @@ pub fn print_diff(diff: &Json) -> usize {
         if status == "regressed" {
             regressed += 1;
         }
+        if status == "no-baseline" {
+            missing.push(name);
+        }
+    }
+    if !missing.is_empty() {
+        println!(
+            "  {} row(s) lack a recorded baseline ({}) — refresh with \
+             RATSIM_BENCH_OUT=BENCH_baseline.json cargo bench --bench sim_core",
+            missing.len(),
+            missing.join(", ")
+        );
     }
     regressed
 }

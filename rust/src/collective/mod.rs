@@ -14,11 +14,17 @@
 //! postcondition; `mscclang` round-trips schedules through a JSON IR,
 //! and [`workload`] composes many per-job schedules into one
 //! multi-tenant run (see WORKLOADS.md for the full scenario catalog).
+//! [`trace`] adds streaming workload sources: a [`WorkloadStream`]
+//! yields job-tagged trace rows on demand — from a CSV/JSONL cluster
+//! trace ([`TraceReader`]) or a distribution-fitted generator
+//! ([`SyntheticTraceGen`]) — so production-scale arrival sequences
+//! replay without ever materializing the whole schedule in memory.
 
 pub mod algo;
 pub mod generators;
 pub mod mscclang;
 pub mod schedule;
+pub mod trace;
 pub mod verify;
 pub mod workload;
 
@@ -28,5 +34,6 @@ pub use generators::{
     reducescatter_direct,
 };
 pub use schedule::{JobId, OpId, Schedule, SendOp};
+pub use trace::{SyntheticTraceGen, TraceReader, TraceRow, WorkloadStream};
 pub use verify::verify_semantics;
 pub use workload::{arrival_offsets, JobDesc, Workload, WorkloadBuilder};

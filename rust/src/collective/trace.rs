@@ -1,0 +1,665 @@
+//! Streaming workload sources: cluster-trace replay without
+//! materializing the schedule.
+//!
+//! Every other workload path lowers its full schedule up front; replaying
+//! hours of serving traffic (millions of requests, thousands of jobs)
+//! that way would hold the whole op list in memory. A [`WorkloadStream`]
+//! instead yields job-tagged trace rows *on demand* as simulated time
+//! advances; the pod's lazy-admission path (`pod::SessionBuilder::stream`)
+//! lowers each row through [`super::algo`] only when it is admitted and
+//! recycles workgroup slots as rows complete, so peak memory follows the
+//! admission window, not the trace length.
+//!
+//! Two implementations ship:
+//!
+//! * [`TraceReader`] — a line-streaming CSV/JSONL cluster-trace parser
+//!   (columns: arrival time, job id, collective kind/algorithm, size,
+//!   GPU group), modeled on the clustersim `WorkloadGenerator` /
+//!   trace-reader idiom. Every parse failure is a labeled error carrying
+//!   the source name and line number; nothing panics on malformed input.
+//! * [`SyntheticTraceGen`] — a distribution-fitted generator
+//!   ([`TraceSpec`]): log-normal collective sizes, diurnal-modulated
+//!   exponential inter-arrivals, Zipf job popularity — all SplitMix64
+//!   seeded and bit-deterministic — which can also *export* traces in
+//!   the same CSV/JSONL format (`export → import` round-trips
+//!   bit-identically; pinned by `rust/tests/trace.rs`).
+//!
+//! # Trace format
+//!
+//! One row per line. Lines that are empty, start with `#`, or equal the
+//! canonical CSV header are skipped. A line starting with `{` is parsed
+//! as JSONL; anything else as CSV:
+//!
+//! ```text
+//! t_us,job,coll,algo,bytes,gpus
+//! 0,job-000,alltoall,direct,262144,0-7
+//! 3,job-017,allgather,,524288,4-7+12-15
+//! {"t_us":9,"job":"job-000","coll":"alltoall","algo":"direct","bytes":262144,"gpus":"0-7"}
+//! ```
+//!
+//! * `t_us` — arrival time in integer microseconds, non-decreasing;
+//! * `job`  — free-form job name (no commas in CSV rows);
+//! * `coll`/`algo` — [`CollectiveKind`]/[`CollectiveAlgo`] spellings
+//!   (`algo` may be empty: the kind's default lowering);
+//! * `bytes` — collective size in bytes (> 0);
+//! * `gpus` — the participating global GPU ids: `+`-joined ranks or
+//!   inclusive ranges (`0-3+8-11`), or a JSON array in JSONL rows.
+//!   Ranks must be distinct, ≥ 2 of them, each ≤ 65535.
+
+use crate::config::trace::TraceSpec;
+use crate::config::{CollectiveAlgo, CollectiveKind};
+use crate::util::rng::SplitMix64;
+use crate::util::units::{us, Time};
+use anyhow::{bail, Context, Result};
+use std::io::BufRead;
+use std::path::{Path, PathBuf};
+
+/// Canonical CSV header line (written by exports, skipped by the parser).
+pub const TRACE_CSV_HEADER: &str = "t_us,job,coll,algo,bytes,gpus";
+
+/// One trace row: a collective arriving at `arrival` for job `job` over
+/// the global GPU ids in `group`.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct TraceRow {
+    /// Arrival time (ps; whole microseconds in the wire format).
+    pub arrival: Time,
+    /// Job name (jobs with the same name share a receive region and
+    /// replay their rows serially, modeling training/serving iterations).
+    pub job: String,
+    /// Logical collective.
+    pub kind: CollectiveKind,
+    /// Lowering algorithm.
+    pub algo: CollectiveAlgo,
+    /// Collective size in bytes.
+    pub bytes: u64,
+    /// Participating global GPU ids (distinct, ≥ 2).
+    pub group: Vec<u32>,
+}
+
+impl TraceRow {
+    /// Arrival in whole microseconds (the wire format's resolution).
+    pub fn t_us(&self) -> u64 {
+        self.arrival / us(1)
+    }
+
+    /// Render the group as the trace grammar: maximal inclusive ranges
+    /// joined by `+` (`[0,1,2,3,8]` → `"0-3+8"`).
+    pub fn group_str(&self) -> String {
+        let mut parts: Vec<String> = Vec::new();
+        let mut i = 0;
+        while i < self.group.len() {
+            let start = self.group[i];
+            let mut end = start;
+            while i + 1 < self.group.len() && self.group[i + 1] == end + 1 {
+                end = self.group[i + 1];
+                i += 1;
+            }
+            parts.push(if start == end {
+                format!("{start}")
+            } else {
+                format!("{start}-{end}")
+            });
+            i += 1;
+        }
+        parts.join("+")
+    }
+
+    /// Render as one CSV line (the exact format [`TraceReader`] parses).
+    pub fn to_csv(&self) -> String {
+        format!(
+            "{},{},{},{},{},{}",
+            self.t_us(),
+            self.job,
+            self.kind.name(),
+            self.algo.name(),
+            self.bytes,
+            self.group_str()
+        )
+    }
+
+    /// Render as one JSONL line (the exact format [`TraceReader`] parses).
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            "{{\"t_us\":{},\"job\":\"{}\",\"coll\":\"{}\",\"algo\":\"{}\",\"bytes\":{},\"gpus\":\"{}\"}}",
+            self.t_us(),
+            self.job,
+            self.kind.name(),
+            self.algo.name(),
+            self.bytes,
+            self.group_str()
+        )
+    }
+}
+
+/// A resettable stream of [`TraceRow`]s with non-decreasing arrivals.
+///
+/// The pod's streaming session builds in two passes: a *prescan* (one
+/// full pass to size receive regions, count requests, and validate every
+/// row), then [`WorkloadStream::reset`] and the lazy replay itself —
+/// rows are pulled only as simulated time reaches their arrivals, so
+/// implementations must never need the whole trace in memory.
+pub trait WorkloadStream {
+    /// Human-readable source label (used in run names and errors).
+    fn label(&self) -> &str;
+    /// Next row, or `Ok(None)` at end of stream. Arrivals must be
+    /// non-decreasing; violations are labeled errors.
+    fn next_row(&mut self) -> Result<Option<TraceRow>>;
+    /// Rewind to the first row. After `reset`, the stream must replay
+    /// bit-identically (the determinism contract the prescan relies on).
+    fn reset(&mut self) -> Result<()>;
+}
+
+// Forwarding impl so call sites that pick a source at runtime (e.g. the
+// CLI's --trace vs --synth-trace) can hand a `Box<dyn WorkloadStream>`
+// to any `impl WorkloadStream` bound.
+impl WorkloadStream for Box<dyn WorkloadStream> {
+    fn label(&self) -> &str {
+        (**self).label()
+    }
+    fn next_row(&mut self) -> Result<Option<TraceRow>> {
+        (**self).next_row()
+    }
+    fn reset(&mut self) -> Result<()> {
+        (**self).reset()
+    }
+}
+
+// ---------- TraceReader ----------
+
+/// Where a [`TraceReader`] pulls its lines from.
+enum LineSource {
+    /// A file on disk, re-opened on every reset (streamed, never slurped).
+    File { path: PathBuf, rdr: Option<std::io::BufReader<std::fs::File>> },
+    /// An in-memory trace (tests, exported synthetic traces).
+    Text { text: String, pos: usize },
+}
+
+/// Line-streaming CSV/JSONL cluster-trace parser (see the module docs
+/// for the row format). Parse and validation failures are labeled
+/// `source:line:` errors — malformed fields, out-of-order timestamps,
+/// GPU ids above 65535, duplicate ranks, and truncated JSONL rows all
+/// report the offending line, never panic.
+pub struct TraceReader {
+    name: String,
+    src: LineSource,
+    line_no: u64,
+    last_arrival: Time,
+}
+
+impl std::fmt::Debug for TraceReader {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("TraceReader")
+            .field("name", &self.name)
+            .field("line_no", &self.line_no)
+            .finish()
+    }
+}
+
+impl TraceReader {
+    /// Stream a trace file (CSV or JSONL, sniffed per line).
+    pub fn open(path: impl AsRef<Path>) -> Result<TraceReader> {
+        let path = path.as_ref().to_path_buf();
+        let f = std::fs::File::open(&path)
+            .with_context(|| format!("opening trace `{}`", path.display()))?;
+        let name = path
+            .file_name()
+            .map(|s| s.to_string_lossy().into_owned())
+            .unwrap_or_else(|| path.display().to_string());
+        Ok(TraceReader {
+            name,
+            src: LineSource::File { path, rdr: Some(std::io::BufReader::new(f)) },
+            line_no: 0,
+            last_arrival: 0,
+        })
+    }
+
+    /// Parse an in-memory trace (`name` labels errors).
+    pub fn from_string(name: impl Into<String>, text: impl Into<String>) -> TraceReader {
+        TraceReader {
+            name: name.into(),
+            src: LineSource::Text { text: text.into(), pos: 0 },
+            line_no: 0,
+            last_arrival: 0,
+        }
+    }
+
+    /// Next raw line (without trailing newline), or `None` at EOF.
+    fn next_line(&mut self) -> Result<Option<String>> {
+        self.line_no += 1;
+        match &mut self.src {
+            LineSource::File { path, rdr } => {
+                let rdr = rdr.as_mut().ok_or_else(|| {
+                    anyhow::anyhow!("trace `{}` used before reset", path.display())
+                })?;
+                let mut line = String::new();
+                let n = rdr
+                    .read_line(&mut line)
+                    .with_context(|| format!("{}:{}: read failed", self.name, self.line_no))?;
+                if n == 0 {
+                    return Ok(None);
+                }
+                while line.ends_with('\n') || line.ends_with('\r') {
+                    line.pop();
+                }
+                Ok(Some(line))
+            }
+            LineSource::Text { text, pos } => {
+                if *pos >= text.len() {
+                    return Ok(None);
+                }
+                let rest = &text[*pos..];
+                let (line, advance) = match rest.find('\n') {
+                    Some(i) => (&rest[..i], i + 1),
+                    None => (rest, rest.len()),
+                };
+                *pos += advance;
+                Ok(Some(line.trim_end_matches('\r').to_string()))
+            }
+        }
+    }
+
+    fn err(&self, msg: impl std::fmt::Display) -> anyhow::Error {
+        anyhow::anyhow!("{}:{}: {msg}", self.name, self.line_no)
+    }
+
+    /// Parse the trace-grammar group field: `+`-joined ranks or
+    /// inclusive `a-b` ranges.
+    fn parse_group_str(&self, s: &str) -> Result<Vec<u32>> {
+        let mut out = Vec::new();
+        for part in s.split('+') {
+            let part = part.trim();
+            if part.is_empty() {
+                bail!(self.err("empty GPU range"));
+            }
+            let (lo, hi) = match part.split_once('-') {
+                Some((a, b)) => (self.parse_gpu_id(a)?, self.parse_gpu_id(b)?),
+                None => {
+                    let v = self.parse_gpu_id(part)?;
+                    (v, v)
+                }
+            };
+            if hi < lo {
+                bail!(self.err(format_args!("descending GPU range `{part}`")));
+            }
+            out.extend(lo..=hi);
+        }
+        Ok(out)
+    }
+
+    fn parse_gpu_id(&self, s: &str) -> Result<u32> {
+        let v: u64 = s
+            .trim()
+            .parse()
+            .map_err(|_| self.err(format_args!("bad GPU id `{}`", s.trim())))?;
+        if v > u16::MAX as u64 {
+            bail!(self.err(format_args!("GPU id {v} exceeds the 65535 pod limit")));
+        }
+        Ok(v as u32)
+    }
+
+    fn check_group(&self, group: &[u32]) -> Result<()> {
+        if group.len() < 2 {
+            bail!(self.err("a collective needs >= 2 GPUs"));
+        }
+        let mut sorted = group.to_vec();
+        sorted.sort_unstable();
+        sorted.dedup();
+        if sorted.len() != group.len() {
+            bail!(self.err("duplicate GPU ids in group"));
+        }
+        Ok(())
+    }
+
+    fn parse_csv(&self, line: &str) -> Result<TraceRow> {
+        let fields: Vec<&str> = line.split(',').collect();
+        if fields.len() != 6 {
+            bail!(self.err(format_args!(
+                "expected 6 CSV fields `{TRACE_CSV_HEADER}`, got {}",
+                fields.len()
+            )));
+        }
+        let t_us: u64 = fields[0]
+            .trim()
+            .parse()
+            .map_err(|_| self.err(format_args!("bad t_us `{}`", fields[0].trim())))?;
+        let job = fields[1].trim();
+        if job.is_empty() {
+            bail!(self.err("empty job name"));
+        }
+        let kind = CollectiveKind::parse(fields[2].trim()).map_err(|e| self.err(e))?;
+        let algo = match fields[3].trim() {
+            "" => CollectiveAlgo::default_for(kind),
+            s => CollectiveAlgo::parse(s).map_err(|e| self.err(e))?,
+        };
+        let bytes: u64 = fields[4]
+            .trim()
+            .parse()
+            .map_err(|_| self.err(format_args!("bad bytes `{}`", fields[4].trim())))?;
+        let group = self.parse_group_str(fields[5].trim())?;
+        Ok(TraceRow { arrival: us(t_us), job: job.to_string(), kind, algo, bytes, group })
+    }
+
+    fn parse_jsonl(&self, line: &str) -> Result<TraceRow> {
+        let j = crate::util::json::Json::parse(line)
+            .map_err(|e| self.err(format_args!("bad JSONL row: {e}")))?;
+        let t_us = j.req_u64("t_us").map_err(|e| self.err(e))?;
+        let job = j.req_str("job").map_err(|e| self.err(e))?.to_string();
+        if job.is_empty() {
+            bail!(self.err("empty job name"));
+        }
+        let kind =
+            CollectiveKind::parse(j.req_str("coll").map_err(|e| self.err(e))?).map_err(|e| self.err(e))?;
+        let algo = match j.get("algo").and_then(|a| a.as_str()) {
+            None | Some("") => CollectiveAlgo::default_for(kind),
+            Some(s) => CollectiveAlgo::parse(s).map_err(|e| self.err(e))?,
+        };
+        let bytes = j.req_u64("bytes").map_err(|e| self.err(e))?;
+        let group = match j.get("gpus") {
+            Some(g) => {
+                if let Some(s) = g.as_str() {
+                    self.parse_group_str(s)?
+                } else if let Some(arr) = g.as_arr() {
+                    let mut out = Vec::with_capacity(arr.len());
+                    for v in arr {
+                        let id = v
+                            .as_u64()
+                            .ok_or_else(|| self.err("non-integer GPU id in `gpus` array"))?;
+                        if id > u16::MAX as u64 {
+                            bail!(self
+                                .err(format_args!("GPU id {id} exceeds the 65535 pod limit")));
+                        }
+                        out.push(id as u32);
+                    }
+                    out
+                } else {
+                    bail!(self.err("`gpus` must be a range string or array"));
+                }
+            }
+            None => bail!(self.err("missing key `gpus`")),
+        };
+        Ok(TraceRow { arrival: us(t_us), job, kind, algo, bytes, group })
+    }
+}
+
+impl WorkloadStream for TraceReader {
+    fn label(&self) -> &str {
+        &self.name
+    }
+
+    fn next_row(&mut self) -> Result<Option<TraceRow>> {
+        loop {
+            let Some(line) = self.next_line()? else { return Ok(None) };
+            let trimmed = line.trim();
+            if trimmed.is_empty() || trimmed.starts_with('#') || trimmed == TRACE_CSV_HEADER {
+                continue;
+            }
+            let row = if trimmed.starts_with('{') {
+                self.parse_jsonl(trimmed)?
+            } else {
+                self.parse_csv(trimmed)?
+            };
+            if row.bytes == 0 {
+                bail!(self.err("zero-byte collective"));
+            }
+            if row.arrival < self.last_arrival {
+                bail!(self.err(format_args!(
+                    "out-of-order arrival t_us={} (previous row was at t_us={})",
+                    row.t_us(),
+                    self.last_arrival / us(1)
+                )));
+            }
+            self.check_group(&row.group)?;
+            self.last_arrival = row.arrival;
+            return Ok(Some(row));
+        }
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.line_no = 0;
+        self.last_arrival = 0;
+        match &mut self.src {
+            LineSource::File { path, rdr } => {
+                let f = std::fs::File::open(&*path)
+                    .with_context(|| format!("re-opening trace `{}`", path.display()))?;
+                *rdr = Some(std::io::BufReader::new(f));
+            }
+            LineSource::Text { pos, .. } => *pos = 0,
+        }
+        Ok(())
+    }
+}
+
+// ---------- SyntheticTraceGen ----------
+
+/// Distribution-fitted synthetic trace generator (see [`TraceSpec`] for
+/// the knobs): log-normal collective sizes, exponential inter-arrivals
+/// whose rate follows a diurnal sinusoid, and Zipf job popularity. All
+/// draws come from one [`SplitMix64`] stream keyed on the spec seed, so
+/// the same spec replays bit-identically — including across
+/// [`WorkloadStream::reset`] — and a spec differing only in
+/// `diurnal_amp` draws the *same* size/job sequence (each row consumes a
+/// fixed number of draws), which is what lets `fig_trace` compare a
+/// diurnal trace against a Poisson toy at equal total bytes.
+#[derive(Debug)]
+pub struct SyntheticTraceGen {
+    spec: TraceSpec,
+    label: String,
+    rng: SplitMix64,
+    /// Cumulative (unnormalized) Zipf weights per job.
+    zipf_cdf: Vec<f64>,
+    /// Per-job first rank (contiguous groups of `spec.group` ranks).
+    job_start: Vec<u32>,
+    row: u64,
+    t_us: u64,
+}
+
+impl SyntheticTraceGen {
+    /// Build a generator from a validated spec.
+    pub fn new(spec: &TraceSpec) -> Result<SyntheticTraceGen> {
+        spec.validate()?;
+        let mut cdf = Vec::with_capacity(spec.jobs as usize);
+        let mut acc = 0.0f64;
+        for j in 0..spec.jobs {
+            acc += 1.0 / ((j + 1) as f64).powf(spec.zipf);
+            cdf.push(acc);
+        }
+        // Per-job group placement: a deterministic hash spreads job
+        // groups over the pod (groups may overlap across jobs; receive
+        // regions are partitioned per job downstream).
+        let starts = (spec.gpus - spec.group + 1) as u64;
+        let job_start = (0..spec.jobs)
+            .map(|j| (SplitMix64::new(spec.seed ^ 0x6A0B_0000 ^ j as u64).next_u64() % starts) as u32)
+            .collect();
+        Ok(SyntheticTraceGen {
+            label: spec.label(),
+            rng: SplitMix64::new(spec.seed),
+            zipf_cdf: cdf,
+            job_start,
+            row: 0,
+            t_us: 0,
+            spec: spec.clone(),
+        })
+    }
+
+    /// Uniform draw in (0, 1] (never 0, so `ln` stays finite).
+    fn unit(&mut self) -> f64 {
+        ((self.rng.next_u64() >> 11) as f64 + 1.0) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Export every row in CSV format (header + one line per row),
+    /// resetting before and after so the generator stays replayable.
+    pub fn export_csv(&mut self) -> Result<String> {
+        self.export(TRACE_CSV_HEADER, TraceRow::to_csv)
+    }
+
+    /// Export every row in JSONL format, resetting before and after.
+    pub fn export_jsonl(&mut self) -> Result<String> {
+        self.export("# ratsim synthetic trace (JSONL)", TraceRow::to_jsonl)
+    }
+
+    fn export(&mut self, header: &str, fmt: impl Fn(&TraceRow) -> String) -> Result<String> {
+        self.reset()?;
+        let mut out = String::new();
+        out.push_str(header);
+        out.push('\n');
+        while let Some(row) = self.next_row()? {
+            out.push_str(&fmt(&row));
+            out.push('\n');
+        }
+        self.reset()?;
+        Ok(out)
+    }
+}
+
+impl WorkloadStream for SyntheticTraceGen {
+    fn label(&self) -> &str {
+        &self.label
+    }
+
+    fn next_row(&mut self) -> Result<Option<TraceRow>> {
+        if self.row >= self.spec.rows {
+            return Ok(None);
+        }
+        // Fixed draw budget per row (gap, job, 2 × size) so specs that
+        // differ only in the diurnal amplitude keep identical size/job
+        // sequences.
+        // 1. Arrival gap: exponential with a sinusoidally modulated rate.
+        let u_gap = self.unit();
+        if self.row > 0 {
+            let period_us = self.spec.diurnal_period_ps as f64 / crate::util::units::US as f64;
+            let phase = 2.0 * std::f64::consts::PI * self.t_us as f64 / period_us;
+            let rate = 1.0 + self.spec.diurnal_amp * phase.sin();
+            let mean_us = self.spec.mean_gap_ps as f64 / crate::util::units::US as f64;
+            self.t_us += (-u_gap.ln() * mean_us / rate.max(1e-6)).round() as u64;
+        }
+        // 2. Job: Zipf CDF inversion.
+        let u_job = self.unit() * self.zipf_cdf[self.zipf_cdf.len() - 1];
+        let job = self.zipf_cdf.partition_point(|&c| c < u_job).min(self.spec.jobs as usize - 1);
+        // 3. Size: log-normal via Box–Muller, rounded up to a
+        // group-divisible quantum so every lowering's chunking is exact.
+        let (u1, u2) = (self.unit(), self.unit());
+        let z = (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos();
+        let raw = self.spec.mean_bytes as f64 * (self.spec.sigma * z).exp();
+        let quantum = self.spec.group as u64 * 1024;
+        let bytes = (raw as u64).clamp(quantum, 1 << 30).div_ceil(quantum) * quantum;
+        let start = self.job_start[job];
+        self.row += 1;
+        Ok(Some(TraceRow {
+            arrival: us(self.t_us),
+            job: format!("job-{job:03}"),
+            kind: self.spec.kind,
+            algo: self.spec.algo.unwrap_or_else(|| CollectiveAlgo::default_for(self.spec.kind)),
+            bytes,
+            group: (start..start + self.spec.group).collect(),
+        }))
+    }
+
+    fn reset(&mut self) -> Result<()> {
+        self.rng = SplitMix64::new(self.spec.seed);
+        self.row = 0;
+        self.t_us = 0;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn rows(mut s: impl WorkloadStream) -> Vec<TraceRow> {
+        let mut out = Vec::new();
+        while let Some(r) = s.next_row().unwrap() {
+            out.push(r);
+        }
+        out
+    }
+
+    #[test]
+    fn csv_and_jsonl_rows_parse_identically() {
+        let csv = "t_us,job,coll,algo,bytes,gpus\n5,a,alltoall,direct,4096,0-3\n";
+        let jsonl = "{\"t_us\":5,\"job\":\"a\",\"coll\":\"alltoall\",\"algo\":\"direct\",\"bytes\":4096,\"gpus\":[0,1,2,3]}\n";
+        let a = rows(TraceReader::from_string("csv", csv));
+        let b = rows(TraceReader::from_string("jsonl", jsonl));
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 1);
+        assert_eq!(a[0].arrival, us(5));
+        assert_eq!(a[0].group, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn comments_headers_and_blank_lines_are_skipped() {
+        let text = "# comment\n\nt_us,job,coll,algo,bytes,gpus\n0,j,ag,,8192,0+2+4\n";
+        let r = rows(TraceReader::from_string("t", text));
+        assert_eq!(r.len(), 1);
+        assert_eq!(r[0].kind, CollectiveKind::AllGather);
+        assert_eq!(r[0].algo, CollectiveAlgo::default_for(CollectiveKind::AllGather));
+        assert_eq!(r[0].group, vec![0, 2, 4]);
+    }
+
+    #[test]
+    fn reset_replays_a_text_trace_bit_identically() {
+        let text = "0,a,a2a,direct,4096,0-3\n2,b,a2a,direct,8192,4-7\n";
+        let mut rdr = TraceReader::from_string("t", text);
+        let first: Vec<_> = std::iter::from_fn(|| rdr.next_row().unwrap()).collect();
+        rdr.reset().unwrap();
+        let second: Vec<_> = std::iter::from_fn(|| rdr.next_row().unwrap()).collect();
+        assert_eq!(first, second);
+    }
+
+    #[test]
+    fn group_grammar_roundtrips() {
+        for group in [vec![0u32, 1, 2, 3], vec![0, 2, 4], vec![5, 6, 7, 9, 12, 13]] {
+            let row = TraceRow {
+                arrival: 0,
+                job: "j".into(),
+                kind: CollectiveKind::AllToAll,
+                algo: CollectiveAlgo::Direct,
+                bytes: 4096,
+                group: group.clone(),
+            };
+            let parsed = rows(TraceReader::from_string("t", row.to_csv() + "\n"));
+            assert_eq!(parsed[0].group, group, "grammar `{}`", row.group_str());
+        }
+    }
+
+    #[test]
+    fn synthetic_is_seed_deterministic_and_resets() {
+        let spec = TraceSpec { rows: 50, ..TraceSpec::serving_default() };
+        let a = rows(SyntheticTraceGen::new(&spec).unwrap());
+        let b = rows(SyntheticTraceGen::new(&spec).unwrap());
+        assert_eq!(a, b);
+        assert_eq!(a.len(), 50);
+        let mut g = SyntheticTraceGen::new(&spec).unwrap();
+        g.next_row().unwrap();
+        g.reset().unwrap();
+        assert_eq!(rows(g), a, "reset must rewind to row 0");
+        assert!(a.windows(2).all(|w| w[0].arrival <= w[1].arrival));
+        // Sizes are group-quantized so every lowering chunks exactly.
+        let quantum = spec.group as u64 * 1024;
+        assert!(a.iter().all(|r| r.bytes % quantum == 0 && r.bytes > 0));
+    }
+
+    #[test]
+    fn diurnal_amplitude_does_not_change_sizes_or_jobs() {
+        let base = TraceSpec { rows: 80, ..TraceSpec::serving_default() };
+        let flat = TraceSpec { diurnal_amp: 0.0, ..base.clone() };
+        let a = rows(SyntheticTraceGen::new(&base).unwrap());
+        let b = rows(SyntheticTraceGen::new(&flat).unwrap());
+        assert_eq!(
+            a.iter().map(|r| (&r.job, r.bytes)).collect::<Vec<_>>(),
+            b.iter().map(|r| (&r.job, r.bytes)).collect::<Vec<_>>(),
+            "amp must only modulate arrivals"
+        );
+        let total = |v: &[TraceRow]| v.iter().map(|r| r.bytes).sum::<u64>();
+        assert_eq!(total(&a), total(&b), "equal total bytes at any amplitude");
+    }
+
+    #[test]
+    fn export_csv_roundtrips_through_the_reader() {
+        let spec = TraceSpec { rows: 40, ..TraceSpec::serving_default() };
+        let mut g = SyntheticTraceGen::new(&spec).unwrap();
+        let csv = g.export_csv().unwrap();
+        let reparsed = rows(TraceReader::from_string("export", csv));
+        assert_eq!(reparsed, rows(g), "export → import must be bit-identical");
+    }
+}

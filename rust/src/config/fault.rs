@@ -109,7 +109,8 @@ pub struct FaultSpec {
 }
 
 /// Parse `50us` / `300ns` / `2ms` / bare integer (= ns) into ps.
-fn parse_time_ps(s: &str) -> Result<Time> {
+/// Shared with the trace-spec parser (`config::trace`).
+pub(crate) fn parse_time_ps(s: &str) -> Result<Time> {
     let t = s.trim();
     let (num, mult) = if let Some(p) = t.strip_suffix("us") {
         (p, US)

@@ -9,9 +9,11 @@
 pub mod fault;
 pub mod presets;
 pub mod sweep;
+pub mod trace;
 pub mod types;
 
 pub use fault::{FaultKind, FaultPlan, FaultSpec};
 pub use presets::{paper_baseline, paper_ideal, quick_test};
 pub use sweep::{SweepGrid, SweepPoint};
+pub use trace::TraceSpec;
 pub use types::*;

@@ -1,0 +1,314 @@
+//! Synthetic-trace specification ([`TraceSpec`]): the knobs behind
+//! `collective::trace::SyntheticTraceGen`.
+//!
+//! A spec describes a distribution-fitted serving trace — log-normal
+//! collective sizes, exponential inter-arrivals whose rate follows a
+//! diurnal sinusoid, Zipf job popularity — compactly enough to live on a
+//! CLI flag (`--synth-trace 'serving:rows=4000,jobs=128'`) or in JSON.
+//! Like [`super::fault::FaultSpec`], specs parse from a
+//! `preset:key=value,...` grammar, validate before use, and round-trip
+//! through JSON bit-identically.
+
+use super::fault::parse_time_ps;
+use super::types::{validate_gpu_count, CollectiveAlgo, CollectiveKind};
+use crate::util::json::Json;
+use crate::util::units::{fmt_bytes, parse_bytes, us, Time, MS, US};
+use anyhow::{bail, Context, Result};
+
+/// Parameters of a synthetic serving trace (see the module docs; the
+/// generator itself is `collective::trace::SyntheticTraceGen`).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceSpec {
+    /// Spec label (run names, exports).
+    pub name: String,
+    /// Seed for every draw (arrivals, sizes, job popularity, placement).
+    pub seed: u64,
+    /// Distinct jobs (Zipf-ranked; ≤ 65535).
+    pub jobs: u32,
+    /// Trace rows (collectives) to generate.
+    pub rows: u64,
+    /// Pod size the trace targets (GPU group placement stays inside it).
+    pub gpus: u32,
+    /// Ranks per collective (contiguous groups of this many GPUs).
+    pub group: u32,
+    /// Log-normal size scale (the distribution's median, roughly).
+    pub mean_bytes: u64,
+    /// Log-normal shape parameter (0 = constant sizes).
+    pub sigma: f64,
+    /// Base mean inter-arrival gap (ps).
+    pub mean_gap_ps: Time,
+    /// Diurnal modulation amplitude in [0, 1): the arrival rate swings
+    /// between `1 − amp` and `1 + amp` times the base rate.
+    pub diurnal_amp: f64,
+    /// Diurnal period (ps).
+    pub diurnal_period_ps: Time,
+    /// Zipf popularity exponent over jobs (0 = uniform).
+    pub zipf: f64,
+    /// Collective kind of every row.
+    pub kind: CollectiveKind,
+    /// Lowering algorithm (None = the kind's default).
+    pub algo: Option<CollectiveAlgo>,
+}
+
+impl TraceSpec {
+    /// The serving-trace default: 96 Zipf-ranked jobs over a 16-GPU pod,
+    /// 8-rank collectives, ~256 KiB log-normal sizes, 2 µs mean gaps
+    /// under a strong (amp 0.6) 1 ms diurnal swing.
+    pub fn serving_default() -> TraceSpec {
+        TraceSpec {
+            name: "serving".into(),
+            seed: 0x5E12_71CE,
+            jobs: 96,
+            rows: 2_000,
+            gpus: 16,
+            group: 8,
+            mean_bytes: 256 * 1024,
+            sigma: 0.5,
+            mean_gap_ps: us(2),
+            diurnal_amp: 0.6,
+            diurnal_period_ps: MS,
+            zipf: 1.1,
+            kind: CollectiveKind::AllToAll,
+            algo: None,
+        }
+    }
+
+    /// [`TraceSpec::serving_default`] with the diurnal modulation off —
+    /// the Poisson toy every diurnal figure compares against (same seed,
+    /// so the size/job sequence is identical row for row).
+    pub fn steady_default() -> TraceSpec {
+        TraceSpec { name: "steady".into(), diurnal_amp: 0.0, ..TraceSpec::serving_default() }
+    }
+
+    /// Parse `preset[:key=value,...]` — presets `serving` (default) and
+    /// `steady`; keys `seed`, `jobs`, `rows`, `gpus`, `group`,
+    /// `bytes` (size grammar, e.g. `256KiB`), `sigma`, `gap`/`period`
+    /// (duration grammar, e.g. `2us`), `amp`, `zipf`, `coll`, `algo`,
+    /// `name`. A bare `key=value,...` list applies to the `serving`
+    /// preset. Unknown presets and keys are errors.
+    pub fn parse(s: &str) -> Result<TraceSpec> {
+        let s = s.trim();
+        let (preset, params) = match s.split_once(':') {
+            Some((p, rest)) => (p.trim(), rest.trim()),
+            None if s.contains('=') || s.is_empty() => ("serving", s),
+            None => (s, ""),
+        };
+        let mut spec = match preset {
+            "serving" => TraceSpec::serving_default(),
+            "steady" => TraceSpec::steady_default(),
+            other => bail!("unknown trace preset `{other}` (serving|steady)"),
+        };
+        for kv in params.split(',').filter(|p| !p.trim().is_empty()) {
+            let (k, v) = kv
+                .split_once('=')
+                .ok_or_else(|| anyhow::anyhow!("trace param `{kv}` is not key=value"))?;
+            let (k, v) = (k.trim(), v.trim());
+            let ctx = || format!("trace param `{k}={v}`");
+            match k {
+                "name" => spec.name = v.to_string(),
+                "seed" => spec.seed = v.parse().with_context(ctx)?,
+                "jobs" => spec.jobs = v.parse().with_context(ctx)?,
+                "rows" => spec.rows = v.parse().with_context(ctx)?,
+                "gpus" => spec.gpus = v.parse().with_context(ctx)?,
+                "group" => spec.group = v.parse().with_context(ctx)?,
+                "bytes" => {
+                    spec.mean_bytes =
+                        parse_bytes(v).ok_or_else(|| anyhow::anyhow!("bad size `{v}`"))?
+                }
+                "sigma" => spec.sigma = v.parse().with_context(ctx)?,
+                "gap" => spec.mean_gap_ps = parse_time_ps(v).with_context(ctx)?,
+                "amp" => spec.diurnal_amp = v.parse().with_context(ctx)?,
+                "period" => spec.diurnal_period_ps = parse_time_ps(v).with_context(ctx)?,
+                "zipf" => spec.zipf = v.parse().with_context(ctx)?,
+                "coll" => spec.kind = CollectiveKind::parse(v)?,
+                "algo" => spec.algo = Some(CollectiveAlgo::parse(v)?),
+                other => bail!("unknown trace param `{other}`"),
+            }
+        }
+        spec.validate()?;
+        Ok(spec)
+    }
+
+    /// Check every knob's range (jobs ≤ 65535, 2 ≤ group ≤ gpus, sane
+    /// distribution parameters, power-of-two groups for the lowerings
+    /// that need them).
+    pub fn validate(&self) -> Result<()> {
+        if self.jobs == 0 || self.jobs > u16::MAX as u32 {
+            bail!("trace `{}`: jobs must be 1..=65535 (got {})", self.name, self.jobs);
+        }
+        if self.rows == 0 || self.rows > u32::MAX as u64 {
+            bail!("trace `{}`: rows must be 1..={} (got {})", self.name, u32::MAX, self.rows);
+        }
+        validate_gpu_count(self.gpus)?;
+        if self.group < 2 || self.group > self.gpus {
+            bail!(
+                "trace `{}`: group must be 2..=gpus={} (got {})",
+                self.name,
+                self.gpus,
+                self.group
+            );
+        }
+        if self.mean_bytes == 0 {
+            bail!("trace `{}`: bytes must be > 0", self.name);
+        }
+        if !(0.0..=4.0).contains(&self.sigma) {
+            bail!("trace `{}`: sigma must be in [0, 4] (got {})", self.name, self.sigma);
+        }
+        if !(0.0..1.0).contains(&self.diurnal_amp) {
+            bail!("trace `{}`: amp must be in [0, 1) (got {})", self.name, self.diurnal_amp);
+        }
+        if self.diurnal_period_ps < US {
+            bail!("trace `{}`: period must be >= 1us", self.name);
+        }
+        if !(0.0..=4.0).contains(&self.zipf) {
+            bail!("trace `{}`: zipf must be in [0, 4] (got {})", self.name, self.zipf);
+        }
+        if matches!(
+            self.algo,
+            Some(CollectiveAlgo::RecursiveDoubling) | Some(CollectiveAlgo::RecursiveHalving)
+        ) && !self.group.is_power_of_two()
+        {
+            bail!(
+                "trace `{}`: {} needs a power-of-two group (got {})",
+                self.name,
+                self.algo.unwrap().name(),
+                self.group
+            );
+        }
+        Ok(())
+    }
+
+    /// Short human label (`serving-96j-2000r-16gpu`).
+    pub fn label(&self) -> String {
+        format!("{}-{}j-{}r-{}gpu", self.name, self.jobs, self.rows, self.gpus)
+    }
+
+    /// Serialize (round-trips through [`TraceSpec::from_json`]).
+    pub fn to_json(&self) -> Json {
+        let mut j = Json::from_pairs(vec![
+            ("name", Json::Str(self.name.clone())),
+            ("seed", Json::Num(self.seed as f64)),
+            ("jobs", Json::Num(self.jobs as f64)),
+            ("rows", Json::Num(self.rows as f64)),
+            ("gpus", Json::Num(self.gpus as f64)),
+            ("group", Json::Num(self.group as f64)),
+            ("mean_bytes", Json::Num(self.mean_bytes as f64)),
+            ("sigma", Json::Num(self.sigma)),
+            ("mean_gap_ps", Json::Num(self.mean_gap_ps as f64)),
+            ("diurnal_amp", Json::Num(self.diurnal_amp)),
+            ("diurnal_period_ps", Json::Num(self.diurnal_period_ps as f64)),
+            ("zipf", Json::Num(self.zipf)),
+            ("coll", Json::Str(self.kind.name().to_string())),
+        ]);
+        if let Some(a) = self.algo {
+            j.set("algo", Json::Str(a.name().to_string()));
+        }
+        j
+    }
+
+    /// Deserialize a [`TraceSpec::to_json`] document.
+    pub fn from_json(j: &Json) -> Result<TraceSpec> {
+        let algo = match j.get("algo").and_then(|a| a.as_str()) {
+            Some(s) => Some(CollectiveAlgo::parse(s)?),
+            None => None,
+        };
+        let spec = TraceSpec {
+            name: j.req_str("name")?.to_string(),
+            seed: j.req_u64("seed")?,
+            jobs: j.req_u64("jobs")? as u32,
+            rows: j.req_u64("rows")?,
+            gpus: j.req_u64("gpus")? as u32,
+            group: j.req_u64("group")? as u32,
+            mean_bytes: j.req_u64("mean_bytes")?,
+            sigma: j.req_f64("sigma")?,
+            mean_gap_ps: j.req_u64("mean_gap_ps")?,
+            diurnal_amp: j.req_f64("diurnal_amp")?,
+            diurnal_period_ps: j.req_u64("diurnal_period_ps")?,
+            zipf: j.req_f64("zipf")?,
+            kind: CollectiveKind::parse(j.req_str("coll")?)?,
+            algo,
+        };
+        spec.validate()?;
+        Ok(spec)
+    }
+}
+
+impl std::fmt::Display for TraceSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{}: {} rows, {} jobs (zipf {}), {}-GPU pod, {}-rank {}, ~{} sizes, gap {}ns (amp {})",
+            self.name,
+            self.rows,
+            self.jobs,
+            self.zipf,
+            self.gpus,
+            self.group,
+            self.kind.name(),
+            fmt_bytes(self.mean_bytes),
+            self.mean_gap_ps / crate::util::units::NS,
+            self.diurnal_amp
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn parse_presets_and_overrides() {
+        let d = TraceSpec::parse("serving").unwrap();
+        assert_eq!(d, TraceSpec::serving_default());
+        let s = TraceSpec::parse("steady:rows=500,jobs=32,gap=5us").unwrap();
+        assert_eq!(s.diurnal_amp, 0.0);
+        assert_eq!((s.rows, s.jobs, s.mean_gap_ps), (500, 32, us(5)));
+        // A bare key=value list applies to the serving preset.
+        let bare = TraceSpec::parse("rows=10,bytes=1MiB,coll=allgather,algo=ring").unwrap();
+        assert_eq!(bare.rows, 10);
+        assert_eq!(bare.mean_bytes, 1024 * 1024);
+        assert_eq!(bare.kind, CollectiveKind::AllGather);
+        assert_eq!(bare.algo, Some(CollectiveAlgo::Ring));
+        assert_eq!(TraceSpec::parse("").unwrap(), TraceSpec::serving_default());
+    }
+
+    #[test]
+    fn parse_rejects_bad_input() {
+        for bad in [
+            "bogus-preset",
+            "serving:frobnicate=1",
+            "serving:jobs",
+            "serving:jobs=99999999",
+            "serving:group=1",
+            "serving:group=64", // > gpus=16
+            "serving:amp=1.5",
+            "serving:sigma=-1",
+            "serving:bytes=nonsense",
+            "serving:gap=fast",
+            "serving:coll=bogus",
+            "serving:group=6,algo=recursive-doubling", // non-pow2 group
+        ] {
+            assert!(TraceSpec::parse(bad).is_err(), "`{bad}` should be rejected");
+        }
+    }
+
+    #[test]
+    fn json_roundtrip_is_identity() {
+        for spec in [
+            TraceSpec::serving_default(),
+            TraceSpec::steady_default(),
+            TraceSpec::parse("serving:algo=direct,rows=7,zipf=0").unwrap(),
+        ] {
+            let back = TraceSpec::from_json(&spec.to_json()).unwrap();
+            assert_eq!(back, spec);
+        }
+    }
+
+    #[test]
+    fn labels_and_display_carry_the_key_knobs() {
+        let s = TraceSpec::serving_default();
+        assert_eq!(s.label(), "serving-96j-2000r-16gpu");
+        let d = format!("{s}");
+        assert!(d.contains("2000 rows") && d.contains("96 jobs"), "{d}");
+    }
+}

@@ -4,6 +4,8 @@
 //! * `run`      — simulate one collective and print the stats report;
 //! * `workload` — simulate a multi-tenant workload (per-job latencies,
 //!   cross-job TLB interference; see WORKLOADS.md);
+//! * `replay`   — stream a trace (CSV/JSONL file or synthetic generator)
+//!   through the pod under a bounded admission window;
 //! * `sweep`    — baseline-vs-ideal grid over `--gpus`/`--sizes`;
 //! * `figures`  — regenerate the paper's figures (CSV + tables);
 //! * `schedule` — export a collective schedule as MSCCLang-style JSON;
@@ -12,15 +14,18 @@
 use anyhow::Result;
 use ratsim::collective;
 use ratsim::collective::workload::Workload;
+use ratsim::collective::{SyntheticTraceGen, TraceReader, WorkloadStream};
 use ratsim::config::presets::{
     inference_mix_spec, moe_serving_spec, paper_baseline, paper_ideal, uniform_tenancy_spec,
 };
 use ratsim::config::{
     ArrivalSpec, CollectiveAlgo, CollectiveKind, EnginePolicy, FaultSpec, PodConfig,
-    PrefetchPolicy, RequestSizing, SweepGrid, TopologySpec, WorkloadSpec,
+    PrefetchPolicy, RequestSizing, SweepGrid, TopologySpec, TraceSpec, WorkloadSpec,
 };
 use ratsim::coordinator;
 use ratsim::harness::{run_figures, FigOpts, FIGURES};
+use ratsim::pod::DEFAULT_STREAM_WINDOW_OPS;
+use ratsim::stats::RunStats;
 use ratsim::util::cli::{parse, usage, ArgSpec, Args};
 use ratsim::util::units::{fmt_bytes, parse_bytes, MIB};
 
@@ -42,6 +47,7 @@ fn dispatch(argv: &[String]) -> Result<()> {
     match cmd.as_str() {
         "run" => cmd_run(rest),
         "workload" => cmd_workload(rest),
+        "replay" => cmd_replay(rest),
         "sweep" => cmd_sweep(rest),
         "figures" => cmd_figures(rest),
         "schedule" => cmd_schedule(rest),
@@ -70,7 +76,10 @@ fn print_help() {
          \x20 workload  simulate a multi-tenant mix (--mix uniform|decode-prefill|moe,\n\
          \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json,\n\
          \x20           --topology ...); reports per-job p50/p95/p99 + cross-job TLB\n\
-         \x20           interference\n\
+         \x20           interference; --trace/--synth-trace stream a trace instead\n\
+         \x20 replay    stream a trace through the pod (--trace trace.csv |\n\
+         \x20           --synth-trace serving[:rows=...,jobs=...], --window-ops N,\n\
+         \x20           --gpus for file traces); see WORKLOADS.md trace catalog\n\
          \x20 sweep     baseline-vs-ideal grid (--gpus 8,16 --sizes 1MiB,16MiB);\n\
          \x20           --topology retargets the grid's fabric; --opts for the §6\n\
          \x20           optimization ablation; --algos for the collective-algorithm\n\
@@ -251,9 +260,21 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "save-spec", help: "also write the effective WorkloadSpec JSON here", is_flag: false, default: None },
         ArgSpec { name: "faults", help: "inject faults (same grammar as `run --faults`)", is_flag: false, default: None },
+        ArgSpec { name: "trace", help: "stream a trace file instead of a mix (see `replay`)", is_flag: false, default: None },
+        ArgSpec { name: "synth-trace", help: "stream a synthetic trace instead of a mix (see `replay`)", is_flag: false, default: None },
+        ArgSpec { name: "window-ops", help: "admission window for --trace/--synth-trace (pending lowered ops)", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
     ];
     let a = parse(argv, &spec_flags)?;
+    // Streaming sources bypass the mix machinery entirely: the trace rows
+    // carry their own jobs, arrivals, and collectives.
+    if let Some((stream, spec_gpus)) = open_stream(&a)? {
+        let gpus = match spec_gpus {
+            Some(g) => g,
+            None => a.req_u64("gpus")? as u32,
+        };
+        return run_stream(&a, stream, gpus);
+    }
     let gpus = a.req_u64("gpus")? as u32;
     let mut spec: WorkloadSpec = if let Some(path) = a.get("spec") {
         WorkloadSpec::load(std::path::Path::new(path))?
@@ -347,8 +368,18 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         return Ok(());
     }
     println!("{}", stats.summary());
+    print_job_table(&stats, &format!("workload `{}` — per-job results", spec.name));
+    println!(
+        "cross-job TLB interference: {} L1 evictions, {} L2 evictions",
+        stats.cross_job_l1_evictions, stats.cross_job_l2_evictions
+    );
+    Ok(())
+}
+
+/// Per-job latency table shared by `workload` and `replay`.
+fn print_job_table(stats: &RunStats, title: &str) {
     let mut table = ratsim::harness::Table::new(
-        &format!("workload `{}` — per-job results", spec.name),
+        title,
         &[
             "job",
             "arrival_us",
@@ -375,10 +406,90 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
         ]);
     }
     table.print();
+}
+
+fn cmd_replay(argv: &[String]) -> Result<()> {
+    let spec = vec![
+        ArgSpec { name: "trace", help: "trace file to replay (CSV or JSONL, sniffed per line; see WORKLOADS.md)", is_flag: false, default: None },
+        ArgSpec { name: "synth-trace", help: "synthetic trace spec: serving|steady[:jobs=96,rows=2000,gpus=16,group=8,bytes=256KiB,amp=0.6,...]", is_flag: false, default: None },
+        ArgSpec { name: "gpus", help: "pod size for --trace files (--synth-trace specs carry their own)", is_flag: false, default: Some("16") },
+        ArgSpec { name: "window-ops", help: "admission window: max pending lowered ops in flight", is_flag: false, default: None },
+        ArgSpec { name: "ideal", help: "zero-RAT ideal configuration", is_flag: true, default: None },
+        ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
+        ArgSpec { name: "requests", help: "auto request-sizing target (total requests)", is_flag: false, default: None },
+        ArgSpec { name: "request-bytes", help: "fixed request size in bytes", is_flag: false, default: None },
+        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop | sharded[:threads]", is_flag: false, default: None },
+        ArgSpec { name: "threads", help: "worker threads for the sharded engine (shorthand for --engine sharded:N)", is_flag: false, default: None },
+        ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
+        ArgSpec { name: "faults", help: "inject faults (same grammar as `run --faults`)", is_flag: false, default: None },
+        ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
+    ];
+    let a = parse(argv, &spec)?;
+    let Some((stream, spec_gpus)) = open_stream(&a)? else {
+        anyhow::bail!("replay: pass --trace <file> or --synth-trace <spec>");
+    };
+    let gpus = match spec_gpus {
+        Some(g) => g,
+        None => a.req_u64("gpus")? as u32,
+    };
+    run_stream(&a, stream, gpus)
+}
+
+/// Resolve `--trace`/`--synth-trace` into a boxed stream. Also returns
+/// the synthetic spec's pod size so callers can default `--gpus` to it
+/// (file traces carry no pod size — the flag decides).
+fn open_stream(a: &Args) -> Result<Option<(Box<dyn WorkloadStream>, Option<u32>)>> {
+    match (a.get("trace"), a.get("synth-trace")) {
+        (Some(_), Some(_)) => {
+            anyhow::bail!("--trace and --synth-trace are mutually exclusive")
+        }
+        (Some(path), None) => Ok(Some((Box::new(TraceReader::open(path)?), None))),
+        (None, Some(s)) => {
+            let spec = TraceSpec::parse(s)?;
+            let gpus = spec.gpus;
+            Ok(Some((Box::new(SyntheticTraceGen::new(&spec)?), Some(gpus))))
+        }
+        (None, None) => Ok(None),
+    }
+}
+
+/// Shared driver for stream-backed runs (`replay`, `workload --trace`).
+fn run_stream(a: &Args, stream: Box<dyn WorkloadStream>, gpus: u32) -> Result<()> {
+    let label = stream.label().to_string();
+    // The collective size in the preset is irrelevant for streams (sizing
+    // comes from the prescan's exact byte total); any placeholder works.
+    let mut cfg =
+        if a.flag("ideal") { paper_ideal(gpus, MIB) } else { paper_baseline(gpus, MIB) };
+    cfg.name = format!("replay-{label}-{gpus}gpu");
+    apply_overrides(a, &mut cfg)?;
+    cfg.validate()?;
+    let window = match a.get_u64("window-ops")? {
+        Some(w) => {
+            anyhow::ensure!(
+                (1..=u32::MAX as u64).contains(&w),
+                "--window-ops must be between 1 and {}, got {w}",
+                u32::MAX
+            );
+            w as u32
+        }
+        None => DEFAULT_STREAM_WINDOW_OPS,
+    };
+    log::info!("replaying `{label}` on a {gpus}-GPU pod (admission window {window} ops)");
+    let stats = ratsim::pod::SessionBuilder::new(&cfg)
+        .stream(stream)
+        .stream_window(window)
+        .build()?
+        .run_to_completion();
+    if a.flag("json") {
+        println!("{}", stats.to_json().to_string_pretty());
+        return Ok(());
+    }
+    println!("{}", stats.summary());
     println!(
-        "cross-job TLB interference: {} L1 evictions, {} L2 evictions",
-        stats.cross_job_l1_evictions, stats.cross_job_l2_evictions
+        "  stream: {} rows replayed | peak pending ops {} | window {} ops",
+        stats.stream_rows, stats.stream_peak_pending_ops, stats.stream_window_ops
     );
+    print_job_table(&stats, &format!("replay `{label}` — per-job results"));
     Ok(())
 }
 
@@ -566,7 +677,7 @@ mod tests {
 
     #[test]
     fn every_subcommand_rejects_unknown_flags() {
-        for cmd in ["run", "workload", "sweep", "figures", "schedule", "config"] {
+        for cmd in ["run", "workload", "replay", "sweep", "figures", "schedule", "config"] {
             let err = dispatch(&argv(&[cmd, "--bogus-flag"])).unwrap_err();
             assert!(err.to_string().contains("bogus-flag"), "{cmd}: {err}");
         }
@@ -578,6 +689,7 @@ mod tests {
         for (cmd, flag) in [
             ("run", "--gpus"),
             ("workload", "--gpus"),
+            ("replay", "--trace"),
             ("sweep", "--gpus"),
             ("figures", "--only"),
             ("schedule", "--gpus"),
@@ -597,6 +709,28 @@ mod tests {
         assert!(dispatch(&argv(&["workload", "--mix", "moe", "--skew", "x"])).is_err());
         assert!(dispatch(&argv(&["figures", "--only", "not-a-figure"])).is_err());
         assert!(dispatch(&argv(&["schedule", "--collective", "bogus"])).is_err());
+    }
+
+    #[test]
+    fn replay_source_flags_are_validated_before_any_run() {
+        // No source at all.
+        let err = dispatch(&argv(&["replay"])).unwrap_err();
+        assert!(err.to_string().contains("--trace"), "{err}");
+        // Mutually exclusive sources error before touching the filesystem.
+        let err = dispatch(&argv(&[
+            "replay", "--trace", "x.csv", "--synth-trace", "serving",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
+        // Unknown synthetic preset / bad key are labeled parse errors.
+        assert!(dispatch(&argv(&["replay", "--synth-trace", "bogus-preset"])).is_err());
+        assert!(dispatch(&argv(&["replay", "--synth-trace", "serving:rows=x"])).is_err());
+        // Same gate on the workload subcommand's streaming flags.
+        let err = dispatch(&argv(&[
+            "workload", "--trace", "x.csv", "--synth-trace", "serving",
+        ]))
+        .unwrap_err();
+        assert!(err.to_string().contains("mutually exclusive"), "{err}");
     }
 
     #[test]

@@ -6,7 +6,9 @@
 //! See DESIGN.md "Request lifecycle" for the modeled path and "Session
 //! lifecycle & observer hooks" for the driver API. The entry point is
 //! [`SessionBuilder`]: pick a traffic source (config-declared collective,
-//! explicit schedule, or merged workload), an engine policy, and the
+//! explicit schedule, merged workload, or a streaming trace source
+//! replayed under a bounded admission window — see DESIGN.md "Streaming
+//! workload sources"), an engine policy, and the
 //! attached [`Observer`]s, then drive the resulting [`SimSession`]
 //! incrementally ([`SimSession::step`] / [`SimSession::run_until`] with
 //! mid-run [`SimSession::snapshot`]s) or straight through
@@ -29,4 +31,4 @@ pub use observer::{
     CrossJobObserver, FaultObserver, JobObserver, JobSeed, LatencyObserver, NoopObserver,
     Observer, RequestView, SessionEvent, TraceObserver, TranslationEvent,
 };
-pub use session::{SessionBuilder, SimSession, StallError};
+pub use session::{SessionBuilder, SimSession, StallError, DEFAULT_STREAM_WINDOW_OPS};

@@ -44,8 +44,10 @@ use super::observer::{
 };
 use super::shard::{PodCore, ShardSet};
 use crate::collective::workload::Workload;
-use crate::collective::Schedule;
-use crate::config::{EnginePolicy, FaultPlan, PodConfig, PrefetchPolicy};
+use crate::collective::{Schedule, SendOp, WorkloadStream};
+use crate::config::{
+    CollectiveAlgo, CollectiveKind, EnginePolicy, FaultPlan, PodConfig, PrefetchPolicy,
+};
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{build_fabric, Fabric, FabricPath};
@@ -58,6 +60,7 @@ use crate::trans::prefetch::{Hint, Prefetcher};
 use crate::trans::walker::QueuedWalk;
 use crate::util::units::Time;
 use anyhow::Result;
+use std::collections::{BTreeMap, BTreeSet, HashMap, VecDeque};
 use std::time::Duration;
 
 /// Simulation events. Payloads are packed small (16-byte variants) for
@@ -93,6 +96,10 @@ enum Ev {
     /// Re-transmit a parked request: a backoff retry, or the forced
     /// delivery at link recovery after the retry budget is exhausted.
     FaultRetry { req: u32 },
+    /// Streaming-workload admission tick: pull trace rows whose arrival
+    /// has passed and admit as many as the pending-op window allows
+    /// (stream-backed runs only — see `StreamState`).
+    StreamPump,
 }
 
 /// Pending-set placement for the sharded engine, mirroring the model's
@@ -106,7 +113,7 @@ impl ShardRoute for Ev {
     fn route(&self, shards: usize) -> usize {
         match *self {
             Ev::WgStart { wg } => wg as usize % shards,
-            Ev::Hop => 0,
+            Ev::Hop | Ev::StreamPump => 0,
             Ev::TargetArrive { req }
             | Ev::Retry { req }
             | Ev::AckArrive { req }
@@ -192,6 +199,100 @@ impl FaultBooks {
     }
 }
 
+/// One trace row pulled off a [`WorkloadStream`] but not yet admitted:
+/// queued per job until its job is idle and the pending-op window has
+/// room. Lowering is cached on the first admission attempt so a
+/// window-rejected row never lowers twice.
+struct PreparedRow {
+    /// Global arrival order (the admission tie-breaker across jobs).
+    seq: u32,
+    arrival: Time,
+    /// Dense job id (prescan-assigned, first-appearance order).
+    job: u16,
+    kind: CollectiveKind,
+    algo: CollectiveAlgo,
+    bytes: u64,
+    /// Global GPU ids participating in the collective (rank order).
+    group: Vec<u32>,
+    /// Cached lowering (rank-space op list) from a prior window check.
+    lowered: Option<Schedule>,
+}
+
+/// In-flight accounting for one admitted trace row.
+struct RowBook {
+    /// Ops of the row not yet complete.
+    remaining: u32,
+    /// Total ops the row lowered into (window release amount).
+    ops: u32,
+    /// Dense job id (released back to idle when the row completes).
+    job: u16,
+    /// Workgroup slots the row occupies (recycled at completion).
+    slots: Vec<u32>,
+}
+
+/// Lazy-admission state of a stream-backed run (`None` for schedule- and
+/// workload-backed runs — every hook is gated on it, keeping those paths
+/// untouched). The stream is pulled as simulated time reaches each row's
+/// arrival; at most one not-yet-due row (`lookahead`) plus the bounded
+/// per-job queues are ever buffered, and admitted rows are bounded by the
+/// `window_ops` pending-op window — the whole point of the subsystem: the
+/// full schedule never materializes in memory. Workgroup slots, the
+/// dependency lists and the request slab are recycled across rows, so
+/// steady-state memory is O(window), not O(trace).
+struct StreamState {
+    /// The row source (trace file or synthetic generator), already
+    /// prescanned and reset.
+    stream: Box<dyn WorkloadStream>,
+    /// Admission bound on pending (admitted, incomplete) ops. A row
+    /// larger than the whole window is admitted alone (`pending == 0`),
+    /// so peak pending is `window_ops.max(max_row_ops)` — asserted at
+    /// finalize.
+    window_ops: u32,
+    /// Arrived-but-unadmitted rows, FIFO per job (rows of one job are
+    /// serialized: row k+1 starts only after row k completes, so a job's
+    /// region reuse is hazard-free and its TLB story is warm reuse).
+    queues: Vec<VecDeque<PreparedRow>>,
+    /// The single buffered not-yet-due row.
+    lookahead: Option<PreparedRow>,
+    /// The stream returned `None` (all rows pulled).
+    exhausted: bool,
+    /// Next global arrival sequence number.
+    next_seq: u32,
+    /// Job name → dense id (prescan-assigned; replay reproduces it).
+    job_ids: HashMap<String, u16>,
+    /// Per-job "has an admitted, incomplete row" flag.
+    job_active: Vec<bool>,
+    /// Ops admitted and not yet complete (the windowed quantity).
+    pending_ops: u32,
+    /// High-water mark of `pending_ops` (scraped into `RunStats`).
+    peak_pending: u32,
+    /// Rows admitted so far (also the next row id).
+    rows_admitted: u64,
+    /// Rows fully completed so far.
+    rows_completed: u64,
+    /// Total rows the prescan counted (finalize conservation).
+    rows_total: u64,
+    /// Largest single-row op count seen by the prescan.
+    max_row_ops: u32,
+    /// Request size resolved from the prescan's total-byte count.
+    request_bytes: u64,
+    /// job → gpu → base byte offset of the job's receive region (page-
+    /// aligned, disjoint across jobs — sized to the job's max per-row
+    /// receive window at that GPU).
+    region_base: Vec<Vec<u64>>,
+    /// slot → dependent slots (the dynamic counterpart of
+    /// `PodCore::children`, rebuilt per admitted row).
+    children: Vec<Vec<u32>>,
+    /// slot → row id currently occupying it.
+    slot_row: Vec<u32>,
+    /// Recycled workgroup slots (LIFO keeps the hot set dense).
+    free_slots: Vec<u32>,
+    /// row id → in-flight accounting.
+    books: BTreeMap<u32, RowBook>,
+    /// Armed `StreamPump` times (dedupe so each arrival pumps once).
+    pumps: BTreeSet<Time>,
+}
+
 /// The full pod model: GPUs, fabric, translation hierarchy and the event
 /// engine, executing one (possibly multi-tenant) workload to completion.
 /// Measurement is delegated to the attached [`Observer`]s — construct and
@@ -218,6 +319,9 @@ pub struct PodSim {
     prefetcher: Prefetcher,
     /// Reliable-transport books (`None` = fault-free run, zero hooks).
     faults: Option<FaultBooks>,
+    /// Streaming-workload admission state (`None` = schedule-backed run,
+    /// zero hooks).
+    stream: Option<StreamState>,
     /// Attached observers (stock + user), notified at model decision
     /// points.
     observers: Vec<Box<dyn Observer>>,
@@ -274,6 +378,259 @@ impl PodSim {
     ) -> Result<PodSim> {
         let request_bytes = cfg.request_bytes_for(workload.schedule.total_bytes());
         Self::new_inner(cfg, workload, request_bytes, extra, stock)
+    }
+
+    /// Build a pod for a streaming workload source. One prescan pass over
+    /// the stream validates every row, lowers it (labeled errors carry
+    /// the row number), and accumulates the aggregate books the static
+    /// machinery needs up front — the job table, per-job byte/request
+    /// totals (few distinct op sizes per job, so request counts come from
+    /// a size→count map without keeping ops), per-(job, GPU) max receive
+    /// windows for the region layout, and the run's total request count.
+    /// The stream is then reset and replayed lazily: rows are pulled as
+    /// simulated time reaches their arrivals and admitted under the
+    /// `window_ops` pending-op bound, so the full schedule never exists
+    /// in memory (the acceptance property `rust/tests/trace.rs` pins).
+    pub(crate) fn new_stream(
+        cfg: PodConfig,
+        mut stream: Box<dyn WorkloadStream>,
+        window_ops: u32,
+        extra: Vec<Box<dyn Observer>>,
+        stock: bool,
+    ) -> Result<PodSim> {
+        cfg.validate()?;
+        anyhow::ensure!(window_ops > 0, "stream admission window must be at least one op");
+
+        // ---- prescan pass ----
+        stream.reset()?;
+        let mut job_ids: HashMap<String, u16> = HashMap::new();
+        let mut job_names: Vec<String> = Vec::new();
+        let mut job_first_arrival: Vec<Time> = Vec::new();
+        let mut job_bytes: Vec<u64> = Vec::new();
+        let mut job_op_sizes: Vec<BTreeMap<u64, u64>> = Vec::new();
+        let mut maxwin: Vec<Vec<u64>> = Vec::new();
+        let mut rows_total: u64 = 0;
+        let mut max_row_ops: u32 = 0;
+        let mut total_bytes: u64 = 0;
+        while let Some(row) = stream.next_row()? {
+            rows_total += 1;
+            anyhow::ensure!(
+                rows_total <= u32::MAX as u64,
+                "{}: stream exceeds {} rows",
+                stream.label(),
+                u32::MAX
+            );
+            if let Some(&g) = row.group.iter().find(|&&g| g >= cfg.gpus) {
+                anyhow::bail!(
+                    "{} row {rows_total}: GPU {g} out of range for a {}-GPU pod",
+                    stream.label(),
+                    cfg.gpus
+                );
+            }
+            let lowered = crate::collective::algo::lower(
+                row.kind,
+                row.algo,
+                row.group.len() as u32,
+                row.bytes,
+            )
+            .map_err(|e| anyhow::anyhow!("{} row {rows_total}: {e}", stream.label()))?;
+            let jid: u16 = match job_ids.get(&row.job) {
+                Some(&j) => j,
+                None => {
+                    anyhow::ensure!(
+                        job_names.len() < u16::MAX as usize,
+                        "{}: stream names more than {} jobs",
+                        stream.label(),
+                        u16::MAX
+                    );
+                    let j = job_names.len() as u16;
+                    job_ids.insert(row.job.clone(), j);
+                    job_names.push(row.job.clone());
+                    job_first_arrival.push(row.arrival);
+                    job_bytes.push(0);
+                    job_op_sizes.push(BTreeMap::new());
+                    maxwin.push(vec![0u64; cfg.gpus as usize]);
+                    j
+                }
+            };
+            let j = jid as usize;
+            max_row_ops = max_row_ops.max(lowered.ops.len() as u32);
+            for op in &lowered.ops {
+                job_bytes[j] += op.bytes;
+                total_bytes += op.bytes;
+                *job_op_sizes[j].entry(op.bytes).or_insert(0) += 1;
+            }
+            for (rank, &g) in row.group.iter().enumerate() {
+                let win = lowered.recv_window_bytes(rank as u32);
+                let slot = &mut maxwin[j][g as usize];
+                *slot = (*slot).max(win);
+            }
+        }
+        anyhow::ensure!(rows_total > 0, "{}: stream produced no rows", stream.label());
+        stream.reset()?;
+
+        // Request sizing resolves from the prescan's exact byte total, so
+        // the run's total request count — and with it the static
+        // completion/conservation machinery — is known before any row is
+        // admitted.
+        let request_bytes = cfg.request_bytes_for(total_bytes);
+        let jobs_n = job_names.len();
+        let mut job_requests: Vec<u64> = vec![0; jobs_n];
+        for (j, sizes) in job_op_sizes.iter().enumerate() {
+            for (&b, &count) in sizes {
+                job_requests[j] += b.div_ceil(request_bytes) * count;
+            }
+        }
+        let total_requests: u64 = job_requests.iter().sum();
+
+        // Region layout: each (job, GPU) gets a page-aligned region sized
+        // to the job's largest per-row receive window there, carved from
+        // a per-GPU monotonic cursor (mirrors `WorkloadBuilder`). Jobs
+        // never share translation pages; a job's consecutive rows reuse
+        // the same region (warm-TLB story, no overlap hazard thanks to
+        // per-job row serialization).
+        let page_bytes = cfg.trans.page_bytes;
+        let mut region_base: Vec<Vec<u64>> = vec![vec![0; cfg.gpus as usize]; jobs_n];
+        let mut cursor: Vec<u64> = vec![0; cfg.gpus as usize];
+        for (j, wins) in maxwin.iter().enumerate() {
+            for (g, &win) in wins.iter().enumerate() {
+                region_base[j][g] = cursor[g];
+                cursor[g] += win.div_ceil(page_bytes) * page_bytes;
+            }
+        }
+
+        let fabric = build_fabric(&cfg.topology, cfg.gpus, &cfg.link)?;
+        let tier_count = fabric.tiers().len();
+        let faults = match &cfg.faults {
+            Some(spec) => Some(FaultBooks::new(
+                FaultPlan::new(spec, cfg.link.stations_per_gpu, fabric.tiers())?,
+                cfg.gpus,
+                fabric.tiers(),
+            )),
+            None => None,
+        };
+        let mut mmus: Vec<GpuMmu> = (0..cfg.gpus)
+            .map(|g| GpuMmu::new(g, cfg.seed, cfg.link.stations_per_gpu, &cfg.trans))
+            .collect();
+        for (g, mmu) in mmus.iter_mut().enumerate() {
+            mmu.max_page = if cursor[g] == 0 { 0 } else { (cursor[g] - 1) / page_bytes };
+        }
+
+        // Stock observers, seeded from the prescan books. The cross-job
+        // eviction observer is intentionally absent: it derives page
+        // ownership from a static schedule, which a stream-backed run
+        // never materializes.
+        let mut observers: Vec<Box<dyn Observer>> = Vec::new();
+        if stock {
+            observers.push(Box::new(LatencyObserver::new()));
+            if let Some(src) = cfg.workload.trace_source_gpu {
+                observers.push(Box::new(TraceObserver::new(src)));
+            }
+            let seeds: Vec<JobSeed> = (0..jobs_n)
+                .map(|j| JobSeed {
+                    name: job_names[j].clone(),
+                    arrival: job_first_arrival[j],
+                    bytes: job_bytes[j],
+                    total_requests: job_requests[j],
+                })
+                .collect();
+            observers.push(Box::new(JobObserver::new(seeds)));
+            if cfg.faults.is_some() {
+                observers.push(Box::new(FaultObserver::new(job_names.clone())));
+            }
+        }
+        observers.extend(extra);
+
+        let policy =
+            if cfg.trans.enabled { cfg.trans.prefetch_policy } else { PrefetchPolicy::Off };
+        let prefetcher = Prefetcher::new(policy, cfg.gpus);
+        let t_fabric = crate::util::units::ns(cfg.gpu.local_fabric_ns);
+        let t_hbm = crate::util::units::ns(cfg.gpu.hbm_ns);
+        let t_l1 = cfg.trans.l1.hit_latency();
+        let t_l2 = cfg.trans.l2.hit_latency();
+        let t_pwc = crate::util::units::ns(cfg.trans.pwc_hit_latency_ns);
+        let t_walk_mem =
+            crate::util::units::ns(cfg.trans.walk_mem_ns + cfg.trans.walk_fabric_ns);
+        let cap = (window_ops as usize).max(1024);
+        let (engine, model_shards) = match cfg.engine {
+            EnginePolicy::Sharded { threads } => {
+                let threads = threads.max(1) as usize;
+                (AnyEngine::sharded(threads, fabric.min_path_latency(), cap), threads)
+            }
+            _ => (AnyEngine::single(cap), 1),
+        };
+        let per_hop = cfg.engine == EnginePolicy::PerHop;
+        let config_name = cfg.name.clone();
+        // The shared core carries an empty-op schedule: streams admit ops
+        // dynamically, so the static dependency graph is empty and §6.1
+        // pre-translation (which walks `schedule.ops`) is a no-op — a
+        // stream-backed run always starts reverse-translation cold.
+        let schedule = Schedule {
+            name: stream.label().to_string(),
+            gpus: cfg.gpus,
+            size_bytes: total_bytes,
+            ops: Vec::new(),
+        };
+        let core = PodCore {
+            cfg,
+            schedule,
+            children: Vec::new(),
+            job_arrivals: job_first_arrival,
+            config_name,
+            t_fabric,
+            t_hbm,
+            t_l1,
+            t_l2,
+            t_pwc,
+            t_walk_mem,
+        };
+        let mut sim = PodSim {
+            core,
+            engine,
+            fabric,
+            shards: ShardSet::new(model_shards, mmus),
+            wgs: Vec::new(),
+            slab: Vec::with_capacity(cap),
+            free: Vec::with_capacity(cap),
+            total_requests,
+            acked: 0,
+            completion: 0,
+            prefetcher,
+            faults,
+            stream: Some(StreamState {
+                stream,
+                window_ops,
+                queues: (0..jobs_n).map(|_| VecDeque::new()).collect(),
+                lookahead: None,
+                exhausted: false,
+                next_seq: 0,
+                job_ids,
+                job_active: vec![false; jobs_n],
+                pending_ops: 0,
+                peak_pending: 0,
+                rows_admitted: 0,
+                rows_completed: 0,
+                rows_total,
+                max_row_ops,
+                request_bytes,
+                region_base,
+                children: Vec::new(),
+                slot_row: Vec::new(),
+                free_slots: Vec::new(),
+                books: BTreeMap::new(),
+                pumps: BTreeSet::new(),
+            }),
+            observers,
+            pretranslated_pages: 0,
+            prefetch_walks: 0,
+            tier_time: vec![0; tier_count],
+            tier_packets: vec![0; tier_count],
+            per_hop,
+        };
+        // Kick admission at t = 0: rows due immediately admit now, and
+        // the first future arrival arms its pump.
+        sim.stream_try_admit(0);
+        Ok(sim)
     }
 
     fn new_inner(
@@ -435,6 +792,7 @@ impl PodSim {
             completion: 0,
             prefetcher,
             faults,
+            stream: None,
             observers,
             pretranslated_pages: 0,
             prefetch_walks: 0,
@@ -603,6 +961,11 @@ impl PodSim {
         if let Some(fb) = &self.faults {
             stats.faults = fb.stats.clone();
         }
+        if let Some(ss) = &self.stream {
+            stats.stream_rows = ss.rows_completed;
+            stats.stream_peak_pending_ops = ss.peak_pending as u64;
+            stats.stream_window_ops = ss.window_ops as u64;
+        }
         let busy = self.fabric.tier_busy();
         stats.tiers = self
             .fabric
@@ -658,6 +1021,22 @@ impl PodSim {
             assert_eq!(s.timeouts, s.retries + s.aborts, "timeout resolution out of balance");
             assert!(fb.replay.iter().all(|&r| r == 0), "replay buffers not drained");
         }
+        if let Some(ss) = &self.stream {
+            // Stream conservation: every prescanned row pulled, admitted
+            // and retired; the admission window was honored throughout.
+            assert!(ss.exhausted && ss.lookahead.is_none(), "stream rows never pulled");
+            assert!(ss.queues.iter().all(|q| q.is_empty()), "stream rows never admitted");
+            assert!(ss.books.is_empty(), "stream row books leaked");
+            assert_eq!(ss.pending_ops, 0, "stream pending-op accounting leaked");
+            assert_eq!(ss.rows_completed, ss.rows_total, "stream rows lost");
+            assert!(
+                ss.peak_pending <= ss.window_ops.max(ss.max_row_ops),
+                "stream admission window violated: peak {} > max({}, {})",
+                ss.peak_pending,
+                ss.window_ops,
+                ss.max_row_ops
+            );
+        }
         let mut stats = RunStats::default();
         self.scrape_into(&mut stats);
         stats.wall_seconds = wall.as_secs_f64();
@@ -688,6 +1067,7 @@ impl PodSim {
             // The packet is already staged at the source station's
             // replay buffer — re-enter the fabric directly at `now`.
             Ev::FaultRetry { req } => self.transmit(now, req),
+            Ev::StreamPump => self.on_stream_pump(now),
         }
     }
 
@@ -1251,9 +1631,16 @@ impl PodSim {
         let wg = view.wg;
         let op_done = self.wgs[wg as usize].on_ack();
         if op_done {
-            let op_id = self.wgs[wg as usize].op.id as usize;
-            for &child in &self.core.children[op_id] {
-                self.engine.schedule_at(now, Ev::WgStart { wg: child });
+            if self.stream.is_some() {
+                // Stream-backed run: dependents live in the dynamic
+                // per-row graph, and a completed row frees its window
+                // share (which may admit the next rows).
+                self.stream_op_done(now, wg);
+            } else {
+                let op_id = self.wgs[wg as usize].op.id as usize;
+                for &child in &self.core.children[op_id] {
+                    self.engine.schedule_at(now, Ev::WgStart { wg: child });
+                }
             }
         } else {
             // Window slot freed: keep the stream saturated.
@@ -1264,6 +1651,213 @@ impl PodSim {
         if self.acked == self.total_requests {
             self.completion = now;
         }
+    }
+
+    // ---------- streaming admission (stream-backed runs only) ----------
+
+    /// A `StreamPump` fired: a buffered row's arrival time has passed —
+    /// pull and admit.
+    fn on_stream_pump(&mut self, now: Time) {
+        if let Some(ss) = self.stream.as_mut() {
+            ss.pumps.remove(&now);
+        }
+        self.stream_try_admit(now);
+    }
+
+    /// Pull every row whose arrival has passed into its job's FIFO, then
+    /// admit in global arrival order while the pending-op window has
+    /// room. Runs only inside serially-dispatched handler code (plus once
+    /// at construction), so admission order — and with it the whole run —
+    /// is bit-identical across the Fused/PerHop/Sharded engines.
+    fn stream_try_admit(&mut self, now: Time) {
+        // The take/put-back split lets admission borrow the engine, the
+        // workgroup array and the stream state simultaneously.
+        let Some(mut ss) = self.stream.take() else { return };
+        // Pull phase: drain the stream up to `now`, one lookahead row
+        // buffered past it.
+        loop {
+            if ss.lookahead.is_none() && !ss.exhausted {
+                match ss.stream.next_row() {
+                    Ok(Some(r)) => {
+                        let job = *ss
+                            .job_ids
+                            .get(&r.job)
+                            .expect("stream named a job the prescan never saw");
+                        ss.lookahead = Some(PreparedRow {
+                            seq: ss.next_seq,
+                            arrival: r.arrival,
+                            job,
+                            kind: r.kind,
+                            algo: r.algo,
+                            bytes: r.bytes,
+                            group: r.group,
+                            lowered: None,
+                        });
+                        ss.next_seq += 1;
+                    }
+                    Ok(None) => ss.exhausted = true,
+                    Err(e) => {
+                        panic!("workload stream failed after successful prescan: {e}")
+                    }
+                }
+            }
+            match &ss.lookahead {
+                Some(r) if r.arrival <= now => {
+                    let r = ss.lookahead.take().expect("lookahead vanished");
+                    ss.queues[r.job as usize].push_back(r);
+                }
+                _ => break,
+            }
+        }
+        // Admit phase: repeatedly take the oldest row whose job is idle;
+        // stop when it doesn't fit the window (a row larger than the
+        // whole window is admitted alone once the window drains — the
+        // `pending == 0` clause — so admission can never deadlock).
+        loop {
+            let mut best: Option<(u32, usize)> = None;
+            for (j, q) in ss.queues.iter().enumerate() {
+                if ss.job_active[j] {
+                    continue;
+                }
+                let Some(front) = q.front() else { continue };
+                let better = match best {
+                    None => true,
+                    Some((seq, _)) => front.seq < seq,
+                };
+                if better {
+                    best = Some((front.seq, j));
+                }
+            }
+            let Some((_, j)) = best else { break };
+            let nops = {
+                let front = ss.queues[j].front_mut().expect("candidate row vanished");
+                if front.lowered.is_none() {
+                    let sched = crate::collective::algo::lower(
+                        front.kind,
+                        front.algo,
+                        front.group.len() as u32,
+                        front.bytes,
+                    )
+                    .expect("stream row failed to lower after successful prescan");
+                    front.lowered = Some(sched);
+                }
+                front.lowered.as_ref().expect("lowering cached above").ops.len() as u32
+            };
+            if ss.pending_ops > 0 && ss.pending_ops + nops > ss.window_ops {
+                break;
+            }
+            let row = ss.queues[j].pop_front().expect("candidate row vanished");
+            self.stream_admit_row(now, &mut ss, row);
+        }
+        // If rows remain beyond `now`, arm a pump at the next arrival so
+        // admission stays arrival-faithful even while nothing completes.
+        if let Some(r) = &ss.lookahead {
+            if r.arrival > now && ss.pumps.insert(r.arrival) {
+                self.engine.schedule_at(r.arrival, Ev::StreamPump);
+            }
+        }
+        self.stream = Some(ss);
+    }
+
+    /// Admit one row: lower → allocate workgroup slots (recycled LIFO) →
+    /// rebase ops from rank space into the (job, GPU) regions → seed the
+    /// row's roots at `now`.
+    fn stream_admit_row(&mut self, now: Time, ss: &mut StreamState, row: PreparedRow) {
+        let lowered = row.lowered.expect("row lowered at the admission check");
+        let nops = lowered.ops.len() as u32;
+        debug_assert!(
+            ss.rows_admitted < u32::MAX as u64,
+            "row ids exhausted (prescan bounds rows to u32)"
+        );
+        let row_id = ss.rows_admitted as u32;
+        let mut local_to_slot: Vec<u32> = Vec::with_capacity(nops as usize);
+        for _ in 0..nops {
+            match ss.free_slots.pop() {
+                Some(s) => {
+                    debug_assert!(ss.children[s as usize].is_empty(), "recycled slot has kids");
+                    ss.slot_row[s as usize] = row_id;
+                    local_to_slot.push(s);
+                }
+                None => {
+                    let s = ss.slot_row.len() as u32;
+                    ss.slot_row.push(row_id);
+                    ss.children.push(Vec::new());
+                    local_to_slot.push(s);
+                }
+            }
+        }
+        for (i, lop) in lowered.ops.iter().enumerate() {
+            let slot = local_to_slot[i];
+            let gdst = row.group[lop.dst as usize];
+            let op = SendOp {
+                id: slot,
+                src: row.group[lop.src as usize],
+                dst: gdst,
+                dst_offset: ss.region_base[row.job as usize][gdst as usize] + lop.dst_offset,
+                bytes: lop.bytes,
+                after: lop.after.map(|p| local_to_slot[p as usize]),
+                job: row.job,
+            };
+            let blocked = op.after.is_some();
+            let wg = WorkGroup::new(op, ss.request_bytes, self.core.cfg.gpu.wg_window, blocked);
+            if (slot as usize) < self.wgs.len() {
+                self.wgs[slot as usize] = wg;
+            } else {
+                debug_assert_eq!(slot as usize, self.wgs.len(), "slot/wg arrays diverged");
+                self.wgs.push(wg);
+            }
+            match lop.after {
+                Some(p) => ss.children[local_to_slot[p as usize] as usize].push(slot),
+                None => self.engine.schedule_at(now, Ev::WgStart { wg: slot }),
+            }
+        }
+        ss.books.insert(
+            row_id,
+            RowBook { remaining: nops, ops: nops, job: row.job, slots: local_to_slot },
+        );
+        ss.pending_ops += nops;
+        ss.peak_pending = ss.peak_pending.max(ss.pending_ops);
+        ss.job_active[row.job as usize] = true;
+        ss.rows_admitted += 1;
+    }
+
+    /// A stream-admitted op completed: release its dependents and retire
+    /// the row once its last op finishes.
+    fn stream_op_done(&mut self, now: Time, wg: u32) {
+        let (kids, row_done, row) = {
+            let ss = self.stream.as_mut().expect("stream op outside a stream run");
+            let kids = std::mem::take(&mut ss.children[wg as usize]);
+            let row = ss.slot_row[wg as usize];
+            let book = ss.books.get_mut(&row).expect("stream row book missing");
+            book.remaining -= 1;
+            (kids, book.remaining == 0, row)
+        };
+        for child in kids {
+            self.engine.schedule_at(now, Ev::WgStart { wg: child });
+        }
+        if row_done {
+            self.stream_row_done(now, row);
+        }
+    }
+
+    /// Retire a completed row: recycle its slots, release its window
+    /// share and its job, and re-run admission.
+    fn stream_row_done(&mut self, now: Time, row: u32) {
+        {
+            let ss = self.stream.as_mut().expect("stream row outside a stream run");
+            let book = ss.books.remove(&row).expect("stream row book missing");
+            for &s in &book.slots {
+                debug_assert!(
+                    ss.children[s as usize].is_empty(),
+                    "retiring a slot with unreleased dependents"
+                );
+                ss.free_slots.push(s);
+            }
+            ss.pending_ops -= book.ops;
+            ss.job_active[book.job as usize] = false;
+            ss.rows_completed += 1;
+        }
+        self.stream_try_admit(now);
     }
 }
 

@@ -337,6 +337,15 @@ pub struct RunStats {
     /// Fault-injection / reliable-transport accounting (all-zero when
     /// `PodConfig::faults` is `None`).
     pub faults: FaultStats,
+    /// Trace rows completed by a stream-backed run (0 for schedule- and
+    /// workload-backed runs).
+    pub stream_rows: u64,
+    /// Peak pending (admitted, incomplete) op count of a stream-backed
+    /// run — bounded by `max(stream_window_ops, largest row)`; asserted
+    /// at finalize.
+    pub stream_peak_pending_ops: u64,
+    /// The admission window a stream-backed run was configured with.
+    pub stream_window_ops: u64,
 }
 
 impl RunStats {
@@ -431,6 +440,14 @@ impl RunStats {
                 ),
             ),
             ("faults", self.faults.to_json()),
+            (
+                "stream",
+                Json::from_pairs(vec![
+                    ("rows", Json::from(self.stream_rows)),
+                    ("peak_pending_ops", Json::from(self.stream_peak_pending_ops)),
+                    ("window_ops", Json::from(self.stream_window_ops)),
+                ]),
+            ),
         ])
     }
 

@@ -92,6 +92,18 @@ fn assert_stats_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
     // per-tier/per-job fault splits must ride the identical event stream
     // (all-zero on fault-free runs).
     assert_eq!(fused.faults, per_hop.faults, "{label}: fault books");
+    // Streaming-admission books (all-zero on schedule-backed runs): row
+    // admission happens inside serially-dispatched handlers, so the
+    // peak-occupancy watermark must agree bit for bit too.
+    assert_eq!(fused.stream_rows, per_hop.stream_rows, "{label}: stream rows");
+    assert_eq!(
+        fused.stream_peak_pending_ops, per_hop.stream_peak_pending_ops,
+        "{label}: stream peak pending ops"
+    );
+    assert_eq!(
+        fused.stream_window_ops, per_hop.stream_window_ops,
+        "{label}: stream window"
+    );
 }
 
 /// Fused vs per-hop: identical stats, but per-hop must cost extra events
@@ -335,6 +347,57 @@ fn multi_tenant_workloads_are_bit_identical() {
         .unwrap()
         .run_to_completion();
     assert_bit_identical_with_events(&fused, &sharded, "multi-tenant sharded:4");
+}
+
+#[test]
+fn streaming_trace_replay_is_bit_identical() {
+    // The streaming lazy-admission path (`SessionBuilder::stream`): rows
+    // are pulled and admitted inside serially-dispatched handler code, so
+    // every engine must replay the identical admission order — and with a
+    // fault plan layered on top, the identical retry stream too. A fresh
+    // generator is built per engine (streams are consumed by the run).
+    use ratsim::collective::SyntheticTraceGen;
+    use ratsim::config::{FaultSpec, TraceSpec};
+    let mut spec = TraceSpec::serving_default();
+    spec.rows = 120;
+    spec.jobs = 10;
+    spec.gpus = 8;
+    spec.group = 4;
+    spec.mean_bytes = 64 * 1024;
+    let run = |cfg: &PodConfig, policy: EnginePolicy, label: &str| -> RunStats {
+        SessionBuilder::new(cfg)
+            .stream(SyntheticTraceGen::new(&spec).unwrap())
+            .stream_window(96)
+            .engine(policy)
+            .build()
+            .unwrap_or_else(|e| panic!("{label}: {policy:?} build failed: {e:#}"))
+            .run_to_completion()
+    };
+    let cfg = base(8, MIB);
+    let fused = run(&cfg, EnginePolicy::Fused, "stream");
+    assert_eq!(fused.stream_rows, 120, "stream: every generated row replays");
+    let per_hop = run(&cfg, EnginePolicy::PerHop, "stream");
+    assert_bit_identical(&fused, &per_hop, "stream");
+    for threads in [1u32, 2, 4] {
+        let sharded = run(&cfg, EnginePolicy::Sharded { threads }, "stream");
+        assert_bit_identical_with_events(&fused, &sharded, &format!("stream sharded:{threads}"));
+    }
+
+    // One flap-faulted streaming point: capped-backoff retries riding the
+    // bounded admission window.
+    let mut flap = base(8, MIB);
+    flap.faults = Some(FaultSpec::parse("flap:mttf=40us,mttr=10us").unwrap());
+    let f_fused = run(&flap, EnginePolicy::Fused, "stream-flap");
+    let f_per_hop = run(&flap, EnginePolicy::PerHop, "stream-flap");
+    assert_bit_identical(&f_fused, &f_per_hop, "stream-flap");
+    for threads in [1u32, 4] {
+        let f_sharded = run(&flap, EnginePolicy::Sharded { threads }, "stream-flap");
+        assert_bit_identical_with_events(
+            &f_fused,
+            &f_sharded,
+            &format!("stream-flap sharded:{threads}"),
+        );
+    }
 }
 
 #[test]

@@ -1,0 +1,200 @@
+//! Trace subsystem integration tests: the `TraceReader` error paths
+//! (every malformed input is a labeled `source:line:` error, never a
+//! panic), the `SyntheticTraceGen` export → import round-trip, and the
+//! checked-in sample trace — it must parse, carry what the WORKLOADS.md
+//! catalog promises (≥ 100 jobs, ≥ 100k requests under the default
+//! Table-1 sizing), and replay to completion with peak pending-op
+//! occupancy bounded by the admission window.
+
+use ratsim::collective::{algo, SyntheticTraceGen, TraceReader, TraceRow, WorkloadStream};
+use ratsim::config::presets::{paper_baseline, quick_test};
+use ratsim::config::{RequestSizing, TraceSpec};
+use ratsim::pod::SessionBuilder;
+use ratsim::util::proptest::{check, OneOf, PairOf, RangeU64};
+use ratsim::util::units::MIB;
+
+const SAMPLE: &str = "examples/traces/sample_serving.csv";
+
+fn drain(mut s: impl WorkloadStream) -> anyhow::Result<Vec<TraceRow>> {
+    let mut rows = Vec::new();
+    while let Some(r) = s.next_row()? {
+        rows.push(r);
+    }
+    Ok(rows)
+}
+
+/// Pull rows until the expected error surfaces; panics if the text
+/// parses cleanly.
+fn parse_error(text: &str) -> String {
+    let mut rdr = TraceReader::from_string("t", text);
+    loop {
+        match rdr.next_row() {
+            Ok(Some(_)) => {}
+            Ok(None) => panic!("`{text}` parsed cleanly; expected a labeled error"),
+            Err(e) => return format!("{e:#}"),
+        }
+    }
+}
+
+#[test]
+fn malformed_rows_are_labeled_errors_with_line_numbers() {
+    // (input, line the error must name, substring the message must carry)
+    let cases: &[(&str, u64, &str)] = &[
+        ("0,job-a", 1, ""),                                       // missing fields
+        ("0,j,bogus-coll,,8192,0+1", 1, ""),                      // unknown collective
+        ("0,j,a2a,bogus-algo,8192,0+1", 1, ""),                   // unknown algorithm
+        ("0,j,a2a,,notanum,0+1", 1, ""),                          // non-numeric bytes
+        ("0,j,a2a,,0,0+1", 1, ""),                                // zero-byte collective
+        ("0,j,a2a,,8192,7", 1, ">= 2"),                           // single rank
+        ("0,j,a2a,,8192,3+3", 1, "duplicate"),                    // duplicate rank
+        ("0,j,a2a,,8192,0+70000", 1, "65535"),                    // id over the pod limit
+        ("0,j,a2a,,8192,5-2", 1, "descending"),                   // descending range
+        ("2,j,a2a,,8192,0+1\n1,j,a2a,,8192,0+1", 2, ""),          // out-of-order arrivals
+        ("0,j,a2a,,8192,0+1\n1,j,a2a,,81", 2, ""),                // truncated CSV row
+        ("{\"t_us\":0,\"job\":", 1, ""),                          // truncated JSONL row
+        ("{\"t_us\":0,\"job\":\"j\",\"coll\":\"a2a\",\"bytes\":8192}", 1, "gpus"),
+    ];
+    for &(text, line, needle) in cases {
+        let msg = parse_error(text);
+        let label = format!("t:{line}:");
+        assert!(msg.contains(&label), "`{text}` must be labeled `{label}`, got: {msg}");
+        if !needle.is_empty() {
+            assert!(msg.contains(needle), "`{text}` error should mention `{needle}`: {msg}");
+        }
+    }
+}
+
+#[test]
+fn truncated_trace_files_report_the_offending_line() {
+    // Same contract through the file-backed source: a trace cut off
+    // mid-row errors with the line number, it doesn't panic or silently
+    // stop early.
+    let path = std::env::temp_dir().join("ratsim-truncated-trace.csv");
+    std::fs::write(&path, "t_us,job,coll,algo,bytes,gpus\n0,j,a2a,,8192,0+1\n1,j,a2a").unwrap();
+    let mut rdr = TraceReader::open(&path).unwrap();
+    let err = loop {
+        match rdr.next_row() {
+            Ok(Some(_)) => {}
+            Ok(None) => panic!("truncated file parsed cleanly"),
+            Err(e) => break format!("{e:#}"),
+        }
+    };
+    // Line 3: header is line 1, the good row line 2.
+    assert!(err.contains(":3:"), "error must name line 3: {err}");
+    std::fs::remove_file(&path).ok();
+}
+
+#[test]
+fn synthetic_export_import_round_trips_bit_identically() {
+    // Arrivals are quantized to whole microseconds in the wire format, so
+    // export → parse must reproduce the generator's rows *exactly* —
+    // arrival, job, kind, algo, bytes, and group — in both encodings.
+    let strat = PairOf(
+        PairOf(RangeU64 { lo: 0, hi: u64::MAX / 2 }, RangeU64 { lo: 1, hi: 40 }),
+        PairOf(RangeU64 { lo: 0, hi: 900 }, OneOf(vec!["csv", "jsonl"])),
+    );
+    check("trace-roundtrip", &strat, 40, |&((seed, rows), (amp_ppt, fmt))| {
+        let mut spec = TraceSpec::serving_default();
+        spec.seed = seed;
+        spec.rows = rows;
+        spec.jobs = 6;
+        spec.gpus = 8;
+        spec.group = 4;
+        spec.mean_bytes = 64 * 1024;
+        spec.diurnal_amp = amp_ppt as f64 / 1000.0;
+        let mut gen = SyntheticTraceGen::new(&spec).unwrap();
+        let text = if fmt == "csv" {
+            gen.export_csv().unwrap()
+        } else {
+            gen.export_jsonl().unwrap()
+        };
+        let original = drain(gen).unwrap();
+        let parsed = drain(TraceReader::from_string("rt", text)).unwrap();
+        original == parsed
+    });
+}
+
+#[test]
+fn sample_trace_parses_and_meets_the_catalog_claims() {
+    let rows = drain(TraceReader::open(SAMPLE).unwrap()).unwrap();
+    assert_eq!(rows.len(), 1200, "sample trace row count");
+    let jobs: std::collections::BTreeSet<&str> = rows.iter().map(|r| r.job.as_str()).collect();
+    assert!(jobs.len() >= 100, "catalog promises >= 100 jobs, got {}", jobs.len());
+    assert!(
+        rows.iter().all(|r| r.group.iter().all(|&g| g < 16)),
+        "sample trace targets a 16-GPU pod"
+    );
+    // Lower every row and count requests under the default Table-1 auto
+    // sizing — the catalog's >= 100k-request claim, checked analytically
+    // (no simulation needed).
+    let scheds: Vec<_> = rows
+        .iter()
+        .map(|r| algo::lower(r.kind, r.algo, r.group.len() as u32, r.bytes).unwrap())
+        .collect();
+    let total: u64 = scheds.iter().map(|s| s.total_bytes()).sum();
+    let rb = paper_baseline(16, MIB).request_bytes_for(total);
+    let requests: u64 =
+        scheds.iter().flat_map(|s| &s.ops).map(|op| op.bytes.div_ceil(rb)).sum();
+    assert!(requests >= 100_000, "catalog promises >= 100k requests, got {requests}");
+}
+
+#[test]
+fn sample_trace_replay_completes_within_the_admission_window() {
+    let mut cfg = quick_test(16, MIB);
+    // Coarse fixed sizing keeps the full-trace replay test-budget sized
+    // (~1 request per lowered op) without changing the admission path.
+    cfg.workload.request_sizing = RequestSizing::Fixed(32 * 1024);
+    let stats = SessionBuilder::new(&cfg)
+        .stream(TraceReader::open(SAMPLE).unwrap())
+        .stream_window(512)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_eq!(stats.stream_rows, 1200, "every sample row must replay");
+    assert_eq!(stats.stream_window_ops, 512);
+    // The largest sample row (8-GPU AllReduce ring, 112 ops) fits inside
+    // the window, so peak occupancy is bounded by the window itself.
+    assert!(
+        stats.stream_peak_pending_ops <= 512,
+        "peak pending ops {} exceeded the admission window",
+        stats.stream_peak_pending_ops
+    );
+    assert!(stats.completion > 0);
+    assert_eq!(stats.requests, stats.classes.total(), "request conservation");
+    assert!(stats.jobs.len() >= 100, "per-job books for every sample job");
+}
+
+#[test]
+fn replaying_an_exported_trace_matches_the_generator_run() {
+    // The exported file is a faithful stand-in for the generator: both
+    // sources must drive bit-identical runs.
+    let mut spec = TraceSpec::serving_default();
+    spec.rows = 60;
+    spec.jobs = 8;
+    spec.gpus = 8;
+    spec.group = 4;
+    spec.mean_bytes = 64 * 1024;
+    let cfg = quick_test(8, MIB);
+    let mut gen = SyntheticTraceGen::new(&spec).unwrap();
+    let text = gen.export_jsonl().unwrap();
+    let from_gen = SessionBuilder::new(&cfg)
+        .stream(gen)
+        .stream_window(128)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    let from_file = SessionBuilder::new(&cfg)
+        .stream(TraceReader::from_string("export", text))
+        .stream_window(128)
+        .build()
+        .unwrap()
+        .run_to_completion();
+    assert_eq!(from_gen.completion, from_file.completion, "completion");
+    assert_eq!(from_gen.events, from_file.events, "event count");
+    assert_eq!(from_gen.classes, from_file.classes, "translation classes");
+    assert_eq!(from_gen.stream_rows, from_file.stream_rows, "rows replayed");
+    assert_eq!(
+        from_gen.stream_peak_pending_ops, from_file.stream_peak_pending_ops,
+        "peak occupancy"
+    );
+}

@@ -1,0 +1,92 @@
+#!/usr/bin/env python3
+"""Regenerate examples/traces/sample_serving.csv.
+
+Deterministic (fixed seed, no float-ordering hazards beyond the stdlib
+Mersenne Twister, which is stable across CPython versions): a ~50 ms
+serving burst on a 16-GPU pod — 128 jobs with Zipf popularity, groups of
+4 or 8 contiguous ranks, log-normal collective sizes quantized to 4 KiB,
+diurnal-modulated exponential inter-arrivals. The format is the ratsim
+trace grammar (see WORKLOADS.md "Trace catalog"); `ratsim replay
+--trace examples/traces/sample_serving.csv` streams it.
+
+The first 128 rows round-robin every job once so the checked-in trace
+always carries >= 100 distinct jobs regardless of the Zipf tail.
+"""
+
+import math
+import random
+
+SEED = 0x5E12_71CE
+ROWS = 1200
+JOBS = 128
+GPUS = 16
+ZIPF = 1.1
+MEAN_GAP_US = 40.0
+PERIOD_US = 12_500.0
+AMP = 0.6
+QUANTUM = 4096
+OUT = "examples/traces/sample_serving.csv"
+
+rng = random.Random(SEED)
+
+# Zipf CDF over job ranks.
+weights = [1.0 / (j + 1) ** ZIPF for j in range(JOBS)]
+total_w = sum(weights)
+cdf = []
+acc = 0.0
+for w in weights:
+    acc += w / total_w
+    cdf.append(acc)
+
+
+def pick_job(i):
+    if i < JOBS:
+        return i  # round-robin warm-up: every job appears at least once
+    u = rng.random()
+    for j, c in enumerate(cdf):
+        if u <= c:
+            return j
+    return JOBS - 1
+
+
+def pick_size():
+    # Log-normal around 32 KiB, quantized up to 4 KiB, clamped to 1 MiB.
+    b = math.exp(rng.gauss(math.log(32 * 1024), 0.6))
+    q = max(QUANTUM, math.ceil(b / QUANTUM) * QUANTUM)
+    return min(q, 1 << 20)
+
+
+def pick_group():
+    g = 8 if rng.random() < 0.5 else 4
+    start = rng.randrange(GPUS - g + 1)
+    return f"{start}-{start + g - 1}", g
+
+
+def pick_coll():
+    u = rng.random()
+    if u < 0.70:
+        return "alltoall", "direct"
+    if u < 0.85:
+        return "allgather", "ring"
+    return "allreduce", "ring"
+
+
+rows = []
+t_us = 0.0
+for i in range(ROWS):
+    # Diurnal-modulated exponential gap: rate 1 + AMP*sin(2*pi*t/period).
+    rate = 1.0 + AMP * math.sin(2.0 * math.pi * t_us / PERIOD_US)
+    t_us += rng.expovariate(1.0) * MEAN_GAP_US / max(rate, 1e-9)
+    job = pick_job(i)
+    coll, algo = pick_coll()
+    size = pick_size()
+    group, _ = pick_group()
+    rows.append(f"{int(t_us)},job-{job:03d},{coll},{algo},{size},{group}")
+
+with open(OUT, "w") as f:
+    f.write("# sample serving trace — regenerate with scripts/gen_sample_trace.py\n")
+    f.write(f"# {ROWS} rows, {JOBS} jobs, {GPUS}-GPU pod, ~{int(t_us/1000)} ms span\n")
+    f.write("t_us,job,coll,algo,bytes,gpus\n")
+    f.write("\n".join(rows) + "\n")
+
+print(f"wrote {OUT}: {ROWS} rows, span {int(t_us)} us")
