@@ -3,7 +3,8 @@
 //! events/second on the standard perf workloads, the fused-vs-per-hop
 //! engine comparison used for the optimization log in EXPERIMENTS.md
 //! §Perf, and the sharded-vs-fused wall-clock comparison at 1024 GPUs
-//! (the parallel in-run engine's speedup curve).
+//! (the parallel in-run engine's speedup curve, serial dispatch vs
+//! conflict-free parallel handler dispatch).
 //!
 //! Env knobs:
 //! * `RATSIM_BENCH_QUICK=1` — trimmed iterations/request budgets (CI smoke).
@@ -325,27 +326,58 @@ fn main() {
         records.push(j);
         let thread_axis: &[u32] = if quick() { &[4] } else { &[2, 4, 8] };
         for &threads in thread_axis {
-            let mut sc = pc.clone();
-            sc.engine = EnginePolicy::Sharded { threads };
+            // Serial dispatch first: the parallel pending-set drain alone
+            // (`sharded:N:serial`) — the denominator for the parallel-
+            // dispatch speedup below.
+            let mut serial_cfg = pc.clone();
+            serial_cfg.engine = EnginePolicy::Sharded { threads, parallel_dispatch: false };
             // Cheap in-bench sanity (the full grid is pinned in
             // rust/tests/engine_diff.rs): same completion, same stream.
-            let s1 = run_pod(&sc);
+            let s1 = run_pod(&serial_cfg);
             assert_eq!(s1.completion, s0.completion, "sharded diverged from fused");
             assert_eq!(s1.events, events, "sharded event count diverged");
             let name = format!("pod_1024gpu_1MiB_sharded{threads}");
+            let serial = bench_items(&name, &cfg, events, || {
+                run_pod(&serial_cfg);
+            });
+            print_result(&serial);
+            let serial_speedup = fused.mean.as_secs_f64() / serial.mean.as_secs_f64();
+            println!("  -> {serial_speedup:.2}x fused wall at {threads} threads (serial dispatch)");
+            let mut j = serial.to_json();
+            j.set("events", Json::from(events));
+            j.set("requests", Json::from(requests));
+            j.set("events_per_sec", Json::from(events as f64 / serial.mean.as_secs_f64()));
+            j.set("requests_per_sec", Json::from(requests as f64 / serial.mean.as_secs_f64()));
+            j.set("threads", Json::from(threads as u64));
+            j.set("speedup_vs_fused", Json::from(serial_speedup));
+            records.push(j);
+
+            // Parallel dispatch (the default `sharded:N`): conflict-free
+            // handler batches execute on worker threads too.
+            let mut pd_cfg = pc.clone();
+            pd_cfg.engine = EnginePolicy::sharded(threads);
+            let s2 = run_pod(&pd_cfg);
+            assert_eq!(s2.completion, s0.completion, "parallel dispatch diverged from fused");
+            assert_eq!(s2.events, events, "parallel dispatch event count diverged");
+            let name = format!("pod_1024gpu_1MiB_sharded{threads}_pdisp");
             let r = bench_items(&name, &cfg, events, || {
-                run_pod(&sc);
+                run_pod(&pd_cfg);
             });
             print_result(&r);
-            let speedup = fused.mean.as_secs_f64() / r.mean.as_secs_f64();
-            println!("  -> {speedup:.2}x fused wall at {threads} threads");
+            let speedup_fused = fused.mean.as_secs_f64() / r.mean.as_secs_f64();
+            let speedup_serial = serial.mean.as_secs_f64() / r.mean.as_secs_f64();
+            println!(
+                "  -> {speedup_fused:.2}x fused / {speedup_serial:.2}x serial-dispatch wall \
+                 at {threads} threads"
+            );
             let mut j = r.to_json();
             j.set("events", Json::from(events));
             j.set("requests", Json::from(requests));
             j.set("events_per_sec", Json::from(events as f64 / r.mean.as_secs_f64()));
             j.set("requests_per_sec", Json::from(requests as f64 / r.mean.as_secs_f64()));
             j.set("threads", Json::from(threads as u64));
-            j.set("speedup_vs_fused", Json::from(speedup));
+            j.set("speedup_vs_fused", Json::from(speedup_fused));
+            j.set("speedup_vs_serial_dispatch", Json::from(speedup_serial));
             records.push(j);
         }
     }

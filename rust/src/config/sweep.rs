@@ -406,7 +406,7 @@ mod tests {
         // The sharded axis validates too, including the Sharded engine.
         for &g in &sharded_gpu_counts() {
             let mut c = paper_baseline(g, MIB);
-            c.engine = crate::config::EnginePolicy::Sharded { threads: 4 };
+            c.engine = crate::config::EnginePolicy::sharded(4);
             c.validate().unwrap();
         }
     }

@@ -136,7 +136,10 @@ impl CollectiveAlgo {
 /// * `Sharded` — fused scheduling over a pending set sharded across
 ///   `threads` timing wheels, drained in parallel conservative windows
 ///   and merged back into exact global `(time, seq)` dispatch order
-///   (`sim::sharded`). Bit-identical `RunStats` to `Fused` — including
+///   (`sim::sharded`). With `parallel_dispatch` (the default), conflict-
+///   free batches of shard-local handlers additionally *execute* on
+///   worker threads, with side effects replayed serially in that same
+///   order. Bit-identical `RunStats` to `Fused` either way — including
 ///   the processed-event count — at a fraction of the wall-clock on
 ///   1024-GPU-class pods.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
@@ -152,6 +155,10 @@ pub enum EnginePolicy {
     Sharded {
         /// Engine shards = drain worker threads (≥ 1).
         threads: u32,
+        /// Execute conflict-free shard-local handler runs on the worker
+        /// threads too (on by default; `sharded:N:serial` or
+        /// `--parallel-dispatch off` keeps handlers on the main thread).
+        parallel_dispatch: bool,
     },
 }
 
@@ -166,32 +173,51 @@ impl EnginePolicy {
         }
     }
 
+    /// The sharded policy with `threads` shards and parallel dispatch on
+    /// — what `sharded:N` specs and programmatic callers mean by default.
+    pub fn sharded(threads: u32) -> Self {
+        EnginePolicy::Sharded { threads, parallel_dispatch: true }
+    }
+
     /// Full spec string round-tripped through config JSON and accepted by
     /// the CLI `--engine` flag ([`EnginePolicy::parse`] is its inverse):
-    /// `fused` | `per-hop` | `sharded:N`.
+    /// `fused` | `per-hop` | `sharded:N` | `sharded:N:serial`.
     pub fn spec(&self) -> String {
         match self {
-            EnginePolicy::Sharded { threads } => format!("sharded:{threads}"),
+            EnginePolicy::Sharded { threads, parallel_dispatch: true } => {
+                format!("sharded:{threads}")
+            }
+            EnginePolicy::Sharded { threads, parallel_dispatch: false } => {
+                format!("sharded:{threads}:serial")
+            }
             other => other.name().to_string(),
         }
     }
 
-    /// Parse an engine-policy spec (`fused` | `per-hop` | `sharded[:N]`;
-    /// a bare `sharded` takes [`EnginePolicy::default_threads`]).
+    /// Parse an engine-policy spec (`fused` | `per-hop` |
+    /// `sharded[:N[:serial]]`; a bare `sharded` takes
+    /// [`EnginePolicy::default_threads`], and the `:serial` suffix turns
+    /// parallel dispatch off).
     pub fn parse(s: &str) -> Result<Self> {
-        if let Some(n) = s.strip_prefix("sharded:") {
+        if let Some(rest) = s.strip_prefix("sharded:") {
+            let (n, parallel_dispatch) = match rest.strip_suffix(":serial") {
+                Some(n) => (n, false),
+                None => (rest, true),
+            };
             let threads: u32 =
                 n.parse().map_err(|_| anyhow::anyhow!("bad thread count in `{s}`"))?;
             if threads == 0 {
                 bail!("sharded engine needs >= 1 thread (got `{s}`)");
             }
-            return Ok(EnginePolicy::Sharded { threads });
+            return Ok(EnginePolicy::Sharded { threads, parallel_dispatch });
         }
         Ok(match s {
             "fused" => EnginePolicy::Fused,
             "per-hop" | "perhop" => EnginePolicy::PerHop,
-            "sharded" => EnginePolicy::Sharded { threads: Self::default_threads() },
-            other => bail!("unknown engine policy `{other}` (fused|per-hop|sharded[:N])"),
+            "sharded" => EnginePolicy::sharded(Self::default_threads()),
+            other => {
+                bail!("unknown engine policy `{other}` (fused|per-hop|sharded[:N[:serial]])")
+            }
         })
     }
 
@@ -1092,7 +1118,7 @@ impl PodConfig {
                 bail!("trace_source_gpu {g} out of range (gpus={})", self.gpus);
             }
         }
-        if let EnginePolicy::Sharded { threads } = self.engine {
+        if let EnginePolicy::Sharded { threads, .. } = self.engine {
             if threads == 0 {
                 bail!("sharded engine needs >= 1 thread");
             }
@@ -1449,8 +1475,9 @@ mod tests {
         for policy in [
             EnginePolicy::Fused,
             EnginePolicy::PerHop,
-            EnginePolicy::Sharded { threads: 1 },
-            EnginePolicy::Sharded { threads: 4 },
+            EnginePolicy::sharded(1),
+            EnginePolicy::sharded(4),
+            EnginePolicy::Sharded { threads: 4, parallel_dispatch: false },
         ] {
             let mut cfg = paper_baseline(16, MIB);
             cfg.engine = policy;
@@ -1500,18 +1527,26 @@ mod tests {
 
     #[test]
     fn engine_policy_spec_parsing() {
+        // `sharded:N` means parallel dispatch on; `:serial` turns it off.
+        assert_eq!(EnginePolicy::parse("sharded:3").unwrap(), EnginePolicy::sharded(3));
         assert_eq!(
-            EnginePolicy::parse("sharded:3").unwrap(),
-            EnginePolicy::Sharded { threads: 3 }
+            EnginePolicy::parse("sharded:3:serial").unwrap(),
+            EnginePolicy::Sharded { threads: 3, parallel_dispatch: false }
         );
-        assert_eq!(EnginePolicy::Sharded { threads: 3 }.spec(), "sharded:3");
-        assert_eq!(EnginePolicy::Sharded { threads: 3 }.name(), "sharded");
+        assert_eq!(EnginePolicy::sharded(3).spec(), "sharded:3");
+        assert_eq!(
+            EnginePolicy::Sharded { threads: 3, parallel_dispatch: false }.spec(),
+            "sharded:3:serial"
+        );
+        assert_eq!(EnginePolicy::sharded(3).name(), "sharded");
         assert!(EnginePolicy::parse("sharded:0").is_err());
+        assert!(EnginePolicy::parse("sharded:0:serial").is_err());
         assert!(EnginePolicy::parse("sharded:x").is_err());
+        assert!(EnginePolicy::parse("sharded:3:bogus").is_err());
         // A zero thread count is structurally invalid even when built
         // programmatically, not just via parse.
         let mut cfg = paper_baseline(16, MIB);
-        cfg.engine = EnginePolicy::Sharded { threads: 0 };
+        cfg.engine = EnginePolicy::Sharded { threads: 0, parallel_dispatch: true };
         assert!(cfg.validate().is_err());
     }
 

@@ -805,9 +805,11 @@ pub fn pod_scale(opts: &FigOpts) -> Result<Table> {
 /// `EnginePolicy::Sharded` wall clock side by side. All-pairs All-to-All
 /// floors at `gpus·(gpus-1)` requests, so a single 1024-GPU point
 /// carries ~1M requests — the regime the sharded engine exists for.
-/// Every sharded run is checked bit-identical to its fused twin
-/// (completion, event count, request classes) before its wall clock is
-/// reported, so the speedup column never trades determinism for speed.
+/// Every sharded run executes with parallel dispatch enabled
+/// (`EnginePolicy::sharded`) and is checked bit-identical to its fused
+/// twin (completion, event count, request classes) before its wall
+/// clock is reported, so the speedup column never trades determinism
+/// for speed.
 /// Quick mode keeps the 1024-GPU point only (the CI-budget acceptance
 /// point); full mode walks `sharded_gpu_counts()`. Thread count comes
 /// from `EnginePolicy::default_threads()` (the `RATSIM_THREADS` env, 4
@@ -828,7 +830,7 @@ pub fn pod_scale_sharded(opts: &FigOpts) -> Result<Table> {
             RequestSizing::Auto { target_total_requests: 1_000_000 };
         let fused = SessionBuilder::new(&cfg).build()?.run_to_completion();
         let mut scfg = cfg.clone();
-        scfg.engine = EnginePolicy::Sharded { threads };
+        scfg.engine = EnginePolicy::sharded(threads);
         let sharded = SessionBuilder::new(&scfg).build()?.run_to_completion();
         anyhow::ensure!(
             sharded.completion == fused.completion

@@ -71,7 +71,8 @@ fn print_help() {
          \x20 run       simulate one collective (--gpus, --size, --collective, --algo, --ideal,\n\
          \x20           --topology rail-clos|leaf-spine|multi-pod,\n\
          \x20           --prefetch-policy sw-guided|fused,\n\
-         \x20           --engine fused|per-hop|sharded[:N], --threads N,\n\
+         \x20           --engine fused|per-hop|sharded[:N[:serial]], --threads N,\n\
+         \x20           --parallel-dispatch on|off,\n\
          \x20           --faults flap:...|degrade:...|walker-stall[:...], ...)\n\
          \x20 workload  simulate a multi-tenant mix (--mix uniform|decode-prefill|moe,\n\
          \x20           --jobs, --arrival sync|staggered|poisson, --spec spec.json,\n\
@@ -108,8 +109,9 @@ fn common_run_spec() -> Vec<ArgSpec> {
         ArgSpec { name: "prefetch-policy", help: "translation hiding: off | sw-guided | fused", is_flag: false, default: None },
         ArgSpec { name: "prefetch-lead-ns", help: "sw-guided hint lead time, ns (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
         ArgSpec { name: "prefetch-rate", help: "sw-guided hint walks in flight per GPU (default: PrefetchPolicy::sw_guided_default)", is_flag: false, default: None },
-        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop (marker event per hop; differential testing) | sharded[:threads] (parallel in-run engine, bit-identical to fused)", is_flag: false, default: None },
+        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop (marker event per hop; differential testing) | sharded[:threads[:serial]] (parallel in-run engine, bit-identical to fused)", is_flag: false, default: None },
         ArgSpec { name: "threads", help: "worker threads for the sharded engine (shorthand for --engine sharded:N)", is_flag: false, default: None },
+        ArgSpec { name: "parallel-dispatch", help: "sharded engine only: run conflict-free handler batches on worker threads (on, the default) or keep dispatch serial (off)", is_flag: false, default: None },
         ArgSpec { name: "trace-gpu", help: "record per-request RAT trace for this source GPU", is_flag: false, default: None },
         ArgSpec { name: "faults", help: "inject faults: flap:mttf=50us,mttr=10us[,reroute] | degrade:tier=switch,frac=0.1,slow=500ns | walker-stall:mttf=20us,mttr=5us,stall=2us (see DESIGN.md)", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
@@ -191,7 +193,37 @@ fn apply_overrides(a: &Args, cfg: &mut PodConfig) -> Result<()> {
             (1..=65_536).contains(&t),
             "--threads must be between 1 and 65536, got {t}"
         );
-        cfg.engine = EnginePolicy::Sharded { threads: t as u32 };
+        // `--threads` is shorthand for the sharded engine; combined with
+        // an explicit non-sharded `--engine` it would silently lose, so
+        // reject the contradiction instead.
+        if let Some(e) = a.get("engine") {
+            anyhow::ensure!(
+                matches!(cfg.engine, EnginePolicy::Sharded { .. }),
+                "--threads {t} contradicts --engine {e}: thread counts only apply to the \
+                 sharded engine (pass --engine sharded:{t}, or drop --engine)"
+            );
+        }
+        cfg.engine = match cfg.engine {
+            EnginePolicy::Sharded { parallel_dispatch, .. } => {
+                EnginePolicy::Sharded { threads: t as u32, parallel_dispatch }
+            }
+            _ => EnginePolicy::sharded(t as u32),
+        };
+    }
+    if let Some(v) = a.get("parallel-dispatch") {
+        let on = match v {
+            "on" | "true" => true,
+            "off" | "false" => false,
+            other => anyhow::bail!("--parallel-dispatch expects on|off, got `{other}`"),
+        };
+        match &mut cfg.engine {
+            EnginePolicy::Sharded { parallel_dispatch, .. } => *parallel_dispatch = on,
+            other => anyhow::bail!(
+                "--parallel-dispatch only applies to the sharded engine, not `{}` \
+                 (pass --engine sharded[:N] or --threads N)",
+                other.spec()
+            ),
+        }
     }
     if let Some(g) = a.get_u64("trace-gpu")? {
         cfg.workload.trace_source_gpu = Some(g as u32);
@@ -376,24 +408,30 @@ fn cmd_workload(argv: &[String]) -> Result<()> {
     Ok(())
 }
 
-/// Per-job latency table shared by `workload` and `replay`.
+/// Per-job latency table shared by `workload` and `replay`. Stream-backed
+/// runs admit rows through the bounded window, so their jobs carry
+/// open-loop admission books — two extra columns report how many rows
+/// each job pushed through and the mean arrival→admission wait.
 fn print_job_table(stats: &RunStats, title: &str) {
-    let mut table = ratsim::harness::Table::new(
-        title,
-        &[
-            "job",
-            "arrival_us",
-            "completion_us",
-            "latency_us",
-            "requests",
-            "rtt_p50_ns",
-            "rtt_p95_ns",
-            "rtt_p99_ns",
-            "mean_rat_ns",
-        ],
-    );
+    let streaming = stats.jobs.iter().any(|j| j.rows_admitted > 0);
+    let mut header = vec![
+        "job",
+        "arrival_us",
+        "completion_us",
+        "latency_us",
+        "requests",
+        "rtt_p50_ns",
+        "rtt_p95_ns",
+        "rtt_p99_ns",
+        "mean_rat_ns",
+    ];
+    if streaming {
+        header.push("rows");
+        header.push("adm_wait_ns");
+    }
+    let mut table = ratsim::harness::Table::new(title, &header);
     for j in &stats.jobs {
-        table.push(vec![
+        let mut row = vec![
             j.name.clone(),
             format!("{:.1}", ratsim::util::units::to_us(j.arrival)),
             format!("{:.1}", ratsim::util::units::to_us(j.completion)),
@@ -403,7 +441,12 @@ fn print_job_table(stats: &RunStats, title: &str) {
             format!("{:.0}", j.rtt_p95_ns()),
             format!("{:.0}", j.rtt_p99_ns()),
             format!("{:.1}", ratsim::util::units::to_ns(j.rat_hist.mean() as u64)),
-        ]);
+        ];
+        if streaming {
+            row.push(j.rows_admitted.to_string());
+            row.push(format!("{:.0}", j.mean_admission_wait_ns()));
+        }
+        table.push(row);
     }
     table.print();
 }
@@ -418,8 +461,9 @@ fn cmd_replay(argv: &[String]) -> Result<()> {
         ArgSpec { name: "topology", help: "fabric: rail-clos | leaf-spine[:oversub] | multi-pod[:pods]", is_flag: false, default: None },
         ArgSpec { name: "requests", help: "auto request-sizing target (total requests)", is_flag: false, default: None },
         ArgSpec { name: "request-bytes", help: "fixed request size in bytes", is_flag: false, default: None },
-        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop | sharded[:threads]", is_flag: false, default: None },
+        ArgSpec { name: "engine", help: "event engine: fused (default) | per-hop | sharded[:threads[:serial]]", is_flag: false, default: None },
         ArgSpec { name: "threads", help: "worker threads for the sharded engine (shorthand for --engine sharded:N)", is_flag: false, default: None },
+        ArgSpec { name: "parallel-dispatch", help: "sharded engine only: run conflict-free handler batches on worker threads (on, the default) or keep dispatch serial (off)", is_flag: false, default: None },
         ArgSpec { name: "seed", help: "simulation seed", is_flag: false, default: None },
         ArgSpec { name: "faults", help: "inject faults (same grammar as `run --faults`)", is_flag: false, default: None },
         ArgSpec { name: "json", help: "print machine-readable stats JSON", is_flag: true, default: None },
@@ -762,6 +806,30 @@ mod tests {
         // degrade with an unknown tier parses but must fail validation
         // before the run starts.
         assert!(dispatch(&argv(&["run", "--faults", "degrade:tier=nonexistent"])).is_err());
+    }
+
+    #[test]
+    fn contradictory_engine_thread_flags_are_rejected() {
+        // `--threads` is sharded-engine shorthand; pairing it with an
+        // explicit non-sharded engine must error before any run.
+        for engine in ["fused", "per-hop"] {
+            let err =
+                dispatch(&argv(&["run", "--engine", engine, "--threads", "4"])).unwrap_err();
+            let msg = format!("{err:#}");
+            assert!(msg.contains("--threads") && msg.contains(engine), "{engine}: {msg}");
+        }
+        // The sharded engine composes with --threads (the count wins) —
+        // but a zero/overflow count is still rejected up front.
+        assert!(dispatch(&argv(&["run", "--threads", "0"])).is_err());
+        assert!(dispatch(&argv(&["run", "--threads", "70000"])).is_err());
+        // --parallel-dispatch needs the sharded engine and an on/off value.
+        let err = dispatch(&argv(&["run", "--parallel-dispatch", "off"])).unwrap_err();
+        assert!(format!("{err:#}").contains("sharded"), "{err:#}");
+        let err = dispatch(&argv(&[
+            "run", "--threads", "2", "--parallel-dispatch", "maybe",
+        ]))
+        .unwrap_err();
+        assert!(format!("{err:#}").contains("on|off"), "{err:#}");
     }
 
     #[test]

@@ -165,6 +165,16 @@ pub enum SessionEvent {
         /// The up rail the flow failed over to.
         to_rail: u16,
     },
+    /// A streaming-workload trace row was admitted (stream-backed runs
+    /// only): `queued` is the open-loop admission delay — how long the
+    /// row waited between its trace arrival and the admission instant
+    /// under the pending-op window (0 when admitted on arrival).
+    RowAdmitted {
+        /// Tenant job of the admitted row.
+        job: u16,
+        /// Admission delay (admission instant − trace arrival), ps.
+        queued: Time,
+    },
 }
 
 /// A pluggable probe over one simulation run. All hooks have no-op
@@ -298,6 +308,10 @@ struct JobBook {
     completion: Time,
     rtt_hist: LogHistogram,
     rat_hist: LogHistogram,
+    /// Trace rows admitted for this job (stream-backed runs; else 0).
+    rows_admitted: u64,
+    /// Summed open-loop admission delay over those rows, ps.
+    admission_wait: u128,
 }
 
 /// Stock observer: per-tenant-job accounting — request/latency books per
@@ -321,6 +335,8 @@ impl JobObserver {
                     completion: 0,
                     rtt_hist: LogHistogram::new(),
                     rat_hist: LogHistogram::new(),
+                    rows_admitted: 0,
+                    admission_wait: 0,
                 })
                 .collect(),
         }
@@ -328,6 +344,14 @@ impl JobObserver {
 }
 
 impl Observer for JobObserver {
+    fn on_event(&mut self, _now: Time, ev: &SessionEvent) {
+        if let SessionEvent::RowAdmitted { job, queued } = *ev {
+            let book = &mut self.jobs[job as usize];
+            book.rows_admitted += 1;
+            book.admission_wait += queued as u128;
+        }
+    }
+
     fn on_translation(&mut self, _at: Time, req: &RequestView, tr: &TranslationEvent) {
         let book = &mut self.jobs[req.job as usize];
         book.rtt_hist.record(tr.rtt(req));
@@ -356,6 +380,8 @@ impl Observer for JobObserver {
                 bytes: b.seed.bytes,
                 rtt_hist: b.rtt_hist.clone(),
                 rat_hist: b.rat_hist.clone(),
+                rows_admitted: b.rows_admitted,
+                admission_wait: b.admission_wait,
             })
             .collect();
     }
@@ -608,6 +634,27 @@ mod tests {
         let mut s2 = RunStats { requests: 3, ..RunStats::default() };
         o.on_finish(&mut s2);
         assert_eq!(s2.jobs[0].completion, 2_000);
+    }
+
+    #[test]
+    fn job_observer_accumulates_admission_waits() {
+        let mut o = JobObserver::new(vec![
+            JobSeed { name: "a".into(), arrival: 0, bytes: 10, total_requests: 1 },
+            JobSeed { name: "b".into(), arrival: 0, bytes: 10, total_requests: 1 },
+        ]);
+        // Two rows for job 0 (waits 100 + 300), one instant row for job 1.
+        o.on_event(0, &SessionEvent::RowAdmitted { job: 0, queued: 100 });
+        o.on_event(0, &SessionEvent::RowAdmitted { job: 0, queued: 300 });
+        o.on_event(0, &SessionEvent::RowAdmitted { job: 1, queued: 0 });
+        let mut s = RunStats::default();
+        o.publish(&mut s);
+        assert_eq!(s.jobs[0].rows_admitted, 2);
+        assert_eq!(s.jobs[0].admission_wait, 400);
+        assert_eq!(s.jobs[1].rows_admitted, 1);
+        assert_eq!(s.jobs[1].admission_wait, 0);
+        assert_eq!(s.jobs[1].mean_admission_wait_ns(), 0.0);
+        // A job that never admitted a row reports a 0 mean, not NaN.
+        assert_eq!(crate::stats::JobStats::default().mean_admission_wait_ns(), 0.0);
     }
 
     #[test]

@@ -153,8 +153,9 @@ impl SessionBuilder {
     }
 
     /// Override the event-engine policy (`Fused` fast path, `PerHop`
-    /// marker events, or `Sharded { threads }` parallel in-run engine);
-    /// equivalent to setting `cfg.engine` up front.
+    /// marker events, or `Sharded { threads, parallel_dispatch }`
+    /// parallel in-run engine); equivalent to setting `cfg.engine` up
+    /// front.
     pub fn engine(mut self, policy: EnginePolicy) -> Self {
         self.cfg.engine = policy;
         self

@@ -10,9 +10,15 @@
 //! [`PodCore`] groups the run description that is read-only once the
 //! model is built (config, schedule, dependency graph, tenant arrivals,
 //! cached timing constants), so handlers borrow a shard's mutable state
-//! and the shared core independently. Event *dispatch* stays serial in
-//! exact `(time, seq)` order — only the pending-set maintenance runs in
-//! parallel — so the split needs no locks or atomics anywhere.
+//! and the shared core independently.
+//!
+//! With parallel dispatch (`pod::sim`), shard-local handlers execute on
+//! worker threads holding exactly one `&mut GpuShardState` each (via
+//! [`ShardSet::shards_mut`]) plus the shared `&PodCore`; all observable
+//! side effects are buffered and replayed serially in exact
+//! `(time, seq)` order, so the split still needs no locks or atomics
+//! anywhere — disjoint `&mut` borrows are the whole synchronization
+//! story.
 
 use super::mmu::GpuMmu;
 use crate::collective::Schedule;
@@ -94,6 +100,19 @@ impl ShardSet {
     /// Every MMU in GPU-id order (the scrape / finalize iteration).
     pub fn mmus(&self) -> impl Iterator<Item = &GpuMmu> + '_ {
         (0..self.gpus).map(move |g| self.mmu(g))
+    }
+
+    /// One shard's state, mutably (the serial shard-local dispatch path).
+    #[inline]
+    pub fn shard_mut(&mut self, shard: usize) -> &mut GpuShardState {
+        &mut self.shards[shard]
+    }
+
+    /// All shards as disjoint `&mut`s — the parallel-dispatch workers
+    /// each take exactly one.
+    #[inline]
+    pub fn shards_mut(&mut self) -> &mut [GpuShardState] {
+        &mut self.shards
     }
 }
 

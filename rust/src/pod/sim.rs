@@ -24,25 +24,47 @@
 //! through [`super::SessionBuilder`].
 //!
 //! §Sharding — GPU-local mutable state (Link TLBs, MSHRs, walkers,
-//! per-GPU issue counters) lives in `pod::shard`'s `GpuShardState`s,
-//! striped `gpu % shards` to match [`Ev`]'s `ShardRoute` impl, and the
+//! per-GPU issue counters, prefetch pacing) lives in `pod::shard`'s
+//! `GpuShardState`s and `trans::prefetch`'s `PrefetchShard`s, striped
+//! `gpu % shards` to match [`Ev`]'s `ShardRoute` impl, and the
 //! read-only run description (config, schedule, dependency graph, timing
 //! constants) in the shared `PodCore` — the ownership split the sharded
 //! engine exploits, visible in the types. Under
 //! [`EnginePolicy::Sharded`] the engine drains per-shard pending wheels
 //! in parallel conservative windows (lookahead =
-//! `Fabric::min_path_latency`) and dispatches the merged stream serially
-//! in exact `(time, seq)` order — handlers, fabric admission order and
-//! observer callbacks are untouched, so `RunStats` is bit-identical to
+//! `Fabric::min_path_latency`) and dispatches the merged stream in
+//! exact `(time, seq)` order.
+//!
+//! §Parallel dispatch — every [`Ev`] variant is classified by
+//! [`Ev::affinity`]: *shard-local* events (translation stages, walk
+//! completions, MSHR retries, prefetch issue/done) have handlers whose
+//! mutable footprint is one shard's `GpuShardState` + `PrefetchShard`;
+//! everything touching global books (workgroups, the request slab's
+//! free list, job tables, fault/transport state, the stream pump, the
+//! fabric) is *Global* and dispatches serially. All shard-local
+//! handlers run through one [`ShardCtx`] entry point that *defers* its
+//! observable side effects (scheduled events, observer emissions,
+//! translation completions) into an [`Effect`] list. On the serial
+//! path the effects apply immediately, in handler-call order — byte-
+//! identical behavior to the old inline code. Under
+//! `Sharded { parallel_dispatch: true }` the engine's
+//! `plan_run`/replay protocol (`sim::sharded`) executes conflict-free
+//! batches of shard-local handlers on `std::thread::scope` workers (one
+//! disjoint shard `&mut` each, effects buffered per shard in
+//! [`EffectBuf`]s), then replays every buffered effect serially in
+//! exact `(time, seq)` order — so `seq` assignment, fabric admission
+//! order, observer callbacks and `RunStats` are **bit-identical** to
 //! `Fused`, raw event count included (pinned by
-//! `rust/tests/engine_diff.rs`).
+//! `rust/tests/engine_diff.rs` with parallel dispatch both on and off).
+//! Fault-injection runs force serial dispatch: walker-stall accounting
+//! mutates the global fault books mid-handler.
 
 use super::mmu::{GpuMmu, WalkRec};
 use super::observer::{
     CrossJobObserver, FaultObserver, JobObserver, JobSeed, LatencyObserver, Observer,
     RequestView, SessionEvent, TraceObserver, TranslationEvent,
 };
-use super::shard::{PodCore, ShardSet};
+use super::shard::{GpuShardState, PodCore, ShardSet};
 use crate::collective::workload::Workload;
 use crate::collective::{Schedule, SendOp, WorkloadStream};
 use crate::config::{
@@ -51,12 +73,13 @@ use crate::config::{
 use crate::gpu::{WgState, WorkGroup};
 use crate::mem::PageId;
 use crate::net::{build_fabric, Fabric, FabricPath};
-use crate::sim::{AnyEngine, ShardRoute};
+use crate::sim::sharded::SPAWN_SEQ_BASE;
+use crate::sim::{Affinity, AnyEngine, ShardRoute};
 use crate::stats::run::{FaultStats, TierFaultStats, TierStats};
 use crate::stats::RunStats;
 use crate::trans::class::{PrimaryOutcome, TransClass};
 use crate::trans::mshr::MshrOutcome;
-use crate::trans::prefetch::{Hint, Prefetcher};
+use crate::trans::prefetch::{Hint, PrefetchShard, Prefetcher};
 use crate::trans::walker::QueuedWalk;
 use crate::util::units::Time;
 use anyhow::Result;
@@ -65,7 +88,7 @@ use std::time::Duration;
 
 /// Simulation events. Payloads are packed small (16-byte variants) for
 /// queue cache density; request state lives in the slab.
-#[derive(Debug, Clone, Copy)]
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
 enum Ev {
     /// A workgroup becomes runnable (t=0 roots, or dependency satisfied).
     WgStart { wg: u32 },
@@ -73,10 +96,11 @@ enum Ev {
     /// timestamp materialized as an event. No model effect — the hop's
     /// outcome was already computed when its chain was fused.
     Hop,
-    /// Data packet reaches the target station → start reverse translation.
-    TargetArrive { req: u32 },
-    /// Retry translation after an MSHR-full stall cleared.
-    Retry { req: u32 },
+    /// Data packet reaches the target station → start reverse translation
+    /// at GPU `dst` (carried so routing/affinity need no slab lookup).
+    TargetArrive { req: u32, dst: u16 },
+    /// Retry translation at GPU `dst` after an MSHR-full stall cleared.
+    Retry { req: u32, dst: u16 },
     /// L1 miss resolved its lookup; run the L2 stage for (gpu, station, page).
     L2Decision { gpu: u16, station: u16, page: u64 },
     /// A page walk completed at (gpu, page).
@@ -114,15 +138,51 @@ impl ShardRoute for Ev {
         match *self {
             Ev::WgStart { wg } => wg as usize % shards,
             Ev::Hop | Ev::StreamPump => 0,
-            Ev::TargetArrive { req }
-            | Ev::Retry { req }
-            | Ev::AckArrive { req }
-            | Ev::Timeout { req }
-            | Ev::FaultRetry { req } => req as usize % shards,
+            Ev::AckArrive { req } | Ev::Timeout { req } | Ev::FaultRetry { req } => {
+                req as usize % shards
+            }
+            Ev::TargetArrive { dst, .. } | Ev::Retry { dst, .. } => dst as usize % shards,
             Ev::L2Decision { gpu, .. }
             | Ev::WalkDone { gpu, .. }
             | Ev::PrefetchIssue { gpu, .. }
             | Ev::PrefetchDone { gpu, .. } => gpu as usize % shards,
+        }
+    }
+}
+
+impl Ev {
+    /// Dispatch affinity under parallel dispatch — the full table:
+    ///
+    /// | variant                        | affinity            | mutable footprint |
+    /// |--------------------------------|---------------------|-------------------|
+    /// | `TargetArrive`, `Retry`        | `Shard(dst % n)`    | target GPU's MMU (+ completions, deferred) |
+    /// | `L2Decision`, `WalkDone`       | `Shard(gpu % n)`    | that GPU's MMU |
+    /// | `PrefetchIssue`, `PrefetchDone`| `Shard(gpu % n)`    | that GPU's MMU + `PrefetchShard` |
+    /// | `WgStart`                      | `Global`            | WG table, slab free list, fabric |
+    /// | `AckArrive`                    | `Global`            | WG/job tables, stream window, fabric |
+    /// | `Timeout`, `FaultRetry`        | `Global`            | fault/transport books |
+    /// | `StreamPump`                   | `Global`            | stream admission state |
+    /// | `Hop`                          | `Global`            | none (marker) |
+    ///
+    /// Shard-local handlers run through [`ShardCtx`] and may touch *only*
+    /// their shard's `GpuShardState`/`PrefetchShard` (all other effects
+    /// deferred); `Global` events are serial dispatch barriers.
+    #[inline]
+    fn affinity(&self, shards: u32) -> Affinity {
+        match *self {
+            Ev::TargetArrive { dst, .. } | Ev::Retry { dst, .. } => {
+                Affinity::Shard((dst as u32 % shards) as u16)
+            }
+            Ev::L2Decision { gpu, .. }
+            | Ev::WalkDone { gpu, .. }
+            | Ev::PrefetchIssue { gpu, .. }
+            | Ev::PrefetchDone { gpu, .. } => Affinity::Shard((gpu as u32 % shards) as u16),
+            Ev::WgStart { .. }
+            | Ev::Hop
+            | Ev::AckArrive { .. }
+            | Ev::Timeout { .. }
+            | Ev::FaultRetry { .. }
+            | Ev::StreamPump => Affinity::Global,
         }
     }
 }
@@ -327,15 +387,68 @@ pub struct PodSim {
     observers: Vec<Box<dyn Observer>>,
     /// Pages warmed for free by §6.1 pre-translation.
     pretranslated_pages: u64,
-    /// Walks initiated by a prefetcher (stride or hint).
-    prefetch_walks: u64,
     /// Per-fabric-tier summed traversal time, ps (indexed by tier id).
     tier_time: Vec<u128>,
     /// Per-fabric-tier admitted packet counts (indexed by tier id).
     tier_packets: Vec<u64>,
     /// Materialize per-hop marker events (EnginePolicy::PerHop)?
     per_hop: bool,
+    /// Execute conflict-free shard-local runs on worker threads
+    /// (`Sharded { parallel_dispatch: true }`)? Results are bit-identical
+    /// either way; this only trades dispatch strategy.
+    parallel_dispatch: bool,
+    /// Per-shard slices of the current run's batch (reused every run —
+    /// satellite of the no-realloc steady state).
+    run_items: Vec<Vec<(Time, u64, Ev)>>,
+    /// Per-shard worker side-effect buffers, replayed serially after a
+    /// run (reused every run).
+    run_bufs: Vec<EffectBuf>,
+    /// Replay scratch: per-shard (record, effect) cursors into `run_bufs`.
+    replay_cursors: Vec<(usize, usize)>,
+    /// Serial shard-local dispatch scratch (effects of one handler).
+    fx_scratch: Vec<Effect>,
 }
+
+/// One deferred, order-preserving side effect of a shard-local handler.
+/// Everything a handler does beyond mutating its own shard's state is
+/// expressed as one of these and applied serially in exact `(time, seq)`
+/// order — on the spot for serial dispatch, replayed from [`EffectBuf`]s
+/// after a parallel run.
+#[derive(Debug, Clone, Copy)]
+enum Effect {
+    /// `engine.schedule_at(time, ev)` — deferring it keeps `seq`
+    /// assignment identical between serial and parallel dispatch.
+    Schedule(Time, Ev),
+    /// An observer notification (`PodSim::emit`).
+    Emit(SessionEvent),
+    /// A translation completed: run the global completion path
+    /// (`finish_translation` — per-request accounting, fabric ACK
+    /// admission, observer `on_translation`).
+    Complete { at: Time, req: u32, class: TransClass },
+}
+
+/// A parallel-dispatch worker's captured output: one `(time, event,
+/// effect-count)` record per handler execution in local dispatch order,
+/// with the effects flattened into one stream (each record owns the next
+/// `count` entries). Replay walks records in global `(time, seq)` order
+/// across shards and applies each record's effects.
+#[derive(Default)]
+struct EffectBuf {
+    recs: Vec<(Time, Ev, u32)>,
+    fx: Vec<Effect>,
+}
+
+impl EffectBuf {
+    fn clear(&mut self) {
+        self.recs.clear();
+        self.fx.clear();
+    }
+}
+
+/// Smallest planned run worth spawning dispatch workers for: below this
+/// the scope spawn/join overhead dominates the handler work, so dispatch
+/// stays serial (results are identical either way).
+const MIN_PARALLEL_RUN: usize = 64;
 
 /// The completion event for a walk: prefetch-initiated walks (hint or
 /// stride) resolve via `PrefetchDone`, demand walks via `WalkDone`.
@@ -352,6 +465,430 @@ fn completion_ev(prefetch: bool, gpu: u32, page: PageId) -> Ev {
 /// prefetch admission paths.)
 fn page_covered(mmu: &GpuMmu, page: PageId) -> bool {
     page.0 > mmu.max_page || mmu.l2.contains(page.0) || mmu.pending_walks.contains_key(&page)
+}
+
+/// Borrow context of one shard-local handler execution: the shared
+/// read-only core plus exactly one shard's mutable state. Both the serial
+/// path (`PodSim::dispatch_shard_local`) and the parallel workers
+/// (`run_shard_worker`) dispatch through this single implementation, so
+/// there is one copy of every handler and the serial/parallel split
+/// cannot drift. Side effects go into the `fx` list passed to
+/// [`ShardCtx::dispatch`] (see [`Effect`]).
+///
+/// `faults` is `Some` only on the serial path — fault-injection runs
+/// never take the parallel path because walker-stall accounting mutates
+/// the global fault books mid-handler.
+struct ShardCtx<'a> {
+    core: &'a PodCore,
+    slab: &'a [Request],
+    nshards: usize,
+    shard_idx: usize,
+    shard: &'a mut GpuShardState,
+    prefetch: &'a mut PrefetchShard,
+    faults: Option<&'a mut FaultBooks>,
+}
+
+impl<'a> ShardCtx<'a> {
+    /// Local index of `gpu` on this shard (striping `gpu % shards`).
+    #[inline]
+    fn local(&self, gpu: u32) -> usize {
+        debug_assert_eq!(
+            gpu as usize % self.nshards,
+            self.shard_idx,
+            "cross-shard access from shard-local handler"
+        );
+        gpu as usize / self.nshards
+    }
+
+    #[inline]
+    fn mmu(&self, gpu: u32) -> &GpuMmu {
+        &self.shard.mmus[self.local(gpu)]
+    }
+
+    #[inline]
+    fn mmu_mut(&mut self, gpu: u32) -> &mut GpuMmu {
+        let i = self.local(gpu);
+        &mut self.shard.mmus[i]
+    }
+
+    // ---------- reverse translation at the target ----------
+
+    fn on_target_arrive(&mut self, now: Time, req: u32, fx: &mut Vec<Effect>) {
+        debug_assert_eq!(self.slab[req as usize].target_arrive, now);
+        // Only translated requests schedule a real `TargetArrive` (the
+        // bypass classes fused straight through at issue).
+        self.translate(now, req, fx);
+    }
+
+    /// L1 stage (also the retry entry point after MSHR-full stalls).
+    fn translate(&mut self, now: Time, req: u32, fx: &mut Vec<Effect>) {
+        let (dst, rail, page) = {
+            let r = &self.slab[req as usize];
+            (r.dst as usize, r.rail as usize, PageId(r.page))
+        };
+        let decision = now + self.core.t_l1;
+        let mmu = self.mmu_mut(dst as u32);
+        if mmu.l1[rail].lookup(page.0) {
+            fx.push(Effect::Complete { at: decision, req, class: TransClass::L1Hit });
+            return;
+        }
+        match mmu.mshr[rail].lookup_or_alloc(page, req) {
+            MshrOutcome::Coalesced => {
+                // Completed (and classified) when the primary resolves.
+            }
+            MshrOutcome::Allocated => {
+                fx.push(Effect::Schedule(
+                    decision,
+                    Ev::L2Decision { gpu: dst as u16, station: rail as u16, page: page.0 },
+                ));
+            }
+            MshrOutcome::Full => {
+                mmu.stalled[rail].push_back(req);
+            }
+        }
+    }
+
+    /// Shared-L2 stage for a station's primary miss.
+    fn on_l2(&mut self, now: Time, gpu: u32, station: u32, page: PageId, fx: &mut Vec<Effect>) {
+        let decision = now + self.core.t_l2;
+        let mmu = self.mmu_mut(gpu);
+        if mmu.l2.lookup(page.0) {
+            self.complete_station(decision, gpu, station, page, PrimaryOutcome::L2Hit, fx);
+            return;
+        }
+        if let Some(rec) = mmu.pending_walks.get_mut(&page) {
+            // Another station already has this page in flight at L2 level.
+            rec.stations.push((station, PrimaryOutcome::L2HitUnderMiss));
+            return;
+        }
+        // Start a walk: split-PWC probe, then the remaining levels in HBM.
+        self.start_walk(
+            decision,
+            gpu,
+            page,
+            |deepest| {
+                let outcome = if deepest > 0 {
+                    PrimaryOutcome::PwcHit(deepest)
+                } else {
+                    PrimaryOutcome::FullWalk
+                };
+                WalkRec { stations: vec![(station, outcome)], prefetch: false, hint_rail: None }
+            },
+            fx,
+        );
+    }
+
+    #[inline]
+    fn walk_latency(&self, accesses: u32) -> Time {
+        self.core.t_pwc + accesses as u64 * self.core.t_walk_mem
+    }
+
+    /// [`Self::walk_latency`] plus any `walker-stall` fault injection: a
+    /// walk starting inside one of `gpu`'s stall windows pays the plan's
+    /// extra latency (modeling a stalled table walker / slow HBM bank).
+    /// `faults` is populated on the serial path only — fault-injection
+    /// runs never dispatch in parallel, so the global-book mutation here
+    /// is always serially ordered.
+    fn walk_latency_at(&mut self, at: Time, gpu: u32, accesses: u32) -> Time {
+        let mut latency = self.walk_latency(accesses);
+        if let Some(fb) = self.faults.as_mut() {
+            let stall = fb.plan.walker_stall(gpu, at);
+            if stall > 0 {
+                fb.stats.walker_stalls += 1;
+                fb.stats.injected_delay += stall as u128;
+                latency += stall;
+            }
+        }
+        latency
+    }
+
+    /// Shared walk-completion path (`WalkDone` and `PrefetchDone`).
+    fn on_walk_done(&mut self, now: Time, gpu: u32, page: PageId, fx: &mut Vec<Effect>) {
+        let rec =
+            self.mmu_mut(gpu).pending_walks.remove(&page).expect("WalkDone for unknown walk");
+        let (l2_evicted, hint_l1_evicted) = {
+            let mmu = self.mmu_mut(gpu);
+            // Mostly-inclusive fill: PWCs + L2 (station L1s below).
+            mmu.page_table.resolve(page);
+            mmu.pwc.fill_walk(page);
+            let l2_evicted = mmu.l2.fill(page.0);
+            // Schedule-driven hints know the arrival rail — warm its
+            // private L1 so the stream's first packets hit there.
+            let hint_l1_evicted = match rec.hint_rail {
+                Some(rail) => mmu.l1[rail as usize].fill(page.0),
+                None => None,
+            };
+            (l2_evicted, hint_l1_evicted)
+        };
+        fx.push(Effect::Emit(SessionEvent::TlbFill {
+            gpu,
+            page: page.0,
+            victim: l2_evicted,
+            l1: false,
+        }));
+        if rec.hint_rail.is_some() {
+            fx.push(Effect::Emit(SessionEvent::TlbFill {
+                gpu,
+                page: page.0,
+                victim: hint_l1_evicted,
+                l1: true,
+            }));
+        }
+        if rec.prefetch {
+            self.prefetch.walks += 1;
+        }
+        fx.push(Effect::Emit(SessionEvent::WalkCompleted {
+            gpu,
+            page: page.0,
+            prefetch: rec.prefetch,
+        }));
+        if rec.hint_rail.is_some() {
+            // Fully hidden iff no demand request attached while in flight.
+            let local = self.local(gpu);
+            self.prefetch.complete(local, rec.stations.is_empty());
+            // The freed slot unparks the oldest deferred hint, if any.
+            self.reissue_next_deferred(now, gpu, fx);
+        }
+        for &(station, outcome) in &rec.stations {
+            self.complete_station(now, gpu, station, page, outcome, fx);
+        }
+        // Free the walker slot; start one queued walk if present.
+        if let Some(next) = self.mmu_mut(gpu).walkers.finish() {
+            let latency = self.walk_latency_at(now, next.gpu, next.accesses);
+            fx.push(Effect::Schedule(
+                now + latency,
+                completion_ev(next.prefetch, next.gpu, next.page),
+            ));
+        }
+        // §6.2 software-guided next-page prefetch.
+        if self.core.cfg.trans.prefetch.enabled && !rec.prefetch {
+            let depth = self.core.cfg.trans.prefetch.depth.max(1) as u64;
+            for d in 1..=depth {
+                self.maybe_prefetch(now, gpu, PageId(page.0 + d), fx);
+            }
+        }
+    }
+
+    fn maybe_prefetch(&mut self, now: Time, gpu: u32, page: PageId, fx: &mut Vec<Effect>) {
+        if page_covered(self.mmu(gpu), page) {
+            return;
+        }
+        self.start_walk(
+            now,
+            gpu,
+            page,
+            |_| WalkRec { stations: Vec::new(), prefetch: true, hint_rail: None },
+            fx,
+        );
+    }
+
+    /// A page became available for `station`: fill its L1, drain its MSHR
+    /// entry (classifying primary + hit-under-miss waiters), retry stalls.
+    fn complete_station(
+        &mut self,
+        now: Time,
+        gpu: u32,
+        station: u32,
+        page: PageId,
+        outcome: PrimaryOutcome,
+        fx: &mut Vec<Effect>,
+    ) {
+        let (l1_evicted, reqs) = {
+            let mmu = self.mmu_mut(gpu);
+            let evicted = mmu.l1[station as usize].fill(page.0);
+            (evicted, mmu.mshr[station as usize].complete(page))
+        };
+        fx.push(Effect::Emit(SessionEvent::TlbFill {
+            gpu,
+            page: page.0,
+            victim: l1_evicted,
+            l1: true,
+        }));
+        for (i, rid) in reqs.into_iter().enumerate() {
+            let class = if i == 0 {
+                TransClass::Primary(outcome)
+            } else {
+                TransClass::MshrHit(outcome)
+            };
+            fx.push(Effect::Complete { at: now, req: rid, class });
+        }
+        // MSHR slots freed: retry stalled requests (they re-run the L1
+        // stage; the page may now hit).
+        while self.mmu(gpu).mshr[station as usize].has_free() {
+            match self.mmu_mut(gpu).stalled[station as usize].pop_front() {
+                Some(rid) => {
+                    fx.push(Effect::Schedule(now, Ev::Retry { req: rid, dst: gpu as u16 }))
+                }
+                None => break,
+            }
+        }
+    }
+
+    /// A hint became due: drop it if the page is already covered, defer it
+    /// past the rate cap, else start its walk on the real walker pool.
+    fn admit_hint(&mut self, now: Time, gpu: u32, hint: Hint, fx: &mut Vec<Effect>) {
+        let page = hint.page;
+        let local = self.local(gpu);
+        if page_covered(self.mmu(gpu), page) {
+            self.prefetch.counters.useless += 1;
+            // Keep the deferred queue draining even when reissued hints
+            // die here: a free slot means no completion event will come
+            // along to pop the next one.
+            if self.prefetch.has_slot(local) {
+                self.reissue_next_deferred(now, gpu, fx);
+            }
+            return;
+        }
+        if !self.prefetch.has_slot(local) {
+            self.prefetch.defer(local, hint);
+            return;
+        }
+        self.prefetch.start(local);
+        self.start_walk(
+            now,
+            gpu,
+            page,
+            |_| WalkRec { stations: Vec::new(), prefetch: true, hint_rail: Some(hint.rail) },
+            fx,
+        );
+    }
+
+    /// Put the oldest deferred hint (if any) back on the event stream —
+    /// called whenever a hint slot frees up.
+    fn reissue_next_deferred(&mut self, now: Time, gpu: u32, fx: &mut Vec<Effect>) {
+        if let Some(h) = self.prefetch.next_deferred(self.local(gpu)) {
+            fx.push(Effect::Schedule(
+                now,
+                Ev::PrefetchIssue { gpu: gpu as u16, rail: h.rail as u16, page: h.page.0 },
+            ));
+        }
+    }
+
+    /// Register `page`'s walk record (built from the deepest PWC hit) and
+    /// start — or queue — its walk. The single place that decides which
+    /// completion event a walk gets: `PrefetchDone` for prefetch-initiated
+    /// walks, `WalkDone` for demand walks. Queued walks are scheduled by a
+    /// later `finish` with the same rule.
+    fn start_walk(
+        &mut self,
+        at: Time,
+        gpu: u32,
+        page: PageId,
+        rec: impl FnOnce(u32) -> WalkRec,
+        fx: &mut Vec<Effect>,
+    ) {
+        let (prefetch, started) = {
+            let mmu = self.mmu_mut(gpu);
+            let deepest = mmu.pwc.probe(page);
+            let accesses = mmu.page_table.accesses_for_walk(deepest);
+            let rec = rec(deepest);
+            let prefetch = rec.prefetch;
+            mmu.pending_walks.insert(page, rec);
+            if mmu.walkers.try_start(QueuedWalk { page, gpu, accesses, prefetch }) {
+                (prefetch, Some(accesses))
+            } else {
+                (prefetch, None) // queued; scheduled by a later `finish`
+            }
+        };
+        if let Some(accesses) = started {
+            let latency = self.walk_latency_at(at, gpu, accesses);
+            fx.push(Effect::Schedule(at + latency, completion_ev(prefetch, gpu, page)));
+        }
+    }
+
+    /// Dispatch one shard-local event, appending side effects to `fx`.
+    fn dispatch(&mut self, now: Time, ev: Ev, fx: &mut Vec<Effect>) {
+        debug_assert!(
+            matches!(ev.affinity(self.nshards as u32),
+                     Affinity::Shard(s) if s as usize == self.shard_idx),
+            "mis-classified event {ev:?} dispatched on shard {}",
+            self.shard_idx
+        );
+        match ev {
+            Ev::TargetArrive { req, .. } => self.on_target_arrive(now, req, fx),
+            Ev::Retry { req, .. } => self.translate(now, req, fx),
+            Ev::L2Decision { gpu, station, page } => {
+                self.on_l2(now, gpu as u32, station as u32, PageId(page), fx)
+            }
+            Ev::WalkDone { gpu, page } | Ev::PrefetchDone { gpu, page } => {
+                self.on_walk_done(now, gpu as u32, PageId(page), fx)
+            }
+            Ev::PrefetchIssue { gpu, rail, page } => {
+                self.admit_hint(now, gpu as u32, Hint { page: PageId(page), rail: rail as u32 }, fx)
+            }
+            other => debug_assert!(
+                false,
+                "mis-classified Global event {other:?} reached shard-local dispatch"
+            ),
+        }
+    }
+}
+
+/// Heap key for a parallel worker's local run: orders by `(time, seq)`
+/// exactly like the engine. In-run spawns get synthetic seqs from
+/// [`SPAWN_SEQ_BASE`], above every real batch seq — matching the serial
+/// tie-break, where a spawned event's real seq is assigned later than
+/// every event already pending when the window opened.
+struct RunItem(Time, u64, Ev);
+
+impl PartialEq for RunItem {
+    fn eq(&self, other: &Self) -> bool {
+        (self.0, self.1) == (other.0, other.1)
+    }
+}
+impl Eq for RunItem {}
+impl PartialOrd for RunItem {
+    fn partial_cmp(&self, other: &Self) -> Option<std::cmp::Ordering> {
+        Some(self.cmp(other))
+    }
+}
+impl Ord for RunItem {
+    fn cmp(&self, other: &Self) -> std::cmp::Ordering {
+        (self.0, self.1).cmp(&(other.0, other.1))
+    }
+}
+
+/// Execute one shard's slice of a conflict-free run: pop `(time, seq)`
+/// order locally, dispatch through [`ShardCtx`], capture effects into
+/// `buf`, and fold spawned shard-local events due strictly before `bound`
+/// back into the local heap (they would have popped inside the run
+/// serially too — the bound is below the spill frontier and window end).
+#[allow(clippy::too_many_arguments)]
+fn run_shard_worker(
+    core: &PodCore,
+    slab: &[Request],
+    nshards: usize,
+    shard_idx: usize,
+    shard: &mut GpuShardState,
+    prefetch: &mut PrefetchShard,
+    items: &[(Time, u64, Ev)],
+    bound: Time,
+    buf: &mut EffectBuf,
+) {
+    use std::cmp::Reverse;
+    use std::collections::BinaryHeap;
+    let mut heap: BinaryHeap<Reverse<RunItem>> =
+        items.iter().map(|&(t, q, ev)| Reverse(RunItem(t, q, ev))).collect();
+    let mut spawn_seq = SPAWN_SEQ_BASE;
+    let mut ctx = ShardCtx { core, slab, nshards, shard_idx, shard, prefetch, faults: None };
+    while let Some(Reverse(RunItem(t, _, ev))) = heap.pop() {
+        let start = buf.fx.len();
+        ctx.dispatch(t, ev, &mut buf.fx);
+        for i in start..buf.fx.len() {
+            if let Effect::Schedule(at, sev) = buf.fx[i] {
+                if at < bound {
+                    debug_assert!(
+                        matches!(sev.affinity(nshards as u32),
+                                 Affinity::Shard(s) if s as usize == shard_idx),
+                        "shard-local handler scheduled a cross-shard event {sev:?}"
+                    );
+                    heap.push(Reverse(RunItem(at, spawn_seq, sev)));
+                    spawn_seq += 1;
+                }
+            }
+        }
+        buf.recs.push((t, ev, (buf.fx.len() - start) as u32));
+    }
 }
 
 impl PodSim {
@@ -543,7 +1080,6 @@ impl PodSim {
 
         let policy =
             if cfg.trans.enabled { cfg.trans.prefetch_policy } else { PrefetchPolicy::Off };
-        let prefetcher = Prefetcher::new(policy, cfg.gpus);
         let t_fabric = crate::util::units::ns(cfg.gpu.local_fabric_ns);
         let t_hbm = crate::util::units::ns(cfg.gpu.hbm_ns);
         let t_l1 = cfg.trans.l1.hit_latency();
@@ -552,13 +1088,18 @@ impl PodSim {
         let t_walk_mem =
             crate::util::units::ns(cfg.trans.walk_mem_ns + cfg.trans.walk_fabric_ns);
         let cap = (window_ops as usize).max(1024);
-        let (engine, model_shards) = match cfg.engine {
-            EnginePolicy::Sharded { threads } => {
+        let (engine, model_shards, parallel_dispatch) = match cfg.engine {
+            EnginePolicy::Sharded { threads, parallel_dispatch } => {
                 let threads = threads.max(1) as usize;
-                (AnyEngine::sharded(threads, fabric.min_path_latency(), cap), threads)
+                (
+                    AnyEngine::sharded(threads, fabric.min_path_latency(), cap),
+                    threads,
+                    parallel_dispatch,
+                )
             }
-            _ => (AnyEngine::single(cap), 1),
+            _ => (AnyEngine::single(cap), 1, false),
         };
+        let prefetcher = Prefetcher::new(policy, cfg.gpus, model_shards);
         let per_hop = cfg.engine == EnginePolicy::PerHop;
         let config_name = cfg.name.clone();
         // The shared core carries an empty-op schedule: streams admit ops
@@ -622,10 +1163,14 @@ impl PodSim {
             }),
             observers,
             pretranslated_pages: 0,
-            prefetch_walks: 0,
             tier_time: vec![0; tier_count],
             tier_packets: vec![0; tier_count],
             per_hop,
+            parallel_dispatch,
+            run_items: (0..model_shards).map(|_| Vec::new()).collect(),
+            run_bufs: (0..model_shards).map(|_| EffectBuf::default()).collect(),
+            replay_cursors: Vec::new(),
+            fx_scratch: Vec::new(),
         };
         // Kick admission at t = 0: rows due immediately admit now, and
         // the first future arrival arms its pump.
@@ -733,7 +1278,6 @@ impl PodSim {
         // Hint walks only exist where reverse translation does.
         let policy =
             if cfg.trans.enabled { cfg.trans.prefetch_policy } else { PrefetchPolicy::Off };
-        let prefetcher = Prefetcher::new(policy, cfg.gpus);
 
         let t_fabric = crate::util::units::ns(cfg.gpu.local_fabric_ns);
         let t_hbm = crate::util::units::ns(cfg.gpu.hbm_ns);
@@ -756,14 +1300,21 @@ impl PodSim {
         // drain them in conservative windows bounded by the fabric's
         // minimum uncontended path latency; everything else uses the
         // single-wheel engine. Dispatch order — and therefore the model —
-        // is identical either way.
-        let (engine, model_shards) = match cfg.engine {
-            EnginePolicy::Sharded { threads } => {
+        // is identical either way (with `parallel_dispatch`, conflict-free
+        // shard-local runs execute on workers and replay their effects in
+        // the same order).
+        let (engine, model_shards, parallel_dispatch) = match cfg.engine {
+            EnginePolicy::Sharded { threads, parallel_dispatch } => {
                 let threads = threads.max(1) as usize;
-                (AnyEngine::sharded(threads, fabric.min_path_latency(), cap), threads)
+                (
+                    AnyEngine::sharded(threads, fabric.min_path_latency(), cap),
+                    threads,
+                    parallel_dispatch,
+                )
             }
-            _ => (AnyEngine::single(cap), 1),
+            _ => (AnyEngine::single(cap), 1, false),
         };
+        let prefetcher = Prefetcher::new(policy, cfg.gpus, model_shards);
         let per_hop = cfg.engine == EnginePolicy::PerHop;
         let config_name = cfg.name.clone();
         let core = PodCore {
@@ -795,10 +1346,14 @@ impl PodSim {
             stream: None,
             observers,
             pretranslated_pages: 0,
-            prefetch_walks: 0,
             tier_time: vec![0; tier_count],
             tier_packets: vec![0; tier_count],
             per_hop,
+            parallel_dispatch,
+            run_items: (0..model_shards).map(|_| Vec::new()).collect(),
+            run_bufs: (0..model_shards).map(|_| EffectBuf::default()).collect(),
+            replay_cursors: Vec::new(),
+            fx_scratch: Vec::new(),
         };
         sim.apply_pretranslation();
         sim.seed_root_ops();
@@ -912,9 +1467,21 @@ impl PodSim {
         Some(now)
     }
 
-    /// Drain the event loop.
+    /// Drain the event loop. Under `Sharded { parallel_dispatch: true }`
+    /// each iteration first attempts a conflict-free parallel run
+    /// ([`Self::try_parallel_run`]); everything else — and every other
+    /// engine policy — dispatches serially, one event per [`Self::step`].
+    /// Single-stepping drivers (`run_to_completion_checked`) bypass the
+    /// parallel path entirely and stay bit-identical by construction.
     pub(crate) fn drain(&mut self) {
-        while self.step().is_some() {}
+        loop {
+            if self.try_parallel_run() {
+                continue;
+            }
+            if self.step().is_none() {
+                break;
+            }
+        }
     }
 
     /// Attribute one admitted hop chain to the per-tier books: each
@@ -942,8 +1509,8 @@ impl PodSim {
         stats.requests = self.total_requests;
         stats.events = self.engine.processed();
         stats.pretranslated_pages = self.pretranslated_pages;
-        stats.prefetch_walks = self.prefetch_walks;
-        let pf = self.prefetcher.counters;
+        stats.prefetch_walks = self.prefetcher.walks_total();
+        let pf = self.prefetcher.counters();
         stats.prefetch_issued = pf.issued;
         stats.prefetch_useful = pf.useful;
         stats.prefetch_late = pf.late;
@@ -1010,7 +1577,7 @@ impl PodSim {
         }
         assert_eq!(self.prefetcher.in_flight_total(), 0, "hint walks leaked");
         assert_eq!(self.prefetcher.backlog_total(), 0, "deferred hints never reissued");
-        let pf = self.prefetcher.counters;
+        let pf = self.prefetcher.counters();
         assert_eq!(pf.issued, pf.useful + pf.late, "hint walk accounting out of balance");
         if let Some(fb) = &self.faults {
             // Transport conservation: every attempt delivered or timed
@@ -1049,26 +1616,189 @@ impl PodSim {
     // ---------- event dispatch ----------
 
     fn handle(&mut self, now: Time, ev: Ev) {
-        match ev {
-            Ev::WgStart { wg } => self.on_wg_start(now, wg),
-            Ev::Hop => {}
-            Ev::TargetArrive { req } => self.on_target_arrive(now, req),
-            Ev::Retry { req } => self.translate(now, req),
-            Ev::L2Decision { gpu, station, page } => {
-                self.on_l2(now, gpu as u32, station as u32, page)
-            }
-            Ev::WalkDone { gpu, page } => self.on_walk_done(now, gpu as u32, page),
-            Ev::AckArrive { req } => self.on_ack_arrive(now, req),
-            Ev::PrefetchIssue { gpu, rail, page } => {
-                self.admit_hint(now, gpu as u32, Hint { page: PageId(page), rail: rail as u32 })
-            }
-            Ev::PrefetchDone { gpu, page } => self.on_walk_done(now, gpu as u32, page),
-            Ev::Timeout { req } => self.on_timeout(now, req),
-            // The packet is already staged at the source station's
-            // replay buffer — re-enter the fabric directly at `now`.
-            Ev::FaultRetry { req } => self.transmit(now, req),
-            Ev::StreamPump => self.on_stream_pump(now),
+        match ev.affinity(self.shards.shard_count() as u32) {
+            Affinity::Shard(s) => self.dispatch_shard_local(now, ev, s as usize),
+            Affinity::Global => match ev {
+                Ev::WgStart { wg } => self.on_wg_start(now, wg),
+                Ev::Hop => {}
+                Ev::AckArrive { req } => self.on_ack_arrive(now, req),
+                Ev::Timeout { req } => self.on_timeout(now, req),
+                // The packet is already staged at the source station's
+                // replay buffer — re-enter the fabric directly at `now`.
+                Ev::FaultRetry { req } => self.transmit(now, req),
+                Ev::StreamPump => self.on_stream_pump(now),
+                other => unreachable!("shard-local event {other:?} classified Global"),
+            },
         }
+    }
+
+    /// Serial shard-local dispatch: run the handler through the same
+    /// [`ShardCtx`] the parallel workers use, then apply its effects
+    /// immediately — exactly the old inline behavior, in the same order.
+    fn dispatch_shard_local(&mut self, now: Time, ev: Ev, shard: usize) {
+        let mut fx = std::mem::take(&mut self.fx_scratch);
+        debug_assert!(fx.is_empty());
+        {
+            let nshards = self.shards.shard_count();
+            let mut ctx = ShardCtx {
+                core: &self.core,
+                slab: &self.slab,
+                nshards,
+                shard_idx: shard,
+                shard: self.shards.shard_mut(shard),
+                prefetch: self.prefetcher.shard_mut(shard),
+                faults: self.faults.as_mut(),
+            };
+            ctx.dispatch(now, ev, &mut fx);
+        }
+        for e in fx.drain(..) {
+            self.apply_effect(e);
+        }
+        self.fx_scratch = fx;
+    }
+
+    /// Apply one deferred handler side effect (serial, global order).
+    fn apply_effect(&mut self, e: Effect) {
+        match e {
+            Effect::Schedule(at, ev) => self.engine.schedule_at(at, ev),
+            Effect::Emit(ev) => self.emit(ev),
+            Effect::Complete { at, req, class } => self.finish_translation(at, req, class),
+        }
+    }
+
+    /// Attempt one conflict-free parallel dispatch run (the `drain` fast
+    /// path). Plans a maximal prefix of the sharded engine's current
+    /// batch containing only shard-local events below the spill frontier,
+    /// executes it on scoped worker threads (one shard each, effects
+    /// buffered), then replays every effect serially in exact
+    /// `(time, seq)` order. Returns `false` — dispatch serially instead —
+    /// when parallel dispatch is off, the run is fault-injected (walker
+    /// stalls mutate global books mid-handler), the engine is not
+    /// sharded, an event backstop could truncate mid-replay, or the
+    /// planned run is too small to amortize the spawn cost.
+    fn try_parallel_run(&mut self) -> bool {
+        if !self.parallel_dispatch || self.faults.is_some() {
+            return false;
+        }
+        let nshards = self.shards.shard_count();
+        let plan = {
+            let Some(eng) = self.engine.sharded_mut() else { return false };
+            if eng.max_events != u64::MAX {
+                return false;
+            }
+            let shards_u32 = nshards as u32;
+            eng.plan_run(|ev| ev.affinity(shards_u32))
+        };
+        if plan.len < MIN_PARALLEL_RUN {
+            return false;
+        }
+        // Partition the run by shard into the engine-owned reusable
+        // buffers (allocation-free in the steady state).
+        for v in &mut self.run_items {
+            v.clear();
+        }
+        {
+            let eng = self.engine.sharded_mut().expect("engine changed shape mid-plan");
+            let shards_u32 = nshards as u32;
+            for &(t, q, ev) in &eng.run_items()[..plan.len] {
+                let Affinity::Shard(s) = ev.affinity(shards_u32) else {
+                    unreachable!("planned run contains a Global event")
+                };
+                self.run_items[s as usize].push((t, q, ev));
+            }
+        }
+        for b in &mut self.run_bufs {
+            b.clear();
+        }
+        let core = &self.core;
+        let slab = &self.slab[..];
+        let items = &self.run_items;
+        let bufs = &mut self.run_bufs;
+        let shard_states = self.shards.shards_mut();
+        let pf_shards = self.prefetcher.shards_mut();
+        let bound = plan.bound;
+        let active = items.iter().filter(|v| !v.is_empty()).count();
+        if active <= 1 {
+            // One busy shard: run inline, skip the spawn cost entirely.
+            for (s, it) in items.iter().enumerate() {
+                if it.is_empty() {
+                    continue;
+                }
+                run_shard_worker(
+                    core,
+                    slab,
+                    nshards,
+                    s,
+                    &mut shard_states[s],
+                    &mut pf_shards[s],
+                    it,
+                    bound,
+                    &mut bufs[s],
+                );
+            }
+        } else {
+            std::thread::scope(|scope| {
+                let handles: Vec<_> = shard_states
+                    .iter_mut()
+                    .zip(pf_shards.iter_mut())
+                    .zip(items.iter().zip(bufs.iter_mut()))
+                    .enumerate()
+                    .filter(|(_, (_, (it, _)))| !it.is_empty())
+                    .map(|(s, ((st, pf), (it, buf)))| {
+                        let h = scope
+                            .spawn(move || run_shard_worker(core, slab, nshards, s, st, pf, it, bound, buf));
+                        (s, h)
+                    })
+                    .collect();
+                for (s, h) in handles {
+                    crate::util::panics::join_labeled(
+                        &format!("parallel dispatch shard {s} panicked"),
+                        h,
+                    );
+                }
+            });
+        }
+        let total: usize = self.run_bufs.iter().map(|b| b.recs.len()).sum();
+        self.replay_run(total);
+        true
+    }
+
+    /// Replay a parallel run's captured effects in exact global
+    /// `(time, seq)` order: pop the engine `total` times (each pop is a
+    /// handler execution a worker already performed), look up the
+    /// matching record on the event's shard, and apply its effects.
+    /// Scheduling from here assigns the spawned events their *real* seqs
+    /// in exactly the order serial dispatch would have.
+    fn replay_run(&mut self, total: usize) {
+        self.replay_cursors.clear();
+        self.replay_cursors.resize(self.run_bufs.len(), (0, 0));
+        let shards = self.shards.shard_count() as u32;
+        for _ in 0..total {
+            let (t, ev) = self.engine.next().expect("planned run truncated mid-replay");
+            let Affinity::Shard(s) = ev.affinity(shards) else {
+                panic!("mis-classified Global event {ev:?} popped inside a parallel run")
+            };
+            let s = s as usize;
+            let (ri, fi) = self.replay_cursors[s];
+            let (rt, rev, count) = self.run_bufs[s].recs[ri];
+            debug_assert_eq!(
+                (rt, rev),
+                (t, ev),
+                "parallel-run replay diverged from engine order on shard {s}"
+            );
+            self.replay_cursors[s] = (ri + 1, fi + count as usize);
+            for k in 0..count as usize {
+                let e = self.run_bufs[s].fx[fi + k];
+                self.apply_effect(e);
+            }
+        }
+        debug_assert!(
+            self.replay_cursors
+                .iter()
+                .zip(&self.run_bufs)
+                .all(|(&(ri, fi), b)| ri == b.recs.len() && fi == b.fx.len()),
+            "parallel run left unreplayed effects"
+        );
     }
 
     fn on_wg_start(&mut self, now: Time, wg: u32) {
@@ -1203,7 +1933,7 @@ impl PodSim {
             }
         }
         if self.core.cfg.trans.enabled && internode {
-            self.engine.schedule_at(t_arrive, Ev::TargetArrive { req: rid });
+            self.engine.schedule_at(t_arrive, Ev::TargetArrive { req: rid, dst: dst as u16 });
         } else {
             // No reverse translation at the target: the response chain is
             // deterministic too — fuse it now (class matches the old
@@ -1302,68 +2032,6 @@ impl PodSim {
         }
     }
 
-    /// A hint became due: drop it if the page is already covered, defer it
-    /// past the rate cap, else start its walk on the real walker pool.
-    fn admit_hint(&mut self, now: Time, gpu: u32, hint: Hint) {
-        let page = hint.page;
-        if page_covered(self.shards.mmu(gpu), page) {
-            self.prefetcher.counters.useless += 1;
-            // Keep the deferred queue draining even when reissued hints
-            // die here: a free slot means no completion event will come
-            // along to pop the next one.
-            if self.prefetcher.has_slot(gpu) {
-                self.reissue_next_deferred(now, gpu);
-            }
-            return;
-        }
-        if !self.prefetcher.has_slot(gpu) {
-            self.prefetcher.defer(gpu, hint);
-            return;
-        }
-        self.prefetcher.start(gpu);
-        self.start_walk(now, gpu, page, |_| WalkRec {
-            stations: Vec::new(),
-            prefetch: true,
-            hint_rail: Some(hint.rail),
-        });
-    }
-
-    /// Put the oldest deferred hint (if any) back on the event stream —
-    /// called whenever a hint slot frees up.
-    fn reissue_next_deferred(&mut self, now: Time, gpu: u32) {
-        if let Some(h) = self.prefetcher.next_deferred(gpu) {
-            self.engine.schedule_at(
-                now,
-                Ev::PrefetchIssue { gpu: gpu as u16, rail: h.rail as u16, page: h.page.0 },
-            );
-        }
-    }
-
-    /// Register `page`'s walk record (built from the deepest PWC hit) and
-    /// start — or queue — its walk. The single place that decides which
-    /// completion event a walk gets: `PrefetchDone` for prefetch-initiated
-    /// walks, `WalkDone` for demand walks. Queued walks are scheduled by a
-    /// later `finish` with the same rule.
-    fn start_walk(&mut self, at: Time, gpu: u32, page: PageId, rec: impl FnOnce(u32) -> WalkRec) {
-        let (prefetch, started) = {
-            let mmu = self.shards.mmu_mut(gpu);
-            let deepest = mmu.pwc.probe(page);
-            let accesses = mmu.page_table.accesses_for_walk(deepest);
-            let rec = rec(deepest);
-            let prefetch = rec.prefetch;
-            mmu.pending_walks.insert(page, rec);
-            if mmu.walkers.try_start(QueuedWalk { page, gpu, accesses, prefetch }) {
-                (prefetch, Some(accesses))
-            } else {
-                (prefetch, None) // queued; scheduled by a later `finish`
-            }
-        };
-        if let Some(accesses) = started {
-            let latency = self.walk_latency_at(at, gpu, accesses);
-            self.engine.schedule_at(at + latency, completion_ev(prefetch, gpu, page));
-        }
-    }
-
     fn alloc(&mut self, r: Request) -> u32 {
         if let Some(i) = self.free.pop() {
             self.slab[i as usize] = r;
@@ -1388,194 +2056,6 @@ impl PodSim {
             issue: r.issue,
             target_arrive: r.target_arrive,
             internode: r.internode,
-        }
-    }
-
-    // ---------- reverse translation at the target ----------
-
-    fn on_target_arrive(&mut self, now: Time, req: u32) {
-        debug_assert_eq!(self.slab[req as usize].target_arrive, now);
-        // Only translated requests schedule a real `TargetArrive` (the
-        // bypass classes fused straight through at issue).
-        self.translate(now, req);
-    }
-
-    /// L1 stage (also the retry entry point after MSHR-full stalls).
-    fn translate(&mut self, now: Time, req: u32) {
-        let (dst, rail, page) = {
-            let r = &self.slab[req as usize];
-            (r.dst as usize, r.rail as usize, PageId(r.page))
-        };
-        let decision = now + self.core.t_l1;
-        let mmu = self.shards.mmu_mut(dst as u32);
-        if mmu.l1[rail].lookup(page.0) {
-            self.finish_translation(decision, req, TransClass::L1Hit);
-            return;
-        }
-        match mmu.mshr[rail].lookup_or_alloc(page, req) {
-            MshrOutcome::Coalesced => {
-                // Completed (and classified) when the primary resolves.
-            }
-            MshrOutcome::Allocated => {
-                self.engine.schedule_at(
-                    decision,
-                    Ev::L2Decision { gpu: dst as u16, station: rail as u16, page: page.0 },
-                );
-            }
-            MshrOutcome::Full => {
-                mmu.stalled[rail].push_back(req);
-            }
-        }
-    }
-
-    /// Shared-L2 stage for a station's primary miss.
-    fn on_l2(&mut self, now: Time, gpu: u32, station: u32, page: u64) {
-        let decision = now + self.core.t_l2;
-        let page = PageId(page);
-        let mmu = self.shards.mmu_mut(gpu);
-        if mmu.l2.lookup(page.0) {
-            self.complete_station(decision, gpu, station, page, PrimaryOutcome::L2Hit);
-            return;
-        }
-        if let Some(rec) = mmu.pending_walks.get_mut(&page) {
-            // Another station already has this page in flight at L2 level.
-            rec.stations.push((station, PrimaryOutcome::L2HitUnderMiss));
-            return;
-        }
-        // Start a walk: split-PWC probe, then the remaining levels in HBM.
-        self.start_walk(decision, gpu, page, |deepest| {
-            let outcome = if deepest > 0 {
-                PrimaryOutcome::PwcHit(deepest)
-            } else {
-                PrimaryOutcome::FullWalk
-            };
-            WalkRec { stations: vec![(station, outcome)], prefetch: false, hint_rail: None }
-        });
-    }
-
-    #[inline]
-    fn walk_latency(&self, accesses: u32) -> Time {
-        self.core.t_pwc + accesses as u64 * self.core.t_walk_mem
-    }
-
-    /// [`Self::walk_latency`] plus any `walker-stall` fault injection: a
-    /// walk starting inside one of `gpu`'s stall windows pays the plan's
-    /// extra latency (modeling a stalled table walker / slow HBM bank).
-    fn walk_latency_at(&mut self, at: Time, gpu: u32, accesses: u32) -> Time {
-        let mut latency = self.walk_latency(accesses);
-        if let Some(fb) = self.faults.as_mut() {
-            let stall = fb.plan.walker_stall(gpu, at);
-            if stall > 0 {
-                fb.stats.walker_stalls += 1;
-                fb.stats.injected_delay += stall as u128;
-                latency += stall;
-            }
-        }
-        latency
-    }
-
-    /// Shared walk-completion path (`WalkDone` and `PrefetchDone`).
-    fn on_walk_done(&mut self, now: Time, gpu: u32, page: u64) {
-        let page = PageId(page);
-        let rec = self
-            .shards
-            .mmu_mut(gpu)
-            .pending_walks
-            .remove(&page)
-            .expect("WalkDone for unknown walk");
-        let (l2_evicted, hint_l1_evicted) = {
-            let mmu = self.shards.mmu_mut(gpu);
-            // Mostly-inclusive fill: PWCs + L2 (station L1s below).
-            mmu.page_table.resolve(page);
-            mmu.pwc.fill_walk(page);
-            let l2_evicted = mmu.l2.fill(page.0);
-            // Schedule-driven hints know the arrival rail — warm its
-            // private L1 so the stream's first packets hit there.
-            let hint_l1_evicted = match rec.hint_rail {
-                Some(rail) => mmu.l1[rail as usize].fill(page.0),
-                None => None,
-            };
-            (l2_evicted, hint_l1_evicted)
-        };
-        self.emit(SessionEvent::TlbFill { gpu, page: page.0, victim: l2_evicted, l1: false });
-        if rec.hint_rail.is_some() {
-            self.emit(SessionEvent::TlbFill {
-                gpu,
-                page: page.0,
-                victim: hint_l1_evicted,
-                l1: true,
-            });
-        }
-        if rec.prefetch {
-            self.prefetch_walks += 1;
-        }
-        self.emit(SessionEvent::WalkCompleted { gpu, page: page.0, prefetch: rec.prefetch });
-        if rec.hint_rail.is_some() {
-            // Fully hidden iff no demand request attached while in flight.
-            self.prefetcher.complete(gpu, rec.stations.is_empty());
-            // The freed slot unparks the oldest deferred hint, if any.
-            self.reissue_next_deferred(now, gpu);
-        }
-        for &(station, outcome) in &rec.stations {
-            self.complete_station(now, gpu, station, page, outcome);
-        }
-        // Free the walker slot; start one queued walk if present.
-        if let Some(next) = self.shards.mmu_mut(gpu).walkers.finish() {
-            let latency = self.walk_latency_at(now, next.gpu, next.accesses);
-            self.engine
-                .schedule_at(now + latency, completion_ev(next.prefetch, next.gpu, next.page));
-        }
-        // §6.2 software-guided next-page prefetch.
-        if self.core.cfg.trans.prefetch.enabled && !rec.prefetch {
-            let depth = self.core.cfg.trans.prefetch.depth.max(1) as u64;
-            for d in 1..=depth {
-                self.maybe_prefetch(now, gpu, PageId(page.0 + d));
-            }
-        }
-    }
-
-    fn maybe_prefetch(&mut self, now: Time, gpu: u32, page: PageId) {
-        if page_covered(self.shards.mmu(gpu), page) {
-            return;
-        }
-        self.start_walk(now, gpu, page, |_| WalkRec {
-            stations: Vec::new(),
-            prefetch: true,
-            hint_rail: None,
-        });
-    }
-
-    /// A page became available for `station`: fill its L1, drain its MSHR
-    /// entry (classifying primary + hit-under-miss waiters), retry stalls.
-    fn complete_station(
-        &mut self,
-        now: Time,
-        gpu: u32,
-        station: u32,
-        page: PageId,
-        outcome: PrimaryOutcome,
-    ) {
-        let (l1_evicted, reqs) = {
-            let mmu = self.shards.mmu_mut(gpu);
-            let evicted = mmu.l1[station as usize].fill(page.0);
-            (evicted, mmu.mshr[station as usize].complete(page))
-        };
-        self.emit(SessionEvent::TlbFill { gpu, page: page.0, victim: l1_evicted, l1: true });
-        for (i, rid) in reqs.into_iter().enumerate() {
-            let class = if i == 0 {
-                TransClass::Primary(outcome)
-            } else {
-                TransClass::MshrHit(outcome)
-            };
-            self.finish_translation(now, rid, class);
-        }
-        // MSHR slots freed: retry stalled requests (they re-run the L1
-        // stage; the page may now hit).
-        while self.shards.mmu(gpu).mshr[station as usize].has_free() {
-            match self.shards.mmu_mut(gpu).stalled[station as usize].pop_front() {
-                Some(rid) => self.engine.schedule_at(now, Ev::Retry { req: rid }),
-                None => break,
-            }
         }
     }
 
@@ -1818,6 +2298,13 @@ impl PodSim {
         ss.pending_ops += nops;
         ss.peak_pending = ss.peak_pending.max(ss.pending_ops);
         ss.job_active[row.job as usize] = true;
+        // Open-loop admission delay: how long the row sat queued between
+        // its trace arrival and this admission instant under the
+        // pending-op window (0 when admitted the moment it arrived).
+        self.emit(SessionEvent::RowAdmitted {
+            job: row.job,
+            queued: now.saturating_sub(row.arrival),
+        });
         ss.rows_admitted += 1;
     }
 
@@ -1961,14 +2448,33 @@ mod tests {
         // are bit-identical at any thread count.
         let fused = run(&small(8, 4 * MIB)).unwrap();
         for threads in [1u32, 3] {
-            let mut c = small(8, 4 * MIB);
-            c.engine = EnginePolicy::Sharded { threads };
-            let sharded = run(&c).unwrap();
-            assert_eq!(fused.completion, sharded.completion, "{threads} threads");
-            assert_eq!(fused.classes, sharded.classes, "{threads} threads");
-            assert_eq!(fused.breakdown, sharded.breakdown, "{threads} threads");
-            assert_eq!(fused.events, sharded.events, "{threads} threads: no extra events");
+            for parallel_dispatch in [true, false] {
+                let mut c = small(8, 4 * MIB);
+                c.engine = EnginePolicy::Sharded { threads, parallel_dispatch };
+                let sharded = run(&c).unwrap();
+                let tag = format!("{threads} threads pdisp={parallel_dispatch}");
+                assert_eq!(fused.completion, sharded.completion, "{tag}");
+                assert_eq!(fused.classes, sharded.classes, "{tag}");
+                assert_eq!(fused.breakdown, sharded.breakdown, "{tag}");
+                assert_eq!(fused.events, sharded.events, "{tag}: no extra events");
+            }
         }
+    }
+
+    /// Canary: a `Global`-affinity event routed down the shard-local
+    /// dispatch path must trip the debug affinity assertion rather than
+    /// silently corrupt shared state. Guards the classification table —
+    /// if a new global event is ever mis-filed as shard-local, this is
+    /// the failure mode that catches it.
+    #[test]
+    #[cfg(debug_assertions)]
+    #[should_panic(expected = "mis-classified")]
+    fn mis_classified_global_event_trips_affinity_canary() {
+        let mut c = small(8, MIB);
+        c.engine = EnginePolicy::sharded(2);
+        let sched = generators::alltoall_allpairs(8, MIB).unwrap();
+        let mut sim = PodSim::new(c, sched, Vec::new(), true).unwrap();
+        sim.dispatch_shard_local(0, Ev::StreamPump, 0);
     }
 
     #[test]
@@ -2368,13 +2874,18 @@ mod tests {
         let per_hop = run(&ph).unwrap();
         assert_eq!(fused.completion, per_hop.completion);
         assert_eq!(fused.faults, per_hop.faults, "fault books must match across engines");
+        // Faulty runs force serial dispatch (`try_parallel_run` bails when
+        // fault books are live), so pdisp on/off must be indistinguishable.
         for threads in [1u32, 3] {
-            let mut c = mk();
-            c.engine = EnginePolicy::Sharded { threads };
-            let sharded = run(&c).unwrap();
-            assert_eq!(fused.completion, sharded.completion, "{threads} threads");
-            assert_eq!(fused.faults, sharded.faults, "{threads} threads: fault books");
-            assert_eq!(fused.events, sharded.events, "{threads} threads: event stream");
+            for parallel_dispatch in [true, false] {
+                let mut c = mk();
+                c.engine = EnginePolicy::Sharded { threads, parallel_dispatch };
+                let sharded = run(&c).unwrap();
+                let tag = format!("{threads} threads pdisp={parallel_dispatch}");
+                assert_eq!(fused.completion, sharded.completion, "{tag}");
+                assert_eq!(fused.faults, sharded.faults, "{tag}: fault books");
+                assert_eq!(fused.events, sharded.events, "{tag}: event stream");
+            }
         }
     }
 

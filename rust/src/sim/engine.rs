@@ -112,9 +112,9 @@ impl<E: Clone> Engine<E> {
 
 /// The engine an `EnginePolicy` resolves to: the classic single-wheel
 /// [`Engine`] (`Fused` / `PerHop`) or the conservative-window
-/// [`ShardedEngine`] (`Sharded { threads }`). One uniform driver API so
-/// the model is engine-agnostic; both dispatch in exact `(time, seq)`
-/// order and therefore produce bit-identical runs.
+/// [`ShardedEngine`] (`Sharded { threads, parallel_dispatch }`). One
+/// uniform driver API so the model is engine-agnostic; both dispatch in
+/// exact `(time, seq)` order and therefore produce bit-identical runs.
 #[derive(Debug)]
 pub enum AnyEngine<E> {
     /// Single pending wheel, dispatch and drain on one thread.
@@ -174,6 +174,16 @@ impl<E> AnyEngine<E> {
         match self {
             AnyEngine::Single(e) => e.peek_time(),
             AnyEngine::Sharded(e) => e.peek_time(),
+        }
+    }
+
+    /// The sharded engine, when that's what this is — the hook for
+    /// run planning ([`ShardedEngine::plan_run`]); `None` means the
+    /// driver falls back to plain serial dispatch.
+    pub fn sharded_mut(&mut self) -> Option<&mut ShardedEngine<E>> {
+        match self {
+            AnyEngine::Single(_) => None,
+            AnyEngine::Sharded(e) => Some(e),
         }
     }
 }

@@ -24,7 +24,7 @@ pub mod wheel;
 pub use engine::{AnyEngine, Engine};
 pub use queue::EventQueue;
 pub use server::{BoundedServer, Server};
-pub use sharded::{ShardRoute, ShardedEngine};
+pub use sharded::{Affinity, RunPlan, ShardRoute, ShardedEngine};
 pub use wheel::TimingWheel;
 
 pub use crate::util::units::Time;

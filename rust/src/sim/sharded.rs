@@ -1,15 +1,16 @@
-//! Sharded pending-set engine: parallel conservative-window drain,
-//! serial exact-order dispatch.
+//! Sharded pending-set engine: parallel conservative-window drain plus
+//! conflict-free parallel dispatch runs, replayed in exact order.
 //!
-//! One big run is a single event stream, and most of that stream's
-//! *model* work (TLB lookups, MSHR bookkeeping, walker scheduling) must
+//! One big run is a single event stream whose *observable* order must
 //! stay serial to remain bit-deterministic: fabric admission is
 //! decision-ordered (`NetResources::path`), engine sequence numbers are
 //! allocated in dispatch order, and MSHR coalescing depends on arrival
-//! interleaving. What *can* parallelize safely is the pending set itself
-//! — the per-event cost of keeping millions of future events sorted.
+//! interleaving. Two things parallelize safely underneath that order:
+//! the pending set itself (keeping millions of future events sorted),
+//! and — since PR 10 — the *handler execution* of events whose state
+//! footprint is confined to one model shard.
 //!
-//! [`ShardedEngine`] therefore splits the pending set across `threads`
+//! [`ShardedEngine`] splits the pending set across `threads`
 //! [`TimingWheel`] shards (events routed by [`ShardRoute`], e.g.
 //! `gpu % shards`) and advances in conservative windows:
 //!
@@ -23,25 +24,36 @@
 //!    across OS threads (`std::thread::scope`) when the pending set is
 //!    large enough to pay for the spawns.
 //! 3. **Merge + dispatch** — the per-shard batches k-way-merge into one
-//!    stream in exact global `(time, seq)` order and dispatch serially.
-//!    Events a handler schedules *inside* the open window land in a
-//!    spill wheel that every [`ShardedEngine::next`] compares against
-//!    the merged batch head; events at or beyond the window end route to
-//!    their owner shard's wheel (the cross-shard mailbox).
+//!    stream in exact global `(time, seq)` order and dispatch from the
+//!    merged batch. Events a handler schedules *inside* the open window
+//!    land in a spill wheel that every [`ShardedEngine::next`] compares
+//!    against the merged batch head; events at or beyond the window end
+//!    route to their owner shard's wheel (the cross-shard mailbox).
+//! 4. **Runs** — a driver that knows each event's handler footprint
+//!    (see [`Affinity`]) can ask [`ShardedEngine::plan_run`] for the
+//!    longest prefix of the remaining batch that is *conflict-free*:
+//!    every event shard-local, none preceded by a pending spill event.
+//!    Those handlers may then execute in parallel (grouped by model
+//!    shard, side effects buffered), provided the effects are replayed
+//!    through [`ShardedEngine::next`] in exact `(time, seq)` order —
+//!    `plan_run` only peeks, so the replay drives the engine exactly as
+//!    serial dispatch would have. `Global` events dispatch serially as
+//!    before; they act as run barriers.
 //!
 //! Determinism is structural, not a tuning outcome: dispatch order is
-//! exact `(time, seq)` order regardless of the lookahead value or the
-//! thread count, so a sharded run is **bit-identical** to the
-//! single-wheel [`super::Engine`] (pinned by the in-module differential
-//! proptest and by `rust/tests/engine_diff.rs`). The lookahead only
-//! decides how many events each window amortizes its synchronization
-//! over — a wrong bound costs speed, never correctness.
+//! exact `(time, seq)` order regardless of the lookahead value, the
+//! thread count, or whether handlers executed inside a run, so a
+//! sharded run is **bit-identical** to the single-wheel
+//! [`super::Engine`] (pinned by the in-module differential proptests
+//! and by `rust/tests/engine_diff.rs`). The lookahead only decides how
+//! many events each window amortizes its synchronization over — a
+//! wrong bound costs speed, never correctness.
 
 use super::wheel::TimingWheel;
 use crate::util::units::Time;
 
 /// One pending event: `(time, seq, payload)`.
-type Item<E> = (Time, u64, E);
+pub type Item<E> = (Time, u64, E);
 
 /// Don't spawn drain threads below this many total pending events — the
 /// per-window `thread::scope` spawn/join cost (~10 µs) needs a few
@@ -59,6 +71,42 @@ pub trait ShardRoute {
     /// Owning shard index for this event, in `0..shards` (`shards ≥ 1`).
     fn route(&self, shards: usize) -> usize;
 }
+
+/// Handler footprint of one event, for conflict-free run formation
+/// ([`ShardedEngine::plan_run`]).
+///
+/// `Shard(s)` promises the handler (a) touches only shard `s`'s mutable
+/// model state (read-only globals are fine), (b) schedules only
+/// same-shard `Shard(s)` events at times inside the run bound, and
+/// (c) defers every other side effect into a buffer the driver replays
+/// serially. `Global` makes no promise and acts as a run barrier.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Affinity {
+    /// Handler confined to one model shard's mutable state.
+    Shard(u16),
+    /// Handler may touch anything; dispatches serially.
+    Global,
+}
+
+/// A planned conflict-free run over the open window's batch.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RunPlan {
+    /// Number of consecutive batch events (from the dispatch cursor)
+    /// that are shard-local and not preceded by any pending spill event.
+    pub len: usize,
+    /// Exclusive time bound for worker-side spawn execution: an event a
+    /// run handler schedules strictly below `bound` may execute inside
+    /// the run (it cannot be overtaken by any event outside the run).
+    pub bound: Time,
+}
+
+/// Synthetic per-run sequence base for worker-side spawns. Real engine
+/// seqs stay far below this, so ordering a worker's local heap by
+/// `(time, seq)` with spawn seqs counted up from here reproduces the
+/// serial tie-break: at equal time, batch events (scheduled before the
+/// window opened, hence with small real seqs) precede spawns (whose
+/// real seqs are allocated later, during replay).
+pub const SPAWN_SEQ_BASE: u64 = 1 << 62;
 
 /// The sharded event-loop driver: per-shard timing wheels drained in
 /// conservative windows, merged and dispatched in exact `(time, seq)`
@@ -79,6 +127,9 @@ pub struct ShardedEngine<E> {
     cursor: usize,
     /// Per-shard drain scratch, reused across windows.
     scratch: Vec<Vec<Item<E>>>,
+    /// K-way merge head positions, reused across windows (one per
+    /// shard; reallocation churn is visible at 4096-GPU scale).
+    merge_heads: Vec<usize>,
     /// Half-open end of the current window; schedules below it spill.
     window_end: Time,
     /// Conservative window span (min cross-shard causation delay).
@@ -103,6 +154,7 @@ impl<E> ShardedEngine<E> {
             batch: Vec::new(),
             cursor: 0,
             scratch: (0..threads).map(|_| Vec::new()).collect(),
+            merge_heads: vec![0; threads],
             window_end: 0,
             lookahead,
             processed: 0,
@@ -154,6 +206,45 @@ impl<E> ShardedEngine<E> {
             });
         }
         best.map(|(t, _)| t)
+    }
+
+    /// Plan the longest conflict-free run from the current dispatch
+    /// position: consecutive batch events that are shard-local per
+    /// `affinity` and not overtaken by any pending spill event.
+    ///
+    /// The scan only *peeks* — nothing is consumed. A driver that
+    /// executes the run's handlers in parallel must still pop every run
+    /// event (and every in-run spawn) through [`Self::next`] while
+    /// replaying the buffered side effects, so `now`, `seq`, and
+    /// `processed` advance exactly as under serial dispatch.
+    ///
+    /// Run formation invariants:
+    /// - Events at the spill frontier time still join the run: spill
+    ///   events were scheduled *during* this window's dispatch, so their
+    ///   seqs exceed every batch seq and they dispatch after same-time
+    ///   batch events. The scan stops strictly *beyond* the spill time.
+    /// - `bound` is capped by the window end, the spill frontier, and
+    ///   the first excluded event's time, so a worker-side spawn below
+    ///   `bound` cannot be overtaken by anything outside the run.
+    pub fn plan_run<F: Fn(&E) -> Affinity>(&mut self, affinity: F) -> RunPlan {
+        let spill_t = self.spill.peek_key().map_or(Time::MAX, |(t, _)| t);
+        let mut len = 0usize;
+        let mut bound = self.window_end.min(spill_t);
+        for &(t, _, ref ev) in &self.batch[self.cursor..] {
+            if t > spill_t || matches!(affinity(ev), Affinity::Global) {
+                bound = bound.min(t);
+                break;
+            }
+            len += 1;
+        }
+        RunPlan { len, bound }
+    }
+
+    /// The remaining (undispatched) slice of the open window's batch.
+    /// The first `RunPlan::len` items of this slice form the planned
+    /// run; the driver partitions them by shard for the workers.
+    pub fn run_items(&self) -> &[Item<E>] {
+        &self.batch[self.cursor..]
     }
 }
 
@@ -264,20 +355,22 @@ impl<E: ShardRoute + Clone + Send> ShardedEngine<E> {
         }
         // K-way merge of the sorted per-shard batches. Linear head scan:
         // shard counts are small (≈ core counts), so the scan beats a
-        // heap's constant factor.
-        let mut heads = vec![0usize; self.scratch.len()];
+        // heap's constant factor. Head positions live in an engine-owned
+        // buffer so the merge allocates nothing per window.
+        self.merge_heads.clear();
+        self.merge_heads.resize(self.scratch.len(), 0);
         loop {
             let mut best: Option<(usize, (Time, u64))> = None;
             for (i, b) in self.scratch.iter().enumerate() {
-                if let Some(&(t, s, _)) = b.get(heads[i]) {
+                if let Some(&(t, s, _)) = b.get(self.merge_heads[i]) {
                     if best.is_none_or(|(_, k)| (t, s) < k) {
                         best = Some((i, (t, s)));
                     }
                 }
             }
             let Some((i, _)) = best else { break };
-            self.batch.push(self.scratch[i][heads[i]].clone());
-            heads[i] += 1;
+            self.batch.push(self.scratch[i][self.merge_heads[i]].clone());
+            self.merge_heads[i] += 1;
         }
         for b in &mut self.scratch {
             b.clear();
@@ -486,6 +579,187 @@ mod tests {
                 .iter()
                 .all(|&(threads, lookahead)| {
                     drive_sharded(threads, lookahead, seeds) == reference
+                })
+        });
+    }
+
+    /// Toy affinity table: multiples of 7 are `Global` barriers, every
+    /// other payload is local to its routing shard (`v % shards`, the
+    /// same mapping as [`ShardRoute`] — mirroring the real model, where
+    /// shard-local events route by their owning GPU).
+    fn toy_aff(v: u64, shards: usize) -> Affinity {
+        if v % 7 == 0 {
+            Affinity::Global
+        } else {
+            Affinity::Shard((v as usize % shards) as u16)
+        }
+    }
+
+    /// Child rule honoring the affinity contract: shard-local parents
+    /// spawn shard-local *same-shard* children (value preserved mod 84 =
+    /// lcm(7, 12), covering every shard count the tests use), while
+    /// `Global` parents spawn arbitrary children (they dispatch
+    /// serially, so no promise is needed).
+    fn toy_child(v: u64) -> Option<u64> {
+        if v % 7 == 0 {
+            (v >= 4).then(|| v / 4)
+        } else if v >= 336 {
+            let c = v / 4;
+            Some(c - c % 84 + v % 84)
+        } else {
+            None
+        }
+    }
+
+    /// Serial reference for the affinity-aware model.
+    fn drive_aff_single(seeds: &[(Time, u64)]) -> Vec<(Time, u64)> {
+        let mut e: Engine<Ev> = Engine::new();
+        for &(t, v) in seeds {
+            e.schedule_at(t, Ev(v));
+        }
+        let mut log = Vec::new();
+        while let Some((t, Ev(v))) = e.next() {
+            log.push((t, v));
+            if let Some(c) = toy_child(v) {
+                e.schedule_at(t + child_delay(v), Ev(c));
+            }
+        }
+        log
+    }
+
+    /// The full parallel-dispatch protocol over the toy model: plan a
+    /// conflict-free run, execute each shard's slice through a local
+    /// `(time, seq)` heap (in-run spawns below the bound join the heap
+    /// with synthetic seqs from [`SPAWN_SEQ_BASE`]), then replay by
+    /// popping the engine exactly once per record, asserting each pop
+    /// matches its shard's next record, and re-applying the recorded
+    /// schedules so real seq assignment matches serial dispatch.
+    fn drive_aff_parallel(threads: usize, lookahead: Time, seeds: &[(Time, u64)]) -> Vec<(Time, u64)> {
+        use std::cmp::Reverse;
+        use std::collections::{BinaryHeap, VecDeque};
+        let n = threads.max(1);
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(threads, lookahead, 64);
+        for &(t, v) in seeds {
+            e.schedule_at(t, Ev(v));
+        }
+        let mut log = Vec::new();
+        loop {
+            let plan = e.plan_run(|ev: &Ev| toy_aff(ev.0, n));
+            if plan.len >= 2 {
+                let mut per: Vec<Vec<Item<Ev>>> = vec![Vec::new(); n];
+                for it in &e.run_items()[..plan.len] {
+                    let Affinity::Shard(s) = toy_aff(it.2 .0, n) else { unreachable!() };
+                    per[s as usize].push(*it);
+                }
+                // Worker phase: each record carries its spawn so the
+                // replay can re-schedule it (in-run spawns included —
+                // the replay pops them again, consuming their records).
+                let mut recs: Vec<VecDeque<(Time, u64, Option<(Time, u64)>)>> =
+                    (0..n).map(|_| VecDeque::new()).collect();
+                let mut total = 0usize;
+                for (s, items) in per.into_iter().enumerate() {
+                    let mut heap: BinaryHeap<Reverse<(Time, u64, u64)>> =
+                        items.into_iter().map(|(t, q, Ev(v))| Reverse((t, q, v))).collect();
+                    let mut spawn_seq = SPAWN_SEQ_BASE;
+                    while let Some(Reverse((t, _, v))) = heap.pop() {
+                        let spawn = toy_child(v).map(|c| (t + child_delay(v), c));
+                        if let Some((at, c)) = spawn {
+                            if at < plan.bound {
+                                assert!(
+                                    matches!(toy_aff(c, n), Affinity::Shard(x) if x as usize == s),
+                                    "in-run spawn must stay on its shard"
+                                );
+                                heap.push(Reverse((at, spawn_seq, c)));
+                                spawn_seq += 1;
+                            }
+                        }
+                        recs[s].push_back((t, v, spawn));
+                        total += 1;
+                    }
+                }
+                // Replay phase: exact (time, seq) order via the engine.
+                for _ in 0..total {
+                    let (t, Ev(v)) = e.next().expect("replay pop within run span");
+                    let Affinity::Shard(s) = toy_aff(v, n) else {
+                        panic!("global event popped inside a run")
+                    };
+                    let (rt, rv, spawn) =
+                        recs[s as usize].pop_front().expect("record for replay pop");
+                    assert_eq!((rt, rv), (t, v), "replay order mismatch");
+                    log.push((t, v));
+                    if let Some((at, c)) = spawn {
+                        e.schedule_at(at, Ev(c));
+                    }
+                }
+                assert!(recs.iter().all(VecDeque::is_empty), "all records consumed");
+            } else {
+                match e.next() {
+                    Some((t, Ev(v))) => {
+                        log.push((t, v));
+                        if let Some(c) = toy_child(v) {
+                            e.schedule_at(t + child_delay(v), Ev(c));
+                        }
+                    }
+                    None => break,
+                }
+            }
+        }
+        assert!(e.idle());
+        log
+    }
+
+    #[test]
+    fn plan_run_stops_at_global_and_spill_frontiers() {
+        let mut e: ShardedEngine<Ev> = ShardedEngine::with_capacity(2, 1_000, 16);
+        e.schedule_at(10, Ev(1));
+        e.schedule_at(20, Ev(2));
+        e.schedule_at(30, Ev(7)); // multiple of 7 ⇒ Global barrier
+        e.schedule_at(40, Ev(4));
+        assert_eq!(e.next(), Some((10, Ev(1)))); // opens the [10, 1010) window
+        let plan = e.plan_run(|ev: &Ev| toy_aff(ev.0, 2));
+        assert_eq!(plan.len, 1, "only Ev(2): the Global at t=30 is a barrier");
+        assert_eq!(plan.bound, 30, "bound capped by the barrier's time");
+        // A spill event ahead of the batch head blocks the run entirely.
+        e.schedule_at(15, Ev(1));
+        let plan = e.plan_run(|ev: &Ev| toy_aff(ev.0, 2));
+        assert_eq!(plan.len, 0, "spill frontier precedes the batch head");
+        assert_eq!(plan.bound, 15);
+    }
+
+    #[test]
+    fn parallel_runs_match_serial_dispatch_exactly() {
+        let seeds: Vec<(Time, u64)> =
+            (0..300).map(|i| ((i * 7919) % 30_000, (i * 104_729) % (1 << 14))).collect();
+        let reference = drive_aff_single(&seeds);
+        for threads in [1, 2, 4] {
+            for lookahead in [1, 317, 4_096, 1_000_000] {
+                assert_eq!(
+                    drive_aff_parallel(threads, lookahead, &seeds),
+                    reference,
+                    "threads={threads} lookahead={lookahead}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn prop_parallel_runs_match_serial_across_boundaries() {
+        // The run/replay differential: random shard-local/global
+        // interleavings and window alignments must dispatch identically
+        // whether handlers execute serially or inside planned runs.
+        let strat = VecOf {
+            elem: PairOf(
+                RangeU64 { lo: 0, hi: 60_000 },
+                RangeU64 { lo: 0, hi: 1 << 16 },
+            ),
+            max_len: 100,
+        };
+        check("sharded-parallel-runs", &strat, 60, |seeds| {
+            let reference = drive_aff_single(seeds);
+            [(1usize, 1u64), (2, 317), (3, 4_096), (4, 65_536)]
+                .iter()
+                .all(|&(threads, lookahead)| {
+                    drive_aff_parallel(threads, lookahead, seeds) == reference
                 })
         });
     }

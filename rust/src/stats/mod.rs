@@ -6,4 +6,6 @@ pub mod plot;
 pub mod run;
 
 pub use histogram::LogHistogram;
-pub use run::{FaultStats, JobFaultStats, LatencyBreakdown, RunStats, TierFaultStats, TierStats};
+pub use run::{
+    FaultStats, JobFaultStats, JobStats, LatencyBreakdown, RunStats, TierFaultStats, TierStats,
+};

@@ -224,12 +224,28 @@ pub struct JobStats {
     /// Reverse-translation latency histogram over the job's inter-node
     /// requests (empty if the job never crossed a node boundary).
     pub rat_hist: LogHistogram,
+    /// Trace rows admitted for this job (stream-backed runs only; 0 for
+    /// schedule-backed runs, whose jobs arrive whole).
+    pub rows_admitted: u64,
+    /// Summed open-loop admission delay over those rows, ps: time each
+    /// row waited between its trace arrival and its admission instant
+    /// under the pending-op window.
+    pub admission_wait: u128,
 }
 
 impl JobStats {
     /// Job latency — completion minus arrival (the serving-level metric).
     pub fn latency(&self) -> Time {
         self.completion.saturating_sub(self.arrival)
+    }
+
+    /// Mean open-loop admission delay per admitted row, ns (0 when the
+    /// run is schedule-backed or nothing ever queued).
+    pub fn mean_admission_wait_ns(&self) -> f64 {
+        if self.rows_admitted == 0 {
+            return 0.0;
+        }
+        to_ns((self.admission_wait / self.rows_admitted as u128) as u64)
     }
 
     /// p50 request round-trip latency, ns (log₂-bucket upper bound).
@@ -261,6 +277,8 @@ impl JobStats {
             ("rtt_p95_ns", Json::from(self.rtt_p95_ns())),
             ("rtt_p99_ns", Json::from(self.rtt_p99_ns())),
             ("mean_rat_ns", Json::from(to_ns(self.rat_hist.mean() as u64))),
+            ("rows_admitted", Json::from(self.rows_admitted)),
+            ("mean_admission_wait_ns", Json::from(self.mean_admission_wait_ns())),
         ])
     }
 }

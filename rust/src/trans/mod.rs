@@ -16,7 +16,7 @@ pub mod walker;
 
 pub use class::TransClass;
 pub use mshr::MshrFile;
-pub use prefetch::{Hint, PrefetchCounters, Prefetcher};
+pub use prefetch::{Hint, PrefetchCounters, Prefetcher, PrefetchShard};
 pub use pwc::PwcStack;
 pub use tlb::Tlb;
 pub use walker::WalkerPool;

@@ -62,28 +62,100 @@ pub struct PrefetchCounters {
     pub deferred: u64,
 }
 
-/// Per-pod hint pacing state. The pod simulation owns one and consults it
-/// from its `PrefetchIssue`/`PrefetchDone` handlers.
+/// One shard's slice of the hint pacing state, striped `gpu % shards`
+/// to match `pod::shard::ShardSet` (local index `gpu / shards`). Under
+/// parallel dispatch each worker thread owns exactly one `PrefetchShard`
+/// `&mut` alongside its `GpuShardState`, so shard-local handlers mutate
+/// pacing and counters without synchronization; totals are summed
+/// (commutatively — all `u64` adds) at scrape time.
+#[derive(Debug)]
+pub struct PrefetchShard {
+    policy: PrefetchPolicy,
+    /// Per-GPU hints waiting for a free hint-walk slot (FIFO),
+    /// local-index order.
+    backlog: Vec<VecDeque<Hint>>,
+    /// Per-GPU hint walks currently in flight, local-index order.
+    in_flight: Vec<u32>,
+    /// This shard's slice of the hint accounting.
+    pub counters: PrefetchCounters,
+    /// Completed prefetch-tagged walks (hint + stride) on this shard's
+    /// GPUs (`RunStats::prefetch_walks` sums across shards).
+    pub walks: u64,
+}
+
+impl PrefetchShard {
+    /// Can the GPU at `local` start another hint walk right now?
+    pub fn has_slot(&self, local: usize) -> bool {
+        self.in_flight[local] < self.policy.max_in_flight()
+    }
+
+    /// Account a hint walk entering the walker pipeline.
+    pub fn start(&mut self, local: usize) {
+        self.in_flight[local] += 1;
+        self.counters.issued += 1;
+    }
+
+    /// Park a hint that hit the rate cap; reissued via `next_deferred`.
+    pub fn defer(&mut self, local: usize, hint: Hint) {
+        self.backlog[local].push_back(hint);
+        self.counters.deferred += 1;
+    }
+
+    /// Account a hint walk completing. `untouched` = no demand request
+    /// attached while it was in flight (fully hidden ⇒ useful).
+    pub fn complete(&mut self, local: usize, untouched: bool) {
+        debug_assert!(self.in_flight[local] > 0, "hint walk completion underflow");
+        self.in_flight[local] -= 1;
+        if untouched {
+            self.counters.useful += 1;
+        } else {
+            self.counters.late += 1;
+        }
+    }
+
+    /// Pop the oldest deferred hint for the GPU at `local`, if any.
+    pub fn next_deferred(&mut self, local: usize) -> Option<Hint> {
+        self.backlog[local].pop_front()
+    }
+}
+
+/// Per-pod hint pacing state, striped across model shards. The pod
+/// simulation owns one and consults it from its `PrefetchIssue` /
+/// `PrefetchDone` handlers — through the per-GPU delegating API on the
+/// serial path, or through disjoint [`PrefetchShard`] `&mut`s
+/// ([`Prefetcher::shards_mut`]) under parallel dispatch.
 #[derive(Debug)]
 pub struct Prefetcher {
     policy: PrefetchPolicy,
-    /// Per-GPU hints waiting for a free hint-walk slot (FIFO).
-    backlog: Vec<VecDeque<Hint>>,
-    /// Per-GPU hint walks currently in flight.
-    in_flight: Vec<u32>,
-    /// Run-wide hint accounting (reported through `RunStats`).
-    pub counters: PrefetchCounters,
+    shards: Vec<PrefetchShard>,
+    nshards: usize,
 }
 
 impl Prefetcher {
-    /// Build the pacing state for `gpus` GPUs under `policy`.
-    pub fn new(policy: PrefetchPolicy, gpus: u32) -> Self {
-        Self {
-            policy,
-            backlog: (0..gpus).map(|_| VecDeque::new()).collect(),
-            in_flight: vec![0; gpus as usize],
-            counters: PrefetchCounters::default(),
-        }
+    /// Build the pacing state for `gpus` GPUs under `policy`, striped
+    /// over `shards` model shards (1 for the single-wheel engines).
+    pub fn new(policy: PrefetchPolicy, gpus: u32, shards: usize) -> Self {
+        let n = shards.max(1);
+        let shards = (0..n)
+            .map(|s| {
+                // GPUs s, s + n, s + 2n, ... land on shard s.
+                let local_gpus = (gpus as usize).saturating_sub(s).div_ceil(n);
+                PrefetchShard {
+                    policy,
+                    backlog: (0..local_gpus).map(|_| VecDeque::new()).collect(),
+                    in_flight: vec![0; local_gpus],
+                    counters: PrefetchCounters::default(),
+                    walks: 0,
+                }
+            })
+            .collect();
+        Self { policy, shards, nshards: n }
+    }
+
+    /// (shard, local index) of `gpu` under the striping.
+    #[inline]
+    fn slot(&self, gpu: u32) -> (usize, usize) {
+        (gpu as usize % self.nshards, gpu as usize / self.nshards)
     }
 
     /// The active policy.
@@ -98,46 +170,79 @@ impl Prefetcher {
 
     /// Can `gpu` start another hint walk right now?
     pub fn has_slot(&self, gpu: u32) -> bool {
-        self.in_flight[gpu as usize] < self.policy.max_in_flight()
+        let (s, i) = self.slot(gpu);
+        self.shards[s].has_slot(i)
     }
 
     /// Account a hint walk entering the walker pipeline.
     pub fn start(&mut self, gpu: u32) {
-        self.in_flight[gpu as usize] += 1;
-        self.counters.issued += 1;
+        let (s, i) = self.slot(gpu);
+        self.shards[s].start(i);
     }
 
     /// Park a hint that hit the rate cap; reissued via `next_deferred`.
     pub fn defer(&mut self, gpu: u32, hint: Hint) {
-        self.backlog[gpu as usize].push_back(hint);
-        self.counters.deferred += 1;
+        let (s, i) = self.slot(gpu);
+        self.shards[s].defer(i, hint);
     }
 
     /// Account a hint walk completing. `untouched` = no demand request
     /// attached while it was in flight (fully hidden ⇒ useful).
     pub fn complete(&mut self, gpu: u32, untouched: bool) {
-        debug_assert!(self.in_flight[gpu as usize] > 0, "hint walk completion underflow");
-        self.in_flight[gpu as usize] -= 1;
-        if untouched {
-            self.counters.useful += 1;
-        } else {
-            self.counters.late += 1;
-        }
+        let (s, i) = self.slot(gpu);
+        self.shards[s].complete(i, untouched);
     }
 
     /// Pop the oldest deferred hint for `gpu`, if any.
     pub fn next_deferred(&mut self, gpu: u32) -> Option<Hint> {
-        self.backlog[gpu as usize].pop_front()
+        let (s, i) = self.slot(gpu);
+        self.shards[s].next_deferred(i)
+    }
+
+    /// One shard's pacing state, mutably (serial shard-local dispatch).
+    #[inline]
+    pub fn shard_mut(&mut self, shard: usize) -> &mut PrefetchShard {
+        &mut self.shards[shard]
+    }
+
+    /// All shards as disjoint `&mut`s — the parallel-dispatch workers
+    /// each take exactly one.
+    #[inline]
+    pub fn shards_mut(&mut self) -> &mut [PrefetchShard] {
+        &mut self.shards
+    }
+
+    /// Run-wide hint accounting, summed across shards (all-`u64` sums,
+    /// so the total is independent of the shard count).
+    pub fn counters(&self) -> PrefetchCounters {
+        let mut total = PrefetchCounters::default();
+        for s in &self.shards {
+            total.issued += s.counters.issued;
+            total.useful += s.counters.useful;
+            total.late += s.counters.late;
+            total.useless += s.counters.useless;
+            total.deferred += s.counters.deferred;
+        }
+        total
+    }
+
+    /// Completed prefetch-tagged walks across all shards.
+    pub fn walks_total(&self) -> u64 {
+        self.shards.iter().map(|s| s.walks).sum()
     }
 
     /// Hint walks in flight across all GPUs (conservation checks).
     pub fn in_flight_total(&self) -> u64 {
-        self.in_flight.iter().map(|&n| n as u64).sum()
+        self.shards
+            .iter()
+            .flat_map(|s| s.in_flight.iter())
+            .map(|&n| n as u64)
+            .sum()
     }
 
     /// Deferred hints not yet reissued (must be 0 once the run drains).
     pub fn backlog_total(&self) -> usize {
-        self.backlog.iter().map(VecDeque::len).sum()
+        self.shards.iter().flat_map(|s| s.backlog.iter()).map(VecDeque::len).sum()
     }
 
     /// Plan the hint stream for one schedule op: every page of the op's
@@ -195,7 +300,7 @@ mod tests {
     #[test]
     fn off_policy_plans_nothing() {
         let cfg = paper_baseline(16, MIB);
-        let p = Prefetcher::new(PrefetchPolicy::Off, 16);
+        let p = Prefetcher::new(PrefetchPolicy::Off, 16, 1);
         assert!(!p.enabled());
         assert!(p.plan_op(&cfg, 4, &op(0, 8 * MIB)).is_empty());
         assert!(!p.has_slot(0), "off policy has no hint slots");
@@ -204,7 +309,7 @@ mod tests {
     #[test]
     fn plan_covers_exactly_the_receive_range() {
         let cfg = paper_baseline(16, MIB); // 2 MiB pages
-        let p = Prefetcher::new(PrefetchPolicy::Fused, 16);
+        let p = Prefetcher::new(PrefetchPolicy::Fused, 16, 1);
         // [3 MiB, 11 MiB) spans pages 1..=5.
         let hints = p.plan_op(&cfg, 7, &op(3 * MIB, 8 * MIB));
         assert_eq!(hints.len(), 5);
@@ -216,7 +321,7 @@ mod tests {
     #[test]
     fn sw_guided_staggers_and_lead_saturates() {
         let cfg = paper_baseline(16, MIB);
-        let p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 4 }, 16);
+        let p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 4 }, 16, 1);
         let hints = p.plan_op(&cfg, 0, &op(0, 8 * MIB));
         assert_eq!(hints.len(), 4);
         // Zero lead: dues follow the arrival estimate, strictly increasing
@@ -226,20 +331,23 @@ mod tests {
             assert!(w[0].0 < w[1].0, "dues must be staggered: {:?}", hints);
         }
         // A generous lead pulls every hint to the op start.
-        let eager = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: us(50), rate: 4 }, 16);
+        let eager =
+            Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: us(50), rate: 4 }, 16, 1);
         assert!(eager.plan_op(&cfg, 0, &op(0, 8 * MIB)).iter().all(|&(due, _)| due == 0));
     }
 
     #[test]
     fn pacing_and_counters_reconcile() {
-        let mut p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 2 }, 4);
+        // 3-way striping: the per-GPU delegating API must behave exactly
+        // as the old flat layout did, with counters summed across shards.
+        let mut p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 2 }, 4, 3);
         assert!(p.has_slot(1));
         p.start(1);
         p.start(1);
         assert!(!p.has_slot(1), "rate cap of 2 reached");
         assert!(p.has_slot(2), "caps are per GPU");
         p.defer(1, Hint { page: PageId(9), rail: 3 });
-        assert_eq!(p.counters.deferred, 1);
+        assert_eq!(p.counters().deferred, 1);
         p.complete(1, true);
         assert!(p.has_slot(1));
         let h = p.next_deferred(1).unwrap();
@@ -250,14 +358,34 @@ mod tests {
         p.complete(1, false);
         assert_eq!(p.in_flight_total(), 0);
         assert_eq!(p.backlog_total(), 0);
-        let c = p.counters;
+        let c = p.counters();
         assert_eq!((c.issued, c.useful, c.late), (3, 1, 2));
         assert_eq!(c.issued, c.useful + c.late, "every issued hint walk completes");
     }
 
     #[test]
+    fn striping_isolates_shards_and_totals_sum() {
+        // GPUs 0..8 over 3 shards: shard 0 = {0,3,6}, 1 = {1,4,7},
+        // 2 = {2,5}. Shard-local access via (gpu % n, gpu / n) must hit
+        // the same state the per-GPU API does.
+        let mut p = Prefetcher::new(PrefetchPolicy::SwGuided { lead_ps: 0, rate: 2 }, 8, 3);
+        p.start(4); // shard 1, local 1
+        p.shard_mut(1).start(1); // gpu 4 again, via the shard handle
+        assert!(!p.has_slot(4), "both paths hit the same slot state");
+        assert!(p.has_slot(1), "gpu 1 (same shard, different local) unaffected");
+        p.shard_mut(2).walks += 5;
+        p.shard_mut(0).walks += 2;
+        assert_eq!(p.walks_total(), 7);
+        assert_eq!(p.counters().issued, 2);
+        assert_eq!(p.in_flight_total(), 2);
+        p.complete(4, true);
+        p.shard_mut(1).complete(1, false);
+        assert_eq!(p.in_flight_total(), 0);
+    }
+
+    #[test]
     fn fused_never_defers() {
-        let p = Prefetcher::new(PrefetchPolicy::Fused, 2);
+        let p = Prefetcher::new(PrefetchPolicy::Fused, 2, 2);
         assert_eq!(p.policy().max_in_flight(), u32::MAX);
         assert!(p.has_slot(0));
     }

@@ -7,9 +7,11 @@
 //! including prefetch-enabled and stall-heavy configurations. The raw
 //! processed-event count may (and must) differ for `PerHop` — it
 //! materializes marker events the fused engine doesn't — and must be
-//! **equal** for `Sharded { threads }` at every thread count: the
-//! sharded engine dispatches the identical event stream, only the
-//! pending-set maintenance is parallel.
+//! **equal** for `Sharded { threads, parallel_dispatch }` at every
+//! thread count with parallel dispatch both on and off: the sharded
+//! engine dispatches the identical event stream, whether the pending-set
+//! maintenance alone is parallel (`:serial`) or conflict-free handler
+//! runs execute on worker threads too (the default).
 //!
 //! Runs go through the session API (`SessionBuilder::engine`), so this
 //! grid simultaneously pins the default session's stock-observer
@@ -79,6 +81,12 @@ fn assert_stats_identical(fused: &RunStats, per_hop: &RunStats, label: &str) {
         assert_eq!(f.completion, p.completion, "{label}: job `{}` completion", f.name);
         assert_eq!(f.rtt_hist, p.rtt_hist, "{label}: job `{}` RTT histogram", f.name);
         assert_eq!(f.rat_hist, p.rat_hist, "{label}: job `{}` RAT histogram", f.name);
+        assert_eq!(f.rows_admitted, p.rows_admitted, "{label}: job `{}` rows admitted", f.name);
+        assert_eq!(
+            f.admission_wait, p.admission_wait,
+            "{label}: job `{}` admission wait",
+            f.name
+        );
     }
     assert_eq!(
         fused.cross_job_l1_evictions, per_hop.cross_job_l1_evictions,
@@ -139,15 +147,22 @@ fn run_engine(cfg: &PodConfig, policy: EnginePolicy, label: &str) -> RunStats {
 }
 
 /// Every grid point runs all engine policies: fused vs per-hop (marker
-/// events extra), and fused vs sharded at 1, 2 and 4 threads (bit-equal,
-/// events included).
+/// events extra), and fused vs sharded at 1, 2 and 4 threads with
+/// parallel dispatch both on and off (bit-equal, events included).
 fn run_both(cfg: PodConfig, label: &str) {
     let fused = run_engine(&cfg, EnginePolicy::Fused, label);
     let per_hop = run_engine(&cfg, EnginePolicy::PerHop, label);
     assert_bit_identical(&fused, &per_hop, label);
     for threads in [1u32, 2, 4] {
-        let sharded = run_engine(&cfg, EnginePolicy::Sharded { threads }, label);
-        assert_bit_identical_with_events(&fused, &sharded, &format!("{label} sharded:{threads}"));
+        for parallel_dispatch in [true, false] {
+            let policy = EnginePolicy::Sharded { threads, parallel_dispatch };
+            let sharded = run_engine(&cfg, policy, label);
+            assert_bit_identical_with_events(
+                &fused,
+                &sharded,
+                &format!("{label} {}", policy.spec()),
+            );
+        }
     }
 }
 
@@ -340,13 +355,19 @@ fn multi_tenant_workloads_are_bit_identical() {
         .unwrap()
         .run_to_completion();
     assert_bit_identical(&fused, &per_hop, "multi-tenant");
-    let sharded = SessionBuilder::new(&cfg)
-        .workload(w)
-        .engine(EnginePolicy::Sharded { threads: 4 })
-        .build()
-        .unwrap()
-        .run_to_completion();
-    assert_bit_identical_with_events(&fused, &sharded, "multi-tenant sharded:4");
+    for parallel_dispatch in [true, false] {
+        let sharded = SessionBuilder::new(&cfg)
+            .workload(w.clone())
+            .engine(EnginePolicy::Sharded { threads: 4, parallel_dispatch })
+            .build()
+            .unwrap()
+            .run_to_completion();
+        assert_bit_identical_with_events(
+            &fused,
+            &sharded,
+            &format!("multi-tenant sharded:4 pdisp={parallel_dispatch}"),
+        );
+    }
 }
 
 #[test]
@@ -379,8 +400,11 @@ fn streaming_trace_replay_is_bit_identical() {
     let per_hop = run(&cfg, EnginePolicy::PerHop, "stream");
     assert_bit_identical(&fused, &per_hop, "stream");
     for threads in [1u32, 2, 4] {
-        let sharded = run(&cfg, EnginePolicy::Sharded { threads }, "stream");
-        assert_bit_identical_with_events(&fused, &sharded, &format!("stream sharded:{threads}"));
+        for parallel_dispatch in [true, false] {
+            let policy = EnginePolicy::Sharded { threads, parallel_dispatch };
+            let sharded = run(&cfg, policy, "stream");
+            assert_bit_identical_with_events(&fused, &sharded, &format!("stream {}", policy.spec()));
+        }
     }
 
     // One flap-faulted streaming point: capped-backoff retries riding the
@@ -391,7 +415,7 @@ fn streaming_trace_replay_is_bit_identical() {
     let f_per_hop = run(&flap, EnginePolicy::PerHop, "stream-flap");
     assert_bit_identical(&f_fused, &f_per_hop, "stream-flap");
     for threads in [1u32, 4] {
-        let f_sharded = run(&flap, EnginePolicy::Sharded { threads }, "stream-flap");
+        let f_sharded = run(&flap, EnginePolicy::sharded(threads), "stream-flap");
         assert_bit_identical_with_events(
             &f_fused,
             &f_sharded,
@@ -409,10 +433,20 @@ fn sharded_repeat_runs_are_deterministic_across_thread_counts() {
     let mut cfg = base(16, 8 * MIB);
     cfg.trans.prefetch_policy = PrefetchPolicy::sw_guided_default();
     cfg.workload.trace_source_gpu = Some(0);
-    let reference = run_engine(&cfg, EnginePolicy::Sharded { threads: 2 }, "repeat-ref");
+    let reference = run_engine(&cfg, EnginePolicy::sharded(2), "repeat-ref");
     for (threads, label) in [(2u32, "repeat-2a"), (2, "repeat-2b"), (4, "repeat-4"), (7, "repeat-7")]
     {
-        let again = run_engine(&cfg, EnginePolicy::Sharded { threads }, label);
+        let again = run_engine(&cfg, EnginePolicy::sharded(threads), label);
         assert_bit_identical_with_events(&reference, &again, label);
+    }
+    // Serial dispatch at the same thread counts must reproduce the
+    // parallel-dispatch reference too — the run plan changes nothing.
+    for threads in [2u32, 4] {
+        let serial = run_engine(
+            &cfg,
+            EnginePolicy::Sharded { threads, parallel_dispatch: false },
+            "repeat-serial",
+        );
+        assert_bit_identical_with_events(&reference, &serial, &format!("repeat-serial:{threads}"));
     }
 }

@@ -52,14 +52,19 @@ fn same_seed_is_bit_identical_across_repeats_and_threads() {
     let again = run(&cfg);
     assert_eq!(reference.completion, again.completion, "repeat run diverged");
     assert_eq!(reference.faults, again.faults, "repeat fault books diverged");
-    // Every sharded thread count dispatches the same stream.
+    // Every sharded thread count dispatches the same stream. Parallel
+    // dispatch must not change that: fault-injected runs force the
+    // serial path, so pdisp on and off are indistinguishable.
     for threads in [1u32, 2, 4] {
-        let mut c = cfg.clone();
-        c.engine = EnginePolicy::Sharded { threads };
-        let sharded = run(&c);
-        assert_eq!(reference.completion, sharded.completion, "{threads} threads: completion");
-        assert_eq!(reference.events, sharded.events, "{threads} threads: event count");
-        assert_eq!(reference.faults, sharded.faults, "{threads} threads: fault books");
+        for parallel_dispatch in [true, false] {
+            let mut c = cfg.clone();
+            c.engine = EnginePolicy::Sharded { threads, parallel_dispatch };
+            let sharded = run(&c);
+            let tag = format!("{threads} threads pdisp={parallel_dispatch}");
+            assert_eq!(reference.completion, sharded.completion, "{tag}: completion");
+            assert_eq!(reference.events, sharded.events, "{tag}: event count");
+            assert_eq!(reference.faults, sharded.faults, "{tag}: fault books");
+        }
     }
 }
 
@@ -118,7 +123,7 @@ fn prop_fault_books_are_seed_deterministic_and_conserved() {
         let a = run(&cfg);
         let b = run(&cfg);
         let mut sharded_cfg = cfg.clone();
-        sharded_cfg.engine = EnginePolicy::Sharded { threads: 2 };
+        sharded_cfg.engine = EnginePolicy::sharded(2);
         let c = run(&sharded_cfg);
         assert_conserved(&a.faults, "prop");
         a.faults == b.faults

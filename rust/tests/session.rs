@@ -2,9 +2,9 @@
 //!
 //! * stepping (`step` / `run_until`) then finishing is **bit-identical**
 //!   to an uninterrupted run, across engine policies;
-//! * the sharded engine is a drop-in: `Sharded { threads }` sessions
-//!   reproduce `Fused` bit-for-bit at every entry point (the full preset
-//!   grid lives in `engine_diff.rs`);
+//! * the sharded engine is a drop-in: `Sharded { threads, .. }` sessions
+//!   reproduce `Fused` bit-for-bit at every entry point, with parallel
+//!   dispatch on or off (the full preset grid lives in `engine_diff.rs`);
 //! * observers see monotonically non-decreasing timestamps on `on_event`
 //!   and `on_request_done` (and the dispatch clock never outruns them);
 //! * attaching a no-op observer causes zero stat drift;
@@ -116,7 +116,7 @@ fn stepping_matches_across_engine_policies() {
     // The sharded engine stepped through run_until cuts stays
     // bit-identical to the fused straight run — events included.
     let mut sharded = SessionBuilder::new(&cfg)
-        .engine(EnginePolicy::Sharded { threads: 4 })
+        .engine(EnginePolicy::sharded(4))
         .build()
         .unwrap();
     sharded.run_until(fused.completion / 2);
@@ -132,12 +132,18 @@ fn sharded_sessions_are_bit_identical_to_fused_at_every_entry_point() {
     let cfg = tiny(8, MIB);
     let fused = straight_run(&cfg);
     for threads in [1u32, 2, 4] {
-        let sharded = SessionBuilder::new(&cfg)
-            .engine(EnginePolicy::Sharded { threads })
-            .build()
-            .unwrap()
-            .run_to_completion();
-        assert_identical(&fused, &sharded, &format!("sharded:{threads} config source"));
+        for parallel_dispatch in [true, false] {
+            let sharded = SessionBuilder::new(&cfg)
+                .engine(EnginePolicy::Sharded { threads, parallel_dispatch })
+                .build()
+                .unwrap()
+                .run_to_completion();
+            assert_identical(
+                &fused,
+                &sharded,
+                &format!("sharded:{threads} pdisp={parallel_dispatch} config source"),
+            );
+        }
     }
 
     let sched = alltoall_allpairs(8, MIB).unwrap();
@@ -148,7 +154,7 @@ fn sharded_sessions_are_bit_identical_to_fused_at_every_entry_point() {
         .run_to_completion();
     let sharded = SessionBuilder::new(&cfg)
         .schedule(sched.clone())
-        .engine(EnginePolicy::Sharded { threads: 2 })
+        .engine(EnginePolicy::sharded(2))
         .build()
         .unwrap()
         .run_to_completion();
@@ -162,7 +168,7 @@ fn sharded_sessions_are_bit_identical_to_fused_at_every_entry_point() {
         .run_to_completion();
     let sharded = SessionBuilder::new(&cfg)
         .workload(w)
-        .engine(EnginePolicy::Sharded { threads: 4 })
+        .engine(EnginePolicy::sharded(4))
         .build()
         .unwrap()
         .run_to_completion();

@@ -1,0 +1,32 @@
+#!/usr/bin/env bash
+# Record the perf-trajectory baseline for benches/sim_core.rs.
+#
+# Runs the simulator-core bench suite and writes its BENCHJSON snapshot
+# over BENCH_baseline.json — the numbers the CI bench-smoke job's
+# RATSIM_BENCH_ENFORCE gate compares against. Commit the refreshed file
+# to update the baseline (ROADMAP item: land actual perf numbers).
+#
+# Usage:
+#   scripts/record_baseline.sh            # full iterations
+#   scripts/record_baseline.sh --quick    # RATSIM_BENCH_QUICK=1, matches
+#                                         # the CI smoke job's trimmed axes
+#
+# Prefer recording on the CI reference runner (the manually-dispatched
+# .github/workflows/bench-baseline.yml does exactly this); a local
+# recording is fine for relative comparisons on one machine.
+set -euo pipefail
+cd "$(dirname "$0")/.."
+
+if [ "${1:-}" = "--quick" ]; then
+  export RATSIM_BENCH_QUICK=1
+  shift
+fi
+if [ $# -gt 0 ]; then
+  echo "usage: $0 [--quick]" >&2
+  exit 2
+fi
+
+RATSIM_BENCH_OUT=BENCH_baseline.json cargo bench --bench sim_core
+
+echo
+echo "BENCH_baseline.json refreshed — review the numbers and commit it."
